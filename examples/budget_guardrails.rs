@@ -1,0 +1,55 @@
+//! CloudBank budget management demo (§III of the paper).
+//!
+//! Run with: `cargo run --release --example budget_guardrails`
+//!
+//! Runs a deliberately under-funded campaign and shows the CloudBank
+//! services in action: the single-window budget snapshot, the
+//! threshold-crossing alert emails with spend rates, and the operator
+//! guardrail that deprovisions the fleet when the reserve is reached.
+
+use icecloud::cloudbank::report;
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::coordinator::Campaign;
+use icecloud::sim::DAY;
+
+fn main() {
+    let mut cfg = CampaignConfig::default();
+    cfg.duration_s = 4 * DAY;
+    cfg.outage = None;
+    cfg.ramp = vec![RampStep { target: 300, hold_s: 60 * DAY }];
+    cfg.onprem.slots = 0;
+    cfg.generator.min_backlog = 600;
+    // a budget that ~300 GPUs will burn through in about 3 days
+    cfg.budget_usd = 2_800.0;
+    cfg.alert_thresholds = vec![0.75, 0.5, 0.25, 0.1];
+
+    println!("== budget guardrails: $2.8k budget, 300-GPU fleet, 4 days ==\n");
+    let result = Campaign::new(cfg).run();
+
+    // the "web page": single-window spend across all three providers
+    println!("{}", report::render_snapshot(&result.ledger.snapshot(4 * DAY)));
+
+    // the alert emails
+    println!("alert emails ({}):", result.ledger.alerts().len());
+    for a in result.ledger.alerts() {
+        println!(
+            "  [day {:.2}] threshold {:>4.0}% — {}",
+            a.at as f64 / DAY as f64,
+            a.threshold * 100.0,
+            a.body
+        );
+    }
+
+    // the guardrail: fleet must be drained before the money ran out
+    let gpus = result.monitor.get("gpus.total").unwrap();
+    let frac = result.ledger.remaining_fraction();
+    println!(
+        "\nfinal fleet size: {:.0} GPUs; remaining budget: {:.1}%",
+        gpus.last().unwrap(),
+        frac * 100.0
+    );
+    assert!(result.ledger.alerts().len() >= 3, "thresholds must fire");
+    assert_eq!(gpus.last().unwrap(), 0.0, "guardrail must drain the fleet");
+    assert!(frac > 0.0, "the budget must never go negative");
+    println!("guardrail check: OK — fleet drained before exhausting funds");
+}

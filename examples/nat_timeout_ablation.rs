@@ -1,0 +1,26 @@
+//! The §IV Azure NAT incident, reproduced as a keepalive ablation.
+//!
+//! Run with: `cargo run --release --example nat_timeout_ablation`
+//!
+//! Sweeps the HTCondor keepalive interval across Azure's 240 s NAT idle
+//! timeout on an Azure-only fleet. With the OSG default (300 s) every
+//! management connection silently dies between keepalives — "constant
+//! preemption of the user jobs" — while any interval <= 240 s is stable.
+
+use icecloud::experiments::nat;
+use icecloud::sim::HOUR;
+
+fn main() {
+    println!("== NAT timeout ablation (Azure default NAT: 240 s idle) ==\n");
+    println!("sweeping keepalive ∈ {:?} s over a 12 h / 100-GPU Azure fleet\n",
+             nat::DEFAULT_KEEPALIVES);
+    let rows = nat::run_sweep(&nat::DEFAULT_KEEPALIVES, 12 * HOUR, 100);
+    println!("{}", nat::render(&rows));
+    match nat::check_cliff(&rows) {
+        Ok(()) => println!("cliff check: OK — the paper's incident reproduces"),
+        Err(e) => {
+            eprintln!("cliff check FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

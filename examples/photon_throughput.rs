@@ -1,0 +1,71 @@
+//! Pure-runtime driver: photon artifact latency/throughput across variants.
+//!
+//! Run with: `cargo run --release --example photon_throughput`
+//! (requires `make artifacts`)
+//!
+//! Loads every AOT variant, executes a batch of bunches through the PJRT
+//! CPU client, and reports latency percentiles, photon throughput and
+//! sustained FLOP rate — the serving-style view of the L1/L2 stack that
+//! the campaign's real-compute sampling uses. EXPERIMENTS.md §Perf uses
+//! these numbers for the L1 before/after record.
+
+use icecloud::runtime::PhotonEngine;
+use icecloud::util::stats;
+use std::path::PathBuf;
+
+fn main() {
+    let artifact_dir = std::env::var("ICECLOUD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let engine = match PhotonEngine::new(&artifact_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}\n", engine.platform());
+    println!(
+        "{:<10} {:>10} {:>6} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "variant", "photons", "doms", "p50 ms", "p95 ms", "mean ms",
+        "Mphotons/s", "GFLOP/s"
+    );
+
+    let bunches = 12usize;
+    for name in ["small", "default", "large"] {
+        let Ok(exe) = engine.compile(name) else {
+            continue;
+        };
+        // warmup
+        let _ = exe.run_seeded(0).unwrap();
+        let mut lat = Vec::with_capacity(bunches);
+        let mut detected = 0.0f64;
+        for seed in 0..bunches {
+            let r = exe.run_seeded(seed as u32 + 1).unwrap();
+            lat.push(r.wall_s);
+            detected += r.detected() as f64;
+        }
+        let ps = stats::percentiles(&lat, &[0.5, 0.95]);
+        let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        let photons_per_s = exe.meta.num_photons as f64 / mean;
+        let gflops = exe.meta.flops_estimate / mean / 1e9;
+        println!(
+            "{:<10} {:>10} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>12.3} {:>10.2}",
+            name,
+            exe.meta.num_photons,
+            exe.meta.num_doms,
+            ps[0] * 1e3,
+            ps[1] * 1e3,
+            mean * 1e3,
+            photons_per_s / 1e6,
+            gflops
+        );
+        assert!(detected > 0.0, "variant {name} must detect photons");
+    }
+    println!(
+        "\nnote: CPU-PJRT numbers; TPU efficiency is estimated analytically \
+         in DESIGN.md §7 (the CPU plugin cannot run Mosaic kernels)."
+    );
+}

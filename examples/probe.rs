@@ -1,0 +1,7 @@
+use icecloud::config::CampaignConfig;
+use icecloud::coordinator::Campaign;
+fn main() {
+    let t0 = std::time::Instant::now();
+    let result = Campaign::new(CampaignConfig::default()).run();
+    println!("wall: {:.2?} completed={}", t0.elapsed(), result.schedd_stats.completed);
+}

@@ -1,0 +1,39 @@
+//! Quickstart: a one-day, 60-GPU multi-cloud campaign.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//!
+//! Demonstrates the public API in ~30 lines: configure, run, inspect.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::coordinator::Campaign;
+use icecloud::sim::{DAY, HOUR};
+
+fn main() {
+    // start from the paper's defaults, shrink to a quick demo
+    let mut cfg = CampaignConfig::default();
+    cfg.duration_s = DAY;
+    cfg.ramp = vec![
+        RampStep { target: 20, hold_s: 4 * HOUR }, // validation
+        RampStep { target: 60, hold_s: 30 * DAY }, // scale up
+    ];
+    cfg.outage = None; // keep the quickstart calm
+    cfg.onprem.slots = 40;
+    cfg.generator.min_backlog = 200;
+
+    println!("icecloud quickstart: 1 simulated day, 60 cloud GPUs + 40 on-prem\n");
+    let result = Campaign::new(cfg).run();
+
+    let h = icecloud::experiments::headline::extract(&result);
+    println!("{}", h.table());
+
+    let gpus = result.monitor.get("gpus.total").unwrap();
+    println!(
+        "cloud fleet: peak {:.0} GPUs, final {:.0}; {} jobs completed, \
+         {:.1} cloud GPU-hours delivered for ${:.2}",
+        gpus.max(),
+        gpus.last().unwrap(),
+        result.schedd_stats.completed,
+        result.usage.total_cloud_gpu_hours(),
+        result.ledger.total_spent(),
+    );
+}

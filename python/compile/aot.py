@@ -1,0 +1,105 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(`rust/src/runtime/`) loads the text with ``HloModuleProto::from_text_file``
+and compiles it on the PJRT CPU client.  Python never runs on the
+simulation/serving path.
+
+HLO **text** — not ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate
+links) rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (per variant in --variants):
+  artifacts/photon_<variant>.hlo.txt   — the HLO module
+  artifacts/meta.json                  — shapes, FLOP estimates, file map
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import geometry, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant):
+    """Lower one shape variant; returns the HLO text."""
+    fn = model.artifact_fn(variant)
+    specs = model.input_specs(variant.num_doms, variant.num_layers)
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def variant_meta(variant, hlo_file):
+    v = variant
+    return {
+        "file": hlo_file,
+        "num_photons": v.num_photons,
+        "block": v.block,
+        "num_doms": v.num_doms,
+        "num_steps": v.num_steps,
+        "num_layers": v.num_layers,
+        "grid": v.grid,
+        "flops_estimate": v.flops_estimate(),
+        "inputs": [
+            {"name": "source", "shape": [8], "dtype": "f32"},
+            {"name": "media", "shape": [v.num_layers, 4], "dtype": "f32"},
+            {"name": "doms", "shape": [v.num_doms, 3], "dtype": "f32"},
+            {"name": "params", "shape": [8], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "hits", "shape": [v.num_doms], "dtype": "f32"},
+            {"name": "summary", "shape": [8], "dtype": "f32"},
+        ],
+    }
+
+
+def build(outdir, variant_names):
+    os.makedirs(outdir, exist_ok=True)
+    meta = {"artifact_version": 1, "variants": {}}
+    for name in variant_names:
+        variant = geometry.VARIANTS[name]
+        hlo = lower_variant(variant)
+        fname = f"photon_{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        meta["variants"][name] = variant_meta(variant, fname)
+        print(f"[aot] wrote {path} ({len(hlo)} chars)")
+    meta_path = os.path.join(outdir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {meta_path}")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--variants", default="small,default,large",
+                    help="comma-separated variant names (see geometry.py)")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.variants.split(",") if n.strip()]
+    for n in names:
+        if n not in geometry.VARIANTS:
+            raise SystemExit(f"unknown variant {n!r}; "
+                             f"known: {sorted(geometry.VARIANTS)}")
+    build(args.outdir, names)
+
+
+if __name__ == "__main__":
+    main()

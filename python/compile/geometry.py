@@ -1,0 +1,163 @@
+"""Detector geometry, ice model and artifact variant specs.
+
+The production IceCube ice model (SPICE) and detector geometry are not
+redistributable; we use an openly-specified synthetic equivalent that
+preserves the compute shape: a vertical string (or small grid of strings) of
+DOMs with 17 m spacing, layered ice with a short-scattering "dust layer" in
+the middle, Henyey-Greenstein scattering with g≈0.9, and DOM oversizing
+(ppc itself oversizes DOMs by 5–16x to boost statistics — we do the same).
+See DESIGN.md §6 Substitution log.
+"""
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- physical constants (values used by IceCube toy models) ---------------
+C_VACUUM_M_NS = 0.299792458  # m / ns
+N_GROUP = 1.35  # group refractive index of deep ice
+V_GROUP_M_NS = C_VACUUM_M_NS / N_GROUP  # photon group velocity in ice
+
+DOM_SPACING_M = 17.0  # vertical DOM spacing on an IceCube string
+DOM_RADIUS_M = 0.16510  # physical DOM radius
+DOM_OVERSIZE = 12.0  # ppc-style oversizing factor
+R_DOM_EFF = DOM_RADIUS_M * DOM_OVERSIZE
+
+N_LAYERS = 10  # ice layers in the media table
+
+# media table columns
+COL_SCAT = 0  # effective scattering length lambda_s [m]
+COL_ABS = 1  # absorption length lambda_a [m]
+COL_G = 2  # Henyey-Greenstein asymmetry parameter
+COL_PAD = 3
+
+# params vector layout (f32[8])
+P_RDOM = 0  # effective DOM radius [m]
+P_Z0 = 1  # top of the layered-ice stack [m]
+P_DZ = 2  # layer thickness [m]
+P_VGRP = 3  # group velocity [m/ns]
+P_EPS = 4  # log()-guard epsilon
+# 5..7 reserved
+
+# source vector layout (f32[8]): x y z dx dy dz t0 seed
+S_X, S_Y, S_Z, S_DX, S_DY, S_DZ, S_T0, S_SEED = range(8)
+
+
+def string_doms(num_doms: int, x: float = 0.0, y: float = 0.0,
+                z_top: float = 0.0) -> np.ndarray:
+    """DOM positions of a single vertical string, f32[num_doms, 3]."""
+    z = z_top - DOM_SPACING_M * np.arange(num_doms, dtype=np.float32)
+    out = np.zeros((num_doms, 3), dtype=np.float32)
+    out[:, 0] = x
+    out[:, 1] = y
+    out[:, 2] = z
+    return out
+
+
+def grid_doms(strings_x: int, strings_y: int, doms_per_string: int,
+              pitch_m: float = 125.0) -> np.ndarray:
+    """A small rectangular grid of strings (IceCube string pitch ~125 m)."""
+    parts = []
+    for ix in range(strings_x):
+        for iy in range(strings_y):
+            parts.append(
+                string_doms(doms_per_string,
+                            x=ix * pitch_m - (strings_x - 1) * pitch_m / 2,
+                            y=iy * pitch_m - (strings_y - 1) * pitch_m / 2))
+    return np.concatenate(parts, axis=0)
+
+
+def layered_ice(num_layers: int = N_LAYERS, dusty: bool = True) -> np.ndarray:
+    """Media table f32[num_layers, 4]: clear ice with an optional dust layer.
+
+    Layer i covers z in [z0 - (i+1)*dz, z0 - i*dz] (top layer is i=0).
+    """
+    media = np.zeros((num_layers, 4), dtype=np.float32)
+    media[:, COL_SCAT] = 25.0  # effective scattering length [m]
+    media[:, COL_ABS] = 100.0  # absorption length [m]
+    media[:, COL_G] = 0.9
+    if dusty and num_layers >= 3:
+        mid = num_layers // 2
+        media[mid, COL_SCAT] = 5.0  # dust: strong scattering
+        media[mid, COL_ABS] = 20.0  # dust: strong absorption
+    return media
+
+
+def clear_ice(num_layers: int = N_LAYERS) -> np.ndarray:
+    return layered_ice(num_layers, dusty=False)
+
+
+def default_params(num_doms: int, z0: float = 40.0) -> np.ndarray:
+    """Params vector covering the DOM string depth range with N_LAYERS."""
+    depth_span = DOM_SPACING_M * (num_doms + 4)
+    params = np.zeros(8, dtype=np.float32)
+    params[P_RDOM] = R_DOM_EFF
+    params[P_Z0] = z0
+    params[P_DZ] = depth_span / N_LAYERS
+    params[P_VGRP] = V_GROUP_M_NS
+    params[P_EPS] = 1e-7
+    return params
+
+
+def cascade_source(x: float, y: float, z: float, seed: int,
+                   t0: float = 0.0) -> np.ndarray:
+    """Point-cascade light source: isotropic emission from (x, y, z)."""
+    src = np.zeros(8, dtype=np.float32)
+    src[S_X], src[S_Y], src[S_Z] = x, y, z
+    # dx,dy,dz unused for isotropic cascades (kept for track sources)
+    src[S_T0] = t0
+    src[S_SEED] = float(seed)
+    return src
+
+
+# --- artifact variants -----------------------------------------------------
+
+@dataclass(frozen=True)
+class Variant:
+    """Static shape configuration of one AOT-compiled photon artifact."""
+    name: str
+    num_photons: int
+    block: int  # photons per Pallas block (P_BLK)
+    num_doms: int
+    num_steps: int
+    num_layers: int = N_LAYERS
+
+    @property
+    def grid(self) -> int:
+        assert self.num_photons % self.block == 0
+        return self.num_photons // self.block
+
+    def flops_estimate(self) -> float:
+        """Analytic fp32 FLOP count of one artifact execution.
+
+        Per photon-step: ~170 flops of RNG/transport/scattering plus a
+        dense segment-DOM distance test of ~15 flops per DOM.
+        """
+        per_step = 170.0 + 15.0 * self.num_doms
+        return float(self.num_photons) * self.num_steps * per_step
+
+
+VARIANTS = {
+    "small": Variant("small", num_photons=256, block=128, num_doms=16,
+                     num_steps=16),
+    "default": Variant("default", num_photons=4096, block=512, num_doms=60,
+                       num_steps=64),
+    "large": Variant("large", num_photons=16384, block=1024, num_doms=240,
+                     num_steps=96),
+}
+
+
+def variant_inputs(v: Variant, seed: int = 7, dusty: bool = True):
+    """Build a concrete (source, media, doms, params) input set."""
+    if v.num_doms <= 80:
+        doms = string_doms(v.num_doms)
+    else:
+        per = v.num_doms // 4
+        doms = grid_doms(2, 2, per)[: v.num_doms]
+    mid_z = float(np.mean(doms[:, 2]))
+    source = cascade_source(10.0, 0.0, mid_z, seed=seed)
+    media = layered_ice(v.num_layers, dusty=dusty)
+    params = default_params(v.num_doms)
+    return (jnp.asarray(source), jnp.asarray(media), jnp.asarray(doms),
+            jnp.asarray(params))

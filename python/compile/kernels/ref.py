@@ -1,0 +1,202 @@
+"""Pure-jnp oracle for the photon-propagation kernel.
+
+This is the correctness contract for ``kernels/photon.py``: the same
+physics, written as straight vectorized jax.numpy over the full photon
+array (no Pallas, no blocking).  Because both implementations consume the
+same stateless counter RNG (``kernels.rng``) and apply the same op
+sequence, per-DOM hit counts must match the Pallas kernel *exactly*
+(they are integer-valued) and float summaries must match to ~1e-5
+(block-wise summation order differs).
+
+Physics spec (shared by kernel and oracle)
+------------------------------------------
+Photons start at the cascade vertex with isotropic directions and undergo
+``num_steps`` scattering steps.  Per step ``k`` for photon ``p``:
+
+1. sample step length  d = -lambda_s(z) * ln(max(u0, eps))
+2. segment [pos, pos + d*dir] is tested against every DOM sphere
+   (closest-approach distance); the earliest hit (min t_along) detects the
+   photon (status=2) and increments that DOM's hit counter
+3. survivors sample absorption over the step: u1 >= exp(-d/lambda_a) kills
+   the photon (status=1)
+4. survivors move by d, advance time by d/v_group, and scatter into a new
+   direction: Henyey-Greenstein cos(theta) from u2, azimuth 2*pi*u3,
+   rotated about the old direction (Duff et al. orthonormal basis)
+
+RNG streams: 0=step length, 1=absorption, 2=HG cos, 3=azimuth,
+4=initial cos, 5=initial azimuth (streams 4/5 used only at step 0).
+
+Status codes: 0 = alive, 1 = absorbed, 2 = detected.
+
+Summary vector (f32[8], all entries are sums so block results combine by
+addition): [n_detected, n_absorbed, n_alive, path_length_sum,
+hit_time_sum, alive_step_sum, 0, 0].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+
+# summary indices
+SUM_DET, SUM_ABS, SUM_ALIVE, SUM_PATH, SUM_HITT, SUM_STEPS = range(6)
+
+# RNG streams
+STREAM_LEN = 0
+STREAM_ABSORB = 1
+STREAM_COS = 2
+STREAM_PHI = 3
+STREAM_INIT_COS = 4
+STREAM_INIT_PHI = 5
+
+TWO_PI = 2.0 * jnp.pi
+
+
+def isotropic_dirs(seed, pid):
+    """Initial isotropic unit vectors from RNG streams 4/5 at step 0."""
+    u_cos = rng.uniform(seed, pid, 0, STREAM_INIT_COS)
+    u_phi = rng.uniform(seed, pid, 0, STREAM_INIT_PHI)
+    cos_t = 1.0 - 2.0 * u_cos
+    sin_t = jnp.sqrt(jnp.maximum(0.0, 1.0 - cos_t * cos_t))
+    phi = jnp.float32(TWO_PI) * u_phi
+    return jnp.stack(
+        [sin_t * jnp.cos(phi), sin_t * jnp.sin(phi), cos_t], axis=-1)
+
+
+def hg_cos_theta(g, u):
+    """Henyey-Greenstein scattering angle cosine (isotropic at |g|→0)."""
+    g_safe = jnp.where(jnp.abs(g) < 1e-3, jnp.float32(1.0), g)
+    frac = (1.0 - g_safe * g_safe) / (1.0 - g_safe + 2.0 * g_safe * u)
+    cos_hg = (1.0 + g_safe * g_safe - frac * frac) / (2.0 * g_safe)
+    cos_iso = 1.0 - 2.0 * u
+    return jnp.clip(
+        jnp.where(jnp.abs(g) < 1e-3, cos_iso, cos_hg), -1.0, 1.0)
+
+
+def rotate_dir(d, cos_t, phi):
+    """Rotate unit vectors ``d`` by polar angle acos(cos_t), azimuth phi.
+
+    Uses the branchless Duff et al. orthonormal basis; re-normalizes to
+    suppress fp32 drift across many scattering steps.
+    """
+    dx, dy, dz = d[..., 0], d[..., 1], d[..., 2]
+    sign = jnp.where(dz >= 0.0, jnp.float32(1.0), jnp.float32(-1.0))
+    a = -1.0 / (sign + dz)
+    b = dx * dy * a
+    b1 = jnp.stack([1.0 + sign * dx * dx * a, sign * b, -sign * dx], axis=-1)
+    b2 = jnp.stack([b, sign + dy * dy * a, -dy], axis=-1)
+    sin_t = jnp.sqrt(jnp.maximum(0.0, 1.0 - cos_t * cos_t))
+    nd = (sin_t * jnp.cos(phi))[..., None] * b1 \
+        + (sin_t * jnp.sin(phi))[..., None] * b2 \
+        + cos_t[..., None] * d
+    norm = jnp.sqrt(jnp.sum(nd * nd, axis=-1, keepdims=True))
+    return nd / jnp.maximum(norm, 1e-12)
+
+
+def layer_index(z, z0, dz, num_layers):
+    """Ice layer index for depth z (layer 0 at the top, z decreasing)."""
+    li = jnp.floor((z0 - z) / dz).astype(jnp.int32)
+    return jnp.clip(li, 0, num_layers - 1)
+
+
+def propagate(source, media, doms, params, num_photons, num_steps,
+              pid0=0, return_state=False):
+    """Reference propagation of ``num_photons`` photons.
+
+    Args:
+      source: f32[8] — x y z dx dy dz t0 seed (see geometry.py layout)
+      media: f32[L, 4] — per-layer [lambda_s, lambda_a, g, pad]
+      doms: f32[D, 3] — DOM centers
+      params: f32[8] — [r_dom, z0, dz, v_group, eps, ...]
+      pid0: first photon id (the Pallas kernel uses block_id * block)
+    Returns:
+      (hits f32[D], summary f32[8]) and optionally the final photon state.
+    """
+    num_layers = media.shape[0]
+    num_doms = doms.shape[0]
+    seed = source[7]
+    pid = jnp.uint32(pid0) + jnp.arange(num_photons, dtype=jnp.uint32)
+
+    r2 = params[0] * params[0]
+    z0 = params[1]
+    dz = params[2]
+    v_group = params[3]
+    eps = params[4]
+
+    pos0 = jnp.broadcast_to(source[0:3], (num_photons, 3))
+    dir0 = isotropic_dirs(seed, pid)
+    t0 = jnp.full((num_photons,), source[6], dtype=jnp.float32)
+    status0 = jnp.zeros((num_photons,), dtype=jnp.int32)
+    hits0 = jnp.zeros((num_doms,), dtype=jnp.float32)
+    path0 = jnp.zeros((num_photons,), dtype=jnp.float32)
+    hitt0 = jnp.float32(0.0)
+    steps0 = jnp.float32(0.0)
+
+    dom_idx = jnp.arange(num_doms, dtype=jnp.int32)
+
+    def step(k, state):
+        pos, dire, t, status, hits, path, hitt, steps = state
+        alive = status == 0
+
+        li = layer_index(pos[:, 2], z0, dz, num_layers)
+        lam_s = media[li, 0]
+        lam_a = media[li, 1]
+        g = media[li, 2]
+
+        u_len = rng.uniform(seed, pid, k, STREAM_LEN)
+        u_abs = rng.uniform(seed, pid, k, STREAM_ABSORB)
+        u_cos = rng.uniform(seed, pid, k, STREAM_COS)
+        u_phi = rng.uniform(seed, pid, k, STREAM_PHI)
+
+        d = -lam_s * jnp.log(jnp.maximum(u_len, eps))
+
+        # segment–DOM closest approach: rel (P, D, 3)
+        rel = doms[None, :, :] - pos[:, None, :]
+        t_along = jnp.sum(rel * dire[:, None, :], axis=-1)
+        t_along = jnp.clip(t_along, 0.0, d[:, None])
+        closest = pos[:, None, :] + t_along[..., None] * dire[:, None, :]
+        diff = doms[None, :, :] - closest
+        dist2 = jnp.sum(diff * diff, axis=-1)
+        hitm = (dist2 <= r2) & alive[:, None]
+        any_hit = jnp.any(hitm, axis=1)
+        t_cand = jnp.where(hitm, t_along, jnp.float32(jnp.inf))
+        first = jnp.argmin(t_cand, axis=1).astype(jnp.int32)
+        onehot = (dom_idx[None, :] == first[:, None]) & any_hit[:, None]
+        hits = hits + jnp.sum(onehot.astype(jnp.float32), axis=0)
+        t_sel = jnp.take_along_axis(t_along, first[:, None], axis=1)[:, 0]
+        hitt = hitt + jnp.sum(
+            jnp.where(any_hit, t + t_sel / v_group, 0.0))
+
+        survived = u_abs < jnp.exp(-d / lam_a)
+        status = jnp.where(
+            any_hit, 2, jnp.where(alive & ~survived, 1, status))
+
+        move = jnp.where(alive, jnp.where(any_hit, t_sel, d), 0.0)
+        pos = pos + dire * move[:, None]
+        t = t + move / v_group
+        path = path + move
+        steps = steps + jnp.sum(alive.astype(jnp.float32))
+
+        cos_t = hg_cos_theta(g, u_cos)
+        phi = jnp.float32(TWO_PI) * u_phi
+        new_dir = rotate_dir(dire, cos_t, phi)
+        still = (status == 0)[:, None]
+        dire = jnp.where(still, new_dir, dire)
+        return pos, dire, t, status, hits, path, hitt, steps
+
+    state = (pos0, dir0, t0, status0, hits0, path0, hitt0, steps0)
+    pos, dire, t, status, hits, path, hitt, steps = jax.lax.fori_loop(
+        0, num_steps, step, state)
+
+    summary = jnp.zeros((8,), dtype=jnp.float32)
+    summary = summary.at[SUM_DET].set(jnp.sum((status == 2).astype(jnp.float32)))
+    summary = summary.at[SUM_ABS].set(jnp.sum((status == 1).astype(jnp.float32)))
+    summary = summary.at[SUM_ALIVE].set(jnp.sum((status == 0).astype(jnp.float32)))
+    summary = summary.at[SUM_PATH].set(jnp.sum(path))
+    summary = summary.at[SUM_HITT].set(hitt)
+    summary = summary.at[SUM_STEPS].set(steps)
+
+    if return_state:
+        return hits, summary, dict(pos=pos, dir=dire, t=t, status=status,
+                                   path=path)
+    return hits, summary

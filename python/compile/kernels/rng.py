@@ -1,0 +1,62 @@
+"""Stateless counter-based RNG shared by the Pallas kernel and the ref oracle.
+
+IceCube's CUDA propagators (ppc/clsim) carry per-thread XORWOW state; on a
+TPU-style vector machine carried RNG state is hostile (it serializes lanes
+and bloats the carried loop state), so we use a *stateless* counter-based
+construction instead: every uniform is a pure hash of
+``(seed, photon_id, step, stream)``.  This is the same design point as
+Philox/Threefry counter RNGs, reduced to a cheap 32-bit finalizer that is
+exactly representable in both the Pallas kernel and the pure-jnp oracle
+(bit-identical results are part of the correctness contract).
+
+The mixer is the ``lowbias32`` avalanche function (two rounds applied for
+extra diffusion across the structured counter inputs).
+"""
+
+import jax.numpy as jnp
+
+# Odd 32-bit constants decorrelating the counter dimensions.
+K_PID = 0x9E3779B9  # golden-ratio increment, decorrelates photon ids
+K_STEP = 0x85EBCA6B  # murmur3 c2
+K_STREAM = 0xC2B2AE35  # murmur3 final mix constant
+
+_INV_2_24 = float(1.0 / (1 << 24))
+
+
+def _u32(x):
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def mix32(x):
+    """One round of the lowbias32 avalanche finalizer (uint32 -> uint32)."""
+    x = _u32(x)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def counter_key(seed, pid, step, stream):
+    """Combine the counter coordinates into a single uint32 key."""
+    seed = _u32(seed)
+    pid = _u32(pid)
+    step = _u32(step)
+    stream = _u32(stream)
+    return (
+        seed
+        ^ (pid * jnp.uint32(K_PID))
+        ^ (step * jnp.uint32(K_STEP))
+        ^ (stream * jnp.uint32(K_STREAM))
+    )
+
+
+def uniform(seed, pid, step, stream):
+    """Uniform f32 in [0, 1) from the (seed, pid, step, stream) counter.
+
+    Two mix rounds; the top 24 bits become the mantissa so the result is an
+    exact multiple of 2^-24 (reproducible across backends).
+    """
+    v = mix32(mix32(counter_key(seed, pid, step, stream)))
+    return (v >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(_INV_2_24)

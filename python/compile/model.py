@@ -1,0 +1,72 @@
+"""L2 JAX model: the IceCube photon-propagation forward graph.
+
+One artifact execution = one *photon bunch*: emit ``num_photons`` photons
+from a cascade vertex, propagate them through layered ice with the L1
+Pallas kernel, and reduce the per-block partials into the detector-level
+observables the downstream (Rust) job pipeline consumes:
+
+* ``hits``    f32[D]  — per-DOM photo-electron counts,
+* ``summary`` f32[8]  — population accounting (detected / absorbed /
+  alive, path-length sum, hit-time sum, alive-step sum).
+
+The module also exposes ``simulate_ref`` (same signature, pure-jnp oracle)
+for the pytest correctness gate, and ``artifact_fn`` — the exact closure
+that ``aot.py`` lowers to HLO text for the Rust runtime.
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernels import photon, ref
+
+
+def _combine(hits_blocks, summ_blocks):
+    """Reduce per-block partials (all summary entries are sums)."""
+    return hits_blocks.sum(axis=0), summ_blocks.sum(axis=0)
+
+
+def simulate(source, media, doms, params, *, num_photons, block, num_steps):
+    """Propagate a photon bunch via the Pallas kernel (L1) and reduce."""
+    hits_b, summ_b = photon.propagate_blocked(
+        source, media, doms, params,
+        num_photons=num_photons, block=block, num_steps=num_steps)
+    return _combine(hits_b, summ_b)
+
+
+def simulate_ref(source, media, doms, params, *, num_photons, block=None,
+                 num_steps):
+    """Pure-jnp oracle with the same call signature as ``simulate``."""
+    del block  # the oracle is unblocked
+    return ref.propagate(source, media, doms, params,
+                         num_photons=num_photons, num_steps=num_steps)
+
+
+def artifact_fn(variant):
+    """The function lowered to one AOT artifact for a shape variant.
+
+    Closes over the static shapes; takes the 4 runtime inputs and returns
+    the ``(hits, summary)`` tuple. This is what the Rust runtime executes.
+    """
+
+    def run(source, media, doms, params):
+        return simulate(source, media, doms, params,
+                        num_photons=variant.num_photons,
+                        block=variant.block,
+                        num_steps=variant.num_steps)
+
+    run.__name__ = f"icecube_photon_{variant.name}"
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def input_specs(num_doms, num_layers=10):
+    """ShapeDtypeStructs of the artifact inputs, in call order."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((8,), jnp.float32),            # source
+        jax.ShapeDtypeStruct((num_layers, 4), jnp.float32),  # media
+        jax.ShapeDtypeStruct((num_doms, 3), jnp.float32),    # doms
+        jax.ShapeDtypeStruct((8,), jnp.float32),             # params
+    )

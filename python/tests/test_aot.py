@@ -1,0 +1,85 @@
+"""AOT pipeline tests: HLO text artifacts + meta.json."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, geometry
+
+
+@pytest.fixture(scope="module")
+def small_hlo():
+    return aot.lower_variant(geometry.VARIANTS["small"])
+
+
+class TestHloText:
+    def test_is_hlo_module(self, small_hlo):
+        assert small_hlo.startswith("HloModule")
+
+    def test_entry_layout_matches_variant(self, small_hlo):
+        v = geometry.VARIANTS["small"]
+        # inputs: source f32[8], media f32[L,4], doms f32[D,3], params f32[8]
+        assert f"f32[{v.num_layers},4]" in small_hlo
+        assert f"f32[{v.num_doms},3]" in small_hlo
+        # outputs: (hits f32[D], summary f32[8])
+        assert f"->(f32[{v.num_doms}]" in small_hlo
+
+    def test_no_custom_calls(self, small_hlo):
+        # interpret=True must not leak Mosaic custom-calls the CPU PJRT
+        # client cannot execute
+        assert "custom-call" not in small_hlo
+
+    def test_deterministic_lowering(self, small_hlo):
+        again = aot.lower_variant(geometry.VARIANTS["small"])
+        assert again == small_hlo
+
+
+class TestBuild:
+    def test_build_writes_artifacts(self, tmp_path):
+        meta = aot.build(str(tmp_path), ["small"])
+        assert (tmp_path / "photon_small.hlo.txt").exists()
+        assert (tmp_path / "meta.json").exists()
+        on_disk = json.loads((tmp_path / "meta.json").read_text())
+        assert on_disk == meta
+
+    def test_meta_contents(self, tmp_path):
+        meta = aot.build(str(tmp_path), ["small"])
+        m = meta["variants"]["small"]
+        v = geometry.VARIANTS["small"]
+        assert m["num_photons"] == v.num_photons
+        assert m["num_doms"] == v.num_doms
+        assert m["flops_estimate"] == v.flops_estimate()
+        assert m["file"] == "photon_small.hlo.txt"
+        assert [i["name"] for i in m["inputs"]] == [
+            "source", "media", "doms", "params"]
+        assert [o["name"] for o in m["outputs"]] == ["hits", "summary"]
+
+    def test_unknown_variant_rejected(self, tmp_path):
+        with pytest.raises(KeyError):
+            aot.build(str(tmp_path), ["nope"])
+
+
+class TestRepoArtifacts:
+    """If `make artifacts` has run, the checked artifacts must be sane."""
+
+    ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..",
+                             "artifacts")
+
+    @pytest.fixture(scope="class")
+    def meta(self):
+        path = os.path.join(self.ARTIFACTS, "meta.json")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_all_variant_files_exist(self, meta):
+        for name, m in meta["variants"].items():
+            assert os.path.exists(os.path.join(self.ARTIFACTS, m["file"])), \
+                f"missing artifact for {name}"
+
+    def test_flops_match_geometry(self, meta):
+        for name, m in meta["variants"].items():
+            v = geometry.VARIANTS[name]
+            assert m["flops_estimate"] == pytest.approx(v.flops_estimate())

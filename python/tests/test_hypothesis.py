@@ -1,0 +1,74 @@
+"""Hypothesis sweeps: kernel==oracle across shapes, seeds and ice models."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import geometry, model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _check(num_photons, block, num_doms, num_steps, seed, dusty):
+    v = geometry.Variant("h", num_photons=num_photons, block=block,
+                         num_doms=num_doms, num_steps=num_steps)
+    src, media, doms, params = geometry.variant_inputs(v, seed=seed,
+                                                       dusty=dusty)
+    hits_k, summ_k = model.simulate(src, media, doms, params,
+                                    num_photons=num_photons, block=block,
+                                    num_steps=num_steps)
+    hits_r, summ_r = model.simulate_ref(src, media, doms, params,
+                                        num_photons=num_photons,
+                                        num_steps=num_steps)
+    assert np.array_equal(np.asarray(hits_k), np.asarray(hits_r))
+    np.testing.assert_allclose(np.asarray(summ_k), np.asarray(summ_r),
+                               rtol=1e-5, atol=1e-3)
+    # conservation under arbitrary shapes
+    s = np.asarray(summ_k)
+    assert s[ref.SUM_DET] + s[ref.SUM_ABS] + s[ref.SUM_ALIVE] == num_photons
+    assert np.asarray(hits_k).sum() == s[ref.SUM_DET]
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.sampled_from([(64, 16), (64, 32), (64, 64), (128, 32),
+                            (96, 32), (160, 32)]),
+    num_doms=st.integers(min_value=4, max_value=24),
+    num_steps=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_equals_ref_sweep(blocks, num_doms, num_steps, seed):
+    num_photons, block = blocks
+    _check(num_photons, block, num_doms, num_steps, seed, dusty=True)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dusty=st.booleans(),
+)
+def test_kernel_equals_ref_ice_models(seed, dusty):
+    _check(64, 32, 12, 8, seed, dusty)
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.floats(min_value=0.0, max_value=0.96875, width=32),
+    u=st.floats(min_value=0.0, max_value=0.999755859375, width=32),
+)
+def test_hg_cos_in_range(g, u):
+    c = float(ref.hg_cos_theta(jnp.float32(g), jnp.float32(u)))
+    assert -1.0 <= c <= 1.0
+
+
+@settings(**SETTINGS)
+@given(
+    z=st.floats(min_value=-1e5, max_value=1e5, width=32),
+    z0=st.floats(min_value=-100.0, max_value=100.0, width=32),
+    dz=st.floats(min_value=1.0, max_value=1000.0, width=32),
+    n=st.integers(min_value=1, max_value=64),
+)
+def test_layer_index_always_valid(z, z0, dz, n):
+    li = int(ref.layer_index(jnp.float32(z), z0, dz, n))
+    assert 0 <= li < n

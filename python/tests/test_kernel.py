@@ -1,0 +1,178 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness gate.
+
+Per-DOM hit counts are integer-valued f32 and must match the oracle
+EXACTLY; float summaries match to 1e-5 (block summation order differs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import geometry, model
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-3
+
+
+def run_both(v, seed, dusty=True):
+    src, media, doms, params = geometry.variant_inputs(v, seed=seed,
+                                                       dusty=dusty)
+    hits_k, summ_k = model.simulate(
+        src, media, doms, params, num_photons=v.num_photons,
+        block=v.block, num_steps=v.num_steps)
+    hits_r, summ_r = model.simulate_ref(
+        src, media, doms, params, num_photons=v.num_photons,
+        num_steps=v.num_steps)
+    return (np.asarray(hits_k), np.asarray(summ_k),
+            np.asarray(hits_r), np.asarray(summ_r))
+
+
+@pytest.mark.parametrize("seed", [1, 7, 42, 20210921])
+def test_kernel_matches_ref_small(seed):
+    v = geometry.VARIANTS["small"]
+    hits_k, summ_k, hits_r, summ_r = run_both(v, seed)
+    assert np.array_equal(hits_k, hits_r)
+    np.testing.assert_allclose(summ_k, summ_r, rtol=RTOL, atol=ATOL)
+
+
+def test_kernel_matches_ref_default():
+    v = geometry.VARIANTS["default"]
+    hits_k, summ_k, hits_r, summ_r = run_both(v, 11)
+    assert np.array_equal(hits_k, hits_r)
+    np.testing.assert_allclose(summ_k, summ_r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128, 256])
+def test_block_size_invariance(block):
+    """The per-DOM histogram must not depend on the Pallas tiling."""
+    v = geometry.Variant("t", num_photons=256, block=block, num_doms=16,
+                         num_steps=12)
+    src, media, doms, params = geometry.variant_inputs(v, seed=5)
+    hits, summ = model.simulate(src, media, doms, params,
+                                num_photons=v.num_photons, block=block,
+                                num_steps=v.num_steps)
+    hits_r, summ_r = model.simulate_ref(src, media, doms, params,
+                                        num_photons=v.num_photons,
+                                        num_steps=v.num_steps)
+    assert np.array_equal(np.asarray(hits), np.asarray(hits_r))
+    np.testing.assert_allclose(np.asarray(summ), np.asarray(summ_r),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_determinism():
+    v = geometry.VARIANTS["small"]
+    a = run_both(v, 99)
+    b = run_both(v, 99)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_seed_sensitivity():
+    v = geometry.VARIANTS["small"]
+    h1, _, _, _ = run_both(v, 1)
+    h2, _, _, _ = run_both(v, 2)
+    assert not np.array_equal(h1, h2)
+
+
+class TestConservation:
+    """Population bookkeeping invariants on the kernel outputs."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        v = geometry.VARIANTS["small"]
+        src, media, doms, params = geometry.variant_inputs(v, seed=13)
+        hits, summ = model.simulate(src, media, doms, params,
+                                    num_photons=v.num_photons,
+                                    block=v.block, num_steps=v.num_steps)
+        return v, np.asarray(hits), np.asarray(summ)
+
+    def test_status_partition(self, result):
+        v, hits, summ = result
+        det, absd, alive = summ[ref.SUM_DET], summ[ref.SUM_ABS], summ[ref.SUM_ALIVE]
+        assert det + absd + alive == v.num_photons
+
+    def test_hits_equal_detected(self, result):
+        _, hits, summ = result
+        assert hits.sum() == summ[ref.SUM_DET]
+
+    def test_hits_nonnegative_integers(self, result):
+        _, hits, _ = result
+        assert np.all(hits >= 0)
+        assert np.array_equal(hits, np.round(hits))
+
+    def test_path_positive(self, result):
+        _, _, summ = result
+        assert summ[ref.SUM_PATH] > 0
+
+    def test_hit_times_nonnegative(self, result):
+        _, _, summ = result
+        assert summ[ref.SUM_HITT] >= 0
+
+    def test_alive_steps_bounded(self, result):
+        v, _, summ = result
+        assert 0 < summ[ref.SUM_STEPS] <= v.num_photons * v.num_steps
+
+
+class TestRefState:
+    """Final-state invariants exposed by the oracle (return_state=True)."""
+
+    @pytest.fixture(scope="class")
+    def state(self):
+        v = geometry.VARIANTS["small"]
+        src, media, doms, params = geometry.variant_inputs(v, seed=21)
+        hits, summ, st = ref.propagate(src, media, doms, params,
+                                       num_photons=v.num_photons,
+                                       num_steps=v.num_steps,
+                                       return_state=True)
+        return np.asarray(hits), np.asarray(summ), {
+            k: np.asarray(x) for k, x in st.items()}
+
+    def test_directions_unit_norm(self, state):
+        _, _, st = state
+        norms = np.linalg.norm(st["dir"], axis=1)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+    def test_status_codes_valid(self, state):
+        _, _, st = state
+        assert set(np.unique(st["status"])) <= {0, 1, 2}
+
+    def test_time_consistent_with_path(self, state):
+        _, _, st = state
+        v_group = geometry.V_GROUP_M_NS
+        np.testing.assert_allclose(st["t"], st["path"] / v_group, rtol=1e-3)
+
+    def test_detected_photons_near_a_dom(self, state):
+        _, _, st = state
+        v = geometry.VARIANTS["small"]
+        doms = geometry.string_doms(v.num_doms)
+        det = st["status"] == 2
+        if det.sum() == 0:
+            pytest.skip("no detections with this seed")
+        dpos = st["pos"][det]
+        d = np.linalg.norm(dpos[:, None, :] - doms[None, :, :], axis=2)
+        # detected photons stopped at their hit point (within DOM radius
+        # plus fp slack from the clipped segment parameterization)
+        assert np.all(d.min(axis=1) < geometry.R_DOM_EFF * 1.5)
+
+
+def test_pid_offset_matches_blocks():
+    """ref.propagate(pid0=k*B) over blocks == one ref run over all photons.
+
+    This pins the pid convention the Pallas kernel relies on.
+    """
+    v = geometry.Variant("t", num_photons=128, block=32, num_doms=8,
+                         num_steps=8)
+    src, media, doms, params = geometry.variant_inputs(v, seed=3)
+    hits_full, summ_full = ref.propagate(src, media, doms, params,
+                                         num_photons=128, num_steps=8)
+    hits_acc = np.zeros(8, dtype=np.float32)
+    summ_acc = np.zeros(8, dtype=np.float32)
+    for b in range(4):
+        h, s = ref.propagate(src, media, doms, params, num_photons=32,
+                             num_steps=8, pid0=b * 32)
+        hits_acc += np.asarray(h)
+        summ_acc += np.asarray(s)
+    assert np.array_equal(hits_acc, np.asarray(hits_full))
+    np.testing.assert_allclose(summ_acc, np.asarray(summ_full),
+                               rtol=RTOL, atol=ATOL)

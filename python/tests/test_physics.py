@@ -1,0 +1,175 @@
+"""Statistical physics tests on the propagation model components."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import geometry
+from compile.kernels import ref, rng
+
+N = 1 << 14
+
+
+def _u(seed, stream=0):
+    pid = jnp.arange(N, dtype=jnp.uint32)
+    return rng.uniform(seed, pid, 0, stream)
+
+
+class TestHenyeyGreenstein:
+    @pytest.mark.parametrize("g", [0.3, 0.6, 0.9, 0.95])
+    def test_mean_cosine_equals_g(self, g):
+        """<cos theta> of HG sampling equals the asymmetry parameter g."""
+        cos_t = np.asarray(ref.hg_cos_theta(jnp.float32(g), _u(5)))
+        assert abs(cos_t.mean() - g) < 0.02
+
+    def test_isotropic_limit(self):
+        cos_t = np.asarray(ref.hg_cos_theta(jnp.float32(0.0), _u(6)))
+        assert abs(cos_t.mean()) < 0.02
+        assert np.all(cos_t >= -1.0) and np.all(cos_t <= 1.0)
+
+    def test_range_clipped(self):
+        for g in (0.5, 0.99):
+            cos_t = np.asarray(ref.hg_cos_theta(jnp.float32(g), _u(7)))
+            assert np.all(cos_t >= -1.0) and np.all(cos_t <= 1.0)
+
+    def test_forward_peaked(self):
+        cos_t = np.asarray(ref.hg_cos_theta(jnp.float32(0.9), _u(8)))
+        assert (cos_t > 0.5).mean() > 0.7
+
+
+class TestIsotropicInit:
+    def test_unit_norm(self):
+        pid = jnp.arange(N, dtype=jnp.uint32)
+        d = np.asarray(ref.isotropic_dirs(3, pid))
+        np.testing.assert_allclose(np.linalg.norm(d, axis=1), 1.0,
+                                   atol=1e-5)
+
+    def test_mean_zero(self):
+        pid = jnp.arange(N, dtype=jnp.uint32)
+        d = np.asarray(ref.isotropic_dirs(3, pid))
+        assert np.all(np.abs(d.mean(axis=0)) < 0.02)
+
+    def test_cos_uniform(self):
+        pid = jnp.arange(N, dtype=jnp.uint32)
+        d = np.asarray(ref.isotropic_dirs(3, pid))
+        counts, _ = np.histogram(d[:, 2], bins=8, range=(-1, 1))
+        expected = N / 8
+        assert np.all(np.abs(counts - expected) < 6 * np.sqrt(expected))
+
+
+class TestRotation:
+    def test_preserves_norm(self):
+        pid = jnp.arange(N, dtype=jnp.uint32)
+        d = ref.isotropic_dirs(11, pid)
+        cos_t = ref.hg_cos_theta(jnp.float32(0.9), _u(12))
+        phi = 2 * jnp.pi * _u(13, 1)
+        nd = np.asarray(ref.rotate_dir(d, cos_t, phi))
+        np.testing.assert_allclose(np.linalg.norm(nd, axis=1), 1.0,
+                                   atol=1e-5)
+
+    def test_achieves_requested_angle(self):
+        pid = jnp.arange(N, dtype=jnp.uint32)
+        d = ref.isotropic_dirs(11, pid)
+        cos_t = ref.hg_cos_theta(jnp.float32(0.9), _u(12))
+        phi = 2 * jnp.pi * _u(13, 1)
+        nd = ref.rotate_dir(d, cos_t, phi)
+        got = np.asarray(jnp.sum(nd * d, axis=1))
+        np.testing.assert_allclose(got, np.asarray(cos_t), atol=1e-3)
+
+    def test_identity_rotation(self):
+        pid = jnp.arange(64, dtype=jnp.uint32)
+        d = ref.isotropic_dirs(1, pid)
+        nd = np.asarray(ref.rotate_dir(d, jnp.float32(1.0),
+                                       jnp.float32(0.3)))
+        np.testing.assert_allclose(nd, np.asarray(d), atol=1e-4)
+
+    def test_handles_polar_directions(self):
+        # the Duff ONB must be stable for d = +-z
+        d = jnp.asarray([[0.0, 0.0, 1.0], [0.0, 0.0, -1.0]],
+                        dtype=jnp.float32)
+        nd = np.asarray(ref.rotate_dir(d, jnp.float32(0.5),
+                                       jnp.float32(1.0)))
+        assert np.all(np.isfinite(nd))
+        np.testing.assert_allclose(np.linalg.norm(nd, axis=1), 1.0,
+                                   atol=1e-5)
+
+
+class TestLayerIndex:
+    def test_top_layer(self):
+        li = ref.layer_index(jnp.float32(39.0), 40.0, 100.0, 10)
+        assert int(li) == 0
+
+    def test_bottom_clamped(self):
+        li = ref.layer_index(jnp.float32(-1e6), 40.0, 100.0, 10)
+        assert int(li) == 9
+
+    def test_above_top_clamped(self):
+        li = ref.layer_index(jnp.float32(1e6), 40.0, 100.0, 10)
+        assert int(li) == 0
+
+    def test_monotone_with_depth(self):
+        z = jnp.linspace(40.0, -960.0, 50)
+        li = np.asarray(ref.layer_index(z, 40.0, 100.0, 10))
+        assert np.all(np.diff(li) >= 0)
+
+
+class TestIceEffects:
+    """Macro physics: ice properties drive detection the right way."""
+
+    def _run(self, media, seed=17, num_photons=512, num_steps=24):
+        v = geometry.Variant("t", num_photons=num_photons, block=num_photons,
+                             num_doms=30, num_steps=num_steps)
+        src, _, doms, params = geometry.variant_inputs(v, seed=seed)
+        hits, summ = ref.propagate(src, jnp.asarray(media), doms, params,
+                                   num_photons=num_photons,
+                                   num_steps=num_steps)
+        return np.asarray(hits), np.asarray(summ)
+
+    def test_dust_layer_absorbs_more(self):
+        _, clear = self._run(geometry.clear_ice())
+        _, dusty = self._run(geometry.layered_ice(dusty=True))
+        assert dusty[ref.SUM_ABS] > clear[ref.SUM_ABS]
+
+    def test_short_absorption_kills_photons(self):
+        media = geometry.clear_ice()
+        media[:, geometry.COL_ABS] = 5.0
+        _, short = self._run(media)
+        _, normal = self._run(geometry.clear_ice())
+        assert short[ref.SUM_ABS] > normal[ref.SUM_ABS]
+        assert short[ref.SUM_PATH] < normal[ref.SUM_PATH]
+
+    def test_no_absorption_no_kills(self):
+        media = geometry.clear_ice()
+        media[:, geometry.COL_ABS] = 1e9
+        _, summ = self._run(media)
+        assert summ[ref.SUM_ABS] == 0
+
+
+class TestGeometryHelpers:
+    def test_string_doms_spacing(self):
+        doms = geometry.string_doms(60)
+        assert doms.shape == (60, 3)
+        dz = np.diff(doms[:, 2])
+        np.testing.assert_allclose(dz, -geometry.DOM_SPACING_M)
+
+    def test_grid_doms_count(self):
+        doms = geometry.grid_doms(2, 2, 60)
+        assert doms.shape == (240, 3)
+        assert len(np.unique(doms[:, :2], axis=0)) == 4
+
+    def test_variant_inputs_shapes(self):
+        v = geometry.VARIANTS["default"]
+        src, media, doms, params = geometry.variant_inputs(v)
+        assert src.shape == (8,)
+        assert media.shape == (v.num_layers, 4)
+        assert doms.shape == (v.num_doms, 3)
+        assert params.shape == (8,)
+
+    def test_flops_estimate_positive_and_scales(self):
+        s = geometry.VARIANTS["small"].flops_estimate()
+        d = geometry.VARIANTS["default"].flops_estimate()
+        assert 0 < s < d
+
+    def test_variant_grid(self):
+        v = geometry.VARIANTS["default"]
+        assert v.grid * v.block == v.num_photons

@@ -1,0 +1,93 @@
+"""Tests for the stateless counter RNG (kernels/rng.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import rng
+
+N = 1 << 14
+
+
+def _uniforms(seed=1, step=0, stream=0, n=N):
+    pid = jnp.arange(n, dtype=jnp.uint32)
+    return np.asarray(rng.uniform(seed, pid, step, stream))
+
+
+class TestRange:
+    def test_in_unit_interval(self):
+        u = _uniforms()
+        assert np.all(u >= 0.0)
+        assert np.all(u < 1.0)
+
+    def test_exact_multiples_of_2_24(self):
+        u = _uniforms()
+        scaled = u * (1 << 24)
+        assert np.array_equal(scaled, np.round(scaled))
+
+
+class TestUniformity:
+    def test_mean_and_var(self):
+        u = _uniforms(seed=42)
+        # mean 0.5 +- 5 sigma of 1/sqrt(12 N)
+        assert abs(u.mean() - 0.5) < 5.0 / np.sqrt(12 * N)
+        assert abs(u.var() - 1.0 / 12.0) < 0.005
+
+    def test_histogram_flat(self):
+        u = _uniforms(seed=3)
+        counts, _ = np.histogram(u, bins=16, range=(0, 1))
+        expected = N / 16
+        # chi-square-ish bound: each bin within 6 sigma
+        assert np.all(np.abs(counts - expected) < 6 * np.sqrt(expected))
+
+
+class TestDecorrelation:
+    def test_streams_differ(self):
+        a = _uniforms(stream=0)
+        b = _uniforms(stream=1)
+        assert not np.array_equal(a, b)
+        assert abs(np.corrcoef(a, b)[0, 1]) < 0.05
+
+    def test_steps_differ(self):
+        a = _uniforms(step=0)
+        b = _uniforms(step=1)
+        assert not np.array_equal(a, b)
+        assert abs(np.corrcoef(a, b)[0, 1]) < 0.05
+
+    def test_seeds_differ(self):
+        a = _uniforms(seed=1)
+        b = _uniforms(seed=2)
+        assert not np.array_equal(a, b)
+        assert abs(np.corrcoef(a, b)[0, 1]) < 0.05
+
+    def test_adjacent_pids_uncorrelated(self):
+        u = _uniforms(seed=9)
+        assert abs(np.corrcoef(u[:-1], u[1:])[0, 1]) < 0.05
+
+
+class TestDeterminism:
+    def test_reproducible(self):
+        assert np.array_equal(_uniforms(seed=7), _uniforms(seed=7))
+
+    def test_float_seed_matches_int_seed(self):
+        # the artifact passes the seed through an f32 slot
+        pid = jnp.arange(64, dtype=jnp.uint32)
+        a = rng.uniform(jnp.float32(1234.0), pid, 3, 2)
+        b = rng.uniform(1234, pid, 3, 2)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMix32:
+    def test_avalanche(self):
+        # flipping one input bit flips ~half the output bits on average
+        x = jnp.arange(1024, dtype=jnp.uint32)
+        base = np.asarray(rng.mix32(x), dtype=np.uint64)
+        flipped = np.asarray(rng.mix32(x ^ jnp.uint32(1)), dtype=np.uint64)
+        diff = base ^ flipped
+        popcount = np.array([bin(int(v)).count("1") for v in diff])
+        assert 12.0 < popcount.mean() < 20.0
+
+    def test_bijective_sample(self):
+        # mix32 is a bijection on uint32; no collisions on a sample
+        x = jnp.arange(1 << 16, dtype=jnp.uint32)
+        y = np.asarray(rng.mix32(x))
+        assert len(np.unique(y)) == len(y)

@@ -1,0 +1,49 @@
+//! End-to-end campaign benchmarks (the L3 hot path).
+//!
+//! The key perf claim: the full two-week 2k-GPU campaign must replay
+//! orders of magnitude faster than real time. We bench a 2-day slice at
+//! several fleet scales and report simulated-days-per-second.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::coordinator::Campaign;
+use icecloud::sim::DAY;
+use icecloud::util::bench::Bench;
+
+fn config(days: u64, gpus: u32, onprem: u32) -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = days * DAY;
+    c.ramp = vec![RampStep { target: gpus, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = onprem;
+    c.generator.min_backlog = (gpus as usize * 2).max(500);
+    c
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run_throughput("campaign/2day-200gpu", 2.0, "sim-days", || {
+        Campaign::new(config(2, 200, 200)).run().schedd_stats.completed
+    });
+
+    b.run_throughput("campaign/2day-1000gpu", 2.0, "sim-days", || {
+        Campaign::new(config(2, 1000, 1000)).run().schedd_stats.completed
+    });
+
+    b.run_throughput("campaign/2day-2000gpu-peak", 2.0, "sim-days", || {
+        Campaign::new(config(2, 2000, 1150)).run().schedd_stats.completed
+    });
+
+    // one tick at scale (the inner-loop cost the profile optimizes)
+    let mut paper = Campaign::new(config(30, 2000, 1150));
+    for step in 0..3 * 1440 {
+        paper.tick(step * 60);
+    }
+    let mut t = 3 * 1440 * 60;
+    b.run_throughput("campaign/tick-at-2k-scale", 1.0, "ticks", || {
+        paper.tick(t);
+        t += 60;
+    });
+
+    b.finish();
+}

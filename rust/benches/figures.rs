@@ -1,0 +1,53 @@
+//! One bench per paper figure/table: the cost of regenerating each.
+//!
+//! F1/F2/T1 share a campaign run; NAT and RAMP are separate scenarios.
+//! Scaled-down scenarios keep `cargo bench` minutes-fast; the full-size
+//! regeneration is `icecloud reproduce --all` (see EXPERIMENTS.md).
+
+use icecloud::config::{CampaignConfig, OutageSpec, RampStep};
+use icecloud::coordinator::{Campaign, CampaignResult};
+use icecloud::experiments::{fig1, fig2, headline, nat, ramp};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::bench::Bench;
+
+fn mini_campaign() -> CampaignResult {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * DAY;
+    c.ramp = vec![
+        RampStep { target: 40, hold_s: 6 * HOUR },
+        RampStep { target: 120, hold_s: 60 * DAY },
+    ];
+    c.outage = Some(OutageSpec { at_s: DAY + 6 * HOUR, duration_s: 2 * HOUR });
+    c.post_outage_target = 60;
+    c.low_budget_resume_fraction = 1.1;
+    c.onprem.slots = 100;
+    c.generator.min_backlog = 300;
+    Campaign::new(c).run()
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run("figures/campaign-for-f1-f2-t1", mini_campaign);
+
+    let result = mini_campaign();
+    b.run("figures/fig1-extract+render", || {
+        let f = fig1::extract(&result);
+        (f.chart().len(), f.to_csv().len())
+    });
+    b.run("figures/fig2-extract+render", || {
+        let f = fig2::extract(&result);
+        (f.chart().len(), f.to_csv().len())
+    });
+    b.run("figures/headline-extract", || {
+        headline::extract(&result).table().len()
+    });
+
+    b.run("figures/nat-sweep-2-points", || {
+        nat::run_sweep(&[120, 300], 3 * HOUR, 24).len()
+    });
+
+    b.run("figures/ramp-validation", || ramp::run_validation(60, 1).len());
+
+    b.finish();
+}

@@ -1,0 +1,89 @@
+//! Negotiator benchmarks: matchmaking cost at campaign scale.
+//!
+//! DESIGN.md §8 ablation: autoclustered negotiation (one ClassAd
+//! evaluation pair per cluster-slot) vs the naive per-job cost it
+//! replaces. At the paper's scale — ~2k slots, thousands of idle jobs —
+//! a negotiation cycle must stay well under the 300 s cycle period.
+
+use icecloud::cloud::{InstanceId, Provider};
+use icecloud::condor::job::{gpu_job_ad, gpu_requirements};
+use icecloud::condor::negotiator::negotiate;
+use icecloud::condor::startd::{SlotId, Startd};
+use icecloud::condor::Schedd;
+use icecloud::net::NatProfile;
+use icecloud::util::bench::Bench;
+use icecloud::util::fxhash::FxHashMap;
+
+fn pool(n: u64) -> FxHashMap<SlotId, Startd> {
+    (0..n)
+        .map(|i| {
+            let slot = SlotId::Cloud(InstanceId(i));
+            (
+                slot,
+                Startd::new(
+                    slot,
+                    "cloud",
+                    Some(Provider::Azure),
+                    "azure/eastus",
+                    NatProfile::permissive("bench"),
+                    60,
+                    0,
+                ),
+            )
+        })
+        .collect()
+}
+
+fn schedd(jobs: u64, clusters: u64) -> Schedd {
+    let mut s = Schedd::new();
+    for i in 0..jobs {
+        // `clusters` distinct memory requests -> that many autoclusters
+        let mem = 4096 + 1024 * (i % clusters) as i64;
+        s.submit(
+            "icecube",
+            3600,
+            1e15,
+            100,
+            gpu_job_ad("icecube", mem),
+            gpu_requirements(),
+            0,
+        );
+    }
+    s
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    let startds = pool(2000);
+    let s1 = schedd(10_000, 1);
+    b.run_throughput("negotiate/2k-slots-10k-jobs-1-cluster", 2000.0,
+                     "matches", || {
+        negotiate(&s1, &startds, startds.keys().copied(), usize::MAX).matches.len()
+    });
+
+    let s8 = schedd(10_000, 8);
+    b.run_throughput("negotiate/2k-slots-10k-jobs-8-clusters", 2000.0,
+                     "matches", || {
+        negotiate(&s8, &startds, startds.keys().copied(), usize::MAX).matches.len()
+    });
+
+    // the worst case autoclustering protects against: every job unique
+    let s_unique = schedd(2_000, 2_000);
+    b.run_throughput("negotiate/2k-slots-2k-unique-jobs", 2000.0, "matches",
+                     || {
+        negotiate(&s_unique, &startds, startds.keys().copied(), usize::MAX)
+            .matches
+            .len()
+    });
+
+    // per-cycle cost during the steady state (few idle jobs, full pool)
+    let s_steady = schedd(100, 1);
+    b.run_throughput("negotiate/steady-state-100-idle", 100.0, "matches", || {
+        negotiate(&s_steady, &startds, startds.keys().copied(), usize::MAX)
+            .matches
+            .len()
+    });
+
+    b.finish();
+}

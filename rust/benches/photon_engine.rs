@@ -1,0 +1,43 @@
+//! L1/L2 hot path: AOT photon artifact execution through PJRT.
+//!
+//! Per-bunch latency and photon throughput for each compiled variant —
+//! the real-compute cost the campaign's sampling pays, and the L1 number
+//! recorded in EXPERIMENTS.md §Perf. Skipped (with a notice) when
+//! artifacts have not been built.
+
+use icecloud::runtime::PhotonEngine;
+use icecloud::util::bench::Bench;
+use std::path::PathBuf;
+
+fn main() {
+    let dir = std::env::var("ICECLOUD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let Ok(engine) = PhotonEngine::new(&dir) else {
+        println!("photon_engine: artifacts not built; run `make artifacts`");
+        return;
+    };
+    let mut b = Bench::new();
+
+    for variant in ["small", "default", "large"] {
+        let Ok(exe) = engine.compile(variant) else { continue };
+        let photons = exe.meta.num_photons as f64;
+        let mut seed = 0u32;
+        b.run_throughput(
+            &format!("photon/{variant}-bunch"),
+            photons,
+            "photons",
+            || {
+                seed = seed.wrapping_add(1);
+                exe.run_seeded(seed).unwrap().detected()
+            },
+        );
+    }
+
+    // compile cost (paid once per variant at campaign start)
+    b.run("photon/compile-small", || engine.compile("small").unwrap());
+
+    b.finish();
+}

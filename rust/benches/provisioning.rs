@@ -1,0 +1,64 @@
+//! Cloud-fleet benchmarks: group reconcile + market dynamics + policy.
+//!
+//! DESIGN.md §8 ablations: group-target reconciliation frequency and the
+//! provider-preference distribution cost at the paper's 20-region scale.
+
+use icecloud::cloud::{providers, CloudSim, RegionId};
+use icecloud::config::{PolicyMode, ProviderWeights};
+use icecloud::coordinator::distribute;
+use icecloud::sim::MINUTE;
+use icecloud::util::bench::Bench;
+use icecloud::util::rng::Rng;
+
+fn loaded_fleet(target_per_region: u32) -> CloudSim {
+    let mut fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+    for rid in 0..fleet.num_regions() {
+        fleet.set_target(RegionId(rid as u32), target_per_region);
+    }
+    // warm to steady state
+    for i in 0..30 {
+        fleet.tick(i * MINUTE, MINUTE);
+    }
+    fleet
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    let mut fleet = loaded_fleet(100); // ~2k instances across 20 regions
+    let mut t = 30 * MINUTE;
+    b.run_throughput("fleet/tick-2k-instances", 20.0, "regions", || {
+        let ev = fleet.tick(t, MINUTE);
+        t += MINUTE;
+        ev.len()
+    });
+
+    // reconcile-frequency ablation: 1-min vs 5-min cadence over 1 sim-hour
+    for (label, period) in [("1min", MINUTE), ("5min", 5 * MINUTE)] {
+        let mut f = loaded_fleet(100);
+        let mut now = 30 * MINUTE;
+        b.run(&format!("fleet/1h-reconcile-{label}"), || {
+            let steps = 3600 / period;
+            for _ in 0..steps {
+                f.tick(now, period);
+                now += period;
+            }
+        });
+    }
+
+    let fleet_ro = loaded_fleet(100);
+    let paper = PolicyMode::Fixed(ProviderWeights {
+        aws: 0.15,
+        gcp: 0.15,
+        azure: 0.7,
+    });
+    b.run_throughput("policy/distribute-2000-gpus", 20.0, "regions", || {
+        distribute(2000, &fleet_ro, &paper, None).len()
+    });
+
+    b.run_throughput("policy/distribute-adaptive", 20.0, "regions", || {
+        distribute(2000, &fleet_ro, &PolicyMode::Adaptive, None).len()
+    });
+
+    b.finish();
+}

@@ -1,0 +1,123 @@
+//! Provider-side billing meters.
+//!
+//! Each provider meters billable instance-seconds at the region spot
+//! price; CloudBank (the `cloudbank` module) aggregates the three feeds.
+//! Accrual is incremental — `accrue(fleet, dt)` each tick — so the ledger
+//! can alert on thresholds *during* the campaign, not after it.
+
+use super::fleet::CloudSim;
+use super::types::Provider;
+
+/// Accumulated spend and usage per provider.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ProviderMeter {
+    pub spend_usd: f64,
+    pub instance_hours: f64,
+}
+
+/// Billing meters for the whole multi-cloud fleet.
+#[derive(Debug, Clone, Default)]
+pub struct BillingMeter {
+    aws: ProviderMeter,
+    gcp: ProviderMeter,
+    azure: ProviderMeter,
+    /// Non-instance costs (egress, disks, the CE VM, ...) as a fraction
+    /// of instance spend; the paper's $58k is "all included".
+    overhead_fraction: f64,
+}
+
+impl BillingMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Meter with a non-instance overhead fraction applied to spend.
+    pub fn with_overhead(overhead_fraction: f64) -> Self {
+        BillingMeter { overhead_fraction, ..Self::default() }
+    }
+
+    /// Accrue `dt_s` seconds of the fleet's current billable population.
+    pub fn accrue(&mut self, fleet: &CloudSim, dt_s: u64) {
+        let dt_h = dt_s as f64 / 3600.0;
+        let cost_factor = 1.0 + self.overhead_fraction;
+        for (_, region) in fleet.regions() {
+            let n = region.live.len() as f64;
+            if n == 0.0 {
+                continue;
+            }
+            let m = self.meter_mut(region.spec().provider);
+            m.instance_hours += n * dt_h;
+            m.spend_usd += n * region.spec().price_per_hour * dt_h * cost_factor;
+        }
+    }
+
+    pub fn provider(&self, p: Provider) -> ProviderMeter {
+        match p {
+            Provider::Aws => self.aws,
+            Provider::Gcp => self.gcp,
+            Provider::Azure => self.azure,
+        }
+    }
+
+    fn meter_mut(&mut self, p: Provider) -> &mut ProviderMeter {
+        match p {
+            Provider::Aws => &mut self.aws,
+            Provider::Gcp => &mut self.gcp,
+            Provider::Azure => &mut self.azure,
+        }
+    }
+
+    pub fn total_spend(&self) -> f64 {
+        self.aws.spend_usd + self.gcp.spend_usd + self.azure.spend_usd
+    }
+
+    pub fn total_instance_hours(&self) -> f64 {
+        self.aws.instance_hours + self.gcp.instance_hours + self.azure.instance_hours
+    }
+
+    /// GPU-days delivered (1 instance == 1 T4).
+    pub fn gpu_days(&self) -> f64 {
+        self.total_instance_hours() / 24.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::fleet::CloudSim;
+    use crate::cloud::providers;
+    use crate::cloud::types::RegionId;
+    use crate::sim::{HOUR, MINUTE};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accrues_per_provider_at_spot_price() {
+        let mut fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+        // region 0 is azure
+        fleet.set_target(RegionId(0), 10);
+        fleet.tick(0, MINUTE);
+        let mut meter = BillingMeter::new();
+        meter.accrue(&fleet, HOUR);
+        let az = meter.provider(Provider::Azure);
+        assert!((az.instance_hours - 10.0).abs() < 1e-9);
+        assert!((az.spend_usd - 10.0 * 2.9 / 24.0).abs() < 1e-9);
+        assert_eq!(meter.provider(Provider::Aws), ProviderMeter::default());
+        assert!((meter.total_spend() - az.spend_usd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpu_days_conversion() {
+        let mut m = BillingMeter::new();
+        m.azure.instance_hours = 48.0;
+        m.aws.instance_hours = 24.0;
+        assert!((m.gpu_days() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fleet_accrues_nothing() {
+        let fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+        let mut meter = BillingMeter::new();
+        meter.accrue(&fleet, HOUR);
+        assert_eq!(meter.total_spend(), 0.0);
+    }
+}

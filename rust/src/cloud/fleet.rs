@@ -1,0 +1,508 @@
+//! Multi-cloud fleet simulator: regions, markets, groups and instances.
+//!
+//! [`CloudSim`] is the cloud-provider side of the stack: it owns every
+//! region's spot market and provisioning group, advances them on a fixed
+//! reconcile cadence, and emits [`CloudEvent`]s that the glidein/WMS
+//! layers consume (launch → boot → running → preempted/terminated).
+
+use super::group::{choose_scale_in_victims, plan_reconcile};
+use super::market::SpotMarket;
+use super::types::{
+    CloudEvent, Instance, InstanceId, InstanceState, PreemptReason, Provider,
+    RegionId, RegionSpec,
+};
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// One region: market + provisioning group + live instance set.
+#[derive(Debug)]
+pub struct RegionState {
+    pub market: SpotMarket,
+    /// Desired group size (VMSS/MIG/fleet target).
+    pub target: u32,
+    /// Instances currently booting or running (group members).
+    pub live: Vec<InstanceId>,
+}
+
+impl RegionState {
+    pub fn spec(&self) -> &RegionSpec {
+        &self.market.spec
+    }
+}
+
+/// Aggregate instance counts (for monitoring).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetCounts {
+    pub booting: u32,
+    pub running: u32,
+    pub target: u32,
+}
+
+impl FleetCounts {
+    pub fn live(&self) -> u32 {
+        self.booting + self.running
+    }
+}
+
+/// The multi-cloud fleet simulator.
+pub struct CloudSim {
+    regions: Vec<RegionState>,
+    instances: Vec<Instance>,
+    rng: Rng,
+    /// Cumulative preemptions per region (stats for the RAMP experiment).
+    preemptions: Vec<u64>,
+    /// Cumulative launches per region.
+    launches: Vec<u64>,
+}
+
+impl CloudSim {
+    pub fn new(specs: Vec<RegionSpec>, rng: Rng) -> Self {
+        let preemptions = vec![0; specs.len()];
+        let launches = vec![0; specs.len()];
+        let regions = specs
+            .into_iter()
+            .map(|spec| RegionState {
+                market: SpotMarket::new(spec),
+                target: 0,
+                live: Vec::new(),
+            })
+            .collect();
+        CloudSim { regions, instances: Vec::new(), rng, preemptions, launches }
+    }
+
+    // ---- queries ---------------------------------------------------------
+
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn region(&self, id: RegionId) -> &RegionState {
+        &self.regions[id.0 as usize]
+    }
+
+    pub fn regions(&self) -> impl Iterator<Item = (RegionId, &RegionState)> {
+        self.regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (RegionId(i as u32), r))
+    }
+
+    pub fn instance(&self, id: InstanceId) -> &Instance {
+        &self.instances[id.0 as usize]
+    }
+
+    /// All instances ever launched (terminated ones included) — accounting.
+    pub fn all_instances(&self) -> &[Instance] {
+        &self.instances
+    }
+
+    pub fn counts(&self) -> FleetCounts {
+        let mut c = FleetCounts::default();
+        for r in &self.regions {
+            c.target += r.target;
+            for id in &r.live {
+                match self.instances[id.0 as usize].state {
+                    InstanceState::Booting => c.booting += 1,
+                    InstanceState::Running => c.running += 1,
+                    _ => unreachable!("live list holds only billable instances"),
+                }
+            }
+        }
+        c
+    }
+
+    pub fn counts_by_provider(&self, provider: Provider) -> FleetCounts {
+        let mut c = FleetCounts::default();
+        for r in &self.regions {
+            if r.spec().provider != provider {
+                continue;
+            }
+            c.target += r.target;
+            for id in &r.live {
+                match self.instances[id.0 as usize].state {
+                    InstanceState::Booting => c.booting += 1,
+                    InstanceState::Running => c.running += 1,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        c
+    }
+
+    /// (launches, preemptions) cumulative per region.
+    pub fn region_stats(&self, id: RegionId) -> (u64, u64) {
+        (self.launches[id.0 as usize], self.preemptions[id.0 as usize])
+    }
+
+    /// Current billable spend rate in $/hour across the fleet.
+    pub fn spend_rate_per_hour(&self) -> f64 {
+        self.regions
+            .iter()
+            .map(|r| r.live.len() as f64 * r.spec().price_per_hour)
+            .sum()
+    }
+
+    // ---- operator actions ------------------------------------------------
+
+    /// Set one region group's desired size.
+    pub fn set_target(&mut self, id: RegionId, target: u32) {
+        self.regions[id.0 as usize].target = target;
+    }
+
+    /// Set every group to zero (the paper's rapid outage response).
+    pub fn zero_all_targets(&mut self) {
+        for r in &mut self.regions {
+            r.target = 0;
+        }
+    }
+
+    // ---- dynamics ----------------------------------------------------------
+
+    /// Advance every region by `dt_s`; returns lifecycle events.
+    pub fn tick(&mut self, now: SimTime, dt_s: u64) -> Vec<CloudEvent> {
+        let mut events = Vec::new();
+        for ridx in 0..self.regions.len() {
+            self.tick_region(ridx, now, dt_s, &mut events);
+        }
+        events
+    }
+
+    fn tick_region(
+        &mut self,
+        ridx: usize,
+        now: SimTime,
+        dt_s: u64,
+        events: &mut Vec<CloudEvent>,
+    ) {
+        // 1. boot completions
+        {
+            let region = &self.regions[ridx];
+            for &id in &region.live {
+                let inst = &mut self.instances[id.0 as usize];
+                if inst.state == InstanceState::Booting && now >= inst.running_at
+                {
+                    inst.state = InstanceState::Running;
+                    events.push(CloudEvent::BecameRunning(id));
+                }
+            }
+        }
+
+        // 2. market dynamics
+        self.regions[ridx].market.tick(dt_s, &mut self.rng);
+
+        // 3. capacity-pressure reclaim
+        let live_count = self.regions[ridx].live.len() as u32;
+        let reclaim = self.regions[ridx].market.reclaim_count(live_count);
+        if reclaim > 0 {
+            let victims = self.pick_random_live(ridx, reclaim as usize);
+            for id in victims {
+                self.preempt(ridx, id, now, PreemptReason::CapacityReclaim, events);
+            }
+        }
+
+        // 4. churn preemption (thin hazard, sampled as a Poisson count)
+        let live_count = self.regions[ridx].live.len();
+        if live_count > 0 {
+            let p = self.regions[ridx].market.churn_probability(dt_s);
+            let expected = live_count as f64 * p;
+            let k = (self.rng.poisson(expected) as usize).min(live_count);
+            if k > 0 {
+                let victims = self.pick_random_live(ridx, k);
+                for id in victims {
+                    self.preempt(ridx, id, now, PreemptReason::Churn, events);
+                }
+            }
+        }
+
+        // 5. group reconcile (maintain target within market headroom)
+        let live = self.regions[ridx].live.len() as u32;
+        let target = self.regions[ridx].target;
+        let headroom = self.regions[ridx].market.headroom(live);
+        let plan = plan_reconcile(live, target, headroom);
+        for _ in 0..plan.launch {
+            let id = self.launch(ridx, now);
+            events.push(CloudEvent::Launched(id));
+        }
+        if plan.terminate > 0 {
+            let region = &self.regions[ridx];
+            let launched: Vec<u64> = region
+                .live
+                .iter()
+                .map(|id| self.instances[id.0 as usize].launched_at)
+                .collect();
+            let victims = choose_scale_in_victims(
+                &region.live.clone(),
+                &launched,
+                plan.terminate as usize,
+            );
+            for id in victims {
+                self.terminate(ridx, id, now);
+                events.push(CloudEvent::Terminated(id));
+            }
+        }
+    }
+
+    fn launch(&mut self, ridx: usize, now: SimTime) -> InstanceId {
+        let id = InstanceId(self.instances.len() as u64);
+        let (lo, hi) = self.regions[ridx].spec().boot_time_s;
+        let boot = lo + self.rng.below(hi - lo + 1);
+        self.instances.push(Instance {
+            id,
+            region: RegionId(ridx as u32),
+            state: InstanceState::Booting,
+            launched_at: now,
+            running_at: now + boot,
+            stopped_at: None,
+            preempt_reason: None,
+        });
+        self.regions[ridx].live.push(id);
+        self.launches[ridx] += 1;
+        id
+    }
+
+    fn preempt(
+        &mut self,
+        ridx: usize,
+        id: InstanceId,
+        now: SimTime,
+        reason: PreemptReason,
+        events: &mut Vec<CloudEvent>,
+    ) {
+        let inst = &mut self.instances[id.0 as usize];
+        debug_assert!(inst.state.billable());
+        inst.state = InstanceState::Preempted;
+        inst.stopped_at = Some(now);
+        inst.preempt_reason = Some(reason);
+        self.regions[ridx].live.retain(|x| *x != id);
+        self.preemptions[ridx] += 1;
+        events.push(CloudEvent::Preempted(id, reason));
+    }
+
+    fn terminate(&mut self, ridx: usize, id: InstanceId, now: SimTime) {
+        let inst = &mut self.instances[id.0 as usize];
+        debug_assert!(inst.state.billable());
+        inst.state = InstanceState::Terminated;
+        inst.stopped_at = Some(now);
+        self.regions[ridx].live.retain(|x| *x != id);
+    }
+
+    fn pick_random_live(&mut self, ridx: usize, k: usize) -> Vec<InstanceId> {
+        let mut pool = self.regions[ridx].live.clone();
+        self.rng.shuffle(&mut pool);
+        pool.truncate(k);
+        pool
+    }
+
+    // ---- invariant checks (used by property tests) -------------------------
+
+    /// Verify internal consistency; returns an error description on breach.
+    pub fn check_invariants(&self, now: SimTime) -> Result<(), String> {
+        for (ridx, region) in self.regions.iter().enumerate() {
+            for id in &region.live {
+                let inst = &self.instances[id.0 as usize];
+                if !inst.state.billable() {
+                    return Err(format!(
+                        "region {ridx}: live list contains non-billable {id:?}"
+                    ));
+                }
+                if inst.region.0 as usize != ridx {
+                    return Err(format!("instance {id:?} in wrong region list"));
+                }
+            }
+        }
+        for inst in &self.instances {
+            if inst.state.billable() && inst.stopped_at.is_some() {
+                return Err(format!("billable {:?} has stopped_at", inst.id));
+            }
+            if !inst.state.billable() && inst.stopped_at.is_none() {
+                return Err(format!("stopped {:?} missing stopped_at", inst.id));
+            }
+            if let Some(stop) = inst.stopped_at {
+                if stop > now {
+                    return Err(format!("{:?} stopped in the future", inst.id));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::providers;
+    use crate::sim::MINUTE;
+
+    fn sim() -> CloudSim {
+        CloudSim::new(providers::all_regions(), Rng::new(42))
+    }
+
+    fn run_ticks(s: &mut CloudSim, start: SimTime, n: u64) -> Vec<CloudEvent> {
+        let mut all = Vec::new();
+        for i in 0..n {
+            all.extend(s.tick(start + i * MINUTE, MINUTE));
+        }
+        all
+    }
+
+    #[test]
+    fn provisions_toward_target() {
+        let mut s = sim();
+        s.set_target(RegionId(0), 50);
+        let events = run_ticks(&mut s, 0, 10);
+        let launched = events
+            .iter()
+            .filter(|e| matches!(e, CloudEvent::Launched(_)))
+            .count();
+        assert_eq!(launched, 50);
+        assert_eq!(s.counts().live(), 50);
+    }
+
+    #[test]
+    fn instances_boot_then_run() {
+        let mut s = sim();
+        s.set_target(RegionId(0), 10);
+        run_ticks(&mut s, 0, 1);
+        assert_eq!(s.counts().booting, 10);
+        // boot window is <= 240 s for azure/eastus: after 6 min all run
+        let events = run_ticks(&mut s, MINUTE, 6);
+        let running = events
+            .iter()
+            .filter(|e| matches!(e, CloudEvent::BecameRunning(_)))
+            .count();
+        assert_eq!(running, 10);
+        assert_eq!(s.counts().running, 10);
+    }
+
+    #[test]
+    fn market_limits_fulfilment() {
+        let mut s = sim();
+        let rid = RegionId(0);
+        let base = s.region(rid).spec().base_capacity;
+        s.set_target(rid, (base as u32) * 3); // far beyond spare capacity
+        run_ticks(&mut s, 0, 30);
+        let live = s.region(rid).live.len() as f64;
+        assert!(live <= base * 2.0 + 1.0, "live={live} base={base}");
+        assert!(live > base * 0.5, "live={live} base={base}");
+    }
+
+    #[test]
+    fn scale_to_zero_terminates_everything() {
+        let mut s = sim();
+        s.set_target(RegionId(0), 30);
+        run_ticks(&mut s, 0, 10);
+        s.zero_all_targets();
+        let events = run_ticks(&mut s, 10 * MINUTE, 2);
+        let terminated = events
+            .iter()
+            .filter(|e| matches!(e, CloudEvent::Terminated(_)))
+            .count();
+        assert_eq!(terminated, 30);
+        assert_eq!(s.counts().live(), 0);
+    }
+
+    #[test]
+    fn capacity_crash_preempts_excess() {
+        let mut s = sim();
+        let rid = RegionId(0);
+        s.set_target(rid, 100);
+        run_ticks(&mut s, 0, 10);
+        assert_eq!(s.region(rid).live.len(), 100);
+        // capacity collapses to 20: provider must reclaim ~80
+        s.regions[rid.0 as usize].market.set_available(20.0);
+        s.set_target(rid, 0); // also stop replacement launches
+        let events = s.tick(11 * MINUTE, MINUTE);
+        let reclaimed = events
+            .iter()
+            .filter(|e| {
+                matches!(e, CloudEvent::Preempted(_, PreemptReason::CapacityReclaim))
+            })
+            .count();
+        assert!(reclaimed >= 70, "reclaimed={reclaimed}");
+    }
+
+    #[test]
+    fn preempted_instances_are_replaced() {
+        let mut s = sim();
+        let rid = RegionId(0);
+        s.set_target(rid, 50);
+        run_ticks(&mut s, 0, 10);
+        // force a reclaim of ~10 by dropping capacity, then restore
+        s.regions[rid.0 as usize].market.set_available(40.0);
+        s.tick(10 * MINUTE, MINUTE);
+        assert!(s.region(rid).live.len() < 50);
+        s.regions[rid.0 as usize].market.set_available(400.0);
+        run_ticks(&mut s, 11 * MINUTE, 5);
+        assert_eq!(s.region(rid).live.len(), 50, "maintain-target must replace");
+    }
+
+    #[test]
+    fn azure_churns_less_than_aws() {
+        let mut s = sim();
+        // find one azure and one aws region, same target
+        let az = s
+            .regions()
+            .find(|(_, r)| r.spec().provider == Provider::Azure)
+            .unwrap()
+            .0;
+        let aw = s
+            .regions()
+            .find(|(_, r)| r.spec().provider == Provider::Aws)
+            .unwrap()
+            .0;
+        s.set_target(az, 60);
+        s.set_target(aw, 60);
+        run_ticks(&mut s, 0, 24 * 60); // one simulated day
+        let (_, pre_az) = s.region_stats(az);
+        let (_, pre_aw) = s.region_stats(aw);
+        assert!(
+            pre_az < pre_aw,
+            "azure preemptions ({pre_az}) must be below aws ({pre_aw})"
+        );
+    }
+
+    #[test]
+    fn spend_rate_tracks_live_instances() {
+        let mut s = sim();
+        assert_eq!(s.spend_rate_per_hour(), 0.0);
+        s.set_target(RegionId(0), 24);
+        run_ticks(&mut s, 0, 5);
+        let expected = 24.0 * s.region(RegionId(0)).spec().price_per_hour;
+        assert!((s.spend_rate_per_hour() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invariants_hold_through_chaos() {
+        let mut s = sim();
+        for (i, rid) in (0..s.num_regions()).enumerate() {
+            s.set_target(RegionId(rid as u32), 20 + 7 * i as u32 % 40);
+        }
+        let mut now = 0;
+        for step in 0..600u64 {
+            now = step * MINUTE;
+            if step == 200 {
+                s.zero_all_targets();
+            }
+            if step == 300 {
+                for rid in 0..s.num_regions() {
+                    s.set_target(RegionId(rid as u32), 30);
+                }
+            }
+            s.tick(now, MINUTE);
+        }
+        s.check_invariants(now).unwrap();
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut s = CloudSim::new(providers::all_regions(), Rng::new(7));
+            for rid in 0..s.num_regions() {
+                s.set_target(RegionId(rid as u32), 25);
+            }
+            let ev = run_ticks(&mut s, 0, 120);
+            (ev.len(), s.counts())
+        };
+        assert_eq!(run(), run());
+    }
+}

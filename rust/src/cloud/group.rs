@@ -1,0 +1,106 @@
+//! Group-provisioning semantics (Azure VMSS / GCP MIG / AWS Spot Fleet).
+//!
+//! All three mechanisms share the semantics the paper relies on: *"set
+//! the desired number of instances in a specific region, and they would
+//! provision as many as available at that point in time; no further
+//! operator intervention was needed."*  This module captures that
+//! contract as pure planning functions, applied each reconcile cycle by
+//! [`super::fleet::CloudSim`].
+
+/// What a reconcile cycle should do for one group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReconcilePlan {
+    /// New instances to launch now (bounded by market headroom).
+    pub launch: u32,
+    /// Instances to deprovision now (target shrink).
+    pub terminate: u32,
+}
+
+/// Compute the reconcile action for a group.
+///
+/// * `live` — instances currently booting or running,
+/// * `target` — desired size set by the operator/frontend,
+/// * `headroom` — spare market capacity available for new launches.
+///
+/// Maintain-target semantics: preempted instances are automatically
+/// replaced on the next cycle (all three cloud mechanisms do this), but
+/// only up to what the spot market can supply.
+pub fn plan_reconcile(live: u32, target: u32, headroom: u32) -> ReconcilePlan {
+    if live < target {
+        ReconcilePlan { launch: (target - live).min(headroom), terminate: 0 }
+    } else {
+        ReconcilePlan { launch: 0, terminate: live - target }
+    }
+}
+
+/// Pick deprovision victims: newest-first (cheapest sunk cost — matches
+/// scale-in policy `NewestVM` which is what you want for spot workers).
+///
+/// `launched_at` is indexed parallel to `ids`; returns the chosen ids.
+pub fn choose_scale_in_victims<I: Copy>(
+    ids: &[I],
+    launched_at: &[u64],
+    count: usize,
+) -> Vec<I> {
+    assert_eq!(ids.len(), launched_at.len());
+    let mut order: Vec<usize> = (0..ids.len()).collect();
+    // newest (largest launched_at) first; stable on ties for determinism
+    order.sort_by(|&a, &b| launched_at[b].cmp(&launched_at[a]).then(a.cmp(&b)));
+    order.into_iter().take(count.min(ids.len())).map(|i| ids[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_toward_target_within_headroom() {
+        assert_eq!(plan_reconcile(10, 50, 100),
+                   ReconcilePlan { launch: 40, terminate: 0 });
+        // market-limited fulfilment: provision "as many as available"
+        assert_eq!(plan_reconcile(10, 50, 15),
+                   ReconcilePlan { launch: 15, terminate: 0 });
+        assert_eq!(plan_reconcile(10, 50, 0),
+                   ReconcilePlan { launch: 0, terminate: 0 });
+    }
+
+    #[test]
+    fn shrinks_to_target() {
+        assert_eq!(plan_reconcile(50, 10, 100),
+                   ReconcilePlan { launch: 0, terminate: 40 });
+        assert_eq!(plan_reconcile(50, 0, 0),
+                   ReconcilePlan { launch: 0, terminate: 50 });
+    }
+
+    #[test]
+    fn at_target_is_a_noop() {
+        assert_eq!(plan_reconcile(25, 25, 100), ReconcilePlan::default());
+    }
+
+    #[test]
+    fn replaces_preempted_instances() {
+        // maintain-target: after losing 5 of 20, next cycle relaunches 5
+        assert_eq!(plan_reconcile(15, 20, 100).launch, 5);
+    }
+
+    #[test]
+    fn victims_are_newest_first() {
+        let ids = [1u32, 2, 3, 4];
+        let at = [100u64, 400, 200, 300];
+        assert_eq!(choose_scale_in_victims(&ids, &at, 2), vec![2, 4]);
+    }
+
+    #[test]
+    fn victims_capped_at_population() {
+        let ids = [7u32];
+        let at = [5u64];
+        assert_eq!(choose_scale_in_victims(&ids, &at, 10), vec![7]);
+    }
+
+    #[test]
+    fn victims_deterministic_on_ties() {
+        let ids = [1u32, 2, 3];
+        let at = [100u64, 100, 100];
+        assert_eq!(choose_scale_in_victims(&ids, &at, 2), vec![1, 2]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Spot-market capacity dynamics per region.
+//!
+//! Real spot depth is not public; the model is a mean-reverting
+//! (Ornstein-Uhlenbeck-style) *available spare capacity* process.  When a
+//! region's allocation exceeds the available capacity the provider
+//! reclaims the excess (capacity-pressure preemption); independently each
+//! instance carries a small churn hazard.  This reproduces the
+//! operationally relevant shape: partial fulfilment of group targets,
+//! preemption rates that grow with the allocated fraction, and
+//! provider-dependent stability (Azure deep + calm, AWS/GCP shallower +
+//! busier — §IV of the paper).
+
+use super::types::RegionSpec;
+use crate::util::rng::Rng;
+
+/// Mean-reversion rate per hour of the capacity process.
+const REVERSION_PER_HOUR: f64 = 0.25;
+
+/// One region's spot market state.
+#[derive(Debug, Clone)]
+pub struct SpotMarket {
+    pub spec: RegionSpec,
+    /// Currently available spare capacity (instances, fractional state).
+    available: f64,
+}
+
+impl SpotMarket {
+    pub fn new(spec: RegionSpec) -> Self {
+        let available = spec.base_capacity;
+        SpotMarket { spec, available }
+    }
+
+    /// Available capacity as a whole instance count.
+    pub fn available(&self) -> u32 {
+        self.available.max(0.0) as u32
+    }
+
+    /// Advance the capacity process by `dt_s` seconds.
+    pub fn tick(&mut self, dt_s: u64, rng: &mut Rng) {
+        let dt_h = dt_s as f64 / 3600.0;
+        let drift = REVERSION_PER_HOUR
+            * (self.spec.base_capacity - self.available)
+            * dt_h;
+        let noise = self.spec.capacity_sigma * dt_h.sqrt() * rng.normal();
+        self.available = (self.available + drift + noise)
+            .clamp(0.0, self.spec.base_capacity * 2.0);
+    }
+
+    /// How many instances can be newly provisioned given `allocated`
+    /// already running from this market.
+    pub fn headroom(&self, allocated: u32) -> u32 {
+        self.available().saturating_sub(allocated)
+    }
+
+    /// How many of `allocated` instances the provider reclaims right now
+    /// because capacity fell below the allocation.
+    pub fn reclaim_count(&self, allocated: u32) -> u32 {
+        allocated.saturating_sub(self.available())
+    }
+
+    /// Per-instance probability of churn preemption over `dt_s`.
+    pub fn churn_probability(&self, dt_s: u64) -> f64 {
+        // hazard h per hour => p = 1 - exp(-h dt)
+        let h = self.spec.churn_per_hour * dt_s as f64 / 3600.0;
+        1.0 - (-h).exp()
+    }
+
+    /// Force the available capacity (tests / scenario injection).
+    pub fn set_available(&mut self, v: f64) {
+        self.available = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::providers;
+    use crate::sim::HOUR;
+
+    fn market() -> SpotMarket {
+        SpotMarket::new(providers::azure_regions().remove(0))
+    }
+
+    #[test]
+    fn starts_at_base_capacity() {
+        let m = market();
+        assert_eq!(m.available(), m.spec.base_capacity as u32);
+    }
+
+    #[test]
+    fn mean_reverts_over_time() {
+        let mut m = market();
+        let mut rng = Rng::new(1);
+        m.set_available(0.0);
+        for _ in 0..200 {
+            m.tick(HOUR, &mut rng);
+        }
+        // after many hours the process must be back near base capacity
+        let frac = m.available.max(1.0) / m.spec.base_capacity;
+        assert!(frac > 0.5, "available={} base={}", m.available, m.spec.base_capacity);
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let mut m = market();
+        let mut rng = Rng::new(2);
+        for _ in 0..5000 {
+            m.tick(60, &mut rng);
+            assert!(m.available >= 0.0);
+            assert!(m.available <= m.spec.base_capacity * 2.0);
+        }
+    }
+
+    #[test]
+    fn long_run_mean_near_base() {
+        let mut m = market();
+        let mut rng = Rng::new(3);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            m.tick(60, &mut rng);
+            sum += m.available;
+        }
+        let mean = sum / n as f64;
+        let rel = (mean - m.spec.base_capacity).abs() / m.spec.base_capacity;
+        assert!(rel < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn headroom_and_reclaim() {
+        let mut m = market();
+        m.set_available(100.0);
+        assert_eq!(m.headroom(40), 60);
+        assert_eq!(m.headroom(100), 0);
+        assert_eq!(m.headroom(150), 0);
+        assert_eq!(m.reclaim_count(150), 50);
+        assert_eq!(m.reclaim_count(80), 0);
+    }
+
+    #[test]
+    fn churn_probability_scales_with_dt() {
+        let m = market();
+        let p1 = m.churn_probability(60);
+        let p2 = m.churn_probability(3600);
+        assert!(p1 > 0.0 && p1 < p2 && p2 < 1.0);
+        // for small hazard, p(1h) ~ churn_per_hour
+        assert!((p2 - m.spec.churn_per_hour).abs() / m.spec.churn_per_hour < 0.01);
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let mut a = market();
+        let mut b = market();
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        for _ in 0..100 {
+            a.tick(60, &mut ra);
+            b.tick(60, &mut rb);
+        }
+        assert_eq!(a.available, b.available);
+    }
+}

@@ -1,0 +1,22 @@
+//! Cloud-provider substrate: spot markets, group provisioning, billing.
+//!
+//! Simulates the three commercial clouds the paper provisioned from —
+//! regions with synthetic spot-T4 capacity dynamics, the group
+//! provisioning mechanisms (Azure VMSS, GCP Instance Groups, AWS Spot
+//! Fleets) with maintain-target semantics, instance lifecycle with boot
+//! latency, spot preemption (capacity reclaim + churn), and per-provider
+//! billing meters.
+
+pub mod billing;
+pub mod fleet;
+pub mod group;
+pub mod market;
+pub mod providers;
+pub mod types;
+
+pub use billing::BillingMeter;
+pub use fleet::{CloudSim, FleetCounts, RegionState};
+pub use types::{
+    CloudEvent, Instance, InstanceId, InstanceState, PreemptReason, Provider,
+    RegionId, RegionSpec,
+};

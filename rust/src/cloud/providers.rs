@@ -1,0 +1,166 @@
+//! Region catalogs for the three providers.
+//!
+//! Prices are the paper-era (late 2020 / 2021) spot prices for the
+//! smallest single-T4 instance type, per T4-day:
+//!
+//! * Azure (NV/NC T4 v3 spot):  **$2.9 / T4-day** — the paper calls Azure
+//!   out as the cheapest, with "plenty of spare capacity with very low
+//!   preemption rates", which is why the exercise heavily favored Azure.
+//! * GCP (n1-standard-4 + T4 preemptible): ≈ $3.5 / T4-day.
+//! * AWS (g4dn.xlarge spot): ≈ $3.8 / T4-day.
+//!
+//! Capacity numbers are *synthetic* (real spot depth is not public); they
+//! are calibrated so the Azure fleet can absorb most of the 2k-GPU peak —
+//! the behaviour the paper reports — while AWS/GCP regions are shallower
+//! and churn more.  See DESIGN.md §6 Substitution log.
+
+use super::types::{Provider, RegionSpec};
+use crate::net::NatProfile;
+
+/// Default boot window: VM allocation + image boot + OSG contextualization.
+const BOOT_FAST: (u64, u64) = (90, 240);
+const BOOT_SLOW: (u64, u64) = (120, 360);
+
+/// Azure regions (VMSS provisioning, default NAT with 4-min idle timeout).
+pub fn azure_regions() -> Vec<RegionSpec> {
+    let nat = NatProfile::azure_default();
+    let mk = |name, cap, sigma, churn| RegionSpec {
+        provider: Provider::Azure,
+        name,
+        base_capacity: cap,
+        capacity_sigma: sigma,
+        price_per_hour: 2.9 / 24.0,
+        churn_per_hour: churn,
+        boot_time_s: BOOT_FAST,
+        nat,
+    };
+    vec![
+        // deep US regions: most of the paper's capacity lived here
+        mk("azure/eastus", 420.0, 25.0, 0.0015),
+        mk("azure/eastus2", 350.0, 22.0, 0.0015),
+        mk("azure/southcentralus", 300.0, 20.0, 0.002),
+        mk("azure/westus2", 260.0, 18.0, 0.002),
+        mk("azure/westeurope", 240.0, 18.0, 0.0025),
+        mk("azure/northeurope", 200.0, 15.0, 0.0025),
+        mk("azure/uksouth", 120.0, 12.0, 0.003),
+        mk("azure/australiaeast", 100.0, 10.0, 0.003),
+    ]
+}
+
+/// GCP regions (managed instance groups, permissive NAT).
+pub fn gcp_regions() -> Vec<RegionSpec> {
+    let nat = NatProfile::permissive("gcp-cloud-nat");
+    let mk = |name, cap, sigma, churn| RegionSpec {
+        provider: Provider::Gcp,
+        name,
+        base_capacity: cap,
+        capacity_sigma: sigma,
+        price_per_hour: 3.5 / 24.0,
+        churn_per_hour: churn,
+        boot_time_s: BOOT_FAST,
+        nat,
+    };
+    vec![
+        mk("gcp/us-central1", 180.0, 20.0, 0.006),
+        mk("gcp/us-east1", 140.0, 16.0, 0.006),
+        mk("gcp/us-west1", 110.0, 14.0, 0.007),
+        mk("gcp/europe-west1", 100.0, 12.0, 0.007),
+        mk("gcp/europe-west4", 90.0, 12.0, 0.008),
+        mk("gcp/asia-east1", 70.0, 10.0, 0.009),
+    ]
+}
+
+/// AWS regions (spot fleets, permissive NAT).
+pub fn aws_regions() -> Vec<RegionSpec> {
+    let nat = NatProfile::permissive("aws-nat-gw");
+    let mk = |name, cap, sigma, churn| RegionSpec {
+        provider: Provider::Aws,
+        name,
+        base_capacity: cap,
+        capacity_sigma: sigma,
+        price_per_hour: 3.8 / 24.0,
+        churn_per_hour: churn,
+        boot_time_s: BOOT_SLOW,
+        nat,
+    };
+    vec![
+        mk("aws/us-east-1", 200.0, 24.0, 0.008),
+        mk("aws/us-east-2", 140.0, 18.0, 0.008),
+        mk("aws/us-west-2", 130.0, 16.0, 0.009),
+        mk("aws/eu-west-1", 100.0, 14.0, 0.010),
+        mk("aws/eu-central-1", 80.0, 12.0, 0.010),
+        mk("aws/ap-southeast-2", 60.0, 10.0, 0.012),
+    ]
+}
+
+/// The full multi-cloud catalog used by the campaign.
+pub fn all_regions() -> Vec<RegionSpec> {
+    let mut v = azure_regions();
+    v.extend(gcp_regions());
+    v.extend(aws_regions());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn azure_is_cheapest_at_2_90_per_day() {
+        // T1 headline input: Azure spot T4 at $2.9/day, cheapest of the 3
+        let az = azure_regions();
+        for r in &az {
+            assert!((r.price_per_day() - 2.9).abs() < 1e-9);
+        }
+        let min_other = gcp_regions()
+            .iter()
+            .chain(aws_regions().iter())
+            .map(|r| r.price_per_day())
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_other > 2.9);
+    }
+
+    #[test]
+    fn azure_has_most_capacity_and_least_churn() {
+        let cap = |rs: &[RegionSpec]| -> f64 {
+            rs.iter().map(|r| r.base_capacity).sum()
+        };
+        let churn = |rs: &[RegionSpec]| -> f64 {
+            rs.iter().map(|r| r.churn_per_hour).sum::<f64>() / rs.len() as f64
+        };
+        let (az, gc, aw) = (azure_regions(), gcp_regions(), aws_regions());
+        assert!(cap(&az) > cap(&gc));
+        assert!(cap(&az) > cap(&aw));
+        assert!(churn(&az) < churn(&gc));
+        assert!(churn(&az) < churn(&aw));
+    }
+
+    #[test]
+    fn total_capacity_supports_2k_peak() {
+        // the paper sustained 2k GPUs; the mean spare capacity across all
+        // providers must exceed that with headroom for fluctuation
+        let total: f64 = all_regions().iter().map(|r| r.base_capacity).sum();
+        assert!(total > 2400.0, "total={total}");
+    }
+
+    #[test]
+    fn only_azure_has_aggressive_nat() {
+        for r in all_regions() {
+            match r.provider {
+                Provider::Azure => {
+                    assert_eq!(r.nat.idle_timeout_s, Some(240))
+                }
+                _ => assert_eq!(r.nat.idle_timeout_s, None),
+            }
+        }
+    }
+
+    #[test]
+    fn region_names_unique() {
+        let regions = all_regions();
+        let mut names: Vec<_> = regions.iter().map(|r| r.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), regions.len());
+    }
+}

@@ -1,0 +1,221 @@
+//! Core cloud entity types and identifiers.
+
+use crate::net::NatProfile;
+use crate::sim::SimTime;
+
+/// The three commercial cloud providers used in the paper's exercise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Provider {
+    Aws,
+    Gcp,
+    Azure,
+}
+
+impl Provider {
+    pub const ALL: [Provider; 3] = [Provider::Aws, Provider::Gcp, Provider::Azure];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Provider::Aws => "aws",
+            Provider::Gcp => "gcp",
+            Provider::Azure => "azure",
+        }
+    }
+
+    /// The provider's group-provisioning mechanism (for logs/reports —
+    /// the semantics the paper relies on are identical: "set the desired
+    /// number of instances and get as many as available").
+    pub fn group_mechanism(self) -> &'static str {
+        match self {
+            Provider::Aws => "spot-fleet",
+            Provider::Gcp => "instance-group",
+            Provider::Azure => "vmss",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Provider> {
+        match s.to_ascii_lowercase().as_str() {
+            "aws" => Some(Provider::Aws),
+            "gcp" => Some(Provider::Gcp),
+            "azure" => Some(Provider::Azure),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Provider {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Index into the region table of a [`super::fleet::CloudSim`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub u32);
+
+/// Unique instance identifier (monotonic across the whole campaign).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u64);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm-{}", self.0)
+    }
+}
+
+/// Static description of one cloud region's spot T4 market.
+#[derive(Debug, Clone)]
+pub struct RegionSpec {
+    pub provider: Provider,
+    pub name: &'static str,
+    /// Mean spare spot-T4 capacity (instances) the market reverts to.
+    pub base_capacity: f64,
+    /// Noise amplitude of the capacity process (instances per sqrt-hour).
+    pub capacity_sigma: f64,
+    /// Spot price per T4 instance-hour (USD).
+    pub price_per_hour: f64,
+    /// Baseline preemption hazard per instance-hour (churn unrelated to
+    /// capacity pressure).
+    pub churn_per_hour: f64,
+    /// VM boot + OSG-client contextualization time range (uniform).
+    pub boot_time_s: (u64, u64),
+    /// NAT behaviour on the region's outbound path.
+    pub nat: NatProfile,
+}
+
+impl RegionSpec {
+    pub fn price_per_day(&self) -> f64 {
+        self.price_per_hour * 24.0
+    }
+}
+
+/// Instance lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Provisioned, VM booting / contextualizing (billable).
+    Booting,
+    /// Worker software up; a startd is (or can be) registered (billable).
+    Running,
+    /// Reclaimed by the provider (spot preemption).
+    Preempted,
+    /// Deprovisioned by us (target shrink / campaign end).
+    Terminated,
+}
+
+impl InstanceState {
+    pub fn billable(self) -> bool {
+        matches!(self, InstanceState::Booting | InstanceState::Running)
+    }
+}
+
+/// Why an instance was preempted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptReason {
+    /// Spot capacity shrank below our allocation; provider reclaimed.
+    CapacityReclaim,
+    /// Background churn (provider-side maintenance, random reclaim).
+    Churn,
+}
+
+/// A provisioned cloud VM with one T4 GPU.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub region: RegionId,
+    pub state: InstanceState,
+    pub launched_at: SimTime,
+    /// When the VM finishes booting and the worker can register.
+    pub running_at: SimTime,
+    /// Set when the instance leaves a billable state.
+    pub stopped_at: Option<SimTime>,
+    pub preempt_reason: Option<PreemptReason>,
+}
+
+impl Instance {
+    /// Billable seconds accrued (up to `now` for live instances).
+    pub fn billable_secs(&self, now: SimTime) -> u64 {
+        let end = self.stopped_at.unwrap_or(now);
+        end.saturating_sub(self.launched_at)
+    }
+
+    /// Seconds spent in the Running state (GPU wall time capacity).
+    pub fn running_secs(&self, now: SimTime) -> u64 {
+        let end = self.stopped_at.unwrap_or(now);
+        end.saturating_sub(self.running_at.min(end))
+    }
+}
+
+/// Events emitted by the cloud layer, consumed by the glidein/WMS layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloudEvent {
+    /// VM provisioned and booting.
+    Launched(InstanceId),
+    /// VM finished booting; worker agent may register with the pool.
+    BecameRunning(InstanceId),
+    /// Spot preemption (graceful-ish: the worker vanishes).
+    Preempted(InstanceId, PreemptReason),
+    /// Deprovisioned on request (target shrink).
+    Terminated(InstanceId),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provider_names_roundtrip() {
+        for p in Provider::ALL {
+            assert_eq!(Provider::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Provider::from_name("AZURE"), Some(Provider::Azure));
+        assert_eq!(Provider::from_name("oracle"), None);
+    }
+
+    #[test]
+    fn group_mechanisms_match_paper() {
+        assert_eq!(Provider::Azure.group_mechanism(), "vmss");
+        assert_eq!(Provider::Gcp.group_mechanism(), "instance-group");
+        assert_eq!(Provider::Aws.group_mechanism(), "spot-fleet");
+    }
+
+    #[test]
+    fn billable_states() {
+        assert!(InstanceState::Booting.billable());
+        assert!(InstanceState::Running.billable());
+        assert!(!InstanceState::Preempted.billable());
+        assert!(!InstanceState::Terminated.billable());
+    }
+
+    #[test]
+    fn instance_accounting() {
+        let mut inst = Instance {
+            id: InstanceId(1),
+            region: RegionId(0),
+            state: InstanceState::Running,
+            launched_at: 100,
+            running_at: 250,
+            stopped_at: None,
+            preempt_reason: None,
+        };
+        assert_eq!(inst.billable_secs(1100), 1000);
+        assert_eq!(inst.running_secs(1250), 1000);
+        inst.stopped_at = Some(2100);
+        assert_eq!(inst.billable_secs(99_999), 2000);
+        assert_eq!(inst.running_secs(99_999), 1850);
+    }
+
+    #[test]
+    fn running_secs_zero_if_never_ran() {
+        let inst = Instance {
+            id: InstanceId(2),
+            region: RegionId(0),
+            state: InstanceState::Preempted,
+            launched_at: 100,
+            running_at: 400, // boot would have finished at 400
+            stopped_at: Some(300), // preempted while booting
+            preempt_reason: Some(PreemptReason::Churn),
+        };
+        assert_eq!(inst.running_secs(1000), 0);
+        assert_eq!(inst.billable_secs(1000), 200);
+    }
+}

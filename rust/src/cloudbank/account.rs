@@ -1,0 +1,135 @@
+//! Cloud account creation and linking.
+//!
+//! §III of the paper: CloudBank established a brand-new account at one
+//! provider and *linked* the team's two pre-existing accounts at the
+//! others into its accounting system — the institutional-procurement pain
+//! point CloudBank exists to remove.
+
+use crate::cloud::Provider;
+use crate::sim::SimTime;
+
+/// How an account came under CloudBank management.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Enrollment {
+    /// CloudBank created the account (new provider relationship).
+    CreatedByCloudbank,
+    /// Pre-existing institutional account linked into CloudBank billing.
+    LinkedExisting,
+}
+
+/// A provider account managed by CloudBank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Account {
+    pub provider: Provider,
+    pub enrollment: Enrollment,
+    pub enrolled_at: SimTime,
+    pub billing_connected: bool,
+}
+
+/// The set of accounts backing a CloudBank allocation.
+#[derive(Debug, Default)]
+pub struct AccountSet {
+    accounts: Vec<Account>,
+}
+
+impl AccountSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The paper's setup: AWS + GCP already existed, Azure was created
+    /// through CloudBank.
+    pub fn paper_setup(now: SimTime) -> Self {
+        let mut s = Self::new();
+        s.link_existing(Provider::Aws, now).unwrap();
+        s.link_existing(Provider::Gcp, now).unwrap();
+        s.create_account(Provider::Azure, now).unwrap();
+        s
+    }
+
+    pub fn create_account(
+        &mut self,
+        provider: Provider,
+        now: SimTime,
+    ) -> Result<(), String> {
+        self.enroll(provider, Enrollment::CreatedByCloudbank, now)
+    }
+
+    pub fn link_existing(
+        &mut self,
+        provider: Provider,
+        now: SimTime,
+    ) -> Result<(), String> {
+        self.enroll(provider, Enrollment::LinkedExisting, now)
+    }
+
+    fn enroll(
+        &mut self,
+        provider: Provider,
+        enrollment: Enrollment,
+        now: SimTime,
+    ) -> Result<(), String> {
+        if self.account(provider).is_some() {
+            return Err(format!("{provider} account already enrolled"));
+        }
+        self.accounts.push(Account {
+            provider,
+            enrollment,
+            enrolled_at: now,
+            billing_connected: true,
+        });
+        Ok(())
+    }
+
+    pub fn account(&self, provider: Provider) -> Option<&Account> {
+        self.accounts.iter().find(|a| a.provider == provider)
+    }
+
+    /// Billing feeds may only be consumed for enrolled, connected accounts.
+    pub fn can_meter(&self, provider: Provider) -> bool {
+        self.account(provider).map(|a| a.billing_connected).unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.accounts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accounts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_setup_has_all_three() {
+        let s = AccountSet::paper_setup(0);
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s.account(Provider::Azure).unwrap().enrollment,
+            Enrollment::CreatedByCloudbank
+        );
+        assert_eq!(
+            s.account(Provider::Aws).unwrap().enrollment,
+            Enrollment::LinkedExisting
+        );
+        for p in Provider::ALL {
+            assert!(s.can_meter(p));
+        }
+    }
+
+    #[test]
+    fn double_enrollment_rejected() {
+        let mut s = AccountSet::new();
+        s.create_account(Provider::Azure, 0).unwrap();
+        assert!(s.link_existing(Provider::Azure, 1).is_err());
+    }
+
+    #[test]
+    fn unenrolled_provider_cannot_meter() {
+        let s = AccountSet::new();
+        assert!(!s.can_meter(Provider::Gcp));
+    }
+}

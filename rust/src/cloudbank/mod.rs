@@ -1,0 +1,13 @@
+//! CloudBank substrate: managed multi-cloud budget services.
+//!
+//! Models the two CloudBank services the paper used (§III): the
+//! single-window budget page aggregating spend across all three
+//! providers, and threshold-triggered alert emails carrying the recent
+//! spending rate — plus the account creation/linking workflow.
+
+pub mod account;
+pub mod ledger;
+pub mod report;
+
+pub use account::{Account, AccountSet, Enrollment};
+pub use ledger::{Alert, BudgetSnapshot, Ledger};

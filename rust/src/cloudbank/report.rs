@@ -1,0 +1,81 @@
+//! Human-readable CloudBank reports (the "web page" rendering).
+
+use super::ledger::{BudgetSnapshot, Ledger};
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+/// Render the single-window budget page as text.
+pub fn render_snapshot(s: &BudgetSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str("== CloudBank allocation status ==\n");
+    out.push_str(&format!("budget:     ${:>12.2}\n", s.budget_usd));
+    out.push_str(&format!(
+        "spent:      ${:>12.2}  ({:.1}%)\n",
+        s.spent_usd,
+        100.0 * s.spent_usd / s.budget_usd
+    ));
+    out.push_str(&format!(
+        "remaining:  ${:>12.2}  ({:.1}%)\n",
+        s.remaining_usd(),
+        100.0 * s.remaining_fraction()
+    ));
+    out.push_str("per provider:\n");
+    out.push_str(&format!("  azure:    ${:>12.2}\n", s.azure_usd));
+    out.push_str(&format!("  gcp:      ${:>12.2}\n", s.gcp_usd));
+    out.push_str(&format!("  aws:      ${:>12.2}\n", s.aws_usd));
+    out
+}
+
+/// Machine-readable snapshot (for the results directory).
+pub fn snapshot_json(ledger: &Ledger, now: SimTime) -> Json {
+    let s = ledger.snapshot(now);
+    let mut o = Json::obj();
+    o.set("at_s", Json::from(s.at));
+    o.set("budget_usd", Json::from(s.budget_usd));
+    o.set("spent_usd", Json::from(s.spent_usd));
+    o.set("remaining_usd", Json::from(s.remaining_usd()));
+    o.set("remaining_fraction", Json::from(s.remaining_fraction()));
+    o.set("azure_usd", Json::from(s.azure_usd));
+    o.set("gcp_usd", Json::from(s.gcp_usd));
+    o.set("aws_usd", Json::from(s.aws_usd));
+    o.set("spend_rate_per_day", Json::from(ledger.spend_rate_per_day()));
+    let alerts: Vec<Json> = ledger
+        .alerts()
+        .iter()
+        .map(|a| {
+            let mut j = Json::obj();
+            j.set("at_s", Json::from(a.at));
+            j.set("threshold", Json::from(a.threshold));
+            j.set("remaining_usd", Json::from(a.remaining_usd));
+            j.set("spend_rate_per_day", Json::from(a.spend_rate_per_day));
+            j
+        })
+        .collect();
+    o.set("alerts", Json::Arr(alerts));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudbank::account::AccountSet;
+
+    #[test]
+    fn snapshot_renders_all_fields() {
+        let ledger = Ledger::new(AccountSet::paper_setup(0), 58_000.0, &[]);
+        let text = render_snapshot(&ledger.snapshot(0));
+        assert!(text.contains("budget"));
+        assert!(text.contains("58000.00"));
+        assert!(text.contains("azure"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let ledger = Ledger::paper_allocation(0);
+        let j = snapshot_json(&ledger, 42);
+        let s = j.to_string_pretty();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(back.get("budget_usd").unwrap().as_f64(), Some(58_000.0));
+        assert_eq!(back.get("at_s").unwrap().as_u64(), Some(42));
+    }
+}

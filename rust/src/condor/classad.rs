@@ -1,0 +1,736 @@
+//! Mini ClassAd language: attribute lists + matchmaking expressions.
+//!
+//! HTCondor's matchmaking is bilateral: a job ad carries a `Requirements`
+//! expression evaluated against a machine ad, and the machine's `START`
+//! expression is evaluated against the job ad.  This module implements
+//! the subset that federated GPU pools actually use: typed attributes
+//! (int/float/string/bool/undefined), `MY.`/`TARGET.` scoped references,
+//! arithmetic, comparisons (case-insensitive string equality, like
+//! HTCondor's `==`), and three-valued boolean logic where `Undefined`
+//! propagates (an ad missing an attribute must not crash a negotiation
+//! cycle — it just doesn't match).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A ClassAd attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    Undefined,
+}
+
+impl Value {
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    }
+
+    /// Three-valued truthiness: Some(bool) or None for Undefined.
+    fn as_tribool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            Value::Int(i) => Some(*i != 0),
+            Value::Float(f) => Some(*f != 0.0),
+            Value::Undefined => None,
+            Value::Str(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Undefined => write!(f, "undefined"),
+        }
+    }
+}
+
+/// An attribute list (one ad). Keys are case-insensitive like HTCondor's.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ad {
+    attrs: BTreeMap<String, Value>,
+}
+
+impl Ad {
+    pub fn new() -> Self {
+        Ad::default()
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) -> &mut Self {
+        self.attrs.insert(key.to_ascii_lowercase(), value);
+        self
+    }
+
+    pub fn set_int(&mut self, key: &str, v: i64) -> &mut Self {
+        self.set(key, Value::Int(v))
+    }
+
+    pub fn set_float(&mut self, key: &str, v: f64) -> &mut Self {
+        self.set(key, Value::Float(v))
+    }
+
+    pub fn set_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.set(key, Value::Str(v.to_string()))
+    }
+
+    pub fn set_bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.set(key, Value::Bool(v))
+    }
+
+    pub fn get(&self, key: &str) -> Value {
+        self.attrs
+            .get(&key.to_ascii_lowercase())
+            .cloned()
+            .unwrap_or(Value::Undefined)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.attrs.contains_key(&key.to_ascii_lowercase())
+    }
+
+    pub fn len(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attrs.is_empty()
+    }
+
+    /// Canonical string form (stable order) — used as autocluster signature.
+    pub fn signature(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.attrs {
+            s.push_str(k);
+            s.push('=');
+            s.push_str(&v.to_string());
+            s.push(';');
+        }
+        s
+    }
+}
+
+/// Expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Lit(Value),
+    /// Attribute reference with optional scope (None = MY-then-TARGET).
+    Attr(Option<Scope>, String),
+    Not(Box<Expr>),
+    Neg(Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    My,
+    Target,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    And,
+    Or,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl Expr {
+    /// Evaluate in a matchmaking context.
+    pub fn eval(&self, my: &Ad, target: Option<&Ad>) -> Value {
+        match self {
+            Expr::Lit(v) => v.clone(),
+            Expr::Attr(scope, name) => match scope {
+                Some(Scope::My) => my.get(name),
+                Some(Scope::Target) => {
+                    target.map(|t| t.get(name)).unwrap_or(Value::Undefined)
+                }
+                None => {
+                    let v = my.get(name);
+                    if v == Value::Undefined {
+                        target.map(|t| t.get(name)).unwrap_or(Value::Undefined)
+                    } else {
+                        v
+                    }
+                }
+            },
+            Expr::Not(e) => match e.eval(my, target).as_tribool() {
+                Some(b) => Value::Bool(!b),
+                None => Value::Undefined,
+            },
+            Expr::Neg(e) => match e.eval(my, target) {
+                Value::Int(i) => Value::Int(-i),
+                Value::Float(f) => Value::Float(-f),
+                _ => Value::Undefined,
+            },
+            Expr::Bin(op, a, b) => {
+                let av = a.eval(my, target);
+                match op {
+                    BinOp::And => match av.as_tribool() {
+                        Some(false) => Value::Bool(false),
+                        Some(true) => match b.eval(my, target).as_tribool() {
+                            Some(v) => Value::Bool(v),
+                            None => Value::Undefined,
+                        },
+                        None => match b.eval(my, target).as_tribool() {
+                            Some(false) => Value::Bool(false),
+                            _ => Value::Undefined,
+                        },
+                    },
+                    BinOp::Or => match av.as_tribool() {
+                        Some(true) => Value::Bool(true),
+                        Some(false) => match b.eval(my, target).as_tribool() {
+                            Some(v) => Value::Bool(v),
+                            None => Value::Undefined,
+                        },
+                        None => match b.eval(my, target).as_tribool() {
+                            Some(true) => Value::Bool(true),
+                            _ => Value::Undefined,
+                        },
+                    },
+                    _ => {
+                        let bv = b.eval(my, target);
+                        eval_binop(*op, &av, &bv)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate to bool with Undefined → false (top-level match semantics).
+    pub fn matches(&self, my: &Ad, target: Option<&Ad>) -> bool {
+        self.eval(my, target).as_tribool().unwrap_or(false)
+    }
+}
+
+fn eval_binop(op: BinOp, a: &Value, b: &Value) -> Value {
+    use BinOp::*;
+    if *a == Value::Undefined || *b == Value::Undefined {
+        return Value::Undefined;
+    }
+    // string equality is case-insensitive, like HTCondor's `==`
+    if let (Value::Str(x), Value::Str(y)) = (a, b) {
+        let c = x.to_ascii_lowercase().cmp(&y.to_ascii_lowercase());
+        return match op {
+            Eq => Value::Bool(c.is_eq()),
+            Ne => Value::Bool(!c.is_eq()),
+            Lt => Value::Bool(c.is_lt()),
+            Le => Value::Bool(c.is_le()),
+            Gt => Value::Bool(c.is_gt()),
+            Ge => Value::Bool(c.is_ge()),
+            _ => Value::Undefined,
+        };
+    }
+    let (x, y) = match (a.as_num(), b.as_num()) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return Value::Undefined,
+    };
+    let both_int = matches!((a, b), (Value::Int(_), Value::Int(_)));
+    match op {
+        Eq => Value::Bool(x == y),
+        Ne => Value::Bool(x != y),
+        Lt => Value::Bool(x < y),
+        Le => Value::Bool(x <= y),
+        Gt => Value::Bool(x > y),
+        Ge => Value::Bool(x >= y),
+        Add | Sub | Mul | Div => {
+            let r = match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                Div => {
+                    if y == 0.0 {
+                        return Value::Undefined;
+                    }
+                    x / y
+                }
+                _ => unreachable!(),
+            };
+            if both_int && r.fract() == 0.0 && op != Div {
+                Value::Int(r as i64)
+            } else {
+                Value::Float(r)
+            }
+        }
+        And | Or => unreachable!("handled in eval"),
+    }
+}
+
+// --- parser ----------------------------------------------------------------
+
+/// Parse a ClassAd expression.
+pub fn parse(src: &str) -> Result<Expr, String> {
+    let tokens = lex(src)?;
+    let mut p = P { t: &tokens, i: 0 };
+    let e = p.or_expr()?;
+    if p.i != tokens.len() {
+        return Err(format!("trailing tokens at {:?}", &tokens[p.i..]));
+    }
+    Ok(e)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64, bool), // value, is_int
+    Str(String),
+    Ident(String),
+    Op(&'static str),
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>, String> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '"' => {
+                let mut s = String::new();
+                i += 1;
+                while i < b.len() && b[i] != '"' {
+                    s.push(b[i]);
+                    i += 1;
+                }
+                if i == b.len() {
+                    return Err("unterminated string".into());
+                }
+                i += 1;
+                out.push(Tok::Str(s));
+            }
+            '0'..='9' => {
+                let start = i;
+                let mut is_int = true;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.'
+                    || b[i] == 'e' || b[i] == 'E'
+                    || ((b[i] == '+' || b[i] == '-')
+                        && matches!(b[i - 1], 'e' | 'E')))
+                {
+                    if b[i] == '.' || b[i] == 'e' || b[i] == 'E' {
+                        is_int = false;
+                    }
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let v: f64 =
+                    text.parse().map_err(|_| format!("bad number {text}"))?;
+                out.push(Tok::Num(v, is_int));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == '_')
+                {
+                    i += 1;
+                }
+                out.push(Tok::Ident(b[start..i].iter().collect()));
+            }
+            '&' if b.get(i + 1) == Some(&'&') => {
+                out.push(Tok::Op("&&"));
+                i += 2;
+            }
+            '|' if b.get(i + 1) == Some(&'|') => {
+                out.push(Tok::Op("||"));
+                i += 2;
+            }
+            '=' if b.get(i + 1) == Some(&'=') => {
+                out.push(Tok::Op("=="));
+                i += 2;
+            }
+            '!' if b.get(i + 1) == Some(&'=') => {
+                out.push(Tok::Op("!="));
+                i += 2;
+            }
+            '<' if b.get(i + 1) == Some(&'=') => {
+                out.push(Tok::Op("<="));
+                i += 2;
+            }
+            '>' if b.get(i + 1) == Some(&'=') => {
+                out.push(Tok::Op(">="));
+                i += 2;
+            }
+            '<' => {
+                out.push(Tok::Op("<"));
+                i += 1;
+            }
+            '>' => {
+                out.push(Tok::Op(">"));
+                i += 1;
+            }
+            '!' => {
+                out.push(Tok::Op("!"));
+                i += 1;
+            }
+            '+' => {
+                out.push(Tok::Op("+"));
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Op("-"));
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Op("*"));
+                i += 1;
+            }
+            '/' => {
+                out.push(Tok::Op("/"));
+                i += 1;
+            }
+            '(' => {
+                out.push(Tok::Op("("));
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::Op(")"));
+                i += 1;
+            }
+            '.' => {
+                out.push(Tok::Op("."));
+                i += 1;
+            }
+            c => return Err(format!("unexpected character '{c}'")),
+        }
+    }
+    Ok(out)
+}
+
+struct P<'a> {
+    t: &'a [Tok],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.t.get(self.i)
+    }
+
+    fn eat_op(&mut self, op: &str) -> bool {
+        if self.peek() == Some(&Tok::Op(match op {
+            "&&" => "&&",
+            "||" => "||",
+            "==" => "==",
+            "!=" => "!=",
+            "<=" => "<=",
+            ">=" => ">=",
+            "<" => "<",
+            ">" => ">",
+            "!" => "!",
+            "+" => "+",
+            "-" => "-",
+            "*" => "*",
+            "/" => "/",
+            "(" => "(",
+            ")" => ")",
+            "." => ".",
+            _ => return false,
+        })) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_op("||") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat_op("&&") {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, String> {
+        let lhs = self.add_expr()?;
+        for (tok, op) in [
+            ("==", BinOp::Eq),
+            ("!=", BinOp::Ne),
+            ("<=", BinOp::Le),
+            (">=", BinOp::Ge),
+            ("<", BinOp::Lt),
+            (">", BinOp::Gt),
+        ] {
+            if self.eat_op(tok) {
+                let rhs = self.add_expr()?;
+                return Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)));
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            if self.eat_op("+") {
+                let rhs = self.mul_expr()?;
+                lhs = Expr::Bin(BinOp::Add, Box::new(lhs), Box::new(rhs));
+            } else if self.eat_op("-") {
+                let rhs = self.mul_expr()?;
+                lhs = Expr::Bin(BinOp::Sub, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            if self.eat_op("*") {
+                let rhs = self.unary_expr()?;
+                lhs = Expr::Bin(BinOp::Mul, Box::new(lhs), Box::new(rhs));
+            } else if self.eat_op("/") {
+                let rhs = self.unary_expr()?;
+                lhs = Expr::Bin(BinOp::Div, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, String> {
+        if self.eat_op("!") {
+            return Ok(Expr::Not(Box::new(self.unary_expr()?)));
+        }
+        if self.eat_op("-") {
+            return Ok(Expr::Neg(Box::new(self.unary_expr()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr, String> {
+        match self.peek().cloned() {
+            Some(Tok::Num(v, is_int)) => {
+                self.i += 1;
+                Ok(Expr::Lit(if is_int {
+                    Value::Int(v as i64)
+                } else {
+                    Value::Float(v)
+                }))
+            }
+            Some(Tok::Str(s)) => {
+                self.i += 1;
+                Ok(Expr::Lit(Value::Str(s)))
+            }
+            Some(Tok::Ident(name)) => {
+                self.i += 1;
+                let lower = name.to_ascii_lowercase();
+                match lower.as_str() {
+                    "true" => return Ok(Expr::Lit(Value::Bool(true))),
+                    "false" => return Ok(Expr::Lit(Value::Bool(false))),
+                    "undefined" => return Ok(Expr::Lit(Value::Undefined)),
+                    _ => {}
+                }
+                // scope prefix?
+                if (lower == "my" || lower == "target") && self.eat_op(".") {
+                    match self.peek().cloned() {
+                        Some(Tok::Ident(attr)) => {
+                            self.i += 1;
+                            let scope = if lower == "my" {
+                                Scope::My
+                            } else {
+                                Scope::Target
+                            };
+                            Ok(Expr::Attr(Some(scope), attr))
+                        }
+                        _ => Err("expected attribute after scope".into()),
+                    }
+                } else {
+                    Ok(Expr::Attr(None, name))
+                }
+            }
+            Some(Tok::Op("(")) => {
+                self.i += 1;
+                let e = self.or_expr()?;
+                if !self.eat_op(")") {
+                    return Err("expected ')'".into());
+                }
+                Ok(e)
+            }
+            other => Err(format!("unexpected token {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine_ad() -> Ad {
+        let mut ad = Ad::new();
+        ad.set_str("machine", "vm-17.eastus.azure")
+            .set_bool("hasgpu", true)
+            .set_str("gpudevicename", "Tesla T4")
+            .set_float("cudacapability", 7.5)
+            .set_int("memory", 16384)
+            .set_str("pool", "cloud")
+            .set_str("provider", "azure");
+        ad
+    }
+
+    fn job_ad() -> Ad {
+        let mut ad = Ad::new();
+        ad.set_str("owner", "icecube")
+            .set_int("requestgpus", 1)
+            .set_int("requestmemory", 8192);
+        ad
+    }
+
+    #[test]
+    fn literal_eval() {
+        let e = parse("2 + 3 * 4").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Int(14));
+    }
+
+    #[test]
+    fn precedence_and_parens() {
+        let e = parse("(2 + 3) * 4").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Int(20));
+        let e = parse("1 + 2 == 3 && 2 < 3").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Bool(true));
+    }
+
+    #[test]
+    fn job_requirements_match_t4_machine() {
+        let req = parse(
+            "TARGET.HasGPU && TARGET.CUDACapability >= 6.0 \
+             && TARGET.Memory >= MY.RequestMemory",
+        )
+        .unwrap();
+        assert!(req.matches(&job_ad(), Some(&machine_ad())));
+    }
+
+    #[test]
+    fn start_expression_gates_on_owner() {
+        // the CE policy: only IceCube jobs may run
+        let start = parse("TARGET.Owner == \"icecube\"").unwrap();
+        assert!(start.matches(&machine_ad(), Some(&job_ad())));
+        let mut other = job_ad();
+        other.set_str("owner", "cms");
+        assert!(!start.matches(&machine_ad(), Some(&other)));
+    }
+
+    #[test]
+    fn string_equality_case_insensitive() {
+        let e = parse("GPUDeviceName == \"tesla t4\"").unwrap();
+        assert!(e.matches(&machine_ad(), None));
+    }
+
+    #[test]
+    fn undefined_attribute_does_not_match() {
+        let req = parse("TARGET.NoSuchAttr >= 5").unwrap();
+        assert!(!req.matches(&job_ad(), Some(&machine_ad())));
+    }
+
+    #[test]
+    fn undefined_propagation_three_valued() {
+        let my = Ad::new();
+        // undefined && false == false; undefined && true == undefined
+        let e = parse("NoSuch && false").unwrap();
+        assert_eq!(e.eval(&my, None), Value::Bool(false));
+        let e = parse("NoSuch && true").unwrap();
+        assert_eq!(e.eval(&my, None), Value::Undefined);
+        let e = parse("NoSuch || true").unwrap();
+        assert_eq!(e.eval(&my, None), Value::Bool(true));
+        let e = parse("NoSuch || false").unwrap();
+        assert_eq!(e.eval(&my, None), Value::Undefined);
+    }
+
+    #[test]
+    fn bare_attr_falls_back_to_target() {
+        let e = parse("HasGPU").unwrap();
+        assert!(e.matches(&job_ad(), Some(&machine_ad())));
+    }
+
+    #[test]
+    fn my_scope_does_not_leak_to_target() {
+        let e = parse("MY.HasGPU").unwrap();
+        assert!(!e.matches(&job_ad(), Some(&machine_ad())));
+    }
+
+    #[test]
+    fn negation_and_not() {
+        let e = parse("!(1 > 2)").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Bool(true));
+        let e = parse("-3 + 5").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Int(2));
+    }
+
+    #[test]
+    fn division_by_zero_undefined() {
+        let e = parse("1 / 0").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Undefined);
+    }
+
+    #[test]
+    fn float_int_promotion() {
+        let e = parse("3 / 2").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Float(1.5));
+        let e = parse("Memory * 2 >= 32768").unwrap();
+        assert!(e.matches(&machine_ad(), None));
+    }
+
+    #[test]
+    fn ad_keys_case_insensitive() {
+        let mut ad = Ad::new();
+        ad.set_int("RequestGPUs", 1);
+        assert_eq!(ad.get("requestgpus"), Value::Int(1));
+        assert_eq!(ad.get("REQUESTGPUS"), Value::Int(1));
+    }
+
+    #[test]
+    fn signature_stable_and_distinct() {
+        let a = job_ad();
+        let b = job_ad();
+        assert_eq!(a.signature(), b.signature());
+        let mut c = job_ad();
+        c.set_int("requestmemory", 1);
+        assert_ne!(a.signature(), c.signature());
+    }
+
+    #[test]
+    fn parse_errors_reported() {
+        assert!(parse("1 +").is_err());
+        assert!(parse("(1").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("1 ~ 2").is_err());
+        assert!(parse("a b").is_err());
+    }
+
+    #[test]
+    fn booleans_and_undefined_literals() {
+        let e = parse("TRUE && !FALSE").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Bool(true));
+        let e = parse("undefined == 1").unwrap();
+        assert_eq!(e.eval(&Ad::new(), None), Value::Undefined);
+    }
+}

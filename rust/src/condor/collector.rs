@@ -1,0 +1,157 @@
+//! The collector: the central-manager daemon holding machine ads.
+//!
+//! Startds advertise themselves with periodic updates; ads that miss
+//! updates for `classad_lifetime_s` expire (exactly how a real pool
+//! "loses" workers during a network outage — nothing tears them down,
+//! the collector just stops hearing from them).
+
+use super::classad::Ad;
+use super::startd::SlotId;
+use crate::sim::SimTime;
+use crate::util::fxhash::FxHashMap;
+
+/// Default HTCondor CLASSAD_LIFETIME (15 minutes).
+pub const DEFAULT_CLASSAD_LIFETIME_S: u64 = 900;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    ad: Ad,
+    last_heard: SimTime,
+}
+
+/// Machine-ad registry.
+#[derive(Debug, Default)]
+pub struct Collector {
+    ads: FxHashMap<SlotId, Entry>,
+    pub classad_lifetime_s: u64,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Collector {
+            ads: FxHashMap::default(),
+            classad_lifetime_s: DEFAULT_CLASSAD_LIFETIME_S,
+        }
+    }
+
+    /// Insert or refresh a machine ad.
+    pub fn update(&mut self, slot: SlotId, ad: Ad, now: SimTime) {
+        self.ads.insert(slot, Entry { ad, last_heard: now });
+    }
+
+    /// Refresh the heartbeat of an existing ad (keepalive without a
+    /// content change).
+    pub fn heartbeat(&mut self, slot: SlotId, now: SimTime) {
+        if let Some(e) = self.ads.get_mut(&slot) {
+            e.last_heard = now;
+        }
+    }
+
+    /// Explicitly remove an ad (graceful shutdown / invalidation).
+    pub fn invalidate(&mut self, slot: SlotId) {
+        self.ads.remove(&slot);
+    }
+
+    /// Drop ads that have not been heard from within the lifetime.
+    /// Returns the expired slots.
+    pub fn expire(&mut self, now: SimTime) -> Vec<SlotId> {
+        let lifetime = self.classad_lifetime_s;
+        let expired: Vec<SlotId> = self
+            .ads
+            .iter()
+            .filter(|(_, e)| now.saturating_sub(e.last_heard) > lifetime)
+            .map(|(s, _)| *s)
+            .collect();
+        for s in &expired {
+            self.ads.remove(s);
+        }
+        expired
+    }
+
+    pub fn contains(&self, slot: SlotId) -> bool {
+        self.ads.contains_key(&slot)
+    }
+
+    pub fn get(&self, slot: SlotId) -> Option<&Ad> {
+        self.ads.get(&slot).map(|e| &e.ad)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ads.is_empty()
+    }
+
+    pub fn slots(&self) -> impl Iterator<Item = SlotId> + '_ {
+        self.ads.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::InstanceId;
+
+    fn slot(n: u64) -> SlotId {
+        SlotId::Cloud(InstanceId(n))
+    }
+
+    #[test]
+    fn update_and_query() {
+        let mut c = Collector::new();
+        c.update(slot(1), Ad::new(), 100);
+        assert!(c.contains(slot(1)));
+        assert_eq!(c.len(), 1);
+        assert!(c.get(slot(1)).is_some());
+        assert!(c.get(slot(2)).is_none());
+    }
+
+    #[test]
+    fn expiry_after_lifetime() {
+        let mut c = Collector::new();
+        c.update(slot(1), Ad::new(), 0);
+        c.update(slot(2), Ad::new(), 800);
+        let expired = c.expire(901); // slot1 is 901s stale (> 900)
+        assert_eq!(expired, vec![slot(1)]);
+        assert!(!c.contains(slot(1)));
+        assert!(c.contains(slot(2)));
+    }
+
+    #[test]
+    fn heartbeat_prevents_expiry() {
+        let mut c = Collector::new();
+        c.update(slot(1), Ad::new(), 0);
+        c.heartbeat(slot(1), 600);
+        assert!(c.expire(1200).is_empty());
+        assert!(c.contains(slot(1)));
+    }
+
+    #[test]
+    fn heartbeat_on_unknown_slot_is_noop() {
+        let mut c = Collector::new();
+        c.heartbeat(slot(9), 10);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = Collector::new();
+        c.update(slot(1), Ad::new(), 0);
+        c.invalidate(slot(1));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn outage_expires_whole_pool() {
+        // the Fig-1 collapse: no updates during a 2 h outage -> empty pool
+        let mut c = Collector::new();
+        for i in 0..100 {
+            c.update(slot(i), Ad::new(), 1000);
+        }
+        let expired = c.expire(1000 + 7200);
+        assert_eq!(expired.len(), 100);
+        assert!(c.is_empty());
+    }
+}

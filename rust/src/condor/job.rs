@@ -1,0 +1,146 @@
+//! Jobs and the job queue state machine.
+
+use super::classad::{Ad, Expr};
+use crate::sim::SimTime;
+
+/// Unique job identifier (monotonic per schedd).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Job lifecycle (the subset of HTCondor's states we exercise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Idle,
+    Running,
+    Completed,
+    Removed,
+}
+
+/// One IceCube task: a photon-propagation workload unit.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub owner: String,
+    pub submitted_at: SimTime,
+    /// Ground-truth execution time on a T4 (seconds).
+    pub runtime_s: u64,
+    /// Total fp32 FLOPs the job performs (for EFLOP-hour accounting).
+    pub flops: f64,
+    /// Photon bunches the job propagates (drives real-compute sampling).
+    pub bunches: u32,
+    pub state: JobState,
+    /// Scheduling attempts so far (1 + number of restarts).
+    pub attempts: u32,
+    /// Start of the current attempt.
+    pub started_at: Option<SimTime>,
+    pub completed_at: Option<SimTime>,
+    /// Productive wall seconds (the final, completed attempt).
+    pub goodput_s: u64,
+    /// Wall seconds wasted by preempted/disconnected attempts.
+    pub badput_s: u64,
+    /// The job ad used in matchmaking.
+    pub ad: Ad,
+    /// Parsed Requirements expression.
+    pub requirements: Expr,
+    /// Cached autocluster signature (computing it per negotiation cycle
+    /// dominated the campaign profile — see EXPERIMENTS.md §Perf).
+    pub autocluster: String,
+}
+
+/// Autocluster signature: jobs with identical matchmaking inputs are
+/// negotiated as one cluster. Computed once at submit.
+pub fn autocluster_signature(requirements: &Expr, ad: &Ad) -> String {
+    format!("{requirements:?}|{}", ad.signature())
+}
+
+impl Job {
+    pub fn autocluster_key(&self) -> &str {
+        &self.autocluster
+    }
+}
+
+/// Builder for IceCube-style GPU jobs.
+pub fn gpu_job_ad(owner: &str, request_memory_mb: i64) -> Ad {
+    let mut ad = Ad::new();
+    ad.set_str("owner", owner)
+        .set_int("requestgpus", 1)
+        .set_int("requestmemory", request_memory_mb)
+        .set_str("jobuniverse", "vanilla");
+    ad
+}
+
+/// The standard IceCube GPU job Requirements expression.
+pub fn gpu_requirements() -> Expr {
+    super::classad::parse(
+        "TARGET.HasGPU && TARGET.CUDACapability >= 6.0 \
+         && TARGET.Memory >= MY.RequestMemory",
+    )
+    .expect("static expression parses")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64) -> Job {
+        Job {
+            id: JobId(id),
+            owner: "icecube".into(),
+            submitted_at: 0,
+            runtime_s: 3600,
+            flops: 1e15,
+            bunches: 100,
+            state: JobState::Idle,
+            attempts: 0,
+            started_at: None,
+            completed_at: None,
+            goodput_s: 0,
+            badput_s: 0,
+            ad: gpu_job_ad("icecube", 8192),
+            requirements: gpu_requirements(),
+            autocluster: autocluster_signature(
+                &gpu_requirements(), &gpu_job_ad("icecube", 8192)),
+        }
+    }
+
+    #[test]
+    fn autocluster_groups_identical_jobs() {
+        assert_eq!(job(1).autocluster_key(), job(2).autocluster_key());
+        // a different matchmaking input yields a different signature
+        let mut other = job(3);
+        other.ad.set_int("requestmemory", 4096);
+        other.autocluster =
+            autocluster_signature(&other.requirements, &other.ad);
+        assert_ne!(job(1).autocluster_key(), other.autocluster_key());
+    }
+
+    #[test]
+    fn requirements_need_gpu_machine() {
+        let j = job(1);
+        let mut machine = Ad::new();
+        machine
+            .set_bool("hasgpu", true)
+            .set_float("cudacapability", 7.5)
+            .set_int("memory", 16384);
+        assert!(j.requirements.matches(&j.ad, Some(&machine)));
+        machine.set_bool("hasgpu", false);
+        assert!(!j.requirements.matches(&j.ad, Some(&machine)));
+    }
+
+    #[test]
+    fn requirements_enforce_memory() {
+        let j = job(1);
+        let mut machine = Ad::new();
+        machine
+            .set_bool("hasgpu", true)
+            .set_float("cudacapability", 7.5)
+            .set_int("memory", 4096); // below the 8 GiB request
+        assert!(!j.requirements.matches(&j.ad, Some(&machine)));
+    }
+}

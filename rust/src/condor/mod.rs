@@ -1,0 +1,24 @@
+//! HTCondor-style workload management substrate.
+//!
+//! A behaviourally-equivalent reimplementation of the slice of HTCondor
+//! the paper's setup exercises: ClassAd matchmaking (`classad`), the
+//! central manager (`collector`, `negotiator`), the job queue (`schedd`,
+//! `job`) and the per-worker agent (`startd`), assembled by `pool`.
+//! Cloud workers join the pool exactly like on-prem ones — the paper's
+//! core integration claim.
+
+pub mod classad;
+pub mod collector;
+pub mod job;
+pub mod negotiator;
+pub mod pool;
+pub mod schedd;
+pub mod startd;
+
+pub use classad::{Ad, Expr, Value};
+pub use collector::Collector;
+pub use job::{Job, JobId, JobState};
+pub use negotiator::CycleResult;
+pub use pool::{CondorPool, InterruptCause, PoolEvent, PoolStats};
+pub use schedd::{Schedd, ScheddStats};
+pub use startd::{Claim, SlotId, Startd};

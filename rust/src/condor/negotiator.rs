@@ -1,0 +1,255 @@
+//! The negotiator: bilateral matchmaking between idle jobs and slots.
+//!
+//! Implements HTCondor-style autoclustering: idle jobs with identical
+//! matchmaking inputs (Requirements + job ad) form one autocluster, and
+//! candidate slots are evaluated once per cluster instead of once per
+//! job.  With IceCube's homogeneous GPU jobs this turns each negotiation
+//! cycle from O(jobs × slots) ClassAd evaluations into O(slots).
+
+use super::job::JobId;
+use super::schedd::Schedd;
+use super::startd::{SlotId, Startd};
+use crate::util::fxhash::FxHashMap;
+
+/// Default negotiation cycle period (HTCondor NEGOTIATOR_INTERVAL: 300 s).
+pub const DEFAULT_CYCLE_S: u64 = 300;
+
+/// One matchmaking cycle's outcome.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CycleResult {
+    pub matches: Vec<(JobId, SlotId)>,
+    pub idle_considered: usize,
+    pub slots_considered: usize,
+    pub autoclusters: usize,
+    /// ClassAd (requirements, start) evaluations performed.
+    pub evaluations: u64,
+}
+
+/// Run one negotiation cycle; returns matches without applying them.
+///
+/// `max_matches` caps how many claims a single cycle may hand out (real
+/// negotiators bound cycle length the same way).
+pub fn negotiate(
+    schedd: &Schedd,
+    startds: &FxHashMap<SlotId, Startd>,
+    slots_in_collector: impl Iterator<Item = SlotId>,
+    max_matches: usize,
+) -> CycleResult {
+    let mut result = CycleResult::default();
+
+    // candidate slots: advertised, connected, unclaimed
+    let mut candidates: Vec<SlotId> = slots_in_collector
+        .filter(|s| startds.get(s).map(|d| d.is_unclaimed()).unwrap_or(false))
+        .collect();
+    candidates.sort_unstable(); // determinism regardless of map order
+    result.slots_considered = candidates.len();
+
+    // group idle jobs into autoclusters, preserving queue order
+    let mut clusters: Vec<(&str, Vec<JobId>)> = Vec::new();
+    let mut cluster_index: FxHashMap<&str, usize> = FxHashMap::default();
+    for id in schedd.idle_jobs() {
+        let key = schedd.job(id).autocluster_key();
+        match cluster_index.get(key) {
+            Some(&i) => clusters[i].1.push(id),
+            None => {
+                cluster_index.insert(key, clusters.len());
+                clusters.push((key, vec![id]));
+            }
+        }
+        result.idle_considered += 1;
+    }
+    result.autoclusters = clusters.len();
+
+    let mut claimed: Vec<bool> = vec![false; candidates.len()];
+    for (_, jobs) in &clusters {
+        let representative = schedd.job(jobs[0]);
+        let mut job_iter = jobs.iter();
+        let mut current = job_iter.next();
+        for (slot_idx, slot) in candidates.iter().enumerate() {
+            if current.is_none() || result.matches.len() >= max_matches {
+                break;
+            }
+            if claimed[slot_idx] {
+                continue;
+            }
+            let startd = &startds[slot];
+            // bilateral match, evaluated once per (cluster, slot)
+            result.evaluations += 2;
+            let job_ok = representative
+                .requirements
+                .matches(&representative.ad, Some(&startd.ad));
+            let machine_ok = startd
+                .start_expr
+                .matches(&startd.ad, Some(&representative.ad));
+            if job_ok && machine_ok {
+                let job_id = *current.unwrap();
+                result.matches.push((job_id, *slot));
+                claimed[slot_idx] = true;
+                current = job_iter.next();
+            }
+        }
+        if result.matches.len() >= max_matches {
+            break;
+        }
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::{InstanceId, Provider};
+    use crate::condor::job::{gpu_job_ad, gpu_requirements};
+    use crate::net::NatProfile;
+
+    fn make_startd(n: u64) -> Startd {
+        Startd::new(
+            SlotId::Cloud(InstanceId(n)),
+            "cloud",
+            Some(Provider::Azure),
+            "azure/eastus",
+            NatProfile::permissive("test"),
+            60,
+            0,
+        )
+    }
+
+    fn pool(n: u64) -> FxHashMap<SlotId, Startd> {
+        (0..n).map(|i| (SlotId::Cloud(InstanceId(i)), make_startd(i))).collect()
+    }
+
+    fn schedd_with_jobs(n: u64) -> Schedd {
+        let mut s = Schedd::new();
+        for _ in 0..n {
+            s.submit(
+                "icecube",
+                3600,
+                1e15,
+                100,
+                gpu_job_ad("icecube", 8192),
+                gpu_requirements(),
+                0,
+            );
+        }
+        s
+    }
+
+    #[test]
+    fn matches_jobs_to_free_slots() {
+        let schedd = schedd_with_jobs(5);
+        let startds = pool(3);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert_eq!(r.matches.len(), 3); // slot-limited
+        assert_eq!(r.autoclusters, 1);
+        // distinct slots, distinct jobs
+        let mut slots: Vec<_> = r.matches.iter().map(|(_, s)| *s).collect();
+        slots.sort();
+        slots.dedup();
+        assert_eq!(slots.len(), 3);
+    }
+
+    #[test]
+    fn job_limited_when_more_slots() {
+        let schedd = schedd_with_jobs(2);
+        let startds = pool(10);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert_eq!(r.matches.len(), 2);
+    }
+
+    #[test]
+    fn autoclustering_evaluates_once_per_slot() {
+        let schedd = schedd_with_jobs(100);
+        let startds = pool(10);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        // one cluster * 10 slots * 2 evaluations
+        assert_eq!(r.evaluations, 20);
+        assert_eq!(r.matches.len(), 10);
+    }
+
+    #[test]
+    fn claimed_slots_are_skipped() {
+        let schedd = schedd_with_jobs(5);
+        let mut startds = pool(3);
+        startds
+            .get_mut(&SlotId::Cloud(InstanceId(1)))
+            .unwrap()
+            .claim_for(JobId(999), 0, 60);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert_eq!(r.matches.len(), 2);
+        assert!(r
+            .matches
+            .iter()
+            .all(|(_, s)| *s != SlotId::Cloud(InstanceId(1))));
+    }
+
+    #[test]
+    fn disconnected_slots_are_skipped() {
+        let schedd = schedd_with_jobs(5);
+        let mut startds = pool(3);
+        startds
+            .get_mut(&SlotId::Cloud(InstanceId(0)))
+            .unwrap()
+            .conn
+            .sever();
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert_eq!(r.matches.len(), 2);
+    }
+
+    #[test]
+    fn slots_absent_from_collector_not_matched() {
+        let schedd = schedd_with_jobs(5);
+        let startds = pool(5);
+        // collector only knows 2 of the 5
+        let known = vec![
+            SlotId::Cloud(InstanceId(0)),
+            SlotId::Cloud(InstanceId(3)),
+        ];
+        let r = negotiate(&schedd, &startds, known.into_iter(), 1000);
+        assert_eq!(r.matches.len(), 2);
+    }
+
+    #[test]
+    fn non_icecube_jobs_rejected_by_start() {
+        let mut schedd = Schedd::new();
+        schedd.submit(
+            "cms",
+            3600,
+            1e15,
+            100,
+            gpu_job_ad("cms", 8192),
+            gpu_requirements(),
+            0,
+        );
+        let startds = pool(3);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert!(r.matches.is_empty());
+    }
+
+    #[test]
+    fn max_matches_cap_respected() {
+        let schedd = schedd_with_jobs(100);
+        let startds = pool(100);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 7);
+        assert_eq!(r.matches.len(), 7);
+    }
+
+    #[test]
+    fn heterogeneous_jobs_form_multiple_autoclusters() {
+        let mut schedd = Schedd::new();
+        for mem in [8192i64, 8192, 4096] {
+            schedd.submit(
+                "icecube",
+                3600,
+                1e15,
+                100,
+                gpu_job_ad("icecube", mem),
+                gpu_requirements(),
+                0,
+            );
+        }
+        let startds = pool(3);
+        let r = negotiate(&schedd, &startds, startds.keys().copied(), 1000);
+        assert_eq!(r.autoclusters, 2);
+        assert_eq!(r.matches.len(), 3);
+    }
+}

@@ -1,0 +1,571 @@
+//! The HTCondor pool: collector + negotiator + schedd + startds, glued.
+//!
+//! [`CondorPool::tick`] advances the whole workload-management plane:
+//! keepalives (through each region's NAT), collector ad expiry, job
+//! completions, reconnects, and periodic negotiation cycles.  A CE-host
+//! network outage is modeled by severing every management connection and
+//! refusing reconnects until the outage clears — which reproduces the
+//! paper's "total collapse of the backend workload management system".
+
+use super::collector::Collector;
+use super::negotiator::{negotiate, DEFAULT_CYCLE_S};
+use super::schedd::Schedd;
+use super::startd::{Claim, SlotId, Startd, RECONNECT_DELAY_S};
+use crate::net::SendOutcome;
+use crate::sim::{EventQueue, SimTime, Ticker};
+use crate::util::fxhash::FxHashMap;
+
+/// Events the pool reports upward (monitoring / real-compute sampling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolEvent {
+    JobStarted(SlotId),
+    JobCompleted(SlotId),
+    /// A running job lost its slot (NAT drop, preemption, outage).
+    JobInterrupted(SlotId, InterruptCause),
+    /// A startd's ad expired from the collector (stale heartbeat).
+    SlotExpired(SlotId),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterruptCause {
+    NatDrop,
+    WorkerLost,
+    Outage,
+}
+
+/// Cumulative pool statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub nat_drops: u64,
+    pub negotiation_cycles: u64,
+    pub matches: u64,
+    pub classad_evaluations: u64,
+}
+
+/// The assembled workload-management plane.
+pub struct CondorPool {
+    pub collector: Collector,
+    pub schedd: Schedd,
+    startds: FxHashMap<SlotId, Startd>,
+    /// Scratch buffer reused by the keepalive sweep (avoids a per-tick
+    /// allocation of every slot id).
+    scratch: Vec<SlotId>,
+    negotiation: Ticker,
+    /// Max matches a single negotiation cycle may hand out.
+    pub max_matches_per_cycle: usize,
+    outage: bool,
+    /// Incremental busy-slot counters (claim/release sites keep these in
+    /// sync; scanning every startd per tick showed up in the profile).
+    busy_cloud: usize,
+    busy_onprem: usize,
+    pub stats: PoolStats,
+    /// Queue of upcoming job-completion times (avoids scanning all slots
+    /// every tick).
+    completions: EventQueue<SlotId>,
+}
+
+impl CondorPool {
+    pub fn new() -> Self {
+        CondorPool {
+            collector: Collector::new(),
+            schedd: Schedd::new(),
+            startds: FxHashMap::default(),
+            scratch: Vec::new(),
+            negotiation: Ticker::new(DEFAULT_CYCLE_S, 0),
+            max_matches_per_cycle: 5000,
+            outage: false,
+            busy_cloud: 0,
+            busy_onprem: 0,
+            stats: PoolStats::default(),
+            completions: EventQueue::new(),
+        }
+    }
+
+    pub fn with_negotiation_period(mut self, period: SimTime) -> Self {
+        self.negotiation = Ticker::new(period, 0);
+        self
+    }
+
+    // ---- worker membership -------------------------------------------------
+
+    /// A worker came up: register its startd and advertise it.
+    pub fn add_startd(&mut self, startd: Startd, now: SimTime) {
+        if !self.outage {
+            self.collector.update(startd.slot, startd.ad.clone(), now);
+        }
+        self.startds.insert(startd.slot, startd);
+    }
+
+    /// A worker vanished (spot preemption / deprovision). Any running job
+    /// is interrupted and requeued.
+    pub fn remove_startd(
+        &mut self,
+        slot: SlotId,
+        now: SimTime,
+        events: &mut Vec<PoolEvent>,
+    ) {
+        if let Some(mut startd) = self.startds.remove(&slot) {
+            if let Some(claim) = startd.release() {
+                Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
+                                  startd.pool_tag, -1);
+                self.schedd.interrupt(claim.job, now);
+                events.push(PoolEvent::JobInterrupted(
+                    slot,
+                    InterruptCause::WorkerLost,
+                ));
+            }
+            self.collector.invalidate(slot);
+        }
+    }
+
+    pub fn startd(&self, slot: SlotId) -> Option<&Startd> {
+        self.startds.get(&slot)
+    }
+
+    pub fn num_startds(&self) -> usize {
+        self.startds.len()
+    }
+
+    /// Slots currently executing a job, with pool tags (Fig 2 accounting).
+    pub fn running_slots(&self) -> impl Iterator<Item = (&Startd, Claim)> + '_ {
+        self.startds
+            .values()
+            .filter_map(|d| d.claim.map(|c| (d, c)))
+    }
+
+    pub fn running_by_tag(&self, tag: &str) -> usize {
+        self.running_slots().filter(|(d, _)| d.pool_tag == tag).count()
+    }
+
+    /// O(1) (cloud, onprem) busy-slot counts, maintained incrementally at
+    /// every claim/release site (scanning every startd per tick showed up
+    /// in the campaign profile).
+    pub fn running_cloud_onprem(&self) -> (usize, usize) {
+        (self.busy_cloud, self.busy_onprem)
+    }
+
+    fn count_claim(busy_cloud: &mut usize, busy_onprem: &mut usize,
+                   tag: &str, delta: isize) {
+        let c = match tag {
+            "cloud" => busy_cloud,
+            "onprem" => busy_onprem,
+            _ => return,
+        };
+        *c = c.checked_add_signed(delta).expect("busy counter underflow");
+    }
+
+    pub fn unclaimed_count(&self) -> usize {
+        self.startds.values().filter(|d| d.is_unclaimed()).count()
+    }
+
+    // ---- outage control ------------------------------------------------------
+
+    /// Begin a CE-host network outage: every management connection dies
+    /// and running jobs are lost (the backend WMS collapses).
+    pub fn begin_outage(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        self.outage = true;
+        let slots: Vec<SlotId> = self.startds.keys().copied().collect();
+        for slot in slots {
+            let startd = self.startds.get_mut(&slot).unwrap();
+            startd.conn.sever();
+            startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
+            if let Some(claim) = startd.release() {
+                Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
+                                  startd.pool_tag, -1);
+                self.schedd.interrupt(claim.job, now);
+                events.push(PoolEvent::JobInterrupted(slot, InterruptCause::Outage));
+            }
+        }
+    }
+
+    /// Outage resolved; workers may reconnect on their next retry.
+    pub fn end_outage(&mut self) {
+        self.outage = false;
+    }
+
+    pub fn in_outage(&self) -> bool {
+        self.outage
+    }
+
+    // ---- time advance ----------------------------------------------------------
+
+    /// Advance the management plane by one tick.
+    pub fn tick(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        self.run_keepalives(now, events);
+        self.run_completions(now, events);
+        self.expire_ads(now, events);
+        if self.negotiation.due(now) {
+            self.run_negotiation(now, events);
+        }
+    }
+
+    fn run_keepalives(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        let mut slots = std::mem::take(&mut self.scratch);
+        slots.clear();
+        slots.extend(self.startds.keys().copied());
+        for &slot in &slots {
+            let startd = self.startds.get_mut(&slot).unwrap();
+
+            // reconnect attempts
+            if let Some(at) = startd.reconnect_at {
+                if now >= at {
+                    if self.outage {
+                        // retry again later; the path is still down
+                        startd.reconnect_at = Some(now + RECONNECT_DELAY_S * 4);
+                    } else {
+                        startd.conn.reconnect(now);
+                        startd.reconnect_at = None;
+                        startd.next_keepalive = now + startd.keepalive_s;
+                        self.collector.update(slot, startd.ad.clone(), now);
+                    }
+                }
+                continue;
+            }
+
+            if !startd.conn.alive || now < startd.next_keepalive {
+                continue;
+            }
+
+            // during an outage sends cannot reach the central manager
+            if self.outage {
+                startd.conn.sever();
+                startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
+                if let Some(claim) = startd.release() {
+                    Self::count_claim(&mut self.busy_cloud,
+                                      &mut self.busy_onprem,
+                                      startd.pool_tag, -1);
+                    self.schedd.interrupt(claim.job, now);
+                    events.push(PoolEvent::JobInterrupted(
+                        slot,
+                        InterruptCause::Outage,
+                    ));
+                }
+                continue;
+            }
+
+            match startd.conn.try_send(now) {
+                SendOutcome::Delivered => {
+                    self.collector.heartbeat(slot, now);
+                    startd.next_keepalive = now + startd.keepalive_s;
+                }
+                SendOutcome::DroppedByNat => {
+                    // the §IV incident: claim connection silently died
+                    self.stats.nat_drops += 1;
+                    startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
+                    if let Some(claim) = startd.release() {
+                        Self::count_claim(&mut self.busy_cloud,
+                                          &mut self.busy_onprem,
+                                          startd.pool_tag, -1);
+                        self.schedd.interrupt(claim.job, now);
+                        events.push(PoolEvent::JobInterrupted(
+                            slot,
+                            InterruptCause::NatDrop,
+                        ));
+                    }
+                }
+                SendOutcome::NotConnected => {
+                    startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
+                }
+            }
+        }
+        self.scratch = slots;
+    }
+
+    fn run_completions(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        while let Some(t) = self.completions.peek_time() {
+            if t > now {
+                break;
+            }
+            let (_, slot) = self.completions.pop().unwrap();
+            let Some(startd) = self.startds.get_mut(&slot) else {
+                continue; // worker already gone; schedd was updated then
+            };
+            let Some(claim) = startd.claim else {
+                continue; // claim already released (interrupt); stale entry
+            };
+            if claim.finish_at > now {
+                continue; // stale entry from an earlier claim
+            }
+            startd.release();
+            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
+                              startd.pool_tag, -1);
+            if startd.conn.alive {
+                self.schedd.complete(claim.job, now);
+                events.push(PoolEvent::JobCompleted(slot));
+            } else {
+                // results can't be delivered; attempt is lost
+                self.schedd.interrupt(claim.job, now);
+                events.push(PoolEvent::JobInterrupted(
+                    slot,
+                    InterruptCause::WorkerLost,
+                ));
+            }
+        }
+    }
+
+    fn expire_ads(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        for slot in self.collector.expire(now) {
+            events.push(PoolEvent::SlotExpired(slot));
+        }
+    }
+
+    fn run_negotiation(&mut self, now: SimTime, events: &mut Vec<PoolEvent>) {
+        self.stats.negotiation_cycles += 1;
+        if self.outage {
+            return; // negotiator can't reach anything either
+        }
+        let result = negotiate(
+            &self.schedd,
+            &self.startds,
+            self.collector.slots(),
+            self.max_matches_per_cycle,
+        );
+        self.stats.classad_evaluations += result.evaluations;
+        for (job, slot) in result.matches {
+            let runtime = self.schedd.job(job).runtime_s;
+            self.schedd.start(job, slot, now);
+            let startd = self.startds.get_mut(&slot).unwrap();
+            startd.claim_for(job, now, runtime);
+            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
+                              startd.pool_tag, 1);
+            self.completions.push_at(now + runtime, slot);
+            self.stats.matches += 1;
+            events.push(PoolEvent::JobStarted(slot));
+        }
+    }
+
+    /// Pool-wide invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.schedd.check_invariants()?;
+        // incremental busy counters must agree with a full scan
+        let mut cloud = 0usize;
+        let mut onprem = 0usize;
+        for d in self.startds.values() {
+            if d.claim.is_some() {
+                match d.pool_tag {
+                    "cloud" => cloud += 1,
+                    "onprem" => onprem += 1,
+                    _ => {}
+                }
+            }
+        }
+        if (cloud, onprem) != (self.busy_cloud, self.busy_onprem) {
+            return Err(format!(
+                "busy counters drifted: scan ({cloud},{onprem}) !=                  counters ({},{})",
+                self.busy_cloud, self.busy_onprem
+            ));
+        }
+        for (slot, startd) in &self.startds {
+            if *slot != startd.slot {
+                return Err(format!("slot key mismatch for {slot}"));
+            }
+            if let Some(claim) = startd.claim {
+                match self.schedd.slot_of(claim.job) {
+                    Some(s) if s == *slot => {}
+                    other => {
+                        return Err(format!(
+                            "claim on {slot} not reflected in schedd ({other:?})"
+                        ))
+                    }
+                }
+            }
+        }
+        // every running job's slot must hold the matching claim
+        for job in self.schedd.jobs() {
+            if job.state == super::job::JobState::Running {
+                let slot = self
+                    .schedd
+                    .slot_of(job.id)
+                    .ok_or_else(|| format!("running {} has no slot", job.id))?;
+                let startd = self
+                    .startds
+                    .get(&slot)
+                    .ok_or_else(|| format!("running {} on missing {slot}", job.id))?;
+                match startd.claim {
+                    Some(c) if c.job == job.id => {}
+                    _ => {
+                        return Err(format!(
+                            "running {} not claimed on {slot}",
+                            job.id
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for CondorPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::{InstanceId, Provider};
+    use crate::condor::job::{gpu_job_ad, gpu_requirements};
+    use crate::net::NatProfile;
+    use crate::sim::MINUTE;
+
+    fn add_worker(pool: &mut CondorPool, n: u64, keepalive: u64,
+                  nat: NatProfile, now: SimTime) {
+        let slot = SlotId::Cloud(InstanceId(n));
+        let startd = Startd::new(
+            slot, "cloud", Some(Provider::Azure), "azure/eastus", nat,
+            keepalive, now,
+        );
+        pool.add_startd(startd, now);
+    }
+
+    fn submit_jobs(pool: &mut CondorPool, n: u64, runtime: u64) {
+        for _ in 0..n {
+            pool.schedd.submit(
+                "icecube", runtime, 1e15, 100,
+                gpu_job_ad("icecube", 8192), gpu_requirements(), 0,
+            );
+        }
+    }
+
+    fn run(pool: &mut CondorPool, from: SimTime, ticks: u64) -> Vec<PoolEvent> {
+        let mut events = Vec::new();
+        for i in 0..ticks {
+            pool.tick(from + i * MINUTE, &mut events);
+        }
+        events
+    }
+
+    #[test]
+    fn jobs_match_and_complete() {
+        let mut pool = CondorPool::new();
+        for i in 0..4 {
+            add_worker(&mut pool, i, 60, NatProfile::permissive("x"), 0);
+        }
+        submit_jobs(&mut pool, 10, 30 * MINUTE);
+        let events = run(&mut pool, 0, 40);
+        let started = events.iter().filter(|e| matches!(e, PoolEvent::JobStarted(_))).count();
+        let completed = events.iter().filter(|e| matches!(e, PoolEvent::JobCompleted(_))).count();
+        assert_eq!(completed, 4, "first wave completes inside 40 min");
+        assert!(started >= 8, "second wave starts, started={started}");
+        assert_eq!(pool.schedd.stats.completed, 4);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn all_jobs_eventually_drain() {
+        let mut pool = CondorPool::new();
+        for i in 0..8 {
+            add_worker(&mut pool, i, 60, NatProfile::permissive("x"), 0);
+        }
+        submit_jobs(&mut pool, 24, 20 * MINUTE);
+        run(&mut pool, 0, 6 * 60);
+        assert_eq!(pool.schedd.stats.completed, 24);
+        assert_eq!(pool.schedd.idle_count(), 0);
+        assert_eq!(pool.schedd.stats.badput_s, 0);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn nat_drop_storm_with_default_keepalive() {
+        // §IV incident: OSG default 300 s keepalive on Azure default NAT
+        let mut pool = CondorPool::new();
+        for i in 0..4 {
+            add_worker(&mut pool, i, 300, NatProfile::azure_default(), 0);
+        }
+        submit_jobs(&mut pool, 8, 2 * 3600);
+        let events = run(&mut pool, 0, 120);
+        let nat_drops = events
+            .iter()
+            .filter(|e| {
+                matches!(e, PoolEvent::JobInterrupted(_, InterruptCause::NatDrop))
+            })
+            .count();
+        assert!(nat_drops >= 4, "constant preemption expected, got {nat_drops}");
+        assert_eq!(pool.schedd.stats.completed, 0, "nothing can finish");
+        assert!(pool.schedd.stats.badput_s > 0);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tuned_keepalive_fixes_azure() {
+        let mut pool = CondorPool::new();
+        for i in 0..4 {
+            add_worker(&mut pool, i, 60, NatProfile::azure_default(), 0);
+        }
+        submit_jobs(&mut pool, 4, 2 * 3600);
+        run(&mut pool, 0, 3 * 60);
+        assert_eq!(pool.stats.nat_drops, 0);
+        assert_eq!(pool.schedd.stats.completed, 4);
+        assert_eq!(pool.schedd.stats.badput_s, 0);
+    }
+
+    #[test]
+    fn worker_loss_requeues_job() {
+        let mut pool = CondorPool::new();
+        add_worker(&mut pool, 0, 60, NatProfile::permissive("x"), 0);
+        submit_jobs(&mut pool, 1, 3600);
+        run(&mut pool, 0, 10);
+        assert_eq!(pool.schedd.running_count(), 1);
+        let mut events = Vec::new();
+        pool.remove_startd(SlotId::Cloud(InstanceId(0)), 11 * MINUTE, &mut events);
+        assert!(matches!(
+            events[0],
+            PoolEvent::JobInterrupted(_, InterruptCause::WorkerLost)
+        ));
+        assert_eq!(pool.schedd.idle_count(), 1);
+        assert_eq!(pool.num_startds(), 0);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn outage_collapses_and_recovers() {
+        let mut pool = CondorPool::new();
+        for i in 0..6 {
+            add_worker(&mut pool, i, 60, NatProfile::permissive("x"), 0);
+        }
+        submit_jobs(&mut pool, 6, 4 * 3600);
+        run(&mut pool, 0, 10);
+        assert_eq!(pool.schedd.running_count(), 6);
+
+        let mut events = Vec::new();
+        pool.begin_outage(10 * MINUTE, &mut events);
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| matches!(
+                    e,
+                    PoolEvent::JobInterrupted(_, InterruptCause::Outage)
+                ))
+                .count(),
+            6
+        );
+        assert_eq!(pool.schedd.running_count(), 0);
+
+        // during the outage nothing matches and ads expire
+        run(&mut pool, 11 * MINUTE, 30);
+        assert_eq!(pool.schedd.running_count(), 0);
+        assert_eq!(pool.collector.len(), 0, "collector forgets the pool");
+
+        // outage ends: workers reconnect, ads return, matching resumes
+        pool.end_outage();
+        run(&mut pool, 41 * MINUTE, 20);
+        assert_eq!(pool.collector.len(), 6);
+        assert_eq!(pool.schedd.running_count(), 6);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_track_cycles_and_matches() {
+        let mut pool = CondorPool::new();
+        for i in 0..2 {
+            add_worker(&mut pool, i, 60, NatProfile::permissive("x"), 0);
+        }
+        submit_jobs(&mut pool, 2, 3600);
+        run(&mut pool, 0, 11);
+        assert!(pool.stats.negotiation_cycles >= 2);
+        assert_eq!(pool.stats.matches, 2);
+        assert!(pool.stats.classad_evaluations > 0);
+    }
+}

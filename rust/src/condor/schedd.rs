@@ -1,0 +1,263 @@
+//! The schedd: job queue, submission, and goodput/badput accounting.
+
+use super::classad::{Ad, Expr};
+use super::job::{Job, JobId, JobState};
+use super::startd::SlotId;
+use crate::sim::SimTime;
+use crate::util::fxhash::FxHashMap;
+use std::collections::BTreeSet;
+
+/// Aggregate queue statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScheddStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Attempts lost to preemption / connection loss (job went back idle).
+    pub interrupted: u64,
+    /// Productive wall seconds (completed attempts).
+    pub goodput_s: u64,
+    /// Wasted wall seconds (interrupted attempts).
+    pub badput_s: u64,
+    /// fp32 FLOPs of completed jobs.
+    pub flops_done: f64,
+}
+
+/// The job queue daemon.
+#[derive(Debug, Default)]
+pub struct Schedd {
+    jobs: Vec<Job>,
+    /// Idle jobs ordered by JobId (negotiation prefers older
+    /// submissions; O(log n) insert/remove at campaign scale).
+    idle: BTreeSet<JobId>,
+    running: FxHashMap<JobId, SlotId>,
+    pub stats: ScheddStats,
+}
+
+impl Schedd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a job; assigns its JobId.
+    pub fn submit(
+        &mut self,
+        owner: &str,
+        runtime_s: u64,
+        flops: f64,
+        bunches: u32,
+        ad: Ad,
+        requirements: Expr,
+        now: SimTime,
+    ) -> JobId {
+        let id = JobId(self.jobs.len() as u64);
+        let autocluster = super::job::autocluster_signature(&requirements, &ad);
+        self.jobs.push(Job {
+            id,
+            owner: owner.to_string(),
+            submitted_at: now,
+            runtime_s,
+            flops,
+            bunches,
+            state: JobState::Idle,
+            attempts: 0,
+            started_at: None,
+            completed_at: None,
+            goodput_s: 0,
+            badput_s: 0,
+            ad,
+            requirements,
+            autocluster,
+        });
+        self.idle.insert(id);
+        self.stats.submitted += 1;
+        id
+    }
+
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id.0 as usize]
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.idle.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Idle job ids in JobId order (the negotiator's input).
+    pub fn idle_jobs(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.idle.iter().copied()
+    }
+
+    /// The slot a running job occupies.
+    pub fn slot_of(&self, id: JobId) -> Option<SlotId> {
+        self.running.get(&id).copied()
+    }
+
+    /// Transition Idle -> Running on a successful match.
+    pub fn start(&mut self, id: JobId, slot: SlotId, now: SimTime) {
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Idle);
+        job.state = JobState::Running;
+        job.attempts += 1;
+        job.started_at = Some(now);
+        self.idle.remove(&id);
+        self.running.insert(id, slot);
+    }
+
+    /// Transition Running -> Completed.
+    pub fn complete(&mut self, id: JobId, now: SimTime) {
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Running);
+        job.state = JobState::Completed;
+        job.completed_at = Some(now);
+        let wall = now.saturating_sub(job.started_at.expect("running job"));
+        job.goodput_s += wall;
+        self.running.remove(&id);
+        self.stats.completed += 1;
+        self.stats.goodput_s += wall;
+        self.stats.flops_done += job.flops;
+    }
+
+    /// Transition Running -> Idle (preemption, disconnect, outage).
+    /// The attempt's wall time is badput; IceCube jobs restart from scratch.
+    pub fn interrupt(&mut self, id: JobId, now: SimTime) {
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Running);
+        job.state = JobState::Idle;
+        let wall = now.saturating_sub(job.started_at.expect("running job"));
+        job.badput_s += wall;
+        job.started_at = None;
+        self.running.remove(&id);
+        self.idle.insert(id);
+        self.stats.interrupted += 1;
+        self.stats.badput_s += wall;
+    }
+
+    /// Sanity checks used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for id in &self.idle {
+            if self.jobs[id.0 as usize].state != JobState::Idle {
+                return Err(format!("{id} in idle queue but not Idle"));
+            }
+        }
+        for (id, _) in &self.running {
+            if self.jobs[id.0 as usize].state != JobState::Running {
+                return Err(format!("{id} in running map but not Running"));
+            }
+        }
+        let counted = self
+            .jobs
+            .iter()
+            .filter(|j| j.state == JobState::Idle)
+            .count();
+        if counted != self.idle.len() {
+            return Err(format!(
+                "idle queue {} != idle jobs {counted}",
+                self.idle.len()
+            ));
+        }
+        if self.stats.completed
+            != self.jobs.iter().filter(|j| j.state == JobState::Completed).count()
+                as u64
+        {
+            return Err("completed count mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::InstanceId;
+    use crate::condor::job::{gpu_job_ad, gpu_requirements};
+
+    fn submit(s: &mut Schedd, runtime: u64) -> JobId {
+        s.submit(
+            "icecube",
+            runtime,
+            1e15,
+            100,
+            gpu_job_ad("icecube", 8192),
+            gpu_requirements(),
+            0,
+        )
+    }
+
+    fn slot(n: u64) -> SlotId {
+        SlotId::Cloud(InstanceId(n))
+    }
+
+    #[test]
+    fn submit_enqueues_idle() {
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 3600);
+        assert_eq!(s.idle_count(), 1);
+        assert_eq!(s.job(id).state, JobState::Idle);
+        assert_eq!(s.stats.submitted, 1);
+    }
+
+    #[test]
+    fn full_lifecycle_goodput() {
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 3600);
+        s.start(id, slot(1), 100);
+        assert_eq!(s.running_count(), 1);
+        assert_eq!(s.slot_of(id), Some(slot(1)));
+        s.complete(id, 3700);
+        assert_eq!(s.job(id).state, JobState::Completed);
+        assert_eq!(s.job(id).goodput_s, 3600);
+        assert_eq!(s.stats.goodput_s, 3600);
+        assert_eq!(s.stats.flops_done, 1e15);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn interrupt_accrues_badput_and_requeues() {
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 3600);
+        s.start(id, slot(1), 0);
+        s.interrupt(id, 1800); // preempted halfway
+        assert_eq!(s.job(id).state, JobState::Idle);
+        assert_eq!(s.job(id).badput_s, 1800);
+        assert_eq!(s.idle_count(), 1);
+        assert_eq!(s.stats.interrupted, 1);
+        // second attempt succeeds
+        s.start(id, slot(2), 2000);
+        s.complete(id, 5600);
+        assert_eq!(s.job(id).attempts, 2);
+        assert_eq!(s.job(id).goodput_s, 3600);
+        assert_eq!(s.job(id).badput_s, 1800);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn idle_order_is_by_job_id() {
+        let mut s = Schedd::new();
+        let a = submit(&mut s, 60);
+        let b = submit(&mut s, 60);
+        let c = submit(&mut s, 60);
+        assert_eq!(s.idle_jobs().collect::<Vec<_>>(), vec![a, b, c]);
+        s.start(b, slot(1), 0);
+        assert_eq!(s.idle_jobs().collect::<Vec<_>>(), vec![a, c]);
+        // a requeued job resumes its JobId position, ahead of younger jobs
+        s.interrupt(b, 10);
+        assert_eq!(s.idle_jobs().collect::<Vec<_>>(), vec![a, b, c]);
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 60);
+        s.start(id, slot(1), 0);
+        // simulate corruption: force state without updating queues
+        s.jobs[0].state = JobState::Idle;
+        assert!(s.check_invariants().is_err());
+    }
+}

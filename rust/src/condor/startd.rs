@@ -1,0 +1,209 @@
+//! The startd: per-worker agent advertising a GPU slot and running jobs.
+//!
+//! Every cloud instance (and every on-prem GPU node) runs one startd with
+//! a single T4 slot.  The startd holds a long-lived management connection
+//! back to the central manager / schedd; on clouds that connection
+//! traverses the region NAT — which is where the §IV Azure incident
+//! lives: the default OSG keepalive (300 s) exceeded Azure's NAT idle
+//! timeout (240 s), so the claim connection silently died between
+//! keepalives and the running job was lost, every time.
+
+use super::classad::{parse, Ad, Expr};
+use super::job::JobId;
+use crate::cloud::{InstanceId, Provider};
+use crate::net::{Connection, NatProfile};
+use crate::sim::SimTime;
+
+/// Identifies a slot across cloud and on-prem resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SlotId {
+    Cloud(InstanceId),
+    OnPrem(u32),
+}
+
+impl std::fmt::Display for SlotId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlotId::Cloud(id) => write!(f, "slot1@{id}"),
+            SlotId::OnPrem(i) => write!(f, "slot1@onprem-{i}"),
+        }
+    }
+}
+
+/// An active claim: a job bound to this slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Claim {
+    pub job: JobId,
+    pub started_at: SimTime,
+    pub finish_at: SimTime,
+}
+
+/// The worker agent.
+#[derive(Debug)]
+pub struct Startd {
+    pub slot: SlotId,
+    pub ad: Ad,
+    pub start_expr: Expr,
+    pub conn: Connection,
+    pub keepalive_s: u64,
+    pub next_keepalive: SimTime,
+    pub claim: Option<Claim>,
+    /// When a dropped connection may be retried.
+    pub reconnect_at: Option<SimTime>,
+    /// Pool provenance tag ("cloud" / "onprem") — Fig 2 accounting.
+    pub pool_tag: &'static str,
+    pub provider: Option<Provider>,
+}
+
+/// The default OSG worker configuration of the paper's first attempt:
+/// 5-minute keepalives (fails on Azure's default NAT).
+pub const OSG_DEFAULT_KEEPALIVE_S: u64 = 300;
+/// The fixed configuration deployed after the incident.
+pub const TUNED_KEEPALIVE_S: u64 = 60;
+/// Reconnect backoff after a dropped management connection.
+pub const RECONNECT_DELAY_S: u64 = 30;
+
+/// Build the machine ad for a single-T4 worker.
+pub fn t4_machine_ad(
+    slot: SlotId,
+    pool_tag: &'static str,
+    provider: Option<Provider>,
+    region_name: &str,
+) -> Ad {
+    let mut ad = Ad::new();
+    ad.set_str("machine", &slot.to_string())
+        .set_bool("hasgpu", true)
+        .set_str("gpudevicename", "Tesla T4")
+        .set_float("cudacapability", 7.5)
+        .set_int("totalgpus", 1)
+        .set_int("memory", 16384)
+        .set_int("cpus", 4)
+        .set_str("pool", pool_tag)
+        .set_str("region", region_name);
+    if let Some(p) = provider {
+        ad.set_str("provider", p.name());
+    }
+    ad
+}
+
+/// The pool's START policy: the CE only admits IceCube jobs, and the
+/// glideins inherit that restriction.
+pub fn icecube_start_expr() -> Expr {
+    parse("TARGET.Owner == \"icecube\"").expect("static expression parses")
+}
+
+impl Startd {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        slot: SlotId,
+        pool_tag: &'static str,
+        provider: Option<Provider>,
+        region_name: &str,
+        nat: NatProfile,
+        keepalive_s: u64,
+        now: SimTime,
+    ) -> Self {
+        Startd {
+            slot,
+            ad: t4_machine_ad(slot, pool_tag, provider, region_name),
+            start_expr: icecube_start_expr(),
+            conn: Connection::establish(now, nat),
+            keepalive_s,
+            next_keepalive: now + keepalive_s,
+            claim: None,
+            reconnect_at: None,
+            pool_tag,
+            provider,
+        }
+    }
+
+    pub fn is_unclaimed(&self) -> bool {
+        self.claim.is_none() && self.conn.alive
+    }
+
+    /// Claim the slot for a job.
+    pub fn claim_for(&mut self, job: JobId, now: SimTime, runtime_s: u64) {
+        debug_assert!(self.claim.is_none(), "double claim on {}", self.slot);
+        self.claim = Some(Claim {
+            job,
+            started_at: now,
+            finish_at: now + runtime_s,
+        });
+    }
+
+    /// Release the claim (completion or interruption).
+    pub fn release(&mut self) -> Option<Claim> {
+        self.claim.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::SendOutcome;
+
+    fn startd(keepalive: u64, nat: NatProfile) -> Startd {
+        Startd::new(
+            SlotId::Cloud(InstanceId(1)),
+            "cloud",
+            Some(Provider::Azure),
+            "azure/eastus",
+            nat,
+            keepalive,
+            0,
+        )
+    }
+
+    #[test]
+    fn machine_ad_matches_gpu_requirements() {
+        let s = startd(60, NatProfile::azure_default());
+        let req = super::super::job::gpu_requirements();
+        let job_ad = super::super::job::gpu_job_ad("icecube", 8192);
+        assert!(req.matches(&job_ad, Some(&s.ad)));
+    }
+
+    #[test]
+    fn start_expr_admits_only_icecube() {
+        let s = startd(60, NatProfile::azure_default());
+        let ice = super::super::job::gpu_job_ad("icecube", 8192);
+        let cms = super::super::job::gpu_job_ad("cms", 8192);
+        assert!(s.start_expr.matches(&s.ad, Some(&ice)));
+        assert!(!s.start_expr.matches(&s.ad, Some(&cms)));
+    }
+
+    #[test]
+    fn claim_lifecycle() {
+        let mut s = startd(60, NatProfile::azure_default());
+        assert!(s.is_unclaimed());
+        s.claim_for(JobId(5), 100, 3600);
+        assert!(!s.is_unclaimed());
+        let c = s.release().unwrap();
+        assert_eq!(c.job, JobId(5));
+        assert_eq!(c.finish_at, 3700);
+        assert!(s.is_unclaimed());
+    }
+
+    #[test]
+    fn osg_default_keepalive_dies_on_azure_nat() {
+        // one full keepalive period at the OSG default: mapping is gone
+        let mut s = startd(OSG_DEFAULT_KEEPALIVE_S, NatProfile::azure_default());
+        let outcome = s.conn.try_send(s.next_keepalive);
+        assert_eq!(outcome, SendOutcome::DroppedByNat);
+    }
+
+    #[test]
+    fn tuned_keepalive_survives_azure_nat() {
+        let mut s = startd(TUNED_KEEPALIVE_S, NatProfile::azure_default());
+        let mut t = 0;
+        for _ in 0..100 {
+            t += TUNED_KEEPALIVE_S;
+            assert_eq!(s.conn.try_send(t), SendOutcome::Delivered);
+        }
+    }
+
+    #[test]
+    fn slot_display() {
+        assert_eq!(SlotId::Cloud(InstanceId(3)).to_string(), "slot1@vm-3");
+        assert_eq!(SlotId::OnPrem(7).to_string(), "slot1@onprem-7");
+    }
+}

@@ -1,0 +1,319 @@
+//! Campaign configuration: defaults that encode the paper's exercise,
+//! overridable from a TOML file and CLI flags.
+
+use crate::sim::{SimTime, DAY, HOUR, MINUTE};
+use crate::util::json::Json;
+use crate::util::toml;
+use crate::workload::{GeneratorConfig, OnPremConfig};
+
+/// One step of the operators' ramp plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampStep {
+    /// Desired total cloud GPUs during this step.
+    pub target: u32,
+    /// How long to hold before advancing.
+    pub hold_s: SimTime,
+}
+
+/// A scheduled network outage of the provider hosting the CE.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutageSpec {
+    pub at_s: SimTime,
+    pub duration_s: SimTime,
+}
+
+/// Provider preference weights (aws, gcp, azure order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProviderWeights {
+    pub aws: f64,
+    pub gcp: f64,
+    pub azure: f64,
+}
+
+/// Target distribution policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyMode {
+    /// Fixed provider weights (the paper's Azure-favoring choice).
+    Fixed(ProviderWeights),
+    /// Adapt weights to observed price and preemption rates.
+    Adaptive,
+}
+
+/// Real-compute sampling: execute the AOT photon artifact for every Nth
+/// completed job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealComputeConfig {
+    pub variant: String,
+    pub every_n_completions: u64,
+}
+
+/// Everything the campaign runner needs.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub seed: u64,
+    pub duration_s: SimTime,
+    pub tick_s: u64,
+    pub sample_every_s: u64,
+    /// Group/ledger/target reconciliation period.
+    pub control_period_s: u64,
+    pub negotiation_period_s: u64,
+
+    pub budget_usd: f64,
+    pub alert_thresholds: Vec<f64>,
+    /// Non-instance costs (egress, disks, the CE VM) as a fraction of
+    /// instance spend — the gap between GPU-hours x price and the paper's
+    /// "all included" $58k.
+    pub overhead_fraction: f64,
+    /// Stop provisioning when remaining budget falls below this fraction.
+    pub budget_reserve_fraction: f64,
+    /// Resume after an outage at `post_outage_target` if the remaining
+    /// budget fraction is at or below this (the paper's 1k-GPU decision).
+    pub low_budget_resume_fraction: f64,
+    pub post_outage_target: u32,
+
+    /// Cloud worker keepalive (60 s = the post-incident tuned value;
+    /// set 300 to re-live §IV).
+    pub keepalive_s: u64,
+
+    pub ramp: Vec<RampStep>,
+    pub outage: Option<OutageSpec>,
+    pub policy: PolicyMode,
+
+    pub onprem: OnPremConfig,
+    pub generator: GeneratorConfig,
+    /// fp32 FLOPs per photon bunch (overridden from artifact metadata
+    /// when real compute is enabled).
+    pub flops_per_bunch: f64,
+    pub real_compute: Option<RealComputeConfig>,
+}
+
+impl Default for CampaignConfig {
+    /// The paper's two-week exercise.
+    fn default() -> Self {
+        CampaignConfig {
+            seed: 20210921,
+            duration_s: 14 * DAY,
+            tick_s: MINUTE,
+            sample_every_s: 10 * MINUTE,
+            control_period_s: 5 * MINUTE,
+            negotiation_period_s: 5 * MINUTE,
+            budget_usd: 58_000.0,
+            alert_thresholds: vec![0.75, 0.5, 0.25, 0.1],
+            overhead_fraction: 0.18,
+            budget_reserve_fraction: 0.02,
+            low_budget_resume_fraction: 0.25,
+            post_outage_target: 1000,
+            keepalive_s: 60,
+            ramp: vec![
+                // initial validation with a small fleet, then the paper's
+                // 400 / 900 / 1.2k / 1.6k / 2k staircase
+                RampStep { target: 50, hold_s: DAY },
+                RampStep { target: 400, hold_s: 2 * DAY },
+                RampStep { target: 900, hold_s: 2 * DAY },
+                RampStep { target: 1200, hold_s: 2 * DAY },
+                RampStep { target: 1600, hold_s: 2 * DAY },
+                RampStep { target: 2000, hold_s: 30 * DAY }, // until outage
+            ],
+            outage: Some(OutageSpec {
+                at_s: 11 * DAY + 6 * HOUR,
+                duration_s: 2 * HOUR,
+            }),
+            policy: PolicyMode::Fixed(ProviderWeights {
+                aws: 0.15,
+                gcp: 0.15,
+                azure: 0.70,
+            }),
+            onprem: OnPremConfig::default(),
+            generator: GeneratorConfig::default(),
+            flops_per_bunch: 1.2e10,
+            real_compute: None,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// Apply overrides from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = doc.get_path(&["seed"]).and_then(Json::as_u64) {
+            self.seed = v;
+        }
+        if let Some(v) = doc.get_path(&["duration_days"]).and_then(Json::as_f64) {
+            self.duration_s = (v * DAY as f64) as SimTime;
+        }
+        if let Some(v) = doc.get_path(&["keepalive_s"]).and_then(Json::as_u64) {
+            self.keepalive_s = v;
+        }
+        if let Some(v) = doc.get_path(&["budget", "total_usd"]).and_then(Json::as_f64)
+        {
+            self.budget_usd = v;
+        }
+        if let Some(v) =
+            doc.get_path(&["budget", "overhead_fraction"]).and_then(Json::as_f64)
+        {
+            self.overhead_fraction = v;
+        }
+        if let Some(arr) =
+            doc.get_path(&["budget", "alerts"]).and_then(Json::as_arr)
+        {
+            self.alert_thresholds =
+                arr.iter().filter_map(Json::as_f64).collect();
+        }
+        if let Some(v) = doc.get_path(&["onprem", "slots"]).and_then(Json::as_u64)
+        {
+            self.onprem.slots = v as u32;
+        }
+        if let Some(arr) = doc.get_path(&["ramp", "targets"]).and_then(Json::as_arr)
+        {
+            let holds = doc
+                .get_path(&["ramp", "hold_days"])
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect::<Vec<_>>())
+                .unwrap_or_default();
+            self.ramp = arr
+                .iter()
+                .filter_map(Json::as_u64)
+                .enumerate()
+                .map(|(i, t)| RampStep {
+                    target: t as u32,
+                    hold_s: (holds.get(i).copied().unwrap_or(2.0) * DAY as f64)
+                        as SimTime,
+                })
+                .collect();
+        }
+        if let Some(at) = doc.get_path(&["outage", "at_days"]).and_then(Json::as_f64)
+        {
+            let dur = doc
+                .get_path(&["outage", "duration_hours"])
+                .and_then(Json::as_f64)
+                .unwrap_or(2.0);
+            self.outage = Some(OutageSpec {
+                at_s: (at * DAY as f64) as SimTime,
+                duration_s: (dur * HOUR as f64) as SimTime,
+            });
+        }
+        if doc.get_path(&["outage", "disabled"]).and_then(Json::as_bool)
+            == Some(true)
+        {
+            self.outage = None;
+        }
+        if let Some(mode) = doc.get_path(&["policy", "mode"]).and_then(Json::as_str)
+        {
+            self.policy = match mode {
+                "adaptive" => PolicyMode::Adaptive,
+                "fixed" => self.policy,
+                other => return Err(format!("unknown policy mode '{other}'")),
+            };
+        }
+        if let (Some(aws), Some(gcp), Some(azure)) = (
+            doc.get_path(&["policy", "aws"]).and_then(Json::as_f64),
+            doc.get_path(&["policy", "gcp"]).and_then(Json::as_f64),
+            doc.get_path(&["policy", "azure"]).and_then(Json::as_f64),
+        ) {
+            self.policy = PolicyMode::Fixed(ProviderWeights { aws, gcp, azure });
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file over the defaults.
+    pub fn from_toml_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        let doc = toml::parse(&text).map_err(|e| e.to_string())?;
+        let mut cfg = CampaignConfig::default();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Total ticks in the campaign.
+    pub fn num_ticks(&self) -> u64 {
+        self.duration_s / self.tick_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_encode_the_paper() {
+        let c = CampaignConfig::default();
+        assert_eq!(c.duration_s, 14 * DAY);
+        assert_eq!(c.budget_usd, 58_000.0);
+        let targets: Vec<u32> = c.ramp.iter().map(|s| s.target).collect();
+        assert_eq!(targets, vec![50, 400, 900, 1200, 1600, 2000]);
+        assert!(c.outage.is_some());
+        match c.policy {
+            PolicyMode::Fixed(w) => assert!(w.azure > w.aws && w.azure > w.gcp),
+            _ => panic!("default policy is fixed Azure-favoring"),
+        }
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = toml::parse(
+            r#"
+seed = 7
+duration_days = 2.0
+keepalive_s = 300
+
+[budget]
+total_usd = 1000.0
+alerts = [0.5]
+
+[ramp]
+targets = [10, 20]
+hold_days = [0.5, 1.0]
+
+[outage]
+at_days = 1.0
+duration_hours = 3.0
+
+[policy]
+aws = 0.2
+gcp = 0.2
+azure = 0.6
+"#,
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.duration_s, 2 * DAY);
+        assert_eq!(c.keepalive_s, 300);
+        assert_eq!(c.budget_usd, 1000.0);
+        assert_eq!(c.alert_thresholds, vec![0.5]);
+        assert_eq!(c.ramp.len(), 2);
+        assert_eq!(c.ramp[0], RampStep { target: 10, hold_s: DAY / 2 });
+        assert_eq!(
+            c.outage,
+            Some(OutageSpec { at_s: DAY, duration_s: 3 * HOUR })
+        );
+        match c.policy {
+            PolicyMode::Fixed(w) => assert_eq!(w.azure, 0.6),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn outage_can_be_disabled() {
+        let doc = toml::parse("[outage]\ndisabled = true").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.outage.is_none());
+    }
+
+    #[test]
+    fn adaptive_policy_selectable() {
+        let doc = toml::parse("[policy]\nmode = \"adaptive\"").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.policy, PolicyMode::Adaptive);
+    }
+
+    #[test]
+    fn bad_policy_mode_rejected() {
+        let doc = toml::parse("[policy]\nmode = \"nope\"").unwrap();
+        let mut c = CampaignConfig::default();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+}

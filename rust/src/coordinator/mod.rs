@@ -1,0 +1,15 @@
+//! The campaign coordinator: the paper's operational layer.
+//!
+//! Ramp plan (staged 400/900/1.2k/1.6k/2k scale-up), provider-preference
+//! target distribution, outage response, budget-aware resume, and the
+//! campaign loop that composes every substrate.
+
+pub mod campaign;
+pub mod outage;
+pub mod policy;
+pub mod rampplan;
+
+pub use campaign::{Campaign, CampaignResult, RealComputeStats};
+pub use outage::{OutageState, OutageTransition};
+pub use policy::{distribute, ObservedRates};
+pub use rampplan::RampPlan;

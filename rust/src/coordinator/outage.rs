@@ -1,0 +1,91 @@
+//! Outage injection: the CE-host provider network failure of §IV.
+
+use crate::config::OutageSpec;
+use crate::sim::SimTime;
+
+/// Phase transitions the campaign must react to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutageTransition {
+    None,
+    /// The outage just began at this tick.
+    Began,
+    /// The outage just ended at this tick.
+    Ended,
+}
+
+/// Tracks the scheduled outage window.
+#[derive(Debug, Clone)]
+pub struct OutageState {
+    spec: Option<OutageSpec>,
+    active: bool,
+    /// True once the outage has come and gone.
+    pub occurred: bool,
+}
+
+impl OutageState {
+    pub fn new(spec: Option<OutageSpec>) -> Self {
+        OutageState { spec, active: false, occurred: false }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Advance to `now`; returns the transition (if any) at this tick.
+    pub fn advance(&mut self, now: SimTime) -> OutageTransition {
+        let Some(spec) = self.spec else {
+            return OutageTransition::None;
+        };
+        let end = spec.at_s + spec.duration_s;
+        if !self.active && !self.occurred && now >= spec.at_s && now < end {
+            self.active = true;
+            return OutageTransition::Began;
+        }
+        if self.active && now >= end {
+            self.active = false;
+            self.occurred = true;
+            return OutageTransition::Ended;
+        }
+        OutageTransition::None
+    }
+
+    pub fn window(&self) -> Option<(SimTime, SimTime)> {
+        self.spec.map(|s| (s.at_s, s.at_s + s.duration_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut o = OutageState::new(Some(OutageSpec { at_s: 100, duration_s: 50 }));
+        assert_eq!(o.advance(0), OutageTransition::None);
+        assert_eq!(o.advance(99), OutageTransition::None);
+        assert_eq!(o.advance(100), OutageTransition::Began);
+        assert!(o.is_active());
+        assert_eq!(o.advance(120), OutageTransition::None);
+        assert_eq!(o.advance(150), OutageTransition::Ended);
+        assert!(!o.is_active());
+        assert!(o.occurred);
+        // does not re-trigger
+        assert_eq!(o.advance(200), OutageTransition::None);
+    }
+
+    #[test]
+    fn none_spec_never_fires() {
+        let mut o = OutageState::new(None);
+        for t in 0..1000 {
+            assert_eq!(o.advance(t), OutageTransition::None);
+        }
+    }
+
+    #[test]
+    fn coarse_ticks_still_catch_window() {
+        // tick lands inside the window, end caught later
+        let mut o = OutageState::new(Some(OutageSpec { at_s: 100, duration_s: 50 }));
+        assert_eq!(o.advance(130), OutageTransition::Began);
+        assert_eq!(o.advance(400), OutageTransition::Ended);
+    }
+}

@@ -1,0 +1,219 @@
+//! Provider-preference policy: distribute a global GPU target across
+//! regions.
+//!
+//! The paper's operators "heavily favored Azure during most of the
+//! exercise" after validation showed it had the lowest spot price
+//! ($2.9/T4-day) *and* the most spare capacity / lowest preemption.
+//! `PolicyMode::Fixed` encodes that choice; `PolicyMode::Adaptive`
+//! derives weights from observed price and preemption — the ablation in
+//! DESIGN.md §8.
+
+use crate::cloud::{CloudSim, Provider, RegionId};
+use crate::config::{PolicyMode, ProviderWeights};
+use std::collections::BTreeMap;
+
+/// Distribute `total` GPUs across regions.
+///
+/// Within a provider, regions receive shares proportional to their mean
+/// market depth (what an operator learns during validation), with
+/// largest-remainder rounding so the provider total is exact.
+pub fn distribute(
+    total: u32,
+    fleet: &CloudSim,
+    mode: &PolicyMode,
+    observed: Option<&ObservedRates>,
+) -> BTreeMap<RegionId, u32> {
+    let weights = match mode {
+        PolicyMode::Fixed(w) => *w,
+        PolicyMode::Adaptive => adaptive_weights(fleet, observed),
+    };
+    let norm = weights.aws + weights.gcp + weights.azure;
+    let mut out = BTreeMap::new();
+    if total == 0 || norm <= 0.0 {
+        for (rid, _) in fleet.regions() {
+            out.insert(rid, 0);
+        }
+        return out;
+    }
+    for provider in Provider::ALL {
+        let w = match provider {
+            Provider::Aws => weights.aws,
+            Provider::Gcp => weights.gcp,
+            Provider::Azure => weights.azure,
+        } / norm;
+        let provider_total = (total as f64 * w).round() as u32;
+        let regions: Vec<(RegionId, f64)> = fleet
+            .regions()
+            .filter(|(_, r)| r.spec().provider == provider)
+            .map(|(rid, r)| (rid, r.spec().base_capacity))
+            .collect();
+        let cap_sum: f64 = regions.iter().map(|(_, c)| c).sum();
+        // largest-remainder apportionment
+        let mut assigned = 0u32;
+        let mut fracs: Vec<(RegionId, u32, f64)> = regions
+            .iter()
+            .map(|(rid, cap)| {
+                let share = provider_total as f64 * cap / cap_sum.max(1.0);
+                let base = share.floor() as u32;
+                (*rid, base, share - base as f64)
+            })
+            .collect();
+        assigned += fracs.iter().map(|(_, b, _)| b).sum::<u32>();
+        fracs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        let mut remainder = provider_total.saturating_sub(assigned);
+        for (rid, base, _) in fracs {
+            let extra = if remainder > 0 {
+                remainder -= 1;
+                1
+            } else {
+                0
+            };
+            out.insert(rid, base + extra);
+        }
+    }
+    out
+}
+
+/// Observed per-provider operating rates (filled in by the campaign from
+/// fleet statistics during validation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObservedRates {
+    /// Preemptions per instance-hour, per provider (aws, gcp, azure).
+    pub preempt_per_hour: [f64; 3],
+}
+
+/// Adaptive weights: favor cheap and stable providers.
+///
+/// weight ∝ (1 / price_per_day) * exp(-k * preempt_rate); with no
+/// observations this reduces to cheapest-first.
+fn adaptive_weights(
+    fleet: &CloudSim,
+    observed: Option<&ObservedRates>,
+) -> ProviderWeights {
+    const K: f64 = 60.0; // penalty steepness per (preempt/instance-hour)
+    let mut price = [0.0f64; 3];
+    let mut count = [0u32; 3];
+    for (_, r) in fleet.regions() {
+        let i = provider_index(r.spec().provider);
+        price[i] += r.spec().price_per_day();
+        count[i] += 1;
+    }
+    let mut w = [0.0f64; 3];
+    for i in 0..3 {
+        if count[i] == 0 {
+            continue;
+        }
+        let avg_price = price[i] / count[i] as f64;
+        let penalty = observed
+            .map(|o| (-K * o.preempt_per_hour[i]).exp())
+            .unwrap_or(1.0);
+        w[i] = penalty / avg_price;
+    }
+    ProviderWeights { aws: w[0], gcp: w[1], azure: w[2] }
+}
+
+pub fn provider_index(p: Provider) -> usize {
+    match p {
+        Provider::Aws => 0,
+        Provider::Gcp => 1,
+        Provider::Azure => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::providers;
+    use crate::util::rng::Rng;
+
+    fn fleet() -> CloudSim {
+        CloudSim::new(providers::all_regions(), Rng::new(1))
+    }
+
+    fn paper_mode() -> PolicyMode {
+        PolicyMode::Fixed(ProviderWeights { aws: 0.15, gcp: 0.15, azure: 0.7 })
+    }
+
+    fn provider_total(
+        fleet: &CloudSim,
+        targets: &BTreeMap<RegionId, u32>,
+        p: Provider,
+    ) -> u32 {
+        fleet
+            .regions()
+            .filter(|(_, r)| r.spec().provider == p)
+            .map(|(rid, _)| targets.get(&rid).copied().unwrap_or(0))
+            .sum()
+    }
+
+    #[test]
+    fn totals_are_exact() {
+        let f = fleet();
+        let t = distribute(2000, &f, &paper_mode(), None);
+        let sum: u32 = t.values().sum();
+        assert_eq!(sum, 2000);
+    }
+
+    #[test]
+    fn azure_gets_the_lions_share() {
+        let f = fleet();
+        let t = distribute(2000, &f, &paper_mode(), None);
+        let az = provider_total(&f, &t, Provider::Azure);
+        let aws = provider_total(&f, &t, Provider::Aws);
+        let gcp = provider_total(&f, &t, Provider::Gcp);
+        assert_eq!(az, 1400);
+        assert_eq!(aws, 300);
+        assert_eq!(gcp, 300);
+    }
+
+    #[test]
+    fn regions_weighted_by_depth() {
+        let f = fleet();
+        let t = distribute(2000, &f, &paper_mode(), None);
+        // azure/eastus (cap 420) must get more than azure/australiaeast (100)
+        let eastus = f.regions().find(|(_, r)| r.spec().name == "azure/eastus").unwrap().0;
+        let aus = f
+            .regions()
+            .find(|(_, r)| r.spec().name == "azure/australiaeast")
+            .unwrap()
+            .0;
+        assert!(t[&eastus] > t[&aus] * 2);
+    }
+
+    #[test]
+    fn zero_total_zeroes_everything() {
+        let f = fleet();
+        let t = distribute(0, &f, &paper_mode(), None);
+        assert!(t.values().all(|v| *v == 0));
+        assert_eq!(t.len(), f.num_regions());
+    }
+
+    #[test]
+    fn adaptive_prefers_cheap_without_observations() {
+        let f = fleet();
+        let t = distribute(1000, &f, &PolicyMode::Adaptive, None);
+        let az = provider_total(&f, &t, Provider::Azure);
+        let aws = provider_total(&f, &t, Provider::Aws);
+        assert!(az > aws, "azure ({az}) cheaper than aws ({aws})");
+    }
+
+    #[test]
+    fn adaptive_penalizes_preempting_provider() {
+        let f = fleet();
+        // observation: azure preempts heavily, aws is calm
+        let obs = ObservedRates { preempt_per_hour: [0.0, 0.0, 0.05] };
+        let t = distribute(1000, &f, &PolicyMode::Adaptive, Some(&obs));
+        let az = provider_total(&f, &t, Provider::Azure);
+        let aws = provider_total(&f, &t, Provider::Aws);
+        assert!(aws > az, "aws ({aws}) must beat unstable azure ({az})");
+    }
+
+    #[test]
+    fn deterministic() {
+        let f = fleet();
+        assert_eq!(
+            distribute(777, &f, &paper_mode(), None),
+            distribute(777, &f, &paper_mode(), None)
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! The operators' ramp plan: staged scale-up with holds.
+//!
+//! §IV: "we ramped up in steps to 400, 900, 1.2k, 1.6k and finally to 2k
+//! GPUs, sustaining at each step for extended periods of time to validate
+//! the stability of the system before moving higher."
+
+use crate::config::RampStep;
+use crate::sim::SimTime;
+
+/// Evaluates the ramp plan against the clock.
+#[derive(Debug, Clone)]
+pub struct RampPlan {
+    steps: Vec<RampStep>,
+}
+
+impl RampPlan {
+    pub fn new(steps: Vec<RampStep>) -> Self {
+        assert!(!steps.is_empty(), "ramp plan needs at least one step");
+        RampPlan { steps }
+    }
+
+    /// Desired total at time `t` (the last step holds indefinitely).
+    pub fn target_at(&self, t: SimTime) -> u32 {
+        let mut elapsed: SimTime = 0;
+        for step in &self.steps {
+            elapsed += step.hold_s;
+            if t < elapsed {
+                return step.target;
+            }
+        }
+        self.steps.last().unwrap().target
+    }
+
+    /// Index of the active step at `t`.
+    pub fn step_index_at(&self, t: SimTime) -> usize {
+        let mut elapsed: SimTime = 0;
+        for (i, step) in self.steps.iter().enumerate() {
+            elapsed += step.hold_s;
+            if t < elapsed {
+                return i;
+            }
+        }
+        self.steps.len() - 1
+    }
+
+    /// Times at which the target changes (for figure annotations).
+    pub fn transitions(&self) -> Vec<(SimTime, u32)> {
+        let mut out = Vec::new();
+        let mut elapsed: SimTime = 0;
+        for step in &self.steps {
+            out.push((elapsed, step.target));
+            elapsed += step.hold_s;
+        }
+        out
+    }
+
+    pub fn peak(&self) -> u32 {
+        self.steps.iter().map(|s| s.target).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CampaignConfig;
+    use crate::sim::DAY;
+
+    fn paper_plan() -> RampPlan {
+        RampPlan::new(CampaignConfig::default().ramp)
+    }
+
+    #[test]
+    fn staircase_matches_paper() {
+        let p = paper_plan();
+        assert_eq!(p.target_at(0), 50);
+        assert_eq!(p.target_at(DAY + 1), 400);
+        assert_eq!(p.target_at(3 * DAY + 1), 900);
+        assert_eq!(p.target_at(5 * DAY + 1), 1200);
+        assert_eq!(p.target_at(7 * DAY + 1), 1600);
+        assert_eq!(p.target_at(9 * DAY + 1), 2000);
+        assert_eq!(p.target_at(13 * DAY), 2000);
+        assert_eq!(p.peak(), 2000);
+    }
+
+    #[test]
+    fn last_step_holds_forever() {
+        let p = paper_plan();
+        assert_eq!(p.target_at(SimTime::MAX / 2), 2000);
+    }
+
+    #[test]
+    fn step_boundaries_exact() {
+        let p = RampPlan::new(vec![
+            RampStep { target: 10, hold_s: 100 },
+            RampStep { target: 20, hold_s: 100 },
+        ]);
+        assert_eq!(p.target_at(99), 10);
+        assert_eq!(p.target_at(100), 20);
+        assert_eq!(p.step_index_at(99), 0);
+        assert_eq!(p.step_index_at(100), 1);
+    }
+
+    #[test]
+    fn transitions_list() {
+        let p = paper_plan();
+        let tr = p.transitions();
+        assert_eq!(tr[0], (0, 50));
+        assert_eq!(tr[1], (DAY, 400));
+        assert_eq!(tr.len(), 6);
+    }
+}

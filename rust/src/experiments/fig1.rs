@@ -1,0 +1,187 @@
+//! EXP-F1 — Fig 1: the monitoring snapshot of provisioned cloud GPUs.
+//!
+//! Paper shape: staged ramp 400 → 900 → 1.2k → 1.6k → 2k with holds, a
+//! cliff to ~0 at the CE-host outage on day ~11, and a resume at 1k GPUs
+//! for the remaining days.
+
+use crate::coordinator::CampaignResult;
+use crate::monitoring::{line_chart, TimeSeries};
+use crate::sim::DAY;
+use std::path::Path;
+
+/// Extracted Fig-1 data.
+pub struct Fig1 {
+    pub total: TimeSeries,
+    pub azure: TimeSeries,
+    pub gcp: TimeSeries,
+    pub aws: TimeSeries,
+    pub transitions: Vec<(u64, u32)>,
+    pub outage_window: Option<(u64, u64)>,
+}
+
+/// Shape checks the reproduction must satisfy (who wins / what shape,
+/// not absolute numbers).
+pub struct Fig1Checks {
+    pub peak: f64,
+    pub collapse_min: f64,
+    pub resume_level: f64,
+    pub ramp_monotonic_until_peak: bool,
+}
+
+pub fn extract(result: &CampaignResult) -> Fig1 {
+    Fig1 {
+        total: result.monitor.get("gpus.total").cloned().unwrap_or_default(),
+        azure: result.monitor.get("gpus.azure").cloned().unwrap_or_default(),
+        gcp: result.monitor.get("gpus.gcp").cloned().unwrap_or_default(),
+        aws: result.monitor.get("gpus.aws").cloned().unwrap_or_default(),
+        transitions: result.ramp_transitions.clone(),
+        outage_window: result.outage_window,
+    }
+}
+
+impl Fig1 {
+    pub fn checks(&self) -> Fig1Checks {
+        let peak = self.total.max();
+        let (collapse_min, resume_level) = match self.outage_window {
+            Some((start, end)) => {
+                let collapse = self
+                    .total
+                    .points
+                    .iter()
+                    .filter(|(t, _)| *t >= start && *t <= end + 1800)
+                    .map(|(_, v)| *v)
+                    .fold(f64::INFINITY, f64::min);
+                let resume = self
+                    .total
+                    .points
+                    .iter()
+                    .filter(|(t, _)| *t > end + DAY / 2)
+                    .map(|(_, v)| *v)
+                    .fold(0.0f64, f64::max);
+                (collapse, resume)
+            }
+            None => (f64::NAN, f64::NAN),
+        };
+        // daily maxima must be non-decreasing until the peak day
+        let peak_t = self
+            .total
+            .points
+            .iter()
+            .find(|(_, v)| *v >= peak)
+            .map(|(t, _)| *t)
+            .unwrap_or(0);
+        let mut daily_max = vec![0.0f64; (peak_t / DAY + 1) as usize];
+        for &(t, v) in &self.total.points {
+            if t <= peak_t {
+                let d = (t / DAY) as usize;
+                daily_max[d] = daily_max[d].max(v);
+            }
+        }
+        let ramp_monotonic_until_peak =
+            daily_max.windows(2).all(|w| w[1] >= w[0] * 0.85);
+        Fig1Checks { peak, collapse_min, resume_level, ramp_monotonic_until_peak }
+    }
+
+    /// ASCII rendition of the monitoring snapshot.
+    pub fn chart(&self) -> String {
+        let mut out = line_chart(
+            "Fig 1 — provisioned cloud GPUs over the two-week exercise",
+            &[
+                ("total", &self.total),
+                ("azure", &self.azure),
+                ("gcp", &self.gcp),
+                ("aws", &self.aws),
+            ],
+            100,
+            20,
+        );
+        if let Some((s, e)) = self.outage_window {
+            out.push_str(&format!(
+                "  outage: day {:.2} → {:.2} (CE-host provider network failure)\n",
+                s as f64 / DAY as f64,
+                e as f64 / DAY as f64
+            ));
+        }
+        out.push_str("  ramp plan: ");
+        for (t, target) in &self.transitions {
+            out.push_str(&format!("d{:.1}->{} ", *t as f64 / DAY as f64, target));
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_s,total,azure,gcp,aws\n");
+        for (i, &(t, total)) in self.total.points.iter().enumerate() {
+            let g = |s: &TimeSeries| {
+                s.points.get(i).map(|(_, v)| *v).unwrap_or(f64::NAN)
+            };
+            out.push_str(&format!(
+                "{t},{total},{},{},{}\n",
+                g(&self.azure),
+                g(&self.gcp),
+                g(&self.aws)
+            ));
+        }
+        out
+    }
+}
+
+/// Run + write the full Fig-1 experiment into `out/fig1/`.
+pub fn write(result: &CampaignResult, out_root: &Path) -> std::io::Result<Fig1> {
+    let fig = extract(result);
+    let dir = super::exp_dir(out_root, "fig1")?;
+    super::write_output(&dir, "fig1.csv", &fig.to_csv())?;
+    super::write_output(&dir, "fig1.txt", &fig.chart())?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignConfig, OutageSpec, RampStep};
+    use crate::coordinator::Campaign;
+    use crate::sim::HOUR;
+
+    fn mini_result() -> CampaignResult {
+        let mut c = CampaignConfig::default();
+        c.duration_s = 2 * DAY;
+        c.ramp = vec![
+            RampStep { target: 20, hold_s: 6 * HOUR },
+            RampStep { target: 60, hold_s: 30 * DAY },
+        ];
+        c.outage = Some(OutageSpec { at_s: DAY, duration_s: 2 * HOUR });
+        c.post_outage_target = 30;
+        c.low_budget_resume_fraction = 1.1;
+        c.onprem.slots = 20;
+        c.generator.min_backlog = 100;
+        Campaign::new(c).run()
+    }
+
+    #[test]
+    fn fig1_shape_checks() {
+        let result = mini_result();
+        let fig = extract(&result);
+        let checks = fig.checks();
+        assert!(checks.peak >= 50.0, "peak={}", checks.peak);
+        assert!(checks.collapse_min <= 5.0, "collapse={}", checks.collapse_min);
+        assert!(
+            checks.resume_level > 20.0 && checks.resume_level < checks.peak,
+            "resume={}",
+            checks.resume_level
+        );
+        assert!(checks.ramp_monotonic_until_peak);
+    }
+
+    #[test]
+    fn chart_and_csv_render() {
+        let result = mini_result();
+        let fig = extract(&result);
+        let chart = fig.chart();
+        assert!(chart.contains("Fig 1"));
+        assert!(chart.contains("outage"));
+        let csv = fig.to_csv();
+        assert!(csv.starts_with("t_s,total,azure,gcp,aws"));
+        assert!(csv.lines().count() > 10);
+    }
+}

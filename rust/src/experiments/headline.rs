@@ -1,0 +1,228 @@
+//! EXP-T1 — the paper's in-text headline numbers, as a table.
+//!
+//! "The total cost of this exercise was approximately $58k, all included,
+//! which allowed us to deliver 16k GPU days or about 3.1 fp32 EFLOP hours
+//! of compute." Plus the per-provider price/stability table implied by
+//! §IV (Azure spot T4 at $2.9/day, lowest preemption, most capacity).
+
+use crate::cloud::Provider;
+use crate::coordinator::CampaignResult;
+use crate::osg::UsageAccounting;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// The reproduced headline table.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub total_cost_usd: f64,
+    pub gpu_days: f64,
+    pub eflop_hours: f64,
+    pub cost_per_eflop_hour: f64,
+    pub expansion_factor: f64,
+    pub jobs_completed: u64,
+    pub goodput_fraction: f64,
+    /// Per provider: (name, price $/T4-day, instance-hours, share,
+    /// preempts per instance-hour).
+    pub providers: Vec<(String, f64, f64, f64, f64)>,
+    pub alerts_fired: usize,
+}
+
+pub fn extract(result: &CampaignResult) -> Headline {
+    let gpu_hours = result.meter.total_instance_hours();
+    let eflop_hours = UsageAccounting::eflop_hours(gpu_hours);
+    let total_cost = result.ledger.total_spent();
+    let prices = [3.8, 3.5, 2.9]; // aws, gcp, azure $/T4-day
+    let providers = Provider::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let (_, preempts, hours) = result.provider_ops[i];
+            (
+                p.name().to_string(),
+                prices[i],
+                hours,
+                if gpu_hours > 0.0 { hours / gpu_hours } else { 0.0 },
+                if hours > 0.0 { preempts as f64 / hours } else { 0.0 },
+            )
+        })
+        .collect();
+    let good = result.schedd_stats.goodput_s as f64;
+    let bad = result.schedd_stats.badput_s as f64;
+    Headline {
+        total_cost_usd: total_cost,
+        gpu_days: gpu_hours / 24.0,
+        eflop_hours,
+        cost_per_eflop_hour: if eflop_hours > 0.0 {
+            total_cost / eflop_hours
+        } else {
+            f64::NAN
+        },
+        expansion_factor: result.usage.expansion_factor(),
+        jobs_completed: result.schedd_stats.completed,
+        goodput_fraction: if good + bad > 0.0 { good / (good + bad) } else { 1.0 },
+        providers,
+        alerts_fired: result.ledger.alerts().len(),
+    }
+}
+
+impl Headline {
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("T1 — headline numbers (paper vs measured shape)\n");
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12}\n",
+            "metric", "paper", "measured"
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.0}\n",
+            "total cost (USD)", "~58000", self.total_cost_usd
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.0}\n",
+            "GPU-days delivered", "~16000", self.gpu_days
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.2}\n",
+            "fp32 EFLOP-hours", "~3.1", self.eflop_hours
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.2}\n",
+            "GPU-hour expansion", "~2x", self.expansion_factor
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.0}\n",
+            "$ per EFLOP-hour", "~18700", self.cost_per_eflop_hour
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12}\n",
+            "jobs completed", "-", self.jobs_completed
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12.3}\n",
+            "goodput fraction", "-", self.goodput_fraction
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12}\n",
+            "CloudBank alerts fired", "-", self.alerts_fired
+        ));
+        out.push('\n');
+        out.push_str("per-provider (spot T4):\n");
+        out.push_str(&format!(
+            "{:<8} {:>10} {:>14} {:>8} {:>16}\n",
+            "provider", "$/T4-day", "inst-hours", "share", "preempts/inst-h"
+        ));
+        for (name, price, hours, share, preempt) in &self.providers {
+            out.push_str(&format!(
+                "{:<8} {:>10.2} {:>14.0} {:>7.1}% {:>16.4}\n",
+                name,
+                price,
+                hours,
+                share * 100.0,
+                preempt
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("total_cost_usd", Json::from(self.total_cost_usd));
+        o.set("gpu_days", Json::from(self.gpu_days));
+        o.set("eflop_hours", Json::from(self.eflop_hours));
+        o.set("cost_per_eflop_hour", Json::from(self.cost_per_eflop_hour));
+        o.set("expansion_factor", Json::from(self.expansion_factor));
+        o.set("jobs_completed", Json::from(self.jobs_completed));
+        o.set("goodput_fraction", Json::from(self.goodput_fraction));
+        o.set("alerts_fired", Json::from(self.alerts_fired));
+        let provs: Vec<Json> = self
+            .providers
+            .iter()
+            .map(|(name, price, hours, share, preempt)| {
+                let mut p = Json::obj();
+                p.set("provider", Json::from(name.as_str()));
+                p.set("price_per_t4_day", Json::from(*price));
+                p.set("instance_hours", Json::from(*hours));
+                p.set("share", Json::from(*share));
+                p.set("preempts_per_hour", Json::from(*preempt));
+                p
+            })
+            .collect();
+        o.set("providers", Json::Arr(provs));
+        o
+    }
+
+    /// Shape assertions the reproduction must satisfy.
+    pub fn check_shape(&self) -> Result<(), String> {
+        let azure = self.providers.iter().find(|p| p.0 == "azure").unwrap();
+        let aws = self.providers.iter().find(|p| p.0 == "aws").unwrap();
+        let gcp = self.providers.iter().find(|p| p.0 == "gcp").unwrap();
+        if !(azure.1 < aws.1 && azure.1 < gcp.1) {
+            return Err("azure must be cheapest".into());
+        }
+        if !(azure.3 > aws.3 && azure.3 > gcp.3) {
+            return Err("azure must carry the largest share".into());
+        }
+        if !(azure.4 <= aws.4 && azure.4 <= gcp.4) {
+            return Err(format!(
+                "azure preemption ({:.4}) must be lowest (aws {:.4}, gcp {:.4})",
+                azure.4, aws.4, gcp.4
+            ));
+        }
+        Ok(())
+    }
+}
+
+pub fn write(result: &CampaignResult, out_root: &Path) -> std::io::Result<Headline> {
+    let h = extract(result);
+    let dir = super::exp_dir(out_root, "headline")?;
+    super::write_output(&dir, "headline.txt", &h.table())?;
+    super::write_output(&dir, "headline.json", &h.to_json().to_string_pretty())?;
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignConfig, RampStep};
+    use crate::coordinator::Campaign;
+    use crate::sim::DAY;
+
+    fn mini_result() -> CampaignResult {
+        let mut c = CampaignConfig::default();
+        c.duration_s = 2 * DAY;
+        c.ramp = vec![RampStep { target: 90, hold_s: 30 * DAY }];
+        c.outage = None;
+        c.onprem.slots = 40;
+        c.generator.min_backlog = 150;
+        Campaign::new(c).run()
+    }
+
+    #[test]
+    fn headline_math_is_consistent() {
+        let h = extract(&mini_result());
+        assert!(h.total_cost_usd > 0.0);
+        assert!(h.gpu_days > 0.0);
+        // eflop-hours must equal gpu-hours * 8.1/1e6
+        let expect = h.gpu_days * 24.0 * 8.1 / 1e6;
+        assert!((h.eflop_hours - expect).abs() < 1e-9);
+        assert!((h.cost_per_eflop_hour - h.total_cost_usd / h.eflop_hours).abs()
+            < 1e-6);
+        assert!(h.goodput_fraction > 0.9);
+    }
+
+    #[test]
+    fn shape_holds_in_mini_campaign() {
+        let h = extract(&mini_result());
+        h.check_shape().unwrap();
+    }
+
+    #[test]
+    fn renders_table_and_json() {
+        let h = extract(&mini_result());
+        let t = h.table();
+        assert!(t.contains("total cost"));
+        assert!(t.contains("azure"));
+        let j = h.to_json().to_string_pretty();
+        assert!(crate::util::json::parse(&j).is_ok());
+    }
+}

@@ -1,0 +1,52 @@
+//! Experiment harnesses: one regenerator per paper figure/table.
+//!
+//! | id       | paper artifact              | module      |
+//! |----------|------------------------------|-------------|
+//! | F1       | Fig 1 monitoring snapshot   | `fig1`      |
+//! | F2       | Fig 2 GPU wall-hour doubling| `fig2`      |
+//! | T1       | in-text headline numbers    | `headline`  |
+//! | NAT      | §IV keepalive incident      | `nat`       |
+//! | RAMP     | §IV validation/preemption   | `ramp`      |
+//!
+//! Each harness runs the campaign (or a reduced scenario), renders the
+//! same rows/series the paper reports, and writes CSV/JSON/text into a
+//! results directory.  EXPERIMENTS.md records paper-vs-measured.
+
+pub mod fig1;
+pub mod fig2;
+pub mod headline;
+pub mod nat;
+pub mod ramp;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Create (if needed) and return the directory for one experiment.
+pub fn exp_dir(out_root: &Path, exp: &str) -> std::io::Result<PathBuf> {
+    let dir = out_root.join(exp);
+    fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Write a file, logging the path to stdout.
+pub fn write_output(dir: &Path, name: &str, content: &str) -> std::io::Result<()> {
+    let path = dir.join(name);
+    fs::write(&path, content)?;
+    println!("  wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_dir_creates_nested() {
+        let root = std::env::temp_dir().join("icecloud-exp-test");
+        let d = exp_dir(&root, "fig1").unwrap();
+        assert!(d.exists());
+        write_output(&d, "x.txt", "hello").unwrap();
+        assert_eq!(fs::read_to_string(d.join("x.txt")).unwrap(), "hello");
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,231 @@
+//! EXP-RAMP — the validation phase: per-provider stability at small scale.
+//!
+//! §IV: "we initially provisioned a small number of VMs in each of the
+//! targeted Cloud regions ... We spent the next few days slowly raising
+//! the number of instances in each of the targeted Cloud regions and
+//! monitoring the preemption rate. We were pleasantly surprised to find
+//! Azure ... to have plenty of spare capacity with very low preemption
+//! rates. We thus heavily favored Azure during most of the exercise."
+//!
+//! The harness runs a uniform (non-favoring) fleet and reports the
+//! price / fulfilment / preemption table the operators used to pick the
+//! Azure-heavy weights — plus an ablation comparing the resulting
+//! policies' delivered GPU-hours per dollar.
+
+use crate::cloud::Provider;
+use crate::config::{CampaignConfig, PolicyMode, ProviderWeights, RampStep};
+use crate::coordinator::Campaign;
+use crate::sim::DAY;
+use std::path::Path;
+
+/// One provider's validation-phase observation.
+#[derive(Debug, Clone)]
+pub struct RampRow {
+    pub provider: String,
+    pub price_per_day: f64,
+    pub instance_hours: f64,
+    pub preemptions: u64,
+    pub preempts_per_inst_hour: f64,
+}
+
+/// Policy-ablation entry.
+#[derive(Debug, Clone)]
+pub struct PolicyAblation {
+    pub policy: String,
+    pub gpu_hours: f64,
+    pub cost_usd: f64,
+    pub gpu_hours_per_usd: f64,
+    pub interrupts: u64,
+}
+
+fn validation_config(total: u32, days: u64, policy: PolicyMode) -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.seed = 4242;
+    c.duration_s = days * DAY;
+    c.outage = None;
+    c.onprem.slots = 0;
+    c.ramp = vec![RampStep { target: total, hold_s: 60 * DAY }];
+    c.policy = policy;
+    c.generator.min_backlog = (total as usize) * 2;
+    c
+}
+
+/// Run the uniform validation fleet and tabulate per-provider rates.
+pub fn run_validation(total: u32, days: u64) -> Vec<RampRow> {
+    let uniform = PolicyMode::Fixed(ProviderWeights {
+        aws: 1.0 / 3.0,
+        gcp: 1.0 / 3.0,
+        azure: 1.0 / 3.0,
+    });
+    let result = Campaign::new(validation_config(total, days, uniform)).run();
+    let prices = [3.8, 3.5, 2.9];
+    Provider::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let (_, preempts, hours) = result.provider_ops[i];
+            RampRow {
+                provider: p.name().to_string(),
+                price_per_day: prices[i],
+                instance_hours: hours,
+                preemptions: preempts,
+                preempts_per_inst_hour: if hours > 0.0 {
+                    preempts as f64 / hours
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect()
+}
+
+/// Ablation: uniform vs Azure-favoring vs adaptive policy.
+pub fn run_policy_ablation(total: u32, days: u64) -> Vec<PolicyAblation> {
+    let policies: Vec<(&str, PolicyMode)> = vec![
+        (
+            "uniform",
+            PolicyMode::Fixed(ProviderWeights {
+                aws: 1.0 / 3.0,
+                gcp: 1.0 / 3.0,
+                azure: 1.0 / 3.0,
+            }),
+        ),
+        (
+            "azure-favored (paper)",
+            PolicyMode::Fixed(ProviderWeights { aws: 0.15, gcp: 0.15, azure: 0.7 }),
+        ),
+        ("adaptive", PolicyMode::Adaptive),
+    ];
+    policies
+        .into_iter()
+        .map(|(name, policy)| {
+            let result =
+                Campaign::new(validation_config(total, days, policy)).run();
+            let hours = result.meter.total_instance_hours();
+            let cost = result.ledger.total_spent();
+            PolicyAblation {
+                policy: name.to_string(),
+                gpu_hours: hours,
+                cost_usd: cost,
+                gpu_hours_per_usd: if cost > 0.0 { hours / cost } else { 0.0 },
+                interrupts: result.schedd_stats.interrupted,
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[RampRow], ablation: &[PolicyAblation]) -> String {
+    let mut out = String::new();
+    out.push_str("RAMP — validation phase: per-provider spot behaviour\n");
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>14} {:>12} {:>18}\n",
+        "provider", "$/T4-day", "inst-hours", "preemptions", "preempts/inst-h"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:>10.2} {:>14.1} {:>12} {:>18.4}\n",
+            r.provider,
+            r.price_per_day,
+            r.instance_hours,
+            r.preemptions,
+            r.preempts_per_inst_hour
+        ));
+    }
+    out.push_str("\npolicy ablation (same total target):\n");
+    out.push_str(&format!(
+        "{:<24} {:>12} {:>10} {:>14} {:>10}\n",
+        "policy", "GPU-hours", "cost $", "GPUh per $", "interrupts"
+    ));
+    for a in ablation {
+        out.push_str(&format!(
+            "{:<24} {:>12.0} {:>10.0} {:>14.2} {:>10}\n",
+            a.policy, a.gpu_hours, a.cost_usd, a.gpu_hours_per_usd, a.interrupts
+        ));
+    }
+    out
+}
+
+pub fn to_csv(rows: &[RampRow]) -> String {
+    let mut out = String::from(
+        "provider,price_per_day,instance_hours,preemptions,preempts_per_inst_hour\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.provider,
+            r.price_per_day,
+            r.instance_hours,
+            r.preemptions,
+            r.preempts_per_inst_hour
+        ));
+    }
+    out
+}
+
+pub fn write(out_root: &Path) -> std::io::Result<(Vec<RampRow>, Vec<PolicyAblation>)> {
+    let rows = run_validation(300, 2);
+    let ablation = run_policy_ablation(300, 2);
+    let dir = super::exp_dir(out_root, "ramp")?;
+    super::write_output(&dir, "ramp.csv", &to_csv(&rows))?;
+    super::write_output(&dir, "ramp.txt", &render(&rows, &ablation))?;
+    Ok((rows, ablation))
+}
+
+/// Shape check: Azure is cheapest AND most stable — the basis of the
+/// paper's Azure-favoring decision.
+pub fn check_azure_wins(rows: &[RampRow]) -> Result<(), String> {
+    let get = |name: &str| rows.iter().find(|r| r.provider == name).unwrap();
+    let azure = get("azure");
+    let aws = get("aws");
+    let gcp = get("gcp");
+    if !(azure.price_per_day < aws.price_per_day
+        && azure.price_per_day < gcp.price_per_day)
+    {
+        return Err("azure must be cheapest".into());
+    }
+    if !(azure.preempts_per_inst_hour <= aws.preempts_per_inst_hour
+        && azure.preempts_per_inst_hour <= gcp.preempts_per_inst_hour)
+    {
+        return Err(format!(
+            "azure must preempt least: az={:.4} aws={:.4} gcp={:.4}",
+            azure.preempts_per_inst_hour,
+            aws.preempts_per_inst_hour,
+            gcp.preempts_per_inst_hour
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_shows_azure_advantage() {
+        let rows = run_validation(150, 1);
+        check_azure_wins(&rows).unwrap();
+    }
+
+    #[test]
+    fn azure_favoring_beats_uniform_on_cost() {
+        let ablation = run_policy_ablation(120, 1);
+        let uniform = &ablation[0];
+        let favored = &ablation[1];
+        assert!(
+            favored.gpu_hours_per_usd > uniform.gpu_hours_per_usd,
+            "favored {:.3} must beat uniform {:.3} GPUh/$",
+            favored.gpu_hours_per_usd,
+            uniform.gpu_hours_per_usd
+        );
+    }
+
+    #[test]
+    fn renders() {
+        let rows = run_validation(60, 1);
+        let ablation = run_policy_ablation(60, 1);
+        let txt = render(&rows, &ablation);
+        assert!(txt.contains("azure"));
+        assert!(txt.contains("policy ablation"));
+        assert_eq!(to_csv(&rows).lines().count(), 4);
+    }
+}

@@ -1,0 +1,25 @@
+//! # icecloud
+//!
+//! Reproduction of *"Expanding IceCube GPU computing into the Clouds"*
+//! (Sfiligoi et al., eScience 2021): a multi-cloud spot-GPU provisioning
+//! stack integrated into an OSG/HTCondor-style workload management system,
+//! replayed on a deterministic discrete-event simulator, with the IceCube
+//! photon-propagation workload compiled AOT (JAX + Pallas → HLO text) and
+//! executed from Rust through the PJRT CPU client.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every figure and table.
+
+pub mod cloud;
+pub mod cloudbank;
+pub mod condor;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod monitoring;
+pub mod net;
+pub mod osg;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,312 @@
+//! `icecloud` — CLI launcher for the IceCube-in-the-clouds reproduction.
+//!
+//! Subcommands:
+//!   campaign    run the two-week campaign (configurable)
+//!   reproduce   regenerate the paper's figures/tables into a results dir
+//!   validate    end-to-end PJRT smoke test of the AOT photon artifacts
+//!   info        print artifact + configuration summary
+
+use icecloud::config::CampaignConfig;
+use icecloud::coordinator::Campaign;
+use icecloud::experiments;
+use icecloud::runtime::PhotonEngine;
+use icecloud::util::cli::Command;
+use icecloud::util::logger;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn artifact_dir() -> PathBuf {
+    std::env::var("ICECLOUD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "campaign" => cmd_campaign(rest),
+        "reproduce" => cmd_reproduce(rest),
+        "validate" => cmd_validate(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try 'icecloud help')")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "icecloud — reproduction of 'Expanding IceCube GPU computing into \
+         the Clouds' (eScience 2021)\n\n\
+         usage: icecloud <command> [options]\n\n\
+         commands:\n\
+         \x20 campaign    run the two-week multi-cloud campaign\n\
+         \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
+         --fig2, --headline, --nat, --ramp)\n\
+         \x20 validate    end-to-end PJRT smoke test of the photon artifacts\n\
+         \x20 info        artifact and configuration summary\n\
+         \x20 help        this message\n"
+    );
+}
+
+fn campaign_command() -> Command {
+    Command::new("campaign", "run the two-week multi-cloud campaign")
+        .opt("config", "TOML config file", None)
+        .opt("seed", "override RNG seed", None)
+        .opt("days", "override campaign duration (days)", None)
+        .opt("keepalive", "worker keepalive seconds (300 = relive §IV)", None)
+        .opt("out", "write monitoring CSV + summary into this directory", None)
+        .opt("log", "log level: debug|info|warn|error", Some("info"))
+        .flag("real-compute", "sample real PJRT photon executions")
+        .flag("no-outage", "disable the day-11 CE outage")
+}
+
+fn load_config(args: &icecloud::util::cli::Args) -> Result<CampaignConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => CampaignConfig::from_toml_file(path)?,
+        None => CampaignConfig::default(),
+    };
+    if let Some(seed) = args.get_u64("seed") {
+        cfg.seed = seed;
+    }
+    if let Some(days) = args.get_f64("days") {
+        cfg.duration_s = (days * 86_400.0) as u64;
+    }
+    if let Some(k) = args.get_u64("keepalive") {
+        cfg.keepalive_s = k;
+    }
+    if args.flag("no-outage") {
+        cfg.outage = None;
+    }
+    if args.flag("real-compute") {
+        cfg.real_compute = Some(icecloud::config::RealComputeConfig {
+            variant: "default".into(),
+            every_n_completions: 200,
+        });
+    }
+    Ok(cfg)
+}
+
+fn cmd_campaign(rest: &[String]) -> Result<(), String> {
+    let cmd = campaign_command();
+    let args = cmd.parse(rest)?;
+    if let Some(level) = logger::level_from_str(args.get_or("log", "info")) {
+        logger::set_level(level);
+    }
+    let cfg = load_config(&args)?;
+    let engine_exe = if cfg.real_compute.is_some() {
+        let engine = PhotonEngine::new(&artifact_dir()).map_err(|e| e.to_string())?;
+        let variant = cfg.real_compute.as_ref().unwrap().variant.clone();
+        Some(engine.compile(&variant).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+
+    println!(
+        "running campaign: {} days, seed {}, keepalive {} s, outage {}",
+        cfg.duration_s as f64 / 86_400.0,
+        cfg.seed,
+        cfg.keepalive_s,
+        cfg.outage.is_some()
+    );
+    let t0 = std::time::Instant::now();
+    let result = Campaign::with_engine(cfg, engine_exe).run();
+    println!("campaign replay took {:.2?} wall", t0.elapsed());
+    print_summary(&result);
+
+    if let Some(out) = args.get("out") {
+        let dir = Path::new(out);
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let csv = result.monitor.to_csv(&[
+            "gpus.total",
+            "gpus.azure",
+            "gpus.gcp",
+            "gpus.aws",
+            "jobs.idle",
+            "jobs.running",
+            "budget.spent",
+        ]);
+        std::fs::write(dir.join("monitoring.csv"), csv).map_err(|e| e.to_string())?;
+        let headline = icecloud::experiments::headline::extract(&result);
+        std::fs::write(
+            dir.join("summary.json"),
+            headline.to_json().to_string_pretty(),
+        )
+        .map_err(|e| e.to_string())?;
+        println!("wrote {}/monitoring.csv and summary.json", dir.display());
+    }
+    Ok(())
+}
+
+fn print_summary(result: &icecloud::coordinator::CampaignResult) {
+    let h = icecloud::experiments::headline::extract(result);
+    println!("{}", h.table());
+    if result.real_compute.bunches > 0 {
+        let rc = result.real_compute;
+        println!(
+            "real compute: {} bunches, {} photons, {:.0} detected, \
+             {:.1} s wall, {:.2} Mphotons/s, {:.2} GFLOP/s",
+            rc.bunches,
+            rc.photons,
+            rc.detected,
+            rc.wall_s,
+            rc.photons_per_sec() / 1e6,
+            rc.flops_per_sec() / 1e9
+        );
+    }
+}
+
+fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new("reproduce", "regenerate the paper's evaluation")
+        .opt("out", "results directory", Some("results"))
+        .opt("seed", "campaign seed", None)
+        .flag("all", "all figures and tables")
+        .flag("fig1", "Fig 1: GPU monitoring snapshot")
+        .flag("fig2", "Fig 2: GPU wall-hour doubling")
+        .flag("headline", "T1: cost / GPU-days / EFLOP-hours")
+        .flag("nat", "§IV keepalive-vs-NAT sweep")
+        .flag("ramp", "§IV validation + policy ablation");
+    let args = cmd.parse(rest)?;
+    let out_root = PathBuf::from(args.get_or("out", "results"));
+    let all = args.flag("all")
+        || !(args.flag("fig1")
+            || args.flag("fig2")
+            || args.flag("headline")
+            || args.flag("nat")
+            || args.flag("ramp"));
+
+    let needs_campaign =
+        all || args.flag("fig1") || args.flag("fig2") || args.flag("headline");
+    let campaign_result = if needs_campaign {
+        let mut cfg = CampaignConfig::default();
+        if let Some(seed) = args.get_u64("seed") {
+            cfg.seed = seed;
+        }
+        println!("[reproduce] running the full two-week campaign ...");
+        Some(Campaign::new(cfg).run())
+    } else {
+        None
+    };
+
+    if all || args.flag("fig1") {
+        println!("[reproduce] F1 — Fig 1 monitoring snapshot");
+        let fig =
+            experiments::fig1::write(campaign_result.as_ref().unwrap(), &out_root)
+                .map_err(|e| e.to_string())?;
+        println!("{}", fig.chart());
+    }
+    if all || args.flag("fig2") {
+        println!("[reproduce] F2 — Fig 2 GPU wall hours");
+        let fig =
+            experiments::fig2::write(campaign_result.as_ref().unwrap(), &out_root)
+                .map_err(|e| e.to_string())?;
+        println!("{}", fig.chart());
+    }
+    if all || args.flag("headline") {
+        println!("[reproduce] T1 — headline numbers");
+        let h = experiments::headline::write(
+            campaign_result.as_ref().unwrap(),
+            &out_root,
+        )
+        .map_err(|e| e.to_string())?;
+        println!("{}", h.table());
+        h.check_shape()?;
+        println!("  shape check: OK (azure cheapest, largest share, most stable)");
+    }
+    if all || args.flag("nat") {
+        println!("[reproduce] NAT — keepalive sweep (6 scenarios)");
+        let rows = experiments::nat::write(&out_root).map_err(|e| e.to_string())?;
+        println!("{}", experiments::nat::render(&rows));
+        experiments::nat::check_cliff(&rows)?;
+        println!("  cliff check: OK (stable ≤240 s, storm >240 s)");
+    }
+    if all || args.flag("ramp") {
+        println!("[reproduce] RAMP — validation + policy ablation");
+        let (rows, ablation) =
+            experiments::ramp::write(&out_root).map_err(|e| e.to_string())?;
+        println!("{}", experiments::ramp::render(&rows, &ablation));
+        experiments::ramp::check_azure_wins(&rows)?;
+        println!("  shape check: OK (azure cheapest + most stable)");
+    }
+    println!("[reproduce] outputs in {}", out_root.display());
+    Ok(())
+}
+
+fn cmd_validate(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new("validate", "PJRT end-to-end smoke test")
+        .opt("variant", "artifact variant", Some("small"))
+        .opt("bunches", "number of bunches to execute", Some("3"));
+    let args = cmd.parse(rest)?;
+    let engine = PhotonEngine::new(&artifact_dir()).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", engine.platform());
+    let variant = args.get_or("variant", "small");
+    let exe = engine.compile(variant).map_err(|e| e.to_string())?;
+    println!(
+        "compiled variant '{}': {} photons x {} steps, {} DOMs",
+        variant, exe.meta.num_photons, exe.meta.num_steps, exe.meta.num_doms
+    );
+    let n = args.get_u64("bunches").unwrap_or(3);
+    for seed in 0..n {
+        let r = exe.run_seeded(seed as u32).map_err(|e| e.to_string())?;
+        let total = r.summary[0] + r.summary[1] + r.summary[2];
+        if total as u64 != exe.meta.num_photons {
+            return Err(format!(
+                "photon conservation violated: {total} != {}",
+                exe.meta.num_photons
+            ));
+        }
+        println!(
+            "bunch seed={seed}: detected={} absorbed={} alive={} \
+             ({:.1} ms, {:.2} Mphotons/s)",
+            r.summary[0],
+            r.summary[1],
+            r.summary[2],
+            r.wall_s * 1e3,
+            exe.meta.num_photons as f64 / r.wall_s / 1e6
+        );
+    }
+    println!("validate OK: artifact executes and conserves photons");
+    Ok(())
+}
+
+fn cmd_info(_rest: &[String]) -> Result<(), String> {
+    let dir = artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match icecloud::runtime::ArtifactMeta::load(&dir) {
+        Ok(meta) => {
+            for v in &meta.variants {
+                println!(
+                    "  {}: photons={} block={} doms={} steps={} \
+                     flops/bunch={:.2e} file={}",
+                    v.name, v.num_photons, v.block, v.num_doms, v.num_steps,
+                    v.flops_estimate, v.file
+                );
+            }
+        }
+        Err(e) => println!("  (no artifacts: {e}; run `make artifacts`)"),
+    }
+    let cfg = CampaignConfig::default();
+    println!(
+        "default campaign: {} days, budget ${}, ramp {:?}, outage at day {:?}",
+        cfg.duration_s / 86_400,
+        cfg.budget_usd,
+        cfg.ramp.iter().map(|s| s.target).collect::<Vec<_>>(),
+        cfg.outage.map(|o| o.at_s as f64 / 86_400.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Monitoring: named time series + terminal figure rendering.
+
+pub mod plot;
+pub mod timeseries;
+
+pub use plot::{daily_bars, line_chart};
+pub use timeseries::{Monitor, TimeSeries};

@@ -1,0 +1,140 @@
+//! ASCII plotting: terminal renditions of the paper's figures.
+
+use super::timeseries::TimeSeries;
+use crate::sim::{SimTime, DAY};
+
+/// Render one or more series as an ASCII line chart.
+///
+/// Each series gets a glyph; the y-axis is shared. This is what
+/// `icecloud reproduce --fig1` prints next to the CSV it writes.
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, &TimeSeries)],
+    width: usize,
+    height: usize,
+) -> String {
+    let glyphs = ['#', '*', '+', 'o', 'x', '~'];
+    let mut y_max = f64::NEG_INFINITY;
+    let mut t_min = SimTime::MAX;
+    let mut t_max = 0;
+    for (_, s) in series {
+        if s.is_empty() {
+            continue;
+        }
+        y_max = y_max.max(s.max());
+        t_min = t_min.min(s.points[0].0);
+        t_max = t_max.max(s.points[s.len() - 1].0);
+    }
+    if !y_max.is_finite() || t_max <= t_min {
+        return format!("{title}\n(no data)\n");
+    }
+    let y_max = y_max.max(1.0) * 1.05;
+    let mut grid = vec![vec![' '; width]; height];
+
+    for (si, (_, s)) in series.iter().enumerate() {
+        let glyph = glyphs[si % glyphs.len()];
+        for &(t, v) in &s.points {
+            let x = ((t - t_min) as f64 / (t_max - t_min) as f64
+                * (width - 1) as f64)
+                .round() as usize;
+            let y = (v / y_max * (height - 1) as f64).round() as usize;
+            let row = height - 1 - y.min(height - 1);
+            grid[row][x.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yval = y_max * (height - 1 - i) as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>8.0} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    // x axis in days
+    let days = (t_max - t_min) as f64 / DAY as f64;
+    out.push_str(&format!(
+        "{:>10}day 0{:>width$.1}\n",
+        "",
+        days,
+        width = width - 4
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", glyphs[i % glyphs.len()], name))
+        .collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("   ")));
+    out
+}
+
+/// Render per-day bars (Fig 2 style): two stacked values per day.
+pub fn daily_bars(
+    title: &str,
+    days: &[(u32, f64, f64)], // (day, bottom=onprem, top=cloud)
+    width: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let max_total = days
+        .iter()
+        .map(|(_, a, b)| a + b)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1.0);
+    for (day, onprem, cloud) in days {
+        let total = onprem + cloud;
+        let bar_len = (total / max_total * width as f64).round() as usize;
+        let onprem_len =
+            (onprem / max_total * width as f64).round() as usize;
+        let cloud_len = bar_len.saturating_sub(onprem_len);
+        out.push_str(&format!(
+            "d{day:02} |{}{}| {:>9.0} GPUh ({:.0} onprem + {:.0} cloud)\n",
+            "=".repeat(onprem_len),
+            "#".repeat(cloud_len),
+            total,
+            onprem,
+            cloud,
+        ));
+    }
+    out.push_str("  legend: = onprem   # cloud\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_and_scales() {
+        let mut s = TimeSeries::default();
+        for i in 0..100u64 {
+            s.push(i * 3600, (i % 50) as f64 * 40.0);
+        }
+        let chart = line_chart("GPUs", &[("gpus", &s)], 60, 10);
+        assert!(chart.contains("GPUs"));
+        assert!(chart.contains('#'));
+        assert!(chart.contains("legend"));
+        assert_eq!(chart.lines().count(), 14);
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let s = TimeSeries::default();
+        let chart = line_chart("empty", &[("x", &s)], 40, 8);
+        assert!(chart.contains("no data"));
+    }
+
+    #[test]
+    fn bars_show_both_components() {
+        let days = vec![(0u32, 24_000.0, 0.0), (1, 24_000.0, 26_000.0)];
+        let out = daily_bars("Fig2", &days, 40);
+        assert!(out.contains("d00"));
+        assert!(out.contains("d01"));
+        assert!(out.contains('='));
+        assert!(out.contains('#'));
+        assert!(out.contains("50000 GPUh"));
+    }
+}

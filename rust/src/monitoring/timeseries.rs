@@ -1,0 +1,195 @@
+//! Named time series store (the campaign's monitoring database).
+
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// One series: (t, value) samples in time order.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(SimTime, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: SimTime, v: f64) {
+        debug_assert!(
+            self.points.last().map(|(pt, _)| *pt <= t).unwrap_or(true),
+            "samples must be time-ordered"
+        );
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|(_, v)| *v)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Time-weighted mean over the sampled span.
+    pub fn mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|(_, v)| *v).unwrap_or(f64::NAN);
+        }
+        let mut area = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, v0) = w[0];
+            let (t1, _) = w[1];
+            area += v0 * (t1 - t0) as f64;
+        }
+        let span = (self.points.last().unwrap().0 - self.points[0].0) as f64;
+        if span == 0.0 {
+            f64::NAN
+        } else {
+            area / span
+        }
+    }
+
+    /// Downsample to at most `n` points (stride sampling, keeps ends).
+    pub fn downsample(&self, n: usize) -> Vec<(SimTime, f64)> {
+        if self.points.len() <= n || n < 2 {
+            return self.points.clone();
+        }
+        let stride = (self.points.len() - 1) as f64 / (n - 1) as f64;
+        (0..n)
+            .map(|i| self.points[(i as f64 * stride).round() as usize])
+            .collect()
+    }
+}
+
+/// The store: insertion-ordered named series.
+#[derive(Debug, Default)]
+pub struct Monitor {
+    series: BTreeMap<String, TimeSeries>,
+}
+
+impl Monitor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sample(&mut self, name: &str, t: SimTime, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+
+    /// Dump selected series as CSV: `t_s,<name1>,<name2>,...`.
+    /// Series are aligned by sample index (the campaign samples everything
+    /// on the same tick, so indexes line up).
+    pub fn to_csv(&self, names: &[&str]) -> String {
+        let mut out = String::new();
+        out.push_str("t_s");
+        for n in names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        let rows = names
+            .iter()
+            .filter_map(|n| self.get(n))
+            .map(|s| s.len())
+            .max()
+            .unwrap_or(0);
+        for i in 0..rows {
+            let t = names
+                .iter()
+                .filter_map(|n| self.get(n))
+                .filter_map(|s| s.points.get(i))
+                .map(|(t, _)| *t)
+                .next()
+                .unwrap_or(0);
+            out.push_str(&t.to_string());
+            for n in names {
+                out.push(',');
+                if let Some((_, v)) =
+                    self.get(n).and_then(|s| s.points.get(i))
+                {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_stats() {
+        let mut s = TimeSeries::default();
+        s.push(0, 10.0);
+        s.push(100, 20.0);
+        s.push(200, 0.0);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.last(), Some(0.0));
+        assert_eq!(s.max(), 20.0);
+        assert_eq!(s.min(), 0.0);
+        // time-weighted mean: (10*100 + 20*100) / 200 = 15
+        assert!((s.mean() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downsample_keeps_ends() {
+        let mut s = TimeSeries::default();
+        for i in 0..1000u64 {
+            s.push(i, i as f64);
+        }
+        let d = s.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], (0, 0.0));
+        assert_eq!(d[9], (999, 999.0));
+    }
+
+    #[test]
+    fn downsample_small_series_unchanged() {
+        let mut s = TimeSeries::default();
+        s.push(0, 1.0);
+        assert_eq!(s.downsample(10).len(), 1);
+    }
+
+    #[test]
+    fn monitor_named_series() {
+        let mut m = Monitor::new();
+        m.sample("gpus.total", 0, 50.0);
+        m.sample("gpus.total", 60, 55.0);
+        m.sample("jobs.idle", 0, 100.0);
+        assert_eq!(m.get("gpus.total").unwrap().len(), 2);
+        assert_eq!(m.names().count(), 2);
+    }
+
+    #[test]
+    fn csv_alignment() {
+        let mut m = Monitor::new();
+        for t in [0u64, 60, 120] {
+            m.sample("a", t, t as f64);
+            m.sample("b", t, 2.0 * t as f64);
+        }
+        let csv = m.to_csv(&["a", "b"]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t_s,a,b");
+        assert_eq!(lines[1], "0,0,0");
+        assert_eq!(lines[3], "120,120,240");
+    }
+}

@@ -1,0 +1,199 @@
+//! Network substrate: NAT gateways and long-lived TCP connections.
+//!
+//! This module exists to reproduce the paper's §IV operational finding:
+//! Azure's default NAT drops *idle* outbound TCP flows after 4 minutes,
+//! while the default OSG/HTCondor keepalive interval was 5 minutes — so
+//! every job-management connection silently died between keepalives and
+//! user jobs were constantly preempted until the keepalive was lowered.
+//!
+//! The model: a [`Connection`] carries `last_activity`; traversing a
+//! [`NatProfile`] with `idle_timeout_s` means a send after a gap larger
+//! than the timeout *fails* (the mapping is gone — the sender only finds
+//! out when it next writes, exactly like a silently-dropped TCP flow).
+
+use crate::sim::SimTime;
+
+/// NAT behaviour on the path of a connection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NatProfile {
+    /// Idle seconds after which the address mapping is discarded.
+    /// `None` = no NAT on path (or a NAT without idle expiry).
+    pub idle_timeout_s: Option<u64>,
+    /// Human-readable label for logs ("azure-default-nat", ...).
+    pub label: &'static str,
+}
+
+impl NatProfile {
+    /// Azure default outbound NAT: 4-minute idle timeout (the culprit).
+    pub fn azure_default() -> Self {
+        NatProfile { idle_timeout_s: Some(240), label: "azure-default-nat" }
+    }
+
+    /// Cloud NAT without an aggressive idle timeout (AWS/GCP behaved fine
+    /// with the 5-minute OSG default in the paper's validation runs).
+    pub fn permissive(label: &'static str) -> Self {
+        NatProfile { idle_timeout_s: None, label }
+    }
+
+    /// Would a mapping idle for `gap` seconds have been dropped?
+    pub fn drops_after(&self, gap: u64) -> bool {
+        match self.idle_timeout_s {
+            Some(t) => gap > t,
+            None => false,
+        }
+    }
+}
+
+/// Outcome of attempting a send on a [`Connection`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendOutcome {
+    /// Delivered; the connection's activity clock resets.
+    Delivered,
+    /// The NAT dropped the mapping during the idle gap; the connection is
+    /// now dead and must be re-established.
+    DroppedByNat,
+    /// Connection was already dead (previous drop or explicit sever).
+    NotConnected,
+}
+
+/// A long-lived management connection (startd→collector, startd→schedd).
+#[derive(Debug, Clone)]
+pub struct Connection {
+    pub nat: NatProfile,
+    pub established_at: SimTime,
+    pub last_activity: SimTime,
+    pub alive: bool,
+    /// Total successful sends (stats / tests).
+    pub delivered: u64,
+    /// Total sends that found the mapping dropped.
+    pub nat_drops: u64,
+}
+
+impl Connection {
+    pub fn establish(now: SimTime, nat: NatProfile) -> Self {
+        Connection {
+            nat,
+            established_at: now,
+            last_activity: now,
+            alive: true,
+            delivered: 0,
+            nat_drops: 0,
+        }
+    }
+
+    /// Attempt to send at `now`.
+    pub fn try_send(&mut self, now: SimTime) -> SendOutcome {
+        if !self.alive {
+            return SendOutcome::NotConnected;
+        }
+        let gap = now.saturating_sub(self.last_activity);
+        if self.nat.drops_after(gap) {
+            self.alive = false;
+            self.nat_drops += 1;
+            return SendOutcome::DroppedByNat;
+        }
+        self.last_activity = now;
+        self.delivered += 1;
+        SendOutcome::Delivered
+    }
+
+    /// Sever the connection from outside (e.g. a region network outage).
+    pub fn sever(&mut self) {
+        self.alive = false;
+    }
+
+    /// Re-establish after a drop (the caller models reconnect latency).
+    pub fn reconnect(&mut self, now: SimTime) {
+        self.alive = true;
+        self.established_at = now;
+        self.last_activity = now;
+    }
+
+    pub fn idle_for(&self, now: SimTime) -> u64 {
+        now.saturating_sub(self.last_activity)
+    }
+}
+
+/// Will a keepalive loop of period `keepalive_s` survive this NAT?
+///
+/// This predicate *is* the paper's incident in one line: the OSG default
+/// `keepalive_s = 300` does not survive Azure's 240 s idle timeout.
+pub fn keepalive_survives(nat: &NatProfile, keepalive_s: u64) -> bool {
+    !nat.drops_after(keepalive_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permissive_nat_never_drops() {
+        let nat = NatProfile::permissive("aws");
+        let mut c = Connection::establish(0, nat);
+        for t in [1000u64, 1_000_000, 2_000_000] {
+            assert_eq!(c.try_send(t), SendOutcome::Delivered);
+        }
+        assert_eq!(c.nat_drops, 0);
+    }
+
+    #[test]
+    fn azure_nat_drops_after_240s_idle() {
+        let mut c = Connection::establish(0, NatProfile::azure_default());
+        assert_eq!(c.try_send(240), SendOutcome::Delivered); // exactly at limit
+        assert_eq!(c.try_send(481), SendOutcome::DroppedByNat); // 241 s gap
+        assert!(!c.alive);
+        assert_eq!(c.try_send(482), SendOutcome::NotConnected);
+    }
+
+    #[test]
+    fn keepalive_300_fails_on_azure_default() {
+        // The §IV incident: OSG default 5-min keepalive vs Azure 4-min NAT.
+        let azure = NatProfile::azure_default();
+        assert!(!keepalive_survives(&azure, 300));
+        assert!(keepalive_survives(&azure, 240));
+        assert!(keepalive_survives(&azure, 60));
+        let aws = NatProfile::permissive("aws");
+        assert!(keepalive_survives(&aws, 300));
+    }
+
+    #[test]
+    fn reconnect_restores_flow() {
+        let mut c = Connection::establish(0, NatProfile::azure_default());
+        assert_eq!(c.try_send(500), SendOutcome::DroppedByNat);
+        c.reconnect(510);
+        assert_eq!(c.try_send(520), SendOutcome::Delivered);
+        assert_eq!(c.nat_drops, 1);
+        assert_eq!(c.delivered, 1);
+    }
+
+    #[test]
+    fn sever_kills_connection() {
+        let mut c = Connection::establish(0, NatProfile::permissive("gcp"));
+        c.sever();
+        assert_eq!(c.try_send(1), SendOutcome::NotConnected);
+    }
+
+    #[test]
+    fn idle_tracking() {
+        let mut c = Connection::establish(100, NatProfile::permissive("x"));
+        assert_eq!(c.idle_for(160), 60);
+        c.try_send(160);
+        assert_eq!(c.idle_for(170), 10);
+    }
+
+    #[test]
+    fn steady_keepalive_under_timeout_survives_forever() {
+        let mut c = Connection::establish(0, NatProfile::azure_default());
+        let mut t = 0;
+        for _ in 0..1000 {
+            t += 60; // 1-minute keepalives
+            assert_eq!(c.try_send(t), SendOutcome::Delivered);
+        }
+    }
+
+    #[test]
+    fn steady_keepalive_over_timeout_dies_on_second_send() {
+        let mut c = Connection::establish(0, NatProfile::azure_default());
+        assert_eq!(c.try_send(300), SendOutcome::DroppedByNat);
+    }
+}

@@ -1,0 +1,137 @@
+//! Gratia-style usage accounting: GPU wall hours per pool, per day.
+//!
+//! This is the data source of the paper's Fig 2 ("approximate doubling of
+//! GPU wall hours used by IceCube"): daily wall-hour totals split between
+//! on-prem and cloud resources, plus fp32 EFLOP-hour conversion at the
+//! T4's 8.1 TFLOPS.
+
+use crate::sim::{SimTime, DAY};
+
+/// NVIDIA T4 peak fp32 throughput (TFLOPS) — the paper's EFLOP-hour basis.
+pub const T4_FP32_TFLOPS: f64 = 8.1;
+
+/// One day's usage record.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DayUsage {
+    pub day: u32,
+    pub cloud_gpu_hours: f64,
+    pub onprem_gpu_hours: f64,
+}
+
+impl DayUsage {
+    pub fn total(&self) -> f64 {
+        self.cloud_gpu_hours + self.onprem_gpu_hours
+    }
+}
+
+/// Wall-hour accounting ledger.
+#[derive(Debug, Default)]
+pub struct UsageAccounting {
+    days: Vec<DayUsage>,
+}
+
+impl UsageAccounting {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accrue `dt_s` seconds of `cloud_busy` + `onprem_busy` busy GPUs
+    /// ending at time `now`.
+    pub fn accrue(
+        &mut self,
+        now: SimTime,
+        dt_s: u64,
+        cloud_busy: usize,
+        onprem_busy: usize,
+    ) {
+        let day = (now / DAY) as u32;
+        while self.days.len() <= day as usize {
+            self.days.push(DayUsage {
+                day: self.days.len() as u32,
+                ..DayUsage::default()
+            });
+        }
+        let rec = &mut self.days[day as usize];
+        let dt_h = dt_s as f64 / 3600.0;
+        rec.cloud_gpu_hours += cloud_busy as f64 * dt_h;
+        rec.onprem_gpu_hours += onprem_busy as f64 * dt_h;
+    }
+
+    pub fn days(&self) -> &[DayUsage] {
+        &self.days
+    }
+
+    pub fn total_cloud_gpu_hours(&self) -> f64 {
+        self.days.iter().map(|d| d.cloud_gpu_hours).sum()
+    }
+
+    pub fn total_onprem_gpu_hours(&self) -> f64 {
+        self.days.iter().map(|d| d.onprem_gpu_hours).sum()
+    }
+
+    /// The Fig-2 headline: by what factor did cloud capacity multiply the
+    /// GPU wall hours available to IceCube over the period?
+    pub fn expansion_factor(&self) -> f64 {
+        let onprem = self.total_onprem_gpu_hours();
+        if onprem == 0.0 {
+            return f64::NAN;
+        }
+        (onprem + self.total_cloud_gpu_hours()) / onprem
+    }
+
+    /// fp32 EFLOP-hours delivered by `gpu_hours` of T4 time.
+    pub fn eflop_hours(gpu_hours: f64) -> f64 {
+        // TFLOPS * hours = 1e12 FLOP-hours; EFLOP-hours = /1e18 * 1e12
+        gpu_hours * T4_FP32_TFLOPS / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HOUR;
+
+    #[test]
+    fn accrues_into_day_buckets() {
+        let mut acc = UsageAccounting::new();
+        acc.accrue(HOUR, 3600, 100, 50);
+        acc.accrue(DAY + HOUR, 3600, 200, 50);
+        assert_eq!(acc.days().len(), 2);
+        assert!((acc.days()[0].cloud_gpu_hours - 100.0).abs() < 1e-9);
+        assert!((acc.days()[0].onprem_gpu_hours - 50.0).abs() < 1e-9);
+        assert!((acc.days()[1].cloud_gpu_hours - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fills_gap_days_with_zero() {
+        let mut acc = UsageAccounting::new();
+        acc.accrue(3 * DAY, 60, 1, 1);
+        assert_eq!(acc.days().len(), 4);
+        assert_eq!(acc.days()[1].total(), 0.0);
+        assert_eq!(acc.days()[1].day, 1);
+    }
+
+    #[test]
+    fn expansion_factor_doubling() {
+        let mut acc = UsageAccounting::new();
+        // equal cloud and on-prem hours => factor 2.0 (the paper's claim)
+        acc.accrue(HOUR, 3600, 1000, 1000);
+        assert!((acc.expansion_factor() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eflop_hours_matches_paper_headline() {
+        // 16k GPU-days = 384k GPU-hours of T4 => ~3.1 fp32 EFLOP-hours
+        let eflop = UsageAccounting::eflop_hours(16_000.0 * 24.0);
+        assert!((eflop - 3.1104).abs() < 0.001, "eflop={eflop}");
+    }
+
+    #[test]
+    fn totals_sum_days() {
+        let mut acc = UsageAccounting::new();
+        acc.accrue(HOUR, 3600, 10, 5);
+        acc.accrue(DAY, 1800, 20, 10);
+        assert!((acc.total_cloud_gpu_hours() - (10.0 + 10.0)).abs() < 1e-9);
+        assert!((acc.total_onprem_gpu_hours() - (5.0 + 5.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! The Compute Element: OSG's portal interface in front of the cloud pool.
+//!
+//! The paper instantiated a dedicated HTCondor-CE on a cloud VM,
+//! registered it in OSG "with the stated policy of only accepting IceCube
+//! jobs", and routed all glidein traffic through it.  The CE is also the
+//! campaign's single point of failure: when the provider hosting it had a
+//! network outage, the whole backend WMS collapsed (Fig 1's cliff).
+
+use crate::cloud::Provider;
+use crate::sim::SimTime;
+
+/// Reasons a pilot submission is refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CeError {
+    /// VO not in the CE's authorization list.
+    Unauthorized(String),
+    /// CE host unreachable (provider network outage).
+    Unavailable,
+}
+
+impl std::fmt::Display for CeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CeError::Unauthorized(vo) => write!(f, "VO '{vo}' not authorized"),
+            CeError::Unavailable => write!(f, "CE host unreachable"),
+        }
+    }
+}
+
+/// A pilot (glidein) submission accepted by the CE.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PilotTicket {
+    pub vo: String,
+    pub accepted_at: SimTime,
+}
+
+/// The HTCondor-CE.
+#[derive(Debug, Clone)]
+pub struct ComputeElement {
+    pub name: String,
+    /// The cloud provider whose VM hosts this CE.
+    pub hosted_on: Provider,
+    authorized_vos: Vec<String>,
+    available: bool,
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl ComputeElement {
+    /// The paper's CE: dedicated VM, IceCube-only policy.
+    pub fn new(name: &str, hosted_on: Provider, vos: &[&str]) -> Self {
+        ComputeElement {
+            name: name.to_string(),
+            hosted_on,
+            authorized_vos: vos.iter().map(|s| s.to_string()).collect(),
+            available: true,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn authorizes(&self, vo: &str) -> bool {
+        self.authorized_vos.iter().any(|v| v == vo)
+    }
+
+    /// Extend the policy to another community ("the same exact setup
+    /// could have been used to serve any other set of OSG communities").
+    pub fn authorize_vo(&mut self, vo: &str) {
+        if !self.authorizes(vo) {
+            self.authorized_vos.push(vo.to_string());
+        }
+    }
+
+    pub fn set_available(&mut self, up: bool) {
+        self.available = up;
+    }
+
+    pub fn is_available(&self) -> bool {
+        self.available
+    }
+
+    /// Pilot factories submit through the CE; jobs of unauthorized VOs
+    /// never reach the backend.
+    pub fn submit_pilot(
+        &mut self,
+        vo: &str,
+        now: SimTime,
+    ) -> Result<PilotTicket, CeError> {
+        if !self.available {
+            self.rejected += 1;
+            return Err(CeError::Unavailable);
+        }
+        if !self.authorizes(vo) {
+            self.rejected += 1;
+            return Err(CeError::Unauthorized(vo.to_string()));
+        }
+        self.accepted += 1;
+        Ok(PilotTicket { vo: vo.to_string(), accepted_at: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ce() -> ComputeElement {
+        ComputeElement::new("icecube-cloud-ce", Provider::Azure, &["icecube"])
+    }
+
+    #[test]
+    fn accepts_icecube_only() {
+        let mut c = ce();
+        assert!(c.submit_pilot("icecube", 0).is_ok());
+        assert_eq!(
+            c.submit_pilot("cms", 0),
+            Err(CeError::Unauthorized("cms".into()))
+        );
+        assert_eq!(c.accepted, 1);
+        assert_eq!(c.rejected, 1);
+    }
+
+    #[test]
+    fn outage_makes_ce_unavailable() {
+        let mut c = ce();
+        c.set_available(false);
+        assert_eq!(c.submit_pilot("icecube", 5), Err(CeError::Unavailable));
+        c.set_available(true);
+        assert!(c.submit_pilot("icecube", 6).is_ok());
+    }
+
+    #[test]
+    fn can_extend_to_other_communities() {
+        let mut c = ce();
+        assert!(!c.authorizes("ligo"));
+        c.authorize_vo("ligo");
+        assert!(c.submit_pilot("ligo", 0).is_ok());
+        // idempotent
+        c.authorize_vo("ligo");
+        assert_eq!(c.authorized_vos.iter().filter(|v| *v == "ligo").count(), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! The glidein factory: turns pilot demand into cloud group targets.
+//!
+//! In glideinWMS terms each cloud region is an *entry point*; the factory
+//! receives per-entry pilot requests (from the frontend or the operator's
+//! ramp plan), submits them through the CE, and drives the corresponding
+//! cloud-native group mechanism to the requested size.  One group per
+//! region, exactly as the paper describes.
+
+use super::ce::{CeError, ComputeElement};
+use crate::cloud::{CloudSim, RegionId};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// One region entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub region: RegionId,
+    pub enabled: bool,
+    /// Last target actually applied to the cloud group.
+    pub applied_target: u32,
+}
+
+/// The pilot factory.
+#[derive(Debug)]
+pub struct GlideinFactory {
+    entries: BTreeMap<RegionId, Entry>,
+    pub vo: String,
+    /// Target changes refused because the CE was unreachable.
+    pub refused_updates: u64,
+}
+
+impl GlideinFactory {
+    pub fn new(vo: &str, regions: impl Iterator<Item = RegionId>) -> Self {
+        let entries = regions
+            .map(|r| (r, Entry { region: r, enabled: true, applied_target: 0 }))
+            .collect();
+        GlideinFactory { entries, vo: vo.to_string(), refused_updates: 0 }
+    }
+
+    pub fn entry(&self, region: RegionId) -> Option<&Entry> {
+        self.entries.get(&region)
+    }
+
+    pub fn enabled_entries(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.values().filter(|e| e.enabled)
+    }
+
+    pub fn set_enabled(&mut self, region: RegionId, enabled: bool) {
+        if let Some(e) = self.entries.get_mut(&region) {
+            e.enabled = enabled;
+        }
+    }
+
+    /// Total pilots currently requested across entries.
+    pub fn total_target(&self) -> u32 {
+        self.entries.values().map(|e| e.applied_target).sum()
+    }
+
+    /// Apply per-region pilot targets through the CE to the cloud groups.
+    ///
+    /// New/raised targets require the CE (pilot startup needs the portal);
+    /// *reducing* targets talks to the cloud control plane directly, which
+    /// is how the paper's operators could deprovision everything while the
+    /// CE host was down.
+    pub fn apply_targets(
+        &mut self,
+        targets: &BTreeMap<RegionId, u32>,
+        ce: &mut ComputeElement,
+        fleet: &mut CloudSim,
+        now: SimTime,
+    ) -> Result<(), CeError> {
+        let mut first_err = None;
+        for (region, entry) in self.entries.iter_mut() {
+            let wanted = if entry.enabled {
+                targets.get(region).copied().unwrap_or(0)
+            } else {
+                0
+            };
+            if wanted == entry.applied_target {
+                continue;
+            }
+            if wanted > entry.applied_target {
+                // scale-up goes through the CE
+                match ce.submit_pilot(&self.vo, now) {
+                    Ok(_) => {
+                        fleet.set_target(*region, wanted);
+                        entry.applied_target = wanted;
+                    }
+                    Err(e) => {
+                        self.refused_updates += 1;
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            } else {
+                // scale-down is cloud-native (works during a CE outage)
+                fleet.set_target(*region, wanted);
+                entry.applied_target = wanted;
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Zero every group (the paper's outage response).
+    pub fn deprovision_all(&mut self, fleet: &mut CloudSim) {
+        for entry in self.entries.values_mut() {
+            fleet.set_target(entry.region, 0);
+            entry.applied_target = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::{providers, Provider};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (GlideinFactory, ComputeElement, CloudSim) {
+        let fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+        let regions: Vec<RegionId> = fleet.regions().map(|(r, _)| r).collect();
+        let factory = GlideinFactory::new("icecube", regions.into_iter());
+        let ce = ComputeElement::new("ce", Provider::Azure, &["icecube"]);
+        (factory, ce, fleet)
+    }
+
+    #[test]
+    fn applies_targets_to_fleet() {
+        let (mut factory, mut ce, mut fleet) = setup();
+        let mut targets = BTreeMap::new();
+        targets.insert(RegionId(0), 40u32);
+        targets.insert(RegionId(1), 10u32);
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 0).unwrap();
+        assert_eq!(fleet.region(RegionId(0)).target, 40);
+        assert_eq!(fleet.region(RegionId(1)).target, 10);
+        assert_eq!(factory.total_target(), 50);
+    }
+
+    #[test]
+    fn scale_up_blocked_during_ce_outage() {
+        let (mut factory, mut ce, mut fleet) = setup();
+        ce.set_available(false);
+        let mut targets = BTreeMap::new();
+        targets.insert(RegionId(0), 40u32);
+        let err = factory
+            .apply_targets(&targets, &mut ce, &mut fleet, 0)
+            .unwrap_err();
+        assert_eq!(err, CeError::Unavailable);
+        assert_eq!(fleet.region(RegionId(0)).target, 0);
+        assert_eq!(factory.refused_updates, 1);
+    }
+
+    #[test]
+    fn scale_down_works_during_ce_outage() {
+        let (mut factory, mut ce, mut fleet) = setup();
+        let mut targets = BTreeMap::new();
+        targets.insert(RegionId(0), 40u32);
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 0).unwrap();
+        ce.set_available(false);
+        // the paper: "we quickly de-provisioned all the worker instances"
+        factory.deprovision_all(&mut fleet);
+        assert_eq!(fleet.region(RegionId(0)).target, 0);
+        assert_eq!(factory.total_target(), 0);
+    }
+
+    #[test]
+    fn disabled_entries_forced_to_zero() {
+        let (mut factory, mut ce, mut fleet) = setup();
+        let mut targets = BTreeMap::new();
+        targets.insert(RegionId(0), 40u32);
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 0).unwrap();
+        factory.set_enabled(RegionId(0), false);
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 1).unwrap();
+        assert_eq!(fleet.region(RegionId(0)).target, 0);
+    }
+
+    #[test]
+    fn unchanged_targets_do_not_resubmit() {
+        let (mut factory, mut ce, mut fleet) = setup();
+        let mut targets = BTreeMap::new();
+        targets.insert(RegionId(0), 40u32);
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 0).unwrap();
+        let accepted_before = ce.accepted;
+        factory.apply_targets(&targets, &mut ce, &mut fleet, 1).unwrap();
+        assert_eq!(ce.accepted, accepted_before);
+    }
+}

@@ -1,0 +1,135 @@
+//! The glideinWMS frontend: pressure-based pilot demand.
+//!
+//! Watches the schedd and computes how many glideins the pool *wants*.
+//! The paper's campaign drove targets manually (the ramp plan in
+//! `coordinator`), but the same setup normally runs in this automatic
+//! mode; we implement both and ablate them (DESIGN.md §8).
+
+use crate::condor::Schedd;
+
+/// Frontend demand policy knobs (glideinWMS frontend group config).
+#[derive(Debug, Clone)]
+pub struct FrontendPolicy {
+    /// Keep at least this many glideins while any work is queued.
+    pub min_glideins: u32,
+    /// Never request more than this many glideins in total.
+    pub max_glideins: u32,
+    /// Fraction of idle jobs to cover with new pilots per cycle
+    /// (glideinWMS "idle fraction" curb, avoids over-provisioning
+    /// short-lived spikes).
+    pub idle_fraction: f64,
+    /// Extra pilots kept warm above the running count.
+    pub reserve: u32,
+}
+
+impl Default for FrontendPolicy {
+    fn default() -> Self {
+        FrontendPolicy {
+            min_glideins: 10,
+            max_glideins: 2000,
+            idle_fraction: 0.5,
+            reserve: 50,
+        }
+    }
+}
+
+/// The frontend daemon.
+#[derive(Debug, Default)]
+pub struct GlideinFrontend {
+    pub policy: FrontendPolicy,
+    /// Last computed demand (monitoring).
+    pub last_demand: u32,
+}
+
+impl GlideinFrontend {
+    pub fn new(policy: FrontendPolicy) -> Self {
+        GlideinFrontend { policy, last_demand: 0 }
+    }
+
+    /// Compute total glidein demand from queue pressure.
+    pub fn demand(&mut self, schedd: &Schedd) -> u32 {
+        let idle = schedd.idle_count() as f64;
+        let running = schedd.running_count() as u32;
+        let p = &self.policy;
+        let demand = if idle == 0.0 && running == 0 {
+            0
+        } else {
+            let idle_cover = (idle * p.idle_fraction).ceil() as u32;
+            (running + idle_cover + p.reserve).max(p.min_glideins)
+        };
+        self.last_demand = demand.min(p.max_glideins);
+        self.last_demand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::condor::job::{gpu_job_ad, gpu_requirements};
+    use crate::condor::{Schedd, SlotId};
+
+    fn schedd(idle: u64, running: u64) -> Schedd {
+        let mut s = Schedd::new();
+        for i in 0..(idle + running) {
+            let id = s.submit(
+                "icecube",
+                3600,
+                1e15,
+                100,
+                gpu_job_ad("icecube", 8192),
+                gpu_requirements(),
+                0,
+            );
+            if i >= idle {
+                s.start(id, SlotId::OnPrem(i as u32), 0);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn zero_demand_on_empty_queue() {
+        let mut f = GlideinFrontend::new(FrontendPolicy::default());
+        assert_eq!(f.demand(&schedd(0, 0)), 0);
+    }
+
+    #[test]
+    fn covers_running_plus_idle_fraction() {
+        let mut f = GlideinFrontend::new(FrontendPolicy {
+            min_glideins: 0,
+            max_glideins: 10_000,
+            idle_fraction: 0.5,
+            reserve: 10,
+        });
+        // 100 running + ceil(200*0.5)=100 idle cover + 10 reserve
+        assert_eq!(f.demand(&schedd(200, 100)), 210);
+    }
+
+    #[test]
+    fn respects_max_cap() {
+        let mut f = GlideinFrontend::new(FrontendPolicy {
+            max_glideins: 150,
+            ..FrontendPolicy::default()
+        });
+        assert_eq!(f.demand(&schedd(10_000, 0)), 150);
+    }
+
+    #[test]
+    fn respects_min_floor_with_work() {
+        let mut f = GlideinFrontend::new(FrontendPolicy {
+            min_glideins: 40,
+            max_glideins: 2000,
+            idle_fraction: 0.1,
+            reserve: 0,
+        });
+        assert_eq!(f.demand(&schedd(3, 0)), 40);
+    }
+
+    #[test]
+    fn demand_scales_with_pressure() {
+        let mut f = GlideinFrontend::new(FrontendPolicy::default());
+        let lo = f.demand(&schedd(100, 0));
+        let hi = f.demand(&schedd(2000, 0));
+        assert!(hi > lo);
+    }
+}

@@ -1,0 +1,19 @@
+//! OSG integration layer: Compute Element, glidein factory/frontend,
+//! topology registry, and Gratia-style usage accounting.
+//!
+//! This is the federation glue of the paper: the CE abstracts the cloud
+//! behind a standard OSG portal, the factory maps pilot demand onto
+//! cloud-native group mechanisms (one entry per region), and accounting
+//! produces the GPU-wall-hour records behind Fig 2.
+
+pub mod accounting;
+pub mod ce;
+pub mod factory;
+pub mod frontend;
+pub mod registry;
+
+pub use accounting::{DayUsage, UsageAccounting, T4_FP32_TFLOPS};
+pub use ce::{CeError, ComputeElement};
+pub use factory::GlideinFactory;
+pub use frontend::{FrontendPolicy, GlideinFrontend};
+pub use registry::OsgRegistry;

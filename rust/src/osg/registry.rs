@@ -1,0 +1,112 @@
+//! OSG topology registry: where CEs and VOs are registered.
+//!
+//! A thin model of the OSG registration step the paper describes
+//! ("registered it in OSG with the stated policy of only accepting
+//! IceCube jobs") — resource records with VO allow-lists, plus the VO
+//! membership list itself.
+
+use crate::cloud::Provider;
+
+/// A registered OSG resource (a CE endpoint).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResourceRecord {
+    pub name: String,
+    pub hosted_on: Provider,
+    pub allowed_vos: Vec<String>,
+    pub active: bool,
+}
+
+/// The topology registry.
+#[derive(Debug, Default)]
+pub struct OsgRegistry {
+    resources: Vec<ResourceRecord>,
+    vos: Vec<String>,
+}
+
+impl OsgRegistry {
+    pub fn new() -> Self {
+        let mut r = OsgRegistry::default();
+        // communities relevant to the narrative
+        for vo in ["icecube", "cms", "atlas", "ligo"] {
+            r.register_vo(vo);
+        }
+        r
+    }
+
+    pub fn register_vo(&mut self, vo: &str) {
+        if !self.vos.iter().any(|v| v == vo) {
+            self.vos.push(vo.to_string());
+        }
+    }
+
+    pub fn is_vo(&self, vo: &str) -> bool {
+        self.vos.iter().any(|v| v == vo)
+    }
+
+    /// Register a CE; unknown VOs in the allow-list are rejected.
+    pub fn register_resource(
+        &mut self,
+        name: &str,
+        hosted_on: Provider,
+        allowed_vos: &[&str],
+    ) -> Result<(), String> {
+        if self.resources.iter().any(|r| r.name == name) {
+            return Err(format!("resource '{name}' already registered"));
+        }
+        for vo in allowed_vos {
+            if !self.is_vo(vo) {
+                return Err(format!("unknown VO '{vo}'"));
+            }
+        }
+        self.resources.push(ResourceRecord {
+            name: name.to_string(),
+            hosted_on,
+            allowed_vos: allowed_vos.iter().map(|s| s.to_string()).collect(),
+            active: true,
+        });
+        Ok(())
+    }
+
+    pub fn resource(&self, name: &str) -> Option<&ResourceRecord> {
+        self.resources.iter().find(|r| r.name == name)
+    }
+
+    /// Resources a VO may submit to.
+    pub fn resources_for_vo(&self, vo: &str) -> Vec<&ResourceRecord> {
+        self.resources
+            .iter()
+            .filter(|r| r.active && r.allowed_vos.iter().any(|v| v == vo))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut reg = OsgRegistry::new();
+        reg.register_resource("icecube-cloud-ce", Provider::Azure, &["icecube"])
+            .unwrap();
+        let r = reg.resource("icecube-cloud-ce").unwrap();
+        assert_eq!(r.hosted_on, Provider::Azure);
+        assert_eq!(reg.resources_for_vo("icecube").len(), 1);
+        assert!(reg.resources_for_vo("cms").is_empty());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut reg = OsgRegistry::new();
+        reg.register_resource("ce", Provider::Aws, &["icecube"]).unwrap();
+        assert!(reg.register_resource("ce", Provider::Gcp, &["cms"]).is_err());
+    }
+
+    #[test]
+    fn unknown_vo_rejected() {
+        let mut reg = OsgRegistry::new();
+        assert!(reg
+            .register_resource("ce", Provider::Aws, &["nonexistent"])
+            .is_err());
+    }
+}

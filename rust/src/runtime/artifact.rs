@@ -1,0 +1,260 @@
+//! AOT artifact metadata and Rust-side input builders.
+//!
+//! `artifacts/meta.json` (written by `python -m compile.aot`) describes
+//! every compiled variant: shapes, FLOP estimate, file name.  The input
+//! builders mirror `python/compile/geometry.py` so the Rust hot path can
+//! synthesize the same detector geometry and ice model the pytest oracle
+//! validated.
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Constants mirrored from python/compile/geometry.py.
+pub const DOM_SPACING_M: f32 = 17.0;
+pub const R_DOM_EFF: f32 = 0.16510 * 12.0;
+pub const V_GROUP_M_NS: f32 = 0.299_792_458 / 1.35;
+pub const N_LAYERS: usize = 10;
+
+/// One compiled variant's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    pub file: String,
+    pub num_photons: u64,
+    pub block: u64,
+    pub num_doms: u64,
+    pub num_steps: u64,
+    pub num_layers: u64,
+    pub flops_estimate: f64,
+}
+
+/// Parsed artifacts/meta.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl ArtifactMeta {
+    /// Load from `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| format!("cannot read {}: {e}", meta_path.display()))?;
+        let root = json::parse(&text).map_err(|e| e.to_string())?;
+        let variants_obj = root
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or("meta.json: missing 'variants' object")?;
+        let mut variants = Vec::new();
+        for (name, v) in variants_obj {
+            let get = |key: &str| -> Result<f64, String> {
+                v.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or(format!("meta.json: variant {name} missing {key}"))
+            };
+            variants.push(VariantMeta {
+                name: name.clone(),
+                file: v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or(format!("variant {name} missing file"))?
+                    .to_string(),
+                num_photons: get("num_photons")? as u64,
+                block: get("block")? as u64,
+                num_doms: get("num_doms")? as u64,
+                num_steps: get("num_steps")? as u64,
+                num_layers: get("num_layers")? as u64,
+                flops_estimate: get("flops_estimate")?,
+            });
+        }
+        variants.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ArtifactMeta { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    pub fn hlo_path(&self, v: &VariantMeta) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+/// Inputs for one artifact execution (mirrors geometry.variant_inputs).
+#[derive(Debug, Clone)]
+pub struct PhotonInputs {
+    pub source: [f32; 8],
+    /// Row-major [num_layers][4]: scat_len, abs_len, g, pad.
+    pub media: Vec<f32>,
+    /// Row-major [num_doms][3].
+    pub doms: Vec<f32>,
+    pub params: [f32; 8],
+}
+
+/// Build DOM positions: single string for <=80 DOMs, 2x2 string grid above.
+pub fn dom_positions(num_doms: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(num_doms * 3);
+    if num_doms <= 80 {
+        for i in 0..num_doms {
+            out.extend_from_slice(&[0.0, 0.0, -DOM_SPACING_M * i as f32]);
+        }
+    } else {
+        let per = num_doms / 4;
+        let pitch = 125.0f32;
+        for ix in 0..2 {
+            for iy in 0..2 {
+                let x = ix as f32 * pitch - pitch / 2.0;
+                let y = iy as f32 * pitch - pitch / 2.0;
+                for i in 0..per {
+                    out.extend_from_slice(&[x, y, -DOM_SPACING_M * i as f32]);
+                }
+            }
+        }
+        out.truncate(num_doms * 3);
+    }
+    out
+}
+
+/// Layered ice with the default dust layer (mirrors geometry.layered_ice).
+pub fn layered_ice(num_layers: usize, dusty: bool) -> Vec<f32> {
+    let mut media = Vec::with_capacity(num_layers * 4);
+    for _ in 0..num_layers {
+        media.extend_from_slice(&[25.0, 100.0, 0.9, 0.0]);
+    }
+    if dusty && num_layers >= 3 {
+        let mid = num_layers / 2;
+        media[mid * 4] = 5.0;
+        media[mid * 4 + 1] = 20.0;
+    }
+    media
+}
+
+/// Build the full input set for a variant + seed.
+pub fn build_inputs(v: &VariantMeta, seed: u32, dusty: bool) -> PhotonInputs {
+    let doms = dom_positions(v.num_doms as usize);
+    // mean z of the DOM array
+    let mut mid_z = 0.0f32;
+    for i in 0..v.num_doms as usize {
+        mid_z += doms[i * 3 + 2];
+    }
+    mid_z /= v.num_doms as f32;
+
+    let depth_span = DOM_SPACING_M * (v.num_doms as f32 + 4.0);
+    let params = [
+        R_DOM_EFF,
+        40.0,
+        depth_span / N_LAYERS as f32,
+        V_GROUP_M_NS,
+        1e-7,
+        0.0,
+        0.0,
+        0.0,
+    ];
+    let source = [10.0, 0.0, mid_z, 0.0, 0.0, 0.0, 0.0, seed as f32];
+    PhotonInputs {
+        source,
+        media: layered_ice(v.num_layers as usize, dusty),
+        doms,
+        params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_repo_meta_if_built() {
+        let Some(dir) = meta_dir() else { return };
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert!(meta.variant("default").is_some());
+        let v = meta.variant("default").unwrap();
+        assert_eq!(v.num_photons, 4096);
+        assert_eq!(v.num_doms, 60);
+        assert!(v.flops_estimate > 0.0);
+        assert!(meta.hlo_path(v).exists());
+    }
+
+    #[test]
+    fn parses_meta_from_string_fixture() {
+        let dir = std::env::temp_dir().join("icecloud-meta-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"artifact_version":1,"variants":{"tiny":{
+                "file":"photon_tiny.hlo.txt","num_photons":64,"block":32,
+                "num_doms":8,"num_steps":4,"num_layers":10,"grid":2,
+                "flops_estimate":74240.0,"inputs":[],"outputs":[]}}}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        let v = meta.variant("tiny").unwrap();
+        assert_eq!(v.block, 32);
+        assert_eq!(v.num_steps, 4);
+        assert_eq!(v.flops_estimate, 74240.0);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(ArtifactMeta::load(Path::new("/nonexistent-xyz")).is_err());
+    }
+
+    #[test]
+    fn dom_positions_single_string() {
+        let doms = dom_positions(60);
+        assert_eq!(doms.len(), 180);
+        assert_eq!(doms[0..3], [0.0, 0.0, 0.0]);
+        assert_eq!(doms[3 * 59 + 2], -17.0 * 59.0);
+    }
+
+    #[test]
+    fn dom_positions_grid_for_large() {
+        let doms = dom_positions(240);
+        assert_eq!(doms.len(), 720);
+        // four distinct (x, y) columns
+        let mut cols = std::collections::BTreeSet::new();
+        for i in 0..240 {
+            cols.insert((doms[i * 3] as i32, doms[i * 3 + 1] as i32));
+        }
+        assert_eq!(cols.len(), 4);
+    }
+
+    #[test]
+    fn ice_has_dust_layer() {
+        let media = layered_ice(10, true);
+        assert_eq!(media.len(), 40);
+        assert_eq!(media[5 * 4], 5.0); // dust scattering length
+        let clear = layered_ice(10, false);
+        assert_eq!(clear[5 * 4], 25.0);
+    }
+
+    #[test]
+    fn inputs_match_python_layout() {
+        let v = VariantMeta {
+            name: "x".into(),
+            file: "f".into(),
+            num_photons: 256,
+            block: 128,
+            num_doms: 16,
+            num_steps: 16,
+            num_layers: 10,
+            flops_estimate: 1.0,
+        };
+        let inp = build_inputs(&v, 7, true);
+        assert_eq!(inp.source[7], 7.0);
+        assert_eq!(inp.source[0], 10.0);
+        assert_eq!(inp.params[0], R_DOM_EFF);
+        assert!((inp.params[3] - 0.2220685).abs() < 1e-5);
+        assert_eq!(inp.media.len(), 40);
+        assert_eq!(inp.doms.len(), 48);
+        // source z is the mean DOM depth
+        let mean_z: f32 = (0..16).map(|i| -17.0 * i as f32).sum::<f32>() / 16.0;
+        assert!((inp.source[2] - mean_z).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime bridge: the Rust end of the AOT (JAX/Pallas -> HLO text)
+//! pipeline. Loads `artifacts/*.hlo.txt`, compiles once on the PJRT CPU
+//! client, and executes photon bunches from the coordinator's hot path —
+//! Python never runs at simulation/serving time.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, PhotonInputs, VariantMeta};
+pub use engine::{BunchResult, PhotonEngine, PhotonExecutable};

@@ -1,0 +1,224 @@
+//! Time-ordered event queue with deterministic FIFO tie-breaking.
+
+use super::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, and break
+        // ties by insertion order so same-time events run FIFO.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue of `(SimTime, E)` events.
+///
+/// Events scheduled for the same time pop in the order they were pushed,
+/// which keeps replays bit-for-bit reproducible.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now if earlier).
+    pub fn push_at(&mut self, at: SimTime, event: E) {
+        let at = at.max(self.now);
+        self.heap.push(Entry { time: at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after `delay` seconds.
+    pub fn push_after(&mut self, delay: SimTime, event: E) {
+        self.push_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let entry = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now, "time must be monotonic");
+        self.now = entry.time;
+        Some((entry.time, entry.event))
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Recurring-tick helper: tracks the next due time of a fixed-period loop.
+///
+/// Control loops (negotiator cycle, reconciliation, billing, sampling) ask
+/// `due(now)` and re-arm automatically; the phase offset keeps different
+/// loops from all firing on the same second.
+#[derive(Debug, Clone)]
+pub struct Ticker {
+    period: SimTime,
+    next: SimTime,
+}
+
+impl Ticker {
+    pub fn new(period: SimTime, phase: SimTime) -> Self {
+        assert!(period > 0);
+        Ticker { period, next: phase }
+    }
+
+    /// True when the loop is due at `now`; re-arms for the next period.
+    /// Catches up (fires once) after a long gap rather than firing N times.
+    pub fn due(&mut self, now: SimTime) -> bool {
+        if now < self.next {
+            return false;
+        }
+        // advance past `now`, skipping missed periods
+        let missed = (now - self.next) / self.period;
+        self.next += (missed + 1) * self.period;
+        true
+    }
+
+    pub fn next_due(&self) -> SimTime {
+        self.next
+    }
+
+    pub fn period(&self) -> SimTime {
+        self.period
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(30, "c");
+        q.push_at(10, "a");
+        q.push_at(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push_at(5, "first");
+        q.push_at(5, "second");
+        q.push_at(5, "third");
+        assert_eq!(q.pop().unwrap().1, "first");
+        assert_eq!(q.pop().unwrap().1, "second");
+        assert_eq!(q.pop().unwrap().1, "third");
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push_at(10, ());
+        q.push_at(20, ());
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 10);
+        q.pop();
+        assert_eq!(q.now(), 20);
+    }
+
+    #[test]
+    fn push_in_past_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(100, "later");
+        q.pop();
+        q.push_at(50, "past"); // clamped to 100
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (100, "past"));
+    }
+
+    #[test]
+    fn push_after_is_relative() {
+        let mut q = EventQueue::new();
+        q.push_at(100, "a");
+        q.pop();
+        q.push_after(5, "b");
+        assert_eq!(q.pop().unwrap(), (105, "b"));
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        q.push_at(42, ());
+        assert_eq!(q.peek_time(), Some(42));
+        assert_eq!(q.now(), 0);
+    }
+
+    #[test]
+    fn ticker_fires_on_period() {
+        let mut t = Ticker::new(60, 0);
+        assert!(t.due(0));
+        assert!(!t.due(30));
+        assert!(t.due(60));
+        assert!(!t.due(61));
+        assert!(t.due(120));
+    }
+
+    #[test]
+    fn ticker_phase_offset() {
+        let mut t = Ticker::new(60, 15);
+        assert!(!t.due(0));
+        assert!(t.due(15));
+        assert_eq!(t.next_due(), 75);
+    }
+
+    #[test]
+    fn ticker_catches_up_once_after_gap() {
+        let mut t = Ticker::new(60, 0);
+        assert!(t.due(0));
+        // long gap: fires once, then re-arms in the future
+        assert!(t.due(1000));
+        assert!(!t.due(1001));
+        assert_eq!(t.next_due(), 1020);
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event simulation core.
+//!
+//! The campaign replay is a deterministic DES: a virtual clock in whole
+//! seconds, a time-ordered event queue with FIFO tie-breaking, and a
+//! recurring-tick helper for the many control loops in the stack
+//! (negotiation cycles, group reconciliation, billing accrual, monitoring
+//! samples).  Subsystems never read wall-clock time.
+
+mod events;
+
+pub use events::{EventQueue, Ticker};
+
+/// Simulated time in whole seconds since campaign start.
+pub type SimTime = u64;
+
+/// Seconds per simulated day.
+pub const DAY: SimTime = 86_400;
+/// Seconds per simulated hour.
+pub const HOUR: SimTime = 3_600;
+/// Seconds per simulated minute.
+pub const MINUTE: SimTime = 60;

@@ -1,0 +1,196 @@
+//! Tiny declarative CLI argument parser (no clap in the offline env).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// CLI command description: options + flags + positional docs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str,
+               default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Parse the arguments following the subcommand name.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        // seed defaults
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for o in &self.opts {
+            let meta = if o.takes_value { " <value>" } else { "" };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{}\n      {}{}", o.name, meta, o.help, def);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("campaign", "run the two-week campaign")
+            .opt("seed", "rng seed", Some("42"))
+            .opt("out", "output dir", None)
+            .flag("real-compute", "execute PJRT artifacts")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("real-compute"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&argv(&["--seed", "7", "--out=results"])).unwrap();
+        assert_eq!(a.get_u64("seed"), Some(7));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&argv(&["--real-compute", "extra1", "extra2"])).unwrap();
+        assert!(a.flag("real-compute"));
+        assert_eq!(a.positional(), &["extra1".to_string(), "extra2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--real-compute=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--seed"));
+        assert!(h.contains("default: 42"));
+    }
+}

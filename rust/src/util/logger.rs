@@ -1,0 +1,151 @@
+//! Leveled logger with simulated-time prefixes.
+//!
+//! The coordinator logs in *simulation time* (day/hh:mm of the campaign),
+//! which is what an operator would see in the monitoring dashboards.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static SINK: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+/// Set the global verbosity threshold.
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" | "warning" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
+/// Route log lines into an in-memory buffer (tests) instead of stderr.
+pub fn capture(enable: bool) {
+    let mut sink = SINK.lock().unwrap();
+    *sink = if enable { Some(Vec::new()) } else { None };
+}
+
+/// Drain captured lines (empty if capture is off).
+pub fn drain_captured() -> Vec<String> {
+    let mut sink = SINK.lock().unwrap();
+    match sink.as_mut() {
+        Some(buf) => std::mem::take(buf),
+        None => Vec::new(),
+    }
+}
+
+/// Log a message stamped with simulated time (seconds since campaign start).
+pub fn log(level: Level, sim_secs: u64, component: &str, msg: &str) {
+    if (level as u8) < THRESHOLD.load(Ordering::Relaxed) {
+        return;
+    }
+    let line = format!(
+        "[{} {}] {:<12} {}",
+        sim_day_hms(sim_secs),
+        level.tag(),
+        component,
+        msg
+    );
+    let mut sink = SINK.lock().unwrap();
+    match sink.as_mut() {
+        Some(buf) => buf.push(line),
+        None => {
+            let _ = writeln!(std::io::stderr(), "{line}");
+        }
+    }
+}
+
+/// Format simulated seconds as `dD hh:mm:ss`.
+pub fn sim_day_hms(sim_secs: u64) -> String {
+    let days = sim_secs / 86_400;
+    let rem = sim_secs % 86_400;
+    format!(
+        "d{:02} {:02}:{:02}:{:02}",
+        days,
+        rem / 3600,
+        (rem % 3600) / 60,
+        rem % 60
+    )
+}
+
+#[macro_export]
+macro_rules! sim_info {
+    ($now:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, $now, $comp,
+                                  &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sim_warn {
+    ($now:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, $now, $comp,
+                                  &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sim_debug {
+    ($now:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, $now, $comp,
+                                  &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn day_hms_formatting() {
+        assert_eq!(sim_day_hms(0), "d00 00:00:00");
+        assert_eq!(sim_day_hms(86_400 + 3661), "d01 01:01:01");
+        assert_eq!(sim_day_hms(13 * 86_400 + 86_399), "d13 23:59:59");
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(level_from_str("debug"), Some(Level::Debug));
+        assert_eq!(level_from_str("WARN"), Some(Level::Warn));
+        assert_eq!(level_from_str("nope"), None);
+    }
+
+    #[test]
+    fn capture_and_threshold() {
+        capture(true);
+        set_level(Level::Info);
+        log(Level::Debug, 0, "test", "hidden");
+        log(Level::Warn, 60, "test", "shown");
+        let lines = drain_captured();
+        capture(false);
+        set_level(Level::Info);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("shown"));
+        assert!(lines[0].contains("d00 00:01:00"));
+    }
+}

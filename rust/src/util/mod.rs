@@ -1,0 +1,13 @@
+//! Offline-environment substrates: the small libraries `icecloud` would
+//! normally pull from crates.io (serde/clap/criterion/proptest are not
+//! available in the hermetic build), implemented in-tree.
+
+pub mod bench;
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;

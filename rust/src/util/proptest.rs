@@ -1,0 +1,180 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! `forall` drives a generator + property closure for N cases from a
+//! deterministic seed; on failure it greedily shrinks the counterexample
+//! with a user-supplied shrinker before panicking with the minimal case.
+//!
+//! Used by `rust/tests/prop_*.rs` for coordinator/matchmaking invariants.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: fail with a formatted message when `cond` is false.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics on the first (shrunk)
+/// failure with a reproduction seed.
+pub fn forall<T: Clone + Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    generate: impl Fn(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (min_input, min_msg, steps) =
+                shrink_failure(input, first_msg, &shrink, &prop);
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case_idx}, \
+                 shrink_steps={steps}):\n  input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking: repeatedly take the first shrunk candidate that still
+/// fails, up to a step budget.
+fn shrink_failure<T: Clone + Debug>(
+    mut input: T,
+    mut msg: String,
+    shrink: &impl Fn(&T) -> Vec<T>,
+    prop: &impl Fn(&T) -> PropResult,
+) -> (T, String, usize) {
+    let mut steps = 0;
+    'outer: while steps < 1000 {
+        for candidate in shrink(&input) {
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg, steps)
+}
+
+/// No shrinking.
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrink a u64 toward zero (halving + decrement).
+pub fn shrink_u64(v: &u64) -> Vec<u64> {
+    let v = *v;
+    let mut out = Vec::new();
+    if v > 0 {
+        out.push(v / 2);
+        out.push(v - 1);
+    }
+    out.dedup();
+    out
+}
+
+/// Shrink a vec by dropping halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut smaller = v.clone();
+            smaller.remove(i);
+            out.push(smaller);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            "sum-commutes",
+            1,
+            200,
+            |r| (r.below(1000), r.below(1000)),
+            no_shrink,
+            |(a, b)| ensure(a + b == b + a, "addition must commute"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn failing_property_panics() {
+        forall(
+            "always-small",
+            2,
+            200,
+            |r| r.below(1000),
+            shrink_u64,
+            |v| ensure(*v < 990, format!("{v} too big")),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_u64() {
+        // capture the panic message and check the counterexample is minimal
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                "min-ce",
+                3,
+                500,
+                |r| r.below(10_000),
+                shrink_u64,
+                |v| ensure(*v < 500, "too big"),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // greedy shrink must land exactly on the boundary value 500
+        assert!(msg.contains("input: 500"), "got: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_reduces() {
+        let v = vec![1, 2, 3, 4];
+        let cands = shrink_vec(&v);
+        assert!(cands.iter().any(|c| c.len() == 2));
+        assert!(cands.iter().any(|c| c.len() == 3));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        use std::cell::RefCell;
+        let seen_a = RefCell::new(Vec::new());
+        forall("collect-a", 7, 10, |r| r.below(100), no_shrink, |v| {
+            seen_a.borrow_mut().push(*v);
+            Ok(())
+        });
+        let seen_b = RefCell::new(Vec::new());
+        forall("collect-b", 7, 10, |r| r.below(100), no_shrink, |v| {
+            seen_b.borrow_mut().push(*v);
+            Ok(())
+        });
+        assert_eq!(seen_a.into_inner(), seen_b.into_inner());
+    }
+}

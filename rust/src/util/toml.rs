@@ -1,0 +1,312 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the subset a launcher config actually needs: `[table]` and
+//! `[dotted.table]` headers, `key = value` pairs with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments, and dotted
+//! keys.  Parses into the [`Json`] tree (one value model everywhere), so
+//! config lookup shares the same `get_path` API as artifact metadata.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse error: line number (1-based) + message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, message: msg.into() }
+}
+
+/// Parse a TOML-subset document into a `Json::Obj` tree.
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated table header"))?;
+            if header.starts_with('[') {
+                return Err(err(lineno, "array-of-tables not supported"));
+            }
+            current_path = split_dotted(header, lineno)?;
+            // materialize the table so empty sections exist
+            ensure_table(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key_part = line[..eq].trim();
+        let val_part = line[eq + 1..].trim();
+        if key_part.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        if val_part.is_empty() {
+            return Err(err(lineno, "empty value"));
+        }
+        let mut path = current_path.clone();
+        path.extend(split_dotted(key_part, lineno)?);
+        let value = parse_value(val_part, lineno)?;
+        insert(&mut root, &path, value, lineno)?;
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_dotted(s: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
+    let parts: Vec<String> =
+        s.split('.').map(|p| p.trim().trim_matches('"').to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(err(lineno, "empty path segment"));
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let entry =
+            cur.entry(seg.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(err(lineno, format!("'{seg}' is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    value: Json,
+    lineno: usize,
+) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().expect("non-empty path");
+    let table = ensure_table(root, parents, lineno)?;
+    if table.contains_key(last) {
+        return Err(err(lineno, format!("duplicate key '{last}'")));
+    }
+    table.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Json, TomlError> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Json::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // numbers: allow underscores as TOML does
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Json::Num(v as f64));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Json::Num(v));
+    }
+    Err(err(lineno, format!("cannot parse value: {s}")))
+}
+
+/// Split array items at top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = r#"
+# campaign config
+seed = 42
+name = "exercise"
+
+[budget]
+total_usd = 58000.0
+alerts = [0.75, 0.5, 0.25, 0.1]
+
+[cloud.azure]
+enabled = true
+regions = ["eastus", "westeurope"]
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get_path(&["seed"]).unwrap().as_u64(), Some(42));
+        assert_eq!(v.get_path(&["name"]).unwrap().as_str(), Some("exercise"));
+        assert_eq!(
+            v.get_path(&["budget", "total_usd"]).unwrap().as_f64(),
+            Some(58000.0)
+        );
+        assert_eq!(
+            v.get_path(&["budget", "alerts"]).unwrap().as_arr().unwrap().len(),
+            4
+        );
+        assert_eq!(
+            v.get_path(&["cloud", "azure", "enabled"]).unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(
+            v.get_path(&["cloud", "azure", "regions"])
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
+                .as_str(),
+            Some("eastus")
+        );
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let v = parse("a.b.c = 1").unwrap();
+        assert_eq!(v.get_path(&["a", "b", "c"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let v = parse(r##"s = "a # not comment""##).unwrap();
+        assert_eq!(v.get_path(&["s"]).unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let v = parse("n = 1_209_600").unwrap();
+        assert_eq!(v.get_path(&["n"]).unwrap().as_u64(), Some(1_209_600));
+    }
+
+    #[test]
+    fn negative_and_float() {
+        let v = parse("a = -3\nb = 2.5e2").unwrap();
+        assert_eq!(v.get_path(&["a"]).unwrap().as_f64(), Some(-3.0));
+        assert_eq!(v.get_path(&["b"]).unwrap().as_f64(), Some(250.0));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn scalar_then_table_conflict_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn empty_table_materialized() {
+        let v = parse("[empty]\n[other]\nx = 1").unwrap();
+        assert!(v.get_path(&["empty"]).unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "line1\nline2\t\"q\"""#).unwrap();
+        assert_eq!(v.get_path(&["s"]).unwrap().as_str(),
+                   Some("line1\nline2\t\"q\""));
+    }
+
+    #[test]
+    fn array_of_strings_with_commas() {
+        let v = parse(r#"a = ["x,y", "z"]"#).unwrap();
+        let arr = v.get_path(&["a"]).unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_str(), Some("x,y"));
+        assert_eq!(arr[1].as_str(), Some("z"));
+    }
+}

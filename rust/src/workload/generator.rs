@@ -1,0 +1,147 @@
+//! Job backlog generator.
+//!
+//! IceCube's production queue always has more simulation work than GPUs
+//! ("plenty of work queued" is the operating regime that makes doubling
+//! capacity useful).  The generator keeps the schedd's idle queue topped
+//! up to a multiple of the worker population so the negotiator is never
+//! starved, without materializing millions of job records up front.
+
+use super::icecube::{job_spec, JobSpec, RuntimeModel};
+use crate::condor::job::{gpu_job_ad, gpu_requirements};
+use crate::condor::Schedd;
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Keep idle queue at least this multiple of the worker count.
+    pub backlog_factor: f64,
+    /// Floor for the idle queue even with no workers yet.
+    pub min_backlog: usize,
+    /// Memory request carried in the job ad (MB).
+    pub request_memory_mb: i64,
+    pub runtimes: RuntimeModel,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            backlog_factor: 1.5,
+            min_backlog: 500,
+            request_memory_mb: 8192,
+            runtimes: RuntimeModel::default(),
+        }
+    }
+}
+
+/// The backlog maintainer.
+pub struct JobGenerator {
+    pub config: GeneratorConfig,
+    rng: Rng,
+    flops_per_bunch: f64,
+    pub submitted: u64,
+}
+
+impl JobGenerator {
+    pub fn new(config: GeneratorConfig, flops_per_bunch: f64, rng: Rng) -> Self {
+        JobGenerator { config, rng, flops_per_bunch, submitted: 0 }
+    }
+
+    /// Sample one job spec (used directly by unit benches too).
+    pub fn sample_spec(&mut self) -> JobSpec {
+        let runtime = self.config.runtimes.sample(&mut self.rng);
+        job_spec(runtime, self.flops_per_bunch)
+    }
+
+    /// Top the idle queue up to the configured backlog.
+    /// Returns how many jobs were submitted.
+    pub fn replenish(
+        &mut self,
+        schedd: &mut Schedd,
+        workers: usize,
+        now: SimTime,
+    ) -> usize {
+        let want = ((workers as f64 * self.config.backlog_factor) as usize)
+            .max(self.config.min_backlog);
+        let idle = schedd.idle_count();
+        if idle >= want {
+            return 0;
+        }
+        let n = want - idle;
+        for _ in 0..n {
+            let spec = self.sample_spec();
+            schedd.submit(
+                "icecube",
+                spec.runtime_s,
+                spec.flops,
+                spec.bunches,
+                gpu_job_ad("icecube", self.config.request_memory_mb),
+                gpu_requirements(),
+                now,
+            );
+        }
+        self.submitted += n as u64;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generator() -> JobGenerator {
+        JobGenerator::new(GeneratorConfig::default(), 1e12, Rng::new(5))
+    }
+
+    #[test]
+    fn fills_to_min_backlog() {
+        let mut g = generator();
+        let mut s = Schedd::new();
+        let n = g.replenish(&mut s, 0, 0);
+        assert_eq!(n, 500);
+        assert_eq!(s.idle_count(), 500);
+    }
+
+    #[test]
+    fn scales_with_worker_count() {
+        let mut g = generator();
+        let mut s = Schedd::new();
+        g.replenish(&mut s, 2000, 0);
+        assert_eq!(s.idle_count(), 3000);
+    }
+
+    #[test]
+    fn no_overfill_when_queue_deep() {
+        let mut g = generator();
+        let mut s = Schedd::new();
+        g.replenish(&mut s, 1000, 0);
+        let before = s.idle_count();
+        let n = g.replenish(&mut s, 100, 1);
+        assert_eq!(n, 0);
+        assert_eq!(s.idle_count(), before);
+    }
+
+    #[test]
+    fn submitted_jobs_are_icecube_gpu_jobs() {
+        let mut g = generator();
+        let mut s = Schedd::new();
+        g.replenish(&mut s, 0, 7);
+        let job = s.job(crate::condor::JobId(0));
+        assert_eq!(job.owner, "icecube");
+        assert!(job.runtime_s >= 600);
+        assert!(job.flops > 0.0);
+        assert!(job.bunches >= 1);
+        assert_eq!(job.submitted_at, 7);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let sample = |seed| {
+            let mut g = JobGenerator::new(
+                GeneratorConfig::default(), 1e12, Rng::new(seed));
+            (0..32).map(|_| g.sample_spec().runtime_s).collect::<Vec<_>>()
+        };
+        assert_eq!(sample(9), sample(9));
+        assert_ne!(sample(9), sample(10));
+    }
+}

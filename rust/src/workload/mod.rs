@@ -1,0 +1,10 @@
+//! IceCube workload substrate: photon-propagation job model, backlog
+//! generator, and the on-prem baseline pool.
+
+pub mod generator;
+pub mod icecube;
+pub mod onprem;
+
+pub use generator::{GeneratorConfig, JobGenerator};
+pub use icecube::{job_spec, JobSpec, RuntimeModel, ACHIEVED_EFFICIENCY};
+pub use onprem::{register_onprem, OnPremConfig};

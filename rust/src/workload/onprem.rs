@@ -1,0 +1,97 @@
+//! The on-prem GPU pool baseline.
+//!
+//! IceCube's existing (non-cloud) GPU capacity across OSG sites: in 2020
+//! OSG delivered ~8M GPU-hours (~910 GPU-equivalents year-round); during
+//! the two-week exercise IceCube's on-prem share averaged ~1.1k busy
+//! GPUs.  These workers join the same pool and run the same queue — the
+//! Fig-2 baseline against which the cloud doubling is measured.
+
+use crate::condor::startd::{SlotId, Startd};
+use crate::condor::CondorPool;
+use crate::net::NatProfile;
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Configuration of the static on-prem pool.
+#[derive(Debug, Clone)]
+pub struct OnPremConfig {
+    /// Number of on-prem GPU slots.
+    pub slots: u32,
+    /// Keepalive used by on-prem workers (no NAT issue on-prem).
+    pub keepalive_s: u64,
+    /// Fraction of slots that are effectively available (site downtimes,
+    /// other VOs winning shares).
+    pub availability: f64,
+}
+
+impl Default for OnPremConfig {
+    fn default() -> Self {
+        OnPremConfig { slots: 1150, keepalive_s: 300, availability: 0.97 }
+    }
+}
+
+/// Register the on-prem workers with the pool.
+/// Returns the number of slots actually brought up.
+pub fn register_onprem(
+    pool: &mut CondorPool,
+    config: &OnPremConfig,
+    rng: &mut Rng,
+    now: SimTime,
+) -> u32 {
+    let mut up = 0;
+    for i in 0..config.slots {
+        if !rng.chance(config.availability) {
+            continue;
+        }
+        let slot = SlotId::OnPrem(i);
+        let startd = Startd::new(
+            slot,
+            "onprem",
+            None,
+            "osg/onprem",
+            NatProfile::permissive("onprem"),
+            config.keepalive_s,
+            now,
+        );
+        pool.add_startd(startd, now);
+        up += 1;
+    }
+    up
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registers_about_availability_fraction() {
+        let mut pool = CondorPool::new();
+        let mut rng = Rng::new(3);
+        let up = register_onprem(&mut pool, &OnPremConfig::default(), &mut rng, 0);
+        assert!(up > 1050 && up <= 1150, "up={up}");
+        assert_eq!(pool.num_startds(), up as usize);
+    }
+
+    #[test]
+    fn onprem_slots_are_tagged() {
+        let mut pool = CondorPool::new();
+        let mut rng = Rng::new(3);
+        register_onprem(
+            &mut pool,
+            &OnPremConfig { slots: 10, availability: 1.0, ..Default::default() },
+            &mut rng,
+            0,
+        );
+        let d = pool.startd(SlotId::OnPrem(0)).unwrap();
+        assert_eq!(d.pool_tag, "onprem");
+        assert!(d.provider.is_none());
+    }
+
+    #[test]
+    fn full_availability_registers_all() {
+        let mut pool = CondorPool::new();
+        let mut rng = Rng::new(4);
+        let cfg = OnPremConfig { slots: 100, availability: 1.0, ..Default::default() };
+        assert_eq!(register_onprem(&mut pool, &cfg, &mut rng, 0), 100);
+    }
+}

@@ -1,0 +1,196 @@
+//! Cross-module integration tests: the whole stack composed through the
+//! public API, at reduced scale.
+
+use icecloud::config::{CampaignConfig, OutageSpec, PolicyMode, ProviderWeights,
+                       RampStep};
+use icecloud::coordinator::Campaign;
+use icecloud::experiments::{fig1, fig2, headline};
+use icecloud::sim::{DAY, HOUR, MINUTE};
+
+fn base_config() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 3 * DAY;
+    c.ramp = vec![
+        RampStep { target: 30, hold_s: 6 * HOUR },
+        RampStep { target: 100, hold_s: 60 * DAY },
+    ];
+    c.outage = Some(OutageSpec { at_s: 2 * DAY, duration_s: 2 * HOUR });
+    c.post_outage_target = 50;
+    c.low_budget_resume_fraction = 1.1;
+    c.onprem.slots = 80;
+    c.generator.min_backlog = 300;
+    c
+}
+
+#[test]
+fn full_stack_reproduces_fig1_shape() {
+    let result = Campaign::new(base_config()).run();
+    let fig = fig1::extract(&result);
+    let checks = fig.checks();
+    assert!(checks.peak >= 85.0, "peak={}", checks.peak);
+    assert!(checks.collapse_min <= 5.0, "collapse={}", checks.collapse_min);
+    assert!(checks.resume_level >= 35.0 && checks.resume_level <= 65.0,
+            "resume={}", checks.resume_level);
+    assert!(checks.ramp_monotonic_until_peak);
+}
+
+#[test]
+fn full_stack_reproduces_fig2_doubling() {
+    let mut c = base_config();
+    // match cloud scale to on-prem scale so the factor is ~2x
+    c.ramp = vec![RampStep { target: 85, hold_s: 60 * DAY }];
+    c.outage = None;
+    let result = Campaign::new(c).run();
+    let fig = fig2::extract(&result);
+    assert!(
+        fig.expansion_factor > 1.6 && fig.expansion_factor < 2.4,
+        "factor={}",
+        fig.expansion_factor
+    );
+}
+
+#[test]
+fn headline_shape_holds_end_to_end() {
+    let result = Campaign::new(base_config()).run();
+    let h = headline::extract(&result);
+    h.check_shape().unwrap();
+    assert!(h.total_cost_usd > 0.0);
+    assert!(h.goodput_fraction > 0.8, "goodput={}", h.goodput_fraction);
+    // cost consistency: ledger total == sum of provider meters (+overhead)
+    let meter_total = result.meter.total_spend();
+    assert!((h.total_cost_usd - meter_total).abs() < 1e-6);
+}
+
+#[test]
+fn cost_scales_with_fleet_size() {
+    let run = |gpus: u32| {
+        let mut c = base_config();
+        c.outage = None;
+        c.duration_s = DAY;
+        c.ramp = vec![RampStep { target: gpus, hold_s: 60 * DAY }];
+        Campaign::new(c).run().ledger.total_spent()
+    };
+    let small = run(50);
+    let large = run(200);
+    assert!(large > small * 3.0, "small={small} large={large}");
+}
+
+#[test]
+fn onprem_only_baseline_has_no_cloud_spend() {
+    let mut c = base_config();
+    c.ramp = vec![RampStep { target: 0, hold_s: 60 * DAY }];
+    c.outage = None;
+    let result = Campaign::new(c).run();
+    assert_eq!(result.ledger.total_spent(), 0.0);
+    assert_eq!(result.usage.total_cloud_gpu_hours(), 0.0);
+    assert!(result.usage.total_onprem_gpu_hours() > 0.0);
+    assert!(result.schedd_stats.completed > 0);
+}
+
+#[test]
+fn adaptive_policy_runs_and_favors_azure() {
+    let mut c = base_config();
+    c.policy = PolicyMode::Adaptive;
+    c.outage = None;
+    let result = Campaign::new(c).run();
+    let azure_hours = result.provider_ops[2].2;
+    let aws_hours = result.provider_ops[0].2;
+    assert!(
+        azure_hours > aws_hours,
+        "adaptive must favor cheap+stable azure ({azure_hours} vs {aws_hours})"
+    );
+}
+
+#[test]
+fn uniform_policy_spreads_load() {
+    let mut c = base_config();
+    c.policy = PolicyMode::Fixed(ProviderWeights {
+        aws: 1.0 / 3.0,
+        gcp: 1.0 / 3.0,
+        azure: 1.0 / 3.0,
+    });
+    c.outage = None;
+    let result = Campaign::new(c).run();
+    let (aws, gcp, azure) = (
+        result.provider_ops[0].2,
+        result.provider_ops[1].2,
+        result.provider_ops[2].2,
+    );
+    let max = aws.max(gcp).max(azure);
+    let min = aws.min(gcp).min(azure);
+    assert!(min > 0.6 * max, "uniform spread: {aws:.0}/{gcp:.0}/{azure:.0}");
+}
+
+#[test]
+fn config_file_round_trip() {
+    let dir = std::env::temp_dir().join("icecloud-it-config");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("campaign.toml");
+    std::fs::write(
+        &path,
+        r#"
+seed = 99
+duration_days = 1.0
+keepalive_s = 120
+
+[budget]
+total_usd = 500.0
+
+[ramp]
+targets = [25]
+hold_days = [10.0]
+
+[outage]
+disabled = true
+"#,
+    )
+    .unwrap();
+    let cfg = CampaignConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.seed, 99);
+    assert_eq!(cfg.keepalive_s, 120);
+    assert!(cfg.outage.is_none());
+    let result = Campaign::new(cfg).run();
+    assert!(result.schedd_stats.completed > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn monitoring_csv_has_aligned_series() {
+    let result = Campaign::new(base_config()).run();
+    let csv = result
+        .monitor
+        .to_csv(&["gpus.total", "gpus.azure", "jobs.running"]);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert!(lines.len() > 50);
+    assert_eq!(lines[0], "t_s,gpus.total,gpus.azure,jobs.running");
+    // every row has 4 fields
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), 4, "bad row: {line}");
+    }
+}
+
+#[test]
+fn tick_cadence_change_preserves_shape() {
+    // coarser control cadence must not change the macro outcome much
+    let mut fine = base_config();
+    fine.outage = None;
+    fine.duration_s = DAY;
+    let mut coarse = fine.clone();
+    coarse.control_period_s = 15 * MINUTE;
+    let a = Campaign::new(fine).run();
+    let b = Campaign::new(coarse).run();
+    let ga = a.monitor.get("gpus.total").unwrap().mean();
+    let gb = b.monitor.get("gpus.total").unwrap().mean();
+    assert!((ga - gb).abs() / ga < 0.15, "fine={ga} coarse={gb}");
+}
+
+#[test]
+fn badput_stays_bounded_with_tuned_keepalive() {
+    let mut c = base_config();
+    c.outage = None;
+    let result = Campaign::new(c).run();
+    let good = result.schedd_stats.goodput_s as f64;
+    let bad = result.schedd_stats.badput_s as f64;
+    // spot churn exists, but badput must stay a small fraction
+    assert!(bad / (good + bad) < 0.1, "badput fraction {}", bad / (good + bad));
+}

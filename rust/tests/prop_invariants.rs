@@ -1,0 +1,413 @@
+//! Property-based tests over coordinator, pool and fleet invariants,
+//! driven by the in-tree mini-proptest harness (`util::proptest`).
+
+use icecloud::cloud::{providers, CloudSim, RegionId};
+use icecloud::condor::job::{gpu_job_ad, gpu_requirements};
+use icecloud::condor::negotiator::negotiate;
+use icecloud::condor::startd::{SlotId, Startd};
+use icecloud::condor::{CondorPool, Schedd};
+use icecloud::config::{PolicyMode, ProviderWeights};
+use icecloud::coordinator::distribute;
+use icecloud::net::NatProfile;
+use icecloud::sim::MINUTE;
+use icecloud::util::proptest::{ensure, forall, no_shrink, shrink_vec};
+use icecloud::util::rng::Rng;
+
+// ---- fleet invariants -------------------------------------------------------
+
+/// Random operator scripts: (region, target) changes interleaved with time.
+#[derive(Debug, Clone)]
+enum Op {
+    SetTarget(u32, u32),
+    Advance(u64),
+    ZeroAll,
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<Op> {
+    let n = 5 + rng.below(40) as usize;
+    (0..n)
+        .map(|_| match rng.below(5) {
+            0 => Op::ZeroAll,
+            1 | 2 => Op::SetTarget(rng.below(20) as u32, rng.below(300) as u32),
+            _ => Op::Advance(1 + rng.below(60)),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_fleet_invariants_under_random_operators() {
+    forall(
+        "fleet-invariants",
+        0xF1EE7,
+        40,
+        gen_ops,
+        shrink_vec,
+        |ops| {
+            let mut fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+            let mut now = 0u64;
+            for op in ops {
+                match op {
+                    Op::SetTarget(r, t) => {
+                        let r = (*r as usize % fleet.num_regions()) as u32;
+                        fleet.set_target(RegionId(r), *t);
+                    }
+                    Op::ZeroAll => fleet.zero_all_targets(),
+                    Op::Advance(ticks) => {
+                        for _ in 0..*ticks {
+                            now += MINUTE;
+                            fleet.tick(now, MINUTE);
+                        }
+                    }
+                }
+            }
+            fleet.check_invariants(now).map_err(|e| e)?;
+            // after one settling tick, reconcile must have terminated any
+            // surplus: live never exceeds the group targets
+            now += MINUTE;
+            fleet.tick(now, MINUTE);
+            fleet.check_invariants(now)?;
+            let counts = fleet.counts();
+            ensure(
+                counts.live() <= counts.target,
+                format!("live {} above target {}", counts.live(), counts.target),
+            )
+        },
+    );
+}
+
+// ---- policy invariants ------------------------------------------------------
+
+#[test]
+fn prop_policy_distribution_sums_and_bounds() {
+    forall(
+        "policy-sums",
+        0xD157,
+        200,
+        |rng| {
+            (
+                rng.below(5000) as u32,
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+            )
+        },
+        no_shrink,
+        |(total, a, b, c)| {
+            // degenerate all-zero weights handled separately
+            if *a + *b + *c == 0.0 {
+                return Ok(());
+            }
+            let fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+            let mode = PolicyMode::Fixed(ProviderWeights {
+                aws: *a,
+                gcp: *b,
+                azure: *c,
+            });
+            let t = distribute(*total, &fleet, &mode, None);
+            let sum: u32 = t.values().sum();
+            ensure(
+                sum.abs_diff(*total) <= 2,
+                format!("sum {sum} != total {total} (rounding > 2)"),
+            )?;
+            ensure(
+                t.len() == fleet.num_regions(),
+                "every region must get an entry",
+            )
+        },
+    );
+}
+
+// ---- schedd state machine ---------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum JobOp {
+    Submit,
+    StartLowest,
+    CompleteAny,
+    InterruptAny,
+}
+
+fn gen_job_ops(rng: &mut Rng) -> Vec<JobOp> {
+    let n = 5 + rng.below(120) as usize;
+    (0..n)
+        .map(|_| match rng.below(4) {
+            0 => JobOp::Submit,
+            1 => JobOp::StartLowest,
+            2 => JobOp::CompleteAny,
+            _ => JobOp::InterruptAny,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_schedd_state_machine() {
+    forall(
+        "schedd-state-machine",
+        0x5EDD,
+        60,
+        gen_job_ops,
+        shrink_vec,
+        |ops| {
+            let mut s = Schedd::new();
+            let mut now = 0u64;
+            let mut next_slot = 0u64;
+            for op in ops {
+                now += 60;
+                match op {
+                    JobOp::Submit => {
+                        s.submit(
+                            "icecube",
+                            3600,
+                            1e12,
+                            10,
+                            gpu_job_ad("icecube", 8192),
+                            gpu_requirements(),
+                            now,
+                        );
+                    }
+                    JobOp::StartLowest => {
+                        let first = s.idle_jobs().next();
+                        if let Some(id) = first {
+                            let slot =
+                                SlotId::Cloud(icecloud::cloud::InstanceId(next_slot));
+                            next_slot += 1;
+                            s.start(id, slot, now);
+                        }
+                    }
+                    JobOp::CompleteAny => {
+                        let running: Vec<_> = s
+                            .jobs()
+                            .iter()
+                            .filter(|j| {
+                                j.state == icecloud::condor::JobState::Running
+                            })
+                            .map(|j| j.id)
+                            .collect();
+                        if let Some(id) = running.first() {
+                            s.complete(*id, now);
+                        }
+                    }
+                    JobOp::InterruptAny => {
+                        let running: Vec<_> = s
+                            .jobs()
+                            .iter()
+                            .filter(|j| {
+                                j.state == icecloud::condor::JobState::Running
+                            })
+                            .map(|j| j.id)
+                            .collect();
+                        if let Some(id) = running.last() {
+                            s.interrupt(*id, now);
+                        }
+                    }
+                }
+                s.check_invariants()?;
+            }
+            // accounting identities
+            let total_good: u64 = s.jobs().iter().map(|j| j.goodput_s).sum();
+            let total_bad: u64 = s.jobs().iter().map(|j| j.badput_s).sum();
+            ensure(total_good == s.stats.goodput_s, "goodput sum mismatch")?;
+            ensure(total_bad == s.stats.badput_s, "badput sum mismatch")
+        },
+    );
+}
+
+// ---- negotiation invariants ---------------------------------------------------
+
+#[test]
+fn prop_negotiation_no_double_booking() {
+    forall(
+        "negotiate-no-double-booking",
+        0xBEEF,
+        40,
+        |rng| (1 + rng.below(60), 1 + rng.below(120), rng.below(4)),
+        no_shrink,
+        |(slots, jobs, clusters)| {
+            let startds: icecloud::util::fxhash::FxHashMap<SlotId, Startd> = (0..*slots)
+                .map(|i| {
+                    let slot = SlotId::Cloud(icecloud::cloud::InstanceId(i));
+                    (
+                        slot,
+                        Startd::new(
+                            slot,
+                            "cloud",
+                            Some(icecloud::cloud::Provider::Azure),
+                            "azure/eastus",
+                            NatProfile::permissive("prop"),
+                            60,
+                            0,
+                        ),
+                    )
+                })
+                .collect();
+            let mut schedd = Schedd::new();
+            for i in 0..*jobs {
+                let mem = 4096 + 1024 * (i % (clusters + 1)) as i64;
+                schedd.submit(
+                    "icecube",
+                    3600,
+                    1e12,
+                    10,
+                    gpu_job_ad("icecube", mem),
+                    gpu_requirements(),
+                    0,
+                );
+            }
+            let r = negotiate(&schedd, &startds, startds.keys().copied(),
+                              usize::MAX);
+            // no slot or job appears twice
+            let mut slots_seen = std::collections::HashSet::new();
+            let mut jobs_seen = std::collections::HashSet::new();
+            for (job, slot) in &r.matches {
+                ensure(slots_seen.insert(*slot), format!("slot {slot} reused"))?;
+                ensure(jobs_seen.insert(*job), format!("job {job} reused"))?;
+            }
+            // match count bounded by both sides
+            ensure(
+                r.matches.len() <= (*slots).min(*jobs) as usize,
+                "more matches than possible",
+            )?;
+            // all matchable jobs matched when slots are plentiful
+            if slots >= jobs {
+                ensure(
+                    r.matches.len() == *jobs as usize,
+                    format!("{} of {jobs} matched with {slots} slots",
+                            r.matches.len()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- pool invariants under random churn ----------------------------------------
+
+#[derive(Debug, Clone)]
+enum PoolOp {
+    AddWorker,
+    KillWorker,
+    SubmitJobs(u8),
+    Advance(u8),
+    OutageToggle,
+}
+
+fn gen_pool_ops(rng: &mut Rng) -> Vec<PoolOp> {
+    let n = 10 + rng.below(60) as usize;
+    (0..n)
+        .map(|_| match rng.below(8) {
+            0 => PoolOp::OutageToggle,
+            1 | 2 => PoolOp::AddWorker,
+            3 => PoolOp::KillWorker,
+            4 => PoolOp::SubmitJobs(1 + rng.below(10) as u8),
+            _ => PoolOp::Advance(1 + rng.below(30) as u8),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_pool_invariants_under_churn() {
+    forall(
+        "pool-invariants",
+        0xB001_0A11,
+        30,
+        gen_pool_ops,
+        shrink_vec,
+        |ops| {
+            let mut pool = CondorPool::new();
+            let mut now = 0u64;
+            let mut next_worker = 0u64;
+            let mut live: Vec<SlotId> = Vec::new();
+            let mut outage = false;
+            let mut events = Vec::new();
+            for op in ops {
+                match op {
+                    PoolOp::AddWorker => {
+                        let slot = SlotId::Cloud(icecloud::cloud::InstanceId(
+                            next_worker,
+                        ));
+                        next_worker += 1;
+                        pool.add_startd(
+                            Startd::new(
+                                slot,
+                                "cloud",
+                                Some(icecloud::cloud::Provider::Gcp),
+                                "gcp/us-central1",
+                                NatProfile::permissive("prop"),
+                                60,
+                                now,
+                            ),
+                            now,
+                        );
+                        live.push(slot);
+                    }
+                    PoolOp::KillWorker => {
+                        if let Some(slot) = live.pop() {
+                            pool.remove_startd(slot, now, &mut events);
+                        }
+                    }
+                    PoolOp::SubmitJobs(n) => {
+                        for _ in 0..*n {
+                            pool.schedd.submit(
+                                "icecube",
+                                1800,
+                                1e12,
+                                10,
+                                gpu_job_ad("icecube", 8192),
+                                gpu_requirements(),
+                                now,
+                            );
+                        }
+                    }
+                    PoolOp::Advance(ticks) => {
+                        for _ in 0..*ticks {
+                            now += MINUTE;
+                            pool.tick(now, &mut events);
+                        }
+                    }
+                    PoolOp::OutageToggle => {
+                        if outage {
+                            pool.end_outage();
+                        } else {
+                            pool.begin_outage(now, &mut events);
+                        }
+                        outage = !outage;
+                    }
+                }
+                pool.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- classad robustness ----------------------------------------------------------
+
+#[test]
+fn prop_classad_parser_never_panics() {
+    forall(
+        "classad-no-panic",
+        0xC1A55,
+        300,
+        |rng| {
+            let tokens = [
+                "&&", "||", "==", "<=", "(", ")", "1", "2.5", "x", "MY.",
+                "TARGET.", "\"s\"", "!", "-", "+", "*", "/", "true",
+                "undefined", " ",
+            ];
+            let n = rng.below(12) as usize;
+            (0..n)
+                .map(|_| *rng.choose(&tokens).unwrap())
+                .collect::<Vec<_>>()
+                .join("")
+        },
+        no_shrink,
+        |src| {
+            // parse may fail, but must never panic; eval likewise
+            if let Ok(expr) = icecloud::condor::classad::parse(src) {
+                let ad = icecloud::condor::Ad::new();
+                let _ = expr.eval(&ad, None);
+            }
+            Ok(())
+        },
+    );
+}
