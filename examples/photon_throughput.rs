@@ -1,13 +1,13 @@
 //! Pure-runtime driver: photon artifact latency/throughput across variants.
 //!
 //! Run with: `cargo run --release --example photon_throughput`
-//! (requires `make artifacts`)
+//! (requires `python -m compile.aot`)
 //!
-//! Loads every AOT variant, executes a batch of bunches through the PJRT
-//! CPU client, and reports latency percentiles, photon throughput and
-//! sustained FLOP rate — the serving-style view of the L1/L2 stack that
-//! the campaign's real-compute sampling uses. EXPERIMENTS.md §Perf uses
-//! these numbers for the L1 before/after record.
+//! Loads every AOT variant, executes a batch of bunches through the
+//! native photon engine, and reports latency percentiles, photon
+//! throughput and sustained FLOP rate — the serving-style view of the
+//! L1/L2 stack that the campaign's real-compute sampling uses.
+//! EXPERIMENTS.md §Perf uses these numbers for the L1 record.
 
 use icecloud::runtime::PhotonEngine;
 use icecloud::util::stats;
@@ -22,11 +22,11 @@ fn main() {
     let engine = match PhotonEngine::new(&artifact_dir) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            eprintln!("cannot load artifacts ({e}); run `python -m compile.aot` (from python/) first");
             std::process::exit(1);
         }
     };
-    println!("PJRT platform: {}\n", engine.platform());
+    println!("photon runtime: {}\n", engine.platform());
     println!(
         "{:<10} {:>10} {:>6} {:>10} {:>10} {:>10} {:>12} {:>10}",
         "variant", "photons", "doms", "p50 ms", "p95 ms", "mean ms",
@@ -65,7 +65,7 @@ fn main() {
         assert!(detected > 0.0, "variant {name} must detect photons");
     }
     println!(
-        "\nnote: CPU-PJRT numbers; TPU efficiency is estimated analytically \
-         in DESIGN.md §7 (the CPU plugin cannot run Mosaic kernels)."
+        "\nnote: native-engine CPU numbers (DESIGN.md §9); accelerator \
+         throughput is modeled analytically via ACHIEVED_EFFICIENCY."
     );
 }

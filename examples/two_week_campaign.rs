@@ -2,7 +2,7 @@
 //! compute flowing through all three layers.
 //!
 //! Run with: `cargo run --release --example two_week_campaign`
-//! (requires `make artifacts` first)
+//! (requires `python -m compile.aot` first)
 //!
 //! * L3 (this binary): the Rust coordinator replays the 14-day,
 //!   2000-GPU-peak multi-cloud campaign — ramp plan, spot preemption,
@@ -37,11 +37,11 @@ fn main() {
     let engine = match PhotonEngine::new(&artifact_dir) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            eprintln!("cannot load artifacts ({e}); run `python -m compile.aot` (from python/) first");
             std::process::exit(1);
         }
     };
-    println!("PJRT platform: {}", engine.platform());
+    println!("photon runtime: {}", engine.platform());
     let exe = engine.compile("default").expect("compile default variant");
     println!(
         "compiled photon artifact: {} photons x {} steps, {} DOMs, \

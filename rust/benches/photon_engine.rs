@@ -16,7 +16,7 @@ fn main() {
             PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
         });
     let Ok(engine) = PhotonEngine::new(&dir) else {
-        println!("photon_engine: artifacts not built; run `make artifacts`");
+        println!("photon_engine: artifacts not built; run `python -m compile.aot` from python/");
         return;
     };
     let mut b = Bench::new();

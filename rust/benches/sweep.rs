@@ -1,0 +1,40 @@
+//! Sweep-runner benchmarks: campaign replays/sec vs worker thread count.
+//!
+//! The sweep subsystem's perf claim is near-linear scaling up to the
+//! core count, because replays share no simulation state.  We run the
+//! built-in 10-scenario matrix at a reduced duration and report
+//! replays/sec at 1/2/4/8 workers — EXPERIMENTS.md §Perf records the
+//! scaling curve.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::sweep;
+use icecloud::util::bench::Bench;
+
+fn small_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 12 * HOUR;
+    c.ramp = vec![RampStep { target: 60, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 40;
+    c.generator.min_backlog = 150;
+    c
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let base = small_base();
+    let scenarios = sweep::builtin_matrix();
+    let replays = scenarios.len() as f64;
+
+    for threads in [1usize, 2, 4, 8] {
+        b.run_throughput(
+            &format!("sweep/10-scenarios-{threads}-threads"),
+            replays,
+            "replays",
+            || sweep::run_matrix(&base, &scenarios, threads).len(),
+        );
+    }
+
+    b.finish();
+}

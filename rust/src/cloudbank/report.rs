@@ -26,6 +26,31 @@ pub fn render_snapshot(s: &BudgetSnapshot) -> String {
     out
 }
 
+/// Render a per-scenario CloudBank roll-up: one budget line per replay,
+/// the "single window" view across a whole sweep matrix.
+pub fn render_rollup(rows: &[(String, BudgetSnapshot)]) -> String {
+    let mut out = String::new();
+    out.push_str("== CloudBank sweep roll-up (per-scenario spend) ==\n");
+    out.push_str(&format!(
+        "{:<24} {:>10} {:>10} {:>7} {:>10} {:>10} {:>10}\n",
+        "scenario", "budget $", "spent $", "left%", "azure $", "gcp $",
+        "aws $"
+    ));
+    for (name, s) in rows {
+        out.push_str(&format!(
+            "{:<24} {:>10.0} {:>10.2} {:>6.1}% {:>10.2} {:>10.2} {:>10.2}\n",
+            name,
+            s.budget_usd,
+            s.spent_usd,
+            100.0 * s.remaining_fraction(),
+            s.azure_usd,
+            s.gcp_usd,
+            s.aws_usd,
+        ));
+    }
+    out
+}
+
 /// Machine-readable snapshot (for the results directory).
 pub fn snapshot_json(ledger: &Ledger, now: SimTime) -> Json {
     let s = ledger.snapshot(now);
@@ -67,6 +92,20 @@ mod tests {
         assert!(text.contains("budget"));
         assert!(text.contains("58000.00"));
         assert!(text.contains("azure"));
+    }
+
+    #[test]
+    fn rollup_lists_every_scenario() {
+        let ledger = Ledger::new(AccountSet::paper_setup(0), 58_000.0, &[]);
+        let rows = vec![
+            ("baseline".to_string(), ledger.snapshot(0)),
+            ("half-budget".to_string(), ledger.snapshot(10)),
+        ];
+        let text = render_rollup(&rows);
+        assert!(text.contains("baseline"));
+        assert!(text.contains("half-budget"));
+        assert!(text.contains("azure"));
+        assert_eq!(text.lines().count(), 4);
     }
 
     #[test]

@@ -47,6 +47,22 @@ pub struct RealComputeConfig {
     pub every_n_completions: u64,
 }
 
+/// NAT behaviour override applied to every cloud region (scenario knob).
+///
+/// The paper's §IV incident hinges on Azure's default 4-minute NAT idle
+/// timeout; sweeps use this to ask "what if the infrastructure had been
+/// different" instead of only "what if our keepalive had been different".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NatOverride {
+    /// Keep each provider's own NAT profile (Azure: 240 s idle timeout).
+    #[default]
+    ProviderDefault,
+    /// Force an idle timeout of this many seconds on every region.
+    IdleTimeout(u64),
+    /// No NAT idle expiry anywhere (the fixed-infrastructure ablation).
+    Disabled,
+}
+
 /// Everything the campaign runner needs.
 #[derive(Debug, Clone)]
 pub struct CampaignConfig {
@@ -74,6 +90,12 @@ pub struct CampaignConfig {
     /// Cloud worker keepalive (60 s = the post-incident tuned value;
     /// set 300 to re-live §IV).
     pub keepalive_s: u64,
+    /// Multiplier on every region's baseline churn-preemption hazard
+    /// (1.0 = the calibrated defaults; scenario sweeps raise it to model
+    /// busier spot markets).
+    pub preempt_multiplier: f64,
+    /// NAT behaviour override applied to every region.
+    pub nat_override: NatOverride,
 
     pub ramp: Vec<RampStep>,
     pub outage: Option<OutageSpec>,
@@ -104,6 +126,8 @@ impl Default for CampaignConfig {
             low_budget_resume_fraction: 0.25,
             post_outage_target: 1000,
             keepalive_s: 60,
+            preempt_multiplier: 1.0,
+            nat_override: NatOverride::ProviderDefault,
             ramp: vec![
                 // initial validation with a small fleet, then the paper's
                 // 400 / 900 / 1.2k / 1.6k / 2k staircase
@@ -142,6 +166,29 @@ impl CampaignConfig {
         }
         if let Some(v) = doc.get_path(&["keepalive_s"]).and_then(Json::as_u64) {
             self.keepalive_s = v;
+        }
+        if let Some(v) =
+            doc.get_path(&["preempt_multiplier"]).and_then(Json::as_f64)
+        {
+            self.preempt_multiplier = v;
+        }
+        let nat_disabled = doc
+            .get_path(&["nat", "disabled"])
+            .and_then(Json::as_bool)
+            == Some(true);
+        let nat_timeout =
+            doc.get_path(&["nat", "idle_timeout_s"]).and_then(Json::as_u64);
+        match (nat_disabled, nat_timeout) {
+            (true, Some(_)) => {
+                return Err("[nat] sets both disabled = true and \
+                            idle_timeout_s; pick one"
+                    .into())
+            }
+            (true, None) => self.nat_override = NatOverride::Disabled,
+            (false, Some(t)) => {
+                self.nat_override = NatOverride::IdleTimeout(t)
+            }
+            (false, None) => {}
         }
         if let Some(v) = doc.get_path(&["budget", "total_usd"]).and_then(Json::as_f64)
         {
@@ -300,6 +347,39 @@ azure = 0.6
         let mut c = CampaignConfig::default();
         c.apply_toml(&doc).unwrap();
         assert!(c.outage.is_none());
+    }
+
+    #[test]
+    fn scenario_knobs_from_toml() {
+        let doc = toml::parse(
+            "preempt_multiplier = 4.0\n[nat]\nidle_timeout_s = 120",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.preempt_multiplier, 4.0);
+        assert_eq!(c.nat_override, NatOverride::IdleTimeout(120));
+
+        let doc = toml::parse("[nat]\ndisabled = true").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.nat_override, NatOverride::Disabled);
+    }
+
+    #[test]
+    fn conflicting_nat_knobs_rejected() {
+        let doc =
+            toml::parse("[nat]\ndisabled = true\nidle_timeout_s = 120")
+                .unwrap();
+        let mut c = CampaignConfig::default();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn scenario_knob_defaults_are_neutral() {
+        let c = CampaignConfig::default();
+        assert_eq!(c.preempt_multiplier, 1.0);
+        assert_eq!(c.nat_override, NatOverride::ProviderDefault);
     }
 
     #[test]

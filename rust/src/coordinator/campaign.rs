@@ -14,11 +14,12 @@ use crate::cloudbank::Ledger;
 use crate::condor::pool::PoolEvent;
 use crate::condor::startd::{SlotId, Startd};
 use crate::condor::CondorPool;
-use crate::config::CampaignConfig;
+use crate::config::{CampaignConfig, NatOverride};
 use crate::coordinator::outage::{OutageState, OutageTransition};
 use crate::coordinator::policy::{self, ObservedRates};
 use crate::coordinator::rampplan::RampPlan;
 use crate::monitoring::Monitor;
+use crate::net::NatProfile;
 use crate::osg::{ComputeElement, GlideinFactory, GlideinFrontend, OsgRegistry,
                  UsageAccounting};
 use crate::runtime::PhotonExecutable;
@@ -55,7 +56,8 @@ pub struct CampaignResult {
     pub meter: BillingMeter,
     pub pool_stats: crate::condor::PoolStats,
     pub schedd_stats: crate::condor::ScheddStats,
-    /// (launches, preemptions, instance-hours) per provider [aws,gcp,azure].
+    /// (launches, preemptions, instance-hours) per provider in
+    /// `[aws, gcp, azure]` order.
     pub provider_ops: [(u64, u64, f64); 3],
     pub onprem_slots: u32,
     pub real_compute: RealComputeStats,
@@ -104,7 +106,25 @@ impl Campaign {
         real_exe: Option<PhotonExecutable>,
     ) -> Self {
         let root = Rng::new(config.seed);
-        let fleet = CloudSim::new(providers::all_regions(), root.derive("fleet"));
+        // scenario knobs rewrite the region catalog before the fleet is
+        // built: busier spot markets and/or different NAT infrastructure
+        let mut specs = providers::all_regions();
+        for spec in &mut specs {
+            spec.churn_per_hour *= config.preempt_multiplier;
+            match config.nat_override {
+                NatOverride::ProviderDefault => {}
+                NatOverride::IdleTimeout(t) => {
+                    spec.nat = NatProfile {
+                        idle_timeout_s: Some(t),
+                        label: "scenario-nat",
+                    };
+                }
+                NatOverride::Disabled => {
+                    spec.nat = NatProfile::permissive("scenario-no-nat");
+                }
+            }
+        }
+        let fleet = CloudSim::new(specs, root.derive("fleet"));
         let mut pool =
             CondorPool::new().with_negotiation_period(config.negotiation_period_s);
         let mut onprem_rng = root.derive("onprem");
@@ -552,5 +572,44 @@ mod tests {
     #[test]
     fn ticks_are_one_minute_by_default() {
         assert_eq!(CampaignConfig::default().tick_s, MINUTE);
+    }
+
+    #[test]
+    fn nat_override_disabled_prevents_keepalive_storm() {
+        // the §IV misconfiguration, but on NAT-free infrastructure
+        let mut c = small_config();
+        c.keepalive_s = 300;
+        c.nat_override = crate::config::NatOverride::Disabled;
+        c.outage = None;
+        c.duration_s = 12 * HOUR;
+        let result = Campaign::new(c).run();
+        assert_eq!(result.pool_stats.nat_drops, 0);
+    }
+
+    #[test]
+    fn nat_override_timeout_applies_everywhere() {
+        // a 120 s idle timeout breaks even the tuned 60 s keepalive? no —
+        // 60 < 120 survives; but a 200 s keepalive dies on every region.
+        let mut c = small_config();
+        c.keepalive_s = 200;
+        c.nat_override = crate::config::NatOverride::IdleTimeout(120);
+        c.outage = None;
+        c.duration_s = 12 * HOUR;
+        let result = Campaign::new(c).run();
+        assert!(result.pool_stats.nat_drops > 0);
+    }
+
+    #[test]
+    fn preempt_multiplier_raises_churn() {
+        let run = |m: f64| {
+            let mut c = small_config();
+            c.outage = None;
+            c.preempt_multiplier = m;
+            let r = Campaign::new(c).run();
+            r.provider_ops.iter().map(|(_, p, _)| *p).sum::<u64>()
+        };
+        let base = run(1.0);
+        let hot = run(25.0);
+        assert!(hot > base, "hot={hot} base={base}");
     }
 }

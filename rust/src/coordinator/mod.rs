@@ -8,8 +8,10 @@ pub mod campaign;
 pub mod outage;
 pub mod policy;
 pub mod rampplan;
+pub mod scenario;
 
 pub use campaign::{Campaign, CampaignResult, RealComputeStats};
 pub use outage::{OutageState, OutageTransition};
 pub use policy::{distribute, ObservedRates};
 pub use rampplan::RampPlan;
+pub use scenario::ScenarioConfig;

@@ -1,0 +1,142 @@
+//! Scenario overrides: one named "what if" on top of a base campaign.
+//!
+//! The paper's exercise is a single operating point — one budget, one
+//! ramp plan, one outage, one keepalive.  A [`ScenarioConfig`] captures a
+//! *deviation* from that point as data, so the sweep subsystem
+//! (`crate::sweep`) can replay many variants of the same campaign from
+//! one base [`CampaignConfig`] without duplicating it.  Every field is
+//! optional: `None` inherits the base; the double-`Option` on `outage`
+//! distinguishes "inherit" (`None`) from "force no outage"
+//! (`Some(None)`).
+
+use crate::config::{
+    CampaignConfig, NatOverride, OutageSpec, PolicyMode, RampStep,
+};
+use crate::sim::SimTime;
+
+/// A named set of overrides applied on top of a base campaign config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScenarioConfig {
+    /// Scenario label (table rows, output file names).
+    pub name: String,
+    pub seed: Option<u64>,
+    pub duration_s: Option<SimTime>,
+    pub budget_usd: Option<f64>,
+    /// Churn-preemption hazard multiplier (busier spot markets).
+    pub preempt_multiplier: Option<f64>,
+    pub keepalive_s: Option<u64>,
+    pub nat_override: Option<NatOverride>,
+    /// `Some(None)` disables the outage; `Some(Some(spec))` reschedules it.
+    pub outage: Option<Option<OutageSpec>>,
+    pub ramp: Option<Vec<RampStep>>,
+    pub onprem_slots: Option<u32>,
+    pub policy: Option<PolicyMode>,
+}
+
+impl ScenarioConfig {
+    /// An all-inherit scenario with the given name.
+    pub fn named(name: &str) -> Self {
+        ScenarioConfig { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Materialize the concrete campaign config for this scenario.
+    pub fn apply(&self, base: &CampaignConfig) -> CampaignConfig {
+        let mut c = base.clone();
+        if let Some(v) = self.seed {
+            c.seed = v;
+        }
+        if let Some(v) = self.duration_s {
+            c.duration_s = v;
+        }
+        if let Some(v) = self.budget_usd {
+            c.budget_usd = v;
+        }
+        if let Some(v) = self.preempt_multiplier {
+            c.preempt_multiplier = v;
+        }
+        if let Some(v) = self.keepalive_s {
+            c.keepalive_s = v;
+        }
+        if let Some(v) = self.nat_override {
+            c.nat_override = v;
+        }
+        if let Some(v) = self.outage {
+            c.outage = v;
+        }
+        if let Some(v) = &self.ramp {
+            c.ramp = v.clone();
+        }
+        if let Some(v) = self.onprem_slots {
+            c.onprem.slots = v;
+        }
+        if let Some(v) = self.policy {
+            c.policy = v;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DAY;
+
+    #[test]
+    fn empty_scenario_inherits_everything() {
+        let base = CampaignConfig::default();
+        let c = ScenarioConfig::named("baseline").apply(&base);
+        assert_eq!(c.seed, base.seed);
+        assert_eq!(c.budget_usd, base.budget_usd);
+        assert_eq!(c.duration_s, base.duration_s);
+        assert_eq!(c.outage, base.outage);
+        assert_eq!(c.ramp, base.ramp);
+    }
+
+    #[test]
+    fn overrides_replace_base_fields() {
+        let base = CampaignConfig::default();
+        let mut s = ScenarioConfig::named("tweaked");
+        s.seed = Some(7);
+        s.budget_usd = Some(1_000.0);
+        s.preempt_multiplier = Some(4.0);
+        s.keepalive_s = Some(300);
+        s.outage = Some(None);
+        s.ramp = Some(vec![RampStep { target: 10, hold_s: DAY }]);
+        s.onprem_slots = Some(3);
+        s.nat_override = Some(NatOverride::Disabled);
+        let c = s.apply(&base);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.budget_usd, 1_000.0);
+        assert_eq!(c.preempt_multiplier, 4.0);
+        assert_eq!(c.keepalive_s, 300);
+        assert_eq!(c.outage, None);
+        assert_eq!(c.ramp.len(), 1);
+        assert_eq!(c.onprem.slots, 3);
+        assert_eq!(c.nat_override, NatOverride::Disabled);
+        // untouched fields still inherit
+        assert_eq!(c.tick_s, base.tick_s);
+        assert_eq!(c.overhead_fraction, base.overhead_fraction);
+    }
+
+    #[test]
+    fn outage_double_option_semantics() {
+        let mut base = CampaignConfig::default();
+        assert!(base.outage.is_some());
+        // inherit
+        let inherit = ScenarioConfig::named("x").apply(&base);
+        assert_eq!(inherit.outage, base.outage);
+        // force-disable
+        let mut off = ScenarioConfig::named("off");
+        off.outage = Some(None);
+        assert_eq!(off.apply(&base).outage, None);
+        // reschedule on a base without one
+        base.outage = None;
+        let mut resched = ScenarioConfig::named("resched");
+        resched.outage =
+            Some(Some(OutageSpec { at_s: DAY, duration_s: 3_600 }));
+        assert_eq!(
+            resched.apply(&base).outage,
+            Some(OutageSpec { at_s: DAY, duration_s: 3_600 })
+        );
+    }
+}

@@ -7,6 +7,7 @@
 //! | T1       | in-text headline numbers    | `headline`  |
 //! | NAT      | §IV keepalive incident      | `nat`       |
 //! | RAMP     | §IV validation/preemption   | `ramp`      |
+//! | SWEEP    | what-if scenario matrix     | `sweep`     |
 //!
 //! Each harness runs the campaign (or a reduced scenario), renders the
 //! same rows/series the paper reports, and writes CSV/JSON/text into a
@@ -17,6 +18,7 @@ pub mod fig2;
 pub mod headline;
 pub mod nat;
 pub mod ramp;
+pub mod sweep;
 
 use std::fs;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,159 @@
+//! EXP-SWEEP — the scenario-matrix comparison: cost vs EFLOP-hours.
+//!
+//! The paper's headline is one point on a cost/compute plane ($58k →
+//! 3.1 fp32 EFLOP-hours); this harness renders the whole plane for a
+//! sweep matrix — one row per scenario with its cost, delivered
+//! GPU-days/EFLOP-hours, $/EFLOP-hour, stability (preemptions, NAT
+//! drops, goodput) and budget state — plus the CloudBank per-scenario
+//! roll-up and a CSV for external plotting.
+
+use crate::cloudbank::report;
+use crate::sweep::ScenarioSummary;
+use std::path::Path;
+
+/// Render the comparative table (one row per scenario).
+pub fn render(rows: &[ScenarioSummary]) -> String {
+    let mut out = String::new();
+    out.push_str("SWEEP — scenario matrix: cost vs delivered compute\n");
+    out.push_str(&format!(
+        "{:<18} {:>9} {:>5} {:>9} {:>9} {:>8} {:>9} {:>6} {:>7} {:>7} {:>6} {:>8} {:>6}\n",
+        "scenario", "seed", "days", "cost $", "GPU-days", "EFLOPh",
+        "$/EFLOPh", "peak", "done", "intr", "drops", "preempt", "good%"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>5.1} {:>9.0} {:>9.1} {:>8.4} {:>9.0} {:>6.0} {:>7} {:>7} {:>6} {:>8} {:>5.1}%\n",
+            r.name,
+            r.seed,
+            r.duration_days,
+            r.cost_usd(),
+            r.gpu_days,
+            r.eflop_hours,
+            r.cost_per_eflop_hour,
+            r.peak_gpus,
+            r.completed,
+            r.interrupted,
+            r.nat_drops,
+            r.preemptions,
+            r.goodput_fraction * 100.0,
+        ));
+    }
+    out.push_str(
+        "\npaper operating point: ~$58k -> ~16k GPU-days / ~3.1 fp32 \
+         EFLOP-hours (~$18.7k per EFLOP-hour)\n",
+    );
+    out
+}
+
+/// Machine-readable rows.
+pub fn to_csv(rows: &[ScenarioSummary]) -> String {
+    let mut out = String::from(
+        "scenario,seed,duration_days,budget_usd,cost_usd,azure_usd,gcp_usd,\
+         aws_usd,gpu_days,eflop_hours,cost_per_eflop_hour,peak_gpus,\
+         mean_gpus,completed,interrupted,goodput_fraction,nat_drops,\
+         preemptions,expansion_factor,alerts\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            r.name,
+            r.seed,
+            r.duration_days,
+            r.snapshot.budget_usd,
+            r.cost_usd(),
+            r.snapshot.azure_usd,
+            r.snapshot.gcp_usd,
+            r.snapshot.aws_usd,
+            r.gpu_days,
+            r.eflop_hours,
+            r.cost_per_eflop_hour,
+            r.peak_gpus,
+            r.mean_gpus,
+            r.completed,
+            r.interrupted,
+            r.goodput_fraction,
+            r.nat_drops,
+            r.preemptions,
+            r.expansion_factor,
+            r.alerts,
+        ));
+    }
+    out
+}
+
+/// Write `sweep.txt`, `sweep.csv` and the CloudBank `rollup.txt` into
+/// `<out_root>/sweep/`.
+pub fn write(rows: &[ScenarioSummary], out_root: &Path) -> std::io::Result<()> {
+    let dir = super::exp_dir(out_root, "sweep")?;
+    super::write_output(&dir, "sweep.txt", &render(rows))?;
+    super::write_output(&dir, "sweep.csv", &to_csv(rows))?;
+    let snapshots: Vec<(String, crate::cloudbank::BudgetSnapshot)> =
+        rows.iter().map(|r| (r.name.clone(), r.snapshot)).collect();
+    super::write_output(&dir, "rollup.txt", &report::render_rollup(&snapshots))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudbank::BudgetSnapshot;
+
+    fn row(name: &str, cost: f64) -> ScenarioSummary {
+        ScenarioSummary {
+            name: name.to_string(),
+            seed: 1,
+            duration_days: 4.0,
+            snapshot: BudgetSnapshot {
+                at: 0,
+                budget_usd: 58_000.0,
+                spent_usd: cost,
+                aws_usd: cost * 0.1,
+                gcp_usd: cost * 0.1,
+                azure_usd: cost * 0.8,
+            },
+            gpu_days: 100.0,
+            eflop_hours: 0.02,
+            cost_per_eflop_hour: cost / 0.02,
+            peak_gpus: 80.0,
+            mean_gpus: 60.0,
+            completed: 1000,
+            interrupted: 5,
+            goodput_fraction: 0.99,
+            nat_drops: 0,
+            preemptions: 3,
+            expansion_factor: 2.0,
+            alerts: 1,
+        }
+    }
+
+    #[test]
+    fn render_lists_every_scenario() {
+        let rows = vec![row("baseline", 400.0), row("budget-half", 200.0)];
+        let txt = render(&rows);
+        assert!(txt.contains("baseline"));
+        assert!(txt.contains("budget-half"));
+        assert!(txt.contains("$/EFLOPh"));
+        assert_eq!(txt.lines().count(), 6);
+    }
+
+    #[test]
+    fn csv_has_one_line_per_scenario_plus_header() {
+        let rows = vec![row("a", 1.0), row("b", 2.0), row("c", 3.0)];
+        let csv = to_csv(&rows);
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("scenario,seed"));
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), 20, "bad row: {line}");
+        }
+    }
+
+    #[test]
+    fn write_emits_all_outputs() {
+        let root = std::env::temp_dir().join("icecloud-sweep-exp-test");
+        let rows = vec![row("x", 10.0)];
+        write(&rows, &root).unwrap();
+        for f in ["sweep.txt", "sweep.csv", "rollup.txt"] {
+            assert!(root.join("sweep").join(f).exists(), "missing {f}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

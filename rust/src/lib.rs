@@ -4,8 +4,14 @@
 //! (Sfiligoi et al., eScience 2021): a multi-cloud spot-GPU provisioning
 //! stack integrated into an OSG/HTCondor-style workload management system,
 //! replayed on a deterministic discrete-event simulator, with the IceCube
-//! photon-propagation workload compiled AOT (JAX + Pallas → HLO text) and
-//! executed from Rust through the PJRT CPU client.
+//! photon-propagation workload modeled after the AOT (JAX + Pallas) kernels
+//! and executed by a native Monte-Carlo engine that mirrors the Python
+//! oracle (`python/compile/kernels/ref.py`).
+//!
+//! Beyond the single paper replay, the [`sweep`] subsystem runs scenario
+//! matrices — budgets, spot-market weather, NAT infrastructure, ramp
+//! plans — as parallel deterministic replays and reduces them to one
+//! cost-vs-EFLOP-hours comparison table.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record of every figure and table.
@@ -21,5 +27,6 @@ pub mod net;
 pub mod osg;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;

@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   campaign    run the two-week campaign (configurable)
+//!   sweep       run a scenario matrix in parallel (what-if analysis)
 //!   reproduce   regenerate the paper's figures/tables into a results dir
-//!   validate    end-to-end PJRT smoke test of the AOT photon artifacts
+//!   validate    end-to-end smoke test of the AOT photon artifacts
 //!   info        print artifact + configuration summary
 
 use icecloud::config::CampaignConfig;
@@ -31,6 +32,7 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "campaign" => cmd_campaign(rest),
+        "sweep" => cmd_sweep(rest),
         "reproduce" => cmd_reproduce(rest),
         "validate" => cmd_validate(rest),
         "info" => cmd_info(rest),
@@ -56,9 +58,11 @@ fn print_usage() {
          usage: icecloud <command> [options]\n\n\
          commands:\n\
          \x20 campaign    run the two-week multi-cloud campaign\n\
+         \x20 sweep       run a scenario matrix in parallel (what-if \
+         analysis)\n\
          \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
          --fig2, --headline, --nat, --ramp)\n\
-         \x20 validate    end-to-end PJRT smoke test of the photon artifacts\n\
+         \x20 validate    end-to-end smoke test of the photon artifacts\n\
          \x20 info        artifact and configuration summary\n\
          \x20 help        this message\n"
     );
@@ -171,6 +175,77 @@ fn print_summary(result: &icecloud::coordinator::CampaignResult) {
     }
 }
 
+fn cmd_sweep(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new("sweep", "run a scenario matrix in parallel")
+        .opt(
+            "matrix",
+            "TOML matrix spec ([scenario.<name>] tables; default: the \
+             built-in 10-scenario matrix)",
+            None,
+        )
+        .opt("config", "base campaign TOML (defaults to the paper setup)", None)
+        .opt(
+            "days",
+            "base campaign duration in days (default 4; use 14 for the \
+             paper's full window)",
+            None,
+        )
+        .opt("threads", "worker threads (default: available parallelism)", None)
+        .opt("out", "write sweep.csv / sweep.txt / rollup.txt here", None)
+        .opt("log", "log level: debug|info|warn|error", Some("error"));
+    let args = cmd.parse(rest)?;
+    if let Some(level) = logger::level_from_str(args.get_or("log", "error")) {
+        logger::set_level(level);
+    }
+
+    let mut base = match args.get("config") {
+        Some(path) => CampaignConfig::from_toml_file(path)?,
+        None => CampaignConfig::default(),
+    };
+    // sweeps compare many replays; default to a 4-day slice so the
+    // matrix finishes quickly.  Precedence (weakest to strongest):
+    // 4-day default < --config file < matrix [base] < explicit --days.
+    if args.get("config").is_none() {
+        base.duration_s = 4 * 86_400;
+    }
+    let scenarios = match args.get("matrix") {
+        Some(path) => icecloud::sweep::matrix::from_toml_file(path, &mut base)?,
+        None => icecloud::sweep::builtin_matrix(),
+    };
+    if let Some(days) = args.get_f64("days") {
+        base.duration_s = (days * 86_400.0) as u64;
+    }
+    let threads = args
+        .get_u64("threads")
+        .map(|t| t as usize)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+
+    println!(
+        "sweep: {} scenarios x {:.1} sim-days on {} threads",
+        scenarios.len(),
+        base.duration_s as f64 / 86_400.0,
+        threads.max(1).min(scenarios.len().max(1)),
+    );
+    let t0 = std::time::Instant::now();
+    let rows = icecloud::sweep::run_matrix(&base, &scenarios, threads);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} replays in {:.2} s wall ({:.2} replays/s)\n",
+        rows.len(),
+        wall,
+        rows.len() as f64 / wall.max(1e-9),
+    );
+    print!("{}", icecloud::experiments::sweep::render(&rows));
+
+    if let Some(out) = args.get("out") {
+        icecloud::experiments::sweep::write(&rows, Path::new(out))
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let cmd = Command::new("reproduce", "regenerate the paper's evaluation")
         .opt("out", "results directory", Some("results"))
@@ -248,12 +323,12 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_validate(rest: &[String]) -> Result<(), String> {
-    let cmd = Command::new("validate", "PJRT end-to-end smoke test")
+    let cmd = Command::new("validate", "photon-runtime end-to-end smoke test")
         .opt("variant", "artifact variant", Some("small"))
         .opt("bunches", "number of bunches to execute", Some("3"));
     let args = cmd.parse(rest)?;
     let engine = PhotonEngine::new(&artifact_dir()).map_err(|e| e.to_string())?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("photon runtime: {}", engine.platform());
     let variant = args.get_or("variant", "small");
     let exe = engine.compile(variant).map_err(|e| e.to_string())?;
     println!(
@@ -298,7 +373,7 @@ fn cmd_info(_rest: &[String]) -> Result<(), String> {
                 );
             }
         }
-        Err(e) => println!("  (no artifacts: {e}; run `make artifacts`)"),
+        Err(e) => println!("  (no artifacts: {e}; run `python -m compile.aot` from python/)"),
     }
     let cfg = CampaignConfig::default();
     println!(

@@ -4,4 +4,4 @@ pub mod plot;
 pub mod timeseries;
 
 pub use plot::{daily_bars, line_chart};
-pub use timeseries::{Monitor, TimeSeries};
+pub use timeseries::{Monitor, SeriesSummary, TimeSeries};

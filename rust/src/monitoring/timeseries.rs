@@ -57,6 +57,17 @@ impl TimeSeries {
         }
     }
 
+    /// Collapse the series into one summary row (scenario-sweep tables).
+    pub fn summary(&self) -> SeriesSummary {
+        SeriesSummary {
+            min: self.min(),
+            max: self.max(),
+            mean: self.mean(),
+            last: self.last().unwrap_or(f64::NAN),
+            samples: self.len(),
+        }
+    }
+
     /// Downsample to at most `n` points (stride sampling, keeps ends).
     pub fn downsample(&self, n: usize) -> Vec<(SimTime, f64)> {
         if self.points.len() <= n || n < 2 {
@@ -67,6 +78,18 @@ impl TimeSeries {
             .map(|i| self.points[(i as f64 * stride).round() as usize])
             .collect()
     }
+}
+
+/// One series collapsed to a summary row — what a scenario sweep keeps
+/// from each replay's monitoring instead of the full sample stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesSummary {
+    pub min: f64,
+    pub max: f64,
+    /// Time-weighted mean over the sampled span.
+    pub mean: f64,
+    pub last: f64,
+    pub samples: usize,
 }
 
 /// The store: insertion-ordered named series.
@@ -148,6 +171,28 @@ mod tests {
         assert_eq!(s.min(), 0.0);
         // time-weighted mean: (10*100 + 20*100) / 200 = 15
         assert!((s.mean() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_collapses_series() {
+        let mut s = TimeSeries::default();
+        s.push(0, 10.0);
+        s.push(100, 20.0);
+        s.push(200, 0.0);
+        let sum = s.summary();
+        assert_eq!(sum.min, 0.0);
+        assert_eq!(sum.max, 20.0);
+        assert!((sum.mean - 15.0).abs() < 1e-12);
+        assert_eq!(sum.last, 0.0);
+        assert_eq!(sum.samples, 3);
+    }
+
+    #[test]
+    fn summary_of_empty_series() {
+        let s = TimeSeries::default();
+        let sum = s.summary();
+        assert_eq!(sum.samples, 0);
+        assert!(sum.last.is_nan());
     }
 
     #[test]

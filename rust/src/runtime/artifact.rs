@@ -85,9 +85,9 @@ impl ArtifactMeta {
 #[derive(Debug, Clone)]
 pub struct PhotonInputs {
     pub source: [f32; 8],
-    /// Row-major [num_layers][4]: scat_len, abs_len, g, pad.
+    /// Row-major `[num_layers][4]`: scat_len, abs_len, g, pad.
     pub media: Vec<f32>,
-    /// Row-major [num_doms][3].
+    /// Row-major `[num_doms][3]`.
     pub doms: Vec<f32>,
     pub params: [f32; 8],
 }

@@ -1,10 +1,26 @@
-//! PJRT runtime bridge: the Rust end of the AOT (JAX/Pallas -> HLO text)
-//! pipeline. Loads `artifacts/*.hlo.txt`, compiles once on the PJRT CPU
-//! client, and executes photon bunches from the coordinator's hot path —
-//! Python never runs at simulation/serving time.
+//! Photon runtime: the Rust end of the AOT (JAX/Pallas → HLO text)
+//! pipeline.  Loads `artifacts/meta.json` and executes photon bunches
+//! from the coordinator's hot path — Python never runs at
+//! simulation/serving time.  The execution backend is a deterministic
+//! native Monte-Carlo engine that mirrors the Python oracle
+//! (`python/compile/kernels/ref.py`) including its stateless counter
+//! RNG; see `engine` and DESIGN.md §9 for how this substitutes for the
+//! PJRT CPU client in the hermetic build.
 
 pub mod artifact;
 pub mod engine;
 
 pub use artifact::{ArtifactMeta, PhotonInputs, VariantMeta};
 pub use engine::{BunchResult, PhotonEngine, PhotonExecutable};
+
+/// Error raised by the photon runtime (metadata, shapes, execution).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineError(pub String);
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}

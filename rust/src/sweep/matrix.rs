@@ -1,0 +1,398 @@
+//! Sweep matrices: the built-in scenario set and the TOML spec format.
+//!
+//! A matrix spec is a TOML document with one `[scenario.<name>]` table
+//! per scenario (plus an optional `[base]` table of campaign overrides,
+//! applied through `CampaignConfig::apply_toml`):
+//!
+//! ```toml
+//! [base]
+//! duration_days = 4.0
+//!
+//! [scenario.baseline]
+//!
+//! [scenario.half-budget]
+//! budget_usd = 29000.0
+//!
+//! [scenario.churn-x4]
+//! preempt_multiplier = 4.0
+//!
+//! [scenario.keepalive-300]
+//! keepalive_s = 300
+//!
+//! [scenario.no-outage]
+//! outage_disabled = true
+//! ```
+//!
+//! Scenario keys: `seed`, `duration_days`, `budget_usd`,
+//! `preempt_multiplier`, `keepalive_s`, `nat_disabled`,
+//! `nat_idle_timeout_s`, `outage_disabled`, `outage_at_days`,
+//! `outage_duration_hours`, `ramp_targets` + `ramp_hold_days`,
+//! `onprem_slots`, `policy` (`"paper"` | `"uniform"` | `"adaptive"`).
+//! Scenarios from a spec run in name order (the parse is a sorted map),
+//! so a matrix file always produces the same row order.
+
+use crate::config::{
+    CampaignConfig, NatOverride, OutageSpec, PolicyMode, ProviderWeights,
+    RampStep,
+};
+use crate::coordinator::ScenarioConfig;
+use crate::sim::{DAY, HOUR};
+use crate::util::json::Json;
+use crate::util::toml;
+
+/// The default what-if matrix: ten scenarios spanning the axes the paper
+/// (and its follow-up literature) cares about.
+pub fn builtin_matrix() -> Vec<ScenarioConfig> {
+    let mut out = Vec::new();
+
+    // 1. the paper's operating point, unchanged
+    out.push(ScenarioConfig::named("baseline"));
+
+    // 2. the counterfactual everyone asks first: no day-11 CE outage
+    let mut s = ScenarioConfig::named("no-outage");
+    s.outage = Some(None);
+    out.push(s);
+
+    // 3-4. budget sweep: what does half / a quarter of $58k deliver?
+    let mut s = ScenarioConfig::named("budget-half");
+    s.budget_usd = Some(29_000.0);
+    out.push(s);
+    let mut s = ScenarioConfig::named("budget-quarter");
+    s.budget_usd = Some(14_500.0);
+    out.push(s);
+
+    // 5-6. spot-market weather: busier churn on every provider
+    let mut s = ScenarioConfig::named("churn-x4");
+    s.preempt_multiplier = Some(4.0);
+    out.push(s);
+    let mut s = ScenarioConfig::named("churn-x10");
+    s.preempt_multiplier = Some(10.0);
+    out.push(s);
+
+    // 7. re-live §IV: the OSG-default keepalive on Azure's default NAT
+    let mut s = ScenarioConfig::named("keepalive-300");
+    s.keepalive_s = Some(300);
+    out.push(s);
+
+    // 8. fixed infrastructure instead of fixed configuration
+    let mut s = ScenarioConfig::named("no-nat");
+    s.keepalive_s = Some(300);
+    s.nat_override = Some(NatOverride::Disabled);
+    out.push(s);
+
+    // 9. skip the validation staircase, go straight to peak
+    let mut s = ScenarioConfig::named("ramp-aggressive");
+    s.ramp = Some(vec![RampStep { target: 2000, hold_s: 60 * DAY }]);
+    out.push(s);
+
+    // 10. let the policy engine pick providers from observed rates
+    let mut s = ScenarioConfig::named("policy-adaptive");
+    s.policy = Some(PolicyMode::Adaptive);
+    out.push(s);
+
+    out
+}
+
+fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
+    match s {
+        "paper" | "azure-favored" => Ok(PolicyMode::Fixed(ProviderWeights {
+            aws: 0.15,
+            gcp: 0.15,
+            azure: 0.70,
+        })),
+        "uniform" => Ok(PolicyMode::Fixed(ProviderWeights {
+            aws: 1.0 / 3.0,
+            gcp: 1.0 / 3.0,
+            azure: 1.0 / 3.0,
+        })),
+        "adaptive" => Ok(PolicyMode::Adaptive),
+        other => Err(format!("unknown policy '{other}'")),
+    }
+}
+
+/// Keys a `[scenario.<name>]` table may carry.  Anything else is a
+/// typo, and a typo'd override would otherwise run as a silent copy of
+/// the baseline — fatal for a tool whose rows are meant to be citable.
+const SCENARIO_KEYS: [&str; 14] = [
+    "seed",
+    "duration_days",
+    "budget_usd",
+    "preempt_multiplier",
+    "keepalive_s",
+    "nat_disabled",
+    "nat_idle_timeout_s",
+    "outage_disabled",
+    "outage_at_days",
+    "outage_duration_hours",
+    "ramp_targets",
+    "ramp_hold_days",
+    "onprem_slots",
+    "policy",
+];
+
+fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String> {
+    let table = body
+        .as_obj()
+        .ok_or_else(|| format!("[scenario.{name}] is not a table"))?;
+    for key in table.keys() {
+        if !SCENARIO_KEYS.contains(&key.as_str()) {
+            return Err(format!(
+                "[scenario.{name}] has unknown key '{key}'"
+            ));
+        }
+    }
+    let mut s = ScenarioConfig::named(name);
+    if let Some(v) = body.get("seed").and_then(Json::as_u64) {
+        s.seed = Some(v);
+    }
+    if let Some(v) = body.get("duration_days").and_then(Json::as_f64) {
+        s.duration_s = Some((v * DAY as f64) as u64);
+    }
+    if let Some(v) = body.get("budget_usd").and_then(Json::as_f64) {
+        s.budget_usd = Some(v);
+    }
+    if let Some(v) = body.get("preempt_multiplier").and_then(Json::as_f64) {
+        s.preempt_multiplier = Some(v);
+    }
+    if let Some(v) = body.get("keepalive_s").and_then(Json::as_u64) {
+        s.keepalive_s = Some(v);
+    }
+    let nat_disabled =
+        body.get("nat_disabled").and_then(Json::as_bool) == Some(true);
+    let nat_timeout =
+        body.get("nat_idle_timeout_s").and_then(Json::as_u64);
+    match (nat_disabled, nat_timeout) {
+        (true, Some(_)) => {
+            return Err(format!(
+                "[scenario.{name}] sets both nat_disabled and \
+                 nat_idle_timeout_s; pick one"
+            ))
+        }
+        (true, None) => s.nat_override = Some(NatOverride::Disabled),
+        (false, Some(t)) => {
+            s.nat_override = Some(NatOverride::IdleTimeout(t))
+        }
+        (false, None) => {}
+    }
+    if body.get("outage_disabled").and_then(Json::as_bool) == Some(true) {
+        s.outage = Some(None);
+    }
+    if let Some(at) = body.get("outage_at_days").and_then(Json::as_f64) {
+        let dur = body
+            .get("outage_duration_hours")
+            .and_then(Json::as_f64)
+            .unwrap_or(2.0);
+        s.outage = Some(Some(OutageSpec {
+            at_s: (at * DAY as f64) as u64,
+            duration_s: (dur * HOUR as f64) as u64,
+        }));
+    }
+    if let Some(arr) = body.get("ramp_targets").and_then(Json::as_arr) {
+        let holds: Vec<f64> = body
+            .get("ramp_hold_days")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default();
+        // strict: a dropped entry would shift the target/hold pairing
+        // (or leave an empty ramp) without any diagnostic
+        let mut ramp = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            let target = v.as_u64().ok_or_else(|| {
+                format!(
+                    "[scenario.{name}] ramp_targets[{i}] must be a \
+                     non-negative integer"
+                )
+            })?;
+            ramp.push(RampStep {
+                target: target as u32,
+                hold_s: (holds.get(i).copied().unwrap_or(2.0)
+                    * DAY as f64) as u64,
+            });
+        }
+        if ramp.is_empty() {
+            return Err(format!(
+                "[scenario.{name}] ramp_targets must not be empty"
+            ));
+        }
+        s.ramp = Some(ramp);
+    }
+    if let Some(v) = body.get("onprem_slots").and_then(Json::as_u64) {
+        s.onprem_slots = Some(v as u32);
+    }
+    if let Some(v) = body.get("policy").and_then(Json::as_str) {
+        s.policy = Some(policy_from_str(v)?);
+    }
+    Ok(s)
+}
+
+/// Parse a matrix spec: applies the optional `[base]` table to `base`
+/// and returns the scenarios in name order.
+pub fn parse_spec(
+    text: &str,
+    base: &mut CampaignConfig,
+) -> Result<Vec<ScenarioConfig>, String> {
+    let doc = toml::parse(text).map_err(|e| e.to_string())?;
+    if let Some(b) = doc.get("base") {
+        base.apply_toml(b)?;
+    }
+    let tables = doc
+        .get("scenario")
+        .and_then(Json::as_obj)
+        .ok_or("matrix spec has no [scenario.<name>] tables")?;
+    if tables.is_empty() {
+        return Err("matrix spec defines zero scenarios".into());
+    }
+    let mut out = Vec::new();
+    for (name, body) in tables {
+        out.push(scenario_from_json(name, body)?);
+    }
+    Ok(out)
+}
+
+/// Load a matrix spec from a file.
+pub fn from_toml_file(
+    path: &str,
+    base: &mut CampaignConfig,
+) -> Result<Vec<ScenarioConfig>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_spec(&text, base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_matrix_is_big_enough_and_unique() {
+        let m = builtin_matrix();
+        assert!(m.len() >= 8, "need >= 8 scenarios, have {}", m.len());
+        let mut names: Vec<&str> = m.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), m.len(), "scenario names must be unique");
+        // the baseline really is the base config
+        let base = CampaignConfig::default();
+        let applied = m[0].apply(&base);
+        assert_eq!(applied.budget_usd, base.budget_usd);
+        assert_eq!(applied.ramp, base.ramp);
+    }
+
+    #[test]
+    fn spec_parses_scenarios_in_name_order() {
+        let mut base = CampaignConfig::default();
+        let spec = r#"
+[base]
+duration_days = 2.0
+
+[scenario.c-third]
+budget_usd = 1000.0
+
+[scenario.a-first]
+keepalive_s = 300
+nat_disabled = true
+
+[scenario.b-second]
+preempt_multiplier = 4.0
+outage_disabled = true
+policy = "adaptive"
+"#;
+        let scenarios = parse_spec(spec, &mut base).unwrap();
+        assert_eq!(base.duration_s, 2 * DAY);
+        let names: Vec<&str> =
+            scenarios.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["a-first", "b-second", "c-third"]);
+        assert_eq!(scenarios[0].keepalive_s, Some(300));
+        assert_eq!(scenarios[0].nat_override, Some(NatOverride::Disabled));
+        assert_eq!(scenarios[1].preempt_multiplier, Some(4.0));
+        assert_eq!(scenarios[1].outage, Some(None));
+        assert_eq!(scenarios[1].policy, Some(PolicyMode::Adaptive));
+        assert_eq!(scenarios[2].budget_usd, Some(1000.0));
+    }
+
+    #[test]
+    fn spec_parses_ramp_and_outage() {
+        let mut base = CampaignConfig::default();
+        let spec = r#"
+[scenario.custom]
+ramp_targets = [100, 500]
+ramp_hold_days = [1.0, 5.0]
+outage_at_days = 3.0
+outage_duration_hours = 6.0
+nat_idle_timeout_s = 120
+onprem_slots = 10
+seed = 77
+"#;
+        let s = &parse_spec(spec, &mut base).unwrap()[0];
+        assert_eq!(
+            s.ramp,
+            Some(vec![
+                RampStep { target: 100, hold_s: DAY },
+                RampStep { target: 500, hold_s: 5 * DAY },
+            ])
+        );
+        assert_eq!(
+            s.outage,
+            Some(Some(OutageSpec { at_s: 3 * DAY, duration_s: 6 * HOUR }))
+        );
+        assert_eq!(s.nat_override, Some(NatOverride::IdleTimeout(120)));
+        assert_eq!(s.onprem_slots, Some(10));
+        assert_eq!(s.seed, Some(77));
+    }
+
+    #[test]
+    fn empty_or_malformed_specs_rejected() {
+        let mut base = CampaignConfig::default();
+        assert!(parse_spec("x = 1", &mut base).is_err());
+        assert!(parse_spec("[scenario.a]\npolicy = \"nope\"", &mut base)
+            .is_err());
+    }
+
+    #[test]
+    fn typo_keys_rejected_not_silently_ignored() {
+        let mut base = CampaignConfig::default();
+        let err = parse_spec(
+            "[scenario.a]\npreempt_multipler = 10.0",
+            &mut base,
+        )
+        .unwrap_err();
+        assert!(err.contains("preempt_multipler"), "err={err}");
+    }
+
+    #[test]
+    fn conflicting_nat_keys_rejected() {
+        let mut base = CampaignConfig::default();
+        assert!(parse_spec(
+            "[scenario.a]\nnat_disabled = true\nnat_idle_timeout_s = 120",
+            &mut base
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_ramp_entries_rejected() {
+        let mut base = CampaignConfig::default();
+        assert!(parse_spec(
+            "[scenario.a]\nramp_targets = [100.5, 500]",
+            &mut base
+        )
+        .is_err());
+        assert!(
+            parse_spec("[scenario.a]\nramp_targets = []", &mut base).is_err()
+        );
+    }
+
+    #[test]
+    fn policy_names_resolve() {
+        assert_eq!(policy_from_str("adaptive").unwrap(), PolicyMode::Adaptive);
+        match policy_from_str("uniform").unwrap() {
+            PolicyMode::Fixed(w) => assert!((w.aws - w.azure).abs() < 1e-12),
+            _ => panic!(),
+        }
+        match policy_from_str("paper").unwrap() {
+            PolicyMode::Fixed(w) => assert!(w.azure > w.aws),
+            _ => panic!(),
+        }
+        assert!(policy_from_str("bogus").is_err());
+    }
+}

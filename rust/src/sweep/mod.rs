@@ -1,0 +1,27 @@
+//! Scenario-sweep subsystem: many campaign replays, in parallel, one
+//! comparison table.
+//!
+//! The paper reports a single operating point (one budget, one ramp, one
+//! outage); the interesting operational science is in the *what-ifs* —
+//! different budgets, busier spot markets, different NAT infrastructure,
+//! alternative ramp plans (HEPCloud's AWS investigation and the
+//! whole-GPU-accounting follow-ups sweep exactly these axes).  This
+//! module runs a matrix of [`ScenarioConfig`] overrides over one base
+//! campaign on `std::thread` workers and reduces every replay to a
+//! [`ScenarioSummary`] row (cost, GPU-days, EFLOP-hours, preemptions,
+//! NAT drops, goodput).
+//!
+//! Determinism is load-bearing: each replay owns its entire world —
+//! `sim::EventQueue`/`sim::Ticker` clocks, `util::rng::Rng` streams,
+//! fleet, pool, ledger — with no process-global simulation state, so a
+//! matrix produces byte-identical summaries regardless of worker-thread
+//! count or scheduling order.  `rust/tests/sweep_determinism.rs` pins
+//! both properties.
+//!
+//! [`ScenarioConfig`]: crate::coordinator::ScenarioConfig
+
+pub mod matrix;
+pub mod runner;
+
+pub use matrix::{builtin_matrix, parse_spec};
+pub use runner::{run_matrix, summarize, ScenarioSummary};

@@ -1,0 +1,204 @@
+//! The parallel sweep runner: N scenarios over M worker threads.
+//!
+//! Campaign replays are embarrassingly parallel — every replay owns its
+//! clocks, RNG streams, fleet, pool and ledger (no global simulation
+//! state) — so the runner is a plain work-stealing loop: an atomic
+//! next-index counter, scoped `std::thread` workers, and a slot-per-
+//! scenario result vector.  Summaries land at their scenario's index, so
+//! the output order (and content) is independent of thread count and
+//! scheduling — the property `rust/tests/sweep_determinism.rs` pins.
+
+use crate::cloudbank::BudgetSnapshot;
+use crate::config::CampaignConfig;
+use crate::coordinator::{Campaign, CampaignResult, ScenarioConfig};
+use crate::osg::UsageAccounting;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One scenario replay reduced to a comparison-table row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSummary {
+    pub name: String,
+    pub seed: u64,
+    pub duration_days: f64,
+    /// CloudBank roll-up at campaign end (budget + per-provider spend).
+    pub snapshot: BudgetSnapshot,
+    pub gpu_days: f64,
+    pub eflop_hours: f64,
+    /// Cost per fp32 EFLOP-hour (NaN when nothing was delivered).
+    pub cost_per_eflop_hour: f64,
+    pub peak_gpus: f64,
+    pub mean_gpus: f64,
+    pub completed: u64,
+    pub interrupted: u64,
+    pub goodput_fraction: f64,
+    pub nat_drops: u64,
+    pub preemptions: u64,
+    pub expansion_factor: f64,
+    pub alerts: usize,
+}
+
+impl ScenarioSummary {
+    pub fn cost_usd(&self) -> f64 {
+        self.snapshot.spent_usd
+    }
+}
+
+/// Reduce one finished replay to its summary row.
+pub fn summarize(
+    name: &str,
+    cfg: &CampaignConfig,
+    result: &CampaignResult,
+) -> ScenarioSummary {
+    let gpu_hours = result.meter.total_instance_hours();
+    let eflop_hours = UsageAccounting::eflop_hours(gpu_hours);
+    let cost = result.ledger.total_spent();
+    let gpus = result
+        .monitor
+        .get("gpus.total")
+        .map(|s| s.summary());
+    let good = result.schedd_stats.goodput_s as f64;
+    let bad = result.schedd_stats.badput_s as f64;
+    ScenarioSummary {
+        name: name.to_string(),
+        seed: cfg.seed,
+        duration_days: cfg.duration_s as f64 / 86_400.0,
+        snapshot: result.ledger.snapshot(cfg.duration_s),
+        gpu_days: gpu_hours / 24.0,
+        eflop_hours,
+        cost_per_eflop_hour: if eflop_hours > 0.0 {
+            cost / eflop_hours
+        } else {
+            f64::NAN
+        },
+        peak_gpus: gpus.map(|s| s.max).unwrap_or(0.0),
+        mean_gpus: gpus.map(|s| s.mean).unwrap_or(0.0),
+        completed: result.schedd_stats.completed,
+        interrupted: result.schedd_stats.interrupted,
+        goodput_fraction: if good + bad > 0.0 {
+            good / (good + bad)
+        } else {
+            1.0
+        },
+        nat_drops: result.pool_stats.nat_drops,
+        preemptions: result.provider_ops.iter().map(|(_, p, _)| *p).sum(),
+        expansion_factor: result.usage.expansion_factor(),
+        alerts: result.ledger.alerts().len(),
+    }
+}
+
+/// Replay every scenario of the matrix against `base` on up to
+/// `threads` worker threads; returns one summary per scenario, in
+/// matrix order, independent of thread count.
+pub fn run_matrix(
+    base: &CampaignConfig,
+    scenarios: &[ScenarioConfig],
+    threads: usize,
+) -> Vec<ScenarioSummary> {
+    let workers = threads.max(1).min(scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ScenarioSummary>>> =
+        (0..scenarios.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let cfg = scenarios[i].apply(base);
+                let result = Campaign::new(cfg.clone()).run();
+                let summary = summarize(&scenarios[i].name, &cfg, &result);
+                *slots[i].lock().unwrap() = Some(summary);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("every scenario index was claimed and completed")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RampStep;
+    use crate::sim::{DAY, HOUR};
+
+    fn small_base() -> CampaignConfig {
+        let mut c = CampaignConfig::default();
+        c.duration_s = 6 * HOUR;
+        c.ramp = vec![RampStep { target: 25, hold_s: 60 * DAY }];
+        c.outage = None;
+        c.onprem.slots = 15;
+        c.generator.min_backlog = 80;
+        c
+    }
+
+    #[test]
+    fn runs_every_scenario_in_order() {
+        let base = small_base();
+        let scenarios = vec![
+            ScenarioConfig::named("one"),
+            {
+                let mut s = ScenarioConfig::named("two");
+                s.budget_usd = Some(10.0);
+                s
+            },
+            {
+                let mut s = ScenarioConfig::named("three");
+                s.onprem_slots = Some(0);
+                s
+            },
+        ];
+        let rows = run_matrix(&base, &scenarios, 2);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].name, "one");
+        assert_eq!(rows[1].name, "two");
+        assert_eq!(rows[2].name, "three");
+        // every replay produced a populated summary
+        assert!(rows[0].completed > 0);
+        assert!(rows[0].peak_gpus > 0.0);
+        assert!(rows[0].cost_usd() > 0.0);
+        // the $10 budget drains the fleet early: strictly cheaper
+        assert!(rows[1].cost_usd() < rows[0].cost_usd());
+        // no on-prem slots => expansion factor has no baseline
+        assert!(rows[2].expansion_factor.is_nan());
+    }
+
+    #[test]
+    fn single_scenario_single_thread() {
+        let base = small_base();
+        let rows =
+            run_matrix(&base, &[ScenarioConfig::named("solo")], 1);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].duration_days, 0.25);
+        assert_eq!(rows[0].seed, base.seed);
+    }
+
+    #[test]
+    fn empty_matrix_is_empty() {
+        assert!(run_matrix(&small_base(), &[], 4).is_empty());
+    }
+
+    #[test]
+    fn oversubscribed_threads_are_clamped() {
+        let base = small_base();
+        let rows = run_matrix(
+            &base,
+            &[ScenarioConfig::named("a"), ScenarioConfig::named("b")],
+            64,
+        );
+        assert_eq!(rows.len(), 2);
+        // identical scenarios produce identical summaries
+        let mut b = rows[1].clone();
+        b.name = "a".into();
+        assert_eq!(rows[0], b);
+    }
+}

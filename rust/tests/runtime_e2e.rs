@@ -1,6 +1,6 @@
 //! End-to-end tests of the PJRT runtime path: campaign with real compute.
 //!
-//! These require `make artifacts` and are skipped (pass trivially)
+//! These require artifacts (`python -m compile.aot`) and are skipped (pass trivially)
 //! otherwise — the Makefile's `test` target always builds artifacts first.
 
 use icecloud::config::{CampaignConfig, RampStep, RealComputeConfig};

@@ -1,0 +1,144 @@
+//! Sweep determinism contract: the same matrix + seeds must produce
+//! byte-identical summaries, and the worker-thread count must not change
+//! any per-scenario result.  These properties make sweep output citable
+//! (EXPERIMENTS.md records seeds next to numbers) and are what allows
+//! the runner to scale across cores without a reproducibility tax.
+
+use icecloud::config::{CampaignConfig, NatOverride, RampStep};
+use icecloud::coordinator::ScenarioConfig;
+use icecloud::experiments;
+use icecloud::sim::{DAY, HOUR};
+use icecloud::sweep;
+
+fn small_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 12 * HOUR;
+    c.ramp = vec![RampStep { target: 40, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 20;
+    c.generator.min_backlog = 120;
+    c
+}
+
+/// A compact matrix that still exercises every override axis.
+fn small_matrix() -> Vec<ScenarioConfig> {
+    let mut m = vec![ScenarioConfig::named("baseline")];
+
+    let mut s = ScenarioConfig::named("budget-tight");
+    s.budget_usd = Some(20.0);
+    m.push(s);
+
+    let mut s = ScenarioConfig::named("churn-x25");
+    s.preempt_multiplier = Some(25.0);
+    m.push(s);
+
+    let mut s = ScenarioConfig::named("keepalive-300");
+    s.keepalive_s = Some(300);
+    m.push(s);
+
+    let mut s = ScenarioConfig::named("no-nat-300");
+    s.keepalive_s = Some(300);
+    s.nat_override = Some(NatOverride::Disabled);
+    m.push(s);
+
+    let mut s = ScenarioConfig::named("other-seed");
+    s.seed = Some(777);
+    m.push(s);
+
+    m
+}
+
+#[test]
+fn same_matrix_twice_is_byte_identical() {
+    let base = small_base();
+    let matrix = small_matrix();
+    let a = sweep::run_matrix(&base, &matrix, 3);
+    let b = sweep::run_matrix(&base, &matrix, 3);
+    assert_eq!(a, b, "summaries must replay identically");
+    assert_eq!(
+        experiments::sweep::render(&a),
+        experiments::sweep::render(&b)
+    );
+    assert_eq!(
+        experiments::sweep::to_csv(&a),
+        experiments::sweep::to_csv(&b)
+    );
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let base = small_base();
+    let matrix = small_matrix();
+    let sequential = sweep::run_matrix(&base, &matrix, 1);
+    let parallel = sweep::run_matrix(&base, &matrix, 4);
+    assert_eq!(sequential.len(), parallel.len());
+    for (s, p) in sequential.iter().zip(parallel.iter()) {
+        assert_eq!(s, p, "scenario '{}' diverged across thread counts", s.name);
+    }
+    assert_eq!(
+        experiments::sweep::to_csv(&sequential),
+        experiments::sweep::to_csv(&parallel)
+    );
+}
+
+#[test]
+fn scenario_overrides_change_outcomes_as_expected() {
+    let base = small_base();
+    let rows = sweep::run_matrix(&base, &small_matrix(), 4);
+    let get = |name: &str| {
+        rows.iter().find(|r| r.name == name).expect("scenario row")
+    };
+    let baseline = get("baseline");
+
+    // the tuned keepalive never drops; the OSG default storms on Azure
+    assert_eq!(baseline.nat_drops, 0);
+    assert!(get("keepalive-300").nat_drops > 0);
+    // ... unless the NAT itself has no idle expiry
+    assert_eq!(get("no-nat-300").nat_drops, 0);
+
+    // a $20 budget drains the fleet: strictly cheaper, less compute
+    let tight = get("budget-tight");
+    assert!(tight.cost_usd() < baseline.cost_usd());
+    assert!(tight.gpu_days < baseline.gpu_days);
+
+    // 25x churn hazard preempts far more often than the calm baseline
+    assert!(
+        get("churn-x25").preemptions > baseline.preemptions,
+        "churn-x25 {} vs baseline {}",
+        get("churn-x25").preemptions,
+        baseline.preemptions
+    );
+
+    // a different seed is a different (but internally valid) history
+    let other = get("other-seed");
+    assert_eq!(other.seed, 777);
+    assert!(other.completed > 0);
+}
+
+#[test]
+fn builtin_matrix_names_are_stable() {
+    // the default matrix is part of the CLI contract (docs refer to the
+    // scenario names); keep additions append-only
+    let names: Vec<String> = sweep::builtin_matrix()
+        .into_iter()
+        .map(|s| s.name)
+        .collect();
+    assert!(names.len() >= 8);
+    for expected in [
+        "baseline",
+        "no-outage",
+        "budget-half",
+        "budget-quarter",
+        "churn-x4",
+        "churn-x10",
+        "keepalive-300",
+        "no-nat",
+        "ramp-aggressive",
+        "policy-adaptive",
+    ] {
+        assert!(
+            names.iter().any(|n| n == expected),
+            "builtin matrix lost scenario '{expected}'"
+        );
+    }
+}
