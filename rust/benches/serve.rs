@@ -1,0 +1,84 @@
+//! `icecloud serve` load generator: requests/sec cold vs cached.
+//!
+//! Starts an in-process server on an ephemeral port and drives it with
+//! the in-tree HTTP client (`server::http`).  "Cold" requests vary the
+//! scenario seed every iteration, so every request forces a real
+//! campaign replay; "cached" requests repeat one spec, so after the
+//! first replay every response is served from the content-addressed
+//! cache.  The subsystem's perf claim — cached throughput ≥ 100x cold
+//! replay throughput — is printed as an explicit ratio at the end.
+//!
+//! Regenerate the committed baseline (BENCH_pr2.json) with:
+//!   cargo bench --bench serve 2>/dev/null | grep BENCHJSON
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{ServeConfig, Server};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::bench::Bench;
+
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn post_sweep(addr: &str, spec: &str) -> u16 {
+    let resp = client_request(
+        addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec.as_bytes(),
+    )
+    .expect("request");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    resp.status
+}
+
+fn main() {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 4,
+        replay_threads: 2,
+        cache_bytes: 64 << 20,
+        base: tiny_base(),
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = server.spawn().expect("spawn");
+
+    let mut b = Bench::new();
+
+    // every iteration a fresh seed: full replay per request
+    let mut seed = 0u64;
+    b.run_throughput("serve/sweep-cold-replay", 1.0, "requests", || {
+        seed += 1;
+        post_sweep(&addr, &format!("[scenario.cold]\nseed = {seed}\n"))
+    });
+
+    // one spec repeated: replayed once, then pure cache traffic
+    let hot_spec = "[scenario.hot]\nseed = 424242\n";
+    post_sweep(&addr, hot_spec); // warm
+    b.run_throughput("serve/sweep-cached", 1.0, "requests", || {
+        post_sweep(&addr, hot_spec)
+    });
+
+    let results = b.results();
+    let cold = results[0].throughput().unwrap_or(f64::NAN);
+    let cached = results[1].throughput().unwrap_or(f64::NAN);
+    println!(
+        "\ncold {:.1} req/s, cached {:.1} req/s => cached/cold = {:.0}x \
+         (target >= 100x)",
+        cold,
+        cached,
+        cached / cold
+    );
+
+    b.finish();
+    handle.shutdown();
+}

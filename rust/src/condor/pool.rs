@@ -166,7 +166,11 @@ impl CondorPool {
         self.outage = true;
         let slots: Vec<SlotId> = self.startds.keys().copied().collect();
         for slot in slots {
-            let startd = self.startds.get_mut(&slot).unwrap();
+            let startd = self.startds.get_mut(&slot).expect(
+                "pool invariant violated: slot snapshotted from startds \
+                 keys disappeared during the outage sweep (nothing may \
+                 deregister startds while begin_outage runs)",
+            );
             startd.conn.sever();
             startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
             if let Some(claim) = startd.release() {
@@ -204,7 +208,11 @@ impl CondorPool {
         slots.clear();
         slots.extend(self.startds.keys().copied());
         for &slot in &slots {
-            let startd = self.startds.get_mut(&slot).unwrap();
+            let startd = self.startds.get_mut(&slot).expect(
+                "pool invariant violated: slot snapshotted from startds \
+                 keys disappeared mid-tick (keepalives never deregister \
+                 workers; only provisioning teardown may)",
+            );
 
             // reconnect attempts
             if let Some(at) = startd.reconnect_at {
@@ -324,7 +332,11 @@ impl CondorPool {
         for (job, slot) in result.matches {
             let runtime = self.schedd.job(job).runtime_s;
             self.schedd.start(job, slot, now);
-            let startd = self.startds.get_mut(&slot).unwrap();
+            let startd = self.startds.get_mut(&slot).expect(
+                "pool invariant violated: negotiator matched a job to a \
+                 slot with no startd entry (matchmaking must only see \
+                 ads of registered workers)",
+            );
             startd.claim_for(job, now, runtime);
             Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
                               startd.pool_tag, 1);

@@ -2,7 +2,7 @@
 //! overridable from a TOML file and CLI flags.
 
 use crate::sim::{SimTime, DAY, HOUR, MINUTE};
-use crate::util::json::Json;
+use crate::util::json::{require_bool, require_f64, require_u64, Json};
 use crate::util::toml;
 use crate::workload::{GeneratorConfig, OnPremConfig};
 
@@ -15,11 +15,32 @@ pub struct RampStep {
     pub hold_s: SimTime,
 }
 
+impl RampStep {
+    /// Stable serialization for cache keying (see
+    /// [`CampaignConfig::canonical_json`]).
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("target", Json::from(self.target as u64));
+        o.set("hold_s", Json::from(self.hold_s));
+        o
+    }
+}
+
 /// A scheduled network outage of the provider hosting the CE.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OutageSpec {
     pub at_s: SimTime,
     pub duration_s: SimTime,
+}
+
+impl OutageSpec {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("at_s", Json::from(self.at_s));
+        o.set("duration_s", Json::from(self.duration_s));
+        o
+    }
 }
 
 /// Provider preference weights (aws, gcp, azure order).
@@ -37,6 +58,24 @@ pub enum PolicyMode {
     Fixed(ProviderWeights),
     /// Adapt weights to observed price and preemption rates.
     Adaptive,
+}
+
+impl PolicyMode {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            PolicyMode::Adaptive => Json::from("adaptive"),
+            PolicyMode::Fixed(w) => {
+                let mut f = Json::obj();
+                f.set("aws", Json::from(w.aws));
+                f.set("gcp", Json::from(w.gcp));
+                f.set("azure", Json::from(w.azure));
+                let mut o = Json::obj();
+                o.set("fixed", f);
+                o
+            }
+        }
+    }
 }
 
 /// Real-compute sampling: execute the AOT photon artifact for every Nth
@@ -61,6 +100,21 @@ pub enum NatOverride {
     IdleTimeout(u64),
     /// No NAT idle expiry anywhere (the fixed-infrastructure ablation).
     Disabled,
+}
+
+impl NatOverride {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            NatOverride::ProviderDefault => Json::from("provider-default"),
+            NatOverride::Disabled => Json::from("disabled"),
+            NatOverride::IdleTimeout(t) => {
+                let mut o = Json::obj();
+                o.set("idle_timeout_s", Json::from(*t));
+                o
+            }
+        }
+    }
 }
 
 /// Everything the campaign runner needs.
@@ -155,29 +209,48 @@ impl Default for CampaignConfig {
     }
 }
 
+/// Fetch `path` as a u64 or error; absent keys are `Ok(None)`.  Built
+/// on `util::json::require_*` so the strict-value contract (mistyped
+/// values error, never silently no-op) has one implementation shared
+/// with the scenario-spec parser.
+fn want_u64(doc: &Json, path: &[&str]) -> Result<Option<u64>, String> {
+    doc.get_path(path)
+        .map(|v| require_u64(v, &format!("'{}'", path.join("."))))
+        .transpose()
+}
+
+fn want_f64(doc: &Json, path: &[&str]) -> Result<Option<f64>, String> {
+    doc.get_path(path)
+        .map(|v| require_f64(v, &format!("'{}'", path.join("."))))
+        .transpose()
+}
+
+fn want_bool(doc: &Json, path: &[&str]) -> Result<Option<bool>, String> {
+    doc.get_path(path)
+        .map(|v| require_bool(v, &format!("'{}'", path.join("."))))
+        .transpose()
+}
+
 impl CampaignConfig {
-    /// Apply overrides from a parsed TOML document.
+    /// Apply overrides from a parsed TOML document.  Strict on values:
+    /// a present-but-mistyped key is an error, never a silent no-op
+    /// (the server feeds untrusted `[base]` tables through here).
     pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
-        if let Some(v) = doc.get_path(&["seed"]).and_then(Json::as_u64) {
+        if let Some(v) = want_u64(doc, &["seed"])? {
             self.seed = v;
         }
-        if let Some(v) = doc.get_path(&["duration_days"]).and_then(Json::as_f64) {
+        if let Some(v) = want_f64(doc, &["duration_days"])? {
             self.duration_s = (v * DAY as f64) as SimTime;
         }
-        if let Some(v) = doc.get_path(&["keepalive_s"]).and_then(Json::as_u64) {
+        if let Some(v) = want_u64(doc, &["keepalive_s"])? {
             self.keepalive_s = v;
         }
-        if let Some(v) =
-            doc.get_path(&["preempt_multiplier"]).and_then(Json::as_f64)
-        {
+        if let Some(v) = want_f64(doc, &["preempt_multiplier"])? {
             self.preempt_multiplier = v;
         }
-        let nat_disabled = doc
-            .get_path(&["nat", "disabled"])
-            .and_then(Json::as_bool)
-            == Some(true);
-        let nat_timeout =
-            doc.get_path(&["nat", "idle_timeout_s"]).and_then(Json::as_u64);
+        let nat_disabled =
+            want_bool(doc, &["nat", "disabled"])? == Some(true);
+        let nat_timeout = want_u64(doc, &["nat", "idle_timeout_s"])?;
         match (nat_disabled, nat_timeout) {
             (true, Some(_)) => {
                 return Err("[nat] sets both disabled = true and \
@@ -190,75 +263,244 @@ impl CampaignConfig {
             }
             (false, None) => {}
         }
-        if let Some(v) = doc.get_path(&["budget", "total_usd"]).and_then(Json::as_f64)
-        {
+        if let Some(v) = want_f64(doc, &["budget", "total_usd"])? {
             self.budget_usd = v;
         }
-        if let Some(v) =
-            doc.get_path(&["budget", "overhead_fraction"]).and_then(Json::as_f64)
-        {
+        if let Some(v) = want_f64(doc, &["budget", "overhead_fraction"])? {
             self.overhead_fraction = v;
         }
         if let Some(arr) =
-            doc.get_path(&["budget", "alerts"]).and_then(Json::as_arr)
+            doc.get_path(&["budget", "alerts"]).map(|v| {
+                v.as_arr().ok_or_else(|| {
+                    "'budget.alerts' must be an array".to_string()
+                })
+            })
         {
-            self.alert_thresholds =
-                arr.iter().filter_map(Json::as_f64).collect();
+            let arr = arr?;
+            let mut alerts = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                alerts.push(v.as_f64().ok_or_else(|| {
+                    format!("'budget.alerts[{i}]' must be a number")
+                })?);
+            }
+            self.alert_thresholds = alerts;
         }
-        if let Some(v) = doc.get_path(&["onprem", "slots"]).and_then(Json::as_u64)
-        {
+        if let Some(v) = want_u64(doc, &["onprem", "slots"])? {
             self.onprem.slots = v as u32;
         }
-        if let Some(arr) = doc.get_path(&["ramp", "targets"]).and_then(Json::as_arr)
-        {
-            let holds = doc
-                .get_path(&["ramp", "hold_days"])
-                .and_then(Json::as_arr)
-                .map(|a| a.iter().filter_map(Json::as_f64).collect::<Vec<_>>())
-                .unwrap_or_default();
-            self.ramp = arr
-                .iter()
-                .filter_map(Json::as_u64)
-                .enumerate()
-                .map(|(i, t)| RampStep {
-                    target: t as u32,
-                    hold_s: (holds.get(i).copied().unwrap_or(2.0) * DAY as f64)
-                        as SimTime,
-                })
-                .collect();
+        if let Some(arr) = doc.get_path(&["ramp", "targets"]) {
+            let arr = arr.as_arr().ok_or_else(|| {
+                "'ramp.targets' must be an array".to_string()
+            })?;
+            let holds = match doc.get_path(&["ramp", "hold_days"]) {
+                None => Vec::new(),
+                Some(h) => {
+                    let h = h.as_arr().ok_or_else(|| {
+                        "'ramp.hold_days' must be an array".to_string()
+                    })?;
+                    let mut out = Vec::with_capacity(h.len());
+                    for (i, v) in h.iter().enumerate() {
+                        out.push(v.as_f64().ok_or_else(|| {
+                            format!(
+                                "'ramp.hold_days[{i}]' must be a number"
+                            )
+                        })?);
+                    }
+                    out
+                }
+            };
+            if holds.len() > arr.len() {
+                return Err(format!(
+                    "'ramp.hold_days' has {} entries for {} targets",
+                    holds.len(),
+                    arr.len()
+                ));
+            }
+            // strict: a dropped entry would shift the target/hold
+            // pairing (or leave an empty ramp) without any diagnostic
+            let mut ramp = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                let target = v.as_u64().ok_or_else(|| {
+                    format!(
+                        "'ramp.targets[{i}]' must be a non-negative \
+                         integer"
+                    )
+                })?;
+                ramp.push(RampStep {
+                    target: target as u32,
+                    hold_s: (holds.get(i).copied().unwrap_or(2.0)
+                        * DAY as f64) as SimTime,
+                });
+            }
+            if ramp.is_empty() {
+                return Err("'ramp.targets' must not be empty".into());
+            }
+            self.ramp = ramp;
         }
-        if let Some(at) = doc.get_path(&["outage", "at_days"]).and_then(Json::as_f64)
-        {
-            let dur = doc
-                .get_path(&["outage", "duration_hours"])
-                .and_then(Json::as_f64)
+        if let Some(at) = want_f64(doc, &["outage", "at_days"])? {
+            let dur = want_f64(doc, &["outage", "duration_hours"])?
                 .unwrap_or(2.0);
             self.outage = Some(OutageSpec {
                 at_s: (at * DAY as f64) as SimTime,
                 duration_s: (dur * HOUR as f64) as SimTime,
             });
         }
-        if doc.get_path(&["outage", "disabled"]).and_then(Json::as_bool)
-            == Some(true)
-        {
+        if want_bool(doc, &["outage", "disabled"])? == Some(true) {
             self.outage = None;
         }
-        if let Some(mode) = doc.get_path(&["policy", "mode"]).and_then(Json::as_str)
-        {
+        let weights = match (
+            want_f64(doc, &["policy", "aws"])?,
+            want_f64(doc, &["policy", "gcp"])?,
+            want_f64(doc, &["policy", "azure"])?,
+        ) {
+            (Some(aws), Some(gcp), Some(azure)) => {
+                Some(ProviderWeights { aws, gcp, azure })
+            }
+            (None, None, None) => None,
+            _ => {
+                return Err("[policy] weights need all three of \
+                            aws/gcp/azure"
+                    .into())
+            }
+        };
+        if let Some(mode) = doc.get_path(&["policy", "mode"]) {
+            let mode = mode.as_str().ok_or_else(|| {
+                "'policy.mode' must be a string".to_string()
+            })?;
             self.policy = match mode {
+                "adaptive" if weights.is_some() => {
+                    return Err("policy.mode = \"adaptive\" conflicts \
+                                with fixed aws/gcp/azure weights"
+                        .into())
+                }
                 "adaptive" => PolicyMode::Adaptive,
-                "fixed" => self.policy,
+                // mode = "fixed" must actually pin a fixed policy: take
+                // this doc's weights, or keep already-fixed weights —
+                // but never let it silently leave an adaptive policy in
+                // place
+                "fixed" => match (weights, self.policy) {
+                    (Some(w), _) => PolicyMode::Fixed(w),
+                    (None, fixed @ PolicyMode::Fixed(_)) => fixed,
+                    (None, PolicyMode::Adaptive) => {
+                        return Err("policy.mode = \"fixed\" needs \
+                                    aws/gcp/azure weights (current \
+                                    policy is adaptive)"
+                            .into())
+                    }
+                },
                 other => return Err(format!("unknown policy mode '{other}'")),
             };
-        }
-        if let (Some(aws), Some(gcp), Some(azure)) = (
-            doc.get_path(&["policy", "aws"]).and_then(Json::as_f64),
-            doc.get_path(&["policy", "gcp"]).and_then(Json::as_f64),
-            doc.get_path(&["policy", "azure"]).and_then(Json::as_f64),
-        ) {
-            self.policy = PolicyMode::Fixed(ProviderWeights { aws, gcp, azure });
+        } else if let Some(w) = weights {
+            self.policy = PolicyMode::Fixed(w);
         }
         Ok(())
+    }
+
+    /// Canonical serialization: every semantically-relevant field, in a
+    /// deterministic key order (`Json::Obj` is a `BTreeMap`), with
+    /// deterministic number formatting (`util::json::write_num`).  Two
+    /// configs produce the same string iff they replay the same
+    /// campaign, which is what makes the server's content-addressed
+    /// result cache sound — see `crate::server::cache`.
+    ///
+    /// Adding a field to `CampaignConfig` that affects the replay MUST
+    /// be mirrored here; the version tag lets the cache key change
+    /// shape without aliasing old keys.
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("v", Json::from(1u64));
+        o.set("seed", Json::from(self.seed));
+        o.set("duration_s", Json::from(self.duration_s));
+        o.set("tick_s", Json::from(self.tick_s));
+        o.set("sample_every_s", Json::from(self.sample_every_s));
+        o.set("control_period_s", Json::from(self.control_period_s));
+        o.set(
+            "negotiation_period_s",
+            Json::from(self.negotiation_period_s),
+        );
+        o.set("budget_usd", Json::from(self.budget_usd));
+        o.set(
+            "alert_thresholds",
+            Json::Arr(
+                self.alert_thresholds
+                    .iter()
+                    .map(|&t| Json::from(t))
+                    .collect(),
+            ),
+        );
+        o.set("overhead_fraction", Json::from(self.overhead_fraction));
+        o.set(
+            "budget_reserve_fraction",
+            Json::from(self.budget_reserve_fraction),
+        );
+        o.set(
+            "low_budget_resume_fraction",
+            Json::from(self.low_budget_resume_fraction),
+        );
+        o.set(
+            "post_outage_target",
+            Json::from(self.post_outage_target as u64),
+        );
+        o.set("keepalive_s", Json::from(self.keepalive_s));
+        o.set(
+            "preempt_multiplier",
+            Json::from(self.preempt_multiplier),
+        );
+        o.set("nat_override", self.nat_override.canonical_json());
+        o.set(
+            "ramp",
+            Json::Arr(self.ramp.iter().map(RampStep::canonical_json).collect()),
+        );
+        o.set(
+            "outage",
+            match &self.outage {
+                None => Json::Null,
+                Some(spec) => spec.canonical_json(),
+            },
+        );
+        o.set("policy", self.policy.canonical_json());
+        let mut onprem = Json::obj();
+        onprem.set("slots", Json::from(self.onprem.slots as u64));
+        onprem.set("keepalive_s", Json::from(self.onprem.keepalive_s));
+        onprem.set("availability", Json::from(self.onprem.availability));
+        o.set("onprem", onprem);
+        let mut generator = Json::obj();
+        generator.set(
+            "backlog_factor",
+            Json::from(self.generator.backlog_factor),
+        );
+        generator.set(
+            "min_backlog",
+            Json::from(self.generator.min_backlog as u64),
+        );
+        generator.set(
+            "request_memory_mb",
+            Json::from(self.generator.request_memory_mb),
+        );
+        let mut runtimes = Json::obj();
+        runtimes.set("median_s", Json::from(self.generator.runtimes.median_s));
+        runtimes.set("sigma", Json::from(self.generator.runtimes.sigma));
+        runtimes.set("min_s", Json::from(self.generator.runtimes.min_s));
+        runtimes.set("max_s", Json::from(self.generator.runtimes.max_s));
+        generator.set("runtimes", runtimes);
+        o.set("generator", generator);
+        o.set("flops_per_bunch", Json::from(self.flops_per_bunch));
+        o.set(
+            "real_compute",
+            match &self.real_compute {
+                None => Json::Null,
+                Some(rc) => {
+                    let mut r = Json::obj();
+                    r.set("variant", Json::from(rc.variant.as_str()));
+                    r.set(
+                        "every_n_completions",
+                        Json::from(rc.every_n_completions),
+                    );
+                    r
+                }
+            },
+        );
+        o
     }
 
     /// Load from a TOML file over the defaults.
@@ -395,5 +637,129 @@ azure = 0.6
         let doc = toml::parse("[policy]\nmode = \"nope\"").unwrap();
         let mut c = CampaignConfig::default();
         assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn fixed_mode_without_weights_cannot_mask_adaptive() {
+        // mode = "fixed" on an already-fixed policy keeps its weights
+        let doc = toml::parse("[policy]\nmode = \"fixed\"").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert!(matches!(c.policy, PolicyMode::Fixed(_)));
+        // ...but on an adaptive policy it must error, not silently
+        // replay adaptive under a "fixed" spec
+        let mut c = CampaignConfig::default();
+        c.policy = PolicyMode::Adaptive;
+        assert!(c.apply_toml(&doc).is_err());
+        // mode = "fixed" + weights pins those weights
+        let doc = toml::parse(
+            "[policy]\nmode = \"fixed\"\naws = 0.1\ngcp = 0.1\nazure = 0.8",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.policy = PolicyMode::Adaptive;
+        c.apply_toml(&doc).unwrap();
+        match c.policy {
+            PolicyMode::Fixed(w) => assert_eq!(w.azure, 0.8),
+            _ => panic!("expected fixed policy"),
+        }
+    }
+
+    #[test]
+    fn adaptive_mode_with_weights_is_a_conflict() {
+        let doc = toml::parse(
+            "[policy]\nmode = \"adaptive\"\naws = 0.5\ngcp = 0.3\nazure = 0.2",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn mistyped_values_rejected_not_silently_ignored() {
+        for src in [
+            "seed = \"7\"",
+            "duration_days = true",
+            "keepalive_s = 1.5",
+            "[budget]\ntotal_usd = \"1000\"",
+            "[budget]\nalerts = [0.5, \"0.25\"]",
+            "[nat]\ndisabled = \"yes\"",
+            "[outage]\nat_days = \"1\"",
+            "[policy]\nmode = 3",
+            "[policy]\naws = 0.5",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(
+                c.apply_toml(&doc).is_err(),
+                "'{src}' must be rejected, not dropped"
+            );
+        }
+    }
+
+    #[test]
+    fn lenient_ramp_parsing_is_gone() {
+        // a dropped entry used to shift the target/hold pairing and an
+        // all-mistyped list used to leave an empty (dead) ramp
+        for src in [
+            "[ramp]\ntargets = [100.5, 500]",
+            "[ramp]\ntargets = []",
+            "[ramp]\ntargets = [\"100\"]",
+            "[ramp]\ntargets = [100]\nhold_days = [1.0, 2.0]",
+            "[ramp]\ntargets = [100, 200]\nhold_days = [1.0, \"2\"]",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "'{src}' must error");
+        }
+        // fewer holds than targets still defaults the tail to 2 days
+        let doc = toml::parse(
+            "[ramp]\ntargets = [100, 200]\nhold_days = [1.0]",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.ramp[0].hold_s, DAY);
+        assert_eq!(c.ramp[1].hold_s, 2 * DAY);
+    }
+
+    #[test]
+    fn canonical_json_is_stable_and_complete() {
+        let a = CampaignConfig::default().canonical_json().to_string_compact();
+        let b = CampaignConfig::default().canonical_json().to_string_compact();
+        assert_eq!(a, b, "identical configs must serialize identically");
+        // every replay-relevant scalar knob must appear by name
+        for key in [
+            "seed", "duration_s", "tick_s", "budget_usd", "keepalive_s",
+            "preempt_multiplier", "nat_override", "ramp", "outage",
+            "policy", "onprem", "generator", "flops_per_bunch",
+        ] {
+            assert!(a.contains(&format!("\"{key}\"")), "missing {key}: {a}");
+        }
+    }
+
+    #[test]
+    fn canonical_json_distinguishes_configs() {
+        let base = CampaignConfig::default().canonical_json().to_string_compact();
+        let mut c = CampaignConfig::default();
+        c.seed += 1;
+        assert_ne!(base, c.canonical_json().to_string_compact());
+        let mut c = CampaignConfig::default();
+        c.nat_override = NatOverride::IdleTimeout(240);
+        assert_ne!(base, c.canonical_json().to_string_compact());
+        let mut c = CampaignConfig::default();
+        c.outage = None;
+        assert_ne!(base, c.canonical_json().to_string_compact());
+        let mut c = CampaignConfig::default();
+        c.policy = PolicyMode::Adaptive;
+        assert_ne!(base, c.canonical_json().to_string_compact());
+    }
+
+    #[test]
+    fn canonical_json_round_trips_through_parser() {
+        let j = CampaignConfig::default().canonical_json();
+        let parsed =
+            crate::util::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed, j);
     }
 }

@@ -13,6 +13,7 @@ use crate::config::{
     CampaignConfig, NatOverride, OutageSpec, PolicyMode, RampStep,
 };
 use crate::sim::SimTime;
+use crate::util::json::Json;
 
 /// A named set of overrides applied on top of a base campaign config.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -73,6 +74,58 @@ impl ScenarioConfig {
             c.policy = v;
         }
         c
+    }
+
+    /// Canonical serialization of the *override set* (deterministic key
+    /// order, only the fields this scenario actually sets).  Includes
+    /// the name because sweep responses carry it per row; two requests
+    /// that differ only in scenario labels produce different documents
+    /// and therefore different cache keys — see `crate::server::cache`.
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::from(self.name.as_str()));
+        if let Some(v) = self.seed {
+            o.set("seed", Json::from(v));
+        }
+        if let Some(v) = self.duration_s {
+            o.set("duration_s", Json::from(v));
+        }
+        if let Some(v) = self.budget_usd {
+            o.set("budget_usd", Json::from(v));
+        }
+        if let Some(v) = self.preempt_multiplier {
+            o.set("preempt_multiplier", Json::from(v));
+        }
+        if let Some(v) = self.keepalive_s {
+            o.set("keepalive_s", Json::from(v));
+        }
+        if let Some(v) = &self.nat_override {
+            o.set("nat_override", v.canonical_json());
+        }
+        if let Some(outage) = &self.outage {
+            // `Some(None)` (force no outage) serializes as null so it
+            // stays distinct from an absent key (inherit the base)
+            o.set(
+                "outage",
+                match outage {
+                    None => Json::Null,
+                    Some(spec) => spec.canonical_json(),
+                },
+            );
+        }
+        if let Some(ramp) = &self.ramp {
+            o.set(
+                "ramp",
+                Json::Arr(ramp.iter().map(RampStep::canonical_json).collect()),
+            );
+        }
+        if let Some(v) = self.onprem_slots {
+            o.set("onprem_slots", Json::from(v as u64));
+        }
+        if let Some(v) = &self.policy {
+            o.set("policy", v.canonical_json());
+        }
+        o
     }
 }
 
@@ -137,6 +190,42 @@ mod tests {
         assert_eq!(
             resched.apply(&base).outage,
             Some(OutageSpec { at_s: DAY, duration_s: 3_600 })
+        );
+    }
+
+    #[test]
+    fn canonical_json_covers_only_set_fields() {
+        let s = ScenarioConfig::named("bare");
+        let text = s.canonical_json().to_string_compact();
+        assert_eq!(text, r#"{"name":"bare"}"#);
+
+        let mut s = ScenarioConfig::named("full");
+        s.seed = Some(9);
+        s.budget_usd = Some(100.0);
+        s.outage = Some(None);
+        let text = s.canonical_json().to_string_compact();
+        assert!(text.contains("\"seed\":9"), "{text}");
+        assert!(text.contains("\"budget_usd\":100"), "{text}");
+        assert!(text.contains("\"outage\":null"), "{text}");
+        assert!(!text.contains("keepalive"), "{text}");
+    }
+
+    #[test]
+    fn canonical_json_distinguishes_inherit_from_no_outage() {
+        let inherit = ScenarioConfig::named("x");
+        let mut off = ScenarioConfig::named("x");
+        off.outage = Some(None);
+        assert_ne!(
+            inherit.canonical_json().to_string_compact(),
+            off.canonical_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn canonical_json_distinguishes_names() {
+        assert_ne!(
+            ScenarioConfig::named("a").canonical_json().to_string_compact(),
+            ScenarioConfig::named("b").canonical_json().to_string_compact()
         );
     }
 }

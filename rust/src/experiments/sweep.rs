@@ -9,6 +9,7 @@
 
 use crate::cloudbank::report;
 use crate::sweep::ScenarioSummary;
+use crate::util::json::Json;
 use std::path::Path;
 
 /// Render the comparative table (one row per scenario).
@@ -81,12 +82,48 @@ pub fn to_csv(rows: &[ScenarioSummary]) -> String {
     out
 }
 
-/// Write `sweep.txt`, `sweep.csv` and the CloudBank `rollup.txt` into
-/// `<out_root>/sweep/`.
+/// Machine-readable rows as a JSON array — the one rendering shared by
+/// `--out` sweep files and the `icecloud serve` response bodies.  All
+/// key order and number formatting comes from `util::json`, so the same
+/// rows always serialize to the same bytes (which is what makes the
+/// server's content-addressed cache able to promise byte-identical
+/// responses).
+pub fn to_json(rows: &[ScenarioSummary]) -> Json {
+    Json::Arr(rows.iter().map(row_to_json).collect())
+}
+
+fn row_to_json(r: &ScenarioSummary) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::from(r.name.as_str()));
+    o.set("seed", Json::from(r.seed));
+    o.set("duration_days", Json::from(r.duration_days));
+    o.set("budget_usd", Json::from(r.snapshot.budget_usd));
+    o.set("cost_usd", Json::from(r.cost_usd()));
+    o.set("aws_usd", Json::from(r.snapshot.aws_usd));
+    o.set("gcp_usd", Json::from(r.snapshot.gcp_usd));
+    o.set("azure_usd", Json::from(r.snapshot.azure_usd));
+    o.set("gpu_days", Json::from(r.gpu_days));
+    o.set("eflop_hours", Json::from(r.eflop_hours));
+    o.set("cost_per_eflop_hour", Json::from(r.cost_per_eflop_hour));
+    o.set("peak_gpus", Json::from(r.peak_gpus));
+    o.set("mean_gpus", Json::from(r.mean_gpus));
+    o.set("completed", Json::from(r.completed));
+    o.set("interrupted", Json::from(r.interrupted));
+    o.set("goodput_fraction", Json::from(r.goodput_fraction));
+    o.set("nat_drops", Json::from(r.nat_drops));
+    o.set("preemptions", Json::from(r.preemptions));
+    o.set("expansion_factor", Json::from(r.expansion_factor));
+    o.set("alerts", Json::from(r.alerts));
+    o
+}
+
+/// Write `sweep.txt`, `sweep.csv`, `sweep.json` and the CloudBank
+/// `rollup.txt` into `<out_root>/sweep/`.
 pub fn write(rows: &[ScenarioSummary], out_root: &Path) -> std::io::Result<()> {
     let dir = super::exp_dir(out_root, "sweep")?;
     super::write_output(&dir, "sweep.txt", &render(rows))?;
     super::write_output(&dir, "sweep.csv", &to_csv(rows))?;
+    super::write_output(&dir, "sweep.json", &to_json(rows).to_string_pretty())?;
     let snapshots: Vec<(String, crate::cloudbank::BudgetSnapshot)> =
         rows.iter().map(|r| (r.name.clone(), r.snapshot)).collect();
     super::write_output(&dir, "rollup.txt", &report::render_rollup(&snapshots))
@@ -151,9 +188,39 @@ mod tests {
         let root = std::env::temp_dir().join("icecloud-sweep-exp-test");
         let rows = vec![row("x", 10.0)];
         write(&rows, &root).unwrap();
-        for f in ["sweep.txt", "sweep.csv", "rollup.txt"] {
+        for f in ["sweep.txt", "sweep.csv", "sweep.json", "rollup.txt"] {
             assert!(root.join("sweep").join(f).exists(), "missing {f}");
         }
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn json_rows_parse_back_with_all_fields() {
+        let rows = vec![row("baseline", 400.0), row("other", 10.0)];
+        let text = to_json(&rows).to_string_compact();
+        let v = crate::util::json::parse(&text).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("baseline"));
+        assert_eq!(arr[0].get("cost_usd").unwrap().as_f64(), Some(400.0));
+        assert_eq!(arr[0].get("completed").unwrap().as_u64(), Some(1000));
+        // the JSON carries the same column set as the CSV header
+        for key in [
+            "seed", "duration_days", "budget_usd", "azure_usd", "gpu_days",
+            "eflop_hours", "cost_per_eflop_hour", "peak_gpus", "mean_gpus",
+            "interrupted", "goodput_fraction", "nat_drops", "preemptions",
+            "expansion_factor", "alerts",
+        ] {
+            assert!(arr[0].get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn json_serialization_is_deterministic() {
+        let rows = vec![row("a", 1.5)];
+        assert_eq!(
+            to_json(&rows).to_string_compact(),
+            to_json(&rows).to_string_compact()
+        );
     }
 }

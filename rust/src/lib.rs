@@ -11,7 +11,9 @@
 //! Beyond the single paper replay, the [`sweep`] subsystem runs scenario
 //! matrices — budgets, spot-market weather, NAT infrastructure, ramp
 //! plans — as parallel deterministic replays and reduces them to one
-//! cost-vs-EFLOP-hours comparison table.
+//! cost-vs-EFLOP-hours comparison table, and the [`server`] subsystem
+//! (`icecloud serve`) exposes those sweeps as a zero-dependency HTTP
+//! service with a content-addressed result cache.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record of every figure and table.
@@ -26,6 +28,7 @@ pub mod monitoring;
 pub mod net;
 pub mod osg;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod sweep;
 pub mod util;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   campaign    run the two-week campaign (configurable)
 //!   sweep       run a scenario matrix in parallel (what-if analysis)
+//!   serve       HTTP scenario-sweep service with a content-addressed
+//!               result cache (POST /sweep, GET /matrix, /results/<key>,
+//!               /metrics, /healthz)
 //!   reproduce   regenerate the paper's figures/tables into a results dir
 //!   validate    end-to-end smoke test of the AOT photon artifacts
 //!   info        print artifact + configuration summary
@@ -33,6 +36,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "campaign" => cmd_campaign(rest),
         "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
         "reproduce" => cmd_reproduce(rest),
         "validate" => cmd_validate(rest),
         "info" => cmd_info(rest),
@@ -60,6 +64,8 @@ fn print_usage() {
          \x20 campaign    run the two-week multi-cloud campaign\n\
          \x20 sweep       run a scenario matrix in parallel (what-if \
          analysis)\n\
+         \x20 serve       HTTP sweep service with a content-addressed \
+         result cache\n\
          \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
          --fig2, --headline, --nat, --ramp)\n\
          \x20 validate    end-to-end smoke test of the photon artifacts\n\
@@ -175,6 +181,34 @@ fn print_summary(result: &icecloud::coordinator::CampaignResult) {
     }
 }
 
+/// Base campaign for sweep-style commands (`sweep`, `serve`).
+/// Precedence (weakest to strongest): 4-day default < `--config` file;
+/// the caller layers anything stronger (matrix `[base]`, `--days`) via
+/// [`apply_days_override`] afterwards.  Sweeps compare many replays, so
+/// the default is a responsive 4-day slice rather than the full window.
+fn sweep_base_config(
+    args: &icecloud::util::cli::Args,
+) -> Result<CampaignConfig, String> {
+    match args.get("config") {
+        Some(path) => CampaignConfig::from_toml_file(path),
+        None => {
+            let mut cfg = CampaignConfig::default();
+            cfg.duration_s = 4 * 86_400;
+            Ok(cfg)
+        }
+    }
+}
+
+/// The strongest duration override: an explicit `--days`.
+fn apply_days_override(
+    args: &icecloud::util::cli::Args,
+    base: &mut CampaignConfig,
+) {
+    if let Some(days) = args.get_f64("days") {
+        base.duration_s = (days * 86_400.0) as u64;
+    }
+}
+
 fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     let cmd = Command::new("sweep", "run a scenario matrix in parallel")
         .opt(
@@ -198,23 +232,14 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         logger::set_level(level);
     }
 
-    let mut base = match args.get("config") {
-        Some(path) => CampaignConfig::from_toml_file(path)?,
-        None => CampaignConfig::default(),
-    };
-    // sweeps compare many replays; default to a 4-day slice so the
-    // matrix finishes quickly.  Precedence (weakest to strongest):
-    // 4-day default < --config file < matrix [base] < explicit --days.
-    if args.get("config").is_none() {
-        base.duration_s = 4 * 86_400;
-    }
+    // precedence (weakest to strongest):
+    // 4-day default < --config file < matrix [base] < explicit --days
+    let mut base = sweep_base_config(&args)?;
     let scenarios = match args.get("matrix") {
         Some(path) => icecloud::sweep::matrix::from_toml_file(path, &mut base)?,
         None => icecloud::sweep::builtin_matrix(),
     };
-    if let Some(days) = args.get_f64("days") {
-        base.duration_s = (days * 86_400.0) as u64;
-    }
+    apply_days_override(&args, &mut base);
     let threads = args
         .get_u64("threads")
         .map(|t| t as usize)
@@ -244,6 +269,64 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
             .map_err(|e| e.to_string())?;
     }
     Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "serve",
+        "HTTP scenario-sweep service with a content-addressed result cache",
+    )
+    .opt("addr", "bind address", Some("127.0.0.1:8080"))
+    .opt("threads", "HTTP connection-handler threads", Some("8"))
+    .opt(
+        "replay-threads",
+        "campaign replay workers (default: available parallelism)",
+        None,
+    )
+    .opt("cache-mb", "result-cache budget in MiB", Some("64"))
+    .opt("config", "base campaign TOML (defaults to the paper setup)", None)
+    .opt(
+        "days",
+        "base campaign duration in days (default 4, like `sweep`)",
+        None,
+    )
+    .opt("log", "log level: debug|info|warn|error", Some("info"));
+    let args = cmd.parse(rest)?;
+    if let Some(level) = logger::level_from_str(args.get_or("log", "info")) {
+        logger::set_level(level);
+    }
+
+    // same base resolution as `icecloud sweep`; request bodies layer
+    // their own [base] tables per request on top
+    let mut base = sweep_base_config(&args)?;
+    apply_days_override(&args, &mut base);
+
+    let cfg = icecloud::server::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        http_threads: args.get_u64("threads").unwrap_or(8) as usize,
+        replay_threads: args
+            .get_u64("replay-threads")
+            .map(|t| t as usize)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            }),
+        cache_bytes: (args.get_u64("cache-mb").unwrap_or(64) as usize) << 20,
+        base,
+    };
+    let http_threads = cfg.http_threads;
+    let replay_threads = cfg.replay_threads;
+    let server = icecloud::server::Server::bind(cfg)?;
+    println!(
+        "icecloud serve: listening on {} ({} http threads, {} replay \
+         workers)\n  endpoints: GET /healthz /matrix /metrics \
+         /results/<key>; POST /sweep",
+        server.local_addr()?,
+        http_threads,
+        replay_threads,
+    );
+    server.run()
 }
 
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {

@@ -1,0 +1,326 @@
+//! Content-addressed result cache with LRU eviction and single-flight
+//! deduplication.
+//!
+//! Determinism is what makes this cache *correct*, not merely fast: a
+//! resolved scenario request replays to a byte-identical summary every
+//! time (`rust/tests/sweep_determinism.rs`), so a response may be stored
+//! forever under the SHA-256 of its canonically-serialized request
+//! (`CampaignConfig::canonical_json` + `ScenarioConfig::canonical_json`)
+//! and served to any future identical request without revalidation.
+//!
+//! Single-flight: when N identical requests arrive concurrently, the
+//! first becomes the *owner* and runs the replay; the other N-1 park on
+//! a condvar and receive the owner's bytes.  The flights table is
+//! checked under the same lock that re-checks the cache, and the owner
+//! inserts into the cache *before* removing its flight entry, so there
+//! is no window in which a second owner can start the same computation.
+
+use crate::util::sha256;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Stored bodies are shared, not copied, between waiters and the cache.
+pub type Body = Arc<Vec<u8>>;
+
+/// What a lookup did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served from the cache, or joined an in-flight computation.
+    Hit,
+    /// This call ran the computation.
+    Miss,
+}
+
+struct Flight {
+    result: Mutex<Option<Result<Body, String>>>,
+    done: Condvar,
+}
+
+struct Store {
+    map: HashMap<String, Body>,
+    /// Keys from least- to most-recently used.  Linear touch/remove is
+    /// fine at result-cache scale (entries are whole sweep responses).
+    order: Vec<String>,
+    bytes: usize,
+    budget: usize,
+}
+
+impl Store {
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos);
+            self.order.push(k);
+        }
+    }
+
+    fn get(&mut self, key: &str) -> Option<Body> {
+        let body = self.map.get(key).cloned()?;
+        self.touch(key);
+        Some(body)
+    }
+
+    fn insert(&mut self, key: String, body: Body) {
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= old.len();
+            self.order.retain(|k| k != &key);
+        }
+        self.bytes += body.len();
+        self.map.insert(key.clone(), body);
+        self.order.push(key);
+        // evict least-recently-used entries over budget, but always keep
+        // the newest one so a fresh result stays addressable via
+        // GET /results/<key> even if it alone exceeds the budget
+        while self.bytes > self.budget && self.order.len() > 1 {
+            let victim = self.order.remove(0);
+            if let Some(old) = self.map.remove(&victim) {
+                self.bytes -= old.len();
+            }
+        }
+    }
+}
+
+/// The cache: bounded by a byte budget over the stored response bodies.
+pub struct ResultCache {
+    store: Mutex<Store>,
+    flights: Mutex<HashMap<String, Arc<Flight>>>,
+}
+
+impl ResultCache {
+    pub fn new(byte_budget: usize) -> Self {
+        ResultCache {
+            store: Mutex::new(Store {
+                map: HashMap::new(),
+                order: Vec::new(),
+                bytes: 0,
+                budget: byte_budget.max(1),
+            }),
+            flights: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Look up `key` without computing (the `GET /results/<key>` path).
+    pub fn get(&self, key: &str) -> Option<Body> {
+        self.store.lock().unwrap().get(key)
+    }
+
+    /// `(entries, bytes)` currently held.
+    pub fn stats(&self) -> (usize, usize) {
+        let s = self.store.lock().unwrap();
+        (s.map.len(), s.bytes)
+    }
+
+    /// Return the cached body for `key`, or run `compute` exactly once
+    /// across all concurrent callers with the same key.  Errors are not
+    /// cached: every waiter of a failed flight gets the error, and the
+    /// next request retries.
+    pub fn get_or_compute(
+        &self,
+        key: &str,
+        compute: impl FnOnce() -> Result<Vec<u8>, String>,
+    ) -> (Result<Body, String>, Outcome) {
+        let flight = {
+            let mut flights = self.flights.lock().unwrap();
+            // cache check under the flights lock: a finished owner holds
+            // this lock to deregister, and it inserts into the cache
+            // first, so "no cache entry and no flight" implies we must
+            // become the owner
+            if let Some(body) = self.store.lock().unwrap().get(key) {
+                return (Ok(body), Outcome::Hit);
+            }
+            match flights.get(key).cloned() {
+                Some(f) => {
+                    drop(flights);
+                    // join the in-flight computation
+                    let mut slot = f.result.lock().unwrap();
+                    while slot.is_none() {
+                        slot = f.done.wait(slot).unwrap();
+                    }
+                    let result = slot.clone().unwrap();
+                    return (result, Outcome::Hit);
+                }
+                None => {
+                    let f = Arc::new(Flight {
+                        result: Mutex::new(None),
+                        done: Condvar::new(),
+                    });
+                    flights.insert(key.to_string(), Arc::clone(&f));
+                    f
+                }
+            }
+        };
+
+        // owner path: compute outside every lock
+        let result = compute().map(Arc::new);
+        if let Ok(body) = &result {
+            self.store
+                .lock()
+                .unwrap()
+                .insert(key.to_string(), Arc::clone(body));
+        }
+        {
+            // publish before deregistering (see invariant above)
+            let mut flights = self.flights.lock().unwrap();
+            *flight.result.lock().unwrap() = Some(result.clone());
+            flight.done.notify_all();
+            flights.remove(key);
+        }
+        (result, Outcome::Miss)
+    }
+}
+
+/// The content address of one sweep request: SHA-256 over the canonical
+/// serialization of the fully-resolved base campaign plus the ordered
+/// scenario override list.
+pub fn sweep_key(
+    base: &crate::config::CampaignConfig,
+    scenarios: &[crate::coordinator::ScenarioConfig],
+) -> String {
+    use crate::util::json::Json;
+    let mut doc = Json::obj();
+    doc.set("base", base.canonical_json());
+    doc.set(
+        "scenarios",
+        Json::Arr(scenarios.iter().map(|s| s.canonical_json()).collect()),
+    );
+    sha256::hex_digest(doc.to_string_compact().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CampaignConfig;
+    use crate::coordinator::ScenarioConfig;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn miss_then_hit() {
+        let cache = ResultCache::new(1 << 20);
+        let (r, o) =
+            cache.get_or_compute("k", || Ok(b"body".to_vec()));
+        assert_eq!(o, Outcome::Miss);
+        assert_eq!(r.unwrap().as_slice(), b"body");
+        let (r, o) = cache.get_or_compute("k", || {
+            panic!("must not recompute a cached key")
+        });
+        assert_eq!(o, Outcome::Hit);
+        assert_eq!(r.unwrap().as_slice(), b"body");
+        assert_eq!(cache.get("k").unwrap().as_slice(), b"body");
+        assert!(cache.get("other").is_none());
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = ResultCache::new(1 << 20);
+        let (r, o) = cache.get_or_compute("k", || Err("boom".into()));
+        assert_eq!(o, Outcome::Miss);
+        assert!(r.is_err());
+        assert!(cache.get("k").is_none());
+        let (r, o) = cache.get_or_compute("k", || Ok(b"ok".to_vec()));
+        assert_eq!(o, Outcome::Miss, "failed flights must retry");
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let cache = ResultCache::new(10);
+        cache.get_or_compute("a", || Ok(vec![0u8; 4])).0.unwrap();
+        cache.get_or_compute("b", || Ok(vec![0u8; 4])).0.unwrap();
+        // touch `a` so `b` is the LRU victim
+        assert!(cache.get("a").is_some());
+        cache.get_or_compute("c", || Ok(vec![0u8; 4])).0.unwrap();
+        assert!(cache.get("b").is_none(), "LRU entry should be evicted");
+        assert!(cache.get("a").is_some());
+        assert!(cache.get("c").is_some());
+        let (entries, bytes) = cache.stats();
+        assert_eq!(entries, 2);
+        assert_eq!(bytes, 8);
+    }
+
+    #[test]
+    fn oversized_single_entry_is_kept() {
+        let cache = ResultCache::new(4);
+        cache.get_or_compute("big", || Ok(vec![0u8; 100])).0.unwrap();
+        assert!(cache.get("big").is_some());
+        // the next insert evicts it
+        cache.get_or_compute("next", || Ok(vec![0u8; 2])).0.unwrap();
+        assert!(cache.get("big").is_none());
+        assert!(cache.get("next").is_some());
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_bytes() {
+        let cache = ResultCache::new(100);
+        cache.get_or_compute("k", || Ok(vec![0u8; 10])).0.unwrap();
+        // direct store insert models a re-publish after eviction races;
+        // byte accounting must not double-count
+        cache
+            .store
+            .lock()
+            .unwrap()
+            .insert("k".into(), Arc::new(vec![0u8; 20]));
+        let (entries, bytes) = cache.stats();
+        assert_eq!(entries, 1);
+        assert_eq!(bytes, 20);
+    }
+
+    #[test]
+    fn concurrent_identical_keys_compute_once() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let computations = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        for _ in 0..8 {
+            let cache = Arc::clone(&cache);
+            let computations = Arc::clone(&computations);
+            let barrier = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let (r, o) = cache.get_or_compute("same", || {
+                    computations.fetch_add(1, Ordering::SeqCst);
+                    // widen the race window
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(30),
+                    );
+                    Ok(b"result".to_vec())
+                });
+                (r.unwrap().to_vec(), o)
+            }));
+        }
+        let results: Vec<(Vec<u8>, Outcome)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(computations.load(Ordering::SeqCst), 1);
+        let misses =
+            results.iter().filter(|(_, o)| *o == Outcome::Miss).count();
+        assert_eq!(misses, 1, "exactly one owner");
+        for (body, _) in &results {
+            assert_eq!(body.as_slice(), b"result");
+        }
+    }
+
+    #[test]
+    fn sweep_key_is_stable_and_sensitive() {
+        let base = CampaignConfig::default();
+        let scenarios =
+            vec![ScenarioConfig::named("a"), ScenarioConfig::named("b")];
+        let k1 = sweep_key(&base, &scenarios);
+        let k2 = sweep_key(&base, &scenarios);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 64);
+
+        let mut other_base = CampaignConfig::default();
+        other_base.seed += 1;
+        assert_ne!(k1, sweep_key(&other_base, &scenarios));
+
+        let mut tweaked = scenarios.clone();
+        tweaked[1].budget_usd = Some(1.0);
+        assert_ne!(k1, sweep_key(&base, &tweaked));
+
+        let reordered =
+            vec![ScenarioConfig::named("b"), ScenarioConfig::named("a")];
+        assert_ne!(
+            k1,
+            sweep_key(&base, &reordered),
+            "row order is part of the response, so it is part of the key"
+        );
+    }
+}

@@ -1,0 +1,591 @@
+//! Hand-rolled HTTP/1.1 on `std::net`: just enough protocol for a
+//! deterministic decision-support service — no external crates, matching
+//! the workspace rule.
+//!
+//! Supported: request line + headers, `Content-Length` bodies (bounded),
+//! keep-alive (HTTP/1.1 default, `Connection: close` honored), and the
+//! status codes the router hands back (200/400/404/405/413/500).
+//! Deliberately not supported: chunked transfer encoding (rejected with
+//! 400), trailers, upgrades, TLS — a fronting proxy owns those concerns
+//! in any real deployment.
+//!
+//! The same module carries the minimal *client* used by
+//! `rust/tests/server_e2e.rs` and `rust/benches/serve.rs`, so the wire
+//! format is exercised from both ends in-tree.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Cap on the request line + headers of one request.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on a request body; larger gets `413 Payload Too Large`.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to keep the connection open.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Why reading a request failed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean end of stream between requests (keep-alive hang-up), or an
+    /// idle-timeout expiry — either way the connection just goes away.
+    Closed,
+    /// Body (or declared `Content-Length`) over [`MAX_BODY_BYTES`].
+    TooLarge,
+    /// Anything else wrong with the wire bytes.
+    Malformed(String),
+}
+
+fn io_read_error(e: std::io::Error) -> ReadError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock
+        | std::io::ErrorKind::TimedOut
+        | std::io::ErrorKind::ConnectionReset => ReadError::Closed,
+        _ => ReadError::Malformed(format!("read: {e}")),
+    }
+}
+
+fn read_line_crlf(
+    reader: &mut impl BufRead,
+    budget: &mut usize,
+) -> Result<Option<String>, ReadError> {
+    let mut raw = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(*budget as u64)
+        .read_until(b'\n', &mut raw)
+        .map_err(io_read_error)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if !raw.ends_with(b"\n") {
+        // budget exhausted or peer died mid-line
+        return Err(if n >= *budget {
+            ReadError::TooLarge
+        } else {
+            ReadError::Malformed("truncated line".into())
+        });
+    }
+    *budget -= n;
+    while raw.last() == Some(&b'\n') || raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw)
+        .map(Some)
+        .map_err(|_| ReadError::Malformed("non-UTF-8 header bytes".into()))
+}
+
+/// Read one request off the connection.  `Ok(None)` means the peer
+/// closed cleanly before sending another request.
+pub fn read_request(
+    reader: &mut BufReader<TcpStream>,
+) -> Result<Option<Request>, ReadError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let request_line = match read_line_crlf(reader, &mut budget)? {
+        None => return Ok(None),
+        Some(line) if line.is_empty() => {
+            // tolerate a stray CRLF between pipelined requests
+            match read_line_crlf(reader, &mut budget)? {
+                None => return Ok(None),
+                Some(line) => line,
+            }
+        }
+        Some(line) => line,
+    };
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| ReadError::Malformed("request line has no path".into()))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| {
+            ReadError::Malformed("request line has no version".into())
+        })?
+        .to_string();
+    let http11 = match version.as_str() {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(ReadError::Malformed(format!(
+                "unsupported version '{other}'"
+            )))
+        }
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_crlf(reader, &mut budget)?.ok_or_else(|| {
+            ReadError::Malformed("EOF inside headers".into())
+        })?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').ok_or_else(|| {
+            ReadError::Malformed(format!("header without colon: '{line}'"))
+        })?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+
+    let req = Request {
+        method,
+        path,
+        http11,
+        headers,
+        body: Vec::new(),
+    };
+
+    // framing headers must be unambiguous: behind a fronting proxy,
+    // "first value wins" on a duplicate Content-Length is the classic
+    // request-smuggling desync (RFC 9112 §6.3 requires rejection)
+    let te_values: Vec<&str> = req
+        .headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding"))
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if te_values.len() > 1
+        || te_values
+            .first()
+            .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(ReadError::Malformed(
+            "chunked/duplicate transfer encoding not supported".into(),
+        ));
+    }
+
+    let cl_values: Vec<&str> = req
+        .headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if cl_values.len() > 1 {
+        return Err(ReadError::Malformed(
+            "duplicate Content-Length headers".into(),
+        ));
+    }
+    let content_length = match cl_values.first() {
+        None => 0usize,
+        Some(v) => v.trim().parse::<usize>().map_err(|_| {
+            ReadError::Malformed(format!("bad Content-Length '{v}'"))
+        })?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        // drain a bounded amount so the peer's in-flight write is not
+        // reset before it can read the 413; bigger abusers just get the
+        // hang-up
+        const MAX_DRAIN_BYTES: usize = 8 * 1024 * 1024;
+        if content_length <= MAX_DRAIN_BYTES {
+            let _ = std::io::copy(
+                &mut reader.by_ref().take(content_length as u64),
+                &mut std::io::sink(),
+            );
+        }
+        return Err(ReadError::TooLarge);
+    }
+    let mut req = req;
+    if content_length > 0 {
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).map_err(io_read_error)?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// One response about to be written.  The body is shared, not owned:
+/// cache hits hand the stored `Arc` straight through to the socket
+/// write, so the hot path the result cache exists to serve never pays
+/// a per-request copy of a multi-hundred-KB sweep response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: std::sync::Arc<Vec<u8>>,
+    /// Extra headers (e.g. `X-Cache`, `Allow`).
+    pub extra_headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: Vec<u8>) -> Response {
+        Response::json_shared(status, std::sync::Arc::new(body))
+    }
+
+    /// JSON response over an already-shared body (cache hits).
+    pub fn json_shared(
+        status: u16,
+        body: std::sync::Arc<Vec<u8>>,
+    ) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body,
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: std::sync::Arc::new(body.into_bytes()),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// A `{"error": ...}` JSON body.
+    pub fn error(status: u16, message: &str) -> Response {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("error", Json::from(message));
+        let mut body = o.to_string_compact().into_bytes();
+        body.push(b'\n');
+        Response::json(status, body)
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.extra_headers
+            .push((name.to_string(), value.to_string()));
+        self
+    }
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write `resp`; `keep_alive` decides the `Connection` header.
+pub fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in &resp.extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+// ---- in-tree client (tests + load generator) ----------------------------
+
+/// A response as seen by the in-tree client.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Read one response from `reader` (shared by one-shot and keep-alive
+/// clients).
+pub fn read_client_response(
+    reader: &mut impl BufRead,
+) -> Result<ClientResponse, String> {
+    let mut status_line = String::new();
+    reader
+        .read_line(&mut status_line)
+        .map_err(|e| format!("read status: {e}"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| format!("bad status line '{status_line}'"))?
+        .parse()
+        .map_err(|_| format!("bad status in '{status_line}'"))?;
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .map_err(|e| format!("read header: {e}"))?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            let name = name.trim().to_string();
+            let value = value.trim().to_string();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .parse()
+                    .map_err(|_| format!("bad content-length '{value}'"))?;
+            }
+            headers.push((name, value));
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader
+        .read_exact(&mut body)
+        .map_err(|e| format!("read body: {e}"))?;
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// One-shot request: connect, send, read the response, close.
+pub fn client_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: Option<&str>,
+    body: &[u8],
+) -> Result<ClientResponse, String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    if let Some(ct) = content_type {
+        head.push_str("Content-Type: ");
+        head.push_str(ct);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body))
+        .map_err(|e| format!("send: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    read_client_response(&mut reader)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Feed raw bytes through a real socket pair and parse them.
+    fn parse_raw(raw: &[u8]) -> Result<Option<Request>, ReadError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let result = read_request(&mut reader);
+        writer.join().unwrap();
+        result
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let req = parse_raw(
+            b"GET /healthz HTTP/1.1\r\nHost: x\r\nX-Thing: v\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.http11);
+        assert_eq!(req.header("x-thing"), Some("v"));
+        assert!(req.keep_alive());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse_raw(
+            b"POST /sweep HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let req = parse_raw(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!req.keep_alive());
+        let req =
+            parse_raw(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn eof_is_clean_close() {
+        assert!(matches!(parse_raw(b""), Ok(None)));
+    }
+
+    #[test]
+    fn garbage_is_malformed() {
+        assert!(matches!(
+            parse_raw(b"NOT A REQUEST\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_raw(b"GET / HTTP/2\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_raw(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_raw(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_raw(
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+            ),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn conflicting_framing_headers_rejected() {
+        // duplicate Content-Length: first-wins parsing behind a proxy
+        // that honors the last value is a CL.CL desync — reject
+        assert!(matches!(
+            parse_raw(
+                b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\
+                  Content-Length: 30\r\n\r\nhello"
+            ),
+            Err(ReadError::Malformed(_))
+        ));
+        // even duplicates that agree are a smuggling tell
+        assert!(matches!(
+            parse_raw(
+                b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\
+                  Content-Length: 5\r\n\r\nhello"
+            ),
+            Err(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_raw(
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: identity\r\n\
+                  Transfer-Encoding: chunked\r\n\r\n"
+            ),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_too_large() {
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(matches!(
+            parse_raw(raw.as_bytes()),
+            Err(ReadError::TooLarge)
+        ));
+    }
+
+    #[test]
+    fn oversized_head_is_too_large() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(
+            format!("X-Big: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES))
+                .as_bytes(),
+        );
+        assert!(matches!(parse_raw(&raw), Err(ReadError::TooLarge)));
+    }
+
+    #[test]
+    fn response_wire_format_round_trips() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let resp = Response::json(200, b"{\"ok\":true}".to_vec())
+                .with_header("X-Cache", "hit");
+            write_response(&mut stream, &resp, false).unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream);
+        let resp = read_client_response(&mut reader).unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.header("x-cache"), Some("hit"));
+        assert_eq!(resp.body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn error_response_is_json() {
+        let r = Response::error(400, "bad spec");
+        assert_eq!(r.status, 400);
+        let v = crate::util::json::parse(
+            std::str::from_utf8(&r.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("bad spec"));
+    }
+}

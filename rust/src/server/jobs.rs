@@ -1,0 +1,242 @@
+//! The persistent replay worker pool behind `POST /sweep`.
+//!
+//! The CLI sweep spins up scoped threads per invocation and lets them
+//! die; a server cannot afford thread churn per request, and — more
+//! important — needs *global* admission control: however many HTTP
+//! connections are asking for sweeps, at most `threads` campaign
+//! replays run at once and everything else queues.  Workers execute
+//! boxed closures from an mpsc channel; `run_matrix` fans a scenario
+//! list out as one job per scenario and parks on a countdown latch
+//! until every slot is filled, so results keep the deterministic
+//! matrix order that `sweep::run_matrix` pins.
+
+use crate::config::CampaignConfig;
+use crate::coordinator::ScenarioConfig;
+use crate::sweep::{runner, ScenarioSummary};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool; dropped pools drain their queue and join.
+pub struct ReplayPool {
+    tx: Option<mpsc::Sender<Job>>,
+    depth: Arc<AtomicUsize>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ReplayPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            let depth = Arc::clone(&depth);
+            workers.push(std::thread::spawn(move || loop {
+                let job = match rx.lock().unwrap().recv() {
+                    Ok(job) => job,
+                    Err(_) => break, // pool dropped, queue drained
+                };
+                job();
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }));
+        }
+        ReplayPool { tx: Some(tx), depth, workers }
+    }
+
+    /// Jobs queued or running.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool sender lives until drop")
+            .send(Box::new(job))
+            .expect("replay pool workers outlive the pool handle");
+    }
+
+    /// Replay every scenario against `base` on the pool and return the
+    /// rows in matrix order.  Blocks the calling (HTTP worker) thread;
+    /// the replays themselves run on the pool's threads.  A panicking
+    /// replay (a pathological request config) yields an error instead
+    /// of poisoning the pool or hanging the caller.
+    pub fn run_matrix(
+        &self,
+        base: &CampaignConfig,
+        scenarios: &[ScenarioConfig],
+    ) -> Result<Vec<ScenarioSummary>, String> {
+        if scenarios.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = scenarios.len();
+        let slots: Arc<Vec<Mutex<Option<ScenarioSummary>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let latch = Arc::new((Mutex::new(n), Condvar::new()));
+        let base = Arc::new(base.clone());
+
+        for (i, scenario) in scenarios.iter().cloned().enumerate() {
+            let slots = Arc::clone(&slots);
+            let latch = Arc::clone(&latch);
+            let base = Arc::clone(&base);
+            self.execute(move || {
+                // the latch must count down even if the replay panics,
+                // or the requester would wait forever
+                let row = catch_unwind(AssertUnwindSafe(|| {
+                    runner::run_scenario(&base, &scenario)
+                }))
+                .ok();
+                *slots[i].lock().unwrap() = row;
+                let (count, cv) = &*latch;
+                let mut remaining = count.lock().unwrap();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    cv.notify_all();
+                }
+            });
+        }
+
+        let (count, cv) = &*latch;
+        let mut remaining = count.lock().unwrap();
+        while *remaining > 0 {
+            remaining = cv.wait(remaining).unwrap();
+        }
+        drop(remaining);
+
+        let mut rows = Vec::with_capacity(n);
+        for (i, slot) in slots.iter().enumerate() {
+            match slot.lock().unwrap().take() {
+                Some(row) => rows.push(row),
+                None => {
+                    return Err(format!(
+                        "scenario '{}' panicked during replay",
+                        scenarios[i].name
+                    ))
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+impl Drop for ReplayPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit after draining
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RampStep;
+    use crate::sim::{DAY, HOUR};
+
+    fn tiny_base() -> CampaignConfig {
+        let mut c = CampaignConfig::default();
+        c.duration_s = 2 * HOUR;
+        c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+        c.outage = None;
+        c.onprem.slots = 8;
+        c.generator.min_backlog = 30;
+        c
+    }
+
+    #[test]
+    fn pool_matches_direct_runner_output() {
+        let base = tiny_base();
+        let scenarios = vec![
+            ScenarioConfig::named("one"),
+            {
+                let mut s = ScenarioConfig::named("two");
+                s.seed = Some(7);
+                s
+            },
+        ];
+        let pool = ReplayPool::new(2);
+        let pooled = pool.run_matrix(&base, &scenarios).unwrap();
+        let direct = crate::sweep::run_matrix(&base, &scenarios, 2);
+        assert_eq!(pooled, direct);
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_matrices() {
+        let base = tiny_base();
+        let pool = ReplayPool::new(2);
+        let a = pool
+            .run_matrix(&base, &[ScenarioConfig::named("a")])
+            .unwrap();
+        let b = pool
+            .run_matrix(&base, &[ScenarioConfig::named("a")])
+            .unwrap();
+        assert_eq!(a, b, "same pool, same request, same rows");
+    }
+
+    #[test]
+    fn empty_matrix_is_empty() {
+        let pool = ReplayPool::new(1);
+        assert!(pool
+            .run_matrix(&tiny_base(), &[])
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn concurrent_requesters_share_the_pool() {
+        let base = tiny_base();
+        let pool = Arc::new(ReplayPool::new(2));
+        let mut handles = Vec::new();
+        for i in 0..3u64 {
+            let pool = Arc::clone(&pool);
+            let base = base.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut s = ScenarioConfig::named("shared");
+                s.seed = Some(i);
+                pool.run_matrix(&base, &[s]).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 1);
+        }
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn panicking_job_reports_error_and_pool_survives() {
+        let pool = ReplayPool::new(1);
+        // drive a panic through the raw job interface
+        let latch = Arc::new((Mutex::new(1usize), Condvar::new()));
+        {
+            let latch = Arc::clone(&latch);
+            pool.execute(move || {
+                let result: Result<(), _> =
+                    catch_unwind(|| panic!("boom"));
+                assert!(result.is_err());
+                let (count, cv) = &*latch;
+                *count.lock().unwrap() -= 1;
+                cv.notify_all();
+            });
+        }
+        let (count, cv) = &*latch;
+        let mut remaining = count.lock().unwrap();
+        while *remaining > 0 {
+            remaining = cv.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        // the worker survived the caught panic and still runs jobs
+        let rows = pool
+            .run_matrix(&tiny_base(), &[ScenarioConfig::named("after")])
+            .unwrap();
+        assert_eq!(rows.len(), 1);
+    }
+}

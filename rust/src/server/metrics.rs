@@ -1,0 +1,281 @@
+//! Server counters and the `/metrics` text exposition.
+//!
+//! Lock-free atomic counters for everything on the request hot path,
+//! plus a small mutex-guarded ring of recent request latencies that is
+//! reduced to percentiles (`util::stats`) only when `/metrics` is
+//! scraped.  The exposition format is the Prometheus text format —
+//! `name{label="v"} value` lines — so any off-the-shelf scraper can
+//! consume it, without this crate growing a client-library dependency.
+
+use crate::util::stats;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// How many recent request latencies the percentile window keeps.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-capacity overwrite-oldest ring of latency samples.
+struct LatencyRing {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn new() -> Self {
+        LatencyRing { buf: Vec::with_capacity(LATENCY_WINDOW), next: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+}
+
+/// One server's counter set.  All methods take `&self`; the struct is
+/// shared across connection-handler threads behind an `Arc`.
+pub struct Metrics {
+    requests_total: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    sweep_computations: AtomicU64,
+    scenario_replays: AtomicU64,
+    latency: Mutex<LatencyRing>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            requests_total: AtomicU64::new(0),
+            responses_2xx: AtomicU64::new(0),
+            responses_4xx: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            sweep_computations: AtomicU64::new(0),
+            scenario_replays: AtomicU64::new(0),
+            latency: Mutex::new(LatencyRing::new()),
+        }
+    }
+
+    pub fn on_request(&self) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_response(&self, status: u16, latency_s: f64) {
+        self.count_response_class(status);
+        self.latency.lock().unwrap().push(latency_s);
+    }
+
+    /// A request rejected before routing (malformed bytes, oversized
+    /// body).  Counted by status class but kept out of the latency
+    /// window: its "latency" is dominated by the attacker's send rate
+    /// (or the idle timeout), and a burst of zeros/timeouts would mask
+    /// real percentile regressions on legitimate requests.
+    pub fn on_early_reject(&self, status: u16) {
+        self.count_response_class(status);
+    }
+
+    fn count_response_class(&self, status: u16) {
+        let counter = match status {
+            200..=299 => &self.responses_2xx,
+            500..=599 => &self.responses_5xx,
+            _ => &self.responses_4xx,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One underlying sweep actually replayed (`replays` scenarios).
+    pub fn on_sweep_computed(&self, replays: usize) {
+        self.sweep_computations.fetch_add(1, Ordering::Relaxed);
+        self.scenario_replays
+            .fetch_add(replays as u64, Ordering::Relaxed);
+    }
+
+    pub fn cache_hit_count(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn sweep_computation_count(&self) -> u64 {
+        self.sweep_computations.load(Ordering::Relaxed)
+    }
+
+    /// Render the text exposition.  Gauges owned by other components
+    /// (replay queue depth, cache occupancy) are passed in by the
+    /// router so this module stays dependency-free.
+    pub fn render(
+        &self,
+        queue_depth: usize,
+        cache_entries: usize,
+        cache_bytes: usize,
+    ) -> String {
+        let mut out = String::with_capacity(1024);
+        let mut line = |name: &str, value: String| {
+            let _ = writeln!(out, "{name} {value}");
+        };
+        line(
+            "icecloud_http_requests_total",
+            self.requests_total.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_http_responses_total{class=\"2xx\"}",
+            self.responses_2xx.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_http_responses_total{class=\"4xx\"}",
+            self.responses_4xx.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_http_responses_total{class=\"5xx\"}",
+            self.responses_5xx.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_sweep_cache_hits_total",
+            self.cache_hits.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_sweep_cache_misses_total",
+            self.cache_misses.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_sweep_computations_total",
+            self.sweep_computations.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_scenario_replays_total",
+            self.scenario_replays.load(Ordering::Relaxed).to_string(),
+        );
+        line("icecloud_replay_queue_depth", queue_depth.to_string());
+        line("icecloud_result_cache_entries", cache_entries.to_string());
+        line("icecloud_result_cache_bytes", cache_bytes.to_string());
+        let samples = self.latency.lock().unwrap().buf.clone();
+        let ps = stats::percentiles(&samples, &[0.5, 0.9, 0.99]);
+        for (q, p) in [("0.5", ps[0]), ("0.9", ps[1]), ("0.99", ps[2])] {
+            let v = if p.is_nan() {
+                "NaN".to_string()
+            } else {
+                format!("{p:.6}")
+            };
+            line(
+                &format!(
+                    "icecloud_request_latency_seconds{{quantile=\"{q}\"}}"
+                ),
+                v,
+            );
+        }
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_appear_in_exposition() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_request();
+        m.on_response(200, 0.002);
+        m.on_response(404, 0.001);
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_sweep_computed(3);
+        let text = m.render(2, 1, 512);
+        assert!(text.contains("icecloud_http_requests_total 2"), "{text}");
+        assert!(
+            text.contains("icecloud_http_responses_total{class=\"2xx\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_http_responses_total{class=\"4xx\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("icecloud_sweep_cache_hits_total 1"), "{text}");
+        assert!(
+            text.contains("icecloud_sweep_cache_misses_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_sweep_computations_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_scenario_replays_total 3"),
+            "{text}"
+        );
+        assert!(text.contains("icecloud_replay_queue_depth 2"), "{text}");
+        assert!(text.contains("icecloud_result_cache_bytes 512"), "{text}");
+    }
+
+    #[test]
+    fn latency_percentiles_render() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.on_response(200, i as f64 / 1000.0);
+        }
+        let text = m.render(0, 0, 0);
+        assert!(
+            text.contains("icecloud_request_latency_seconds{quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(!text.contains("NaN"), "{text}");
+    }
+
+    #[test]
+    fn early_rejects_count_by_class_but_skip_latency_window() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.on_early_reject(413);
+        }
+        let text = m.render(0, 0, 0);
+        assert!(
+            text.contains("icecloud_http_responses_total{class=\"4xx\"} 5"),
+            "{text}"
+        );
+        // the latency window saw nothing: percentiles still NaN
+        assert!(text.contains("quantile=\"0.5\"} NaN"), "{text}");
+    }
+
+    #[test]
+    fn empty_latency_window_renders_nan() {
+        let text = Metrics::new().render(0, 0, 0);
+        assert!(
+            text.contains("quantile=\"0.99\"} NaN"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn latency_ring_overwrites_oldest() {
+        let mut r = LatencyRing::new();
+        for i in 0..(LATENCY_WINDOW + 10) {
+            r.push(i as f64);
+        }
+        assert_eq!(r.buf.len(), LATENCY_WINDOW);
+        // the oldest 10 samples were overwritten
+        assert!(!r.buf.contains(&0.0));
+        assert!(r.buf.contains(&(LATENCY_WINDOW as f64)));
+    }
+}

@@ -1,0 +1,237 @@
+//! `icecloud serve` — the scenario-sweep decision-support service.
+//!
+//! The paper's §III–§IV analyses answer operator questions ("what would
+//! this campaign cost under half the budget? busier spot markets? a
+//! different NAT timeout?").  PR 1 made those answers a deterministic
+//! one-shot CLI; this subsystem makes them a *service*: a zero-
+//! dependency HTTP/1.1 server (`http`) in front of the sweep engine,
+//! with a shared replay worker pool (`jobs`), a content-addressed
+//! result cache with single-flight deduplication (`cache`), request
+//! routing (`router`) and a `/metrics` exposition (`metrics`).
+//!
+//! Determinism is the scaling story: identical scenario → byte-
+//! identical summary, so the cache turns heavy identical-request
+//! traffic into a handful of actual replays.  HEPCloud
+//! (arXiv:1710.00100) and the US ATLAS/CMS blueprint (arXiv:2304.07376)
+//! frame exactly this shape of persistent cost/provisioning decision
+//! service in front of cloud campaign models.
+//!
+//! Thread model (see DESIGN.md §12):
+//!
+//! ```text
+//! accept thread ──sync_channel(64)──▶ N connection handlers ──┐
+//!        (bounded handoff)               parse / route / write │
+//!                                                             ▼
+//!                         POST /sweep → cache (single-flight) ─▶
+//!                             replay pool: M campaign workers
+//! ```
+
+pub mod cache;
+pub mod http;
+pub mod jobs;
+pub mod metrics;
+pub mod router;
+
+pub use cache::ResultCache;
+pub use jobs::ReplayPool;
+pub use metrics::Metrics;
+pub use router::AppState;
+
+use crate::config::CampaignConfig;
+use http::{read_request, write_response, ReadError, Response};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long an idle keep-alive connection may sit before we close it.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Bounded accept→handler handoff: connections beyond this queue up in
+/// the kernel backlog instead of unbounded process memory.
+const ACCEPT_QUEUE: usize = 64;
+
+/// Server configuration.
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// HTTP connection-handler threads.
+    pub http_threads: usize,
+    /// Campaign-replay worker threads.
+    pub replay_threads: usize,
+    /// Result-cache byte budget.
+    pub cache_bytes: usize,
+    /// Base campaign every request's scenario spec resolves against.
+    pub base: CampaignConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            http_threads: 8,
+            replay_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            cache_bytes: 64 << 20,
+            base: CampaignConfig::default(),
+        }
+    }
+}
+
+/// A bound (but not yet serving) server.
+pub struct Server {
+    listener: TcpListener,
+    http_threads: usize,
+    state: Arc<AppState>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Server, String> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let state = Arc::new(AppState {
+            base: cfg.base,
+            cache: ResultCache::new(cfg.cache_bytes),
+            pool: ReplayPool::new(cfg.replay_threads),
+            metrics: Metrics::new(),
+        });
+        Ok(Server {
+            listener,
+            http_threads: cfg.http_threads.max(1),
+            state,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| e.to_string())
+    }
+
+    /// Serve forever on the calling thread (the CLI path).
+    pub fn run(self) -> Result<(), String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        self.serve_until(&stop)
+    }
+
+    /// Serve in background threads; the handle stops and joins on
+    /// [`ServerHandle::shutdown`] (the test / bench path).
+    pub fn spawn(self) -> Result<ServerHandle, String> {
+        let addr = self.local_addr()?;
+        let state = Arc::clone(&self.state);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            let _ = self.serve_until(&stop_accept);
+        });
+        Ok(ServerHandle { addr, state, stop, accept_thread })
+    }
+
+    fn serve_until(self, stop: &AtomicBool) -> Result<(), String> {
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(ACCEPT_QUEUE);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handlers = Vec::with_capacity(self.http_threads);
+        for _ in 0..self.http_threads {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&self.state);
+            handlers.push(std::thread::spawn(move || loop {
+                let stream = match rx.lock().unwrap().recv() {
+                    Ok(s) => s,
+                    Err(_) => break, // accept loop gone; drain and exit
+                };
+                handle_connection(&state, stream);
+            }));
+        }
+
+        for stream in self.listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let _ = s.set_read_timeout(Some(IDLE_TIMEOUT));
+                    let _ = s.set_nodelay(true);
+                    if tx.send(s).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => continue, // transient accept error
+            }
+        }
+        drop(tx);
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Handle to a background server (tests and the load generator).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<AppState>,
+    stop: Arc<AtomicBool>,
+    accept_thread: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state, so tests can assert on metrics directly.
+    pub fn state(&self) -> &AppState {
+        &self.state
+    }
+
+    /// Stop accepting, drain handler threads, and join.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with one last connection
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+    }
+}
+
+/// Serve one connection: requests until close, error, or idle timeout.
+fn handle_connection(state: &AppState, stream: TcpStream) {
+    let mut write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            // clean close, peer reset, or idle-timeout expiry
+            Ok(None) | Err(ReadError::Closed) => return,
+            Err(ReadError::TooLarge) => {
+                state.metrics.on_request();
+                let resp = Response::error(413, "request too large");
+                state.metrics.on_early_reject(resp.status);
+                let _ = write_response(&mut write_half, &resp, false);
+                return;
+            }
+            Err(ReadError::Malformed(msg)) => {
+                state.metrics.on_request();
+                let resp = Response::error(400, &msg);
+                state.metrics.on_early_reject(resp.status);
+                let _ = write_response(&mut write_half, &resp, false);
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive();
+        let t0 = Instant::now();
+        state.metrics.on_request();
+        let resp = router::route(state, &req);
+        state
+            .metrics
+            .on_response(resp.status, t0.elapsed().as_secs_f64());
+        if write_response(&mut write_half, &resp, keep_alive).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}

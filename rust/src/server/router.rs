@@ -1,0 +1,422 @@
+//! Request routing: the five-endpoint decision-support API.
+//!
+//! | route                | what it answers                                  |
+//! |----------------------|--------------------------------------------------|
+//! | `GET /healthz`       | liveness                                         |
+//! | `GET /matrix`        | the built-in what-if matrix, as override sets    |
+//! | `POST /sweep`        | replay a scenario spec (TOML or JSON body)       |
+//! | `GET /results/<key>` | re-fetch a cached sweep response by content key  |
+//! | `GET /metrics`       | counters + latency percentiles (text exposition) |
+//!
+//! `POST /sweep` is where the subsystem earns its keep: resolve the
+//! spec against the server's base campaign, derive the content address
+//! (`cache::sweep_key`), and either serve bytes straight from the cache
+//! or run the matrix on the shared replay pool — with single-flight
+//! collapsing concurrent identical requests into one computation.
+
+use super::cache::{sweep_key, Outcome, ResultCache};
+use super::http::{Request, Response};
+use super::jobs::ReplayPool;
+use super::metrics::Metrics;
+use crate::config::CampaignConfig;
+use crate::coordinator::ScenarioConfig;
+use crate::experiments;
+use crate::sweep;
+use crate::util::json::{self, Json};
+
+/// Most scenarios one request may ask for.
+pub const MAX_SCENARIOS_PER_REQUEST: usize = 64;
+/// Longest replay one request may ask for (sim-seconds).
+pub const MAX_DURATION_S: u64 = 60 * 86_400;
+/// Largest ramp target / on-prem slot count one request may ask for.
+pub const MAX_FLEET: u32 = 100_000;
+
+/// Everything the request handlers share.
+pub struct AppState {
+    pub base: CampaignConfig,
+    pub cache: ResultCache,
+    pub pool: ReplayPool,
+    pub metrics: Metrics,
+}
+
+/// Dispatch one parsed request to its handler.
+pub fn route(state: &AppState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            Response::json(200, b"{\"status\":\"ok\"}\n".to_vec())
+        }
+        ("GET", "/matrix") => matrix(),
+        ("POST", "/sweep") => sweep_post(state, req),
+        ("GET", "/metrics") => metrics(state),
+        ("GET", path) if path.starts_with("/results/") => {
+            results(state, &path["/results/".len()..])
+        }
+        // known paths, wrong method
+        (_, "/healthz" | "/matrix" | "/metrics") => {
+            Response::error(405, "method not allowed")
+                .with_header("Allow", "GET")
+        }
+        (_, "/sweep") => Response::error(405, "method not allowed")
+            .with_header("Allow", "POST"),
+        (_, path) if path.starts_with("/results/") => {
+            Response::error(405, "method not allowed")
+                .with_header("Allow", "GET")
+        }
+        _ => Response::error(404, "no such route"),
+    }
+}
+
+fn matrix() -> Response {
+    let scenarios = sweep::builtin_matrix();
+    let mut o = Json::obj();
+    o.set("count", Json::from(scenarios.len()));
+    o.set(
+        "scenarios",
+        Json::Arr(scenarios.iter().map(|s| s.canonical_json()).collect()),
+    );
+    let mut body = o.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    Response::json(200, body)
+}
+
+fn metrics(state: &AppState) -> Response {
+    let (entries, bytes) = state.cache.stats();
+    Response::text(
+        200,
+        state
+            .metrics
+            .render(state.pool.queue_depth(), entries, bytes),
+    )
+}
+
+fn results(state: &AppState, key: &str) -> Response {
+    match state.cache.get(key) {
+        Some(body) => Response::json_shared(200, body)
+            .with_header("X-Cache", "hit"),
+        None => Response::error(404, "no cached result under this key"),
+    }
+}
+
+/// Parse the request body into `(resolved base, scenarios)`.  JSON and
+/// TOML share the spec shape; the decode path is chosen by
+/// `Content-Type`, falling back to sniffing the first byte.
+fn parse_sweep_body(
+    base: &CampaignConfig,
+    req: &Request,
+) -> Result<(CampaignConfig, Vec<ScenarioConfig>), String> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not valid UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body; send a scenario spec (TOML or JSON)"
+            .to_string());
+    }
+    let content_type = req.header("content-type").unwrap_or("");
+    let looks_json = content_type.contains("json")
+        || (!content_type.contains("toml")
+            && text.trim_start().starts_with('{'));
+    let mut resolved = base.clone();
+    let scenarios = if looks_json {
+        let doc = json::parse(text).map_err(|e| e.to_string())?;
+        sweep::parse_spec_json(&doc, &mut resolved)?
+    } else {
+        sweep::matrix::parse_spec(text, &mut resolved)?
+    };
+    Ok((resolved, scenarios))
+}
+
+/// Refuse requests that would tie up the replay pool for minutes; the
+/// service replays bounded what-if slices, not open-ended simulations.
+fn validate_limits(
+    base: &CampaignConfig,
+    scenarios: &[ScenarioConfig],
+) -> Result<(), String> {
+    if scenarios.len() > MAX_SCENARIOS_PER_REQUEST {
+        return Err(format!(
+            "{} scenarios exceeds the per-request limit of {}",
+            scenarios.len(),
+            MAX_SCENARIOS_PER_REQUEST
+        ));
+    }
+    for s in scenarios {
+        let duration = s.duration_s.unwrap_or(base.duration_s);
+        if duration > MAX_DURATION_S {
+            return Err(format!(
+                "scenario '{}' asks for {duration} sim-seconds; limit {}",
+                s.name, MAX_DURATION_S
+            ));
+        }
+        let ramp = s.ramp.as_ref().unwrap_or(&base.ramp);
+        if ramp.iter().any(|step| step.target > MAX_FLEET) {
+            return Err(format!(
+                "scenario '{}' ramp target exceeds {MAX_FLEET} GPUs",
+                s.name
+            ));
+        }
+        if s.onprem_slots.unwrap_or(base.onprem.slots) > MAX_FLEET {
+            return Err(format!(
+                "scenario '{}' on-prem slots exceed {MAX_FLEET}",
+                s.name
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn sweep_post(state: &AppState, req: &Request) -> Response {
+    let (resolved, scenarios) = match parse_sweep_body(&state.base, req) {
+        Ok(parsed) => parsed,
+        Err(e) => return Response::error(400, &e),
+    };
+    if let Err(e) = validate_limits(&resolved, &scenarios) {
+        return Response::error(400, &e);
+    }
+
+    let key = sweep_key(&resolved, &scenarios);
+    let replays = scenarios.len();
+    let (result, outcome) = state.cache.get_or_compute(&key, || {
+        let rows = state.pool.run_matrix(&resolved, &scenarios)?;
+        // count only completed computations, after the replay succeeds
+        state.metrics.on_sweep_computed(replays);
+        Ok(render_sweep_body(&key, &rows))
+    });
+    // accounting contract: every Miss (attempted computation) counts as
+    // a miss whether or not it succeeded; a Hit counts only when it
+    // delivered bytes (a waiter surfacing the owner's error served
+    // nothing)
+    if outcome == Outcome::Miss {
+        state.metrics.on_cache_miss();
+    }
+    match (result, outcome) {
+        (Ok(body), Outcome::Hit) => {
+            state.metrics.on_cache_hit();
+            Response::json_shared(200, body).with_header("X-Cache", "hit")
+        }
+        (Ok(body), Outcome::Miss) => {
+            Response::json_shared(200, body)
+                .with_header("X-Cache", "miss")
+        }
+        (Err(e), _) => Response::error(500, &e),
+    }
+}
+
+/// The cached response body: content key + summary rows.  Everything in
+/// it is a pure function of the resolved request, so byte-identical
+/// requests get byte-identical bodies whether replayed or cached.
+fn render_sweep_body(
+    key: &str,
+    rows: &[sweep::ScenarioSummary],
+) -> Vec<u8> {
+    let mut o = Json::obj();
+    o.set("key", Json::from(key));
+    o.set("rows", experiments::sweep::to_json(rows));
+    let mut body = o.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RampStep;
+    use crate::sim::{DAY, HOUR};
+
+    fn tiny_state() -> AppState {
+        let mut base = CampaignConfig::default();
+        base.duration_s = 2 * HOUR;
+        base.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+        base.outage = None;
+        base.onprem.slots = 8;
+        base.generator.min_backlog = 30;
+        AppState {
+            base,
+            cache: ResultCache::new(1 << 20),
+            pool: ReplayPool::new(2),
+            metrics: Metrics::new(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            http11: true,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn post(path: &str, content_type: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            http11: true,
+            headers: vec![(
+                "Content-Type".into(),
+                content_type.into(),
+            )],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn healthz_and_matrix_and_404_405() {
+        let state = tiny_state();
+        assert_eq!(route(&state, &get("/healthz")).status, 200);
+        let m = route(&state, &get("/matrix"));
+        assert_eq!(m.status, 200);
+        let text = String::from_utf8(m.body.to_vec()).unwrap();
+        assert!(text.contains("baseline"), "{text}");
+        assert_eq!(route(&state, &get("/nope")).status, 404);
+        assert_eq!(route(&state, &get("/sweep")).status, 405);
+        let r = Request { method: "DELETE".into(), ..get("/healthz") };
+        assert_eq!(route(&state, &r).status, 405);
+    }
+
+    #[test]
+    fn sweep_toml_roundtrip_and_results_lookup() {
+        let state = tiny_state();
+        let spec = "[scenario.a]\n\n[scenario.b]\nseed = 9\n";
+        let first =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(
+            first.status,
+            200,
+            "{}",
+            String::from_utf8_lossy(&first.body)
+        );
+        let doc = json::parse(
+            std::str::from_utf8(&first.body).unwrap().trim(),
+        )
+        .unwrap();
+        let key = doc.get("key").unwrap().as_str().unwrap().to_string();
+        assert_eq!(key.len(), 64);
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("name").unwrap().as_str(),
+            Some("a")
+        );
+
+        // byte-identical on the second, cached request
+        let second =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(second.body, first.body);
+        assert_eq!(second.header_value("X-Cache"), Some("hit"));
+
+        // and via the content address
+        let by_key =
+            route(&state, &get(&format!("/results/{key}")));
+        assert_eq!(by_key.status, 200);
+        assert_eq!(by_key.body, first.body);
+        assert_eq!(
+            route(&state, &get("/results/deadbeef")).status,
+            404
+        );
+        assert_eq!(state.metrics.sweep_computation_count(), 1);
+        assert_eq!(state.metrics.cache_hit_count(), 1);
+    }
+
+    #[test]
+    fn sweep_json_body_equals_toml_body() {
+        let state = tiny_state();
+        let toml_resp = route(
+            &state,
+            &post(
+                "/sweep",
+                "application/toml",
+                "[scenario.x]\nbudget_usd = 40.0\n",
+            ),
+        );
+        let json_resp = route(
+            &state,
+            &post(
+                "/sweep",
+                "application/json",
+                r#"{"scenario": {"x": {"budget_usd": 40.0}}}"#,
+            ),
+        );
+        assert_eq!(toml_resp.status, 200);
+        assert_eq!(
+            toml_resp.body, json_resp.body,
+            "same spec, either encoding, same content address and bytes"
+        );
+    }
+
+    #[test]
+    fn malformed_bodies_rejected() {
+        let state = tiny_state();
+        for (ct, body) in [
+            ("application/toml", "not toml = = ="),
+            ("application/toml", "[scenario.a]\nbad_key = 1"),
+            ("application/json", "{\"scenario\": "),
+            ("application/json", "{}"),
+            ("application/toml", ""),
+        ] {
+            let resp = route(&state, &post("/sweep", ct, body));
+            assert_eq!(resp.status, 400, "body {body:?} must be rejected");
+        }
+        // invalid UTF-8
+        let mut req = post("/sweep", "application/toml", "");
+        req.body = vec![0xff, 0xfe, 0x00];
+        assert_eq!(route(&state, &req).status, 400);
+        assert_eq!(state.metrics.sweep_computation_count(), 0);
+    }
+
+    #[test]
+    fn oversized_requests_rejected() {
+        let state = tiny_state();
+        let mut many = String::new();
+        for i in 0..=MAX_SCENARIOS_PER_REQUEST {
+            many.push_str(&format!("[scenario.s{i:03}]\n"));
+        }
+        let resp =
+            route(&state, &post("/sweep", "application/toml", &many));
+        assert_eq!(resp.status, 400);
+
+        let resp = route(
+            &state,
+            &post(
+                "/sweep",
+                "application/toml",
+                "[scenario.long]\nduration_days = 365.0\n",
+            ),
+        );
+        assert_eq!(resp.status, 400);
+
+        let resp = route(
+            &state,
+            &post(
+                "/sweep",
+                "application/toml",
+                "[scenario.big]\nramp_targets = [2000000]\n",
+            ),
+        );
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn metrics_expose_counters() {
+        let state = tiny_state();
+        route(&state, &post("/sweep", "", "[scenario.a]\n"));
+        let resp = route(&state, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body.to_vec()).unwrap();
+        assert!(
+            text.contains("icecloud_sweep_computations_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_result_cache_entries 1"),
+            "{text}"
+        );
+    }
+
+    impl Response {
+        fn header_value(&self, name: &str) -> Option<&str> {
+            self.extra_headers
+                .iter()
+                .find(|(k, _)| k.eq_ignore_ascii_case(name))
+                .map(|(_, v)| v.as_str())
+        }
+    }
+}

@@ -37,7 +37,7 @@ use crate::config::{
 };
 use crate::coordinator::ScenarioConfig;
 use crate::sim::{DAY, HOUR};
-use crate::util::json::Json;
+use crate::util::json::{require_bool, require_f64, require_u64, Json};
 use crate::util::toml;
 
 /// The default what-if matrix: ten scenarios spanning the axes the paper
@@ -130,6 +130,43 @@ const SCENARIO_KEYS: [&str; 14] = [
     "policy",
 ];
 
+/// Fetch a scenario key with a required type; present-but-mistyped
+/// values are errors, never silent no-ops (shared contract with
+/// `CampaignConfig::apply_toml` via `util::json::require_*`).  The
+/// key-name check above catches misspelled *keys*; without this, a
+/// mistyped *value* (`budget_usd = "29000"`) would replay as an exact
+/// copy of the baseline while carrying its override name — fatal for a
+/// tool whose rows are meant to be citable.
+fn scenario_u64(
+    scenario: &str,
+    body: &Json,
+    key: &str,
+) -> Result<Option<u64>, String> {
+    body.get(key)
+        .map(|v| require_u64(v, &format!("[scenario.{scenario}] {key}")))
+        .transpose()
+}
+
+fn scenario_f64(
+    scenario: &str,
+    body: &Json,
+    key: &str,
+) -> Result<Option<f64>, String> {
+    body.get(key)
+        .map(|v| require_f64(v, &format!("[scenario.{scenario}] {key}")))
+        .transpose()
+}
+
+fn scenario_bool(
+    scenario: &str,
+    body: &Json,
+    key: &str,
+) -> Result<Option<bool>, String> {
+    body.get(key)
+        .map(|v| require_bool(v, &format!("[scenario.{scenario}] {key}")))
+        .transpose()
+}
+
 fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String> {
     let table = body
         .as_obj()
@@ -142,25 +179,17 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
         }
     }
     let mut s = ScenarioConfig::named(name);
-    if let Some(v) = body.get("seed").and_then(Json::as_u64) {
-        s.seed = Some(v);
-    }
-    if let Some(v) = body.get("duration_days").and_then(Json::as_f64) {
+    s.seed = scenario_u64(name, body, "seed")?;
+    if let Some(v) = scenario_f64(name, body, "duration_days")? {
         s.duration_s = Some((v * DAY as f64) as u64);
     }
-    if let Some(v) = body.get("budget_usd").and_then(Json::as_f64) {
-        s.budget_usd = Some(v);
-    }
-    if let Some(v) = body.get("preempt_multiplier").and_then(Json::as_f64) {
-        s.preempt_multiplier = Some(v);
-    }
-    if let Some(v) = body.get("keepalive_s").and_then(Json::as_u64) {
-        s.keepalive_s = Some(v);
-    }
+    s.budget_usd = scenario_f64(name, body, "budget_usd")?;
+    s.preempt_multiplier =
+        scenario_f64(name, body, "preempt_multiplier")?;
+    s.keepalive_s = scenario_u64(name, body, "keepalive_s")?;
     let nat_disabled =
-        body.get("nat_disabled").and_then(Json::as_bool) == Some(true);
-    let nat_timeout =
-        body.get("nat_idle_timeout_s").and_then(Json::as_u64);
+        scenario_bool(name, body, "nat_disabled")? == Some(true);
+    let nat_timeout = scenario_u64(name, body, "nat_idle_timeout_s")?;
     match (nat_disabled, nat_timeout) {
         (true, Some(_)) => {
             return Err(format!(
@@ -174,25 +203,50 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
         }
         (false, None) => {}
     }
-    if body.get("outage_disabled").and_then(Json::as_bool) == Some(true) {
+    if scenario_bool(name, body, "outage_disabled")? == Some(true) {
         s.outage = Some(None);
     }
-    if let Some(at) = body.get("outage_at_days").and_then(Json::as_f64) {
-        let dur = body
-            .get("outage_duration_hours")
-            .and_then(Json::as_f64)
+    if let Some(at) = scenario_f64(name, body, "outage_at_days")? {
+        let dur = scenario_f64(name, body, "outage_duration_hours")?
             .unwrap_or(2.0);
         s.outage = Some(Some(OutageSpec {
             at_s: (at * DAY as f64) as u64,
             duration_s: (dur * HOUR as f64) as u64,
         }));
     }
-    if let Some(arr) = body.get("ramp_targets").and_then(Json::as_arr) {
-        let holds: Vec<f64> = body
-            .get("ramp_hold_days")
-            .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(Json::as_f64).collect())
-            .unwrap_or_default();
+    if let Some(targets) = body.get("ramp_targets") {
+        let arr = targets.as_arr().ok_or_else(|| {
+            format!("[scenario.{name}] ramp_targets must be an array")
+        })?;
+        let holds = match body.get("ramp_hold_days") {
+            None => Vec::new(),
+            Some(h) => {
+                let h = h.as_arr().ok_or_else(|| {
+                    format!(
+                        "[scenario.{name}] ramp_hold_days must be an \
+                         array"
+                    )
+                })?;
+                let mut out = Vec::with_capacity(h.len());
+                for (i, v) in h.iter().enumerate() {
+                    out.push(v.as_f64().ok_or_else(|| {
+                        format!(
+                            "[scenario.{name}] ramp_hold_days[{i}] \
+                             must be a number"
+                        )
+                    })?);
+                }
+                out
+            }
+        };
+        if holds.len() > arr.len() {
+            return Err(format!(
+                "[scenario.{name}] ramp_hold_days has {} entries for \
+                 {} targets",
+                holds.len(),
+                arr.len()
+            ));
+        }
         // strict: a dropped entry would shift the target/hold pairing
         // (or leave an empty ramp) without any diagnostic
         let mut ramp = Vec::with_capacity(arr.len());
@@ -216,10 +270,13 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
         }
         s.ramp = Some(ramp);
     }
-    if let Some(v) = body.get("onprem_slots").and_then(Json::as_u64) {
+    if let Some(v) = scenario_u64(name, body, "onprem_slots")? {
         s.onprem_slots = Some(v as u32);
     }
-    if let Some(v) = body.get("policy").and_then(Json::as_str) {
+    if let Some(v) = body.get("policy") {
+        let v = v.as_str().ok_or_else(|| {
+            format!("[scenario.{name}] policy must be a string")
+        })?;
         s.policy = Some(policy_from_str(v)?);
     }
     Ok(s)
@@ -232,6 +289,17 @@ pub fn parse_spec(
     base: &mut CampaignConfig,
 ) -> Result<Vec<ScenarioConfig>, String> {
     let doc = toml::parse(text).map_err(|e| e.to_string())?;
+    parse_spec_json(&doc, base)
+}
+
+/// Parse an already-decoded spec document (the TOML and JSON wire
+/// formats share one tree shape: an optional `base` table plus a
+/// `scenario` table of named override sets).  `icecloud serve` feeds
+/// JSON request bodies straight through this path.
+pub fn parse_spec_json(
+    doc: &Json,
+    base: &mut CampaignConfig,
+) -> Result<Vec<ScenarioConfig>, String> {
     if let Some(b) = doc.get("base") {
         base.apply_toml(b)?;
     }
@@ -360,6 +428,55 @@ seed = 77
     }
 
     #[test]
+    fn mistyped_values_rejected_not_silently_ignored() {
+        let mut base = CampaignConfig::default();
+        // a string where a number belongs must not replay the baseline
+        // under the scenario's name
+        for spec in [
+            "[scenario.a]\nbudget_usd = \"29000\"",
+            "[scenario.a]\nkeepalive_s = 300.5",
+            "[scenario.a]\nnat_disabled = \"true\"",
+            "[scenario.a]\nseed = -4",
+            "[scenario.a]\npolicy = 7",
+            "[scenario.a]\nramp_targets = 100",
+        ] {
+            assert!(
+                parse_spec(spec, &mut base).is_err(),
+                "spec {spec:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn mistyped_or_excess_ramp_holds_rejected() {
+        let mut base = CampaignConfig::default();
+        let err = parse_spec(
+            "[scenario.a]\nramp_targets = [100, 500]\n\
+             ramp_hold_days = [1.0, \"2\"]",
+            &mut base,
+        )
+        .unwrap_err();
+        assert!(err.contains("ramp_hold_days[1]"), "err={err}");
+        // more holds than targets is a pairing bug, not padding
+        assert!(parse_spec(
+            "[scenario.a]\nramp_targets = [100]\n\
+             ramp_hold_days = [1.0, 2.0]",
+            &mut base
+        )
+        .is_err());
+        // fewer holds than targets still defaults the tail
+        let s = &parse_spec(
+            "[scenario.a]\nramp_targets = [100, 500]\n\
+             ramp_hold_days = [1.0]",
+            &mut base,
+        )
+        .unwrap()[0];
+        let ramp = s.ramp.as_ref().unwrap();
+        assert_eq!(ramp[0].hold_s, DAY);
+        assert_eq!(ramp[1].hold_s, 2 * DAY);
+    }
+
+    #[test]
     fn conflicting_nat_keys_rejected() {
         let mut base = CampaignConfig::default();
         assert!(parse_spec(
@@ -380,6 +497,25 @@ seed = 77
         assert!(
             parse_spec("[scenario.a]\nramp_targets = []", &mut base).is_err()
         );
+    }
+
+    #[test]
+    fn json_documents_parse_like_toml() {
+        let mut base_toml = CampaignConfig::default();
+        let mut base_json = CampaignConfig::default();
+        let from_toml = parse_spec(
+            "[base]\nduration_days = 2.0\n\n[scenario.a]\nbudget_usd = 5.0",
+            &mut base_toml,
+        )
+        .unwrap();
+        let doc = crate::util::json::parse(
+            r#"{"base": {"duration_days": 2.0},
+                "scenario": {"a": {"budget_usd": 5.0}}}"#,
+        )
+        .unwrap();
+        let from_json = parse_spec_json(&doc, &mut base_json).unwrap();
+        assert_eq!(from_toml, from_json);
+        assert_eq!(base_toml.duration_s, base_json.duration_s);
     }
 
     #[test]

@@ -23,5 +23,5 @@
 pub mod matrix;
 pub mod runner;
 
-pub use matrix::{builtin_matrix, parse_spec};
-pub use runner::{run_matrix, summarize, ScenarioSummary};
+pub use matrix::{builtin_matrix, parse_spec, parse_spec_json};
+pub use runner::{run_matrix, run_scenario, summarize, ScenarioSummary};

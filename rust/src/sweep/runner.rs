@@ -87,6 +87,19 @@ pub fn summarize(
     }
 }
 
+/// Replay one scenario against `base` to its summary row.  This is the
+/// single underlying unit of work shared by every driver: the one-shot
+/// CLI sweep below, and the persistent replay pool behind
+/// `icecloud serve` (`crate::server::jobs`).
+pub fn run_scenario(
+    base: &CampaignConfig,
+    scenario: &ScenarioConfig,
+) -> ScenarioSummary {
+    let cfg = scenario.apply(base);
+    let result = Campaign::new(cfg.clone()).run();
+    summarize(&scenario.name, &cfg, &result)
+}
+
 /// Replay every scenario of the matrix against `base` on up to
 /// `threads` worker threads; returns one summary per scenario, in
 /// matrix order, independent of thread count.
@@ -107,10 +120,8 @@ pub fn run_matrix(
                 if i >= scenarios.len() {
                     break;
                 }
-                let cfg = scenarios[i].apply(base);
-                let result = Campaign::new(cfg.clone()).run();
-                let summary = summarize(&scenarios[i].name, &cfg, &result);
-                *slots[i].lock().unwrap() = Some(summary);
+                *slots[i].lock().unwrap() =
+                    Some(run_scenario(base, &scenarios[i]));
             });
         }
     });

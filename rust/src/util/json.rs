@@ -234,6 +234,26 @@ fn write_json(j: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
+/// Typed extraction with a diagnostic: `what` names the key in the
+/// caller's vocabulary (`'ramp.targets'`, `[scenario.a] budget_usd`).
+/// Strict config parsing is built on these — a present-but-mistyped
+/// value must error, never silently no-op, because an override that
+/// doesn't apply would replay a different campaign than requested.
+pub fn require_u64(v: &Json, what: &str) -> Result<u64, String> {
+    v.as_u64()
+        .ok_or_else(|| format!("{what} must be a non-negative integer"))
+}
+
+/// See [`require_u64`].
+pub fn require_f64(v: &Json, what: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{what} must be a number"))
+}
+
+/// See [`require_u64`].
+pub fn require_bool(v: &Json, what: &str) -> Result<bool, String> {
+    v.as_bool().ok_or_else(|| format!("{what} must be a boolean"))
+}
+
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
@@ -249,12 +269,18 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Nesting bound for untrusted input: a few thousand `[`s would
+/// otherwise overflow the recursive parser's stack.  128 is far beyond
+/// any document this crate exchanges (artifact metadata, sweep specs,
+/// server request bodies).
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document (full input must be consumed).
 pub fn parse(input: &str) -> Result<Json, ParseError> {
     let bytes = input.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };
     p.skip_ws();
-    let v = p.value()?;
+    let v = p.value(0)?;
     p.skip_ws();
     if p.i != bytes.len() {
         return Err(p.err("trailing characters"));
@@ -300,14 +326,17 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, ParseError> {
+    fn value(&mut self, depth: usize) -> Result<Json, ParseError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         match self.peek() {
             Some(b'n') => self.literal("null", Json::Null),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'"') => self.string().map(Json::Str),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             Some(_) => Err(self.err("unexpected character")),
             None => Err(self.err("unexpected end of input")),
@@ -339,10 +368,14 @@ impl<'a> Parser<'a> {
                             if self.i + 4 >= self.b.len() {
                                 return Err(self.err("bad \\u escape"));
                             }
-                            let hex = std::str::from_utf8(
-                                &self.b[self.i + 1..self.i + 5],
-                            )
-                            .map_err(|_| self.err("bad \\u escape"))?;
+                            let raw = &self.b[self.i + 1..self.i + 5];
+                            // strict: exactly four hex digits (RFC 8259);
+                            // from_str_radix alone would admit "+abc"
+                            if !raw.iter().all(u8::is_ascii_hexdigit) {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(raw)
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             let code = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             // BMP only; surrogate pairs are not needed for
@@ -393,12 +426,17 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        let v: f64 =
+            text.parse().map_err(|_| self.err("invalid number"))?;
+        // "1e999" parses to +inf; JSON numbers are finite, and a NaN/Inf
+        // would silently round-trip to `null` on re-serialization
+        if !v.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(v))
     }
 
-    fn array(&mut self) -> Result<Json, ParseError> {
+    fn array(&mut self, depth: usize) -> Result<Json, ParseError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -408,7 +446,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -421,7 +459,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, ParseError> {
+    fn object(&mut self, depth: usize) -> Result<Json, ParseError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -435,7 +473,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             map.insert(key, val);
             self.skip_ws();
             match self.peek() {
@@ -555,6 +593,27 @@ mod tests {
         let s = o.to_string_pretty();
         assert!(s.contains('\n'));
         assert_eq!(parse(&s).unwrap(), o);
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let deep = "[".repeat(100_000);
+        assert!(parse(&deep).is_err());
+        let legal = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(parse(&legal).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_rejected() {
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
+        assert!(parse("1e308").is_ok());
+    }
+
+    #[test]
+    fn loose_unicode_escape_digits_rejected() {
+        assert!(parse(r#""\u+12f""#).is_err());
+        assert!(parse(r#""é""#).is_ok());
     }
 
     #[test]

@@ -9,5 +9,6 @@ pub mod json;
 pub mod logger;
 pub mod proptest;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod toml;

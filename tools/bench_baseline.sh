@@ -1,0 +1,36 @@
+#!/usr/bin/env sh
+# Regenerate the committed benchmark baseline (BENCH_pr<N>.json).
+#
+# Runs the sweep-scaling and photon-engine benches through the in-tree
+# harness (util::bench) and collects their machine-readable BENCHJSON
+# lines into one JSON-lines file: a `meta` line first, then one line per
+# benchmark.  Usage:
+#
+#   tools/bench_baseline.sh [out-file]          # full sampling
+#   ICECLOUD_BENCH_FAST=1 tools/bench_baseline.sh   # quick smoke pass
+#
+# Compare files across PRs with e.g.:
+#   jq -s 'map(select(.bench)) | .[] | {bench, mean_s, throughput}' BENCH_pr*.json
+set -eu
+
+out="${1:-BENCH_pr2.json}"
+host="$(uname -sm 2>/dev/null || echo unknown)"
+date="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+rustc_v="$(rustc --version 2>/dev/null || echo unknown)"
+
+tmp="$(mktemp)"
+trap 'rm -f "$tmp"' EXIT
+
+for bench in sweep photon_engine serve; do
+    echo "== cargo bench --bench $bench" >&2
+    cargo bench --bench "$bench" 2>/dev/null \
+        | sed -n "s/^BENCHJSON //p" >> "$tmp"
+done
+
+{
+    printf '{"meta":{"file":"%s","generated":"%s","host":"%s","rustc":"%s","measured":true,"regenerate":"tools/bench_baseline.sh"}}\n' \
+        "$out" "$date" "$host" "$rustc_v"
+    cat "$tmp"
+} > "$out"
+
+echo "wrote $out ($(wc -l < "$out") lines)" >&2
