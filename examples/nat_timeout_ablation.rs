@@ -12,8 +12,10 @@ use icecloud::sim::HOUR;
 
 fn main() {
     println!("== NAT timeout ablation (Azure default NAT: 240 s idle) ==\n");
-    println!("sweeping keepalive ∈ {:?} s over a 12 h / 100-GPU Azure fleet\n",
-             nat::DEFAULT_KEEPALIVES);
+    println!(
+        "sweeping keepalive ∈ {:?} s over a 12 h / 100-GPU Azure fleet\n",
+        nat::DEFAULT_KEEPALIVES
+    );
     let rows = nat::run_sweep(&nat::DEFAULT_KEEPALIVES, 12 * HOUR, 100);
     println!("{}", nat::render(&rows));
     match nat::check_cliff(&rows) {

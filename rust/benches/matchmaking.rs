@@ -57,24 +57,19 @@ fn main() {
 
     let startds = pool(2000);
     let s1 = schedd(10_000, 1);
-    b.run_throughput("negotiate/2k-slots-10k-jobs-1-cluster", 2000.0,
-                     "matches", || {
+    b.run_throughput("negotiate/2k-slots-10k-jobs-1-cluster", 2000.0, "matches", || {
         negotiate(&s1, &startds, startds.keys().copied(), usize::MAX).matches.len()
     });
 
     let s8 = schedd(10_000, 8);
-    b.run_throughput("negotiate/2k-slots-10k-jobs-8-clusters", 2000.0,
-                     "matches", || {
+    b.run_throughput("negotiate/2k-slots-10k-jobs-8-clusters", 2000.0, "matches", || {
         negotiate(&s8, &startds, startds.keys().copied(), usize::MAX).matches.len()
     });
 
     // the worst case autoclustering protects against: every job unique
     let s_unique = schedd(2_000, 2_000);
-    b.run_throughput("negotiate/2k-slots-2k-unique-jobs", 2000.0, "matches",
-                     || {
-        negotiate(&s_unique, &startds, startds.keys().copied(), usize::MAX)
-            .matches
-            .len()
+    b.run_throughput("negotiate/2k-slots-2k-unique-jobs", 2000.0, "matches", || {
+        negotiate(&s_unique, &startds, startds.keys().copied(), usize::MAX).matches.len()
     });
 
     // per-cycle cost during the steady state (few idle jobs, full pool)

@@ -1,11 +1,15 @@
-//! L1/L2 hot path: AOT photon artifact execution through PJRT.
+//! L1/L2 hot path: AOT photon artifact execution.
 //!
 //! Per-bunch latency and photon throughput for each compiled variant —
 //! the real-compute cost the campaign's sampling pays, and the L1 number
-//! recorded in EXPERIMENTS.md §Perf. Skipped (with a notice) when
-//! artifacts have not been built.
+//! recorded in EXPERIMENTS.md §Perf.  `photon/<variant>-bunch` runs the
+//! batched engine single-threaded (the campaign's default); the `-mt`
+//! twins run it with all cores (`ExecPlan::auto`) — results are
+//! bit-identical either way, only wall time moves.  Skipped (with a
+//! notice) when artifacts have not been built; the artifact-free
+//! scalar-vs-batched comparison lives in `benches/sweep.rs`.
 
-use icecloud::runtime::PhotonEngine;
+use icecloud::runtime::{build_inputs, ExecPlan, PhotonEngine};
 use icecloud::util::bench::Bench;
 use std::path::PathBuf;
 
@@ -32,6 +36,19 @@ fn main() {
             || {
                 seed = seed.wrapping_add(1);
                 exe.run_seeded(seed).unwrap().detected()
+            },
+        );
+        let mut seed = 0u32;
+        b.run_throughput(
+            &format!("photon/{variant}-bunch-mt"),
+            photons,
+            "photons",
+            || {
+                seed = seed.wrapping_add(1);
+                let inputs = build_inputs(&exe.meta, seed, true);
+                exe.run_with_plan(&inputs, ExecPlan::auto())
+                    .unwrap()
+                    .detected()
             },
         );
     }

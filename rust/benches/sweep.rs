@@ -1,12 +1,22 @@
-//! Sweep-runner benchmarks: campaign replays/sec vs worker thread count.
+//! Sweep-runner + photon-engine scaling benchmarks.
 //!
-//! The sweep subsystem's perf claim is near-linear scaling up to the
-//! core count, because replays share no simulation state.  We run the
-//! built-in 10-scenario matrix at a reduced duration and report
-//! replays/sec at 1/2/4/8 workers — EXPERIMENTS.md §Perf records the
-//! scaling curve.
+//! Two perf claims live here, recorded in EXPERIMENTS.md §Perf and
+//! gated by CI's `bench-baseline` job via `tools/bench_compare.sh`:
+//!
+//! * **sweep scaling** — campaign replays/sec vs worker thread count;
+//!   replays share no simulation state, so scaling should track
+//!   physical cores.
+//! * **engine scaling** — photons/sec of the scalar reference walk vs
+//!   the batched SoA engine at 1/2/4 threads, on the artifact "default"
+//!   shape (4096 photons x 64 steps x 60 DOMs), synthetic metadata so
+//!   no artifact build is required.  The standing claim: batched ≥ 2x
+//!   scalar on the CI runner (`ICECLOUD_MIN_SPEEDUP` in bench_compare).
+//!
+//! Scalar and batched closures rebuild inputs per iteration with the
+//! same wrapping seed sequence, so the comparison stays apples-to-apples.
 
 use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::runtime::{build_inputs, ExecPlan, PhotonExecutable, VariantMeta};
 use icecloud::sim::{DAY, HOUR};
 use icecloud::sweep;
 use icecloud::util::bench::Bench;
@@ -33,6 +43,40 @@ fn main() {
             replays,
             "replays",
             || sweep::run_matrix(&base, &scenarios, threads).len(),
+        );
+    }
+
+    // the artifact "default" shape, as synthetic metadata
+    let exe = PhotonExecutable::from_meta(VariantMeta::synthetic(
+        "bench-default",
+        4096,
+        512,
+        60,
+        64,
+    ))
+    .unwrap();
+    let photons = exe.meta.num_photons as f64;
+
+    let mut seed = 0u32;
+    b.run_throughput("engine/scalar", photons, "photons", || {
+        seed = seed.wrapping_add(1);
+        let inputs = build_inputs(&exe.meta, seed, true);
+        exe.run_scalar(&inputs).unwrap().detected()
+    });
+
+    for threads in [1usize, 2, 4] {
+        let mut seed = 0u32;
+        b.run_throughput(
+            &format!("engine/batched-{threads}t"),
+            photons,
+            "photons",
+            || {
+                seed = seed.wrapping_add(1);
+                let inputs = build_inputs(&exe.meta, seed, true);
+                exe.run_with_plan(&inputs, ExecPlan { threads, bunch: 4096 })
+                    .unwrap()
+                    .detected()
+            },
         );
     }
 

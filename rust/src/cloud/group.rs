@@ -55,21 +55,16 @@ mod tests {
 
     #[test]
     fn grows_toward_target_within_headroom() {
-        assert_eq!(plan_reconcile(10, 50, 100),
-                   ReconcilePlan { launch: 40, terminate: 0 });
+        assert_eq!(plan_reconcile(10, 50, 100), ReconcilePlan { launch: 40, terminate: 0 });
         // market-limited fulfilment: provision "as many as available"
-        assert_eq!(plan_reconcile(10, 50, 15),
-                   ReconcilePlan { launch: 15, terminate: 0 });
-        assert_eq!(plan_reconcile(10, 50, 0),
-                   ReconcilePlan { launch: 0, terminate: 0 });
+        assert_eq!(plan_reconcile(10, 50, 15), ReconcilePlan { launch: 15, terminate: 0 });
+        assert_eq!(plan_reconcile(10, 50, 0), ReconcilePlan { launch: 0, terminate: 0 });
     }
 
     #[test]
     fn shrinks_to_target() {
-        assert_eq!(plan_reconcile(50, 10, 100),
-                   ReconcilePlan { launch: 0, terminate: 40 });
-        assert_eq!(plan_reconcile(50, 0, 0),
-                   ReconcilePlan { launch: 0, terminate: 50 });
+        assert_eq!(plan_reconcile(50, 10, 100), ReconcilePlan { launch: 0, terminate: 40 });
+        assert_eq!(plan_reconcile(50, 0, 0), ReconcilePlan { launch: 0, terminate: 50 });
     }
 
     #[test]

@@ -221,8 +221,7 @@ mod tests {
 
     #[test]
     fn threshold_alerts_fire_once_in_order() {
-        let mut ledger = Ledger::new(AccountSet::paper_setup(0), 100.0,
-                                     &[0.5, 0.25]);
+        let mut ledger = Ledger::new(AccountSet::paper_setup(0), 100.0, &[0.5, 0.25]);
         let mut meter = BillingMeter::new();
         // hand-crafted meter states via accrual on a tiny fleet is clumsy;
         // drive thresholds through a fleet of known cost instead:

@@ -106,8 +106,12 @@ impl CondorPool {
     ) {
         if let Some(mut startd) = self.startds.remove(&slot) {
             if let Some(claim) = startd.release() {
-                Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
-                                  startd.pool_tag, -1);
+                Self::count_claim(
+                    &mut self.busy_cloud,
+                    &mut self.busy_onprem,
+                    startd.pool_tag,
+                    -1,
+                );
                 self.schedd.interrupt(claim.job, now);
                 events.push(PoolEvent::JobInterrupted(
                     slot,
@@ -144,8 +148,7 @@ impl CondorPool {
         (self.busy_cloud, self.busy_onprem)
     }
 
-    fn count_claim(busy_cloud: &mut usize, busy_onprem: &mut usize,
-                   tag: &str, delta: isize) {
+    fn count_claim(busy_cloud: &mut usize, busy_onprem: &mut usize, tag: &str, delta: isize) {
         let c = match tag {
             "cloud" => busy_cloud,
             "onprem" => busy_onprem,
@@ -174,8 +177,12 @@ impl CondorPool {
             startd.conn.sever();
             startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
             if let Some(claim) = startd.release() {
-                Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
-                                  startd.pool_tag, -1);
+                Self::count_claim(
+                    &mut self.busy_cloud,
+                    &mut self.busy_onprem,
+                    startd.pool_tag,
+                    -1,
+                );
                 self.schedd.interrupt(claim.job, now);
                 events.push(PoolEvent::JobInterrupted(slot, InterruptCause::Outage));
             }
@@ -239,9 +246,12 @@ impl CondorPool {
                 startd.conn.sever();
                 startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
                 if let Some(claim) = startd.release() {
-                    Self::count_claim(&mut self.busy_cloud,
-                                      &mut self.busy_onprem,
-                                      startd.pool_tag, -1);
+                    Self::count_claim(
+                        &mut self.busy_cloud,
+                        &mut self.busy_onprem,
+                        startd.pool_tag,
+                        -1,
+                    );
                     self.schedd.interrupt(claim.job, now);
                     events.push(PoolEvent::JobInterrupted(
                         slot,
@@ -261,9 +271,12 @@ impl CondorPool {
                     self.stats.nat_drops += 1;
                     startd.reconnect_at = Some(now + RECONNECT_DELAY_S);
                     if let Some(claim) = startd.release() {
-                        Self::count_claim(&mut self.busy_cloud,
-                                          &mut self.busy_onprem,
-                                          startd.pool_tag, -1);
+                        Self::count_claim(
+                            &mut self.busy_cloud,
+                            &mut self.busy_onprem,
+                            startd.pool_tag,
+                            -1,
+                        );
                         self.schedd.interrupt(claim.job, now);
                         events.push(PoolEvent::JobInterrupted(
                             slot,
@@ -295,8 +308,7 @@ impl CondorPool {
                 continue; // stale entry from an earlier claim
             }
             startd.release();
-            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
-                              startd.pool_tag, -1);
+            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem, startd.pool_tag, -1);
             if startd.conn.alive {
                 self.schedd.complete(claim.job, now);
                 events.push(PoolEvent::JobCompleted(slot));
@@ -338,8 +350,7 @@ impl CondorPool {
                  ads of registered workers)",
             );
             startd.claim_for(job, now, runtime);
-            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem,
-                              startd.pool_tag, 1);
+            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem, startd.pool_tag, 1);
             self.completions.push_at(now + runtime, slot);
             self.stats.matches += 1;
             events.push(PoolEvent::JobStarted(slot));
@@ -422,12 +433,16 @@ mod tests {
     use crate::net::NatProfile;
     use crate::sim::MINUTE;
 
-    fn add_worker(pool: &mut CondorPool, n: u64, keepalive: u64,
-                  nat: NatProfile, now: SimTime) {
+    fn add_worker(pool: &mut CondorPool, n: u64, keepalive: u64, nat: NatProfile, now: SimTime) {
         let slot = SlotId::Cloud(InstanceId(n));
         let startd = Startd::new(
-            slot, "cloud", Some(Provider::Azure), "azure/eastus", nat,
-            keepalive, now,
+            slot,
+            "cloud",
+            Some(Provider::Azure),
+            "azure/eastus",
+            nat,
+            keepalive,
+            now,
         );
         pool.add_startd(startd, now);
     }

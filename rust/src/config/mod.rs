@@ -86,6 +86,47 @@ pub struct RealComputeConfig {
     pub every_n_completions: u64,
 }
 
+/// Photon-engine execution knobs (the batched SoA engine, DESIGN.md
+/// §13).  These trade wall time only: the batched engine is
+/// bit-identical across thread counts and bunch sizes, which is why the
+/// knobs are deliberately *excluded* from [`CampaignConfig::canonical_json`]
+/// — two requests that differ only here replay the same campaign and
+/// must share a cache entry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker threads per bunch execution (0 = all available cores).
+    pub threads: u32,
+    /// Photons per SoA sub-bunch (locality knob; 0 = engine default).
+    pub bunch: u32,
+}
+
+impl EngineConfig {
+    /// The concrete thread count this config asks for (auto resolved).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::runtime::available_threads()
+        } else {
+            self.threads as usize
+        }
+    }
+
+    /// Cap the engine at `budget` threads, so nested parallelism
+    /// (replay workers × engine threads) stays within the machine —
+    /// the sweep runner and server replay pool call this with
+    /// `cores / workers` (see `sweep::runner::engine_thread_budget`).
+    pub fn clamp_threads(&mut self, budget: usize) {
+        self.threads = self.resolved_threads().min(budget.max(1)) as u32;
+    }
+
+    /// The execution plan this config resolves to.
+    pub fn plan(&self) -> crate::runtime::ExecPlan {
+        crate::runtime::ExecPlan {
+            threads: self.threads as usize,
+            bunch: self.bunch as usize,
+        }
+    }
+}
+
 /// NAT behaviour override applied to every cloud region (scenario knob).
 ///
 /// The paper's §IV incident hinges on Azure's default 4-minute NAT idle
@@ -161,6 +202,9 @@ pub struct CampaignConfig {
     /// when real compute is enabled).
     pub flops_per_bunch: f64,
     pub real_compute: Option<RealComputeConfig>,
+    /// Batched photon-engine execution knobs (wall time only; never
+    /// part of the cache key).
+    pub engine: EngineConfig,
 }
 
 impl Default for CampaignConfig {
@@ -205,6 +249,7 @@ impl Default for CampaignConfig {
             generator: GeneratorConfig::default(),
             flops_per_bunch: 1.2e10,
             real_compute: None,
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -247,6 +292,17 @@ impl CampaignConfig {
         }
         if let Some(v) = want_f64(doc, &["preempt_multiplier"])? {
             self.preempt_multiplier = v;
+        }
+        if let Some(v) = want_u64(doc, &["engine", "threads"])? {
+            self.engine.threads = u32::try_from(v)
+                .map_err(|_| format!("'engine.threads' {v} is out of range"))?;
+        }
+        if let Some(v) = want_u64(doc, &["engine", "bunch"])? {
+            if v == 0 {
+                return Err("'engine.bunch' must be >= 1".into());
+            }
+            self.engine.bunch = u32::try_from(v)
+                .map_err(|_| format!("'engine.bunch' {v} is out of range"))?;
         }
         let nat_disabled =
             want_bool(doc, &["nat", "disabled"])? == Some(true);
@@ -405,7 +461,9 @@ impl CampaignConfig {
     ///
     /// Adding a field to `CampaignConfig` that affects the replay MUST
     /// be mirrored here; the version tag lets the cache key change
-    /// shape without aliasing old keys.
+    /// shape without aliasing old keys.  [`EngineConfig`] is the one
+    /// deliberate omission: the batched engine is bit-identical across
+    /// its knobs, so they must NOT split the cache.
     pub fn canonical_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("v", Json::from(1u64));
@@ -721,6 +779,67 @@ azure = 0.6
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.ramp[0].hold_s, DAY);
         assert_eq!(c.ramp[1].hold_s, 2 * DAY);
+    }
+
+    #[test]
+    fn engine_knobs_from_toml() {
+        let doc = toml::parse("[engine]\nthreads = 4\nbunch = 1024").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.engine.threads, 4);
+        assert_eq!(c.engine.bunch, 1024);
+        assert_eq!(c.engine.resolved_threads(), 4);
+        assert_eq!(c.engine.plan().threads, 4);
+        assert_eq!(c.engine.plan().bunch, 1024);
+
+        // mistyped, degenerate, or u32-truncating values are rejected,
+        // not dropped (4294967296 = 2^32 would truncate to 0)
+        for src in [
+            "[engine]\nthreads = \"4\"",
+            "[engine]\nbunch = 0",
+            "[engine]\nbunch = 4294967296",
+            "[engine]\nthreads = 4294967296",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "'{src}' must error");
+        }
+    }
+
+    #[test]
+    fn engine_default_is_auto() {
+        let c = CampaignConfig::default();
+        assert_eq!(c.engine.threads, 0);
+        assert!(c.engine.resolved_threads() >= 1);
+    }
+
+    #[test]
+    fn engine_clamp_respects_budget() {
+        let mut e = EngineConfig { threads: 16, bunch: 0 };
+        e.clamp_threads(4);
+        assert_eq!(e.threads, 4);
+        let mut e = EngineConfig { threads: 2, bunch: 0 };
+        e.clamp_threads(4);
+        assert_eq!(e.threads, 2);
+        // auto resolves to a concrete count within budget
+        let mut e = EngineConfig::default();
+        e.clamp_threads(1);
+        assert_eq!(e.threads, 1);
+        // a zero budget still leaves one engine thread
+        let mut e = EngineConfig { threads: 8, bunch: 0 };
+        e.clamp_threads(0);
+        assert_eq!(e.threads, 1);
+    }
+
+    #[test]
+    fn engine_knobs_never_split_the_cache_key() {
+        // the batched engine is bit-identical across these knobs, so
+        // they are excluded from the canonical serialization
+        let base = CampaignConfig::default().canonical_json().to_string_compact();
+        let mut c = CampaignConfig::default();
+        c.engine.threads = 7;
+        c.engine.bunch = 128;
+        assert_eq!(base, c.canonical_json().to_string_compact());
     }
 
     #[test]

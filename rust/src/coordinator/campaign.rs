@@ -20,8 +20,9 @@ use crate::coordinator::policy::{self, ObservedRates};
 use crate::coordinator::rampplan::RampPlan;
 use crate::monitoring::Monitor;
 use crate::net::NatProfile;
-use crate::osg::{ComputeElement, GlideinFactory, GlideinFrontend, OsgRegistry,
-                 UsageAccounting};
+use crate::osg::{
+    ComputeElement, GlideinFactory, GlideinFrontend, OsgRegistry, UsageAccounting,
+};
 use crate::runtime::PhotonExecutable;
 use crate::sim::{SimTime, Ticker};
 use crate::util::rng::Rng;
@@ -105,6 +106,9 @@ impl Campaign {
         config: CampaignConfig,
         real_exe: Option<PhotonExecutable>,
     ) -> Self {
+        // real-compute bunches execute with the campaign's engine knobs
+        // (threads/bunch change wall time only, never results)
+        let real_exe = real_exe.map(|exe| exe.with_plan(config.engine.plan()));
         let root = Rng::new(config.seed);
         // scenario knobs rewrite the region catalog before the fleet is
         // built: busier spot markets and/or different NAT infrastructure
@@ -135,8 +139,7 @@ impl Campaign {
         registry
             .register_resource("icecube-cloud-ce", Provider::Azure, &["icecube"])
             .expect("registry accepts the CE");
-        let ce = ComputeElement::new("icecube-cloud-ce", Provider::Azure,
-                                     &["icecube"]);
+        let ce = ComputeElement::new("icecube-cloud-ce", Provider::Azure, &["icecube"]);
         let factory =
             GlideinFactory::new("icecube", fleet.regions().map(|(r, _)| r));
         let frontend = GlideinFrontend::default();
@@ -229,13 +232,10 @@ impl Campaign {
         }
         let total = self.desired_total(now);
         let observed = self.observed_rates();
-        let targets =
-            policy::distribute(total, &self.fleet, &self.config.policy,
-                               Some(&observed));
+        let targets = policy::distribute(total, &self.fleet, &self.config.policy, Some(&observed));
         // scale-ups silently fail while the CE is down (paper behaviour);
         // scale-downs always apply
-        let _ = self.factory.apply_targets(&targets, &mut self.ce,
-                                           &mut self.fleet, now);
+        let _ = self.factory.apply_targets(&targets, &mut self.ce, &mut self.fleet, now);
         // frontend demand is recorded for monitoring (manual mode ignores it)
         self.frontend.demand(&self.pool.schedd);
         // CloudBank ingest
@@ -333,8 +333,7 @@ impl Campaign {
         // 1. outage schedule + operator response
         match self.outage.advance(now) {
             OutageTransition::Began => {
-                sim_warn!(now, "outage",
-                          "network outage at the CE-hosting provider; WMS down");
+                sim_warn!(now, "outage", "network outage at the CE-hosting provider; WMS down");
                 self.ce.set_available(false);
                 let mut events = Vec::new();
                 self.pool.begin_outage(now, &mut events);
@@ -342,8 +341,12 @@ impl Campaign {
                 self.factory.deprovision_all(&mut self.fleet);
             }
             OutageTransition::Ended => {
-                sim_info!(now, "outage", "outage resolved; resuming at {} GPUs",
-                          self.config.post_outage_target);
+                sim_info!(
+                    now,
+                    "outage",
+                    "outage resolved; resuming at {} GPUs",
+                    self.config.post_outage_target
+                );
                 self.ce.set_available(true);
                 self.pool.end_outage();
                 // operator decision: with ~20% budget left, resume low

@@ -144,7 +144,8 @@ pub fn check_cliff(rows: &[NatRow]) -> Result<(), String> {
         rows.iter().filter(|r| r.keepalive_s > 240).map(|r| r.completed).sum();
     let stable_n = rows.iter().filter(|r| r.keepalive_s <= 240).count() as u64;
     let storm_n = rows.iter().filter(|r| r.keepalive_s > 240).count() as u64;
-    if stable_n > 0 && storm_n > 0
+    if stable_n > 0
+        && storm_n > 0
         && storm_completed * 2 * stable_n >= stable_completed * storm_n
     {
         return Err(format!(

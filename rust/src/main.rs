@@ -8,13 +8,17 @@
 //!               /metrics, /healthz)
 //!   reproduce   regenerate the paper's figures/tables into a results dir
 //!   validate    end-to-end smoke test of the AOT photon artifacts
+//!   parity      dump per-DOM hits/summary for Python-oracle comparison
 //!   info        print artifact + configuration summary
 
 use icecloud::config::CampaignConfig;
 use icecloud::coordinator::Campaign;
 use icecloud::experiments;
-use icecloud::runtime::PhotonEngine;
+use icecloud::runtime::{
+    build_inputs, ExecPlan, PhotonEngine, PhotonExecutable, VariantMeta,
+};
 use icecloud::util::cli::Command;
+use icecloud::util::json::Json;
 use icecloud::util::logger;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -39,6 +43,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(rest),
         "reproduce" => cmd_reproduce(rest),
         "validate" => cmd_validate(rest),
+        "parity" => cmd_parity(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -69,6 +74,8 @@ fn print_usage() {
          \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
          --fig2, --headline, --nat, --ramp)\n\
          \x20 validate    end-to-end smoke test of the photon artifacts\n\
+         \x20 parity      per-DOM hits/summary JSON for oracle comparison \
+         (tools/parity_check.py)\n\
          \x20 info        artifact and configuration summary\n\
          \x20 help        this message\n"
     );
@@ -80,6 +87,11 @@ fn campaign_command() -> Command {
         .opt("seed", "override RNG seed", None)
         .opt("days", "override campaign duration (days)", None)
         .opt("keepalive", "worker keepalive seconds (300 = relive §IV)", None)
+        .opt(
+            "engine-threads",
+            "photon-engine threads per bunch (0 = all cores)",
+            None,
+        )
         .opt("out", "write monitoring CSV + summary into this directory", None)
         .opt("log", "log level: debug|info|warn|error", Some("info"))
         .flag("real-compute", "sample real PJRT photon executions")
@@ -99,6 +111,10 @@ fn load_config(args: &icecloud::util::cli::Args) -> Result<CampaignConfig, Strin
     }
     if let Some(k) = args.get_u64("keepalive") {
         cfg.keepalive_s = k;
+    }
+    if let Some(t) = args.require_u64("engine-threads")? {
+        cfg.engine.threads = u32::try_from(t)
+            .map_err(|_| format!("--engine-threads {t} is out of range"))?;
     }
     if args.flag("no-outage") {
         cfg.outage = None;
@@ -439,6 +455,68 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
         );
     }
     println!("validate OK: artifact executes and conserves photons");
+    Ok(())
+}
+
+/// Built-in shape table for `parity`, mirroring the `VARIANTS` dict in
+/// `python/compile/geometry.py` so the oracle comparison needs no
+/// artifact build (jax lowering) on the Rust side.
+fn parity_variant(name: &str) -> Result<VariantMeta, String> {
+    match name {
+        "small" => Ok(VariantMeta::synthetic("small", 256, 128, 16, 16)),
+        "default" => Ok(VariantMeta::synthetic("default", 4096, 512, 60, 64)),
+        "large" => Ok(VariantMeta::synthetic("large", 16384, 1024, 240, 96)),
+        other => Err(format!(
+            "unknown parity variant '{other}' (small|default|large)"
+        )),
+    }
+}
+
+/// `icecloud parity` — machine-readable hits/summary for one bunch, so
+/// `tools/parity_check.py` can pin the Rust engine against the Python
+/// oracle (`python/compile/kernels/ref.py`) end to end.
+fn cmd_parity(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "parity",
+        "dump per-DOM hits/summary JSON for Python-oracle comparison",
+    )
+    .opt("variant", "built-in shape: small|default|large", Some("small"))
+    .opt("seed", "bunch seed", Some("7"))
+    .opt("mode", "scalar|batched", Some("batched"))
+    .opt("threads", "batched engine threads (0 = all cores)", Some("1"))
+    .opt("bunch", "photons per SoA sub-bunch (0 = default)", Some("0"));
+    let args = cmd.parse(rest)?;
+    let variant = args.get_or("variant", "small").to_string();
+    let seed = args.require_u64("seed")?.unwrap_or(7) as u32;
+    let exe = PhotonExecutable::from_meta(parity_variant(&variant)?)
+        .map_err(|e| e.to_string())?;
+    let inputs = build_inputs(&exe.meta, seed, true);
+    let mode = args.get_or("mode", "batched").to_string();
+    let r = match mode.as_str() {
+        "scalar" => exe.run_scalar(&inputs),
+        "batched" => {
+            let plan = ExecPlan {
+                threads: args.require_u64("threads")?.unwrap_or(1) as usize,
+                bunch: args.require_u64("bunch")?.unwrap_or(0) as usize,
+            };
+            exe.run_with_plan(&inputs, plan)
+        }
+        other => return Err(format!("unknown mode '{other}' (scalar|batched)")),
+    }
+    .map_err(|e| e.to_string())?;
+    let mut o = Json::obj();
+    o.set("variant", Json::from(variant.as_str()));
+    o.set("seed", Json::from(seed as u64));
+    o.set("mode", Json::from(mode.as_str()));
+    o.set(
+        "hits",
+        Json::Arr(r.hits.iter().map(|&h| Json::from(h as f64)).collect()),
+    );
+    o.set(
+        "summary",
+        Json::Arr(r.summary.iter().map(|&v| Json::from(v as f64)).collect()),
+    );
+    println!("{}", o.to_string_compact());
     Ok(())
 }
 

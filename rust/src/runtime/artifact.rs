@@ -28,6 +28,33 @@ pub struct VariantMeta {
     pub flops_estimate: f64,
 }
 
+impl VariantMeta {
+    /// A synthetic (artifact-less) variant: the shape plus the analytic
+    /// FLOP estimate from `geometry.Variant.flops_estimate` (~170 flops
+    /// of RNG/transport/scattering per photon-step plus ~15 per DOM
+    /// test).  The single source of the shape tables used by
+    /// `icecloud parity` and the engine benches.
+    pub fn synthetic(
+        name: &str,
+        num_photons: u64,
+        block: u64,
+        num_doms: u64,
+        num_steps: u64,
+    ) -> VariantMeta {
+        let per_step = 170.0 + 15.0 * num_doms as f64;
+        VariantMeta {
+            name: name.to_string(),
+            file: "synthetic".into(),
+            num_photons,
+            block,
+            num_doms,
+            num_steps,
+            num_layers: N_LAYERS as u64,
+            flops_estimate: num_photons as f64 * num_steps as f64 * per_step,
+        }
+    }
+}
+
 /// Parsed artifacts/meta.json.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {

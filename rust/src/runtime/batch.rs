@@ -1,0 +1,303 @@
+//! Batched structure-of-arrays execution of the photon walk.
+//!
+//! The scalar reference in [`super::engine`] walks one photon to
+//! termination before touching the next; per step it wanders a
+//! 3-float-strided DOM table with one photon's state in registers.  This
+//! module restructures the same physics for throughput (DESIGN.md §13):
+//!
+//! * **SoA state** — live photons are parallel `Vec`s (position,
+//!   direction, time, path, pid), so the hot segment–DOM sweep runs
+//!   DOM-outer/photon-inner over contiguous f32 arrays the compiler can
+//!   auto-vectorize;
+//! * **compaction** — terminated photons are squeezed out after every
+//!   step (order-preserving), so late steps only pay for the survivors;
+//! * **chunked threads** — photon ids are split into contiguous ranges,
+//!   one scoped `std::thread` per range, each writing outcomes into its
+//!   disjoint slice of the shared outcome vector.
+//!
+//! Determinism: a photon's walk is a pure function of `(inputs, pid)` —
+//! the RNG is a stateless counter hash, so neighbors in a bunch cannot
+//! influence each other — and every float expression is the *same*
+//! `#[inline]` helper the scalar walk calls.  The summary is then
+//! defined as the pid-ordered sequential fold of the outcome vector
+//! (`engine::reduce_outcomes`), executed single-threaded after the
+//! walk.  Together that makes results bit-identical to the scalar
+//! oracle for every (seed, bunch size, thread count) combination —
+//! pinned by `rust/tests/engine_parity.rs` — which is also why
+//! [`ExecPlan`] knobs stay out of the campaign cache key.
+
+use super::artifact::{PhotonInputs, VariantMeta};
+use super::engine::{
+    reduce_outcomes, segment_test, BunchResult, PhotonOutcome, Walk, NO_DOM,
+    ST_ABSORBED, ST_ALIVE, ST_DETECTED,
+};
+use super::EngineError;
+
+/// Photons per SoA bunch when unspecified: ~60 B of state per photon,
+/// so a bunch stays comfortably inside L2 alongside the DOM table.
+pub const DEFAULT_BUNCH: usize = 4096;
+
+/// All cores the runtime sees — the single "0 = auto" resolution shared
+/// by [`ExecPlan`], `config::EngineConfig` and the sweep runner's
+/// nested-parallelism budget.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Execution plan for the batched engine: how a bunch is cut into SoA
+/// sub-bunches and spread over threads.  Plans trade wall time only —
+/// results are bit-identical for every plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPlan {
+    /// Worker threads (0 = all available cores).
+    pub threads: usize,
+    /// Photons per SoA sub-bunch (0 = [`DEFAULT_BUNCH`]).
+    pub bunch: usize,
+}
+
+impl Default for ExecPlan {
+    /// Single-threaded, default bunch width: the drop-in replacement for
+    /// the scalar engine (no surprise parallelism for library callers).
+    fn default() -> Self {
+        ExecPlan { threads: 1, bunch: DEFAULT_BUNCH }
+    }
+}
+
+impl ExecPlan {
+    /// All available cores, default bunch width.
+    pub fn auto() -> Self {
+        ExecPlan { threads: 0, bunch: DEFAULT_BUNCH }
+    }
+
+    /// Concrete `(threads, bunch)` for a bunch of `num_photons`.
+    fn resolved(&self, num_photons: usize) -> (usize, usize) {
+        let threads = if self.threads == 0 {
+            available_threads()
+        } else {
+            self.threads
+        };
+        let threads = threads.clamp(1, num_photons.max(1));
+        let bunch = if self.bunch == 0 { DEFAULT_BUNCH } else { self.bunch };
+        (threads, bunch)
+    }
+}
+
+/// Execute one bunch through the batched SoA engine.
+pub(crate) fn run_batched(
+    meta: &VariantMeta,
+    inputs: &PhotonInputs,
+    plan: ExecPlan,
+) -> Result<BunchResult, EngineError> {
+    let t0 = std::time::Instant::now();
+    let walk = Walk::new(meta, inputs)?;
+    let n = meta.num_photons as usize;
+    let (threads, bunch) = plan.resolved(n);
+    let mut outcomes = vec![PhotonOutcome::default(); n];
+
+    if threads <= 1 {
+        walk_range(&walk, 0, &mut outcomes, bunch);
+    } else {
+        // contiguous pid ranges, the first `rem` one photon larger
+        let base = n / threads;
+        let rem = n % threads;
+        std::thread::scope(|scope| {
+            let walk = &walk;
+            let mut rest = outcomes.as_mut_slice();
+            let mut pid0 = 0u32;
+            for c in 0..threads {
+                let size = base + usize::from(c < rem);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(size);
+                rest = tail;
+                let first = pid0;
+                scope.spawn(move || walk_range(walk, first, head, bunch));
+                pid0 += size as u32;
+            }
+        });
+    }
+
+    Ok(reduce_outcomes(
+        &outcomes,
+        walk.num_doms(),
+        t0.elapsed().as_secs_f64(),
+    ))
+}
+
+/// Walk photons `[first_pid, first_pid + out.len())` in SoA sub-bunches.
+fn walk_range(walk: &Walk, first_pid: u32, out: &mut [PhotonOutcome], bunch: usize) {
+    let bunch = bunch.max(1);
+    let mut start = 0usize;
+    while start < out.len() {
+        let m = bunch.min(out.len() - start);
+        walk_bunch(walk, first_pid + start as u32, &mut out[start..start + m]);
+        start += m;
+    }
+}
+
+/// SoA state of the live photons of one bunch.
+struct BunchState {
+    pid: Vec<u32>,
+    px: Vec<f32>,
+    py: Vec<f32>,
+    pz: Vec<f32>,
+    dx: Vec<f32>,
+    dy: Vec<f32>,
+    dz: Vec<f32>,
+    t: Vec<f32>,
+    path: Vec<f64>,
+}
+
+impl BunchState {
+    fn init(walk: &Walk, pid0: u32, m: usize) -> BunchState {
+        let src = walk.source_pos();
+        let mut s = BunchState {
+            pid: (0..m).map(|i| pid0 + i as u32).collect(),
+            px: vec![src[0]; m],
+            py: vec![src[1]; m],
+            pz: vec![src[2]; m],
+            dx: vec![0.0; m],
+            dy: vec![0.0; m],
+            dz: vec![0.0; m],
+            t: vec![walk.t0(); m],
+            path: vec![0.0; m],
+        };
+        for i in 0..m {
+            let dir = walk.init_dir(s.pid[i]);
+            s.dx[i] = dir[0];
+            s.dy[i] = dir[1];
+            s.dz[i] = dir[2];
+        }
+        s
+    }
+
+    /// Drop photon `i`'s state by overwriting from photon `j` (`j >= i`).
+    #[inline]
+    fn copy_down(&mut self, i: usize, j: usize) {
+        self.pid[i] = self.pid[j];
+        self.px[i] = self.px[j];
+        self.py[i] = self.py[j];
+        self.pz[i] = self.pz[j];
+        self.dx[i] = self.dx[j];
+        self.dy[i] = self.dy[j];
+        self.dz[i] = self.dz[j];
+        self.t[i] = self.t[j];
+        self.path[i] = self.path[j];
+    }
+}
+
+/// Walk one SoA bunch of `out.len()` photons starting at `pid0`.
+fn walk_bunch(walk: &Walk, pid0: u32, out: &mut [PhotonOutcome]) {
+    let m = out.len();
+    let mut s = BunchState::init(walk, pid0, m);
+    // per-step scratch, indexed like the live arrays
+    let mut li = vec![0u32; m];
+    let mut d = vec![0.0f32; m];
+    let mut best_t = vec![0.0f32; m];
+    let mut best_dom = vec![NO_DOM; m];
+    let mut term = vec![ST_ALIVE; m];
+
+    let r2 = walk.r2();
+    let mut n_active = m;
+    for k in 0..walk.num_steps() {
+        if n_active == 0 {
+            break;
+        }
+
+        // pass A: layer lookup + exponential step length
+        for i in 0..n_active {
+            let l = walk.layer(s.pz[i]);
+            li[i] = l as u32;
+            d[i] = walk.step_length(l, s.pid[i], k);
+        }
+
+        // pass B: segment–DOM sweep, DOM-outer so the inner loop runs
+        // over contiguous photon arrays; ascending DOM order + strict
+        // `<` keeps the scalar walk's tie-breaking
+        for i in 0..n_active {
+            best_t[i] = f32::INFINITY;
+            best_dom[i] = NO_DOM;
+        }
+        for di in 0..walk.num_doms() {
+            let dom = walk.dom(di);
+            for i in 0..n_active {
+                let (ta, dist2) = segment_test(
+                    dom,
+                    [s.px[i], s.py[i], s.pz[i]],
+                    [s.dx[i], s.dy[i], s.dz[i]],
+                    d[i],
+                );
+                if dist2 <= r2 && ta < best_t[i] {
+                    best_t[i] = ta;
+                    best_dom[i] = di as u32;
+                }
+            }
+        }
+
+        // pass C: detect / move / absorb / scatter
+        for i in 0..n_active {
+            let slot = (s.pid[i] - pid0) as usize;
+            if best_dom[i] != NO_DOM {
+                out[slot] = PhotonOutcome {
+                    status: ST_DETECTED,
+                    dom: best_dom[i],
+                    steps: k + 1,
+                    path: s.path[i] + best_t[i] as f64,
+                    hit_time: (s.t[i] + best_t[i] / walk.v_group()) as f64,
+                };
+                term[i] = ST_DETECTED;
+                continue;
+            }
+            s.px[i] += s.dx[i] * d[i];
+            s.py[i] += s.dy[i] * d[i];
+            s.pz[i] += s.dz[i] * d[i];
+            s.t[i] += d[i] / walk.v_group();
+            s.path[i] += d[i] as f64;
+            if !walk.survives(li[i] as usize, d[i], s.pid[i], k) {
+                out[slot] = PhotonOutcome {
+                    status: ST_ABSORBED,
+                    dom: NO_DOM,
+                    steps: k + 1,
+                    path: s.path[i],
+                    hit_time: 0.0,
+                };
+                term[i] = ST_ABSORBED;
+                continue;
+            }
+            let dir = walk.scatter(
+                li[i] as usize,
+                [s.dx[i], s.dy[i], s.dz[i]],
+                s.pid[i],
+                k,
+            );
+            s.dx[i] = dir[0];
+            s.dy[i] = dir[1];
+            s.dz[i] = dir[2];
+            term[i] = ST_ALIVE;
+        }
+
+        // pass D: order-preserving compaction of terminated photons
+        let mut w = 0usize;
+        for i in 0..n_active {
+            if term[i] == ST_ALIVE {
+                if w != i {
+                    s.copy_down(w, i);
+                }
+                w += 1;
+            }
+        }
+        n_active = w;
+    }
+
+    // photons that outlived the step budget
+    for i in 0..n_active {
+        let slot = (s.pid[i] - pid0) as usize;
+        out[slot] = PhotonOutcome {
+            status: ST_ALIVE,
+            dom: NO_DOM,
+            steps: walk.num_steps(),
+            path: s.path[i],
+            hit_time: 0.0,
+        };
+    }
+}

@@ -8,16 +8,34 @@
 //! `artifacts/meta.json`, builds the same inputs (`build_inputs` mirrors
 //! `python/compile/geometry.py`), draws from the *same* stateless
 //! counter RNG (`python/compile/kernels/rng.py`, the lowbias32 hash of
-//! `(seed, photon_id, step, stream)`), and performs the same per-photon
+//! `(seed, photon_id, step, stream)`), and performs the same
 //! scatter/absorb/detect walk as the oracle in
-//! `python/compile/kernels/ref.py`.  Results are deterministic in the
-//! bunch seed and conserve photons exactly:
-//! `detected + absorbed + alive == bunch size`.
+//! `python/compile/kernels/ref.py`.
+//!
+//! Execution is split in two layers (DESIGN.md §13):
+//!
+//! * this module owns the *physics*: the per-(photon, step) op sequence
+//!   as small `#[inline]` helpers on `Walk`, the scalar reference walk
+//!   (`Walk::walk_photon`, reachable as
+//!   [`PhotonExecutable::run_scalar`]), and the pid-ordered outcome
+//!   reduction (`reduce_outcomes`);
+//! * [`super::batch`] owns the *execution strategy*: the batched
+//!   structure-of-arrays walk with terminated-photon compaction and
+//!   chunked multi-thread execution.
+//!
+//! Because every float expression lives in exactly one helper here, and
+//! the stateless RNG makes draw *order* irrelevant, the batched engine
+//! is bit-identical to the scalar reference for every (seed, bunch
+//! size, thread count) — the property `rust/tests/engine_parity.rs`
+//! pins and `tools/parity_check.py` checks against the Python oracle.
+//! Results are deterministic in the bunch seed and conserve photons
+//! exactly: `detected + absorbed + alive == bunch size`.
 //!
 //! Public types and signatures match the PJRT version, so a PJRT backend
 //! can be restored behind a feature without touching any caller.
 
 use super::artifact::{build_inputs, ArtifactMeta, PhotonInputs, VariantMeta};
+use super::batch::{self, ExecPlan};
 use super::EngineError;
 use std::path::Path;
 
@@ -91,6 +109,309 @@ fn rotate_dir(d: [f32; 3], cos_t: f32, phi: f32) -> [f32; 3] {
     [nd[0] / norm, nd[1] / norm, nd[2] / norm]
 }
 
+/// Segment–sphere closest-approach test for one (photon, DOM) pair:
+/// `(t_along, dist2)` with `t_along` clamped to the step `[0, d]`.
+#[inline]
+pub(crate) fn segment_test(dom: [f32; 3], pos: [f32; 3], dir: [f32; 3], d: f32) -> (f32, f32) {
+    let rel = [dom[0] - pos[0], dom[1] - pos[1], dom[2] - pos[2]];
+    let ta = (rel[0] * dir[0] + rel[1] * dir[1] + rel[2] * dir[2]).clamp(0.0, d);
+    let diff = [rel[0] - ta * dir[0], rel[1] - ta * dir[1], rel[2] - ta * dir[2]];
+    let dist2 = diff[0] * diff[0] + diff[1] * diff[1] + diff[2] * diff[2];
+    (ta, dist2)
+}
+
+// ---- per-photon outcomes ---------------------------------------------------
+
+/// Photon terminal states.
+pub(crate) const ST_ALIVE: u8 = 0;
+pub(crate) const ST_ABSORBED: u8 = 1;
+pub(crate) const ST_DETECTED: u8 = 2;
+
+/// Sentinel for "no DOM hit".
+pub(crate) const NO_DOM: u32 = u32::MAX;
+
+/// What one photon's walk produced.  Outcomes are a pure function of
+/// `(inputs, pid)`, which is the whole determinism argument: however the
+/// walk is batched or threaded, the outcome vector is identical, and the
+/// summary is defined as its pid-ordered sequential fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct PhotonOutcome {
+    pub status: u8,
+    /// Detecting DOM index, or [`NO_DOM`].
+    pub dom: u32,
+    /// Steps taken while alive (terminating step included).
+    pub steps: u32,
+    /// Path length accumulated over this photon's steps (f64 of the
+    /// per-step f32 values, in step order).
+    pub path: f64,
+    /// Arrival time at the detecting DOM (0 unless detected).
+    pub hit_time: f64,
+}
+
+impl Default for PhotonOutcome {
+    fn default() -> Self {
+        PhotonOutcome {
+            status: ST_ALIVE,
+            dom: NO_DOM,
+            steps: 0,
+            path: 0.0,
+            hit_time: 0.0,
+        }
+    }
+}
+
+/// Fold outcomes (in pid order, single-threaded) into a [`BunchResult`].
+/// Counts are exact integers; the float sums are sequential f64 folds,
+/// so the result does not depend on how the walk was executed.
+pub(crate) fn reduce_outcomes(
+    outcomes: &[PhotonOutcome],
+    num_doms: usize,
+    wall_s: f64,
+) -> BunchResult {
+    let mut hits_u = vec![0u64; num_doms];
+    let (mut n_det, mut n_abs, mut n_alive) = (0u64, 0u64, 0u64);
+    let mut path_sum = 0.0f64;
+    let mut hit_time_sum = 0.0f64;
+    let mut alive_steps = 0u64;
+    for o in outcomes {
+        match o.status {
+            ST_DETECTED => {
+                n_det += 1;
+                hits_u[o.dom as usize] += 1;
+                hit_time_sum += o.hit_time;
+            }
+            ST_ABSORBED => n_abs += 1,
+            _ => n_alive += 1,
+        }
+        path_sum += o.path;
+        alive_steps += o.steps as u64;
+    }
+    let summary = [
+        n_det as f32,
+        n_abs as f32,
+        n_alive as f32,
+        path_sum as f32,
+        hit_time_sum as f32,
+        alive_steps as f32,
+        0.0,
+        0.0,
+    ];
+    BunchResult {
+        hits: hits_u.into_iter().map(|h| h as f32).collect(),
+        summary,
+        wall_s,
+    }
+}
+
+// ---- the walk --------------------------------------------------------------
+
+/// A validated, borrowed view of one bunch execution's inputs, plus the
+/// per-(photon, step) physics helpers.  Every float expression of the
+/// walk lives in exactly one method here, shared by the scalar reference
+/// and the batched engine — bit-divergence between the two would require
+/// the compiler to evaluate the *same* expression differently.
+pub(crate) struct Walk<'a> {
+    seed: u32,
+    source: [f32; 8],
+    r2: f32,
+    z0: f32,
+    dz: f32,
+    v_group: f32,
+    eps: f32,
+    media: &'a [f32],
+    doms: &'a [f32],
+    num_layers: usize,
+    num_doms: usize,
+    num_steps: u32,
+}
+
+impl<'a> Walk<'a> {
+    pub(crate) fn new(
+        meta: &VariantMeta,
+        inputs: &'a PhotonInputs,
+    ) -> Result<Walk<'a>, EngineError> {
+        let num_doms = meta.num_doms as usize;
+        let num_layers = meta.num_layers as usize;
+        if inputs.media.len() != num_layers * 4 {
+            return Err(EngineError(format!(
+                "media shape mismatch: {} != {} * 4",
+                inputs.media.len(),
+                num_layers
+            )));
+        }
+        if inputs.doms.len() != num_doms * 3 {
+            return Err(EngineError(format!(
+                "dom shape mismatch: {} != {} * 3",
+                inputs.doms.len(),
+                num_doms
+            )));
+        }
+        Ok(Walk {
+            seed: inputs.source[7] as u32,
+            source: inputs.source,
+            r2: inputs.params[0] * inputs.params[0],
+            z0: inputs.params[1],
+            dz: inputs.params[2],
+            v_group: inputs.params[3],
+            eps: inputs.params[4],
+            media: &inputs.media,
+            doms: &inputs.doms,
+            num_layers,
+            num_doms,
+            num_steps: meta.num_steps as u32,
+        })
+    }
+
+    #[inline]
+    pub(crate) fn num_doms(&self) -> usize {
+        self.num_doms
+    }
+
+    #[inline]
+    pub(crate) fn num_steps(&self) -> u32 {
+        self.num_steps
+    }
+
+    #[inline]
+    pub(crate) fn source_pos(&self) -> [f32; 3] {
+        [self.source[0], self.source[1], self.source[2]]
+    }
+
+    #[inline]
+    pub(crate) fn t0(&self) -> f32 {
+        self.source[6]
+    }
+
+    #[inline]
+    pub(crate) fn r2(&self) -> f32 {
+        self.r2
+    }
+
+    #[inline]
+    pub(crate) fn v_group(&self) -> f32 {
+        self.v_group
+    }
+
+    #[inline]
+    pub(crate) fn dom(&self, di: usize) -> [f32; 3] {
+        [
+            self.doms[di * 3],
+            self.doms[di * 3 + 1],
+            self.doms[di * 3 + 2],
+        ]
+    }
+
+    /// Initial isotropic direction (RNG streams 4/5 at step 0).
+    #[inline]
+    pub(crate) fn init_dir(&self, pid: u32) -> [f32; 3] {
+        let u_cos = uniform(self.seed, pid, 0, STREAM_INIT_COS);
+        let u_phi = uniform(self.seed, pid, 0, STREAM_INIT_PHI);
+        let cos_t = 1.0 - 2.0 * u_cos;
+        let sin_t = (1.0 - cos_t * cos_t).max(0.0).sqrt();
+        let phi = TWO_PI * u_phi;
+        [sin_t * phi.cos(), sin_t * phi.sin(), cos_t]
+    }
+
+    /// Ice layer index for depth `pz`.
+    #[inline]
+    pub(crate) fn layer(&self, pz: f32) -> usize {
+        (((self.z0 - pz) / self.dz).floor() as i64)
+            .clamp(0, self.num_layers as i64 - 1) as usize
+    }
+
+    /// Exponential step length in layer `li` (RNG stream 0).
+    #[inline]
+    pub(crate) fn step_length(&self, li: usize, pid: u32, k: u32) -> f32 {
+        let lam_s = self.media[li * 4];
+        let u_len = uniform(self.seed, pid, k, STREAM_LEN);
+        -lam_s * u_len.max(self.eps).ln()
+    }
+
+    /// Did the photon survive absorption over a step of length `d`
+    /// (RNG stream 1)?
+    #[inline]
+    pub(crate) fn survives(&self, li: usize, d: f32, pid: u32, k: u32) -> bool {
+        let lam_a = self.media[li * 4 + 1];
+        let u_abs = uniform(self.seed, pid, k, STREAM_ABSORB);
+        u_abs < (-d / lam_a).exp()
+    }
+
+    /// Scatter `dir` by a Henyey-Greenstein deflection (RNG streams 2/3).
+    #[inline]
+    pub(crate) fn scatter(&self, li: usize, dir: [f32; 3], pid: u32, k: u32) -> [f32; 3] {
+        let g = self.media[li * 4 + 2];
+        let u_cos = uniform(self.seed, pid, k, STREAM_COS);
+        let u_phi = uniform(self.seed, pid, k, STREAM_PHI);
+        rotate_dir(dir, hg_cos_theta(g, u_cos), TWO_PI * u_phi)
+    }
+
+    /// Earliest DOM hit along a step: `(t_along, dom)` or `(inf, NO_DOM)`.
+    /// Ascending DOM order with a strict `<` keeps ties on the lowest
+    /// index, exactly like the oracle's `argmin`.
+    #[inline]
+    pub(crate) fn first_hit(&self, pos: [f32; 3], dir: [f32; 3], d: f32) -> (f32, u32) {
+        let mut best_t = f32::INFINITY;
+        let mut best_dom = NO_DOM;
+        for di in 0..self.num_doms {
+            let (ta, dist2) = segment_test(self.dom(di), pos, dir, d);
+            if dist2 <= self.r2 && ta < best_t {
+                best_t = ta;
+                best_dom = di as u32;
+            }
+        }
+        (best_t, best_dom)
+    }
+
+    /// The scalar reference walk of one photon — the oracle the batched
+    /// engine is pinned against (`rust/tests/engine_parity.rs`).
+    pub(crate) fn walk_photon(&self, pid: u32) -> PhotonOutcome {
+        let mut pos = self.source_pos();
+        let mut t = self.t0();
+        let mut dir = self.init_dir(pid);
+        let mut path = 0.0f64;
+        for k in 0..self.num_steps {
+            let li = self.layer(pos[2]);
+            let d = self.step_length(li, pid, k);
+
+            // detection beats absorption within the same step
+            let (best_t, best_dom) = self.first_hit(pos, dir, d);
+            if best_dom != NO_DOM {
+                return PhotonOutcome {
+                    status: ST_DETECTED,
+                    dom: best_dom,
+                    steps: k + 1,
+                    path: path + best_t as f64,
+                    hit_time: (t + best_t / self.v_group) as f64,
+                };
+            }
+
+            for i in 0..3 {
+                pos[i] += dir[i] * d;
+            }
+            t += d / self.v_group;
+            path += d as f64;
+
+            if !self.survives(li, d, pid, k) {
+                return PhotonOutcome {
+                    status: ST_ABSORBED,
+                    dom: NO_DOM,
+                    steps: k + 1,
+                    path,
+                    hit_time: 0.0,
+                };
+            }
+            dir = self.scatter(li, dir, pid, k);
+        }
+        PhotonOutcome {
+            status: ST_ALIVE,
+            dom: NO_DOM,
+            steps: self.num_steps,
+            path,
+            hit_time: 0.0,
+        }
+    }
+}
+
 // ---- results ---------------------------------------------------------------
 
 /// Result of one artifact execution (one photon bunch).
@@ -118,169 +439,72 @@ impl BunchResult {
 /// A compiled photon-propagation executable.
 ///
 /// "Compilation" for the native engine is metadata validation — the MC
-/// walk interprets the variant parameters directly.
+/// walk interprets the variant parameters directly.  [`run`] executes
+/// through the batched SoA engine with this executable's [`ExecPlan`];
+/// [`run_scalar`] is the reference implementation.
+///
+/// [`run`]: PhotonExecutable::run
+/// [`run_scalar`]: PhotonExecutable::run_scalar
 pub struct PhotonExecutable {
     pub meta: VariantMeta,
+    plan: ExecPlan,
 }
 
 impl PhotonExecutable {
     /// Build an executable straight from variant metadata (no artifact
     /// directory needed — used by tests and synthetic benchmarks).
     pub fn from_meta(meta: VariantMeta) -> Result<Self, EngineError> {
-        if meta.num_photons == 0 || meta.num_doms == 0 || meta.num_layers == 0
-        {
+        if meta.num_photons == 0 || meta.num_doms == 0 || meta.num_layers == 0 {
             return Err(EngineError(format!(
                 "variant '{}' has a degenerate shape",
                 meta.name
             )));
         }
-        Ok(PhotonExecutable { meta })
+        Ok(PhotonExecutable { meta, plan: ExecPlan::default() })
     }
 
-    /// Execute one bunch with the given inputs.
+    /// Replace the execution plan (threads / bunch size).  Plans change
+    /// wall time only, never results.
+    pub fn with_plan(mut self, plan: ExecPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// The plan [`run`](PhotonExecutable::run) executes with.
+    pub fn plan(&self) -> ExecPlan {
+        self.plan
+    }
+
+    /// Execute one bunch with the given inputs (batched engine, this
+    /// executable's plan).
     pub fn run(&self, inputs: &PhotonInputs) -> Result<BunchResult, EngineError> {
+        batch::run_batched(&self.meta, inputs, self.plan)
+    }
+
+    /// Execute one bunch with an explicit plan.
+    pub fn run_with_plan(
+        &self,
+        inputs: &PhotonInputs,
+        plan: ExecPlan,
+    ) -> Result<BunchResult, EngineError> {
+        batch::run_batched(&self.meta, inputs, plan)
+    }
+
+    /// Execute one bunch through the scalar reference walk.  This is the
+    /// correctness oracle for the batched engine (and the bit-mirror of
+    /// `python/compile/kernels/ref.py`); it is kept unconditionally
+    /// compiled so benches and `icecloud parity` can reach it too.
+    pub fn run_scalar(&self, inputs: &PhotonInputs) -> Result<BunchResult, EngineError> {
         let t0 = std::time::Instant::now();
-        let num_doms = self.meta.num_doms as usize;
-        let num_layers = self.meta.num_layers as usize;
-        if inputs.media.len() != num_layers * 4 {
-            return Err(EngineError(format!(
-                "media shape mismatch: {} != {} * 4",
-                inputs.media.len(),
-                num_layers
-            )));
-        }
-        if inputs.doms.len() != num_doms * 3 {
-            return Err(EngineError(format!(
-                "dom shape mismatch: {} != {} * 3",
-                inputs.doms.len(),
-                num_doms
-            )));
-        }
-
-        let seed = inputs.source[7] as u32;
-        let r2 = inputs.params[0] * inputs.params[0];
-        let z0 = inputs.params[1];
-        let dz = inputs.params[2];
-        let v_group = inputs.params[3];
-        let eps = inputs.params[4];
-
-        let mut hits = vec![0.0f32; num_doms];
-        let (mut n_det, mut n_abs, mut n_alive) = (0u64, 0u64, 0u64);
-        let mut path_sum = 0.0f64;
-        let mut hit_time_sum = 0.0f64;
-        let mut alive_steps = 0.0f64;
-
-        for p in 0..self.meta.num_photons {
-            let pid = p as u32;
-            let mut pos =
-                [inputs.source[0], inputs.source[1], inputs.source[2]];
-            let mut t = inputs.source[6];
-
-            // initial isotropic direction (RNG streams 4/5 at step 0)
-            let u_cos = uniform(seed, pid, 0, STREAM_INIT_COS);
-            let u_phi = uniform(seed, pid, 0, STREAM_INIT_PHI);
-            let cos_t = 1.0 - 2.0 * u_cos;
-            let sin_t = (1.0 - cos_t * cos_t).max(0.0).sqrt();
-            let phi = TWO_PI * u_phi;
-            let mut dir = [sin_t * phi.cos(), sin_t * phi.sin(), cos_t];
-
-            // status: 0 = alive, 1 = absorbed, 2 = detected
-            let mut status = 0u8;
-
-            for k in 0..self.meta.num_steps as u32 {
-                if status != 0 {
-                    break;
-                }
-                alive_steps += 1.0;
-
-                let li = (((z0 - pos[2]) / dz).floor() as i64)
-                    .clamp(0, num_layers as i64 - 1)
-                    as usize;
-                let lam_s = inputs.media[li * 4];
-                let lam_a = inputs.media[li * 4 + 1];
-                let g = inputs.media[li * 4 + 2];
-
-                let u_len = uniform(seed, pid, k, STREAM_LEN);
-                let u_abs = uniform(seed, pid, k, STREAM_ABSORB);
-                let u_cos = uniform(seed, pid, k, STREAM_COS);
-                let u_phi = uniform(seed, pid, k, STREAM_PHI);
-
-                let d = -lam_s * u_len.max(eps).ln();
-
-                // segment–DOM closest approach; earliest hit wins
-                let mut best_t = f32::INFINITY;
-                let mut best_dom = usize::MAX;
-                for di in 0..num_doms {
-                    let rel = [
-                        inputs.doms[di * 3] - pos[0],
-                        inputs.doms[di * 3 + 1] - pos[1],
-                        inputs.doms[di * 3 + 2] - pos[2],
-                    ];
-                    let ta = (rel[0] * dir[0]
-                        + rel[1] * dir[1]
-                        + rel[2] * dir[2])
-                        .clamp(0.0, d);
-                    let diff = [
-                        rel[0] - ta * dir[0],
-                        rel[1] - ta * dir[1],
-                        rel[2] - ta * dir[2],
-                    ];
-                    let dist2 = diff[0] * diff[0]
-                        + diff[1] * diff[1]
-                        + diff[2] * diff[2];
-                    if dist2 <= r2 && ta < best_t {
-                        best_t = ta;
-                        best_dom = di;
-                    }
-                }
-
-                if best_dom != usize::MAX {
-                    // detection beats absorption within the same step
-                    status = 2;
-                    n_det += 1;
-                    hits[best_dom] += 1.0;
-                    hit_time_sum += (t + best_t / v_group) as f64;
-                    for i in 0..3 {
-                        pos[i] += dir[i] * best_t;
-                    }
-                    t += best_t / v_group;
-                    path_sum += best_t as f64;
-                    continue;
-                }
-
-                for i in 0..3 {
-                    pos[i] += dir[i] * d;
-                }
-                t += d / v_group;
-                path_sum += d as f64;
-
-                let survived = u_abs < (-d / lam_a).exp();
-                if !survived {
-                    status = 1;
-                    n_abs += 1;
-                    continue;
-                }
-
-                let cos_s = hg_cos_theta(g, u_cos);
-                dir = rotate_dir(dir, cos_s, TWO_PI * u_phi);
-            }
-
-            if status == 0 {
-                n_alive += 1;
-            }
-        }
-
-        let summary = [
-            n_det as f32,
-            n_abs as f32,
-            n_alive as f32,
-            path_sum as f32,
-            hit_time_sum as f32,
-            alive_steps as f32,
-            0.0,
-            0.0,
-        ];
-        Ok(BunchResult { hits, summary, wall_s: t0.elapsed().as_secs_f64() })
+        let walk = Walk::new(&self.meta, inputs)?;
+        let outcomes: Vec<PhotonOutcome> = (0..self.meta.num_photons as usize)
+            .map(|p| walk.walk_photon(p as u32))
+            .collect();
+        Ok(reduce_outcomes(
+            &outcomes,
+            walk.num_doms(),
+            t0.elapsed().as_secs_f64(),
+        ))
     }
 
     /// Execute with default geometry/ice and the given seed.
@@ -321,9 +545,7 @@ impl PhotonEngine {
         let v = self
             .meta
             .variant(variant)
-            .ok_or_else(|| {
-                EngineError(format!("unknown variant '{variant}'"))
-            })?
+            .ok_or_else(|| EngineError(format!("unknown variant '{variant}'")))?
             .clone();
         PhotonExecutable::from_meta(v)
     }
@@ -403,6 +625,16 @@ mod tests {
     }
 
     #[test]
+    fn batched_default_plan_matches_scalar_reference() {
+        let exe = PhotonExecutable::from_meta(tiny_meta()).unwrap();
+        let inputs = build_inputs(&exe.meta, 21, true);
+        let scalar = exe.run_scalar(&inputs).unwrap();
+        let batched = exe.run(&inputs).unwrap();
+        assert_eq!(scalar.hits, batched.hits);
+        assert_eq!(scalar.summary, batched.summary);
+    }
+
+    #[test]
     fn counter_rng_matches_python_reference_values() {
         // uniform() is an exact multiple of 2^-24 in [0, 1)
         for (pid, step, stream) in [(0, 0, 0), (1, 3, 2), (4096, 63, 5)] {
@@ -449,6 +681,31 @@ mod tests {
         let mut inputs = build_inputs(&exe.meta, 1, true);
         inputs.doms.pop();
         assert!(exe.run(&inputs).is_err());
+        assert!(exe.run_scalar(&inputs).is_err());
+    }
+
+    #[test]
+    fn outcome_fold_is_the_summary_contract() {
+        // two hand-built outcomes fold to the documented summary layout
+        let outcomes = [
+            PhotonOutcome {
+                status: ST_DETECTED,
+                dom: 1,
+                steps: 3,
+                path: 10.0,
+                hit_time: 7.5,
+            },
+            PhotonOutcome {
+                status: ST_ABSORBED,
+                dom: NO_DOM,
+                steps: 2,
+                path: 4.0,
+                hit_time: 0.0,
+            },
+        ];
+        let r = reduce_outcomes(&outcomes, 3, 1e-6);
+        assert_eq!(r.hits, vec![0.0, 1.0, 0.0]);
+        assert_eq!(r.summary[0..6], [1.0, 1.0, 0.0, 14.0, 7.5, 5.0]);
     }
 
     // The remaining tests exercise real artifacts and are skipped when

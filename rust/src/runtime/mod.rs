@@ -4,13 +4,17 @@
 //! simulation/serving time.  The execution backend is a deterministic
 //! native Monte-Carlo engine that mirrors the Python oracle
 //! (`python/compile/kernels/ref.py`) including its stateless counter
-//! RNG; see `engine` and DESIGN.md §9 for how this substitutes for the
-//! PJRT CPU client in the hermetic build.
+//! RNG; see `engine` (the physics + scalar reference), `batch` (the
+//! batched SoA executor behind [`PhotonExecutable::run`]) and DESIGN.md
+//! §9/§13 for how this substitutes for the PJRT CPU client in the
+//! hermetic build.
 
 pub mod artifact;
+pub mod batch;
 pub mod engine;
 
-pub use artifact::{ArtifactMeta, PhotonInputs, VariantMeta};
+pub use artifact::{build_inputs, ArtifactMeta, PhotonInputs, VariantMeta};
+pub use batch::{available_threads, ExecPlan};
 pub use engine::{BunchResult, PhotonEngine, PhotonExecutable};
 
 /// Error raised by the photon runtime (metadata, shapes, execution).

@@ -24,6 +24,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ReplayPool {
     tx: Option<mpsc::Sender<Job>>,
     depth: Arc<AtomicUsize>,
+    threads: usize,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -46,12 +47,17 @@ impl ReplayPool {
                 depth.fetch_sub(1, Ordering::Relaxed);
             }));
         }
-        ReplayPool { tx: Some(tx), depth, workers }
+        ReplayPool { tx: Some(tx), depth, threads, workers }
     }
 
     /// Jobs queued or running.
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Concurrent replay workers.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn execute(&self, job: impl FnOnce() + Send + 'static) {
@@ -80,7 +86,13 @@ impl ReplayPool {
         let slots: Arc<Vec<Mutex<Option<ScenarioSummary>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
         let latch = Arc::new((Mutex::new(n), Condvar::new()));
-        let base = Arc::new(base.clone());
+        // nested-parallelism budget: all pool workers together may use
+        // at most the machine (workers × engine threads ≤ cores); the
+        // clamp never changes rows, results are engine-thread-invariant
+        let mut base = base.clone();
+        base.engine
+            .clamp_threads(runner::engine_thread_budget(self.threads));
+        let base = Arc::new(base);
 
         for (i, scenario) in scenarios.iter().cloned().enumerate() {
             let slots = Arc::clone(&slots);
@@ -189,6 +201,12 @@ mod tests {
             .run_matrix(&tiny_base(), &[])
             .unwrap()
             .is_empty());
+    }
+
+    #[test]
+    fn pool_reports_thread_count() {
+        assert_eq!(ReplayPool::new(3).threads(), 3);
+        assert_eq!(ReplayPool::new(0).threads(), 1);
     }
 
     #[test]

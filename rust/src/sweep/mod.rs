@@ -24,4 +24,6 @@ pub mod matrix;
 pub mod runner;
 
 pub use matrix::{builtin_matrix, parse_spec, parse_spec_json};
-pub use runner::{run_matrix, run_scenario, summarize, ScenarioSummary};
+pub use runner::{
+    engine_thread_budget, run_matrix, run_scenario, summarize, ScenarioSummary,
+};

@@ -100,15 +100,31 @@ pub fn run_scenario(
     summarize(&scenario.name, &cfg, &result)
 }
 
+/// Engine threads each of `workers` concurrent replays may use without
+/// oversubscribing the machine: `workers × engine-threads ≤ cores`
+/// (minimum 1).  Both parallel drivers — [`run_matrix`] here and the
+/// server's `ReplayPool` — clamp the base config's
+/// [`engine`](CampaignConfig::engine) knob through this before fanning
+/// out, so a sweep of N scenarios with real compute enabled cannot
+/// explode into N × cores photon threads.
+pub fn engine_thread_budget(workers: usize) -> usize {
+    (crate::runtime::available_threads() / workers.max(1)).max(1)
+}
+
 /// Replay every scenario of the matrix against `base` on up to
 /// `threads` worker threads; returns one summary per scenario, in
-/// matrix order, independent of thread count.
+/// matrix order, independent of thread count.  The base config's
+/// engine threads are clamped to the nested-parallelism budget
+/// (results are engine-thread-invariant, so this never changes rows).
 pub fn run_matrix(
     base: &CampaignConfig,
     scenarios: &[ScenarioConfig],
     threads: usize,
 ) -> Vec<ScenarioSummary> {
     let workers = threads.max(1).min(scenarios.len().max(1));
+    let mut base = base.clone();
+    base.engine.clamp_threads(engine_thread_budget(workers));
+    let base = &base;
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<ScenarioSummary>>> =
         (0..scenarios.len()).map(|_| Mutex::new(None)).collect();
@@ -196,6 +212,32 @@ mod tests {
     #[test]
     fn empty_matrix_is_empty() {
         assert!(run_matrix(&small_base(), &[], 4).is_empty());
+    }
+
+    #[test]
+    fn engine_budget_divides_cores_among_workers() {
+        let cores = crate::runtime::available_threads();
+        assert_eq!(engine_thread_budget(1), cores);
+        assert_eq!(engine_thread_budget(cores), 1);
+        // more workers than cores still leaves one engine thread each
+        assert_eq!(engine_thread_budget(cores * 4), 1);
+        assert_eq!(engine_thread_budget(0), cores);
+        // the invariant the budget encodes: workers × engine ≤ cores
+        for workers in 1..=cores * 2 {
+            assert!(workers * engine_thread_budget(workers) <= cores.max(workers));
+        }
+    }
+
+    #[test]
+    fn engine_threads_do_not_change_rows() {
+        let mut loud = small_base();
+        loud.engine.threads = 64; // clamped inside run_matrix
+        let quiet = small_base();
+        let scenarios = [ScenarioConfig::named("x")];
+        assert_eq!(
+            run_matrix(&loud, &scenarios, 2),
+            run_matrix(&quiet, &scenarios, 2)
+        );
     }
 
     #[test]

@@ -40,6 +40,20 @@ impl Args {
         self.get(name).and_then(|s| s.parse().ok())
     }
 
+    /// Strict numeric option: absent is `Ok(None)`, present-but-
+    /// malformed is an error — a mistyped value must never silently
+    /// run a default (the contract `config::apply_toml` enforces for
+    /// TOML knobs).  New numeric flags should prefer this over
+    /// [`get_u64`](Args::get_u64), whose `parse().ok()` drops garbage.
+    pub fn require_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<u64>().map(Some).map_err(|_| {
+                format!("--{name} must be an unsigned integer (got '{raw}')")
+            }),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -61,8 +75,12 @@ impl Command {
         Command { name, about, opts: Vec::new() }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str,
-               default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.opts.push(OptSpec { name, help, takes_value: true, default });
         self
     }
@@ -156,6 +174,18 @@ mod tests {
         assert_eq!(a.get("seed"), Some("42"));
         assert_eq!(a.get("out"), None);
         assert!(!a.flag("real-compute"));
+    }
+
+    #[test]
+    fn require_u64_is_strict() {
+        let a = cmd().parse(&argv(&["--seed", "7"])).unwrap();
+        assert_eq!(a.require_u64("seed").unwrap(), Some(7));
+        // absent (no default) is None, not an error
+        assert_eq!(a.require_u64("out").unwrap(), None);
+        // present-but-malformed must error, never silently default
+        let a = cmd().parse(&argv(&["--seed", "3oo"])).unwrap();
+        let err = a.require_u64("seed").unwrap_err();
+        assert!(err.contains("--seed") && err.contains("3oo"), "{err}");
     }
 
     #[test]

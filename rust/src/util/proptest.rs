@@ -86,6 +86,9 @@ pub fn shrink_u64(v: &u64) -> Vec<u64> {
 }
 
 /// Shrink a vec by dropping halves, then single elements.
+// &Vec (not &[T]): the signature must match `Fn(&T) -> Vec<T>` with
+// `T = Vec<_>` so it can be passed straight to `forall` as a shrinker.
+#[allow(clippy::ptr_arg)]
 pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
     let mut out = Vec::new();
     let n = v.len();

@@ -298,8 +298,7 @@ regions = ["eastus", "westeurope"]
     #[test]
     fn string_escapes() {
         let v = parse(r#"s = "line1\nline2\t\"q\"""#).unwrap();
-        assert_eq!(v.get_path(&["s"]).unwrap().as_str(),
-                   Some("line1\nline2\t\"q\""));
+        assert_eq!(v.get_path(&["s"]).unwrap().as_str(), Some("line1\nline2\t\"q\""));
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Bit-exactness of the batched SoA photon engine against the scalar
+//! reference walk, across seeds, shapes, bunch sizes and thread counts.
+//!
+//! This is the determinism contract of DESIGN.md §13: a photon's walk
+//! is a pure function of `(inputs, pid)` (stateless counter RNG, shared
+//! per-step helpers), and the summary is a pid-ordered fold of the
+//! per-photon outcomes — so *any* execution plan must reproduce the
+//! scalar oracle to the bit.  `tools/parity_check.py` extends the same
+//! chain one language further, to `python/compile/kernels/ref.py`.
+
+use icecloud::runtime::{build_inputs, ExecPlan, PhotonExecutable, VariantMeta};
+use icecloud::util::proptest::{ensure, forall, no_shrink};
+
+fn meta(photons: u64, doms: u64, steps: u64) -> VariantMeta {
+    VariantMeta {
+        name: format!("parity-{photons}x{doms}x{steps}"),
+        file: "synthetic".into(),
+        num_photons: photons,
+        block: 128,
+        num_doms: doms,
+        num_steps: steps,
+        num_layers: 10,
+        flops_estimate: 1.0,
+    }
+}
+
+/// The plans every property is checked under: degenerate bunches,
+/// bunches that straddle chunk boundaries, more threads than photons.
+const PLANS: [(usize, usize); 7] = [
+    (1, 0),
+    (1, 1),
+    (1, 37),
+    (2, 64),
+    (3, 19),
+    (8, 5),
+    (0, 0), // auto threads, default bunch
+];
+
+#[test]
+fn batched_is_bit_identical_to_scalar_across_shapes() {
+    forall(
+        "batched==scalar",
+        0xC0FFEE,
+        25,
+        |r| {
+            (
+                r.below(500) + 1, // photons
+                r.below(24) + 1,  // doms
+                r.below(40) + 1,  // steps
+                r.below(1 << 20), // seed
+            )
+        },
+        no_shrink,
+        |&(photons, doms, steps, seed)| {
+            let exe = PhotonExecutable::from_meta(meta(photons, doms, steps))
+                .expect("non-degenerate shape");
+            let inputs = build_inputs(&exe.meta, seed as u32, true);
+            let scalar = exe.run_scalar(&inputs).expect("scalar reference runs");
+            for (threads, bunch) in PLANS {
+                let plan = ExecPlan { threads, bunch };
+                let batched = exe
+                    .run_with_plan(&inputs, plan)
+                    .expect("batched engine runs");
+                ensure(
+                    batched.hits == scalar.hits,
+                    format!("hits diverge under {plan:?} (seed {seed})"),
+                )?;
+                ensure(
+                    batched.summary == scalar.summary,
+                    format!(
+                        "summary diverges under {plan:?} (seed {seed}): \
+                         {:?} != {:?}",
+                        batched.summary, scalar.summary
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn thread_count_is_unobservable() {
+    // a scaled-down cousin of the artifact "default" shape (the full
+    // 4096 x 64 x 60 walk is a bench, not a debug-profile unit test)
+    let exe = PhotonExecutable::from_meta(meta(1024, 24, 32)).unwrap();
+    for seed in [0u32, 7, 20210921] {
+        let inputs = build_inputs(&exe.meta, seed, true);
+        let one = exe
+            .run_with_plan(&inputs, ExecPlan { threads: 1, bunch: 4096 })
+            .unwrap();
+        for threads in [2usize, 3, 8] {
+            for bunch in [100usize, 4096] {
+                let many = exe
+                    .run_with_plan(&inputs, ExecPlan { threads, bunch })
+                    .unwrap();
+                assert_eq!(one.hits, many.hits, "threads={threads} bunch={bunch}");
+                assert_eq!(
+                    one.summary, many.summary,
+                    "threads={threads} bunch={bunch}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_conserves_photons_under_every_plan() {
+    let exe = PhotonExecutable::from_meta(meta(777, 12, 33)).unwrap();
+    let inputs = build_inputs(&exe.meta, 99, true);
+    for (threads, bunch) in PLANS {
+        let r = exe
+            .run_with_plan(&inputs, ExecPlan { threads, bunch })
+            .unwrap();
+        let total = r.summary[0] + r.summary[1] + r.summary[2];
+        assert_eq!(total as u64, exe.meta.num_photons);
+        assert_eq!(r.total_hits(), r.detected());
+    }
+}
+
+#[test]
+fn default_plan_is_single_threaded_batched() {
+    let exe = PhotonExecutable::from_meta(meta(64, 4, 8)).unwrap();
+    assert_eq!(exe.plan(), ExecPlan::default());
+    assert_eq!(ExecPlan::default().threads, 1);
+    let inputs = build_inputs(&exe.meta, 5, true);
+    assert_eq!(
+        exe.run(&inputs).unwrap().summary,
+        exe.run_with_plan(&inputs, ExecPlan::default()).unwrap().summary
+    );
+}
+
+#[test]
+fn with_plan_changes_wall_clock_only() {
+    let exe = PhotonExecutable::from_meta(meta(2048, 30, 48))
+        .unwrap()
+        .with_plan(ExecPlan { threads: 4, bunch: 100 });
+    assert_eq!(exe.plan(), ExecPlan { threads: 4, bunch: 100 });
+    let a = exe.run_seeded(3).unwrap();
+    let b = exe
+        .with_plan(ExecPlan { threads: 1, bunch: 0 })
+        .run_seeded(3)
+        .unwrap();
+    assert_eq!(a.hits, b.hits);
+    assert_eq!(a.summary, b.summary);
+}
+
+#[test]
+fn single_photon_bunch_works_under_threads() {
+    // thread chunking must clamp to the photon count
+    let exe = PhotonExecutable::from_meta(meta(1, 3, 5)).unwrap();
+    let inputs = build_inputs(&exe.meta, 1, true);
+    let scalar = exe.run_scalar(&inputs).unwrap();
+    let batched = exe
+        .run_with_plan(&inputs, ExecPlan { threads: 32, bunch: 4096 })
+        .unwrap();
+    assert_eq!(scalar.summary, batched.summary);
+}

@@ -1,8 +1,7 @@
 //! Cross-module integration tests: the whole stack composed through the
 //! public API, at reduced scale.
 
-use icecloud::config::{CampaignConfig, OutageSpec, PolicyMode, ProviderWeights,
-                       RampStep};
+use icecloud::config::{CampaignConfig, OutageSpec, PolicyMode, ProviderWeights, RampStep};
 use icecloud::coordinator::Campaign;
 use icecloud::experiments::{fig1, fig2, headline};
 use icecloud::sim::{DAY, HOUR, MINUTE};

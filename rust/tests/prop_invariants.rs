@@ -253,8 +253,7 @@ fn prop_negotiation_no_double_booking() {
                     0,
                 );
             }
-            let r = negotiate(&schedd, &startds, startds.keys().copied(),
-                              usize::MAX);
+            let r = negotiate(&schedd, &startds, startds.keys().copied(), usize::MAX);
             // no slot or job appears twice
             let mut slots_seen = std::collections::HashSet::new();
             let mut jobs_seen = std::collections::HashSet::new();

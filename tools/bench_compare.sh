@@ -1,0 +1,114 @@
+#!/usr/bin/env sh
+# Gate a fresh benchmark run against the committed trajectory.
+#
+#   tools/bench_compare.sh <committed BENCH_pr<N>.json> <fresh.json>
+#
+# Both files are JSON lines as written by tools/bench_baseline.sh: one
+# `meta` line, then one line per benchmark ({bench, mean_s, throughput?,
+# unit?, ...} from util::bench BENCHJSON output).  The gate fails when:
+#
+#   * a benchmark with measured baseline numbers regresses by more than
+#     ICECLOUD_BENCH_TOL (default 0.25): throughput down >25%, or — for
+#     the cold-replay latency bench — mean_s up >25%;
+#   * a measured baseline benchmark disappeared from the fresh run
+#     (renames must update the committed trajectory);
+#   * the fresh run's batched photon engine is not at least
+#     ICECLOUD_MIN_SPEEDUP (default 2.0) times the scalar walk —
+#     the machine-independent claim of DESIGN.md §13, checked on
+#     whatever runner executed the fresh benches.
+#
+# Baseline lines with null metrics (committed from a machine that could
+# not measure, see BENCH_pr2.json) are recorded schema, not a gate; they
+# are skipped with a notice.
+set -eu
+
+if [ $# -ne 2 ]; then
+    echo "usage: tools/bench_compare.sh <committed.json> <fresh.json>" >&2
+    exit 2
+fi
+
+python3 - "$1" "$2" "${ICECLOUD_BENCH_TOL:-0.25}" \
+    "${ICECLOUD_MIN_SPEEDUP:-2.0}" <<'PYEOF'
+import json
+import sys
+
+committed_path, fresh_path, tol_s, min_speedup_s = sys.argv[1:5]
+tol = float(tol_s)
+min_speedup = float(min_speedup_s)
+
+# benches gated on latency (mean_s) as well as throughput
+LATENCY_GATED = {"serve/sweep-cold-replay"}
+
+
+def load(path):
+    meta, benches = {}, {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            doc = json.loads(line)
+            if "meta" in doc:
+                meta = doc["meta"]
+            elif "bench" in doc:
+                benches[doc["bench"]] = doc
+    return meta, benches
+
+
+base_meta, base = load(committed_path)
+_, fresh = load(fresh_path)
+failures, skipped = [], 0
+
+for name, b in sorted(base.items()):
+    if b.get("mean_s") is None:
+        skipped += 1
+        continue
+    f = fresh.get(name)
+    if f is None:
+        # mirror/* lines come from the Python harness
+        # (tools/bench_mirror.py); a Rust-native fresh run will not
+        # have them, and cross-harness numbers must never be compared
+        if name.startswith("mirror/"):
+            skipped += 1
+            continue
+        failures.append(f"{name}: in {committed_path} but missing from "
+                        f"the fresh run (rename the trajectory entry too)")
+        continue
+    btp, ftp = b.get("throughput"), f.get("throughput")
+    if btp and ftp is not None:
+        floor = btp * (1.0 - tol)
+        if ftp < floor:
+            failures.append(
+                f"{name}: throughput {ftp:.3g} {f.get('unit', '')}/s < "
+                f"{floor:.3g} (baseline {btp:.3g}, tol {tol:.0%})")
+    if name in LATENCY_GATED and f.get("mean_s") is not None:
+        ceil = b["mean_s"] * (1.0 + tol)
+        if f["mean_s"] > ceil:
+            failures.append(
+                f"{name}: mean {f['mean_s']:.4g}s > {ceil:.4g}s "
+                f"(baseline {b['mean_s']:.4g}s, tol {tol:.0%})")
+
+# machine-independent speedup gate, evaluated on the fresh run alone
+scalar = fresh.get("engine/scalar", {}).get("throughput")
+batched = [(n, f["throughput"]) for n, f in fresh.items()
+           if n.startswith("engine/batched-") and f.get("throughput")]
+if scalar is None or not batched:
+    failures.append("fresh run is missing engine/scalar or engine/batched-* "
+                    "benches (cargo bench --bench sweep emits them)")
+else:
+    best_name, best = max(batched, key=lambda kv: kv[1])
+    ratio = best / scalar
+    verdict = "ok" if ratio >= min_speedup else "FAIL"
+    print(f"[bench-compare] speedup: {best_name} {best:.3g} photons/s vs "
+          f"engine/scalar {scalar:.3g} -> {ratio:.2f}x "
+          f"(need >= {min_speedup}x) {verdict}")
+    if ratio < min_speedup:
+        failures.append(
+            f"batched engine speedup {ratio:.2f}x < required {min_speedup}x")
+
+print(f"[bench-compare] {len(base)} baseline entries, {skipped} unmeasured "
+      f"(skipped), {len(failures)} failure(s)")
+for msg in failures:
+    print(f"  FAIL {msg}", file=sys.stderr)
+sys.exit(1 if failures else 0)
+PYEOF

@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Measure the numpy engine mirror and emit a benchmark-trajectory file.
+
+The benchmark trajectory (BENCH_pr<N>.json at the repo root) is normally
+produced by `tools/bench_baseline.sh` from the Rust benches.  On a
+machine without a Rust toolchain — like the container this repository is
+grown in — this script provides the honest fallback: it measures the
+*numpy mirror* of the same engines (tools/engine_mirror.py, the code
+`tools/parity_check.py` pins against the jax oracle), clearly labels
+the lines `mirror/...`, and writes the Rust bench names with null
+metrics as recorded schema, exactly like BENCH_pr2.json did.
+
+The mirror numbers are real measurements of the same algorithms (scalar
+per-photon walk vs batched SoA with compaction, chunked over threads) —
+they demonstrate the batching claim — but they are *Python* numbers: do
+not compare them against Rust-native lines across files.  CI's
+bench-baseline job regenerates Rust-native numbers on every push and
+`tools/bench_compare.sh` gates the batched>=2x-scalar claim there.
+
+Usage:
+  python3 tools/bench_mirror.py --out BENCH_pr3.json --pr 3
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import engine_mirror as em
+
+# Rust bench names whose schema is recorded (null until a Rust-equipped
+# machine or the CI artifact fills them in).
+RUST_BENCHES = [
+    ("sweep/10-scenarios-1-threads", "replays"),
+    ("sweep/10-scenarios-2-threads", "replays"),
+    ("sweep/10-scenarios-4-threads", "replays"),
+    ("sweep/10-scenarios-8-threads", "replays"),
+    ("engine/scalar", "photons"),
+    ("engine/batched-1t", "photons"),
+    ("engine/batched-2t", "photons"),
+    ("engine/batched-4t", "photons"),
+    ("photon/small-bunch", "photons"),
+    ("photon/small-bunch-mt", "photons"),
+    ("photon/default-bunch", "photons"),
+    ("photon/default-bunch-mt", "photons"),
+    ("photon/large-bunch", "photons"),
+    ("photon/large-bunch-mt", "photons"),
+    ("photon/compile-small", None),
+    ("serve/sweep-cold-replay", "requests"),
+    ("serve/sweep-cached", "requests"),
+]
+
+
+def bench_line(name, samples, work=None, unit=None):
+    samples = sorted(samples)
+    n = len(samples)
+    mean = sum(samples) / n
+    var = sum((s - mean) ** 2 for s in samples) / n
+    line = {
+        "bench": name,
+        "mean_s": mean,
+        "std_s": var ** 0.5,
+        "p50_s": samples[n // 2],
+        "p95_s": samples[min(n - 1, int(0.95 * n))],
+        "samples": n,
+    }
+    if work is not None:
+        line["throughput"] = work / mean
+        line["unit"] = unit
+    return line
+
+
+def time_runs(fn, runs):
+    out = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def measure(variant, scalar_runs, batched_runs, threads):
+    v = em.VARIANTS[variant]
+    n, steps, doms = v["num_photons"], v["num_steps"], v["num_doms"]
+    src, med, dom, par = em.build_inputs(variant, seed=7)
+    lines = []
+
+    print(f"[bench-mirror] {variant}: {n} photons x {steps} steps x "
+          f"{doms} DOMs", file=sys.stderr)
+
+    lines.append(bench_line(
+        f"mirror/{variant}-scalar",
+        time_runs(lambda: em.scalar_outcomes(src, med, dom, par, n, steps),
+                  scalar_runs),
+        work=n, unit="photons"))
+    print(f"[bench-mirror]   scalar: {n / lines[-1]['mean_s']:.0f} photons/s",
+          file=sys.stderr)
+
+    lines.append(bench_line(
+        f"mirror/{variant}-batched-1t",
+        time_runs(lambda: em.batched_outcomes(src, med, dom, par, n, steps,
+                                              threads=1, bunch=4096),
+                  batched_runs),
+        work=n, unit="photons"))
+    print(f"[bench-mirror]   batched-1t: "
+          f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
+
+    def parallel_run():
+        out = em.empty_outcomes(n)
+        with ThreadPoolExecutor(max_workers=threads) as ex:
+            futs = [ex.submit(em.walk_chunk, src, med, dom, par, steps,
+                              start, size, 4096, out)
+                    for start, size in em.chunk_ranges(n, threads)]
+            for f in futs:
+                f.result()
+
+    lines.append(bench_line(
+        f"mirror/{variant}-batched-{threads}t",
+        time_runs(parallel_run, batched_runs),
+        work=n, unit="photons"))
+    print(f"[bench-mirror]   batched-{threads}t: "
+          f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_pr3.json")
+    ap.add_argument("--pr", type=int, default=3)
+    ap.add_argument("--variant", default="default")
+    ap.add_argument("--scalar-runs", type=int, default=3)
+    ap.add_argument("--batched-runs", type=int, default=10)
+    ap.add_argument("--threads", type=int, default=os.cpu_count() or 2)
+    args = ap.parse_args()
+
+    lines = measure(args.variant, args.scalar_runs, args.batched_runs,
+                    args.threads)
+    host = subprocess.run(["uname", "-sm"], capture_output=True,
+                          text=True, check=False).stdout.strip() or "unknown"
+    meta = {
+        "file": args.out,
+        "pr": args.pr,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "host": host,
+        "cores": os.cpu_count(),
+        "measured": True,
+        "harness": "tools/bench_mirror.py (numpy mirror of the Rust "
+                   "engines; authoring container has no Rust toolchain)",
+        "note": "mirror/* lines are measured Python-mirror numbers for "
+                "the scalar vs batched-SoA photon walk; Rust bench names "
+                "are recorded schema with null metrics until a "
+                "Rust-equipped machine runs tools/bench_baseline.sh (CI's "
+                "bench-baseline job measures + gates them on every push "
+                "via tools/bench_compare.sh). Do not compare mirror/* "
+                "against Rust-native lines.",
+        "regenerate": "tools/bench_baseline.sh (Rust) or "
+                      "tools/bench_mirror.py (mirror)",
+        "benches": ["sweep", "photon_engine", "serve"],
+    }
+    with open(args.out, "w") as f:
+        f.write(json.dumps({"meta": meta}) + "\n")
+        for line in lines:
+            f.write(json.dumps(line) + "\n")
+        for name, unit in RUST_BENCHES:
+            rec = {"bench": name, "mean_s": None, "std_s": None,
+                   "p50_s": None, "p95_s": None, "samples": 0}
+            if unit is not None:
+                rec["throughput"] = None
+                rec["unit"] = unit
+            f.write(json.dumps(rec) + "\n")
+
+    scalar = next(l for l in lines if l["bench"].endswith("-scalar"))
+    best = max((l for l in lines if "-batched-" in l["bench"]),
+               key=lambda l: l["throughput"])
+    ratio = best["throughput"] / scalar["throughput"]
+    print(f"[bench-mirror] wrote {args.out}; batched/scalar speedup "
+          f"{ratio:.1f}x ({best['bench']})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,447 @@
+"""Strict-fp32 numpy mirror of the Rust photon engine (scalar + batched SoA).
+
+This module exists because the Rust engine's correctness contract is
+cross-language: `rust/src/runtime/engine.rs` (scalar walk) and
+`rust/src/runtime/batch.rs` (batched SoA walk) both claim bit-identical
+per-DOM hit counts with the jax oracle `python/compile/kernels/ref.py`.
+The mirror implements the *Rust* op sequence in numpy float32, which lets
+a machine without a Rust toolchain (or a CI debugging session) check all
+three implementations against each other:
+
+  jax ref (`ref.propagate`)  <-- parity_check.py -->  this mirror
+                                    \\-- parity_check.py --> `icecloud parity`
+
+Semantics mirrored from the Rust engine:
+
+* stateless counter RNG: two lowbias32 rounds over
+  ``seed ^ pid*K_PID ^ step*K_STEP ^ stream*K_STREAM`` (uint32 wrap),
+  top 24 bits scaled by 2^-24;
+* per-step walk: step length, segment-DOM closest approach (earliest
+  hit wins, ties to the lowest DOM index), absorption, HG scatter;
+* per-photon outcomes (status, dom, f64 path, f64 hit time, steps)
+  reduced to the summary by a sequential fold in photon-id order, which
+  is what makes the batched engine bit-identical across bunch sizes and
+  thread counts.
+
+Pure Python loops are used for the scalar walk (slow, reference only)
+and vectorized numpy for the batched walk (the SoA algorithm, including
+order-preserving compaction and lazy scatter draws).
+"""
+
+import math
+
+import numpy as np
+
+F = np.float32
+TWO_PI = F(2.0 * math.pi)
+INV_2_24 = F(1.0 / (1 << 24))
+
+K_PID = 0x9E3779B9
+K_STEP = 0x85EBCA6B
+K_STREAM = 0xC2B2AE35
+U32 = 0xFFFFFFFF
+
+STREAM_LEN = 0
+STREAM_ABSORB = 1
+STREAM_COS = 2
+STREAM_PHI = 3
+STREAM_INIT_COS = 4
+STREAM_INIT_PHI = 5
+
+# Variant shape table mirrored from python/compile/geometry.py VARIANTS
+# (and from the `icecloud parity` built-in table).
+VARIANTS = {
+    "small": dict(num_photons=256, num_doms=16, num_steps=16, num_layers=10),
+    "default": dict(num_photons=4096, num_doms=60, num_steps=64, num_layers=10),
+    "large": dict(num_photons=16384, num_doms=240, num_steps=96, num_layers=10),
+}
+
+
+# ---- counter RNG ------------------------------------------------------------
+
+def _mix32_int(x):
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & U32
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & U32
+    x ^= x >> 16
+    return x
+
+
+def uniform_scalar(seed, pid, step, stream):
+    """One uniform, via exact Python-int u32 arithmetic."""
+    key = (seed ^ (pid * K_PID) ^ (step * K_STEP) ^ (stream * K_STREAM)) & U32
+    v = _mix32_int(_mix32_int(key))
+    return F(v >> 8) * INV_2_24
+
+
+def _mix32_vec(x):
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x7FEB352D)
+    x = x ^ (x >> np.uint32(15))
+    x = x * np.uint32(0x846CA68B)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def uniform_vec(seed, pid, step, stream):
+    """Vector of uniforms for a uint32 pid array (bitwise == scalar)."""
+    key = (np.uint32(seed)
+           ^ (pid * np.uint32(K_PID))
+           ^ np.uint32((step * K_STEP) & U32)
+           ^ np.uint32((stream * K_STREAM) & U32))
+    v = _mix32_vec(_mix32_vec(key))
+    return (v >> np.uint32(8)).astype(np.float32) * INV_2_24
+
+
+# ---- inputs (mirror of rust/src/runtime/artifact.rs build_inputs) -----------
+
+def build_inputs(variant, seed, dusty=True):
+    """(source, media, doms, params) float32 arrays for a variant name."""
+    v = VARIANTS[variant]
+    num_doms = v["num_doms"]
+    num_layers = v["num_layers"]
+    spacing = F(17.0)
+    if num_doms <= 80:
+        doms = np.zeros((num_doms, 3), dtype=np.float32)
+        doms[:, 2] = -spacing * np.arange(num_doms, dtype=np.float32)
+    else:
+        per = num_doms // 4
+        pitch = F(125.0)
+        parts = []
+        for ix in range(2):
+            for iy in range(2):
+                s = np.zeros((per, 3), dtype=np.float32)
+                s[:, 0] = F(ix) * pitch - pitch / F(2.0)
+                s[:, 1] = F(iy) * pitch - pitch / F(2.0)
+                s[:, 2] = -spacing * np.arange(per, dtype=np.float32)
+                parts.append(s)
+        doms = np.concatenate(parts, axis=0)[:num_doms]
+    media = np.zeros((num_layers, 4), dtype=np.float32)
+    media[:, 0] = 25.0
+    media[:, 1] = 100.0
+    media[:, 2] = 0.9
+    if dusty and num_layers >= 3:
+        mid = num_layers // 2
+        media[mid, 0] = 5.0
+        media[mid, 1] = 20.0
+    depth_span = spacing * F(num_doms + 4.0)
+    params = np.zeros(8, dtype=np.float32)
+    params[0] = F(0.16510) * F(12.0)
+    params[1] = 40.0
+    params[2] = depth_span / F(10.0)
+    params[3] = F(0.299792458) / F(1.35)
+    params[4] = 1e-7
+    mid_z = F(np.float32(doms[:, 2].sum()) / F(num_doms))
+    source = np.zeros(8, dtype=np.float32)
+    source[0] = 10.0
+    source[2] = mid_z
+    source[7] = F(seed)
+    return source, media, doms, params
+
+
+# ---- scalar walk (mirror of engine.rs walk_photon) --------------------------
+
+def _hg_cos_theta(g, u):
+    if abs(g) < F(1e-3):
+        return min(max(F(1.0) - F(2.0) * u, F(-1.0)), F(1.0))
+    frac = (F(1.0) - g * g) / (F(1.0) - g + F(2.0) * g * u)
+    val = (F(1.0) + g * g - frac * frac) / (F(2.0) * g)
+    return min(max(val, F(-1.0)), F(1.0))
+
+
+def _rotate_dir(d, cos_t, phi):
+    sign = F(1.0) if d[2] >= F(0.0) else F(-1.0)
+    a = F(-1.0) / (sign + d[2])
+    b = d[0] * d[1] * a
+    b1 = [F(1.0) + sign * d[0] * d[0] * a, sign * b, -sign * d[0]]
+    b2 = [b, sign + d[1] * d[1] * a, -d[1]]
+    sin_t = np.sqrt(max(F(1.0) - cos_t * cos_t, F(0.0)))
+    sp, cp = np.sin(phi), np.cos(phi)
+    nd = [sin_t * cp * b1[i] + sin_t * sp * b2[i] + cos_t * d[i]
+          for i in range(3)]
+    norm = max(np.sqrt(nd[0] * nd[0] + nd[1] * nd[1] + nd[2] * nd[2]),
+               F(1e-12))
+    return [nd[0] / norm, nd[1] / norm, nd[2] / norm]
+
+
+def scalar_outcomes(source, media, doms, params, num_photons, num_steps):
+    """Per-photon outcomes from the scalar reference walk.
+
+    Returns dict of arrays indexed by photon id: status (0 alive,
+    1 absorbed, 2 detected), dom (-1 when undetected), path (f64),
+    hit_time (f64), steps (int).
+    """
+    num_doms = doms.shape[0]
+    num_layers = media.shape[0]
+    seed = int(source[7])
+    r2 = params[0] * params[0]
+    z0, dz, v_group, eps = params[1], params[2], params[3], params[4]
+    status = np.zeros(num_photons, dtype=np.int8)
+    dom = np.full(num_photons, -1, dtype=np.int64)
+    path = np.zeros(num_photons, dtype=np.float64)
+    hit_time = np.zeros(num_photons, dtype=np.float64)
+    steps = np.zeros(num_photons, dtype=np.int64)
+    for p in range(num_photons):
+        pos = [source[0], source[1], source[2]]
+        t = source[6]
+        u_cos = uniform_scalar(seed, p, 0, STREAM_INIT_COS)
+        u_phi = uniform_scalar(seed, p, 0, STREAM_INIT_PHI)
+        cos_t = F(1.0) - F(2.0) * u_cos
+        sin_t = np.sqrt(max(F(1.0) - cos_t * cos_t, F(0.0)))
+        phi = TWO_PI * u_phi
+        dire = [sin_t * np.cos(phi), sin_t * np.sin(phi), cos_t]
+        st = 0
+        for k in range(num_steps):
+            if st != 0:
+                break
+            steps[p] += 1
+            li = int(np.floor((z0 - pos[2]) / dz))
+            li = min(max(li, 0), num_layers - 1)
+            lam_s, lam_a, g = media[li, 0], media[li, 1], media[li, 2]
+            u_len = uniform_scalar(seed, p, k, STREAM_LEN)
+            d = -lam_s * np.log(max(u_len, eps))
+            best_t, best_dom = F(np.inf), -1
+            for di in range(num_doms):
+                rel = [doms[di, 0] - pos[0], doms[di, 1] - pos[1],
+                       doms[di, 2] - pos[2]]
+                ta = rel[0] * dire[0] + rel[1] * dire[1] + rel[2] * dire[2]
+                ta = min(max(ta, F(0.0)), d)
+                diff = [rel[i] - ta * dire[i] for i in range(3)]
+                dist2 = (diff[0] * diff[0] + diff[1] * diff[1]
+                         + diff[2] * diff[2])
+                if dist2 <= r2 and ta < best_t:
+                    best_t, best_dom = ta, di
+            if best_dom >= 0:
+                st = 2
+                dom[p] = best_dom
+                hit_time[p] = float(t + best_t / v_group)
+                path[p] += float(best_t)
+                break
+            for i in range(3):
+                pos[i] = pos[i] + dire[i] * d
+            t = t + d / v_group
+            path[p] += float(d)
+            u_abs = uniform_scalar(seed, p, k, STREAM_ABSORB)
+            if not (u_abs < np.exp(-d / lam_a)):
+                st = 1
+                break
+            u_cos = uniform_scalar(seed, p, k, STREAM_COS)
+            u_phi = uniform_scalar(seed, p, k, STREAM_PHI)
+            cos_s = _hg_cos_theta(g, u_cos)
+            dire = _rotate_dir(dire, cos_s, TWO_PI * u_phi)
+        status[p] = st
+    return dict(status=status, dom=dom, path=path, hit_time=hit_time,
+                steps=steps)
+
+
+# ---- batched SoA walk (mirror of batch.rs walk_bunch) -----------------------
+
+def _hg_cos_theta_vec(g, u):
+    iso = np.clip(F(1.0) - F(2.0) * u, F(-1.0), F(1.0))
+    g_safe = np.where(np.abs(g) < F(1e-3), F(1.0), g)
+    frac = (F(1.0) - g_safe * g_safe) / (F(1.0) - g_safe + F(2.0) * g_safe * u)
+    hg = (F(1.0) + g_safe * g_safe - frac * frac) / (F(2.0) * g_safe)
+    return np.where(np.abs(g) < F(1e-3), iso, np.clip(hg, F(-1.0), F(1.0)))
+
+
+def _rotate_dir_vec(dx, dy, dz, cos_t, phi):
+    sign = np.where(dz >= F(0.0), F(1.0), F(-1.0))
+    a = F(-1.0) / (sign + dz)
+    b = dx * dy * a
+    b1 = (F(1.0) + sign * dx * dx * a, sign * b, -sign * dx)
+    b2 = (b, sign + dy * dy * a, -dy)
+    sin_t = np.sqrt(np.maximum(F(1.0) - cos_t * cos_t, F(0.0)))
+    sp, cp = np.sin(phi), np.cos(phi)
+    nx = sin_t * cp * b1[0] + sin_t * sp * b2[0] + cos_t * dx
+    ny = sin_t * cp * b1[1] + sin_t * sp * b2[1] + cos_t * dy
+    nz = sin_t * cp * b1[2] + sin_t * sp * b2[2] + cos_t * dz
+    norm = np.maximum(np.sqrt(nx * nx + ny * ny + nz * nz), F(1e-12))
+    return nx / norm, ny / norm, nz / norm
+
+
+def _walk_bunch(source, media, doms, params, num_steps, pid0, m, out):
+    """Walk photons [pid0, pid0+m) in one SoA bunch; fill `out` arrays."""
+    num_doms = doms.shape[0]
+    num_layers = media.shape[0]
+    seed = int(source[7])
+    r2 = params[0] * params[0]
+    z0, dz, v_group, eps = params[1], params[2], params[3], params[4]
+
+    pid = np.uint32(pid0) + np.arange(m, dtype=np.uint32)
+    px = np.full(m, source[0], dtype=np.float32)
+    py = np.full(m, source[1], dtype=np.float32)
+    pz = np.full(m, source[2], dtype=np.float32)
+    t = np.full(m, source[6], dtype=np.float32)
+    path = np.zeros(m, dtype=np.float64)
+
+    u_cos = uniform_vec(seed, pid, 0, STREAM_INIT_COS)
+    u_phi = uniform_vec(seed, pid, 0, STREAM_INIT_PHI)
+    cos_t = F(1.0) - F(2.0) * u_cos
+    sin_t = np.sqrt(np.maximum(F(1.0) - cos_t * cos_t, F(0.0)))
+    phi = TWO_PI * u_phi
+    dx, dy, dz_ = sin_t * np.cos(phi), sin_t * np.sin(phi), cos_t
+
+    for k in range(num_steps):
+        n = pid.shape[0]
+        if n == 0:
+            break
+        li = np.clip(np.floor((z0 - pz) / dz).astype(np.int64), 0,
+                     num_layers - 1)
+        lam_s, lam_a, g = media[li, 0], media[li, 1], media[li, 2]
+        u_len = uniform_vec(seed, pid, k, STREAM_LEN)
+        d = -lam_s * np.log(np.maximum(u_len, eps))
+
+        best_t = np.full(n, np.inf, dtype=np.float32)
+        best_dom = np.full(n, -1, dtype=np.int64)
+        for di in range(num_doms):
+            relx = doms[di, 0] - px
+            rely = doms[di, 1] - py
+            relz = doms[di, 2] - pz
+            ta = relx * dx + rely * dy + relz * dz_
+            ta = np.minimum(np.maximum(ta, F(0.0)), d)
+            ex = relx - ta * dx
+            ey = rely - ta * dy
+            ez = relz - ta * dz_
+            dist2 = ex * ex + ey * ey + ez * ez
+            better = (dist2 <= r2) & (ta < best_t)
+            best_t = np.where(better, ta, best_t)
+            best_dom = np.where(better, di, best_dom)
+
+        detected = best_dom >= 0
+        slots = (pid - np.uint32(pid0)).astype(np.int64)
+        dslots = slots[detected]
+        out["status"][dslots] = 2
+        out["dom"][dslots] = best_dom[detected]
+        out["hit_time"][dslots] = (t[detected]
+                                   + best_t[detected] / v_group).astype(
+                                       np.float64)
+        out["path"][dslots] = path[detected] + best_t[detected].astype(
+            np.float64)
+        out["steps"][dslots] = k + 1
+
+        # survivors of the DOM sweep move the full step
+        live = ~detected
+        px = px + dx * d
+        py = py + dy * d
+        pz = pz + dz_ * d
+        t = t + d / v_group
+        path = path + d.astype(np.float64)
+
+        u_abs = uniform_vec(seed, pid, k, STREAM_ABSORB)
+        survived = u_abs < np.exp(-d / lam_a)
+        absorbed = live & ~survived
+        aslots = slots[absorbed]
+        out["status"][aslots] = 1
+        out["path"][aslots] = path[absorbed]
+        out["steps"][aslots] = k + 1
+
+        alive = live & survived
+        u_cos = uniform_vec(seed, pid, k, STREAM_COS)
+        u_phi = uniform_vec(seed, pid, k, STREAM_PHI)
+        cos_s = _hg_cos_theta_vec(g, u_cos)
+        ndx, ndy, ndz = _rotate_dir_vec(dx, dy, dz_, cos_s,
+                                        TWO_PI * u_phi)
+        dx = np.where(alive, ndx, dx)
+        dy = np.where(alive, ndy, dy)
+        dz_ = np.where(alive, ndz, dz_)
+
+        # order-preserving compaction of terminated photons
+        pid = pid[alive]
+        px, py, pz = px[alive], py[alive], pz[alive]
+        dx, dy, dz_ = dx[alive], dy[alive], dz_[alive]
+        t, path = t[alive], path[alive]
+
+    slots = (pid - np.uint32(pid0)).astype(np.int64)
+    out["status"][slots] = 0
+    out["path"][slots] = path
+    out["steps"][slots] = num_steps
+
+
+def empty_outcomes(num_photons):
+    """Allocate the outcome arrays one bunch execution fills."""
+    return dict(
+        status=np.zeros(num_photons, dtype=np.int8),
+        dom=np.full(num_photons, -1, dtype=np.int64),
+        path=np.zeros(num_photons, dtype=np.float64),
+        hit_time=np.zeros(num_photons, dtype=np.float64),
+        steps=np.zeros(num_photons, dtype=np.int64),
+    )
+
+
+def chunk_ranges(num_photons, threads):
+    """Contiguous (start, size) pid ranges, first remainder one larger —
+    the same split rule as `batch.rs`."""
+    threads = max(1, min(threads, num_photons or 1))
+    base, rem = divmod(num_photons, threads)
+    ranges, start = [], 0
+    for c in range(threads):
+        size = base + (1 if c < rem else 0)
+        ranges.append((start, size))
+        start += size
+    return ranges
+
+
+def walk_chunk(source, media, doms, params, num_steps, start, size, bunch,
+               out):
+    """Walk photons [start, start+size) in SoA sub-bunches into `out`
+    (disjoint slices per chunk, so chunks may run concurrently)."""
+    bunch = max(1, bunch)
+    pid = start
+    while pid < start + size:
+        m = min(bunch, start + size - pid)
+        sub = {key: arr[pid:pid + m] for key, arr in out.items()}
+        _walk_bunch(source, media, doms, params, num_steps, pid, m, sub)
+        pid += m
+
+
+def batched_outcomes(source, media, doms, params, num_photons, num_steps,
+                     threads=1, bunch=4096):
+    """Per-photon outcomes from the batched SoA walk.
+
+    `threads` here only selects the chunk split (the mirror runs the
+    chunks sequentially); photon independence is what makes the Rust
+    engine's parallel execution bit-identical to this.
+    """
+    out = empty_outcomes(num_photons)
+    for start, size in chunk_ranges(num_photons, threads):
+        walk_chunk(source, media, doms, params, num_steps, start, size,
+                   bunch, out)
+    return out
+
+
+# ---- reduction (mirror of engine.rs reduce_outcomes) ------------------------
+
+def reduce_outcomes(out, num_doms):
+    """(hits int64[D], summary f32[8]) via the pid-ordered sequential fold."""
+    hits = np.zeros(num_doms, dtype=np.int64)
+    for d in out["dom"]:
+        if d >= 0:
+            hits[d] += 1
+    n_det = int((out["status"] == 2).sum())
+    n_abs = int((out["status"] == 1).sum())
+    n_alive = int((out["status"] == 0).sum())
+    path_sum = 0.0
+    hit_time_sum = 0.0
+    for p in out["path"]:
+        path_sum += float(p)
+    for h in out["hit_time"]:
+        hit_time_sum += float(h)
+    steps = int(out["steps"].sum())
+    summary = np.array([n_det, n_abs, n_alive, path_sum, hit_time_sum,
+                        steps, 0.0, 0.0], dtype=np.float32)
+    return hits, summary
+
+
+def run(variant, seed, mode="batched", threads=1, bunch=4096, dusty=True):
+    """hits/summary for a named variant (the parity_check entry point)."""
+    v = VARIANTS[variant]
+    source, media, doms, params = build_inputs(variant, seed, dusty)
+    if mode == "scalar":
+        out = scalar_outcomes(source, media, doms, params,
+                              v["num_photons"], v["num_steps"])
+    else:
+        out = batched_outcomes(source, media, doms, params,
+                               v["num_photons"], v["num_steps"],
+                               threads=threads, bunch=bunch)
+    return reduce_outcomes(out, v["num_doms"])
