@@ -1,15 +1,20 @@
-//! `icecloud serve` load generator: requests/sec cold vs cached.
+//! `icecloud serve` load generator: requests/sec cold vs cached vs
+//! disk-tier vs async admission.
 //!
-//! Starts an in-process server on an ephemeral port and drives it with
-//! the in-tree HTTP client (`server::http`).  "Cold" requests vary the
-//! scenario seed every iteration, so every request forces a real
-//! campaign replay; "cached" requests repeat one spec, so after the
-//! first replay every response is served from the content-addressed
-//! cache.  The subsystem's perf claim — cached throughput ≥ 100x cold
-//! replay throughput — is printed as an explicit ratio at the end.
+//! Starts an in-process server on an ephemeral port (with a scratch
+//! persistent store) and drives it with the in-tree HTTP client
+//! (`server::http`).  "Cold" requests vary the scenario seed every
+//! iteration, so every request forces a real campaign replay; "cached"
+//! requests repeat one spec, so after the first replay every response
+//! is served from the memory tier.  "disk-hit" clears the memory tier
+//! before every fetch, so each request pays the full read-verify-
+//! promote path of the persistent store; "async-submit" measures the
+//! `202` admission fast path of `POST /sweep?mode=async`.  The
+//! subsystem's perf claim — cached throughput ≥ 100x cold replay
+//! throughput — is printed as an explicit ratio at the end.
 //!
-//! Regenerate the committed baseline (BENCH_pr2.json) with:
-//!   cargo bench --bench serve 2>/dev/null | grep BENCHJSON
+//! Regenerate the committed baseline (BENCH_pr4.json) with:
+//!   tools/bench_baseline.sh
 
 use icecloud::config::{CampaignConfig, RampStep};
 use icecloud::server::http::client_request;
@@ -27,25 +32,36 @@ fn tiny_base() -> CampaignConfig {
     c
 }
 
-fn post_sweep(addr: &str, spec: &str) -> u16 {
+fn post_sweep(addr: &str, path: &str, spec: &str) -> u16 {
     let resp = client_request(
         addr,
         "POST",
-        "/sweep",
+        path,
         Some("application/toml"),
         spec.as_bytes(),
     )
     .expect("request");
-    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    assert!(
+        resp.status == 200 || resp.status == 202,
+        "{}",
+        resp.body_str()
+    );
     resp.status
 }
 
 fn main() {
+    let store_root = std::env::temp_dir().join(format!(
+        "icecloud-serve-bench-{}",
+        std::process::id()
+    ));
     let server = Server::bind(ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         http_threads: 4,
         replay_threads: 2,
         cache_bytes: 64 << 20,
+        queue_max: 64,
+        job_runners: 2,
+        store_dir: Some(store_root.clone()),
         base: tiny_base(),
     })
     .expect("bind");
@@ -58,14 +74,31 @@ fn main() {
     let mut seed = 0u64;
     b.run_throughput("serve/sweep-cold-replay", 1.0, "requests", || {
         seed += 1;
-        post_sweep(&addr, &format!("[scenario.cold]\nseed = {seed}\n"))
+        post_sweep(
+            &addr,
+            "/sweep",
+            &format!("[scenario.cold]\nseed = {seed}\n"),
+        )
     });
 
-    // one spec repeated: replayed once, then pure cache traffic
+    // one spec repeated: replayed once, then pure memory-tier traffic
     let hot_spec = "[scenario.hot]\nseed = 424242\n";
-    post_sweep(&addr, hot_spec); // warm
+    post_sweep(&addr, "/sweep", hot_spec); // warm
     b.run_throughput("serve/sweep-cached", 1.0, "requests", || {
-        post_sweep(&addr, hot_spec)
+        post_sweep(&addr, "/sweep", hot_spec)
+    });
+
+    // the same hot spec through the disk tier: flush the memory tier
+    // every iteration so each request pays read + verify + promote
+    b.run_throughput("serve/disk-hit", 1.0, "requests", || {
+        handle.state().cache.clear_memory();
+        post_sweep(&addr, "/sweep", hot_spec)
+    });
+
+    // async admission fast path: the result is already cached, so each
+    // submit measures parse + key + dedup + 202, no background replay
+    b.run_throughput("serve/async-submit", 1.0, "requests", || {
+        post_sweep(&addr, "/sweep?mode=async", hot_spec)
     });
 
     let results = b.results();
@@ -81,4 +114,5 @@ fn main() {
 
     b.finish();
     handle.shutdown();
+    let _ = std::fs::remove_dir_all(&store_root);
 }

@@ -561,19 +561,101 @@ impl CampaignConfig {
         o
     }
 
+    /// Build from an already-parsed TOML document over the defaults.
+    pub fn from_toml_doc(doc: &Json) -> Result<Self, String> {
+        let mut cfg = CampaignConfig::default();
+        cfg.apply_toml(doc)?;
+        Ok(cfg)
+    }
+
     /// Load from a TOML file over the defaults.
     pub fn from_toml_file(path: &str) -> Result<Self, String> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("cannot read {path}: {e}"))?;
-        let doc = toml::parse(&text).map_err(|e| e.to_string())?;
-        let mut cfg = CampaignConfig::default();
-        cfg.apply_toml(&doc)?;
-        Ok(cfg)
+        Self::from_toml_doc(&load_toml_doc(path)?)
     }
 
     /// Total ticks in the campaign.
     pub fn num_ticks(&self) -> u64 {
         self.duration_s / self.tick_s
+    }
+}
+
+/// Read and parse one TOML config file — the single loading path for
+/// every `--config` consumer (campaign, sweep, serve).
+pub fn load_toml_doc(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    toml::parse(&text).map_err(|e| e.to_string())
+}
+
+/// `icecloud serve` knobs, read from the same TOML file as the base
+/// campaign (a `[server]` table) with the same strict-value contract:
+/// a present-but-mistyped or out-of-range key is an error, never a
+/// silent no-op.  Deliberately a separate struct from
+/// [`CampaignConfig`]: serving knobs can never affect replay results,
+/// so they must never reach `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Bounded async-job admission queue (jobs waiting to run); async
+    /// submissions beyond it are shed with `429 + Retry-After`.
+    pub queue_max: u32,
+    /// Async job-runner threads draining the admission queue.
+    pub job_runners: u32,
+    /// Result-cache (memory tier) budget in MiB.
+    pub cache_mb: u64,
+    /// Persistent result-store root; `None` = memory-only.  Durable by
+    /// default: results must survive a restart unless the operator
+    /// explicitly opts out (`store_dir = ""`).
+    pub store_dir: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_max: 32,
+            job_runners: 2,
+            cache_mb: 64,
+            store_dir: Some("icecloud-store".to_string()),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Apply a `[server]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["server", "queue_max"])? {
+            if v == 0 {
+                return Err("'server.queue_max' must be >= 1".into());
+            }
+            self.queue_max = u32::try_from(v).map_err(|_| {
+                format!("'server.queue_max' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["server", "job_runners"])? {
+            if v == 0 {
+                return Err("'server.job_runners' must be >= 1".into());
+            }
+            self.job_runners = u32::try_from(v).map_err(|_| {
+                format!("'server.job_runners' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["server", "cache_mb"])? {
+            if v == 0 {
+                return Err("'server.cache_mb' must be >= 1".into());
+            }
+            self.cache_mb = v;
+        }
+        if let Some(v) = doc.get_path(&["server", "store_dir"]) {
+            let dir = v.as_str().ok_or_else(|| {
+                "'server.store_dir' must be a string".to_string()
+            })?;
+            // the empty string is the explicit "no persistence" spelling
+            self.store_dir = if dir.is_empty() {
+                None
+            } else {
+                Some(dir.to_string())
+            };
+        }
+        Ok(())
     }
 }
 
@@ -880,5 +962,82 @@ azure = 0.6
         let parsed =
             crate::util::json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn server_knobs_from_toml() {
+        let doc = toml::parse(
+            "[server]\nqueue_max = 8\njob_runners = 3\ncache_mb = 16\n\
+             store_dir = \"/var/lib/icecloud\"",
+        )
+        .unwrap();
+        let mut s = ServerConfig::default();
+        s.apply_toml(&doc).unwrap();
+        assert_eq!(s.queue_max, 8);
+        assert_eq!(s.job_runners, 3);
+        assert_eq!(s.cache_mb, 16);
+        assert_eq!(s.store_dir.as_deref(), Some("/var/lib/icecloud"));
+
+        // the empty string is the explicit memory-only spelling
+        let doc = toml::parse("[server]\nstore_dir = \"\"").unwrap();
+        let mut s = ServerConfig::default();
+        s.store_dir = Some("something".into());
+        s.apply_toml(&doc).unwrap();
+        assert_eq!(s.store_dir, None);
+    }
+
+    #[test]
+    fn server_defaults_are_sane() {
+        let s = ServerConfig::default();
+        assert!(s.queue_max >= 1);
+        assert!(s.job_runners >= 1);
+        assert!(s.cache_mb >= 1);
+        assert_eq!(s.store_dir.as_deref(), Some("icecloud-store"));
+        // a doc without a [server] table changes nothing
+        let doc = toml::parse("seed = 7").unwrap();
+        let mut t = ServerConfig::default();
+        t.apply_toml(&doc).unwrap();
+        assert_eq!(t, s);
+    }
+
+    #[test]
+    fn mistyped_server_knobs_rejected_not_silently_ignored() {
+        for src in [
+            "[server]\nqueue_max = \"8\"",
+            "[server]\nqueue_max = 0",
+            "[server]\nqueue_max = 4294967296",
+            "[server]\njob_runners = 0",
+            "[server]\njob_runners = 1.5",
+            "[server]\ncache_mb = 0",
+            "[server]\ncache_mb = \"64\"",
+            "[server]\nstore_dir = 7",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut s = ServerConfig::default();
+            assert!(
+                s.apply_toml(&doc).is_err(),
+                "'{src}' must be rejected, not dropped"
+            );
+        }
+    }
+
+    #[test]
+    fn server_knobs_never_touch_the_campaign_cache_key() {
+        // the [server] table rides in the same TOML file as the
+        // campaign; applying it to CampaignConfig must be a no-op for
+        // the canonical serialization (serving knobs cannot split the
+        // result cache)
+        let doc = toml::parse(
+            "[server]\nqueue_max = 2\nstore_dir = \"x\"",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(
+            c.canonical_json().to_string_compact(),
+            CampaignConfig::default()
+                .canonical_json()
+                .to_string_compact()
+        );
     }
 }

@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   campaign    run the two-week campaign (configurable)
 //!   sweep       run a scenario matrix in parallel (what-if analysis)
-//!   serve       HTTP scenario-sweep service with a content-addressed
-//!               result cache (POST /sweep, GET /matrix, /results/<key>,
+//!   serve       HTTP scenario-sweep service with a persistent two-tier
+//!               result store and async jobs (POST /sweep [?mode=async],
+//!               GET /matrix, /jobs, /jobs/<id>, /results/<key>,
 //!               /metrics, /healthz)
 //!   reproduce   regenerate the paper's figures/tables into a results dir
 //!   validate    end-to-end smoke test of the AOT photon artifacts
@@ -69,8 +70,8 @@ fn print_usage() {
          \x20 campaign    run the two-week multi-cloud campaign\n\
          \x20 sweep       run a scenario matrix in parallel (what-if \
          analysis)\n\
-         \x20 serve       HTTP sweep service with a content-addressed \
-         result cache\n\
+         \x20 serve       HTTP sweep service with a persistent result \
+         store and async jobs\n\
          \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
          --fig2, --headline, --nat, --ramp)\n\
          \x20 validate    end-to-end smoke test of the photon artifacts\n\
@@ -202,15 +203,21 @@ fn print_summary(result: &icecloud::coordinator::CampaignResult) {
 /// the caller layers anything stronger (matrix `[base]`, `--days`) via
 /// [`apply_days_override`] afterwards.  Sweeps compare many replays, so
 /// the default is a responsive 4-day slice rather than the full window.
+/// Also returns the parsed `--config` document (when there is one) so
+/// `serve` can read its `[server]` table from the same file without a
+/// second resolution path.
 fn sweep_base_config(
     args: &icecloud::util::cli::Args,
-) -> Result<CampaignConfig, String> {
+) -> Result<(CampaignConfig, Option<Json>), String> {
     match args.get("config") {
-        Some(path) => CampaignConfig::from_toml_file(path),
+        Some(path) => {
+            let doc = icecloud::config::load_toml_doc(path)?;
+            Ok((CampaignConfig::from_toml_doc(&doc)?, Some(doc)))
+        }
         None => {
             let mut cfg = CampaignConfig::default();
             cfg.duration_s = 4 * 86_400;
-            Ok(cfg)
+            Ok((cfg, None))
         }
     }
 }
@@ -250,7 +257,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
 
     // precedence (weakest to strongest):
     // 4-day default < --config file < matrix [base] < explicit --days
-    let mut base = sweep_base_config(&args)?;
+    let (mut base, _doc) = sweep_base_config(&args)?;
     let scenarios = match args.get("matrix") {
         Some(path) => icecloud::sweep::matrix::from_toml_file(path, &mut base)?,
         None => icecloud::sweep::builtin_matrix(),
@@ -290,7 +297,8 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let cmd = Command::new(
         "serve",
-        "HTTP scenario-sweep service with a content-addressed result cache",
+        "HTTP scenario-sweep service with a persistent content-addressed \
+         result store and async jobs",
     )
     .opt("addr", "bind address", Some("127.0.0.1:8080"))
     .opt("threads", "HTTP connection-handler threads", Some("8"))
@@ -299,8 +307,24 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         "campaign replay workers (default: available parallelism)",
         None,
     )
-    .opt("cache-mb", "result-cache budget in MiB", Some("64"))
-    .opt("config", "base campaign TOML (defaults to the paper setup)", None)
+    .opt("cache-mb", "result-cache (memory tier) budget in MiB", None)
+    .opt(
+        "queue-max",
+        "bounded async-job admission queue (429 beyond it)",
+        None,
+    )
+    .opt("job-runners", "async job-runner threads", None)
+    .opt(
+        "store-dir",
+        "persistent result-store root (\"\" = memory-only; default \
+         icecloud-store)",
+        None,
+    )
+    .opt(
+        "config",
+        "base campaign TOML, optionally with a [server] table",
+        None,
+    )
     .opt(
         "days",
         "base campaign duration in days (default 4, like `sweep`)",
@@ -312,10 +336,40 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         logger::set_level(level);
     }
 
-    // same base resolution as `icecloud sweep`; request bodies layer
-    // their own [base] tables per request on top
-    let mut base = sweep_base_config(&args)?;
+    // same base resolution as `icecloud sweep` (request bodies layer
+    // their own [base] tables per request on top); serving knobs
+    // resolve weakest to strongest: defaults < [server] table < flags
+    let (mut base, doc) = sweep_base_config(&args)?;
     apply_days_override(&args, &mut base);
+    let mut srv = icecloud::config::ServerConfig::default();
+    if let Some(doc) = &doc {
+        srv.apply_toml(doc)?;
+    }
+    if let Some(v) = args.require_u64("queue-max")? {
+        if v == 0 {
+            return Err("--queue-max must be >= 1".into());
+        }
+        srv.queue_max = u32::try_from(v)
+            .map_err(|_| format!("--queue-max {v} is out of range"))?;
+    }
+    if let Some(v) = args.require_u64("job-runners")? {
+        if v == 0 {
+            return Err("--job-runners must be >= 1".into());
+        }
+        srv.job_runners = u32::try_from(v)
+            .map_err(|_| format!("--job-runners {v} is out of range"))?;
+    }
+    if let Some(v) = args.require_u64("cache-mb")? {
+        if v == 0 {
+            return Err("--cache-mb must be >= 1".into());
+        }
+        srv.cache_mb = v;
+    }
+    let store_dir = match args.get("store-dir") {
+        Some("") => None,
+        Some(dir) => Some(PathBuf::from(dir)),
+        None => srv.store_dir.clone().map(PathBuf::from),
+    };
 
     let cfg = icecloud::server::ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
@@ -328,7 +382,10 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
                     .map(|n| n.get())
                     .unwrap_or(4)
             }),
-        cache_bytes: (args.get_u64("cache-mb").unwrap_or(64) as usize) << 20,
+        cache_bytes: (srv.cache_mb as usize) << 20,
+        queue_max: srv.queue_max as usize,
+        job_runners: srv.job_runners as usize,
+        store_dir: store_dir.clone(),
         base,
     };
     let http_threads = cfg.http_threads;
@@ -336,11 +393,17 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let server = icecloud::server::Server::bind(cfg)?;
     println!(
         "icecloud serve: listening on {} ({} http threads, {} replay \
-         workers)\n  endpoints: GET /healthz /matrix /metrics \
-         /results/<key>; POST /sweep",
+         workers, {} job runners, store: {})\n  endpoints: GET /healthz \
+         /matrix /metrics /jobs /jobs/<id> /results/<key>; POST /sweep \
+         [?mode=async]",
         server.local_addr()?,
         http_threads,
         replay_threads,
+        srv.job_runners,
+        match &store_dir {
+            Some(dir) => dir.display().to_string(),
+            None => "disabled (memory-only)".to_string(),
+        },
     );
     server.run()
 }

@@ -1,5 +1,6 @@
-//! Content-addressed result cache with LRU eviction and single-flight
-//! deduplication.
+//! Content-addressed result cache: an in-memory LRU tier with
+//! single-flight deduplication, over an optional persistent disk tier
+//! (`store::DiskStore`).
 //!
 //! Determinism is what makes this cache *correct*, not merely fast: a
 //! resolved scenario request replays to a byte-identical summary every
@@ -8,13 +9,24 @@
 //! (`CampaignConfig::canonical_json` + `ScenarioConfig::canonical_json`)
 //! and served to any future identical request without revalidation.
 //!
+//! Two tiers: the memory LRU bounds *hot* bytes; the disk store (when
+//! configured) holds every result ever computed, so results survive
+//! restarts and eviction from memory never loses anything — a miss in
+//! memory falls through to disk and promotes back on hit.  Writes go
+//! through to disk on compute; a disk-write failure degrades to
+//! memory-only behaviour rather than failing the request.
+//!
 //! Single-flight: when N identical requests arrive concurrently, the
 //! first becomes the *owner* and runs the replay; the other N-1 park on
 //! a condvar and receive the owner's bytes.  The flights table is
 //! checked under the same lock that re-checks the cache, and the owner
 //! inserts into the cache *before* removing its flight entry, so there
 //! is no window in which a second owner can start the same computation.
+//! The disk probe happens on the owner's side of the flight, so a
+//! thundering herd does at most one disk read per key.
 
+use super::store::DiskStore;
+use crate::util::logger::{self, Level};
 use crate::util::sha256;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -25,8 +37,10 @@ pub type Body = Arc<Vec<u8>>;
 /// What a lookup did.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Outcome {
-    /// Served from the cache, or joined an in-flight computation.
+    /// Served from the memory tier, or joined an in-flight computation.
     Hit,
+    /// Served from the disk tier (and promoted into memory).
+    DiskHit,
     /// This call ran the computation.
     Miss,
 }
@@ -79,14 +93,21 @@ impl Store {
     }
 }
 
-/// The cache: bounded by a byte budget over the stored response bodies.
+/// The cache: a byte-budgeted memory tier over an optional disk tier.
 pub struct ResultCache {
     store: Mutex<Store>,
+    disk: Option<DiskStore>,
     flights: Mutex<HashMap<String, Arc<Flight>>>,
 }
 
 impl ResultCache {
+    /// Memory-only cache (tests; `--store-dir ""`).
     pub fn new(byte_budget: usize) -> Self {
+        ResultCache::with_disk(byte_budget, None)
+    }
+
+    /// Memory tier over an already-opened disk store.
+    pub fn with_disk(byte_budget: usize, disk: Option<DiskStore>) -> Self {
         ResultCache {
             store: Mutex::new(Store {
                 map: HashMap::new(),
@@ -94,25 +115,62 @@ impl ResultCache {
                 bytes: 0,
                 budget: byte_budget.max(1),
             }),
+            disk,
             flights: Mutex::new(HashMap::new()),
         }
     }
 
-    /// Look up `key` without computing (the `GET /results/<key>` path).
+    /// Whether a disk tier is configured (metrics accounting).
+    pub fn has_disk(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Look up `key` in the memory tier only (tests, fast probes).
     pub fn get(&self, key: &str) -> Option<Body> {
         self.store.lock().unwrap().get(key)
     }
 
-    /// `(entries, bytes)` currently held.
+    /// Look up `key` across both tiers without computing (the
+    /// `GET /results/<key>` path).  A disk hit is promoted into the
+    /// memory LRU so subsequent fetches are pure memory.
+    pub fn lookup(&self, key: &str) -> Option<(Body, Outcome)> {
+        if let Some(body) = self.store.lock().unwrap().get(key) {
+            return Some((body, Outcome::Hit));
+        }
+        let body: Body = Arc::new(self.disk.as_ref()?.get(key)?);
+        self.store
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::clone(&body));
+        Some((body, Outcome::DiskHit))
+    }
+
+    /// `(entries, bytes)` currently held in the memory tier.
     pub fn stats(&self) -> (usize, usize) {
         let s = self.store.lock().unwrap();
         (s.map.len(), s.bytes)
     }
 
+    /// `(entries, bytes)` on disk; `(0, 0)` when no disk tier.
+    pub fn disk_stats(&self) -> (usize, u64) {
+        self.disk.as_ref().map(|d| d.stats()).unwrap_or((0, 0))
+    }
+
+    /// Drop every memory-tier entry, leaving disk untouched (benches
+    /// and tests force the disk path this way; never on a serve path).
+    pub fn clear_memory(&self) {
+        let mut s = self.store.lock().unwrap();
+        s.map.clear();
+        s.order.clear();
+        s.bytes = 0;
+    }
+
     /// Return the cached body for `key`, or run `compute` exactly once
-    /// across all concurrent callers with the same key.  Errors are not
-    /// cached: every waiter of a failed flight gets the error, and the
-    /// next request retries.
+    /// across all concurrent callers with the same key.  The owner
+    /// probes the disk tier before computing, so a restart-warm store
+    /// turns would-be replays into `DiskHit`s.  Errors are not cached:
+    /// every waiter of a failed flight gets the error, and the next
+    /// request retries.
     pub fn get_or_compute(
         &self,
         key: &str,
@@ -149,8 +207,30 @@ impl ResultCache {
             }
         };
 
-        // owner path: compute outside every lock
-        let result = compute().map(Arc::new);
+        // owner path: disk probe, then compute, all outside every lock
+        let (result, outcome) =
+            match self.disk.as_ref().and_then(|d| d.get(key)) {
+                Some(body) => (Ok(Arc::new(body)), Outcome::DiskHit),
+                None => {
+                    let result = compute().map(Arc::new);
+                    if let Ok(body) = &result {
+                        if let Some(disk) = &self.disk {
+                            if let Err(e) = disk.put(key, body) {
+                                logger::log(
+                                    Level::Warn,
+                                    0,
+                                    "server",
+                                    &format!(
+                                        "result store put failed \
+                                         (serving from memory): {e}"
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                    (result, Outcome::Miss)
+                }
+            };
         if let Ok(body) = &result {
             self.store
                 .lock()
@@ -164,7 +244,7 @@ impl ResultCache {
             flight.done.notify_all();
             flights.remove(key);
         }
-        (result, Outcome::Miss)
+        (result, outcome)
     }
 }
 
@@ -185,6 +265,23 @@ pub fn sweep_key(
     sha256::hex_digest(doc.to_string_compact().as_bytes())
 }
 
+/// The cached response body: content key + summary rows.  Everything in
+/// it is a pure function of the resolved request, so byte-identical
+/// requests get byte-identical bodies whether replayed, served from
+/// either cache tier, or fetched through the async job API.
+pub fn render_sweep_body(
+    key: &str,
+    rows: &[crate::sweep::ScenarioSummary],
+) -> Vec<u8> {
+    use crate::util::json::Json;
+    let mut o = Json::obj();
+    o.set("key", Json::from(key));
+    o.set("rows", crate::experiments::sweep::to_json(rows));
+    let mut body = o.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    body
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,11 +289,24 @@ mod tests {
     use crate::coordinator::ScenarioConfig;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    fn scratch() -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "icecloud-cache-unit-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn key(i: u8) -> String {
+        format!("{i:064x}")
+    }
+
     #[test]
     fn miss_then_hit() {
         let cache = ResultCache::new(1 << 20);
-        let (r, o) =
-            cache.get_or_compute("k", || Ok(b"body".to_vec()));
+        let (r, o) = cache.get_or_compute("k", || Ok(b"body".to_vec()));
         assert_eq!(o, Outcome::Miss);
         assert_eq!(r.unwrap().as_slice(), b"body");
         let (r, o) = cache.get_or_compute("k", || {
@@ -206,6 +316,8 @@ mod tests {
         assert_eq!(r.unwrap().as_slice(), b"body");
         assert_eq!(cache.get("k").unwrap().as_slice(), b"body");
         assert!(cache.get("other").is_none());
+        assert!(!cache.has_disk());
+        assert_eq!(cache.disk_stats(), (0, 0));
     }
 
     #[test]
@@ -295,6 +407,78 @@ mod tests {
         for (body, _) in &results {
             assert_eq!(body.as_slice(), b"result");
         }
+    }
+
+    #[test]
+    fn disk_tier_survives_memory_eviction() {
+        let root = scratch();
+        let disk = DiskStore::open(&root).unwrap();
+        let cache = ResultCache::with_disk(10, Some(disk));
+        assert!(cache.has_disk());
+        let (ka, kb) = (key(1), key(2));
+        cache.get_or_compute(&ka, || Ok(vec![7u8; 8])).0.unwrap();
+        cache.get_or_compute(&kb, || Ok(vec![9u8; 8])).0.unwrap();
+        // `ka` was evicted from memory by `kb`...
+        assert!(cache.get(&ka).is_none());
+        // ...but the disk tier still serves it, and promotes it back
+        let (body, o) = cache.lookup(&ka).unwrap();
+        assert_eq!(o, Outcome::DiskHit);
+        assert_eq!(body.as_slice(), &[7u8; 8]);
+        let (_, o) = cache.lookup(&ka).unwrap();
+        assert_eq!(o, Outcome::Hit, "promoted entry is a memory hit");
+        assert_eq!(cache.disk_stats(), (2, 16));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn owner_probes_disk_before_computing() {
+        let root = scratch();
+        let k = key(3);
+        {
+            let disk = DiskStore::open(&root).unwrap();
+            let cache = ResultCache::with_disk(1 << 20, Some(disk));
+            cache.get_or_compute(&k, || Ok(b"persisted".to_vec())).0.unwrap();
+        }
+        // a fresh cache over the same directory: no replay needed
+        let disk = DiskStore::open(&root).unwrap();
+        let cache = ResultCache::with_disk(1 << 20, Some(disk));
+        let (r, o) = cache.get_or_compute(&k, || {
+            panic!("disk-resident key must not recompute")
+        });
+        assert_eq!(o, Outcome::DiskHit);
+        assert_eq!(r.unwrap().as_slice(), b"persisted");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn clear_memory_leaves_disk_intact() {
+        let root = scratch();
+        let disk = DiskStore::open(&root).unwrap();
+        let cache = ResultCache::with_disk(1 << 20, Some(disk));
+        let k = key(4);
+        cache.get_or_compute(&k, || Ok(b"kept".to_vec())).0.unwrap();
+        cache.clear_memory();
+        assert_eq!(cache.stats(), (0, 0));
+        let (body, o) = cache.lookup(&k).unwrap();
+        assert_eq!(o, Outcome::DiskHit);
+        assert_eq!(body.as_slice(), b"kept");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn disk_write_failure_degrades_to_memory_only() {
+        // a non-hex key cannot be persisted; the request must still be
+        // served from memory
+        let root = scratch();
+        let disk = DiskStore::open(&root).unwrap();
+        let cache = ResultCache::with_disk(1 << 20, Some(disk));
+        let (r, o) =
+            cache.get_or_compute("not-a-key", || Ok(b"served".to_vec()));
+        assert_eq!(o, Outcome::Miss);
+        assert_eq!(r.unwrap().as_slice(), b"served");
+        assert_eq!(cache.get("not-a-key").unwrap().as_slice(), b"served");
+        assert_eq!(cache.disk_stats(), (0, 0));
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! Supported: request line + headers, `Content-Length` bodies (bounded),
 //! keep-alive (HTTP/1.1 default, `Connection: close` honored), and the
-//! status codes the router hands back (200/400/404/405/413/500).
+//! status codes the router hands back (200/202/400/404/405/413/429/500).
 //! Deliberately not supported: chunked transfer encoding (rejected with
 //! 400), trailers, upgrades, TLS — a fronting proxy owns those concerns
 //! in any real deployment.
@@ -284,10 +284,12 @@ impl Response {
 pub fn status_reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         _ => "Unknown",
     }

@@ -1,4 +1,5 @@
-//! The persistent replay worker pool behind `POST /sweep`.
+//! Replay execution behind `POST /sweep`: the persistent worker pool
+//! (sync requests) and the asynchronous job table (`?mode=async`).
 //!
 //! The CLI sweep spins up scoped threads per invocation and lets them
 //! die; a server cannot afford thread churn per request, and — more
@@ -9,14 +10,29 @@
 //! list out as one job per scenario and parks on a countdown latch
 //! until every slot is filled, so results keep the deterministic
 //! matrix order that `sweep::run_matrix` pins.
+//!
+//! [`JobTable`] is the async layer over the same machinery (DESIGN.md
+//! §14): a bounded admission queue of sweep jobs, drained by a few
+//! runner threads that execute through the shared
+//! [`ResultCache::get_or_compute`] + [`ReplayPool::run_matrix`] path —
+//! so an async job, a sync request and a restart-warmed disk entry all
+//! produce byte-identical bodies, and concurrent duplicates
+//! single-flight no matter which door they came through.  Job ids
+//! *are* the sweep content address, which is what makes duplicate
+//! async submissions collapse to one job for free.
 
+use super::cache::{render_sweep_body, Outcome, ResultCache};
+use super::metrics::Metrics;
 use crate::config::CampaignConfig;
 use crate::coordinator::ScenarioConfig;
 use crate::sweep::{runner, ScenarioSummary};
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -70,10 +86,11 @@ impl ReplayPool {
     }
 
     /// Replay every scenario against `base` on the pool and return the
-    /// rows in matrix order.  Blocks the calling (HTTP worker) thread;
-    /// the replays themselves run on the pool's threads.  A panicking
-    /// replay (a pathological request config) yields an error instead
-    /// of poisoning the pool or hanging the caller.
+    /// rows in matrix order.  Blocks the calling (HTTP worker or job
+    /// runner) thread; the replays themselves run on the pool's
+    /// threads.  A panicking replay (a pathological request config)
+    /// yields an error instead of poisoning the pool or hanging the
+    /// caller.
     pub fn run_matrix(
         &self,
         base: &CampaignConfig,
@@ -143,6 +160,438 @@ impl Drop for ReplayPool {
         self.tx.take(); // close the channel; workers exit after draining
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+// ---- the async job table -------------------------------------------------
+
+/// Finished jobs kept for `GET /jobs` before the oldest are forgotten.
+const MAX_TRACKED_JOBS: usize = 1024;
+
+/// Everything a queued job needs to run later.
+pub struct JobSpec {
+    /// The sweep content address (`cache::sweep_key`) — also the job id.
+    pub key: String,
+    pub resolved: CampaignConfig,
+    pub scenarios: Vec<ScenarioConfig>,
+}
+
+/// The job lifecycle: `queued → running → done | failed`; a failed job
+/// may be resubmitted, which re-queues it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl Phase {
+    fn as_str(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Failed => "failed",
+        }
+    }
+}
+
+struct JobRecord {
+    phase: Phase,
+    scenarios: usize,
+    submitted: Instant,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+    error: Option<String>,
+    /// Present only while queued; taken by the runner that picks it up.
+    spec: Option<JobSpec>,
+}
+
+struct JobsInner {
+    jobs: HashMap<String, JobRecord>,
+    /// Queued job ids in admission order (front = next to run).
+    pending: VecDeque<String>,
+    /// Every tracked job id in submission order (front = oldest).
+    order: VecDeque<String>,
+}
+
+struct Shared {
+    state: Mutex<JobsInner>,
+    work: Condvar,
+    stop: AtomicBool,
+}
+
+/// What `submit` decided.
+#[derive(Debug)]
+pub enum Admission {
+    /// Queued (or completed instantly off the cache).
+    Accepted { id: String },
+    /// An identical job already exists — single-flight dedup.
+    Duplicate { id: String },
+    /// The admission queue is full; retry after the hinted delay.
+    Shed { retry_after_s: u64 },
+}
+
+/// One job's externally visible status snapshot.
+pub struct JobView {
+    pub id: String,
+    pub status: &'static str,
+    /// 1-based position among queued jobs (queued only).
+    pub queue_position: Option<usize>,
+    pub scenarios: usize,
+    /// Seconds since submission.
+    pub age_s: f64,
+    /// Seconds spent queued before a runner picked the job up.
+    pub wait_s: Option<f64>,
+    /// Seconds running (so far, or total once finished).
+    pub run_s: Option<f64>,
+    pub error: Option<String>,
+}
+
+impl JobView {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::from(self.id.as_str()));
+        o.set("status", Json::from(self.status));
+        o.set("scenarios", Json::from(self.scenarios));
+        o.set("age_s", Json::from(self.age_s));
+        if let Some(p) = self.queue_position {
+            o.set("queue_position", Json::from(p));
+        }
+        if let Some(w) = self.wait_s {
+            o.set("wait_s", Json::from(w));
+        }
+        if let Some(r) = self.run_s {
+            o.set("run_s", Json::from(r));
+        }
+        if let Some(e) = &self.error {
+            o.set("error", Json::from(e.as_str()));
+        }
+        if self.status == "done" {
+            o.set(
+                "result",
+                Json::from(format!("/results/{}", self.id)),
+            );
+        }
+        o
+    }
+}
+
+/// The asynchronous sweep-job subsystem: a bounded admission queue
+/// drained by dedicated runner threads.  Runners — not HTTP handlers —
+/// block on the replay pool, so `POST /sweep?mode=async` returns in
+/// microseconds however deep the backlog is, and saturation surfaces
+/// as an explicit `Shed` instead of a stalled accept loop.
+pub struct JobTable {
+    shared: Arc<Shared>,
+    cache: Arc<ResultCache>,
+    metrics: Arc<Metrics>,
+    queue_max: usize,
+    runners: Vec<JoinHandle<()>>,
+}
+
+impl JobTable {
+    /// Spawn `runners` job-runner threads over the shared cache/pool.
+    pub fn start(
+        queue_max: usize,
+        runners: usize,
+        cache: Arc<ResultCache>,
+        pool: Arc<ReplayPool>,
+        metrics: Arc<Metrics>,
+    ) -> JobTable {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobsInner {
+                jobs: HashMap::new(),
+                pending: VecDeque::new(),
+                order: VecDeque::new(),
+            }),
+            work: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(runners.max(1));
+        for _ in 0..runners.max(1) {
+            let shared = Arc::clone(&shared);
+            let cache = Arc::clone(&cache);
+            let pool = Arc::clone(&pool);
+            let metrics = Arc::clone(&metrics);
+            handles.push(std::thread::spawn(move || {
+                runner_loop(&shared, &cache, &pool, &metrics)
+            }));
+        }
+        JobTable {
+            shared,
+            cache,
+            metrics,
+            queue_max: queue_max.max(1),
+            runners: handles,
+        }
+    }
+
+    /// Admit one async sweep.  Duplicates of an in-flight job join it;
+    /// a spec whose result is already retrievable (either cache tier)
+    /// completes instantly without taking a queue slot; terminal jobs
+    /// whose result is *not* retrievable any more — failed, or done
+    /// but since evicted/quarantined — re-queue like new submissions
+    /// (the job API must never point at a result it cannot produce);
+    /// a full queue sheds.
+    pub fn submit(&self, spec: JobSpec) -> Admission {
+        let id = spec.key.clone();
+        {
+            let st = self.shared.state.lock().unwrap();
+            if in_flight(&st, &id) {
+                return Admission::Duplicate { id };
+            }
+        }
+        // absent or terminal: does the result exist right now?  Probed
+        // outside the jobs lock (it may touch disk).
+        let cached = match self.cache.lookup(&id) {
+            Some((_, Outcome::DiskHit)) => {
+                // the store-hit counter covers every disk-tier serve,
+                // whichever door asked (see router::results)
+                self.metrics.on_disk_hit();
+                true
+            }
+            Some(_) => true,
+            None => false,
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        if in_flight(&st, &id) {
+            // lost a race with an identical submission
+            return Admission::Duplicate { id };
+        }
+        let now = Instant::now();
+        if cached {
+            match st.jobs.get_mut(&id) {
+                // a done job whose result still serves: plain dedup
+                Some(rec) if rec.phase == Phase::Done => {
+                    return Admission::Duplicate { id }
+                }
+                // failed earlier, but something (a sync request, a
+                // restart-warmed store) has produced the result since
+                Some(rec) => {
+                    rec.phase = Phase::Done;
+                    rec.error = None;
+                    rec.submitted = now;
+                    rec.started = Some(now);
+                    rec.finished = Some(now);
+                    self.metrics.on_job_submitted();
+                    self.metrics.on_job_finished(true);
+                    return Admission::Accepted { id };
+                }
+                None => {
+                    st.jobs.insert(
+                        id.clone(),
+                        JobRecord {
+                            phase: Phase::Done,
+                            scenarios: spec.scenarios.len(),
+                            submitted: now,
+                            started: Some(now),
+                            finished: Some(now),
+                            error: None,
+                            spec: None,
+                        },
+                    );
+                    st.order.push_back(id.clone());
+                    gc(&mut st);
+                    self.metrics.on_job_submitted();
+                    self.metrics.on_job_finished(true);
+                    return Admission::Accepted { id };
+                }
+            }
+        }
+        // not retrievable: queue it (fresh submission) or re-queue it
+        // (failed / done-but-lost)
+        if st.pending.len() >= self.queue_max {
+            self.metrics.on_job_shed();
+            return Admission::Shed {
+                retry_after_s: retry_after(st.pending.len()),
+            };
+        }
+        let record = JobRecord {
+            phase: Phase::Queued,
+            scenarios: spec.scenarios.len(),
+            submitted: now,
+            started: None,
+            finished: None,
+            error: None,
+            spec: Some(spec),
+        };
+        if st.jobs.insert(id.clone(), record).is_none() {
+            st.order.push_back(id.clone());
+        }
+        st.pending.push_back(id.clone());
+        gc(&mut st);
+        self.metrics.on_job_submitted();
+        self.shared.work.notify_one();
+        Admission::Accepted { id }
+    }
+
+    /// Snapshot one job.
+    pub fn view(&self, id: &str) -> Option<JobView> {
+        let st = self.shared.state.lock().unwrap();
+        let rec = st.jobs.get(id)?;
+        Some(view_of(&st, id, rec))
+    }
+
+    /// Snapshot every tracked job in submission order.
+    pub fn list(&self) -> Vec<JobView> {
+        let st = self.shared.state.lock().unwrap();
+        st.order
+            .iter()
+            .filter_map(|id| st.jobs.get(id).map(|r| view_of(&st, id, r)))
+            .collect()
+    }
+
+    /// `(queued, running)` gauge pair for `/metrics`.
+    pub fn counts(&self) -> (usize, usize) {
+        let st = self.shared.state.lock().unwrap();
+        let running = st
+            .jobs
+            .values()
+            .filter(|r| r.phase == Phase::Running)
+            .count();
+        (st.pending.len(), running)
+    }
+}
+
+impl Drop for JobTable {
+    fn drop(&mut self) {
+        {
+            // set the flag under the state lock so a runner between its
+            // stop-check and its wait cannot miss the wakeup
+            let _st = self.shared.state.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+            self.shared.work.notify_all();
+        }
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Backlog-proportional retry hint for `Retry-After`.
+fn retry_after(pending: usize) -> u64 {
+    1 + pending as u64
+}
+
+/// Queued or running: a duplicate submission joins such a job; only
+/// terminal (or absent) records may be (re)queued or completed.
+fn in_flight(st: &JobsInner, id: &str) -> bool {
+    matches!(
+        st.jobs.get(id).map(|r| r.phase),
+        Some(Phase::Queued | Phase::Running)
+    )
+}
+
+fn view_of(st: &JobsInner, id: &str, rec: &JobRecord) -> JobView {
+    let now = Instant::now();
+    let run_s = rec.started.map(|t0| {
+        rec.finished.unwrap_or(now).duration_since(t0).as_secs_f64()
+    });
+    let wait_s = rec
+        .started
+        .map(|t0| t0.duration_since(rec.submitted).as_secs_f64());
+    JobView {
+        id: id.to_string(),
+        status: rec.phase.as_str(),
+        queue_position: if rec.phase == Phase::Queued {
+            st.pending.iter().position(|p| p == id).map(|i| i + 1)
+        } else {
+            None
+        },
+        scenarios: rec.scenarios,
+        age_s: now.duration_since(rec.submitted).as_secs_f64(),
+        wait_s,
+        run_s,
+        error: rec.error.clone(),
+    }
+}
+
+/// Forget the oldest *finished* jobs once the table outgrows its cap.
+/// Unfinished jobs are skipped, not a stopping point — a long-running
+/// job at the front must not let finished records behind it pile up
+/// unboundedly.  Queued and running jobs are never dropped (the queue
+/// bound and the runner count cap them independently), so the table
+/// stays within `MAX_TRACKED_JOBS` plus that small in-flight margin.
+fn gc(st: &mut JobsInner) {
+    if st.order.len() <= MAX_TRACKED_JOBS {
+        return;
+    }
+    let mut excess = st.order.len() - MAX_TRACKED_JOBS;
+    let mut kept = VecDeque::with_capacity(st.order.len());
+    while let Some(id) = st.order.pop_front() {
+        let finished = !in_flight(st, &id);
+        if excess > 0 && finished {
+            st.jobs.remove(&id);
+            excess -= 1;
+        } else {
+            kept.push_back(id);
+        }
+    }
+    st.order = kept;
+}
+
+fn runner_loop(
+    shared: &Shared,
+    cache: &ResultCache,
+    pool: &ReplayPool,
+    metrics: &Metrics,
+) {
+    loop {
+        let (id, spec) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = st.pending.pop_front() {
+                    let rec = st
+                        .jobs
+                        .get_mut(&id)
+                        .expect("queued job has a record");
+                    rec.phase = Phase::Running;
+                    rec.started = Some(Instant::now());
+                    let spec =
+                        rec.spec.take().expect("queued job has a spec");
+                    break (id, spec);
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+
+        // the exact machinery the sync path uses: shared single-flight
+        // cache over the shared replay pool, so async results are
+        // byte-identical to sync ones by construction
+        let replays = spec.scenarios.len();
+        let (result, outcome) = cache.get_or_compute(&spec.key, || {
+            let rows = pool.run_matrix(&spec.resolved, &spec.scenarios)?;
+            metrics.on_sweep_computed(replays);
+            Ok(render_sweep_body(&spec.key, &rows))
+        });
+        match (&result, outcome) {
+            (_, Outcome::Miss) => {
+                metrics.on_lookup_outcome(Outcome::Miss, cache.has_disk())
+            }
+            (Ok(_), o) => metrics.on_lookup_outcome(o, cache.has_disk()),
+            (Err(_), _) => {} // a waiter surfacing the owner's error
+        }
+
+        let mut st = shared.state.lock().unwrap();
+        let rec =
+            st.jobs.get_mut(&id).expect("running job has a record");
+        rec.finished = Some(Instant::now());
+        match result {
+            Ok(_) => {
+                rec.phase = Phase::Done;
+                metrics.on_job_finished(true);
+            }
+            Err(e) => {
+                rec.phase = Phase::Failed;
+                rec.error = Some(e);
+                metrics.on_job_finished(false);
+            }
         }
     }
 }
@@ -256,5 +705,270 @@ mod tests {
             .run_matrix(&tiny_base(), &[ScenarioConfig::named("after")])
             .unwrap();
         assert_eq!(rows.len(), 1);
+    }
+
+    // ---- JobTable ------------------------------------------------------
+
+    fn table(queue_max: usize, runners: usize) -> JobTable {
+        JobTable::start(
+            queue_max,
+            runners,
+            Arc::new(ResultCache::new(1 << 20)),
+            Arc::new(ReplayPool::new(1)),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    fn spec(name: &str, seed: u64) -> JobSpec {
+        let base = tiny_base();
+        let mut s = ScenarioConfig::named(name);
+        s.seed = Some(seed);
+        let scenarios = vec![s];
+        JobSpec {
+            key: super::super::cache::sweep_key(&base, &scenarios),
+            resolved: base,
+            scenarios,
+        }
+    }
+
+    fn wait_done(t: &JobTable, id: &str) -> JobView {
+        for _ in 0..1000 {
+            let v = t.view(id).expect("job exists");
+            if v.status == "done" || v.status == "failed" {
+                return v;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("job {id} did not finish");
+    }
+
+    #[test]
+    fn lifecycle_queued_to_done() {
+        let t = table(8, 1);
+        let id = match t.submit(spec("a", 1)) {
+            Admission::Accepted { id } => id,
+            other => panic!("expected Accepted, got {other:?}"),
+        };
+        let v = wait_done(&t, &id);
+        assert_eq!(v.status, "done");
+        assert!(v.run_s.is_some());
+        assert!(v.wait_s.is_some());
+        assert!(v.error.is_none());
+        assert_eq!(t.counts(), (0, 0));
+    }
+
+    #[test]
+    fn duplicates_collapse_to_one_job() {
+        let t = table(8, 1);
+        let id = match t.submit(spec("a", 2)) {
+            Admission::Accepted { id } => id,
+            other => panic!("{other:?}"),
+        };
+        for _ in 0..4 {
+            match t.submit(spec("a", 2)) {
+                Admission::Duplicate { id: d } => assert_eq!(d, id),
+                // the first duplicate may race job completion and land
+                // on the instant-done path — still the same id
+                Admission::Accepted { id: d } => assert_eq!(d, id),
+                other => panic!("{other:?}"),
+            }
+        }
+        wait_done(&t, &id);
+        assert_eq!(t.list().len(), 1, "one job for N identical submits");
+    }
+
+    #[test]
+    fn full_queue_sheds() {
+        // no runners draining: occupy the queue with distinct jobs
+        let t = JobTable::start(
+            2,
+            1,
+            Arc::new(ResultCache::new(1 << 20)),
+            Arc::new(ReplayPool::new(1)),
+            Arc::new(Metrics::new()),
+        );
+        // first job goes to the runner; make it slow enough to hold the
+        // runner by using a real (if tiny) replay, then fill the queue
+        let mut accepted = 0;
+        let mut shed = 0;
+        for i in 0..20u64 {
+            match t.submit(spec("flood", i)) {
+                Admission::Accepted { .. } => accepted += 1,
+                Admission::Shed { retry_after_s } => {
+                    assert!(retry_after_s >= 1);
+                    shed += 1;
+                }
+                Admission::Duplicate { .. } => {}
+            }
+        }
+        assert!(accepted >= 1);
+        assert!(shed >= 1, "20 rapid distinct submits must shed");
+    }
+
+    #[test]
+    fn cached_result_completes_instantly() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let s = spec("warm", 9);
+        let key = s.key.clone();
+        cache
+            .get_or_compute(&key, || Ok(b"already here".to_vec()))
+            .0
+            .unwrap();
+        let t = JobTable::start(
+            4,
+            1,
+            Arc::clone(&cache),
+            Arc::new(ReplayPool::new(1)),
+            Arc::new(Metrics::new()),
+        );
+        match t.submit(s) {
+            Admission::Accepted { id } => {
+                let v = t.view(&id).unwrap();
+                assert_eq!(v.status, "done", "no queue slot needed");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn view_reports_queue_positions() {
+        // a runnerless table would be ideal; approximate by flooding a
+        // 1-runner table and checking positions are 1-based and ordered
+        let t = table(8, 1);
+        let ids: Vec<String> = (0..4u64)
+            .filter_map(|i| match t.submit(spec("pos", i)) {
+                Admission::Accepted { id } => Some(id),
+                _ => None,
+            })
+            .collect();
+        // one list() call snapshots every position under a single lock
+        // acquisition, so the live runner cannot shift the queue
+        // between per-id reads
+        let positions: Vec<usize> = t
+            .list()
+            .iter()
+            .filter_map(|v| v.queue_position)
+            .collect();
+        for w in positions.windows(2) {
+            assert!(w[0] < w[1], "queue positions must be ordered");
+        }
+        for id in &ids {
+            wait_done(&t, id);
+        }
+    }
+
+    #[test]
+    fn done_but_evicted_result_requeues() {
+        // memory-only cache with a 1-byte budget: only the newest
+        // entry survives, so a finished job's result can vanish
+        let cache = Arc::new(ResultCache::new(1));
+        let t = JobTable::start(
+            4,
+            1,
+            Arc::clone(&cache),
+            Arc::new(ReplayPool::new(1)),
+            Arc::new(Metrics::new()),
+        );
+        let s = spec("evict", 1);
+        let key = s.key.clone();
+        let id = match t.submit(s) {
+            Admission::Accepted { id } => id,
+            other => panic!("{other:?}"),
+        };
+        wait_done(&t, &id);
+        // evict the job's result by inserting another entry
+        let other_key = "0".repeat(64);
+        cache
+            .get_or_compute(&other_key, || Ok(vec![0u8; 8]))
+            .0
+            .unwrap();
+        assert!(cache.lookup(&key).is_none(), "result evicted");
+        // resubmission must requeue and recompute, never dedup into a
+        // done job whose result cannot be fetched any more
+        match t.submit(spec("evict", 1)) {
+            Admission::Accepted { id: requeued } => {
+                assert_eq!(requeued, id)
+            }
+            other => panic!("expected a requeue, got {other:?}"),
+        }
+        let v = wait_done(&t, &id);
+        assert_eq!(v.status, "done");
+        assert!(cache.lookup(&key).is_some(), "result recomputed");
+    }
+
+    #[test]
+    fn gc_skips_unfinished_front_entries() {
+        let mut st = JobsInner {
+            jobs: HashMap::new(),
+            pending: VecDeque::new(),
+            order: VecDeque::new(),
+        };
+        let now = Instant::now();
+        let mk = |phase: Phase| JobRecord {
+            phase,
+            scenarios: 1,
+            submitted: now,
+            started: None,
+            finished: None,
+            error: None,
+            spec: None,
+        };
+        // a long-running job sits at the very front of the order...
+        st.jobs.insert("running".into(), mk(Phase::Running));
+        st.order.push_back("running".into());
+        // ...followed by more finished records than the cap allows
+        for i in 0..(MAX_TRACKED_JOBS + 10) {
+            let id = format!("done-{i}");
+            st.jobs.insert(id.clone(), mk(Phase::Done));
+            st.order.push_back(id);
+        }
+        gc(&mut st);
+        assert_eq!(
+            st.order.len(),
+            MAX_TRACKED_JOBS,
+            "gc must reclaim past an unfinished front entry"
+        );
+        assert!(
+            st.jobs.contains_key("running"),
+            "in-flight jobs survive gc"
+        );
+        assert!(!st.jobs.contains_key("done-0"), "oldest finished go");
+        assert!(st
+            .jobs
+            .contains_key(&format!("done-{}", MAX_TRACKED_JOBS + 9)));
+    }
+
+    #[test]
+    fn job_view_renders_json() {
+        let v = JobView {
+            id: "abc".into(),
+            status: "done",
+            queue_position: None,
+            scenarios: 3,
+            age_s: 1.5,
+            wait_s: Some(0.1),
+            run_s: Some(1.0),
+            error: None,
+        };
+        let j = v.to_json();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("scenarios").unwrap().as_u64(), Some(3));
+        assert_eq!(
+            j.get("result").unwrap().as_str(),
+            Some("/results/abc")
+        );
+        let v = JobView {
+            id: "def".into(),
+            status: "queued",
+            queue_position: Some(2),
+            scenarios: 1,
+            age_s: 0.0,
+            wait_s: None,
+            run_s: None,
+            error: None,
+        };
+        let j = v.to_json();
+        assert_eq!(j.get("queue_position").unwrap().as_u64(), Some(2));
+        assert!(j.get("result").is_none());
     }
 }

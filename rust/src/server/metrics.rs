@@ -7,6 +7,7 @@
 //! `name{label="v"} value` lines — so any off-the-shelf scraper can
 //! consume it, without this crate growing a client-library dependency.
 
+use super::cache::Outcome;
 use crate::util::stats;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,6 +37,20 @@ impl LatencyRing {
     }
 }
 
+/// Point-in-time gauges owned by other components (replay pool, cache
+/// tiers, job table), sampled by the router at scrape time so this
+/// module stays dependency-free.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gauges {
+    pub replay_queue_depth: usize,
+    pub cache_entries: usize,
+    pub cache_bytes: usize,
+    pub store_entries: usize,
+    pub store_bytes: u64,
+    pub jobs_queued: usize,
+    pub jobs_running: usize,
+}
+
 /// One server's counter set.  All methods take `&self`; the struct is
 /// shared across connection-handler threads behind an `Arc`.
 pub struct Metrics {
@@ -45,8 +60,14 @@ pub struct Metrics {
     responses_5xx: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    store_hits: AtomicU64,
+    store_misses: AtomicU64,
     sweep_computations: AtomicU64,
     scenario_replays: AtomicU64,
+    jobs_submitted: AtomicU64,
+    jobs_done: AtomicU64,
+    jobs_failed: AtomicU64,
+    jobs_shed: AtomicU64,
     latency: Mutex<LatencyRing>,
 }
 
@@ -59,8 +80,14 @@ impl Metrics {
             responses_5xx: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            store_misses: AtomicU64::new(0),
             sweep_computations: AtomicU64::new(0),
             scenario_replays: AtomicU64::new(0),
+            jobs_submitted: AtomicU64::new(0),
+            jobs_done: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            jobs_shed: AtomicU64::new(0),
             latency: Mutex::new(LatencyRing::new()),
         }
     }
@@ -100,6 +127,33 @@ impl Metrics {
         self.cache_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A result served from the persistent disk tier.
+    pub fn on_disk_hit(&self) {
+        self.store_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A miss that also consulted (and missed) the disk tier.
+    pub fn on_disk_miss(&self) {
+        self.store_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shared accounting for a delivered cache outcome: memory hits,
+    /// disk hits, and misses (which also count a disk miss when a disk
+    /// tier was consulted).  Callers that surface an owner's error to a
+    /// waiter must not call this — nothing was served.
+    pub fn on_lookup_outcome(&self, outcome: Outcome, disk_enabled: bool) {
+        match outcome {
+            Outcome::Hit => self.on_cache_hit(),
+            Outcome::DiskHit => self.on_disk_hit(),
+            Outcome::Miss => {
+                self.on_cache_miss();
+                if disk_enabled {
+                    self.on_disk_miss();
+                }
+            }
+        }
+    }
+
     /// One underlying sweep actually replayed (`replays` scenarios).
     pub fn on_sweep_computed(&self, replays: usize) {
         self.sweep_computations.fetch_add(1, Ordering::Relaxed);
@@ -107,24 +161,46 @@ impl Metrics {
             .fetch_add(replays as u64, Ordering::Relaxed);
     }
 
+    /// An async job admitted (queued or instantly completed).
+    pub fn on_job_submitted(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An async job reached a terminal state.
+    pub fn on_job_finished(&self, ok: bool) {
+        let counter =
+            if ok { &self.jobs_done } else { &self.jobs_failed };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An async submission shed by the bounded admission queue (429).
+    pub fn on_job_shed(&self) {
+        self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn cache_hit_count(&self) -> u64 {
         self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_hit_count(&self) -> u64 {
+        self.store_hits.load(Ordering::Relaxed)
     }
 
     pub fn sweep_computation_count(&self) -> u64 {
         self.sweep_computations.load(Ordering::Relaxed)
     }
 
-    /// Render the text exposition.  Gauges owned by other components
-    /// (replay queue depth, cache occupancy) are passed in by the
-    /// router so this module stays dependency-free.
-    pub fn render(
-        &self,
-        queue_depth: usize,
-        cache_entries: usize,
-        cache_bytes: usize,
-    ) -> String {
-        let mut out = String::with_capacity(1024);
+    pub fn jobs_shed_count(&self) -> u64 {
+        self.jobs_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_submitted_count(&self) -> u64 {
+        self.jobs_submitted.load(Ordering::Relaxed)
+    }
+
+    /// Render the text exposition over the sampled gauges.
+    pub fn render(&self, g: &Gauges) -> String {
+        let mut out = String::with_capacity(1536);
         let mut line = |name: &str, value: String| {
             let _ = writeln!(out, "{name} {value}");
         };
@@ -153,6 +229,14 @@ impl Metrics {
             self.cache_misses.load(Ordering::Relaxed).to_string(),
         );
         line(
+            "icecloud_store_hits_total",
+            self.store_hits.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_store_misses_total",
+            self.store_misses.load(Ordering::Relaxed).to_string(),
+        );
+        line(
             "icecloud_sweep_computations_total",
             self.sweep_computations.load(Ordering::Relaxed).to_string(),
         );
@@ -160,9 +244,38 @@ impl Metrics {
             "icecloud_scenario_replays_total",
             self.scenario_replays.load(Ordering::Relaxed).to_string(),
         );
-        line("icecloud_replay_queue_depth", queue_depth.to_string());
-        line("icecloud_result_cache_entries", cache_entries.to_string());
-        line("icecloud_result_cache_bytes", cache_bytes.to_string());
+        line(
+            "icecloud_jobs_submitted_total",
+            self.jobs_submitted.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_jobs_finished_total{status=\"done\"}",
+            self.jobs_done.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_jobs_finished_total{status=\"failed\"}",
+            self.jobs_failed.load(Ordering::Relaxed).to_string(),
+        );
+        line(
+            "icecloud_jobs_shed_total",
+            self.jobs_shed.load(Ordering::Relaxed).to_string(),
+        );
+        line("icecloud_jobs_queued", g.jobs_queued.to_string());
+        line("icecloud_jobs_running", g.jobs_running.to_string());
+        line(
+            "icecloud_replay_queue_depth",
+            g.replay_queue_depth.to_string(),
+        );
+        line(
+            "icecloud_result_cache_entries",
+            g.cache_entries.to_string(),
+        );
+        line("icecloud_result_cache_bytes", g.cache_bytes.to_string());
+        line(
+            "icecloud_result_store_entries",
+            g.store_entries.to_string(),
+        );
+        line("icecloud_result_store_bytes", g.store_bytes.to_string());
         let samples = self.latency.lock().unwrap().buf.clone();
         let ps = stats::percentiles(&samples, &[0.5, 0.9, 0.99]);
         for (q, p) in [("0.5", ps[0]), ("0.9", ps[1]), ("0.99", ps[2])] {
@@ -192,6 +305,18 @@ impl Default for Metrics {
 mod tests {
     use super::*;
 
+    fn gauges() -> Gauges {
+        Gauges {
+            replay_queue_depth: 2,
+            cache_entries: 1,
+            cache_bytes: 512,
+            store_entries: 3,
+            store_bytes: 2048,
+            jobs_queued: 4,
+            jobs_running: 1,
+        }
+    }
+
     #[test]
     fn counters_appear_in_exposition() {
         let m = Metrics::new();
@@ -201,8 +326,12 @@ mod tests {
         m.on_response(404, 0.001);
         m.on_cache_hit();
         m.on_cache_miss();
+        m.on_disk_hit();
         m.on_sweep_computed(3);
-        let text = m.render(2, 1, 512);
+        m.on_job_submitted();
+        m.on_job_finished(true);
+        m.on_job_shed();
+        let text = m.render(&gauges());
         assert!(text.contains("icecloud_http_requests_total 2"), "{text}");
         assert!(
             text.contains("icecloud_http_responses_total{class=\"2xx\"} 1"),
@@ -217,6 +346,7 @@ mod tests {
             text.contains("icecloud_sweep_cache_misses_total 1"),
             "{text}"
         );
+        assert!(text.contains("icecloud_store_hits_total 1"), "{text}");
         assert!(
             text.contains("icecloud_sweep_computations_total 1"),
             "{text}"
@@ -225,8 +355,47 @@ mod tests {
             text.contains("icecloud_scenario_replays_total 3"),
             "{text}"
         );
+        assert!(
+            text.contains("icecloud_jobs_submitted_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_jobs_finished_total{status=\"done\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("icecloud_jobs_shed_total 1"), "{text}");
+        assert!(text.contains("icecloud_jobs_queued 4"), "{text}");
+        assert!(text.contains("icecloud_jobs_running 1"), "{text}");
         assert!(text.contains("icecloud_replay_queue_depth 2"), "{text}");
         assert!(text.contains("icecloud_result_cache_bytes 512"), "{text}");
+        assert!(
+            text.contains("icecloud_result_store_entries 3"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_result_store_bytes 2048"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn lookup_outcome_accounting() {
+        let m = Metrics::new();
+        m.on_lookup_outcome(Outcome::Hit, true);
+        m.on_lookup_outcome(Outcome::DiskHit, true);
+        m.on_lookup_outcome(Outcome::Miss, true);
+        m.on_lookup_outcome(Outcome::Miss, false);
+        let text = m.render(&Gauges::default());
+        assert!(text.contains("icecloud_sweep_cache_hits_total 1"), "{text}");
+        assert!(
+            text.contains("icecloud_sweep_cache_misses_total 2"),
+            "{text}"
+        );
+        assert!(text.contains("icecloud_store_hits_total 1"), "{text}");
+        assert!(
+            text.contains("icecloud_store_misses_total 1"),
+            "{text}"
+        );
     }
 
     #[test]
@@ -235,7 +404,7 @@ mod tests {
         for i in 0..100 {
             m.on_response(200, i as f64 / 1000.0);
         }
-        let text = m.render(0, 0, 0);
+        let text = m.render(&Gauges::default());
         assert!(
             text.contains("icecloud_request_latency_seconds{quantile=\"0.5\"}"),
             "{text}"
@@ -249,7 +418,7 @@ mod tests {
         for _ in 0..5 {
             m.on_early_reject(413);
         }
-        let text = m.render(0, 0, 0);
+        let text = m.render(&Gauges::default());
         assert!(
             text.contains("icecloud_http_responses_total{class=\"4xx\"} 5"),
             "{text}"
@@ -260,7 +429,7 @@ mod tests {
 
     #[test]
     fn empty_latency_window_renders_nan() {
-        let text = Metrics::new().render(0, 0, 0);
+        let text = Metrics::new().render(&Gauges::default());
         assert!(
             text.contains("quantile=\"0.99\"} NaN"),
             "{text}"

@@ -5,25 +5,28 @@
 //! different NAT timeout?").  PR 1 made those answers a deterministic
 //! one-shot CLI; this subsystem makes them a *service*: a zero-
 //! dependency HTTP/1.1 server (`http`) in front of the sweep engine,
-//! with a shared replay worker pool (`jobs`), a content-addressed
-//! result cache with single-flight deduplication (`cache`), request
-//! routing (`router`) and a `/metrics` exposition (`metrics`).
+//! with a shared replay worker pool and async job table (`jobs`), a
+//! two-tier content-addressed result cache — in-memory LRU with
+//! single-flight deduplication (`cache`) over a persistent disk store
+//! (`store`) — request routing (`router`) and a `/metrics` exposition
+//! (`metrics`).
 //!
 //! Determinism is the scaling story: identical scenario → byte-
 //! identical summary, so the cache turns heavy identical-request
-//! traffic into a handful of actual replays.  HEPCloud
-//! (arXiv:1710.00100) and the US ATLAS/CMS blueprint (arXiv:2304.07376)
-//! frame exactly this shape of persistent cost/provisioning decision
-//! service in front of cloud campaign models.
+//! traffic into a handful of actual replays, and the disk tier makes
+//! those replays survive restarts — the same durability concern that
+//! drove IceCube's GPU workflows onto XRootD Origins (Schultz et al.,
+//! PNRP 2023) and HEPCloud's elastic-admission design (arXiv:1710.00100).
 //!
-//! Thread model (see DESIGN.md §12):
+//! Thread model (see DESIGN.md §12 and §14):
 //!
 //! ```text
 //! accept thread ──sync_channel(64)──▶ N connection handlers ──┐
 //!        (bounded handoff)               parse / route / write │
-//!                                                             ▼
-//!                         POST /sweep → cache (single-flight) ─▶
-//!                             replay pool: M campaign workers
+//!                                                              ▼
+//!    POST /sweep ──────────────▶ two-tier cache (single-flight) ─▶
+//!    POST /sweep?mode=async ─▶ job queue ─▶ K job runners ──▶ │
+//!        (bounded; 429 on overflow)     replay pool: M workers
 //! ```
 
 pub mod cache;
@@ -31,16 +34,19 @@ pub mod http;
 pub mod jobs;
 pub mod metrics;
 pub mod router;
+pub mod store;
 
 pub use cache::ResultCache;
-pub use jobs::ReplayPool;
+pub use jobs::{JobTable, ReplayPool};
 pub use metrics::Metrics;
 pub use router::AppState;
+pub use store::DiskStore;
 
 use crate::config::CampaignConfig;
 use http::{read_request, write_response, ReadError, Response};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -59,8 +65,16 @@ pub struct ServeConfig {
     pub http_threads: usize,
     /// Campaign-replay worker threads.
     pub replay_threads: usize,
-    /// Result-cache byte budget.
+    /// Result-cache (memory tier) byte budget.
     pub cache_bytes: usize,
+    /// Bounded async-job admission queue; submissions beyond this are
+    /// shed with `429 + Retry-After`.
+    pub queue_max: usize,
+    /// Async job-runner threads draining the admission queue.
+    pub job_runners: usize,
+    /// Persistent result-store root; `None` = memory-only (results do
+    /// not survive restarts).
+    pub store_dir: Option<PathBuf>,
     /// Base campaign every request's scenario spec resolves against.
     pub base: CampaignConfig,
 }
@@ -74,6 +88,9 @@ impl Default for ServeConfig {
                 .map(|n| n.get())
                 .unwrap_or(4),
             cache_bytes: 64 << 20,
+            queue_max: 32,
+            job_runners: 2,
+            store_dir: None,
             base: CampaignConfig::default(),
         }
     }
@@ -90,11 +107,27 @@ impl Server {
     pub fn bind(cfg: ServeConfig) -> Result<Server, String> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let disk = match &cfg.store_dir {
+            Some(dir) => Some(DiskStore::open(dir)?),
+            None => None,
+        };
+        let cache =
+            Arc::new(ResultCache::with_disk(cfg.cache_bytes, disk));
+        let pool = Arc::new(ReplayPool::new(cfg.replay_threads));
+        let metrics = Arc::new(Metrics::new());
+        let jobs = JobTable::start(
+            cfg.queue_max,
+            cfg.job_runners,
+            Arc::clone(&cache),
+            Arc::clone(&pool),
+            Arc::clone(&metrics),
+        );
         let state = Arc::new(AppState {
             base: cfg.base,
-            cache: ResultCache::new(cfg.cache_bytes),
-            pool: ReplayPool::new(cfg.replay_threads),
-            metrics: Metrics::new(),
+            cache,
+            pool,
+            metrics,
+            jobs,
         });
         Ok(Server {
             listener,
@@ -184,7 +217,9 @@ impl ServerHandle {
         &self.state
     }
 
-    /// Stop accepting, drain handler threads, and join.
+    /// Stop accepting, drain handler threads, and join.  Dropping the
+    /// last `AppState` reference afterwards joins the job runners too
+    /// (`JobTable::drop`), so a shut-down server leaves no threads.
     pub fn shutdown(self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock the accept loop with one last connection

@@ -1,26 +1,31 @@
-//! Request routing: the five-endpoint decision-support API.
+//! Request routing: the decision-support API.
 //!
-//! | route                | what it answers                                  |
-//! |----------------------|--------------------------------------------------|
-//! | `GET /healthz`       | liveness                                         |
-//! | `GET /matrix`        | the built-in what-if matrix, as override sets    |
-//! | `POST /sweep`        | replay a scenario spec (TOML or JSON body)       |
-//! | `GET /results/<key>` | re-fetch a cached sweep response by content key  |
-//! | `GET /metrics`       | counters + latency percentiles (text exposition) |
+//! | route                     | what it answers                               |
+//! |---------------------------|-----------------------------------------------|
+//! | `GET /healthz`            | liveness                                      |
+//! | `GET /matrix`             | the built-in what-if matrix, as override sets |
+//! | `POST /sweep`             | replay a scenario spec (TOML or JSON body)    |
+//! | `POST /sweep?mode=async`  | `202 {job_id}` — queue the sweep, poll later  |
+//! | `GET /jobs`               | every tracked async job, in submission order  |
+//! | `GET /jobs/<id>`          | one job: state, queue position, timings       |
+//! | `GET /results/<key>`      | re-fetch a cached sweep response by key       |
+//! | `GET /metrics`            | counters + latency percentiles (text)         |
 //!
 //! `POST /sweep` is where the subsystem earns its keep: resolve the
 //! spec against the server's base campaign, derive the content address
-//! (`cache::sweep_key`), and either serve bytes straight from the cache
-//! or run the matrix on the shared replay pool — with single-flight
-//! collapsing concurrent identical requests into one computation.
+//! (`cache::sweep_key`), and either serve bytes straight from a cache
+//! tier (memory, then disk) or run the matrix on the shared replay
+//! pool — with single-flight collapsing concurrent identical requests
+//! into one computation.  The async mode routes the same resolved spec
+//! through the bounded job queue instead of blocking the connection;
+//! a full queue sheds with `429 + Retry-After` (DESIGN.md §14).
 
-use super::cache::{sweep_key, Outcome, ResultCache};
+use super::cache::{render_sweep_body, sweep_key, Outcome};
 use super::http::{Request, Response};
-use super::jobs::ReplayPool;
-use super::metrics::Metrics;
+use super::jobs::{Admission, JobSpec};
+use super::metrics::Gauges;
 use crate::config::CampaignConfig;
 use crate::coordinator::ScenarioConfig;
-use crate::experiments;
 use crate::sweep;
 use crate::util::json::{self, Json};
 
@@ -31,34 +36,49 @@ pub const MAX_DURATION_S: u64 = 60 * 86_400;
 /// Largest ramp target / on-prem slot count one request may ask for.
 pub const MAX_FLEET: u32 = 100_000;
 
-/// Everything the request handlers share.
+/// Everything the request handlers share.  Cache, pool and metrics are
+/// `Arc`-shared with the job-runner threads (`jobs::JobTable`).
 pub struct AppState {
     pub base: CampaignConfig,
-    pub cache: ResultCache,
-    pub pool: ReplayPool,
-    pub metrics: Metrics,
+    pub cache: std::sync::Arc<super::cache::ResultCache>,
+    pub pool: std::sync::Arc<super::jobs::ReplayPool>,
+    pub metrics: std::sync::Arc<super::metrics::Metrics>,
+    pub jobs: super::jobs::JobTable,
 }
 
-/// Dispatch one parsed request to its handler.
+/// Dispatch one parsed request to its handler.  The query string is
+/// split off before matching, so `/healthz?x=1` still routes; only
+/// `POST /sweep` interprets it.
 pub fn route(state: &AppState, req: &Request) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             Response::json(200, b"{\"status\":\"ok\"}\n".to_vec())
         }
         ("GET", "/matrix") => matrix(),
-        ("POST", "/sweep") => sweep_post(state, req),
+        ("POST", "/sweep") => sweep_post(state, req, query),
         ("GET", "/metrics") => metrics(state),
+        ("GET", "/jobs") => jobs_list(state),
+        ("GET", path) if path.starts_with("/jobs/") => {
+            job_detail(state, &path["/jobs/".len()..])
+        }
         ("GET", path) if path.starts_with("/results/") => {
             results(state, &path["/results/".len()..])
         }
         // known paths, wrong method
-        (_, "/healthz" | "/matrix" | "/metrics") => {
+        (_, "/healthz" | "/matrix" | "/metrics" | "/jobs") => {
             Response::error(405, "method not allowed")
                 .with_header("Allow", "GET")
         }
         (_, "/sweep") => Response::error(405, "method not allowed")
             .with_header("Allow", "POST"),
-        (_, path) if path.starts_with("/results/") => {
+        (_, path)
+            if path.starts_with("/results/")
+                || path.starts_with("/jobs/") =>
+        {
             Response::error(405, "method not allowed")
                 .with_header("Allow", "GET")
         }
@@ -80,21 +100,95 @@ fn matrix() -> Response {
 }
 
 fn metrics(state: &AppState) -> Response {
-    let (entries, bytes) = state.cache.stats();
+    let (cache_entries, cache_bytes) = state.cache.stats();
+    let (store_entries, store_bytes) = state.cache.disk_stats();
+    let (jobs_queued, jobs_running) = state.jobs.counts();
     Response::text(
         200,
-        state
-            .metrics
-            .render(state.pool.queue_depth(), entries, bytes),
+        state.metrics.render(&Gauges {
+            replay_queue_depth: state.pool.queue_depth(),
+            cache_entries,
+            cache_bytes,
+            store_entries,
+            store_bytes,
+            jobs_queued,
+            jobs_running,
+        }),
     )
 }
 
+/// Counter contract: `icecloud_sweep_cache_{hits,misses}_total` count
+/// `POST /sweep` outcomes only (the request-dedup story), while
+/// `icecloud_store_hits_total` counts every body the disk tier
+/// actually served, whichever endpoint asked — so by-key fetches of a
+/// memory-resident entry deliberately count nothing here.
 fn results(state: &AppState, key: &str) -> Response {
-    match state.cache.get(key) {
-        Some(body) => Response::json_shared(200, body)
+    match state.cache.lookup(key) {
+        Some((body, Outcome::DiskHit)) => {
+            state.metrics.on_disk_hit();
+            Response::json_shared(200, body).with_header("X-Cache", "disk")
+        }
+        Some((body, _)) => Response::json_shared(200, body)
             .with_header("X-Cache", "hit"),
         None => Response::error(404, "no cached result under this key"),
     }
+}
+
+fn jobs_list(state: &AppState) -> Response {
+    let views = state.jobs.list();
+    let mut o = Json::obj();
+    o.set("count", Json::from(views.len()));
+    o.set(
+        "jobs",
+        Json::Arr(views.iter().map(|v| v.to_json()).collect()),
+    );
+    let mut body = o.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    Response::json(200, body)
+}
+
+fn job_detail(state: &AppState, id: &str) -> Response {
+    match state.jobs.view(id) {
+        Some(view) => {
+            let mut body = view.to_json().to_string_pretty().into_bytes();
+            body.push(b'\n');
+            Response::json(200, body)
+        }
+        None => Response::error(404, "no such job"),
+    }
+}
+
+/// The `POST /sweep` execution mode, parsed from the query string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SweepMode {
+    Sync,
+    Async,
+}
+
+/// Strict query parsing: only `mode=sync|async` is understood, and an
+/// unknown parameter is an error rather than a silent no-op (the same
+/// contract the body parsers follow).
+fn parse_sweep_query(query: Option<&str>) -> Result<SweepMode, String> {
+    let mut mode = SweepMode::Sync;
+    let Some(query) = query else {
+        return Ok(mode);
+    };
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match (k, v) {
+            ("mode", "sync") => mode = SweepMode::Sync,
+            ("mode", "async") => mode = SweepMode::Async,
+            ("mode", other) => {
+                return Err(format!(
+                    "unknown sweep mode '{other}' (sync|async)"
+                ))
+            }
+            (other, _) => {
+                return Err(format!("unknown query parameter '{other}'"))
+            }
+        }
+    }
+    Ok(mode)
 }
 
 /// Parse the request body into `(resolved base, scenarios)`.  JSON and
@@ -162,7 +256,15 @@ fn validate_limits(
     Ok(())
 }
 
-fn sweep_post(state: &AppState, req: &Request) -> Response {
+fn sweep_post(
+    state: &AppState,
+    req: &Request,
+    query: Option<&str>,
+) -> Response {
+    let mode = match parse_sweep_query(query) {
+        Ok(mode) => mode,
+        Err(e) => return Response::error(400, &e),
+    };
     let (resolved, scenarios) = match parse_sweep_body(&state.base, req) {
         Ok(parsed) => parsed,
         Err(e) => return Response::error(400, &e),
@@ -172,6 +274,18 @@ fn sweep_post(state: &AppState, req: &Request) -> Response {
     }
 
     let key = sweep_key(&resolved, &scenarios);
+    match mode {
+        SweepMode::Sync => sweep_sync(state, key, resolved, scenarios),
+        SweepMode::Async => sweep_async(state, key, resolved, scenarios),
+    }
+}
+
+fn sweep_sync(
+    state: &AppState,
+    key: String,
+    resolved: CampaignConfig,
+    scenarios: Vec<ScenarioConfig>,
+) -> Response {
     let replays = scenarios.len();
     let (result, outcome) = state.cache.get_or_compute(&key, || {
         let rows = state.pool.run_matrix(&resolved, &scenarios)?;
@@ -179,60 +293,111 @@ fn sweep_post(state: &AppState, req: &Request) -> Response {
         state.metrics.on_sweep_computed(replays);
         Ok(render_sweep_body(&key, &rows))
     });
-    // accounting contract: every Miss (attempted computation) counts as
-    // a miss whether or not it succeeded; a Hit counts only when it
-    // delivered bytes (a waiter surfacing the owner's error served
-    // nothing)
-    if outcome == Outcome::Miss {
-        state.metrics.on_cache_miss();
-    }
+    // accounting contract: every delivered outcome counts exactly once;
+    // a Miss (attempted computation) counts whether or not it
+    // succeeded, while a waiter surfacing the owner's error served
+    // nothing and counts nothing
     match (result, outcome) {
         (Ok(body), Outcome::Hit) => {
-            state.metrics.on_cache_hit();
+            state.metrics.on_lookup_outcome(
+                Outcome::Hit,
+                state.cache.has_disk(),
+            );
             Response::json_shared(200, body).with_header("X-Cache", "hit")
         }
+        (Ok(body), Outcome::DiskHit) => {
+            state.metrics.on_lookup_outcome(
+                Outcome::DiskHit,
+                state.cache.has_disk(),
+            );
+            Response::json_shared(200, body)
+                .with_header("X-Cache", "disk")
+        }
         (Ok(body), Outcome::Miss) => {
+            state.metrics.on_lookup_outcome(
+                Outcome::Miss,
+                state.cache.has_disk(),
+            );
             Response::json_shared(200, body)
                 .with_header("X-Cache", "miss")
+        }
+        (Err(e), Outcome::Miss) => {
+            state.metrics.on_lookup_outcome(
+                Outcome::Miss,
+                state.cache.has_disk(),
+            );
+            Response::error(500, &e)
         }
         (Err(e), _) => Response::error(500, &e),
     }
 }
 
-/// The cached response body: content key + summary rows.  Everything in
-/// it is a pure function of the resolved request, so byte-identical
-/// requests get byte-identical bodies whether replayed or cached.
-fn render_sweep_body(
-    key: &str,
-    rows: &[sweep::ScenarioSummary],
-) -> Vec<u8> {
-    let mut o = Json::obj();
-    o.set("key", Json::from(key));
-    o.set("rows", experiments::sweep::to_json(rows));
-    let mut body = o.to_string_pretty().into_bytes();
-    body.push(b'\n');
-    body
+fn sweep_async(
+    state: &AppState,
+    key: String,
+    resolved: CampaignConfig,
+    scenarios: Vec<ScenarioConfig>,
+) -> Response {
+    let admission = state.jobs.submit(JobSpec {
+        key,
+        resolved,
+        scenarios,
+    });
+    match admission {
+        Admission::Accepted { id } | Admission::Duplicate { id } => {
+            let status = state
+                .jobs
+                .view(&id)
+                .map(|v| v.status)
+                .unwrap_or("queued");
+            let mut o = Json::obj();
+            o.set("job_id", Json::from(id.as_str()));
+            o.set("status", Json::from(status));
+            o.set("poll", Json::from(format!("/jobs/{id}")));
+            let mut body = o.to_string_pretty().into_bytes();
+            body.push(b'\n');
+            Response::json(202, body)
+                .with_header("Location", &format!("/jobs/{id}"))
+        }
+        Admission::Shed { retry_after_s } => {
+            Response::error(429, "job queue is full; retry later")
+                .with_header("Retry-After", &retry_after_s.to_string())
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::cache::ResultCache;
+    use super::super::jobs::{JobTable, ReplayPool};
+    use super::super::metrics::Metrics;
     use super::*;
     use crate::config::RampStep;
     use crate::sim::{DAY, HOUR};
+    use std::sync::Arc;
 
-    fn tiny_state() -> AppState {
+    fn tiny_base() -> CampaignConfig {
         let mut base = CampaignConfig::default();
         base.duration_s = 2 * HOUR;
         base.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
         base.outage = None;
         base.onprem.slots = 8;
         base.generator.min_backlog = 30;
-        AppState {
-            base,
-            cache: ResultCache::new(1 << 20),
-            pool: ReplayPool::new(2),
-            metrics: Metrics::new(),
-        }
+        base
+    }
+
+    fn tiny_state() -> AppState {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let pool = Arc::new(ReplayPool::new(2));
+        let metrics = Arc::new(Metrics::new());
+        let jobs = JobTable::start(
+            4,
+            1,
+            Arc::clone(&cache),
+            Arc::clone(&pool),
+            Arc::clone(&metrics),
+        );
+        AppState { base: tiny_base(), cache, pool, metrics, jobs }
     }
 
     fn get(path: &str) -> Request {
@@ -262,12 +427,19 @@ mod tests {
     fn healthz_and_matrix_and_404_405() {
         let state = tiny_state();
         assert_eq!(route(&state, &get("/healthz")).status, 200);
+        // query strings do not break routing
+        assert_eq!(route(&state, &get("/healthz?probe=1")).status, 200);
         let m = route(&state, &get("/matrix"));
         assert_eq!(m.status, 200);
         let text = String::from_utf8(m.body.to_vec()).unwrap();
         assert!(text.contains("baseline"), "{text}");
         assert_eq!(route(&state, &get("/nope")).status, 404);
         assert_eq!(route(&state, &get("/sweep")).status, 405);
+        assert_eq!(route(&state, &post("/jobs", "", "")).status, 405);
+        assert_eq!(
+            route(&state, &post("/jobs/abc", "", "")).status,
+            405
+        );
         let r = Request { method: "DELETE".into(), ..get("/healthz") };
         assert_eq!(route(&state, &r).status, 405);
     }
@@ -363,6 +535,117 @@ mod tests {
     }
 
     #[test]
+    fn bad_sweep_queries_rejected() {
+        let state = tiny_state();
+        for path in [
+            "/sweep?mode=later",
+            "/sweep?priority=high",
+            "/sweep?mode",
+        ] {
+            let resp = route(
+                &state,
+                &post(path, "application/toml", "[scenario.a]\n"),
+            );
+            assert_eq!(resp.status, 400, "'{path}' must be rejected");
+        }
+        // an explicit sync mode is the default path
+        let resp = route(
+            &state,
+            &post("/sweep?mode=sync", "application/toml", "[scenario.a]\n"),
+        );
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn async_submit_races_through_job_lifecycle() {
+        let state = tiny_state();
+        let resp = route(
+            &state,
+            &post(
+                "/sweep?mode=async",
+                "application/toml",
+                "[scenario.a]\nseed = 3\n",
+            ),
+        );
+        assert_eq!(
+            resp.status,
+            202,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let doc = json::parse(
+            std::str::from_utf8(&resp.body).unwrap().trim(),
+        )
+        .unwrap();
+        let id = doc.get("job_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(id.len(), 64);
+        assert_eq!(
+            resp.header_value("Location"),
+            Some(format!("/jobs/{id}").as_str())
+        );
+
+        // poll until done
+        let mut done = None;
+        for _ in 0..1000 {
+            let poll = route(&state, &get(&format!("/jobs/{id}")));
+            assert_eq!(poll.status, 200);
+            let j = json::parse(
+                std::str::from_utf8(&poll.body).unwrap().trim(),
+            )
+            .unwrap();
+            let status =
+                j.get("status").unwrap().as_str().unwrap().to_string();
+            assert_ne!(status, "failed");
+            if status == "done" {
+                done = Some(j);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let job = done.expect("job finished");
+        assert_eq!(
+            job.get("result").unwrap().as_str(),
+            Some(format!("/results/{id}").as_str())
+        );
+
+        // the async result equals the sync response for the same spec
+        let fetched = route(&state, &get(&format!("/results/{id}")));
+        assert_eq!(fetched.status, 200);
+        let sync = route(
+            &state,
+            &post(
+                "/sweep",
+                "application/toml",
+                "[scenario.a]\nseed = 3\n",
+            ),
+        );
+        assert_eq!(sync.status, 200);
+        assert_eq!(sync.body, fetched.body);
+
+        // the jobs listing tracks it
+        let listing = route(&state, &get("/jobs"));
+        assert_eq!(listing.status, 200);
+        let l = json::parse(
+            std::str::from_utf8(&listing.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(l.get("count").unwrap().as_u64(), Some(1));
+
+        assert_eq!(route(&state, &get("/jobs/0000")).status, 404);
+    }
+
+    #[test]
+    fn async_invalid_body_never_reaches_the_queue() {
+        let state = tiny_state();
+        let resp = route(
+            &state,
+            &post("/sweep?mode=async", "application/toml", "{}"),
+        );
+        assert_eq!(resp.status, 400);
+        assert_eq!(state.metrics.jobs_submitted_count(), 0);
+    }
+
+    #[test]
     fn oversized_requests_rejected() {
         let state = tiny_state();
         let mut many = String::new();
@@ -407,6 +690,11 @@ mod tests {
         );
         assert!(
             text.contains("icecloud_result_cache_entries 1"),
+            "{text}"
+        );
+        assert!(text.contains("icecloud_jobs_queued 0"), "{text}");
+        assert!(
+            text.contains("icecloud_result_store_entries 0"),
             "{text}"
         );
     }

@@ -1,0 +1,428 @@
+//! Content-addressed persistent result store (the disk tier).
+//!
+//! The memory LRU (`cache`) makes identical-request traffic cheap, but
+//! it evaporates on restart and its byte budget bounds total capacity.
+//! This module is the durable tier underneath it: one file per cached
+//! sweep response, keyed by the same canonical-JSON SHA-256 the memory
+//! tier uses, surviving restarts the way IceCube's XRootD Origins keep
+//! photon tables across site reboots (Schultz et al., PNRP 2023).
+//!
+//! Layout (all under one root directory):
+//!
+//! ```text
+//! <root>/entries/<key>        one verified entry per 64-hex key
+//! <root>/entries/.tmp.<pid>.<seq>   in-flight writes (crash debris)
+//! <root>/quarantine/<key>     entries that failed verification
+//! ```
+//!
+//! Entry format: a single header line
+//! `icecloud-store/1 <key> <sha256(body)> <body-len>\n` followed by the
+//! raw body bytes.  The header binds the *filename* (a renamed file
+//! serves nothing) and the *content* (bit rot and truncation are
+//! detected), both checked on startup scan and again on every read.
+//!
+//! Crash-safety argument (DESIGN.md §14): writes go to a `.tmp.` file,
+//! are fsync'd, and enter the namespace only via an atomic rename (the
+//! directory is fsync'd best-effort afterwards).  A crash therefore
+//! leaves either (a) no entry, (b) a complete verified entry, or (c)
+//! `.tmp.` debris — which `open` deletes.  Nothing under `entries/`
+//! is ever served without passing verification; anything that fails is
+//! moved to `quarantine/` for post-mortem (unique-suffixed so repeat
+//! failures never overwrite earlier evidence; deleted only as a last
+//! resort when the move itself fails, so a bad entry can never be
+//! served), and a corrupt entry can never panic the server.
+
+use crate::util::sha256;
+use std::collections::HashMap;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Entry header magic; bump on any layout change.
+const MAGIC: &str = "icecloud-store/1";
+
+/// A persistent content-addressed store rooted at one directory.
+pub struct DiskStore {
+    entries_dir: PathBuf,
+    quarantine_dir: PathBuf,
+    /// key -> body length, rebuilt by scanning on open.
+    index: Mutex<HashMap<String, u64>>,
+    tmp_seq: AtomicU64,
+}
+
+/// A key is the lowercase-hex SHA-256 the cache derives from the
+/// resolved request; nothing else may name an entry file.
+fn valid_key(key: &str) -> bool {
+    key.len() == 64
+        && key
+            .bytes()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+/// Read an entry file and verify header magic, key binding, length and
+/// body digest.  Returns the body bytes.
+fn read_verified(path: &Path, key: &str) -> Result<Vec<u8>, String> {
+    let raw =
+        fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let nl = raw
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or("no header line")?;
+    let header = std::str::from_utf8(&raw[..nl])
+        .map_err(|_| "non-UTF-8 header".to_string())?;
+    let mut parts = header.split(' ');
+    let (magic, hkey, hsha, hlen) = match (
+        parts.next(),
+        parts.next(),
+        parts.next(),
+        parts.next(),
+        parts.next(),
+    ) {
+        (Some(m), Some(k), Some(s), Some(l), None) => (m, k, s, l),
+        _ => return Err("malformed header".into()),
+    };
+    if magic != MAGIC {
+        return Err(format!("bad magic '{magic}'"));
+    }
+    if hkey != key {
+        return Err(format!("header key '{hkey}' does not match filename"));
+    }
+    let body = &raw[nl + 1..];
+    let len: usize = hlen.parse().map_err(|_| format!("bad length '{hlen}'"))?;
+    if body.len() != len {
+        return Err(format!("body is {} bytes, header says {len}", body.len()));
+    }
+    if sha256::hex_digest(body) != hsha {
+        return Err("body digest mismatch".into());
+    }
+    Ok(body.to_vec())
+}
+
+/// Write header + body to `path` and flush it to the platter; the
+/// caller renames it into the namespace afterwards.
+fn write_entry(
+    path: &Path,
+    key: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(
+        format!(
+            "{MAGIC} {key} {} {}\n",
+            sha256::hex_digest(body),
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    f.write_all(body)?;
+    f.sync_all()
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the store at `root`, rebuilding the
+    /// index by scanning: `.tmp.` debris from a crashed writer is
+    /// deleted, every entry is verified, and anything that fails —
+    /// truncated, bit-rotted, renamed, or just not ours — is moved to
+    /// `quarantine/` instead of being served or trusted.
+    pub fn open(root: impl Into<PathBuf>) -> Result<DiskStore, String> {
+        let root = root.into();
+        let entries_dir = root.join("entries");
+        let quarantine_dir = root.join("quarantine");
+        for dir in [&entries_dir, &quarantine_dir] {
+            fs::create_dir_all(dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+        }
+        let store = DiskStore {
+            entries_dir,
+            quarantine_dir,
+            index: Mutex::new(HashMap::new()),
+            tmp_seq: AtomicU64::new(0),
+        };
+        let listing = fs::read_dir(&store.entries_dir)
+            .map_err(|e| format!("scan {}: {e}", store.entries_dir.display()))?;
+        for dirent in listing {
+            let dirent = match dirent {
+                Ok(d) => d,
+                Err(_) => continue,
+            };
+            let path = dirent.path();
+            if !path.is_file() {
+                continue;
+            }
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n.to_string(),
+                None => {
+                    store.quarantine_path(&path, "non-unicode");
+                    continue;
+                }
+            };
+            if name.starts_with(".tmp.") {
+                // a writer died between create and rename; the rename
+                // never happened, so this was never an entry
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            if !valid_key(&name) {
+                store.quarantine_path(&path, &name);
+                continue;
+            }
+            match read_verified(&path, &name) {
+                Ok(body) => {
+                    store
+                        .index
+                        .lock()
+                        .unwrap()
+                        .insert(name, body.len() as u64);
+                }
+                Err(_) => store.quarantine_path(&path, &name),
+            }
+        }
+        Ok(store)
+    }
+
+    /// Move a failed entry aside for post-mortem.  Repeat failures of
+    /// one key get unique suffixes so earlier evidence is preserved.
+    fn quarantine_path(&self, path: &Path, name: &str) {
+        let base = if name.is_empty() { "unnamed" } else { name };
+        let mut dest = self.quarantine_dir.join(base);
+        let mut n = 1u32;
+        while dest.exists() {
+            dest = self.quarantine_dir.join(format!("{base}.{n}"));
+            n += 1;
+        }
+        if fs::rename(path, &dest).is_err() {
+            // cross-device or permission trouble: last resort is to
+            // remove the file so it can never be served
+            let _ = fs::remove_file(path);
+        }
+    }
+
+    /// `(entries, body bytes)` currently indexed.
+    pub fn stats(&self) -> (usize, u64) {
+        let index = self.index.lock().unwrap();
+        (index.len(), index.values().sum())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.index.lock().unwrap().contains_key(key)
+    }
+
+    /// Files sitting in quarantine (tests and post-mortems).
+    pub fn quarantined(&self) -> usize {
+        fs::read_dir(&self.quarantine_dir)
+            .map(|d| d.filter_map(|e| e.ok()).count())
+            .unwrap_or(0)
+    }
+
+    /// Fetch and re-verify one entry.  A file that no longer verifies
+    /// (rot since the open scan) is quarantined and reported as a miss
+    /// — never served, never a panic.
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        if !self.contains(key) {
+            return None;
+        }
+        let path = self.entries_dir.join(key);
+        match read_verified(&path, key) {
+            Ok(body) => Some(body),
+            Err(_) => {
+                self.index.lock().unwrap().remove(key);
+                self.quarantine_path(&path, key);
+                None
+            }
+        }
+    }
+
+    /// Persist one entry: write-to-temp, fsync, atomic rename into the
+    /// namespace, fsync the directory (best-effort).  Re-putting an
+    /// existing key is a no-op — the store is content-addressed, so one
+    /// key names one body forever.
+    pub fn put(&self, key: &str, body: &[u8]) -> Result<(), String> {
+        if !valid_key(key) {
+            return Err(format!("invalid store key '{key}'"));
+        }
+        if self.contains(key) {
+            return Ok(());
+        }
+        let tmp = self.entries_dir.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        if let Err(e) = write_entry(&tmp, key, body) {
+            let _ = fs::remove_file(&tmp);
+            return Err(format!("write {}: {e}", tmp.display()));
+        }
+        let dest = self.entries_dir.join(key);
+        if let Err(e) = fs::rename(&tmp, &dest) {
+            let _ = fs::remove_file(&tmp);
+            return Err(format!("rename into {}: {e}", dest.display()));
+        }
+        // entry durability needs the directory entry on disk too; not
+        // every platform lets us open a directory, so best-effort
+        if let Ok(dir) = File::open(&self.entries_dir) {
+            let _ = dir.sync_all();
+        }
+        self.index
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), body.len() as u64);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    /// A unique scratch root per test (std-only; no tempfile crate).
+    fn scratch() -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "icecloud-store-unit-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn key(i: u8) -> String {
+        format!("{i:064x}")
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_stats() {
+        let root = scratch();
+        let store = DiskStore::open(&root).unwrap();
+        assert_eq!(store.stats(), (0, 0));
+        store.put(&key(1), b"hello world").unwrap();
+        assert!(store.contains(&key(1)));
+        assert_eq!(store.get(&key(1)).unwrap(), b"hello world");
+        assert_eq!(store.stats(), (1, 11));
+        assert!(store.get(&key(2)).is_none());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_rebuilds_index() {
+        let root = scratch();
+        {
+            let store = DiskStore::open(&root).unwrap();
+            store.put(&key(1), b"aaa").unwrap();
+            store.put(&key(2), b"bbbb").unwrap();
+        }
+        let store = DiskStore::open(&root).unwrap();
+        assert_eq!(store.stats(), (2, 7));
+        assert_eq!(store.get(&key(2)).unwrap(), b"bbbb");
+        assert_eq!(store.quarantined(), 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn repeated_put_is_idempotent() {
+        let root = scratch();
+        let store = DiskStore::open(&root).unwrap();
+        store.put(&key(3), b"body").unwrap();
+        store.put(&key(3), b"body").unwrap();
+        assert_eq!(store.stats(), (1, 4));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn invalid_keys_rejected() {
+        let root = scratch();
+        let store = DiskStore::open(&root).unwrap();
+        let nonhex = "Z".repeat(64);
+        let short_hex = "a".repeat(63);
+        for bad in ["", "short", nonhex.as_str(), short_hex.as_str()] {
+            assert!(store.put(bad, b"x").is_err(), "key '{bad}'");
+        }
+        // uppercase hex is not canonical either
+        assert!(store.put(&"A".repeat(64), b"x").is_err());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn truncated_entry_quarantined_on_open() {
+        let root = scratch();
+        {
+            let store = DiskStore::open(&root).unwrap();
+            store.put(&key(4), b"a body that will be truncated").unwrap();
+        }
+        let path = root.join("entries").join(key(4));
+        let raw = fs::read(&path).unwrap();
+        fs::write(&path, &raw[..raw.len() - 5]).unwrap();
+        let store = DiskStore::open(&root).unwrap();
+        assert_eq!(store.stats(), (0, 0));
+        assert!(store.get(&key(4)).is_none());
+        assert_eq!(store.quarantined(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bitrot_after_open_quarantined_on_get() {
+        let root = scratch();
+        let store = DiskStore::open(&root).unwrap();
+        store.put(&key(5), b"pristine bytes").unwrap();
+        let path = root.join("entries").join(key(5));
+        let mut raw = fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xff;
+        fs::write(&path, &raw).unwrap();
+        assert!(store.get(&key(5)).is_none(), "rotted entry must not serve");
+        assert!(!store.contains(&key(5)));
+        assert_eq!(store.quarantined(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn renamed_entry_does_not_serve_under_wrong_key() {
+        let root = scratch();
+        {
+            let store = DiskStore::open(&root).unwrap();
+            store.put(&key(6), b"bound to key 6").unwrap();
+            fs::rename(
+                root.join("entries").join(key(6)),
+                root.join("entries").join(key(7)),
+            )
+            .unwrap();
+        }
+        let store = DiskStore::open(&root).unwrap();
+        assert!(store.get(&key(7)).is_none());
+        assert_eq!(store.quarantined(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn tmp_debris_cleaned_on_open() {
+        let root = scratch();
+        {
+            let store = DiskStore::open(&root).unwrap();
+            store.put(&key(8), b"real").unwrap();
+        }
+        let debris = root.join("entries").join(".tmp.999.0");
+        fs::write(&debris, b"half-written").unwrap();
+        let store = DiskStore::open(&root).unwrap();
+        assert!(!debris.exists(), "crash debris must be deleted");
+        assert_eq!(store.stats(), (1, 4));
+        assert_eq!(store.quarantined(), 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn foreign_files_quarantined_not_served() {
+        let root = scratch();
+        {
+            let store = DiskStore::open(&root).unwrap();
+            store.put(&key(9), b"mine").unwrap();
+        }
+        fs::write(root.join("entries").join("README.txt"), b"not ours")
+            .unwrap();
+        let store = DiskStore::open(&root).unwrap();
+        assert_eq!(store.stats(), (1, 4));
+        assert_eq!(store.quarantined(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,200 @@
+//! Property-based tests over the two-tier result cache, driven by the
+//! in-tree mini-proptest harness (`util::proptest`).
+//!
+//! Invariants pinned across random op sequences (puts, gets, memory
+//! flushes):
+//!
+//! * the memory tier never exceeds its byte budget (except for the
+//!   deliberate single-oversized-entry carve-out);
+//! * get-after-put coherence between tiers: a body that went in comes
+//!   back bit-identical, whichever tier serves it;
+//! * with a disk tier, eviction from memory never loses an entry —
+//!   every key ever put remains retrievable forever;
+//! * memory-tier byte accounting equals the sum of resident bodies.
+
+use icecloud::server::cache::{Outcome, ResultCache};
+use icecloud::server::store::DiskStore;
+use icecloud::util::proptest::{ensure, forall, shrink_vec};
+use icecloud::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn scratch() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "icecloud-prop-cache-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Keys draw from a small space so sequences revisit them; the body is
+/// a pure function of the key (the production invariant: one content
+/// address names one byte string forever).
+fn key(i: u8) -> String {
+    format!("{i:064x}")
+}
+
+fn body(i: u8) -> Vec<u8> {
+    let len = 40 + (i as usize * 37) % 300;
+    (0..len).map(|j| i.wrapping_add(j as u8)).collect()
+}
+
+#[derive(Debug, Clone)]
+enum CacheOp {
+    /// `get_or_compute` of key `i` (computes `body(i)` on miss).
+    Put(u8),
+    /// Tier-aware `lookup` of key `i`.
+    Get(u8),
+    /// Drop the whole memory tier (models pressure / restarts).
+    ClearMem,
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<CacheOp> {
+    let n = 10 + rng.below(50) as usize;
+    (0..n)
+        .map(|_| match rng.below(8) {
+            0 => CacheOp::ClearMem,
+            1 | 2 | 3 => CacheOp::Put(rng.below(8) as u8),
+            _ => CacheOp::Get(rng.below(8) as u8),
+        })
+        .collect()
+}
+
+const BUDGET: usize = 600;
+
+/// Drive one op sequence against a cache, checking the invariants
+/// after every op.  `inserted` tracks the model: every key that has
+/// ever been put.
+fn drive(
+    cache: &ResultCache,
+    ops: &[CacheOp],
+    has_disk: bool,
+) -> Result<(), String> {
+    let mut inserted: Vec<u8> = Vec::new();
+    for op in ops {
+        match op {
+            CacheOp::Put(i) => {
+                let (r, _) = cache
+                    .get_or_compute(&key(*i), || Ok(body(*i)));
+                let served = r.map_err(|e| format!("put failed: {e}"))?;
+                ensure(
+                    served.as_slice() == body(*i).as_slice(),
+                    format!("put {i} served wrong bytes"),
+                )?;
+                if !inserted.contains(i) {
+                    inserted.push(*i);
+                }
+            }
+            CacheOp::Get(i) => match cache.lookup(&key(*i)) {
+                Some((served, outcome)) => {
+                    ensure(
+                        inserted.contains(i),
+                        format!("phantom key {i} served"),
+                    )?;
+                    ensure(
+                        served.as_slice() == body(*i).as_slice(),
+                        format!("get {i} served wrong bytes"),
+                    )?;
+                    ensure(
+                        outcome != Outcome::Miss,
+                        "lookup never computes".to_string(),
+                    )?;
+                }
+                None => {
+                    // without disk, eviction may lose entries; with
+                    // disk, nothing ever disappears
+                    ensure(
+                        !(has_disk && inserted.contains(i)),
+                        format!("disk tier lost key {i}"),
+                    )?;
+                }
+            },
+            CacheOp::ClearMem => cache.clear_memory(),
+        }
+        let (entries, bytes) = cache.stats();
+        ensure(
+            bytes <= BUDGET || entries == 1,
+            format!(
+                "memory tier over budget: {bytes} bytes in {entries} \
+                 entries (budget {BUDGET})"
+            ),
+        )?;
+    }
+    // terminal coherence: with a disk tier every inserted key must
+    // still serve its exact bytes, memory evictions notwithstanding
+    if has_disk {
+        for i in &inserted {
+            let (served, _) = cache
+                .lookup(&key(*i))
+                .ok_or_else(|| format!("final lookup lost key {i}"))?;
+            ensure(
+                served.as_slice() == body(*i).as_slice(),
+                format!("final lookup of {i} served wrong bytes"),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_two_tier_cache_invariants() {
+    forall(
+        "two-tier-cache",
+        0xCAC4E,
+        25,
+        gen_ops,
+        shrink_vec,
+        |ops| {
+            let root = scratch();
+            let disk = DiskStore::open(&root)
+                .map_err(|e| format!("open store: {e}"))?;
+            let cache = ResultCache::with_disk(BUDGET, Some(disk));
+            let result = drive(&cache, ops, true);
+            // nothing in this workload is corrupt, so nothing may have
+            // been quarantined, and the disk index must cover exactly
+            // the distinct keys ever put
+            let verdict = result.and_then(|()| {
+                let reopened = DiskStore::open(&root)
+                    .map_err(|e| format!("reopen store: {e}"))?;
+                let puts: std::collections::HashSet<u8> = ops
+                    .iter()
+                    .filter_map(|op| match op {
+                        CacheOp::Put(i) => Some(*i),
+                        _ => None,
+                    })
+                    .collect();
+                ensure(
+                    reopened.stats().0 == puts.len(),
+                    format!(
+                        "reopened store has {} entries for {} puts",
+                        reopened.stats().0,
+                        puts.len()
+                    ),
+                )?;
+                ensure(
+                    reopened.quarantined() == 0,
+                    "clean workload must not quarantine".to_string(),
+                )
+            });
+            let _ = std::fs::remove_dir_all(&root);
+            verdict
+        },
+    );
+}
+
+#[test]
+fn prop_memory_only_cache_invariants() {
+    forall(
+        "memory-only-cache",
+        0xCAC4F,
+        25,
+        gen_ops,
+        shrink_vec,
+        |ops| {
+            let cache = ResultCache::new(BUDGET);
+            drive(&cache, ops, false)
+        },
+    );
+}

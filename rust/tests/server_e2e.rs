@@ -36,6 +36,7 @@ fn start_server() -> (ServerHandle, String) {
         replay_threads: 2,
         cache_bytes: 1 << 20,
         base: tiny_base(),
+        ..ServeConfig::default()
     })
     .expect("bind ephemeral port");
     let handle = server.spawn().expect("spawn server");

@@ -1,0 +1,331 @@
+//! End-to-end tests for the async job API over real sockets.
+//!
+//! Each test binds its own server on an ephemeral 127.0.0.1 port and
+//! talks to it with the in-tree HTTP client, so submission, polling,
+//! admission control and result fetching are exercised exactly as a
+//! curl user would hit them.  The headline properties pinned here are
+//! the PR's acceptance criteria: submit → poll → fetch returns bytes
+//! identical to the blocking sync path, N duplicate async submissions
+//! produce exactly one job, and a flooded admission queue sheds with
+//! `429 + Retry-After` while `/healthz` keeps answering.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json::{self, Json};
+
+/// A campaign small enough that a replay takes milliseconds.
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn start_server(cfg: ServeConfig) -> (ServerHandle, String) {
+    let server = Server::bind(cfg).expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn default_server() -> (ServerHandle, String) {
+    start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 2,
+        store_dir: None,
+        base: tiny_base(),
+    })
+}
+
+fn post_async(addr: &str, spec: &[u8]) -> icecloud::server::http::ClientResponse {
+    client_request(
+        addr,
+        "POST",
+        "/sweep?mode=async",
+        Some("application/toml"),
+        spec,
+    )
+    .expect("async submit")
+}
+
+fn parse_body(body: &[u8]) -> Json {
+    json::parse(std::str::from_utf8(body).expect("utf-8 body").trim())
+        .expect("json body")
+}
+
+/// Poll `/jobs/<id>` until the job reaches `done` (panics on `failed`
+/// or timeout) and return the final job document.
+fn wait_done(addr: &str, id: &str) -> Json {
+    for _ in 0..3000 {
+        let resp =
+            client_request(addr, "GET", &format!("/jobs/{id}"), None, b"")
+                .expect("poll");
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let doc = parse_body(&resp.body);
+        let status = doc.get("status").unwrap().as_str().unwrap();
+        match status {
+            "done" => return doc,
+            "failed" => panic!(
+                "job failed: {:?}",
+                doc.get("error").and_then(|e| e.as_str())
+            ),
+            _ => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    panic!("job {id} did not finish within the polling budget");
+}
+
+/// The acceptance criterion: submit → poll → fetch returns exactly the
+/// bytes the blocking sync path returns for the same spec — both on
+/// the same server (cache-mediated) and against a fresh server that
+/// has to compute from scratch.
+#[test]
+fn async_lifecycle_matches_sync_bytes() {
+    let (handle, addr) = default_server();
+    let spec = b"[scenario.a]\n\n[scenario.b]\nseed = 11\n";
+
+    let resp = post_async(&addr, spec);
+    assert_eq!(resp.status, 202, "{}", resp.body_str());
+    let doc = parse_body(&resp.body);
+    let id = doc.get("job_id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(id.len(), 64, "job ids are sweep content addresses");
+    assert_eq!(
+        resp.header("location"),
+        Some(format!("/jobs/{id}").as_str())
+    );
+    assert_eq!(
+        doc.get("poll").unwrap().as_str(),
+        Some(format!("/jobs/{id}").as_str())
+    );
+
+    let job = wait_done(&addr, &id);
+    assert_eq!(
+        job.get("result").unwrap().as_str(),
+        Some(format!("/results/{id}").as_str())
+    );
+    assert!(job.get("run_s").unwrap().as_f64().unwrap() >= 0.0);
+
+    let fetched = client_request(
+        &addr,
+        "GET",
+        &format!("/results/{id}"),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(fetched.status, 200);
+    // the fetched body names its own content address
+    assert_eq!(
+        parse_body(&fetched.body).get("key").unwrap().as_str(),
+        Some(id.as_str())
+    );
+
+    // same server, sync path: a cache hit with identical bytes
+    let sync = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(sync.status, 200);
+    assert_eq!(sync.header("x-cache"), Some("hit"));
+    assert_eq!(sync.body, fetched.body);
+
+    // fresh server, sync path: an actual replay, still identical bytes
+    let (fresh_handle, fresh_addr) = default_server();
+    let fresh = client_request(
+        &fresh_addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(fresh.status, 200);
+    assert_eq!(fresh.header("x-cache"), Some("miss"));
+    assert_eq!(
+        fresh.body, fetched.body,
+        "async and sync computations must be byte-identical"
+    );
+
+    // exactly one replay happened on the original server
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 1);
+
+    fresh_handle.shutdown();
+    handle.shutdown();
+}
+
+/// N duplicate async submissions single-flight into exactly one job.
+#[test]
+fn duplicate_async_submits_produce_one_job() {
+    let (handle, addr) = default_server();
+    let spec = b"[scenario.dup]\nbudget_usd = 25.0\n".to_vec();
+
+    let mut clients = Vec::new();
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(8));
+    for _ in 0..8 {
+        let addr = addr.clone();
+        let spec = spec.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        clients.push(std::thread::spawn(move || {
+            barrier.wait();
+            post_async(&addr, &spec)
+        }));
+    }
+    let responses: Vec<_> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let mut ids = Vec::new();
+    for resp in &responses {
+        assert_eq!(resp.status, 202, "{}", resp.body_str());
+        let doc = parse_body(&resp.body);
+        ids.push(doc.get("job_id").unwrap().as_str().unwrap().to_string());
+    }
+    for id in &ids {
+        assert_eq!(id, &ids[0], "every duplicate names the same job");
+    }
+    wait_done(&addr, &ids[0]);
+
+    // one tracked job, one underlying replay
+    let listing =
+        client_request(&addr, "GET", "/jobs", None, b"").unwrap();
+    let doc = parse_body(&listing.body);
+    assert_eq!(doc.get("count").unwrap().as_u64(), Some(1));
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 1);
+
+    handle.shutdown();
+}
+
+/// Saturation: with one runner wedged on a long replay and a 2-slot
+/// queue, a burst of distinct submissions must shed with 429 +
+/// Retry-After — and `/healthz` must keep answering throughout.
+#[test]
+fn flooded_queue_sheds_with_429_and_healthz_stays_up() {
+    let (handle, addr) = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 1,
+        cache_bytes: 1 << 20,
+        queue_max: 2,
+        job_runners: 1,
+        store_dir: None,
+        base: tiny_base(),
+    });
+
+    // wedge the single runner on a genuinely slow replay (days of sim
+    // time at a bigger fleet than the tiny base)
+    let slow = post_async(
+        &addr,
+        b"[scenario.slow]\nduration_days = 6.0\nramp_targets = [200]\n",
+    );
+    assert_eq!(slow.status, 202, "{}", slow.body_str());
+
+    // burst of distinct cheap jobs: 2 fit the queue, the rest shed
+    let mut accepted = 0u32;
+    let mut shed = 0u32;
+    let mut saw_retry_after = false;
+    for i in 0..24u32 {
+        let spec = format!("[scenario.flood]\nseed = {i}\n");
+        let resp = post_async(&addr, spec.as_bytes());
+        match resp.status {
+            202 => accepted += 1,
+            429 => {
+                shed += 1;
+                let retry: u64 = resp
+                    .header("retry-after")
+                    .expect("429 carries Retry-After")
+                    .parse()
+                    .expect("Retry-After is integral seconds");
+                assert!(retry >= 1);
+                saw_retry_after = true;
+            }
+            other => panic!("unexpected status {other}: {}", resp.body_str()),
+        }
+        // the server must stay responsive mid-flood
+        if i == 12 {
+            let health = client_request(
+                &addr, "GET", "/healthz", None, b"",
+            )
+            .unwrap();
+            assert_eq!(health.status, 200);
+        }
+    }
+    assert!(accepted >= 1, "some submissions fit the queue");
+    assert!(shed >= 1, "a 24-burst into a 2-slot queue must shed");
+    assert!(saw_retry_after);
+
+    // liveness after the flood, and accounting agrees
+    let health =
+        client_request(&addr, "GET", "/healthz", None, b"").unwrap();
+    assert_eq!(health.status, 200);
+    assert_eq!(handle.state().metrics.jobs_shed_count(), shed as u64);
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    let text = metrics.body_str();
+    assert!(
+        text.contains(&format!("icecloud_jobs_shed_total {shed}")),
+        "{text}"
+    );
+
+    handle.shutdown();
+}
+
+/// The status endpoints: field shape on a finished job, 404/405 on
+/// unknown ids and wrong methods, and strict query validation.
+#[test]
+fn job_status_endpoints_report_fields_and_reject_garbage() {
+    let (handle, addr) = default_server();
+
+    let resp = post_async(&addr, b"[scenario.q]\nseed = 77\n");
+    assert_eq!(resp.status, 202);
+    let id = parse_body(&resp.body)
+        .get("job_id")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    let job = wait_done(&addr, &id);
+    assert!(job.get("age_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(job.get("wait_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(job.get("scenarios").unwrap().as_u64(), Some(1));
+    assert!(job.get("queue_position").is_none());
+
+    // unknown ids and wrong methods
+    let missing = client_request(
+        &addr,
+        "GET",
+        &format!("/jobs/{}", "0".repeat(64)),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(missing.status, 404);
+    let bad_method =
+        client_request(&addr, "POST", "/jobs", None, b"").unwrap();
+    assert_eq!(bad_method.status, 405);
+    assert_eq!(bad_method.header("allow"), Some("GET"));
+
+    // bad query strings are rejected up front, not queued
+    let bad_query = client_request(
+        &addr,
+        "POST",
+        "/sweep?mode=nope",
+        Some("application/toml"),
+        b"[scenario.x]\n",
+    )
+    .unwrap();
+    assert_eq!(bad_query.status, 400);
+
+    handle.shutdown();
+}

@@ -1,0 +1,352 @@
+//! Restart and fault-injection tests for the persistent result store.
+//!
+//! The tentpole property: a result computed before a restart is served
+//! after it — byte-identical, without recomputation — because the disk
+//! tier (`server::store::DiskStore`) survives the process.  The fault
+//! half: corrupted entries (truncation, bit rot, renames) are
+//! quarantined — never served, never a panic — and `.tmp.` debris from
+//! a crashed writer is cleaned on startup.  Everything here runs over
+//! real sockets against real directories; each test gets its own
+//! scratch root under the system temp dir.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{DiskStore, ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A unique scratch root per test (std-only; no tempfile crate).
+fn scratch() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "icecloud-store-e2e-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn start_server(store_dir: &std::path::Path) -> (ServerHandle, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 4,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 8,
+        job_runners: 1,
+        store_dir: Some(store_dir.to_path_buf()),
+        base: tiny_base(),
+    })
+    .expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn post_sweep(addr: &str, spec: &[u8]) -> icecloud::server::http::ClientResponse {
+    client_request(addr, "POST", "/sweep", Some("application/toml"), spec)
+        .expect("sweep request")
+}
+
+fn response_key(body: &[u8]) -> String {
+    json::parse(std::str::from_utf8(body).unwrap().trim())
+        .unwrap()
+        .get("key")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+/// The tentpole: results survive a full server restart, are served
+/// from disk without recomputation, and stay byte-identical.
+#[test]
+fn results_survive_restart() {
+    let root = scratch();
+    let spec = b"[scenario.keep]\n\n[scenario.tweak]\nseed = 5\n";
+
+    let (first_body, key) = {
+        let (handle, addr) = start_server(&root);
+        let resp = post_sweep(&addr, spec);
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        assert_eq!(resp.header("x-cache"), Some("miss"));
+        assert_eq!(handle.state().metrics.sweep_computation_count(), 1);
+        let key = response_key(&resp.body);
+        handle.shutdown();
+        (resp.body, key)
+    };
+
+    // a brand-new process would see exactly this: fresh memory, same
+    // directory
+    let (handle, addr) = start_server(&root);
+    let by_key = client_request(
+        &addr,
+        "GET",
+        &format!("/results/{key}"),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(by_key.status, 200);
+    assert_eq!(by_key.header("x-cache"), Some("disk"));
+    assert_eq!(by_key.body, first_body, "restart must not change bytes");
+
+    // POST of the same spec is a disk hit, not a replay
+    let again = post_sweep(&addr, spec);
+    assert_eq!(again.status, 200);
+    assert_eq!(
+        again.header("x-cache"),
+        Some("hit"),
+        "the /results fetch promoted the entry into memory"
+    );
+    assert_eq!(again.body, first_body);
+    assert_eq!(
+        handle.state().metrics.sweep_computation_count(),
+        0,
+        "nothing recomputes after a restart"
+    );
+    assert!(handle.state().metrics.disk_hit_count() >= 1);
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    let text = metrics.body_str();
+    assert!(text.contains("icecloud_store_hits_total"), "{text}");
+    assert!(text.contains("icecloud_result_store_entries 1"), "{text}");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The disk probe also covers the compute path: a cold POST on a
+/// restart-warmed server replays nothing even without a prior
+/// /results fetch.
+#[test]
+fn post_after_restart_is_a_disk_hit() {
+    let root = scratch();
+    let spec = b"[scenario.warm]\nbudget_usd = 33.0\n";
+    {
+        let (handle, addr) = start_server(&root);
+        assert_eq!(post_sweep(&addr, spec).status, 200);
+        handle.shutdown();
+    }
+    let (handle, addr) = start_server(&root);
+    let resp = post_sweep(&addr, spec);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-cache"), Some("disk"));
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 0);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Fault injection: a truncated entry file is quarantined on the next
+/// startup scan — never served, never a panic — and the request
+/// recomputes to the exact same bytes.
+#[test]
+fn corrupted_entry_is_quarantined_and_recomputed() {
+    let root = scratch();
+    let spec = b"[scenario.rot]\nseed = 9\n";
+    let (first_body, key) = {
+        let (handle, addr) = start_server(&root);
+        let resp = post_sweep(&addr, spec);
+        assert_eq!(resp.status, 200);
+        let key = response_key(&resp.body);
+        handle.shutdown();
+        (resp.body, key)
+    };
+
+    // truncate the entry on disk
+    let entry = root.join("entries").join(&key);
+    let raw = std::fs::read(&entry).expect("entry file exists");
+    std::fs::write(&entry, &raw[..raw.len() / 2]).unwrap();
+
+    let (handle, addr) = start_server(&root);
+    // the corrupt entry is gone from the index: by-key fetch is a 404
+    let by_key = client_request(
+        &addr,
+        "GET",
+        &format!("/results/{key}"),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(by_key.status, 404, "quarantined entries must not serve");
+    // ...and it sits in quarantine for post-mortem
+    assert!(root.join("quarantine").join(&key).exists());
+    assert!(!entry.exists());
+
+    // recomputation reproduces the identical bytes (determinism) and
+    // re-persists them
+    let resp = post_sweep(&addr, spec);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-cache"), Some("miss"));
+    assert_eq!(resp.body, first_body);
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 1);
+    assert!(entry.exists(), "the recomputed entry is persisted again");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Bit rot *after* startup (the scan passed, the file changed later)
+/// is caught by the per-read verification in `DiskStore::get`.
+#[test]
+fn bitrot_after_open_never_serves() {
+    let root = scratch();
+    let key = {
+        let (handle, addr) = start_server(&root);
+        let resp = post_sweep(&addr, b"[scenario.late-rot]\n");
+        assert_eq!(resp.status, 200);
+        let key = response_key(&resp.body);
+        handle.shutdown();
+        key
+    };
+    let store = DiskStore::open(&root).unwrap();
+    assert!(store.contains(&key));
+    let entry = root.join("entries").join(&key);
+    let mut raw = std::fs::read(&entry).unwrap();
+    let last = raw.len() - 1;
+    raw[last] ^= 0x01;
+    std::fs::write(&entry, &raw).unwrap();
+    assert!(store.get(&key).is_none(), "rotted entry must not serve");
+    assert_eq!(store.quarantined(), 1);
+    assert_eq!(store.stats().0, 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Crash simulation: `.tmp.` files left by a writer that died before
+/// its atomic rename are deleted on startup, and foreign files are
+/// quarantined rather than trusted.
+#[test]
+fn crash_debris_cleaned_on_startup() {
+    let root = scratch();
+    {
+        let (handle, addr) = start_server(&root);
+        assert_eq!(post_sweep(&addr, b"[scenario.real]\n").status, 200);
+        handle.shutdown();
+    }
+    let entries = root.join("entries");
+    std::fs::write(entries.join(".tmp.4242.0"), b"torn half-write")
+        .unwrap();
+    std::fs::write(entries.join(".tmp.4242.1"), b"").unwrap();
+    std::fs::write(entries.join("not-a-key"), b"who put this here")
+        .unwrap();
+
+    let (handle, addr) = start_server(&root);
+    assert!(!entries.join(".tmp.4242.0").exists());
+    assert!(!entries.join(".tmp.4242.1").exists());
+    assert!(!entries.join("not-a-key").exists());
+    assert!(root.join("quarantine").join("not-a-key").exists());
+    // the one real entry still serves
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    assert!(
+        metrics.body_str().contains("icecloud_result_store_entries 1"),
+        "{}",
+        metrics.body_str()
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Async jobs ride the same store: a job finished before a restart is
+/// instantly `done` on resubmission afterwards, served from disk.
+#[test]
+fn async_resubmit_after_restart_completes_instantly() {
+    let root = scratch();
+    let spec = b"[scenario.job]\nseed = 21\n";
+    let (job_body, id) = {
+        let (handle, addr) = start_server(&root);
+        let resp = client_request(
+            &addr,
+            "POST",
+            "/sweep?mode=async",
+            Some("application/toml"),
+            spec,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 202, "{}", resp.body_str());
+        let id = json::parse(resp.body_str().trim())
+            .unwrap()
+            .get("job_id")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        // poll to completion
+        let mut body = None;
+        for _ in 0..3000 {
+            let poll = client_request(
+                &addr,
+                "GET",
+                &format!("/jobs/{id}"),
+                None,
+                b"",
+            )
+            .unwrap();
+            let doc = json::parse(poll.body_str().trim()).unwrap();
+            match doc.get("status").unwrap().as_str().unwrap() {
+                "done" => {
+                    let fetched = client_request(
+                        &addr,
+                        "GET",
+                        &format!("/results/{id}"),
+                        None,
+                        b"",
+                    )
+                    .unwrap();
+                    assert_eq!(fetched.status, 200);
+                    body = Some(fetched.body);
+                    break;
+                }
+                "failed" => panic!("job failed"),
+                _ => std::thread::sleep(
+                    std::time::Duration::from_millis(10),
+                ),
+            }
+        }
+        handle.shutdown();
+        (body.expect("job finished"), id)
+    };
+
+    let (handle, addr) = start_server(&root);
+    let resub = client_request(
+        &addr,
+        "POST",
+        "/sweep?mode=async",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(resub.status, 202);
+    let doc = json::parse(resub.body_str().trim()).unwrap();
+    assert_eq!(doc.get("job_id").unwrap().as_str(), Some(id.as_str()));
+    assert_eq!(
+        doc.get("status").unwrap().as_str(),
+        Some("done"),
+        "a disk-resident result completes the job instantly"
+    );
+    let fetched = client_request(
+        &addr,
+        "GET",
+        &format!("/results/{id}"),
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(fetched.body, job_body);
+    assert_eq!(handle.state().metrics.sweep_computation_count(), 0);
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
