@@ -39,7 +39,7 @@ fn main() {
 
     for threads in [1usize, 2, 4, 8] {
         b.run_throughput(
-            &format!("sweep/10-scenarios-{threads}-threads"),
+            &format!("sweep/{}-scenarios-{threads}-threads", scenarios.len()),
             replays,
             "replays",
             || sweep::run_matrix(&base, &scenarios, threads).len(),

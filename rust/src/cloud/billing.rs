@@ -12,7 +12,19 @@ use super::types::Provider;
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ProviderMeter {
     pub spend_usd: f64,
+    /// Billable instance-hours (booting + running, claimed or not).
     pub instance_hours: f64,
+    /// Instance-hours during which the slot was executing a job — the
+    /// goodput-accounting numerator's upper bound.  The gap
+    /// `instance_hours - busy_hours` is billed idle/boot/drain time.
+    pub busy_hours: f64,
+}
+
+impl ProviderMeter {
+    /// Billed hours with no job on the slot (boot, idle, drain).
+    pub fn idle_hours(&self) -> f64 {
+        self.instance_hours - self.busy_hours
+    }
 }
 
 /// Billing meters for the whole multi-cloud fleet.
@@ -51,6 +63,19 @@ impl BillingMeter {
         }
     }
 
+    /// Accrue `dt_s` seconds of busy (job-executing) slots per provider
+    /// (`[aws, gcp, azure]`, the pool's incremental counters).  Kept
+    /// separate from [`accrue`] because the busy census comes from the
+    /// workload-management plane, not the fleet.
+    pub fn accrue_busy(&mut self, busy: [usize; 3], dt_s: u64) {
+        let dt_h = dt_s as f64 / 3600.0;
+        for (p, n) in Provider::ALL.into_iter().zip(busy) {
+            if n > 0 {
+                self.meter_mut(p).busy_hours += n as f64 * dt_h;
+            }
+        }
+    }
+
     pub fn provider(&self, p: Provider) -> ProviderMeter {
         match p {
             Provider::Aws => self.aws,
@@ -73,6 +98,10 @@ impl BillingMeter {
 
     pub fn total_instance_hours(&self) -> f64 {
         self.aws.instance_hours + self.gcp.instance_hours + self.azure.instance_hours
+    }
+
+    pub fn total_busy_hours(&self) -> f64 {
+        self.aws.busy_hours + self.gcp.busy_hours + self.azure.busy_hours
     }
 
     /// GPU-days delivered (1 instance == 1 T4).
@@ -103,6 +132,33 @@ mod tests {
         assert!((az.spend_usd - 10.0 * 2.9 / 24.0).abs() < 1e-9);
         assert_eq!(meter.provider(Provider::Aws), ProviderMeter::default());
         assert!((meter.total_spend() - az.spend_usd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_hours_accrue_per_provider() {
+        let mut m = BillingMeter::new();
+        // 10 busy aws slots + 5 busy azure slots for one hour
+        m.accrue_busy([10, 0, 5], HOUR);
+        m.accrue_busy([0, 0, 0], HOUR); // idle tick adds nothing
+        assert!((m.provider(Provider::Aws).busy_hours - 10.0).abs() < 1e-9);
+        assert_eq!(m.provider(Provider::Gcp).busy_hours, 0.0);
+        assert!((m.provider(Provider::Azure).busy_hours - 5.0).abs() < 1e-9);
+        assert!((m.total_busy_hours() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_hours_are_the_billed_gap() {
+        let mut fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+        fleet.set_target(RegionId(0), 10);
+        fleet.tick(0, MINUTE);
+        let mut meter = BillingMeter::new();
+        meter.accrue(&fleet, HOUR);
+        // only 6 of the 10 billed instances were executing jobs
+        meter.accrue_busy([0, 0, 6], HOUR);
+        let az = meter.provider(Provider::Azure);
+        assert!((az.instance_hours - 10.0).abs() < 1e-9);
+        assert!((az.busy_hours - 6.0).abs() < 1e-9);
+        assert!((az.idle_hours() - 4.0).abs() < 1e-9);
     }
 
     #[test]

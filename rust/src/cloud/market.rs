@@ -30,9 +30,18 @@ impl SpotMarket {
         SpotMarket { spec, available }
     }
 
-    /// Available capacity as a whole instance count.
+    /// Available capacity as a whole instance count, rounded to
+    /// nearest.  Truncating here (`as u32`) biased `headroom` and
+    /// `reclaim_count` low by up to one instance: a market at 99.9
+    /// spare instances reported 99 and reclaimed an allocation of 100.
     pub fn available(&self) -> u32 {
-        self.available.max(0.0) as u32
+        self.clamp_capacity(self.available).round() as u32
+    }
+
+    /// The one capacity clamp shared by every write path: the process
+    /// state stays in `[0, 2 × base_capacity]`.
+    fn clamp_capacity(&self, v: f64) -> f64 {
+        v.clamp(0.0, self.spec.base_capacity * 2.0)
     }
 
     /// Advance the capacity process by `dt_s` seconds.
@@ -42,8 +51,7 @@ impl SpotMarket {
             * (self.spec.base_capacity - self.available)
             * dt_h;
         let noise = self.spec.capacity_sigma * dt_h.sqrt() * rng.normal();
-        self.available = (self.available + drift + noise)
-            .clamp(0.0, self.spec.base_capacity * 2.0);
+        self.available = self.clamp_capacity(self.available + drift + noise);
     }
 
     /// How many instances can be newly provisioned given `allocated`
@@ -66,8 +74,11 @@ impl SpotMarket {
     }
 
     /// Force the available capacity (tests / scenario injection).
+    /// Applies the same `[0, 2 × base_capacity]` clamp `tick` enforces,
+    /// so injected states can never exceed what the process itself
+    /// could reach.
     pub fn set_available(&mut self, v: f64) {
-        self.available = v.max(0.0);
+        self.available = self.clamp_capacity(v);
     }
 }
 
@@ -145,6 +156,33 @@ mod tests {
         assert!(p1 > 0.0 && p1 < p2 && p2 < 1.0);
         // for small hazard, p(1h) ~ churn_per_hour
         assert!((p2 - m.spec.churn_per_hour).abs() / m.spec.churn_per_hour < 0.01);
+    }
+
+    #[test]
+    fn available_rounds_to_nearest_not_down() {
+        // regression: `as u32` truncation biased headroom/reclaim low
+        // by up to one instance
+        let mut m = market();
+        m.set_available(99.9);
+        assert_eq!(m.available(), 100);
+        assert_eq!(m.headroom(40), 60);
+        assert_eq!(m.reclaim_count(100), 0, "no phantom reclaim at 99.9");
+        m.set_available(99.4);
+        assert_eq!(m.available(), 99);
+        assert_eq!(m.reclaim_count(100), 1);
+    }
+
+    #[test]
+    fn set_available_shares_the_tick_clamp() {
+        // regression: set_available skipped the 2×base_capacity clamp
+        let mut m = market();
+        let cap = m.spec.base_capacity * 2.0;
+        m.set_available(1e9);
+        assert_eq!(m.available, cap);
+        assert_eq!(m.available(), cap as u32);
+        m.set_available(-5.0);
+        assert_eq!(m.available, 0.0);
+        assert_eq!(m.available(), 0);
     }
 
     #[test]

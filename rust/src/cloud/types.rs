@@ -14,6 +14,17 @@ pub enum Provider {
 impl Provider {
     pub const ALL: [Provider; 3] = [Provider::Aws, Provider::Gcp, Provider::Azure];
 
+    /// Index into `[aws, gcp, azure]`-ordered per-provider arrays (the
+    /// one ordering used by `Provider::ALL`, pool/billing accounting
+    /// and `CampaignResult::provider_ops`).
+    pub fn index(self) -> usize {
+        match self {
+            Provider::Aws => 0,
+            Provider::Gcp => 1,
+            Provider::Azure => 2,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Provider::Aws => "aws",

@@ -50,6 +50,11 @@ pub struct Ledger {
     pub accounts: AccountSet,
     pub budget_usd: f64,
     spent: [f64; 3], // indexed by provider order in Provider::ALL
+    /// Per-provider (instance_hours, busy_hours) mirrored from the
+    /// billing meters at sync time — the wasted-hours view of the
+    /// "single window" page (Holzman et al.: wall-hour accounting is
+    /// what makes cloud bursting cost-defensible).
+    hours: [(f64, f64); 3],
     /// Remaining-fraction thresholds that still have a pending alert
     /// (sorted descending; e.g. [0.75, 0.5, 0.25, 0.1]).
     pending_thresholds: Vec<f64>,
@@ -68,6 +73,7 @@ impl Ledger {
             accounts,
             budget_usd,
             spent: [0.0; 3],
+            hours: [(0.0, 0.0); 3],
             pending_thresholds: pending,
             alerts: Vec::new(),
             history: VecDeque::new(),
@@ -94,11 +100,30 @@ impl Ledger {
     pub fn sync_from_meter(&mut self, meter: &BillingMeter, now: SimTime) {
         for p in Provider::ALL {
             if self.accounts.can_meter(p) {
-                self.spent[Self::provider_idx(p)] = meter.provider(p).spend_usd;
+                let m = meter.provider(p);
+                let i = Self::provider_idx(p);
+                self.spent[i] = m.spend_usd;
+                self.hours[i] = (m.instance_hours, m.busy_hours);
             }
         }
         self.record_history(now);
         self.check_thresholds(now);
+    }
+
+    /// Per-provider (instance_hours, busy_hours) as of the last sync.
+    pub fn hours_for(&self, p: Provider) -> (f64, f64) {
+        self.hours[Self::provider_idx(p)]
+    }
+
+    /// Total billed instance-hours across enrolled providers.
+    pub fn total_instance_hours(&self) -> f64 {
+        self.hours.iter().map(|(i, _)| i).sum()
+    }
+
+    /// Total busy (job-executing) instance-hours across enrolled
+    /// providers.
+    pub fn total_busy_hours(&self) -> f64 {
+        self.hours.iter().map(|(_, b)| b).sum()
     }
 
     fn record_history(&mut self, now: SimTime) {
@@ -259,6 +284,24 @@ mod tests {
         }
         let rate = ledger.spend_rate_per_day();
         assert!((rate - 240.0 * 2.9).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn hours_mirror_the_meter_split() {
+        let mut ledger = Ledger::paper_allocation(0);
+        let mut fleet = CloudSim::new(providers::all_regions(), Rng::new(1));
+        fleet.set_target(RegionId(0), 10); // azure
+        fleet.tick(0, 60);
+        let mut meter = BillingMeter::new();
+        meter.accrue(&fleet, HOUR);
+        meter.accrue_busy([0, 0, 7], HOUR);
+        ledger.sync_from_meter(&meter, HOUR);
+        let (instance, busy) = ledger.hours_for(Provider::Azure);
+        assert!((instance - 10.0).abs() < 1e-9);
+        assert!((busy - 7.0).abs() < 1e-9);
+        assert_eq!(ledger.hours_for(Provider::Aws), (0.0, 0.0));
+        assert!((ledger.total_instance_hours() - 10.0).abs() < 1e-9);
+        assert!((ledger.total_busy_hours() - 7.0).abs() < 1e-9);
     }
 
     #[test]

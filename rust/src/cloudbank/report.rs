@@ -26,26 +26,43 @@ pub fn render_snapshot(s: &BudgetSnapshot) -> String {
     out
 }
 
+/// One roll-up line: a scenario's budget snapshot plus its wall-hour
+/// split (goodput vs wasted instance-hours — HEPCloud-style accounting
+/// of what the spend actually bought).
+pub struct RollupRow {
+    pub name: String,
+    pub snapshot: BudgetSnapshot,
+    /// Instance-hours that ended as job goodput.
+    pub goodput_hours: f64,
+    /// Billed instance-hours that did not (idle, boot, lost attempts,
+    /// restore overheads).
+    pub wasted_hours: f64,
+}
+
 /// Render a per-scenario CloudBank roll-up: one budget line per replay,
 /// the "single window" view across a whole sweep matrix.
-pub fn render_rollup(rows: &[(String, BudgetSnapshot)]) -> String {
+pub fn render_rollup(rows: &[RollupRow]) -> String {
     let mut out = String::new();
     out.push_str("== CloudBank sweep roll-up (per-scenario spend) ==\n");
     out.push_str(&format!(
-        "{:<24} {:>10} {:>10} {:>7} {:>10} {:>10} {:>10}\n",
+        "{:<24} {:>10} {:>10} {:>7} {:>10} {:>10} {:>10} {:>8} {:>8}\n",
         "scenario", "budget $", "spent $", "left%", "azure $", "gcp $",
-        "aws $"
+        "aws $", "good h", "waste h"
     ));
-    for (name, s) in rows {
+    for row in rows {
+        let s = &row.snapshot;
         out.push_str(&format!(
-            "{:<24} {:>10.0} {:>10.2} {:>6.1}% {:>10.2} {:>10.2} {:>10.2}\n",
-            name,
+            "{:<24} {:>10.0} {:>10.2} {:>6.1}% {:>10.2} {:>10.2} {:>10.2} \
+             {:>8.1} {:>8.1}\n",
+            row.name,
             s.budget_usd,
             s.spent_usd,
             100.0 * s.remaining_fraction(),
             s.azure_usd,
             s.gcp_usd,
             s.aws_usd,
+            row.goodput_hours,
+            row.wasted_hours,
         ));
     }
     out
@@ -64,6 +81,11 @@ pub fn snapshot_json(ledger: &Ledger, now: SimTime) -> Json {
     o.set("gcp_usd", Json::from(s.gcp_usd));
     o.set("aws_usd", Json::from(s.aws_usd));
     o.set("spend_rate_per_day", Json::from(ledger.spend_rate_per_day()));
+    o.set(
+        "instance_hours",
+        Json::from(ledger.total_instance_hours()),
+    );
+    o.set("busy_hours", Json::from(ledger.total_busy_hours()));
     let alerts: Vec<Json> = ledger
         .alerts()
         .iter()
@@ -95,16 +117,30 @@ mod tests {
     }
 
     #[test]
-    fn rollup_lists_every_scenario() {
+    fn rollup_lists_every_scenario_with_hour_split() {
         let ledger = Ledger::new(AccountSet::paper_setup(0), 58_000.0, &[]);
         let rows = vec![
-            ("baseline".to_string(), ledger.snapshot(0)),
-            ("half-budget".to_string(), ledger.snapshot(10)),
+            RollupRow {
+                name: "baseline".to_string(),
+                snapshot: ledger.snapshot(0),
+                goodput_hours: 120.5,
+                wasted_hours: 30.25,
+            },
+            RollupRow {
+                name: "half-budget".to_string(),
+                snapshot: ledger.snapshot(10),
+                goodput_hours: 60.0,
+                wasted_hours: 15.0,
+            },
         ];
         let text = render_rollup(&rows);
         assert!(text.contains("baseline"));
         assert!(text.contains("half-budget"));
         assert!(text.contains("azure"));
+        assert!(text.contains("good h"));
+        assert!(text.contains("waste h"));
+        assert!(text.contains("120.5"));
+        assert!(text.contains("30.2"));
         assert_eq!(text.lines().count(), 4);
     }
 

@@ -40,10 +40,22 @@ pub struct Job {
     /// Start of the current attempt.
     pub started_at: Option<SimTime>,
     pub completed_at: Option<SimTime>,
-    /// Productive wall seconds (the final, completed attempt).
+    /// Productive wall seconds: work that counted toward the job's
+    /// ground-truth runtime (completed attempts plus checkpointed
+    /// progress salvaged from interrupted ones).
     pub goodput_s: u64,
-    /// Wall seconds wasted by preempted/disconnected attempts.
+    /// Wall seconds wasted: lost un-checkpointed tails of interrupted
+    /// attempts plus checkpoint-restore overheads.
     pub badput_s: u64,
+    /// Progress (seconds of ground-truth runtime) safely checkpointed;
+    /// the next attempt resumes here instead of zero.  Always a
+    /// multiple of the checkpoint interval; 0 under
+    /// `CheckpointPolicy::None` (the paper baseline).
+    pub completed_s: u64,
+    /// `completed_s` at the start of the current attempt.
+    pub attempt_base_s: u64,
+    /// Checkpoint-restore overhead charged to the current attempt.
+    pub attempt_overhead_s: u64,
     /// The job ad used in matchmaking.
     pub ad: Ad,
     /// Parsed Requirements expression.
@@ -62,6 +74,14 @@ pub fn autocluster_signature(requirements: &Expr, ad: &Ad) -> String {
 impl Job {
     pub fn autocluster_key(&self) -> &str {
         &self.autocluster
+    }
+
+    /// Fraction of the ground-truth runtime already checkpointed.
+    pub fn completed_fraction(&self) -> f64 {
+        crate::workload::icecube::completed_fraction(
+            self.completed_s,
+            self.runtime_s,
+        )
     }
 }
 
@@ -102,6 +122,9 @@ mod tests {
             completed_at: None,
             goodput_s: 0,
             badput_s: 0,
+            completed_s: 0,
+            attempt_base_s: 0,
+            attempt_overhead_s: 0,
             ad: gpu_job_ad("icecube", 8192),
             requirements: gpu_requirements(),
             autocluster: autocluster_signature(
@@ -118,6 +141,14 @@ mod tests {
         other.autocluster =
             autocluster_signature(&other.requirements, &other.ad);
         assert_ne!(job(1).autocluster_key(), other.autocluster_key());
+    }
+
+    #[test]
+    fn completed_fraction_tracks_checkpoint_state() {
+        let mut j = job(1);
+        assert_eq!(j.completed_fraction(), 0.0);
+        j.completed_s = 1800;
+        assert_eq!(j.completed_fraction(), 0.5);
     }
 
     #[test]

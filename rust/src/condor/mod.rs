@@ -20,5 +20,5 @@ pub use collector::Collector;
 pub use job::{Job, JobId, JobState};
 pub use negotiator::CycleResult;
 pub use pool::{CondorPool, InterruptCause, PoolEvent, PoolStats};
-pub use schedd::{Schedd, ScheddStats};
+pub use schedd::{Schedd, ScheddStats, WorkDelta};
 pub use startd::{Claim, SlotId, Startd};

@@ -9,8 +9,9 @@
 
 use super::collector::Collector;
 use super::negotiator::{negotiate, DEFAULT_CYCLE_S};
-use super::schedd::Schedd;
+use super::schedd::{Schedd, WorkDelta};
 use super::startd::{Claim, SlotId, Startd, RECONNECT_DELAY_S};
+use crate::cloud::Provider;
 use crate::net::SendOutcome;
 use crate::sim::{EventQueue, SimTime, Ticker};
 use crate::util::fxhash::FxHashMap;
@@ -40,6 +41,12 @@ pub struct PoolStats {
     pub negotiation_cycles: u64,
     pub matches: u64,
     pub classad_evaluations: u64,
+    /// Goodput wall seconds settled on cloud slots, per provider in
+    /// `[aws, gcp, azure]` order (on-prem slots are excluded — they
+    /// carry no provider and no bill).
+    pub goodput_by_provider: [u64; 3],
+    /// Badput wall seconds settled on cloud slots, per provider.
+    pub badput_by_provider: [u64; 3],
 }
 
 /// The assembled workload-management plane.
@@ -58,6 +65,10 @@ pub struct CondorPool {
     /// sync; scanning every startd per tick showed up in the profile).
     busy_cloud: usize,
     busy_onprem: usize,
+    /// Busy cloud slots per provider (`[aws, gcp, azure]`), maintained
+    /// at the same claim/release sites — the billing meter samples this
+    /// every tick to split instance-hours into busy vs idle.
+    busy_by_provider: [usize; 3],
     pub stats: PoolStats,
     /// Queue of upcoming job-completion times (avoids scanning all slots
     /// every tick).
@@ -76,6 +87,7 @@ impl CondorPool {
             outage: false,
             busy_cloud: 0,
             busy_onprem: 0,
+            busy_by_provider: [0; 3],
             stats: PoolStats::default(),
             completions: EventQueue::new(),
         }
@@ -83,6 +95,15 @@ impl CondorPool {
 
     pub fn with_negotiation_period(mut self, period: SimTime) -> Self {
         self.negotiation = Ticker::new(period, 0);
+        self
+    }
+
+    /// Attach the job checkpoint/restart policy (construction time).
+    pub fn with_checkpoint(
+        mut self,
+        policy: crate::config::CheckpointPolicy,
+    ) -> Self {
+        self.schedd.set_checkpoint(policy);
         self
     }
 
@@ -109,10 +130,12 @@ impl CondorPool {
                 Self::count_claim(
                     &mut self.busy_cloud,
                     &mut self.busy_onprem,
-                    startd.pool_tag,
+                    &mut self.busy_by_provider,
+                    &startd,
                     -1,
                 );
-                self.schedd.interrupt(claim.job, now);
+                let delta = self.schedd.interrupt(claim.job, now);
+                Self::credit_work(&mut self.stats, startd.provider, delta);
                 events.push(PoolEvent::JobInterrupted(
                     slot,
                     InterruptCause::WorkerLost,
@@ -148,13 +171,58 @@ impl CondorPool {
         (self.busy_cloud, self.busy_onprem)
     }
 
-    fn count_claim(busy_cloud: &mut usize, busy_onprem: &mut usize, tag: &str, delta: isize) {
-        let c = match tag {
+    /// O(1) busy cloud slots per provider (`[aws, gcp, azure]`).
+    pub fn busy_by_provider(&self) -> [usize; 3] {
+        self.busy_by_provider
+    }
+
+    /// Wall seconds of claims still running at `now`, per provider —
+    /// work neither settled as goodput nor badput yet.  Campaign-end
+    /// accounting needs this for the conservation identity
+    /// `busy == goodput + badput + in-flight` (tested in
+    /// `rust/tests/integration_campaign.rs`).
+    pub fn inflight_by_provider(&self, now: SimTime) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for d in self.startds.values() {
+            if let (Some(p), Some(claim)) = (d.provider, d.claim) {
+                out[p.index()] += now.saturating_sub(claim.started_at);
+            }
+        }
+        out
+    }
+
+    fn count_claim(
+        busy_cloud: &mut usize,
+        busy_onprem: &mut usize,
+        busy_by_provider: &mut [usize; 3],
+        startd: &Startd,
+        delta: isize,
+    ) {
+        let c = match startd.pool_tag {
             "cloud" => busy_cloud,
             "onprem" => busy_onprem,
             _ => return,
         };
         *c = c.checked_add_signed(delta).expect("busy counter underflow");
+        if let Some(p) = startd.provider {
+            let c = &mut busy_by_provider[p.index()];
+            *c = c
+                .checked_add_signed(delta)
+                .expect("provider busy counter underflow");
+        }
+    }
+
+    /// Attribute settled goodput/badput wall seconds to the slot's
+    /// provider (on-prem slots carry no provider and no bill).
+    fn credit_work(
+        stats: &mut PoolStats,
+        provider: Option<Provider>,
+        delta: WorkDelta,
+    ) {
+        if let Some(p) = provider {
+            stats.goodput_by_provider[p.index()] += delta.goodput_s;
+            stats.badput_by_provider[p.index()] += delta.badput_s;
+        }
     }
 
     pub fn unclaimed_count(&self) -> usize {
@@ -180,10 +248,13 @@ impl CondorPool {
                 Self::count_claim(
                     &mut self.busy_cloud,
                     &mut self.busy_onprem,
-                    startd.pool_tag,
+                    &mut self.busy_by_provider,
+                    startd,
                     -1,
                 );
-                self.schedd.interrupt(claim.job, now);
+                let provider = startd.provider;
+                let delta = self.schedd.interrupt(claim.job, now);
+                Self::credit_work(&mut self.stats, provider, delta);
                 events.push(PoolEvent::JobInterrupted(slot, InterruptCause::Outage));
             }
         }
@@ -249,10 +320,13 @@ impl CondorPool {
                     Self::count_claim(
                         &mut self.busy_cloud,
                         &mut self.busy_onprem,
-                        startd.pool_tag,
+                        &mut self.busy_by_provider,
+                        startd,
                         -1,
                     );
-                    self.schedd.interrupt(claim.job, now);
+                    let provider = startd.provider;
+                    let delta = self.schedd.interrupt(claim.job, now);
+                    Self::credit_work(&mut self.stats, provider, delta);
                     events.push(PoolEvent::JobInterrupted(
                         slot,
                         InterruptCause::Outage,
@@ -274,10 +348,13 @@ impl CondorPool {
                         Self::count_claim(
                             &mut self.busy_cloud,
                             &mut self.busy_onprem,
-                            startd.pool_tag,
+                            &mut self.busy_by_provider,
+                            startd,
                             -1,
                         );
-                        self.schedd.interrupt(claim.job, now);
+                        let provider = startd.provider;
+                        let delta = self.schedd.interrupt(claim.job, now);
+                        Self::credit_work(&mut self.stats, provider, delta);
                         events.push(PoolEvent::JobInterrupted(
                             slot,
                             InterruptCause::NatDrop,
@@ -308,13 +385,22 @@ impl CondorPool {
                 continue; // stale entry from an earlier claim
             }
             startd.release();
-            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem, startd.pool_tag, -1);
+            Self::count_claim(
+                &mut self.busy_cloud,
+                &mut self.busy_onprem,
+                &mut self.busy_by_provider,
+                startd,
+                -1,
+            );
+            let provider = startd.provider;
             if startd.conn.alive {
-                self.schedd.complete(claim.job, now);
+                let delta = self.schedd.complete(claim.job, now);
+                Self::credit_work(&mut self.stats, provider, delta);
                 events.push(PoolEvent::JobCompleted(slot));
             } else {
                 // results can't be delivered; attempt is lost
-                self.schedd.interrupt(claim.job, now);
+                let delta = self.schedd.interrupt(claim.job, now);
+                Self::credit_work(&mut self.stats, provider, delta);
                 events.push(PoolEvent::JobInterrupted(
                     slot,
                     InterruptCause::WorkerLost,
@@ -342,7 +428,11 @@ impl CondorPool {
         );
         self.stats.classad_evaluations += result.evaluations;
         for (job, slot) in result.matches {
-            let runtime = self.schedd.job(job).runtime_s;
+            // checkpoint-aware: a resumed job occupies the slot for the
+            // restore overhead plus its remaining work, not the full
+            // ground-truth runtime (schedd.stats.resumes counts the
+            // resumed starts)
+            let runtime = self.schedd.attempt_runtime(job);
             self.schedd.start(job, slot, now);
             let startd = self.startds.get_mut(&slot).expect(
                 "pool invariant violated: negotiator matched a job to a \
@@ -350,7 +440,13 @@ impl CondorPool {
                  ads of registered workers)",
             );
             startd.claim_for(job, now, runtime);
-            Self::count_claim(&mut self.busy_cloud, &mut self.busy_onprem, startd.pool_tag, 1);
+            Self::count_claim(
+                &mut self.busy_cloud,
+                &mut self.busy_onprem,
+                &mut self.busy_by_provider,
+                startd,
+                1,
+            );
             self.completions.push_at(now + runtime, slot);
             self.stats.matches += 1;
             events.push(PoolEvent::JobStarted(slot));
@@ -363,6 +459,7 @@ impl CondorPool {
         // incremental busy counters must agree with a full scan
         let mut cloud = 0usize;
         let mut onprem = 0usize;
+        let mut by_provider = [0usize; 3];
         for d in self.startds.values() {
             if d.claim.is_some() {
                 match d.pool_tag {
@@ -370,12 +467,22 @@ impl CondorPool {
                     "onprem" => onprem += 1,
                     _ => {}
                 }
+                if let Some(p) = d.provider {
+                    by_provider[p.index()] += 1;
+                }
             }
         }
         if (cloud, onprem) != (self.busy_cloud, self.busy_onprem) {
             return Err(format!(
                 "busy counters drifted: scan ({cloud},{onprem}) !=                  counters ({},{})",
                 self.busy_cloud, self.busy_onprem
+            ));
+        }
+        if by_provider != self.busy_by_provider {
+            return Err(format!(
+                "per-provider busy counters drifted: scan {by_provider:?} \
+                 != counters {:?}",
+                self.busy_by_provider
             ));
         }
         for (slot, startd) in &self.startds {
@@ -580,6 +687,76 @@ mod tests {
         run(&mut pool, 41 * MINUTE, 20);
         assert_eq!(pool.collector.len(), 6);
         assert_eq!(pool.schedd.running_count(), 6);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_requeues_at_checkpoint_and_resumes() {
+        // the full eviction -> requeue -> resume flow: a worker dies
+        // mid-job, the job requeues at its checkpoint, resumes on a
+        // fresh worker, and finishes after (overhead + remainder) only
+        let mut pool = CondorPool::new().with_checkpoint(
+            crate::config::CheckpointPolicy::Interval {
+                every_s: 10 * MINUTE,
+                resume_overhead_s: 2 * MINUTE,
+            },
+        );
+        add_worker(&mut pool, 0, 60, NatProfile::permissive("x"), 0);
+        submit_jobs(&mut pool, 1, 60 * MINUTE);
+        run(&mut pool, 0, 10);
+        assert_eq!(pool.schedd.running_count(), 1);
+
+        // the worker is lost 35 minutes into the attempt
+        let started = pool
+            .schedd
+            .jobs()[0]
+            .started_at
+            .expect("job is running");
+        let evict_at = started + 35 * MINUTE;
+        let mut events = Vec::new();
+        pool.remove_startd(SlotId::Cloud(InstanceId(0)), evict_at, &mut events);
+        let job = &pool.schedd.jobs()[0];
+        assert_eq!(job.completed_s, 30 * MINUTE, "3 checkpoints survive");
+        assert_eq!(job.goodput_s, 30 * MINUTE);
+        assert_eq!(job.badput_s, 5 * MINUTE);
+        assert_eq!(
+            pool.schedd.attempt_runtime(job.id),
+            2 * MINUTE + 30 * MINUTE
+        );
+
+        // a replacement worker appears; the job resumes and completes
+        add_worker(&mut pool, 1, 60, NatProfile::permissive("x"), evict_at);
+        let events = run(&mut pool, evict_at + MINUTE, 45);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, PoolEvent::JobCompleted(_))));
+        assert_eq!(pool.schedd.stats.resumes, 1);
+        let job = &pool.schedd.jobs()[0];
+        assert_eq!(job.goodput_s, 60 * MINUTE, "goodput == runtime exactly");
+        assert_eq!(job.badput_s, 5 * MINUTE + 2 * MINUTE);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn provider_work_attribution_matches_schedd_totals() {
+        let mut pool = CondorPool::new();
+        for i in 0..4 {
+            add_worker(&mut pool, i, 60, NatProfile::permissive("x"), 0);
+        }
+        submit_jobs(&mut pool, 6, 30 * MINUTE);
+        run(&mut pool, 0, 20);
+        let mut events = Vec::new();
+        pool.begin_outage(20 * MINUTE, &mut events);
+        pool.end_outage();
+        run(&mut pool, 21 * MINUTE, 60);
+        // every settled wall second lands in exactly one provider bucket
+        // (all workers here are Azure; on-prem none exist)
+        let good: u64 = pool.stats.goodput_by_provider.iter().sum();
+        let bad: u64 = pool.stats.badput_by_provider.iter().sum();
+        assert_eq!(good, pool.schedd.stats.goodput_s);
+        assert_eq!(bad, pool.schedd.stats.badput_s);
+        assert_eq!(pool.stats.goodput_by_provider[0], 0, "no aws workers");
+        assert!(pool.stats.goodput_by_provider[2] > 0, "azure did the work");
         pool.check_invariants().unwrap();
     }
 

@@ -1,8 +1,16 @@
 //! The schedd: job queue, submission, and goodput/badput accounting.
+//!
+//! With a [`CheckpointPolicy`] attached, interrupted jobs requeue at
+//! their last checkpoint instead of zero (DESIGN.md §15): the wall
+//! seconds covered by salvaged checkpoints count as goodput at
+//! interrupt time, the un-checkpointed tail (plus any restore
+//! overhead) is badput, and a completed job's goodput across all
+//! attempts sums to exactly its ground-truth runtime.
 
 use super::classad::{Ad, Expr};
 use super::job::{Job, JobId, JobState};
 use super::startd::SlotId;
+use crate::config::CheckpointPolicy;
 use crate::sim::SimTime;
 use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeSet;
@@ -14,12 +22,26 @@ pub struct ScheddStats {
     pub completed: u64,
     /// Attempts lost to preemption / connection loss (job went back idle).
     pub interrupted: u64,
-    /// Productive wall seconds (completed attempts).
+    /// Productive wall seconds (completed attempts + salvaged
+    /// checkpointed progress of interrupted ones).
     pub goodput_s: u64,
-    /// Wasted wall seconds (interrupted attempts).
+    /// Wasted wall seconds (lost tails, restore overheads, completion
+    /// tick rounding).
     pub badput_s: u64,
     /// fp32 FLOPs of completed jobs.
     pub flops_done: f64,
+    /// Wall seconds salvaged by checkpoint resume (subset of goodput_s).
+    pub checkpoint_saved_s: u64,
+    /// Job starts that resumed from a checkpoint.
+    pub resumes: u64,
+}
+
+/// Goodput/badput wall seconds one `complete`/`interrupt` call settled;
+/// the pool attributes these to the slot's provider.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkDelta {
+    pub goodput_s: u64,
+    pub badput_s: u64,
 }
 
 /// The job queue daemon.
@@ -30,12 +52,41 @@ pub struct Schedd {
     /// submissions; O(log n) insert/remove at campaign scale).
     idle: BTreeSet<JobId>,
     running: FxHashMap<JobId, SlotId>,
+    /// Checkpoint/restart policy applied to every job in this queue.
+    checkpoint: CheckpointPolicy,
     pub stats: ScheddStats,
 }
 
 impl Schedd {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the checkpoint/restart policy (campaign construction time;
+    /// changing it mid-queue would misalign `completed_s` boundaries).
+    pub fn set_checkpoint(&mut self, policy: CheckpointPolicy) {
+        debug_assert!(
+            self.jobs.is_empty(),
+            "checkpoint policy must be set before jobs are submitted"
+        );
+        self.checkpoint = policy;
+    }
+
+    pub fn checkpoint_policy(&self) -> CheckpointPolicy {
+        self.checkpoint
+    }
+
+    /// Wall seconds the next attempt of `id` will occupy a slot:
+    /// restore overhead (for a resumed job) plus the not-yet-
+    /// checkpointed remainder of the ground-truth runtime.
+    pub fn attempt_runtime(&self, id: JobId) -> u64 {
+        let job = &self.jobs[id.0 as usize];
+        let overhead = if job.completed_s > 0 {
+            self.checkpoint.resume_overhead_s()
+        } else {
+            0
+        };
+        overhead + (job.runtime_s - job.completed_s.min(job.runtime_s))
     }
 
     /// Submit a job; assigns its JobId.
@@ -64,6 +115,9 @@ impl Schedd {
             completed_at: None,
             goodput_s: 0,
             badput_s: 0,
+            completed_s: 0,
+            attempt_base_s: 0,
+            attempt_overhead_s: 0,
             ad,
             requirements,
             autocluster,
@@ -99,44 +153,86 @@ impl Schedd {
         self.running.get(&id).copied()
     }
 
-    /// Transition Idle -> Running on a successful match.
+    /// Transition Idle -> Running on a successful match.  A job with
+    /// checkpointed progress resumes from it (paying the restore
+    /// overhead) instead of restarting from zero.
     pub fn start(&mut self, id: JobId, slot: SlotId, now: SimTime) {
+        let overhead = if self.jobs[id.0 as usize].completed_s > 0 {
+            self.checkpoint.resume_overhead_s()
+        } else {
+            0
+        };
         let job = &mut self.jobs[id.0 as usize];
         debug_assert_eq!(job.state, JobState::Idle);
         job.state = JobState::Running;
         job.attempts += 1;
         job.started_at = Some(now);
+        job.attempt_base_s = job.completed_s;
+        job.attempt_overhead_s = overhead;
+        if job.completed_s > 0 {
+            self.stats.resumes += 1;
+        }
         self.idle.remove(&id);
         self.running.insert(id, slot);
     }
 
-    /// Transition Running -> Completed.
-    pub fn complete(&mut self, id: JobId, now: SimTime) {
+    /// Transition Running -> Completed.  Goodput is the fresh work this
+    /// attempt delivered (the job's total goodput across attempts sums
+    /// to exactly `runtime_s`); restore overhead and completion tick
+    /// rounding are badput.
+    pub fn complete(&mut self, id: JobId, now: SimTime) -> WorkDelta {
         let job = &mut self.jobs[id.0 as usize];
         debug_assert_eq!(job.state, JobState::Running);
         job.state = JobState::Completed;
         job.completed_at = Some(now);
         let wall = now.saturating_sub(job.started_at.expect("running job"));
-        job.goodput_s += wall;
+        let fresh =
+            (job.runtime_s - job.attempt_base_s.min(job.runtime_s)).min(wall);
+        let waste = wall - fresh;
+        job.completed_s = job.runtime_s;
+        job.goodput_s += fresh;
+        job.badput_s += waste;
         self.running.remove(&id);
         self.stats.completed += 1;
-        self.stats.goodput_s += wall;
+        self.stats.goodput_s += fresh;
+        self.stats.badput_s += waste;
         self.stats.flops_done += job.flops;
+        WorkDelta { goodput_s: fresh, badput_s: waste }
     }
 
     /// Transition Running -> Idle (preemption, disconnect, outage).
-    /// The attempt's wall time is badput; IceCube jobs restart from scratch.
-    pub fn interrupt(&mut self, id: JobId, now: SimTime) {
+    /// Progress covered by checkpoints taken during this attempt is
+    /// salvaged as goodput and the job requeues there; the rest of the
+    /// attempt's wall time is badput.  Under `CheckpointPolicy::None`
+    /// nothing is salvaged — the paper's restart-from-scratch.
+    pub fn interrupt(&mut self, id: JobId, now: SimTime) -> WorkDelta {
+        let checkpoint = self.checkpoint;
         let job = &mut self.jobs[id.0 as usize];
         debug_assert_eq!(job.state, JobState::Running);
         job.state = JobState::Idle;
         let wall = now.saturating_sub(job.started_at.expect("running job"));
-        job.badput_s += wall;
+        // work actually performed this attempt (restore overhead is
+        // not progress), capped at what the job had left
+        let progress = wall
+            .saturating_sub(job.attempt_overhead_s)
+            .min(job.runtime_s - job.attempt_base_s.min(job.runtime_s));
+        let reached = job.attempt_base_s + progress;
+        // salvage never regresses: attempt_base_s is itself on the
+        // checkpoint grid, so the floor can only move forward
+        let salvaged = checkpoint.salvageable(reached).max(job.attempt_base_s);
+        let saved = salvaged - job.attempt_base_s;
+        let waste = wall - saved;
+        job.completed_s = salvaged;
+        job.goodput_s += saved;
+        job.badput_s += waste;
         job.started_at = None;
         self.running.remove(&id);
         self.idle.insert(id);
         self.stats.interrupted += 1;
-        self.stats.badput_s += wall;
+        self.stats.goodput_s += saved;
+        self.stats.badput_s += waste;
+        self.stats.checkpoint_saved_s += saved;
+        WorkDelta { goodput_s: saved, badput_s: waste }
     }
 
     /// Sanity checks used by property tests.
@@ -167,6 +263,14 @@ impl Schedd {
                 as u64
         {
             return Err("completed count mismatch".into());
+        }
+        for job in &self.jobs {
+            if job.completed_s > job.runtime_s {
+                return Err(format!(
+                    "{} checkpointed past its runtime ({} > {})",
+                    job.id, job.completed_s, job.runtime_s
+                ));
+            }
         }
         Ok(())
     }
@@ -235,6 +339,82 @@ mod tests {
         assert_eq!(s.job(id).goodput_s, 3600);
         assert_eq!(s.job(id).badput_s, 1800);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn checkpointed_interrupt_salvages_progress() {
+        let mut s = Schedd::new();
+        s.set_checkpoint(CheckpointPolicy::Interval {
+            every_s: 600,
+            resume_overhead_s: 120,
+        });
+        let id = submit(&mut s, 3600);
+        assert_eq!(s.attempt_runtime(id), 3600, "fresh job pays no overhead");
+        s.start(id, slot(1), 0);
+        // preempted at 1500: checkpoints at 600 and 1200 survive
+        let d = s.interrupt(id, 1500);
+        assert_eq!(d, WorkDelta { goodput_s: 1200, badput_s: 300 });
+        let job = s.job(id);
+        assert_eq!(job.completed_s, 1200);
+        assert_eq!(job.goodput_s, 1200);
+        assert_eq!(job.badput_s, 300);
+        assert_eq!(s.stats.checkpoint_saved_s, 1200);
+        // the next attempt resumes: overhead + the 2400 s remainder
+        assert_eq!(s.attempt_runtime(id), 120 + 2400);
+        s.start(id, slot(2), 2000);
+        assert_eq!(s.stats.resumes, 1);
+        let d = s.complete(id, 2000 + 2520);
+        assert_eq!(d, WorkDelta { goodput_s: 2400, badput_s: 120 });
+        // across attempts: goodput == ground-truth runtime exactly
+        assert_eq!(s.job(id).goodput_s, 3600);
+        assert_eq!(s.job(id).badput_s, 300 + 120);
+        assert_eq!(s.job(id).completed_s, 3600);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn interrupt_during_restore_overhead_salvages_nothing() {
+        let mut s = Schedd::new();
+        s.set_checkpoint(CheckpointPolicy::Interval {
+            every_s: 600,
+            resume_overhead_s: 120,
+        });
+        let id = submit(&mut s, 3600);
+        s.start(id, slot(1), 0);
+        s.interrupt(id, 700); // salvages the 600 s checkpoint
+        assert_eq!(s.job(id).completed_s, 600);
+        s.start(id, slot(2), 1000);
+        // killed 60 s in: still restoring, no fresh progress
+        let d = s.interrupt(id, 1060);
+        assert_eq!(d, WorkDelta { goodput_s: 0, badput_s: 60 });
+        assert_eq!(s.job(id).completed_s, 600, "checkpoint never regresses");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn no_checkpoint_policy_restarts_from_scratch() {
+        // the paper baseline: an interrupt wastes the whole attempt
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 3600);
+        s.start(id, slot(1), 0);
+        let d = s.interrupt(id, 3599);
+        assert_eq!(d, WorkDelta { goodput_s: 0, badput_s: 3599 });
+        assert_eq!(s.job(id).completed_s, 0);
+        assert_eq!(s.attempt_runtime(id), 3600, "restart from zero");
+        assert_eq!(s.stats.resumes, 0);
+        assert_eq!(s.stats.checkpoint_saved_s, 0);
+    }
+
+    #[test]
+    fn completion_tick_rounding_lands_in_badput() {
+        // the pool completes at the first tick >= finish; the residue
+        // must not inflate goodput past the ground-truth runtime
+        let mut s = Schedd::new();
+        let id = submit(&mut s, 3_590);
+        s.start(id, slot(1), 0);
+        let d = s.complete(id, 3_600);
+        assert_eq!(d, WorkDelta { goodput_s: 3_590, badput_s: 10 });
+        assert_eq!(s.job(id).goodput_s, 3_590);
     }
 
     #[test]

@@ -121,7 +121,10 @@ impl Startd {
         self.claim.is_none() && self.conn.alive
     }
 
-    /// Claim the slot for a job.
+    /// Claim the slot for a job.  `runtime_s` is the wall time this
+    /// attempt will occupy the slot (for a resumed job: restore
+    /// overhead + the not-yet-checkpointed remainder, priced by
+    /// `Schedd::attempt_runtime`).
     pub fn claim_for(&mut self, job: JobId, now: SimTime, runtime_s: u64) {
         debug_assert!(self.claim.is_none(), "double claim on {}", self.slot);
         self.claim = Some(Claim {

@@ -58,6 +58,12 @@ pub enum PolicyMode {
     Fixed(ProviderWeights),
     /// Adapt weights to observed price and preemption rates.
     Adaptive,
+    /// Region-level risk pricing: each region's share of the ramp
+    /// target is proportional to its market depth discounted by price
+    /// and its *observed* reclaim+churn rate.  The paper's
+    /// Azure-favoring becomes an emergent outcome instead of a
+    /// hardcoded weight vector — see `coordinator::policy`.
+    RiskAware,
 }
 
 impl PolicyMode {
@@ -65,6 +71,7 @@ impl PolicyMode {
     pub fn canonical_json(&self) -> Json {
         match self {
             PolicyMode::Adaptive => Json::from("adaptive"),
+            PolicyMode::RiskAware => Json::from("risk-aware"),
             PolicyMode::Fixed(w) => {
                 let mut f = Json::obj();
                 f.set("aws", Json::from(w.aws));
@@ -73,6 +80,107 @@ impl PolicyMode {
                 let mut o = Json::obj();
                 o.set("fixed", f);
                 o
+            }
+        }
+    }
+}
+
+/// Default checkpoint-restore cost: re-staging input state and
+/// re-priming the GPU before fresh bunches propagate.
+pub const DEFAULT_RESUME_OVERHEAD_S: u64 = 120;
+
+/// Checkpoint/restart policy for IceCube jobs (DESIGN.md §15).
+///
+/// The paper's jobs restarted from scratch on every interruption —
+/// every preempted wall-hour was wasted.  `Interval` models periodic
+/// checkpoints at photon-bunch granularity: a preempted or
+/// outage-killed job requeues at its last checkpoint and pays
+/// `resume_overhead_s` before fresh work proceeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointPolicy {
+    /// Paper baseline: interrupted jobs restart from zero.
+    #[default]
+    None,
+    /// Checkpoint every `every_s` seconds of job progress.
+    Interval {
+        every_s: u64,
+        /// Wall seconds a resumed attempt spends restoring state
+        /// before fresh work proceeds (always badput).
+        resume_overhead_s: u64,
+    },
+}
+
+impl CheckpointPolicy {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            CheckpointPolicy::None => Json::from("none"),
+            CheckpointPolicy::Interval { every_s, resume_overhead_s } => {
+                let mut i = Json::obj();
+                i.set("every_s", Json::from(*every_s));
+                i.set(
+                    "resume_overhead_s",
+                    Json::from(*resume_overhead_s),
+                );
+                let mut o = Json::obj();
+                o.set("interval", i);
+                o
+            }
+        }
+    }
+
+    /// Shared validation of the three checkpoint knobs as they appear
+    /// in campaign TOML (`[checkpoint]`) and sweep-matrix scenario
+    /// tables — one decision table, two parsers.  `Ok(None)` means no
+    /// knob was present (leave the current policy alone); `ctx`
+    /// prefixes error messages.
+    pub fn from_knobs(
+        disabled: bool,
+        every_s: Option<u64>,
+        resume_overhead_s: Option<u64>,
+        ctx: &str,
+    ) -> Result<Option<CheckpointPolicy>, String> {
+        match (disabled, every_s, resume_overhead_s) {
+            (true, None, None) => Ok(Some(CheckpointPolicy::None)),
+            (true, _, _) => Err(format!(
+                "{ctx} sets the disabled knob next to interval knobs; \
+                 pick one"
+            )),
+            (false, Some(0), _) => Err(format!(
+                "{ctx} checkpoint interval must be >= 1 second"
+            )),
+            (false, Some(every_s), overhead) => {
+                Ok(Some(CheckpointPolicy::Interval {
+                    every_s,
+                    resume_overhead_s: overhead
+                        .unwrap_or(DEFAULT_RESUME_OVERHEAD_S),
+                }))
+            }
+            (false, None, Some(_)) => Err(format!(
+                "{ctx} resume overhead needs a checkpoint interval"
+            )),
+            (false, None, None) => Ok(None),
+        }
+    }
+
+    /// Restore cost charged at the start of a resumed attempt.
+    pub fn resume_overhead_s(&self) -> u64 {
+        match self {
+            CheckpointPolicy::None => 0,
+            CheckpointPolicy::Interval { resume_overhead_s, .. } => {
+                *resume_overhead_s
+            }
+        }
+    }
+
+    /// Largest checkpointed progress not exceeding `progress_s`.
+    pub fn salvageable(&self, progress_s: u64) -> u64 {
+        match self {
+            CheckpointPolicy::None => 0,
+            CheckpointPolicy::Interval { every_s, .. } => {
+                crate::workload::icecube::salvageable_progress(
+                    progress_s, *every_s,
+                )
             }
         }
     }
@@ -191,6 +299,9 @@ pub struct CampaignConfig {
     pub preempt_multiplier: f64,
     /// NAT behaviour override applied to every region.
     pub nat_override: NatOverride,
+    /// Job checkpoint/restart policy (None = the paper's
+    /// restart-from-scratch baseline).
+    pub checkpoint: CheckpointPolicy,
 
     pub ramp: Vec<RampStep>,
     pub outage: Option<OutageSpec>,
@@ -226,6 +337,7 @@ impl Default for CampaignConfig {
             keepalive_s: 60,
             preempt_multiplier: 1.0,
             nat_override: NatOverride::ProviderDefault,
+            checkpoint: CheckpointPolicy::None,
             ramp: vec![
                 // initial validation with a small fleet, then the paper's
                 // 400 / 900 / 1.2k / 1.6k / 2k staircase
@@ -303,6 +415,19 @@ impl CampaignConfig {
             }
             self.engine.bunch = u32::try_from(v)
                 .map_err(|_| format!("'engine.bunch' {v} is out of range"))?;
+        }
+        let ck_disabled =
+            want_bool(doc, &["checkpoint", "disabled"])? == Some(true);
+        let ck_every = want_u64(doc, &["checkpoint", "every_s"])?;
+        let ck_overhead =
+            want_u64(doc, &["checkpoint", "resume_overhead_s"])?;
+        if let Some(policy) = CheckpointPolicy::from_knobs(
+            ck_disabled,
+            ck_every,
+            ck_overhead,
+            "[checkpoint]",
+        )? {
+            self.checkpoint = policy;
         }
         let nat_disabled =
             want_bool(doc, &["nat", "disabled"])? == Some(true);
@@ -424,23 +549,25 @@ impl CampaignConfig {
                 "'policy.mode' must be a string".to_string()
             })?;
             self.policy = match mode {
-                "adaptive" if weights.is_some() => {
-                    return Err("policy.mode = \"adaptive\" conflicts \
-                                with fixed aws/gcp/azure weights"
-                        .into())
+                "adaptive" | "risk-aware" if weights.is_some() => {
+                    return Err(format!(
+                        "policy.mode = \"{mode}\" conflicts with fixed \
+                         aws/gcp/azure weights"
+                    ))
                 }
                 "adaptive" => PolicyMode::Adaptive,
+                "risk-aware" => PolicyMode::RiskAware,
                 // mode = "fixed" must actually pin a fixed policy: take
                 // this doc's weights, or keep already-fixed weights —
-                // but never let it silently leave an adaptive policy in
+                // but never let it silently leave a non-fixed policy in
                 // place
                 "fixed" => match (weights, self.policy) {
                     (Some(w), _) => PolicyMode::Fixed(w),
                     (None, fixed @ PolicyMode::Fixed(_)) => fixed,
-                    (None, PolicyMode::Adaptive) => {
+                    (None, _) => {
                         return Err("policy.mode = \"fixed\" needs \
                                     aws/gcp/azure weights (current \
-                                    policy is adaptive)"
+                                    policy is not fixed)"
                             .into())
                     }
                 },
@@ -466,7 +593,9 @@ impl CampaignConfig {
     /// its knobs, so they must NOT split the cache.
     pub fn canonical_json(&self) -> Json {
         let mut o = Json::obj();
-        o.set("v", Json::from(1u64));
+        // v2: adds the `checkpoint` policy (PR 5); the bump keeps every
+        // pre-checkpoint cache key from aliasing a v2 key
+        o.set("v", Json::from(2u64));
         o.set("seed", Json::from(self.seed));
         o.set("duration_s", Json::from(self.duration_s));
         o.set("tick_s", Json::from(self.tick_s));
@@ -505,6 +634,7 @@ impl CampaignConfig {
             Json::from(self.preempt_multiplier),
         );
         o.set("nat_override", self.nat_override.canonical_json());
+        o.set("checkpoint", self.checkpoint.canonical_json());
         o.set(
             "ramp",
             Json::Arr(self.ramp.iter().map(RampStep::canonical_json).collect()),
@@ -932,8 +1062,8 @@ azure = 0.6
         // every replay-relevant scalar knob must appear by name
         for key in [
             "seed", "duration_s", "tick_s", "budget_usd", "keepalive_s",
-            "preempt_multiplier", "nat_override", "ramp", "outage",
-            "policy", "onprem", "generator", "flops_per_bunch",
+            "preempt_multiplier", "nat_override", "checkpoint", "ramp",
+            "outage", "policy", "onprem", "generator", "flops_per_bunch",
         ] {
             assert!(a.contains(&format!("\"{key}\"")), "missing {key}: {a}");
         }
@@ -954,6 +1084,117 @@ azure = 0.6
         let mut c = CampaignConfig::default();
         c.policy = PolicyMode::Adaptive;
         assert_ne!(base, c.canonical_json().to_string_compact());
+        let mut c = CampaignConfig::default();
+        c.policy = PolicyMode::RiskAware;
+        assert_ne!(base, c.canonical_json().to_string_compact());
+        let mut c = CampaignConfig::default();
+        c.checkpoint = CheckpointPolicy::Interval {
+            every_s: 1800,
+            resume_overhead_s: 120,
+        };
+        assert_ne!(base, c.canonical_json().to_string_compact());
+        // the two interval knobs split keys independently
+        let mut d = CampaignConfig::default();
+        d.checkpoint = CheckpointPolicy::Interval {
+            every_s: 1800,
+            resume_overhead_s: 60,
+        };
+        assert_ne!(
+            c.canonical_json().to_string_compact(),
+            d.canonical_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn checkpoint_knobs_from_toml() {
+        let doc = toml::parse(
+            "[checkpoint]\nevery_s = 1800\nresume_overhead_s = 60",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(
+            c.checkpoint,
+            CheckpointPolicy::Interval { every_s: 1800, resume_overhead_s: 60 }
+        );
+
+        // overhead defaults when only the interval is given
+        let doc = toml::parse("[checkpoint]\nevery_s = 600").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(
+            c.checkpoint,
+            CheckpointPolicy::Interval {
+                every_s: 600,
+                resume_overhead_s: DEFAULT_RESUME_OVERHEAD_S,
+            }
+        );
+
+        // disabled = true forces the paper baseline over a set policy
+        let doc = toml::parse("[checkpoint]\ndisabled = true").unwrap();
+        let mut c = CampaignConfig::default();
+        c.checkpoint = CheckpointPolicy::Interval {
+            every_s: 600,
+            resume_overhead_s: 60,
+        };
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.checkpoint, CheckpointPolicy::None);
+
+        // mistyped / degenerate / conflicting spellings are errors
+        for src in [
+            "[checkpoint]\nevery_s = 0",
+            "[checkpoint]\nevery_s = \"1800\"",
+            "[checkpoint]\nevery_s = 30.5",
+            "[checkpoint]\nresume_overhead_s = 60",
+            "[checkpoint]\ndisabled = true\nevery_s = 600",
+            "[checkpoint]\ndisabled = \"yes\"",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "'{src}' must error");
+        }
+    }
+
+    #[test]
+    fn checkpoint_default_is_paper_baseline() {
+        let c = CampaignConfig::default();
+        assert_eq!(c.checkpoint, CheckpointPolicy::None);
+        assert_eq!(c.checkpoint.resume_overhead_s(), 0);
+        assert_eq!(c.checkpoint.salvageable(10_000), 0);
+    }
+
+    #[test]
+    fn checkpoint_salvage_floors_to_interval() {
+        let p = CheckpointPolicy::Interval {
+            every_s: 600,
+            resume_overhead_s: 120,
+        };
+        assert_eq!(p.salvageable(0), 0);
+        assert_eq!(p.salvageable(599), 0);
+        assert_eq!(p.salvageable(600), 600);
+        assert_eq!(p.salvageable(1799), 1200);
+        assert_eq!(p.resume_overhead_s(), 120);
+    }
+
+    #[test]
+    fn risk_aware_policy_selectable_and_conflicts_with_weights() {
+        let doc = toml::parse("[policy]\nmode = \"risk-aware\"").unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.policy, PolicyMode::RiskAware);
+
+        let doc = toml::parse(
+            "[policy]\nmode = \"risk-aware\"\naws = 0.5\ngcp = 0.3\nazure = 0.2",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        assert!(c.apply_toml(&doc).is_err());
+
+        // mode = "fixed" on a risk-aware policy without weights errors
+        let doc = toml::parse("[policy]\nmode = \"fixed\"").unwrap();
+        let mut c = CampaignConfig::default();
+        c.policy = PolicyMode::RiskAware;
+        assert!(c.apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -49,6 +49,19 @@ impl RealComputeStats {
     }
 }
 
+/// Per-provider settled/unsettled work at campaign end (wall seconds
+/// on cloud slots).  The conservation identity the accounting keeps:
+/// `goodput + badput + inflight == busy_hours × 3600` for every
+/// provider (pinned in `rust/tests/integration_campaign.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProviderWork {
+    pub goodput_s: u64,
+    pub badput_s: u64,
+    /// Wall seconds of attempts still running when the campaign ended
+    /// (neither goodput nor badput yet).
+    pub inflight_s: u64,
+}
+
 /// Everything the experiments need from a finished campaign.
 pub struct CampaignResult {
     pub monitor: Monitor,
@@ -60,6 +73,8 @@ pub struct CampaignResult {
     /// (launches, preemptions, instance-hours) per provider in
     /// `[aws, gcp, azure]` order.
     pub provider_ops: [(u64, u64, f64); 3],
+    /// Goodput/badput/in-flight wall seconds per provider (same order).
+    pub provider_work: [ProviderWork; 3],
     pub onprem_slots: u32,
     pub real_compute: RealComputeStats,
     /// Ramp transitions + outage window, for figure annotation.
@@ -129,8 +144,9 @@ impl Campaign {
             }
         }
         let fleet = CloudSim::new(specs, root.derive("fleet"));
-        let mut pool =
-            CondorPool::new().with_negotiation_period(config.negotiation_period_s);
+        let mut pool = CondorPool::new()
+            .with_negotiation_period(config.negotiation_period_s)
+            .with_checkpoint(config.checkpoint);
         let mut onprem_rng = root.derive("onprem");
         let onprem_slots =
             register_onprem(&mut pool, &config.onprem, &mut onprem_rng, 0);
@@ -328,33 +344,54 @@ impl Campaign {
             .sample("spend.rate_per_day", now, self.ledger.spend_rate_per_day());
     }
 
+    /// Operator reaction to the outage beginning: the WMS is dark, jobs
+    /// on workers are lost, and "we quickly de-provisioned all the
+    /// worker instances" (paper behaviour).
+    fn outage_began(&mut self, now: SimTime) {
+        sim_warn!(now, "outage", "network outage at the CE-hosting provider; WMS down");
+        self.ce.set_available(false);
+        let mut events = Vec::new();
+        self.pool.begin_outage(now, &mut events);
+        self.factory.deprovision_all(&mut self.fleet);
+    }
+
+    /// Operator reaction to the outage resolving: the CE is reachable
+    /// again, and with ~20% of budget left the fleet resumes low.
+    fn outage_ended(&mut self, now: SimTime) {
+        sim_info!(
+            now,
+            "outage",
+            "outage resolved; resuming at {} GPUs",
+            self.config.post_outage_target
+        );
+        self.ce.set_available(true);
+        self.pool.end_outage();
+        if self.ledger.remaining_fraction()
+            <= self.config.low_budget_resume_fraction
+        {
+            self.post_outage = true;
+        }
+    }
+
     /// Advance one tick.
     pub fn tick(&mut self, now: SimTime) {
         // 1. outage schedule + operator response
         match self.outage.advance(now) {
-            OutageTransition::Began => {
-                sim_warn!(now, "outage", "network outage at the CE-hosting provider; WMS down");
-                self.ce.set_available(false);
-                let mut events = Vec::new();
-                self.pool.begin_outage(now, &mut events);
-                // "we quickly de-provisioned all the worker instances"
-                self.factory.deprovision_all(&mut self.fleet);
-            }
-            OutageTransition::Ended => {
-                sim_info!(
+            OutageTransition::Began => self.outage_began(now),
+            OutageTransition::Ended => self.outage_ended(now),
+            OutageTransition::BeganAndEnded => {
+                // a control tick coarser than the window: the outage
+                // came and went between observations, but its effects
+                // are real — the full begin AND end reactions fire
+                // within this one tick
+                sim_warn!(
                     now,
                     "outage",
-                    "outage resolved; resuming at {} GPUs",
-                    self.config.post_outage_target
+                    "CE-host outage began and ended within one tick; \
+                     applying full begin/end reaction"
                 );
-                self.ce.set_available(true);
-                self.pool.end_outage();
-                // operator decision: with ~20% budget left, resume low
-                if self.ledger.remaining_fraction()
-                    <= self.config.low_budget_resume_fraction
-                {
-                    self.post_outage = true;
-                }
+                self.outage_began(now);
+                self.outage_ended(now);
             }
             OutageTransition::None => {}
         }
@@ -379,6 +416,8 @@ impl Campaign {
 
         // 6. metering + usage accounting
         self.meter.accrue(&self.fleet, self.config.tick_s);
+        self.meter
+            .accrue_busy(self.pool.busy_by_provider(), self.config.tick_s);
         let (cloud_busy, onprem_busy) = self.pool.running_cloud_onprem();
         self.usage.accrue(now, self.config.tick_s, cloud_busy, onprem_busy);
 
@@ -413,6 +452,19 @@ impl Campaign {
             provider_ops[policy::provider_index(p)].2 =
                 self.meter.provider(p).instance_hours;
         }
+        // accrual covered [0, num_ticks × tick_s); measure in-flight
+        // wall to the same horizon so busy == good + bad + inflight
+        // holds exactly per provider
+        let accrued_until = self.config.num_ticks() * self.config.tick_s;
+        let inflight = self.pool.inflight_by_provider(accrued_until);
+        let mut provider_work = [ProviderWork::default(); 3];
+        for i in 0..3 {
+            provider_work[i] = ProviderWork {
+                goodput_s: self.pool.stats.goodput_by_provider[i],
+                badput_s: self.pool.stats.badput_by_provider[i],
+                inflight_s: inflight[i],
+            };
+        }
         CampaignResult {
             monitor: self.monitor,
             usage: self.usage,
@@ -421,6 +473,7 @@ impl Campaign {
             pool_stats: self.pool.stats,
             schedd_stats: self.pool.schedd.stats,
             provider_ops,
+            provider_work,
             onprem_slots: self.onprem_slots,
             real_compute: self.real_stats,
             ramp_transitions: self.ramp.transitions(),
@@ -600,6 +653,39 @@ mod tests {
         c.duration_s = 12 * HOUR;
         let result = Campaign::new(c).run();
         assert!(result.pool_stats.nat_drops > 0);
+    }
+
+    #[test]
+    fn coarse_tick_cannot_skip_a_short_outage() {
+        // regression: a 10-minute tick over a 5-minute outage window
+        // used to skip the whole outage — no jobs lost, no operator
+        // reaction, the campaign finished at full ramp as if §IV never
+        // happened.  The catch-up transition must fire the full
+        // begin/end response: here the post-outage resume drops the
+        // fleet from the 80-GPU ramp to the 40-GPU resume target.
+        let mut c = small_config();
+        c.tick_s = 10 * MINUTE;
+        // window strictly inside one tick: [DAY+61, DAY+361) contains
+        // no multiple of 600
+        c.outage = Some(crate::config::OutageSpec {
+            at_s: DAY + 61,
+            duration_s: 5 * MINUTE,
+        });
+        let result = Campaign::new(c).run();
+        let last = result
+            .monitor
+            .get("gpus.total")
+            .unwrap()
+            .last()
+            .unwrap();
+        assert!(
+            last > 20.0 && last < 60.0,
+            "post-outage resume target must be in effect, fleet={last}"
+        );
+        assert!(
+            result.schedd_stats.interrupted > 0,
+            "the skipped-window outage must cost running jobs"
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod policy;
 pub mod rampplan;
 pub mod scenario;
 
-pub use campaign::{Campaign, CampaignResult, RealComputeStats};
+pub use campaign::{Campaign, CampaignResult, ProviderWork, RealComputeStats};
 pub use outage::{OutageState, OutageTransition};
 pub use policy::{distribute, ObservedRates};
 pub use rampplan::RampPlan;

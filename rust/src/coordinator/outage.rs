@@ -11,6 +11,13 @@ pub enum OutageTransition {
     Began,
     /// The outage just ended at this tick.
     Ended,
+    /// A single tick jumped over the whole window: the outage both
+    /// began and ended since the last observation.  The campaign must
+    /// apply the full begin→end reaction (jobs were lost, the operator
+    /// response fires) — before this catch-up transition existed, a
+    /// control tick coarser than the window silently skipped the
+    /// outage and `occurred` stayed false forever.
+    BeganAndEnded,
 }
 
 /// Tracks the scheduled outage window.
@@ -37,9 +44,15 @@ impl OutageState {
             return OutageTransition::None;
         };
         let end = spec.at_s + spec.duration_s;
-        if !self.active && !self.occurred && now >= spec.at_s && now < end {
-            self.active = true;
-            return OutageTransition::Began;
+        if !self.active && !self.occurred && now >= spec.at_s {
+            if now < end {
+                self.active = true;
+                return OutageTransition::Began;
+            }
+            // the tick straddled (or landed exactly on the end of) the
+            // whole window without ever observing it active
+            self.occurred = true;
+            return OutageTransition::BeganAndEnded;
         }
         if self.active && now >= end {
             self.active = false;
@@ -87,5 +100,41 @@ mod tests {
         let mut o = OutageState::new(Some(OutageSpec { at_s: 100, duration_s: 50 }));
         assert_eq!(o.advance(130), OutageTransition::Began);
         assert_eq!(o.advance(400), OutageTransition::Ended);
+    }
+
+    #[test]
+    fn tick_straddling_whole_window_fires_catchup() {
+        // regression: a 10-minute tick over a 5-minute window used to
+        // skip the outage entirely (no transition, occurred == false)
+        let mut o =
+            OutageState::new(Some(OutageSpec { at_s: 620, duration_s: 300 }));
+        assert_eq!(o.advance(600), OutageTransition::None);
+        assert_eq!(o.advance(1200), OutageTransition::BeganAndEnded);
+        assert!(!o.is_active());
+        assert!(o.occurred);
+        // never re-fires
+        assert_eq!(o.advance(1800), OutageTransition::None);
+    }
+
+    #[test]
+    fn tick_landing_exactly_on_end_fires_catchup() {
+        // the window is [at, at + duration): a first observation at
+        // exactly `end` never saw it active and must still catch up
+        let mut o =
+            OutageState::new(Some(OutageSpec { at_s: 100, duration_s: 50 }));
+        assert_eq!(o.advance(50), OutageTransition::None);
+        assert_eq!(o.advance(150), OutageTransition::BeganAndEnded);
+        assert!(o.occurred);
+        assert_eq!(o.advance(200), OutageTransition::None);
+    }
+
+    #[test]
+    fn tick_inside_window_still_fires_began_then_ended() {
+        // the catch-up path must not swallow the normal split lifecycle
+        let mut o =
+            OutageState::new(Some(OutageSpec { at_s: 100, duration_s: 50 }));
+        assert_eq!(o.advance(149), OutageTransition::Began);
+        assert_eq!(o.advance(150), OutageTransition::Ended);
+        assert!(o.occurred);
     }
 }

@@ -5,18 +5,30 @@
 //! exercise" after validation showed it had the lowest spot price
 //! ($2.9/T4-day) *and* the most spare capacity / lowest preemption.
 //! `PolicyMode::Fixed` encodes that choice; `PolicyMode::Adaptive`
-//! derives weights from observed price and preemption — the ablation in
-//! DESIGN.md §8.
+//! derives provider weights from observed price and preemption — the
+//! ablation in DESIGN.md §8.  `PolicyMode::RiskAware` drops the
+//! provider tier entirely: every region competes on market depth
+//! discounted by price and the *observed* reclaim+churn rate of its
+//! provider, so the paper's Azure-favoring is an emergent outcome of
+//! the same evidence the operators had, not a hardcoded weight vector
+//! (DESIGN.md §15).
 
 use crate::cloud::{CloudSim, Provider, RegionId};
 use crate::config::{PolicyMode, ProviderWeights};
 use std::collections::BTreeMap;
 
+/// Risk-penalty steepness per (preempt/instance-hour), shared by the
+/// adaptive and risk-aware modes: at the paper's observed worst rate
+/// (~0.05/h) the penalty is e^-3 ≈ 0.05.
+const RISK_K: f64 = 60.0;
+
 /// Distribute `total` GPUs across regions.
 ///
-/// Within a provider, regions receive shares proportional to their mean
-/// market depth (what an operator learns during validation), with
-/// largest-remainder rounding so the provider total is exact.
+/// Fixed/adaptive modes split the total across providers by weight,
+/// then across each provider's regions by mean market depth (what an
+/// operator learns during validation).  Risk-aware mode scores every
+/// region directly.  All paths use largest-remainder rounding so the
+/// grand total is exact.
 pub fn distribute(
     total: u32,
     fleet: &CloudSim,
@@ -26,6 +38,9 @@ pub fn distribute(
     let weights = match mode {
         PolicyMode::Fixed(w) => *w,
         PolicyMode::Adaptive => adaptive_weights(fleet, observed),
+        PolicyMode::RiskAware => {
+            return distribute_risk_aware(total, fleet, observed)
+        }
     };
     let norm = weights.aws + weights.gcp + weights.azure;
     let mut out = BTreeMap::new();
@@ -47,31 +62,72 @@ pub fn distribute(
             .filter(|(_, r)| r.spec().provider == provider)
             .map(|(rid, r)| (rid, r.spec().base_capacity))
             .collect();
-        let cap_sum: f64 = regions.iter().map(|(_, c)| c).sum();
-        // largest-remainder apportionment
-        let mut assigned = 0u32;
-        let mut fracs: Vec<(RegionId, u32, f64)> = regions
-            .iter()
-            .map(|(rid, cap)| {
-                let share = provider_total as f64 * cap / cap_sum.max(1.0);
-                let base = share.floor() as u32;
-                (*rid, base, share - base as f64)
-            })
-            .collect();
-        assigned += fracs.iter().map(|(_, b, _)| b).sum::<u32>();
-        fracs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
-        let mut remainder = provider_total.saturating_sub(assigned);
-        for (rid, base, _) in fracs {
+        for (rid, n) in apportion(provider_total, &regions) {
+            out.insert(rid, n);
+        }
+    }
+    out
+}
+
+/// Largest-remainder apportionment of `target` units across scored
+/// items: exact total, deterministic tie-break by id.
+fn apportion(target: u32, scores: &[(RegionId, f64)]) -> Vec<(RegionId, u32)> {
+    let score_sum: f64 = scores.iter().map(|(_, s)| s).sum();
+    // guard only the all-zero case: clamping small-but-positive sums
+    // (e.g. risk scores crushed by a heavy observed-reclaim penalty)
+    // to 1.0 would silently shrink every share and lose the target
+    let denom = if score_sum > 0.0 { score_sum } else { 1.0 };
+    let mut fracs: Vec<(RegionId, u32, f64)> = scores
+        .iter()
+        .map(|(rid, score)| {
+            let share = target as f64 * score / denom;
+            let base = share.floor() as u32;
+            (*rid, base, share - base as f64)
+        })
+        .collect();
+    let assigned: u32 = fracs.iter().map(|(_, b, _)| b).sum();
+    fracs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+    let mut remainder = target.saturating_sub(assigned);
+    fracs
+        .into_iter()
+        .map(|(rid, base, _)| {
             let extra = if remainder > 0 {
                 remainder -= 1;
                 1
             } else {
                 0
             };
-            out.insert(rid, base + extra);
-        }
+            (rid, base + extra)
+        })
+        .collect()
+}
+
+/// Region-level risk pricing: score every region by
+/// `depth × exp(-K × observed_reclaim_rate) / price` and apportion the
+/// whole target across all regions in one pass.  With no observations
+/// yet this reduces to cheapest-deepest-first — which already favors
+/// Azure ($2.9/T4-day, deepest markets); once the campaign observes
+/// reclaim+churn the risky providers are discounted further.
+fn distribute_risk_aware(
+    total: u32,
+    fleet: &CloudSim,
+    observed: Option<&ObservedRates>,
+) -> BTreeMap<RegionId, u32> {
+    let scores: Vec<(RegionId, f64)> = fleet
+        .regions()
+        .map(|(rid, r)| {
+            let spec = r.spec();
+            let rate = observed
+                .map(|o| o.preempt_per_hour[provider_index(spec.provider)])
+                .unwrap_or(0.0);
+            let penalty = (-RISK_K * rate).exp();
+            (rid, spec.base_capacity * penalty / spec.price_per_day())
+        })
+        .collect();
+    if total == 0 || scores.iter().all(|(_, s)| *s <= 0.0) {
+        return fleet.regions().map(|(rid, _)| (rid, 0)).collect();
     }
-    out
+    apportion(total, &scores).into_iter().collect()
 }
 
 /// Observed per-provider operating rates (filled in by the campaign from
@@ -90,7 +146,6 @@ fn adaptive_weights(
     fleet: &CloudSim,
     observed: Option<&ObservedRates>,
 ) -> ProviderWeights {
-    const K: f64 = 60.0; // penalty steepness per (preempt/instance-hour)
     let mut price = [0.0f64; 3];
     let mut count = [0u32; 3];
     for (_, r) in fleet.regions() {
@@ -105,7 +160,7 @@ fn adaptive_weights(
         }
         let avg_price = price[i] / count[i] as f64;
         let penalty = observed
-            .map(|o| (-K * o.preempt_per_hour[i]).exp())
+            .map(|o| (-RISK_K * o.preempt_per_hour[i]).exp())
             .unwrap_or(1.0);
         w[i] = penalty / avg_price;
     }
@@ -113,11 +168,7 @@ fn adaptive_weights(
 }
 
 pub fn provider_index(p: Provider) -> usize {
-    match p {
-        Provider::Aws => 0,
-        Provider::Gcp => 1,
-        Provider::Azure => 2,
-    }
+    p.index()
 }
 
 #[cfg(test)]
@@ -214,6 +265,75 @@ mod tests {
         assert_eq!(
             distribute(777, &f, &paper_mode(), None),
             distribute(777, &f, &paper_mode(), None)
+        );
+    }
+
+    #[test]
+    fn risk_aware_totals_are_exact() {
+        let f = fleet();
+        for total in [0u32, 1, 7, 777, 2000] {
+            let t = distribute(total, &f, &PolicyMode::RiskAware, None);
+            assert_eq!(t.values().sum::<u32>(), total, "total={total}");
+            assert_eq!(t.len(), f.num_regions());
+        }
+    }
+
+    #[test]
+    fn risk_aware_azure_favoring_is_emergent() {
+        // no hardcoded weights: with no observations the score is
+        // depth/price, and Azure (cheapest, deepest) must still win
+        let f = fleet();
+        let t = distribute(2000, &f, &PolicyMode::RiskAware, None);
+        let az = provider_total(&f, &t, Provider::Azure);
+        let aws = provider_total(&f, &t, Provider::Aws);
+        let gcp = provider_total(&f, &t, Provider::Gcp);
+        assert!(
+            az > aws && az > gcp,
+            "azure ({az}) must lead aws ({aws}) / gcp ({gcp})"
+        );
+    }
+
+    #[test]
+    fn risk_aware_discounts_observed_reclaim_churn() {
+        let f = fleet();
+        let calm = distribute(1000, &f, &PolicyMode::RiskAware, None);
+        // observation: azure reclaims+churns heavily, others are calm
+        let obs = ObservedRates { preempt_per_hour: [0.0, 0.0, 0.08] };
+        let risky = distribute(1000, &f, &PolicyMode::RiskAware, Some(&obs));
+        let az_calm = provider_total(&f, &calm, Provider::Azure);
+        let az_risky = provider_total(&f, &risky, Provider::Azure);
+        assert!(
+            az_risky < az_calm / 2,
+            "observed risk must shift share away from azure \
+             ({az_calm} -> {az_risky})"
+        );
+        // the displaced share lands on the calm providers, total exact
+        assert_eq!(risky.values().sum::<u32>(), 1000);
+        assert!(
+            provider_total(&f, &risky, Provider::Aws)
+                > provider_total(&f, &calm, Provider::Aws)
+        );
+    }
+
+    #[test]
+    fn risk_aware_totals_survive_crushing_penalties() {
+        // regression: when every region's score is penalty-crushed
+        // below a combined sum of 1.0, the apportionment must still
+        // hand out the exact target (a clamped denominator used to
+        // collapse a 2000-GPU ramp to ~one instance per region)
+        let f = fleet();
+        let obs = ObservedRates { preempt_per_hour: [0.2, 0.2, 0.2] };
+        let t = distribute(2000, &f, &PolicyMode::RiskAware, Some(&obs));
+        assert_eq!(t.values().sum::<u32>(), 2000);
+    }
+
+    #[test]
+    fn risk_aware_deterministic() {
+        let f = fleet();
+        let obs = ObservedRates { preempt_per_hour: [0.01, 0.02, 0.005] };
+        assert_eq!(
+            distribute(999, &f, &PolicyMode::RiskAware, Some(&obs)),
+            distribute(999, &f, &PolicyMode::RiskAware, Some(&obs))
         );
     }
 }

@@ -10,7 +10,8 @@
 //! (`Some(None)`).
 
 use crate::config::{
-    CampaignConfig, NatOverride, OutageSpec, PolicyMode, RampStep,
+    CampaignConfig, CheckpointPolicy, NatOverride, OutageSpec, PolicyMode,
+    RampStep,
 };
 use crate::sim::SimTime;
 use crate::util::json::Json;
@@ -32,6 +33,9 @@ pub struct ScenarioConfig {
     pub ramp: Option<Vec<RampStep>>,
     pub onprem_slots: Option<u32>,
     pub policy: Option<PolicyMode>,
+    /// Job checkpoint/restart policy (`CheckpointPolicy::None` forces
+    /// the paper's restart-from-scratch baseline over the base's).
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl ScenarioConfig {
@@ -72,6 +76,9 @@ impl ScenarioConfig {
         }
         if let Some(v) = self.policy {
             c.policy = v;
+        }
+        if let Some(v) = self.checkpoint {
+            c.checkpoint = v;
         }
         c
     }
@@ -124,6 +131,9 @@ impl ScenarioConfig {
         }
         if let Some(v) = &self.policy {
             o.set("policy", v.canonical_json());
+        }
+        if let Some(v) = &self.checkpoint {
+            o.set("checkpoint", v.canonical_json());
         }
         o
     }
@@ -219,6 +229,47 @@ mod tests {
             inherit.canonical_json().to_string_compact(),
             off.canonical_json().to_string_compact()
         );
+    }
+
+    #[test]
+    fn checkpoint_override_applies_and_splits_cache_keys() {
+        let base = CampaignConfig::default();
+        assert_eq!(base.checkpoint, CheckpointPolicy::None);
+
+        // set a policy on top of the paper baseline
+        let mut on = ScenarioConfig::named("ckpt");
+        on.checkpoint = Some(CheckpointPolicy::Interval {
+            every_s: 1800,
+            resume_overhead_s: 120,
+        });
+        let c = on.apply(&base);
+        assert_eq!(
+            c.checkpoint,
+            CheckpointPolicy::Interval { every_s: 1800, resume_overhead_s: 120 }
+        );
+
+        // force the paper baseline over a checkpointing base
+        let mut ck_base = base.clone();
+        ck_base.checkpoint =
+            CheckpointPolicy::Interval { every_s: 600, resume_overhead_s: 60 };
+        let mut off = ScenarioConfig::named("ckpt");
+        off.checkpoint = Some(CheckpointPolicy::None);
+        assert_eq!(off.apply(&ck_base).checkpoint, CheckpointPolicy::None);
+        // inherit when unset
+        let inherit = ScenarioConfig::named("ckpt").apply(&ck_base);
+        assert_eq!(inherit.checkpoint, ck_base.checkpoint);
+
+        // same name, different checkpoint policy -> different documents
+        // (and therefore different serve cache keys)
+        let inherit_doc =
+            ScenarioConfig::named("ckpt").canonical_json().to_string_compact();
+        let on_doc = on.canonical_json().to_string_compact();
+        let off_doc = off.canonical_json().to_string_compact();
+        assert_ne!(inherit_doc, on_doc);
+        assert_ne!(inherit_doc, off_doc);
+        assert_ne!(on_doc, off_doc);
+        assert!(on_doc.contains("\"checkpoint\""), "{on_doc}");
+        assert!(on_doc.contains("\"every_s\":1800"), "{on_doc}");
     }
 
     #[test]

@@ -17,13 +17,14 @@ pub fn render(rows: &[ScenarioSummary]) -> String {
     let mut out = String::new();
     out.push_str("SWEEP — scenario matrix: cost vs delivered compute\n");
     out.push_str(&format!(
-        "{:<18} {:>9} {:>5} {:>9} {:>9} {:>8} {:>9} {:>6} {:>7} {:>7} {:>6} {:>8} {:>6}\n",
+        "{:<18} {:>9} {:>5} {:>9} {:>9} {:>8} {:>9} {:>6} {:>7} {:>7} {:>6} {:>8} {:>6} {:>7} {:>8}\n",
         "scenario", "seed", "days", "cost $", "GPU-days", "EFLOPh",
-        "$/EFLOPh", "peak", "done", "intr", "drops", "preempt", "good%"
+        "$/EFLOPh", "peak", "done", "intr", "drops", "preempt", "good%",
+        "resume", "waste h"
     ));
     for r in rows {
         out.push_str(&format!(
-            "{:<18} {:>9} {:>5.1} {:>9.0} {:>9.1} {:>8.4} {:>9.0} {:>6.0} {:>7} {:>7} {:>6} {:>8} {:>5.1}%\n",
+            "{:<18} {:>9} {:>5.1} {:>9.0} {:>9.1} {:>8.4} {:>9.0} {:>6.0} {:>7} {:>7} {:>6} {:>8} {:>5.1}% {:>7} {:>8.1}\n",
             r.name,
             r.seed,
             r.duration_days,
@@ -37,6 +38,8 @@ pub fn render(rows: &[ScenarioSummary]) -> String {
             r.nat_drops,
             r.preemptions,
             r.goodput_fraction * 100.0,
+            r.resumes,
+            r.wasted_hours,
         ));
     }
     out.push_str(
@@ -52,11 +55,12 @@ pub fn to_csv(rows: &[ScenarioSummary]) -> String {
         "scenario,seed,duration_days,budget_usd,cost_usd,azure_usd,gcp_usd,\
          aws_usd,gpu_days,eflop_hours,cost_per_eflop_hour,peak_gpus,\
          mean_gpus,completed,interrupted,goodput_fraction,nat_drops,\
-         preemptions,expansion_factor,alerts\n",
+         preemptions,resumes,goodput_hours,wasted_hours,expansion_factor,\
+         alerts\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             r.name,
             r.seed,
             r.duration_days,
@@ -75,6 +79,9 @@ pub fn to_csv(rows: &[ScenarioSummary]) -> String {
             r.goodput_fraction,
             r.nat_drops,
             r.preemptions,
+            r.resumes,
+            r.goodput_hours,
+            r.wasted_hours,
             r.expansion_factor,
             r.alerts,
         ));
@@ -112,6 +119,9 @@ fn row_to_json(r: &ScenarioSummary) -> Json {
     o.set("goodput_fraction", Json::from(r.goodput_fraction));
     o.set("nat_drops", Json::from(r.nat_drops));
     o.set("preemptions", Json::from(r.preemptions));
+    o.set("resumes", Json::from(r.resumes));
+    o.set("goodput_hours", Json::from(r.goodput_hours));
+    o.set("wasted_hours", Json::from(r.wasted_hours));
     o.set("expansion_factor", Json::from(r.expansion_factor));
     o.set("alerts", Json::from(r.alerts));
     o
@@ -124,9 +134,16 @@ pub fn write(rows: &[ScenarioSummary], out_root: &Path) -> std::io::Result<()> {
     super::write_output(&dir, "sweep.txt", &render(rows))?;
     super::write_output(&dir, "sweep.csv", &to_csv(rows))?;
     super::write_output(&dir, "sweep.json", &to_json(rows).to_string_pretty())?;
-    let snapshots: Vec<(String, crate::cloudbank::BudgetSnapshot)> =
-        rows.iter().map(|r| (r.name.clone(), r.snapshot)).collect();
-    super::write_output(&dir, "rollup.txt", &report::render_rollup(&snapshots))
+    let rollup: Vec<report::RollupRow> = rows
+        .iter()
+        .map(|r| report::RollupRow {
+            name: r.name.clone(),
+            snapshot: r.snapshot,
+            goodput_hours: r.goodput_hours,
+            wasted_hours: r.wasted_hours,
+        })
+        .collect();
+    super::write_output(&dir, "rollup.txt", &report::render_rollup(&rollup))
 }
 
 #[cfg(test)]
@@ -157,6 +174,9 @@ mod tests {
             goodput_fraction: 0.99,
             nat_drops: 0,
             preemptions: 3,
+            resumes: 2,
+            goodput_hours: 2200.5,
+            wasted_hours: 199.5,
             expansion_factor: 2.0,
             alerts: 1,
         }
@@ -169,6 +189,8 @@ mod tests {
         assert!(txt.contains("baseline"));
         assert!(txt.contains("budget-half"));
         assert!(txt.contains("$/EFLOPh"));
+        assert!(txt.contains("waste h"));
+        assert!(txt.contains("199.5"));
         assert_eq!(txt.lines().count(), 6);
     }
 
@@ -179,7 +201,7 @@ mod tests {
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("scenario,seed"));
         for line in csv.lines() {
-            assert_eq!(line.split(',').count(), 20, "bad row: {line}");
+            assert_eq!(line.split(',').count(), 23, "bad row: {line}");
         }
     }
 
@@ -209,6 +231,7 @@ mod tests {
             "seed", "duration_days", "budget_usd", "azure_usd", "gpu_days",
             "eflop_hours", "cost_per_eflop_hour", "peak_gpus", "mean_gpus",
             "interrupted", "goodput_fraction", "nat_drops", "preemptions",
+            "resumes", "goodput_hours", "wasted_hours",
             "expansion_factor", "alerts",
         ] {
             assert!(arr[0].get(key).is_some(), "missing {key}");

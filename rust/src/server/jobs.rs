@@ -567,7 +567,11 @@ fn runner_loop(
         let replays = spec.scenarios.len();
         let (result, outcome) = cache.get_or_compute(&spec.key, || {
             let rows = pool.run_matrix(&spec.resolved, &spec.scenarios)?;
-            metrics.on_sweep_computed(replays);
+            metrics.on_sweep_computed(
+                replays,
+                rows.iter().map(|r| r.goodput_hours).sum(),
+                rows.iter().map(|r| r.wasted_hours).sum(),
+            );
             Ok(render_sweep_body(&spec.key, &rows))
         });
         match (&result, outcome) {

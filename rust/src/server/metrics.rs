@@ -64,6 +64,11 @@ pub struct Metrics {
     store_misses: AtomicU64,
     sweep_computations: AtomicU64,
     scenario_replays: AtomicU64,
+    /// Wall-hour split of every replayed scenario, accumulated in
+    /// milli-hours so the counter stays a lock-free integer (the
+    /// exposition renders hours).
+    replay_goodput_millihours: AtomicU64,
+    replay_wasted_millihours: AtomicU64,
     jobs_submitted: AtomicU64,
     jobs_done: AtomicU64,
     jobs_failed: AtomicU64,
@@ -84,6 +89,8 @@ impl Metrics {
             store_misses: AtomicU64::new(0),
             sweep_computations: AtomicU64::new(0),
             scenario_replays: AtomicU64::new(0),
+            replay_goodput_millihours: AtomicU64::new(0),
+            replay_wasted_millihours: AtomicU64::new(0),
             jobs_submitted: AtomicU64::new(0),
             jobs_done: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
@@ -154,11 +161,26 @@ impl Metrics {
         }
     }
 
-    /// One underlying sweep actually replayed (`replays` scenarios).
-    pub fn on_sweep_computed(&self, replays: usize) {
+    /// One underlying sweep actually replayed (`replays` scenarios,
+    /// whose rows summed to the given goodput/wasted instance-hour
+    /// split — the preemption-loss accounting of DESIGN.md §15).
+    pub fn on_sweep_computed(
+        &self,
+        replays: usize,
+        goodput_hours: f64,
+        wasted_hours: f64,
+    ) {
         self.sweep_computations.fetch_add(1, Ordering::Relaxed);
         self.scenario_replays
             .fetch_add(replays as u64, Ordering::Relaxed);
+        self.replay_goodput_millihours.fetch_add(
+            (goodput_hours.max(0.0) * 1000.0).round() as u64,
+            Ordering::Relaxed,
+        );
+        self.replay_wasted_millihours.fetch_add(
+            (wasted_hours.max(0.0) * 1000.0).round() as u64,
+            Ordering::Relaxed,
+        );
     }
 
     /// An async job admitted (queued or instantly completed).
@@ -245,6 +267,24 @@ impl Metrics {
             self.scenario_replays.load(Ordering::Relaxed).to_string(),
         );
         line(
+            "icecloud_replay_goodput_hours_total",
+            format!(
+                "{:.3}",
+                self.replay_goodput_millihours.load(Ordering::Relaxed)
+                    as f64
+                    / 1000.0
+            ),
+        );
+        line(
+            "icecloud_replay_wasted_hours_total",
+            format!(
+                "{:.3}",
+                self.replay_wasted_millihours.load(Ordering::Relaxed)
+                    as f64
+                    / 1000.0
+            ),
+        );
+        line(
             "icecloud_jobs_submitted_total",
             self.jobs_submitted.load(Ordering::Relaxed).to_string(),
         );
@@ -327,7 +367,7 @@ mod tests {
         m.on_cache_hit();
         m.on_cache_miss();
         m.on_disk_hit();
-        m.on_sweep_computed(3);
+        m.on_sweep_computed(3, 12.25, 1.5);
         m.on_job_submitted();
         m.on_job_finished(true);
         m.on_job_shed();
@@ -353,6 +393,14 @@ mod tests {
         );
         assert!(
             text.contains("icecloud_scenario_replays_total 3"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_replay_goodput_hours_total 12.250"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_replay_wasted_hours_total 1.500"),
             "{text}"
         );
         assert!(

@@ -290,7 +290,11 @@ fn sweep_sync(
     let (result, outcome) = state.cache.get_or_compute(&key, || {
         let rows = state.pool.run_matrix(&resolved, &scenarios)?;
         // count only completed computations, after the replay succeeds
-        state.metrics.on_sweep_computed(replays);
+        state.metrics.on_sweep_computed(
+            replays,
+            rows.iter().map(|r| r.goodput_hours).sum(),
+            rows.iter().map(|r| r.wasted_hours).sum(),
+        );
         Ok(render_sweep_body(&key, &rows))
     });
     // accounting contract: every delivered outcome counts exactly once;

@@ -27,13 +27,15 @@
 //! `preempt_multiplier`, `keepalive_s`, `nat_disabled`,
 //! `nat_idle_timeout_s`, `outage_disabled`, `outage_at_days`,
 //! `outage_duration_hours`, `ramp_targets` + `ramp_hold_days`,
-//! `onprem_slots`, `policy` (`"paper"` | `"uniform"` | `"adaptive"`).
+//! `onprem_slots`, `policy` (`"paper"` | `"uniform"` | `"adaptive"` |
+//! `"risk-aware"`), `checkpoint_every_s` (+ optional
+//! `checkpoint_resume_overhead_s`) or `checkpoint_disabled`.
 //! Scenarios from a spec run in name order (the parse is a sorted map),
 //! so a matrix file always produces the same row order.
 
 use crate::config::{
-    CampaignConfig, NatOverride, OutageSpec, PolicyMode, ProviderWeights,
-    RampStep,
+    CampaignConfig, CheckpointPolicy, NatOverride, OutageSpec, PolicyMode,
+    ProviderWeights, RampStep, DEFAULT_RESUME_OVERHEAD_S,
 };
 use crate::coordinator::ScenarioConfig;
 use crate::sim::{DAY, HOUR};
@@ -90,6 +92,30 @@ pub fn builtin_matrix() -> Vec<ScenarioConfig> {
     s.policy = Some(PolicyMode::Adaptive);
     out.push(s);
 
+    // 11-14. the PR 5 fidelity axes: checkpointing on/off × risk-aware
+    // provisioning on/off (the baseline is the off/off corner), plus
+    // checkpointing under the busy-market weather of scenario 5 — the
+    // checkpoint={none,interval} × preempt={1,4} plane the wasted-hours
+    // acceptance test sweeps
+    let paper_ckpt = CheckpointPolicy::Interval {
+        every_s: 1800,
+        resume_overhead_s: DEFAULT_RESUME_OVERHEAD_S,
+    };
+    let mut s = ScenarioConfig::named("checkpoint-30m");
+    s.checkpoint = Some(paper_ckpt);
+    out.push(s);
+    let mut s = ScenarioConfig::named("policy-risk-aware");
+    s.policy = Some(PolicyMode::RiskAware);
+    out.push(s);
+    let mut s = ScenarioConfig::named("checkpoint-risk-aware");
+    s.checkpoint = Some(paper_ckpt);
+    s.policy = Some(PolicyMode::RiskAware);
+    out.push(s);
+    let mut s = ScenarioConfig::named("churn-x4-checkpoint");
+    s.preempt_multiplier = Some(4.0);
+    s.checkpoint = Some(paper_ckpt);
+    out.push(s);
+
     out
 }
 
@@ -106,6 +132,7 @@ fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
             azure: 1.0 / 3.0,
         })),
         "adaptive" => Ok(PolicyMode::Adaptive),
+        "risk-aware" => Ok(PolicyMode::RiskAware),
         other => Err(format!("unknown policy '{other}'")),
     }
 }
@@ -113,7 +140,7 @@ fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
 /// Keys a `[scenario.<name>]` table may carry.  Anything else is a
 /// typo, and a typo'd override would otherwise run as a silent copy of
 /// the baseline — fatal for a tool whose rows are meant to be citable.
-const SCENARIO_KEYS: [&str; 14] = [
+const SCENARIO_KEYS: [&str; 17] = [
     "seed",
     "duration_days",
     "budget_usd",
@@ -128,6 +155,9 @@ const SCENARIO_KEYS: [&str; 14] = [
     "ramp_hold_days",
     "onprem_slots",
     "policy",
+    "checkpoint_every_s",
+    "checkpoint_resume_overhead_s",
+    "checkpoint_disabled",
 ];
 
 /// Fetch a scenario key with a required type; present-but-mistyped
@@ -279,6 +309,17 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
         })?;
         s.policy = Some(policy_from_str(v)?);
     }
+    let ck_disabled =
+        scenario_bool(name, body, "checkpoint_disabled")? == Some(true);
+    let ck_every = scenario_u64(name, body, "checkpoint_every_s")?;
+    let ck_overhead =
+        scenario_u64(name, body, "checkpoint_resume_overhead_s")?;
+    s.checkpoint = CheckpointPolicy::from_knobs(
+        ck_disabled,
+        ck_every,
+        ck_overhead,
+        &format!("[scenario.{name}]"),
+    )?;
     Ok(s)
 }
 
@@ -519,8 +560,85 @@ seed = 77
     }
 
     #[test]
+    fn builtin_matrix_spans_checkpoint_and_risk_axes() {
+        let m = builtin_matrix();
+        let get = |name: &str| {
+            m.iter().find(|s| s.name == name).unwrap_or_else(|| {
+                panic!("builtin matrix missing scenario '{name}'")
+            })
+        };
+        // the checkpoint × risk-aware 2×2 (baseline is off/off)
+        assert!(get("baseline").checkpoint.is_none());
+        assert!(matches!(
+            get("checkpoint-30m").checkpoint,
+            Some(CheckpointPolicy::Interval { every_s: 1800, .. })
+        ));
+        assert_eq!(
+            get("policy-risk-aware").policy,
+            Some(PolicyMode::RiskAware)
+        );
+        let both = get("checkpoint-risk-aware");
+        assert!(both.checkpoint.is_some() && both.policy.is_some());
+        // the checkpoint × preempt plane of the wasted-hours acceptance
+        let hot = get("churn-x4-checkpoint");
+        assert_eq!(hot.preempt_multiplier, Some(4.0));
+        assert!(hot.checkpoint.is_some());
+        assert_eq!(get("churn-x4").checkpoint, None);
+    }
+
+    #[test]
+    fn spec_parses_checkpoint_keys() {
+        let mut base = CampaignConfig::default();
+        let spec = r#"
+[scenario.ckpt]
+checkpoint_every_s = 900
+checkpoint_resume_overhead_s = 30
+
+[scenario.ckpt-default-overhead]
+checkpoint_every_s = 600
+
+[scenario.ckpt-off]
+checkpoint_disabled = true
+"#;
+        let scenarios = parse_spec(spec, &mut base).unwrap();
+        assert_eq!(
+            scenarios[0].checkpoint,
+            Some(CheckpointPolicy::Interval {
+                every_s: 900,
+                resume_overhead_s: 30,
+            })
+        );
+        assert_eq!(
+            scenarios[1].checkpoint,
+            Some(CheckpointPolicy::Interval {
+                every_s: 600,
+                resume_overhead_s: DEFAULT_RESUME_OVERHEAD_S,
+            })
+        );
+        assert_eq!(scenarios[2].checkpoint, Some(CheckpointPolicy::None));
+
+        // degenerate / conflicting / mistyped spellings are errors
+        for bad in [
+            "[scenario.a]\ncheckpoint_every_s = 0",
+            "[scenario.a]\ncheckpoint_every_s = \"900\"",
+            "[scenario.a]\ncheckpoint_resume_overhead_s = 30",
+            "[scenario.a]\ncheckpoint_disabled = true\ncheckpoint_every_s = 900",
+            "[scenario.a]\ncheckpoint_disabled = 1",
+        ] {
+            assert!(
+                parse_spec(bad, &mut base).is_err(),
+                "'{bad}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
     fn policy_names_resolve() {
         assert_eq!(policy_from_str("adaptive").unwrap(), PolicyMode::Adaptive);
+        assert_eq!(
+            policy_from_str("risk-aware").unwrap(),
+            PolicyMode::RiskAware
+        );
         match policy_from_str("uniform").unwrap() {
             PolicyMode::Fixed(w) => assert!((w.aws - w.azure).abs() < 1e-12),
             _ => panic!(),

@@ -34,6 +34,14 @@ pub struct ScenarioSummary {
     pub goodput_fraction: f64,
     pub nat_drops: u64,
     pub preemptions: u64,
+    /// Job starts that resumed from a checkpoint instead of zero.
+    pub resumes: u64,
+    /// Billed cloud instance-hours that ended as job goodput.
+    pub goodput_hours: f64,
+    /// Billed cloud instance-hours that did not: idle/boot/drain time,
+    /// lost attempt tails, restore overheads, and work still in flight
+    /// at campaign end (HEPCloud-style wasted-hours accounting).
+    pub wasted_hours: f64,
     pub expansion_factor: f64,
     pub alerts: usize,
 }
@@ -59,6 +67,16 @@ pub fn summarize(
         .map(|s| s.summary());
     let good = result.schedd_stats.goodput_s as f64;
     let bad = result.schedd_stats.badput_s as f64;
+    // the wall-hour split of the cloud bill: what the billed
+    // instance-hours actually bought (schedd goodput covers on-prem
+    // slots too, so the cloud split comes from provider_work)
+    let goodput_hours = result
+        .provider_work
+        .iter()
+        .map(|w| w.goodput_s as f64)
+        .sum::<f64>()
+        / 3600.0;
+    let wasted_hours = (gpu_hours - goodput_hours).max(0.0);
     ScenarioSummary {
         name: name.to_string(),
         seed: cfg.seed,
@@ -82,6 +100,9 @@ pub fn summarize(
         },
         nat_drops: result.pool_stats.nat_drops,
         preemptions: result.provider_ops.iter().map(|(_, p, _)| *p).sum(),
+        resumes: result.schedd_stats.resumes,
+        goodput_hours,
+        wasted_hours,
         expansion_factor: result.usage.expansion_factor(),
         alerts: result.ledger.alerts().len(),
     }

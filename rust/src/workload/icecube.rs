@@ -69,6 +69,30 @@ pub fn eflop_hours_of(flops: f64) -> f64 {
     flops / 1e18 / 3600.0
 }
 
+/// Checkpointable progress of an IceCube job: photon propagation is
+/// restartable at bunch granularity, so a job that has run `progress_s`
+/// seconds of ground-truth work with checkpoints every `every_s`
+/// seconds can resume at the last completed checkpoint boundary.
+///
+/// Because progress resumes *at* a boundary, iterating this (interrupt,
+/// salvage, resume, interrupt, ...) keeps the checkpointed position a
+/// multiple of `every_s` — the monotonicity `condor::Schedd` relies on.
+pub fn salvageable_progress(progress_s: u64, every_s: u64) -> u64 {
+    if every_s == 0 {
+        return 0;
+    }
+    (progress_s / every_s) * every_s
+}
+
+/// Fraction of the job's ground-truth runtime already safely
+/// checkpointed (plot/report helper).
+pub fn completed_fraction(completed_s: u64, runtime_s: u64) -> f64 {
+    if runtime_s == 0 {
+        return 0.0;
+    }
+    (completed_s.min(runtime_s)) as f64 / runtime_s as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +137,27 @@ mod tests {
     fn bunches_at_least_one() {
         let spec = job_spec(600, 1e30);
         assert_eq!(spec.bunches, 1);
+    }
+
+    #[test]
+    fn salvage_floors_to_checkpoint_boundary() {
+        assert_eq!(salvageable_progress(0, 600), 0);
+        assert_eq!(salvageable_progress(599, 600), 0);
+        assert_eq!(salvageable_progress(600, 600), 600);
+        assert_eq!(salvageable_progress(3599, 600), 3000);
+        // degenerate interval: nothing is checkpointable
+        assert_eq!(salvageable_progress(5000, 0), 0);
+        // resuming at a boundary keeps positions on the grid
+        let base = salvageable_progress(1700, 600);
+        assert_eq!(salvageable_progress(base + 650, 600), 1800);
+    }
+
+    #[test]
+    fn completed_fraction_bounds() {
+        assert_eq!(completed_fraction(0, 3600), 0.0);
+        assert_eq!(completed_fraction(1800, 3600), 0.5);
+        assert_eq!(completed_fraction(7200, 3600), 1.0);
+        assert_eq!(completed_fraction(10, 0), 0.0);
     }
 
     #[test]

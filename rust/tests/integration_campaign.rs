@@ -1,8 +1,12 @@
 //! Cross-module integration tests: the whole stack composed through the
 //! public API, at reduced scale.
 
-use icecloud::config::{CampaignConfig, OutageSpec, PolicyMode, ProviderWeights, RampStep};
-use icecloud::coordinator::Campaign;
+use icecloud::cloud::Provider;
+use icecloud::config::{
+    CampaignConfig, CheckpointPolicy, OutageSpec, PolicyMode,
+    ProviderWeights, RampStep,
+};
+use icecloud::coordinator::{Campaign, ScenarioConfig};
 use icecloud::experiments::{fig1, fig2, headline};
 use icecloud::sim::{DAY, HOUR, MINUTE};
 
@@ -181,6 +185,138 @@ fn tick_cadence_change_preserves_shape() {
     let ga = a.monitor.get("gpus.total").unwrap().mean();
     let gb = b.monitor.get("gpus.total").unwrap().mean();
     assert!((ga - gb).abs() / ga < 0.15, "fine={ga} coarse={gb}");
+}
+
+/// The goodput conservation identity of DESIGN.md §15: for every
+/// provider, the billed busy (job-executing) wall seconds decompose
+/// exactly into settled goodput + settled badput + attempts still in
+/// flight at campaign end — under both checkpoint policies and both
+/// spot-market weathers.  Nothing is double-counted, nothing leaks.
+#[test]
+fn goodput_plus_badput_plus_inflight_is_busy_time_per_provider() {
+    let policies = [
+        CheckpointPolicy::None,
+        CheckpointPolicy::Interval { every_s: 1800, resume_overhead_s: 120 },
+    ];
+    for mult in [1.0, 4.0] {
+        for ckpt in policies {
+            let mut c = base_config();
+            c.duration_s = DAY;
+            c.outage = Some(OutageSpec { at_s: 12 * HOUR, duration_s: HOUR });
+            c.preempt_multiplier = mult;
+            c.checkpoint = ckpt;
+            let result = Campaign::new(c).run();
+            let mut settled_good = 0u64;
+            let mut settled_bad = 0u64;
+            for (i, p) in Provider::ALL.into_iter().enumerate() {
+                let w = result.provider_work[i];
+                let busy_s = result.meter.provider(p).busy_hours * 3600.0;
+                let split = (w.goodput_s + w.badput_s + w.inflight_s) as f64;
+                assert!(
+                    (busy_s - split).abs() < 1.0,
+                    "{:?} mult={mult} ckpt={ckpt:?}: busy {busy_s} != \
+                     goodput+badput+inflight {split}",
+                    p,
+                );
+                settled_good += w.goodput_s;
+                settled_bad += w.badput_s;
+            }
+            // cloud-settled work never exceeds what the schedd settled
+            // (the schedd totals additionally cover on-prem slots)
+            assert!(settled_good <= result.schedd_stats.goodput_s);
+            assert!(settled_bad <= result.schedd_stats.badput_s);
+            if mult > 1.0 {
+                assert!(
+                    result.schedd_stats.interrupted > 0,
+                    "x4 churn must interrupt something"
+                );
+            }
+        }
+    }
+}
+
+/// The PR 5 acceptance sweep: over checkpoint={none,interval} ×
+/// preempt_multiplier={1,4}, checkpointing strictly reduces wasted
+/// instance-hours, cost stays within budget, and the whole table is
+/// deterministic (same seed → byte-identical JSON rendering).
+#[test]
+fn checkpointing_strictly_reduces_wasted_hours_across_churn() {
+    let mut base = base_config();
+    base.duration_s = DAY;
+    base.budget_usd = 5_000.0;
+    // the outage guarantees interrupted attempts even in calm markets
+    base.outage = Some(OutageSpec { at_s: 12 * HOUR, duration_s: HOUR });
+
+    let ckpt = CheckpointPolicy::Interval {
+        every_s: 1800,
+        resume_overhead_s: 120,
+    };
+    let mut scenarios = Vec::new();
+    for (mult, policy, name) in [
+        (1.0, None, "m1-none"),
+        (1.0, Some(ckpt), "m1-ckpt"),
+        (4.0, None, "m4-none"),
+        (4.0, Some(ckpt), "m4-ckpt"),
+    ] {
+        let mut s = ScenarioConfig::named(name);
+        s.preempt_multiplier = Some(mult);
+        s.checkpoint = policy;
+        scenarios.push(s);
+    }
+    let rows = icecloud::sweep::run_matrix(&base, &scenarios, 2);
+    let by_name = |n: &str| {
+        rows.iter().find(|r| r.name == n).expect("scenario row present")
+    };
+    for (none, with) in [("m1-none", "m1-ckpt"), ("m4-none", "m4-ckpt")] {
+        let none = by_name(none);
+        let with = by_name(with);
+        assert!(
+            with.wasted_hours < none.wasted_hours,
+            "checkpointing must strictly reduce wasted hours: \
+             {} has {:.2}, {} has {:.2}",
+            none.name,
+            none.wasted_hours,
+            with.name,
+            with.wasted_hours,
+        );
+        assert!(with.resumes > 0, "{} resumed nothing", with.name);
+        assert_eq!(none.resumes, 0, "no-checkpoint runs cannot resume");
+    }
+    for r in &rows {
+        assert!(
+            r.cost_usd() <= base.budget_usd,
+            "{} exceeded budget: {}",
+            r.name,
+            r.cost_usd()
+        );
+        assert!(r.wasted_hours >= 0.0 && r.goodput_hours >= 0.0);
+    }
+
+    // byte-identical reproduction: the same seed and matrix render to
+    // the same JSON (the property `icecloud serve` keys its cache on)
+    let again = icecloud::sweep::run_matrix(&base, &scenarios, 3);
+    assert_eq!(
+        icecloud::experiments::sweep::to_json(&rows).to_string_compact(),
+        icecloud::experiments::sweep::to_json(&again).to_string_compact(),
+    );
+}
+
+#[test]
+fn risk_aware_policy_runs_and_favors_cheap_stable_providers() {
+    let mut c = base_config();
+    c.policy = PolicyMode::RiskAware;
+    c.outage = None;
+    c.duration_s = DAY;
+    let result = Campaign::new(c).run();
+    // azure (cheapest, deepest) must emerge as the favored provider
+    // without any hardcoded weights
+    let azure_hours = result.provider_ops[2].2;
+    let aws_hours = result.provider_ops[0].2;
+    assert!(
+        azure_hours > aws_hours,
+        "risk-aware must favor azure ({azure_hours:.1} vs {aws_hours:.1})"
+    );
+    assert!(result.schedd_stats.completed > 0);
 }
 
 #[test]

@@ -36,10 +36,12 @@ import engine_mirror as em
 # Rust bench names whose schema is recorded (null until a Rust-equipped
 # machine or the CI artifact fills them in).
 RUST_BENCHES = [
-    ("sweep/10-scenarios-1-threads", "replays"),
-    ("sweep/10-scenarios-2-threads", "replays"),
-    ("sweep/10-scenarios-4-threads", "replays"),
-    ("sweep/10-scenarios-8-threads", "replays"),
+    # the builtin matrix grew to 14 scenarios in PR 5; the bench name
+    # derives from the matrix length (rust/benches/sweep.rs)
+    ("sweep/14-scenarios-1-threads", "replays"),
+    ("sweep/14-scenarios-2-threads", "replays"),
+    ("sweep/14-scenarios-4-threads", "replays"),
+    ("sweep/14-scenarios-8-threads", "replays"),
     ("engine/scalar", "photons"),
     ("engine/batched-1t", "photons"),
     ("engine/batched-2t", "photons"),
@@ -53,6 +55,8 @@ RUST_BENCHES = [
     ("photon/compile-small", None),
     ("serve/sweep-cold-replay", "requests"),
     ("serve/sweep-cached", "requests"),
+    ("serve/disk-hit", "requests"),
+    ("serve/async-submit", "requests"),
 ]
 
 
