@@ -12,15 +12,21 @@
 //! `202` admission fast path of `POST /sweep?mode=async`.  The
 //! subsystem's perf claim — cached throughput ≥ 100x cold replay
 //! throughput — is printed as an explicit ratio at the end.
+//! "fleet-2w" re-runs the cold-replay shape with two in-process fleet
+//! workers leasing the units over HTTP, so the line prices the whole
+//! lease/heartbeat/complete round trip against local dispatch.
 //!
-//! Regenerate the committed baseline (BENCH_pr4.json) with:
+//! Regenerate the committed baseline (BENCH_pr6.json) with:
 //!   tools/bench_baseline.sh
 
 use icecloud::config::{CampaignConfig, RampStep};
 use icecloud::server::http::client_request;
-use icecloud::server::{ServeConfig, Server};
+use icecloud::server::{FleetOptions, ServeConfig, Server, WorkerOptions};
 use icecloud::sim::{DAY, HOUR};
 use icecloud::util::bench::Bench;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn tiny_base() -> CampaignConfig {
     let mut c = CampaignConfig::default();
@@ -62,6 +68,7 @@ fn main() {
         queue_max: 64,
         job_runners: 2,
         store_dir: Some(store_root.clone()),
+        fleet: FleetOptions::default(),
         base: tiny_base(),
     })
     .expect("bind");
@@ -100,6 +107,40 @@ fn main() {
     b.run_throughput("serve/async-submit", 1.0, "requests", || {
         post_sweep(&addr, "/sweep?mode=async", hot_spec)
     });
+
+    // cold replays again, but dispatched to two fleet workers over the
+    // lease/heartbeat protocol instead of the local replay pool
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let opts = WorkerOptions {
+                coordinator: addr.clone(),
+                worker_id: format!("bench-w{i}"),
+                slots: 1,
+                poll: Duration::from_millis(5),
+                fail_after_leases: None,
+            };
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                icecloud::server::fleet::run_worker(&opts, &stop)
+            })
+        })
+        .collect();
+    while handle.state().fleet.stats().workers_registered < 2 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    b.run_throughput("serve/fleet-2w", 1.0, "requests", || {
+        seed += 1;
+        post_sweep(
+            &addr,
+            "/sweep",
+            &format!("[scenario.fleet]\nseed = {seed}\n"),
+        )
+    });
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        let _ = w.join().expect("worker thread");
+    }
 
     let results = b.results();
     let cold = results[0].throughput().unwrap_or(f64::NAN);

@@ -691,6 +691,159 @@ impl CampaignConfig {
         o
     }
 
+    /// Inverse of [`canonical_json`](Self::canonical_json):
+    /// reconstruct a replaying config from its canonical form.  This
+    /// is how fleet workers receive their unit of work — the
+    /// coordinator sends the *applied* config's canonical JSON in a
+    /// lease grant, and because the canonical form covers every
+    /// replay-relevant field, the worker's replay is byte-identical to
+    /// the coordinator's.  Strict: a missing or mistyped field is an
+    /// error, never a silent default — a worker replaying a different
+    /// campaign than leased would fail every sha compare.
+    ///
+    /// [`EngineConfig`] is deliberately absent from the canonical form
+    /// (results are engine-thread-invariant), so the worker keeps its
+    /// own engine defaults and clamps its own thread budget.
+    pub fn from_canonical_json(doc: &Json) -> Result<Self, String> {
+        fn canon<'a>(doc: &'a Json, key: &str) -> Result<&'a Json, String> {
+            doc.get(key)
+                .ok_or_else(|| format!("canonical config missing '{key}'"))
+        }
+        fn canon_u64(doc: &Json, key: &str) -> Result<u64, String> {
+            require_u64(canon(doc, key)?, &format!("canonical '{key}'"))
+        }
+        fn canon_f64(doc: &Json, key: &str) -> Result<f64, String> {
+            require_f64(canon(doc, key)?, &format!("canonical '{key}'"))
+        }
+        fn canon_u32(doc: &Json, key: &str) -> Result<u32, String> {
+            let v = canon_u64(doc, key)?;
+            u32::try_from(v)
+                .map_err(|_| format!("canonical '{key}' {v} is out of range"))
+        }
+        fn canon_i64(doc: &Json, key: &str) -> Result<i64, String> {
+            let v = canon_f64(doc, key)?;
+            if v.fract() != 0.0 || !(-9e15..=9e15).contains(&v) {
+                return Err(format!("canonical '{key}' must be an integer"));
+            }
+            Ok(v as i64)
+        }
+
+        let v = canon_u64(doc, "v")?;
+        if v != 2 {
+            return Err(format!("unsupported canonical config version {v}"));
+        }
+        let mut c = CampaignConfig::default();
+        c.seed = canon_u64(doc, "seed")?;
+        c.duration_s = canon_u64(doc, "duration_s")?;
+        c.tick_s = canon_u64(doc, "tick_s")?;
+        c.sample_every_s = canon_u64(doc, "sample_every_s")?;
+        c.control_period_s = canon_u64(doc, "control_period_s")?;
+        c.negotiation_period_s = canon_u64(doc, "negotiation_period_s")?;
+        c.budget_usd = canon_f64(doc, "budget_usd")?;
+        let alerts = canon(doc, "alert_thresholds")?
+            .as_arr()
+            .ok_or("canonical 'alert_thresholds' must be an array")?;
+        c.alert_thresholds = alerts
+            .iter()
+            .map(|a| {
+                a.as_f64().ok_or_else(|| {
+                    "canonical 'alert_thresholds' entries must be numbers"
+                        .to_string()
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        c.overhead_fraction = canon_f64(doc, "overhead_fraction")?;
+        c.budget_reserve_fraction = canon_f64(doc, "budget_reserve_fraction")?;
+        c.low_budget_resume_fraction =
+            canon_f64(doc, "low_budget_resume_fraction")?;
+        c.post_outage_target = canon_u32(doc, "post_outage_target")?;
+        c.keepalive_s = canon_u64(doc, "keepalive_s")?;
+        c.preempt_multiplier = canon_f64(doc, "preempt_multiplier")?;
+        c.nat_override = match canon(doc, "nat_override")? {
+            Json::Str(s) if s == "provider-default" => {
+                NatOverride::ProviderDefault
+            }
+            Json::Str(s) if s == "disabled" => NatOverride::Disabled,
+            v @ Json::Obj(_) => {
+                NatOverride::IdleTimeout(canon_u64(v, "idle_timeout_s")?)
+            }
+            _ => return Err("canonical 'nat_override' is malformed".into()),
+        };
+        c.checkpoint = match canon(doc, "checkpoint")? {
+            Json::Str(s) if s == "none" => CheckpointPolicy::None,
+            v @ Json::Obj(_) => {
+                let i = v
+                    .get("interval")
+                    .ok_or("canonical 'checkpoint' is malformed")?;
+                CheckpointPolicy::Interval {
+                    every_s: canon_u64(i, "every_s")?,
+                    resume_overhead_s: canon_u64(i, "resume_overhead_s")?,
+                }
+            }
+            _ => return Err("canonical 'checkpoint' is malformed".into()),
+        };
+        let ramp = canon(doc, "ramp")?
+            .as_arr()
+            .ok_or("canonical 'ramp' must be an array")?;
+        c.ramp = ramp
+            .iter()
+            .map(|step| {
+                Ok(RampStep {
+                    target: canon_u32(step, "target")?,
+                    hold_s: canon_u64(step, "hold_s")?,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        c.outage = match canon(doc, "outage")? {
+            Json::Null => None,
+            v => Some(OutageSpec {
+                at_s: canon_u64(v, "at_s")?,
+                duration_s: canon_u64(v, "duration_s")?,
+            }),
+        };
+        c.policy = match canon(doc, "policy")? {
+            Json::Str(s) if s == "adaptive" => PolicyMode::Adaptive,
+            Json::Str(s) if s == "risk-aware" => PolicyMode::RiskAware,
+            v @ Json::Obj(_) => {
+                let f =
+                    v.get("fixed").ok_or("canonical 'policy' is malformed")?;
+                PolicyMode::Fixed(ProviderWeights {
+                    aws: canon_f64(f, "aws")?,
+                    gcp: canon_f64(f, "gcp")?,
+                    azure: canon_f64(f, "azure")?,
+                })
+            }
+            _ => return Err("canonical 'policy' is malformed".into()),
+        };
+        let onprem = canon(doc, "onprem")?;
+        c.onprem.slots = canon_u32(onprem, "slots")?;
+        c.onprem.keepalive_s = canon_u64(onprem, "keepalive_s")?;
+        c.onprem.availability = canon_f64(onprem, "availability")?;
+        let generator = canon(doc, "generator")?;
+        c.generator.backlog_factor = canon_f64(generator, "backlog_factor")?;
+        c.generator.min_backlog = canon_u64(generator, "min_backlog")? as usize;
+        c.generator.request_memory_mb =
+            canon_i64(generator, "request_memory_mb")?;
+        let runtimes = canon(generator, "runtimes")?;
+        c.generator.runtimes.median_s = canon_f64(runtimes, "median_s")?;
+        c.generator.runtimes.sigma = canon_f64(runtimes, "sigma")?;
+        c.generator.runtimes.min_s = canon_u64(runtimes, "min_s")?;
+        c.generator.runtimes.max_s = canon_u64(runtimes, "max_s")?;
+        c.flops_per_bunch = canon_f64(doc, "flops_per_bunch")?;
+        c.real_compute = match canon(doc, "real_compute")? {
+            Json::Null => None,
+            v => Some(RealComputeConfig {
+                variant: v
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .ok_or("canonical 'real_compute.variant' must be a string")?
+                    .to_string(),
+                every_n_completions: canon_u64(v, "every_n_completions")?,
+            }),
+        };
+        Ok(c)
+    }
+
     /// Build from an already-parsed TOML document over the defaults.
     pub fn from_toml_doc(doc: &Json) -> Result<Self, String> {
         let mut cfg = CampaignConfig::default();
@@ -784,6 +937,69 @@ impl ServerConfig {
             } else {
                 Some(dir.to_string())
             };
+        }
+        Ok(())
+    }
+}
+
+/// Worker-fleet coordinator knobs, read from a `[fleet]` table with the
+/// same strict-value contract as [`ServerConfig`].  Like the `[server]`
+/// table, these can never affect replay results — a lease TTL changes
+/// *when* a unit is requeued, never *what* its replay produces — so
+/// they must never reach `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Seconds a lease survives without a heartbeat before its unit is
+    /// requeued.
+    pub lease_ttl_s: u64,
+    /// Heartbeat cadence advertised to workers at registration.
+    pub heartbeat_every_s: u64,
+    /// Fraction of fleet-computed units the coordinator recomputes
+    /// locally and byte-compares before admitting (0 = trust, 1 =
+    /// verify everything).
+    pub spot_check_rate: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            lease_ttl_s: 30,
+            heartbeat_every_s: 10,
+            spot_check_rate: 0.1,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Apply a `[fleet]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["fleet", "lease_ttl_s"])? {
+            if v == 0 {
+                return Err("'fleet.lease_ttl_s' must be >= 1".into());
+            }
+            self.lease_ttl_s = v;
+        }
+        if let Some(v) = want_u64(doc, &["fleet", "heartbeat_every_s"])? {
+            if v == 0 {
+                return Err("'fleet.heartbeat_every_s' must be >= 1".into());
+            }
+            self.heartbeat_every_s = v;
+        }
+        if let Some(v) = want_f64(doc, &["fleet", "spot_check_rate"])? {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(
+                    "'fleet.spot_check_rate' must be within [0, 1]".into()
+                );
+            }
+            self.spot_check_rate = v;
+        }
+        if self.heartbeat_every_s >= self.lease_ttl_s {
+            return Err(format!(
+                "'fleet.heartbeat_every_s' ({}) must be shorter than \
+                 'fleet.lease_ttl_s' ({}) or every lease expires between \
+                 heartbeats",
+                self.heartbeat_every_s, self.lease_ttl_s
+            ));
         }
         Ok(())
     }
@@ -1270,6 +1486,150 @@ azure = 0.6
         // result cache)
         let doc = toml::parse(
             "[server]\nqueue_max = 2\nstore_dir = \"x\"",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(
+            c.canonical_json().to_string_compact(),
+            CampaignConfig::default()
+                .canonical_json()
+                .to_string_compact()
+        );
+    }
+
+    /// Round-trip helper: `from_canonical_json` must reconstruct a
+    /// config whose canonical form is byte-identical (no `PartialEq`
+    /// on `CampaignConfig`; the canonical string IS its identity).
+    fn assert_canonical_round_trip(c: &CampaignConfig) {
+        let j = c.canonical_json();
+        let back = CampaignConfig::from_canonical_json(&j).unwrap();
+        assert_eq!(
+            back.canonical_json().to_string_compact(),
+            j.to_string_compact()
+        );
+    }
+
+    #[test]
+    fn canonical_json_inverts_for_every_variant() {
+        assert_canonical_round_trip(&CampaignConfig::default());
+
+        let mut c = CampaignConfig::default();
+        c.nat_override = NatOverride::IdleTimeout(240);
+        c.checkpoint = CheckpointPolicy::Interval {
+            every_s: 1800,
+            resume_overhead_s: 60,
+        };
+        c.outage = None;
+        c.policy = PolicyMode::Adaptive;
+        c.alert_thresholds = vec![0.9];
+        assert_canonical_round_trip(&c);
+
+        let mut c = CampaignConfig::default();
+        c.nat_override = NatOverride::Disabled;
+        c.policy = PolicyMode::RiskAware;
+        c.real_compute = Some(RealComputeConfig {
+            variant: "small".into(),
+            every_n_completions: 100,
+        });
+        c.generator.request_memory_mb = 4096;
+        c.ramp = vec![RampStep { target: 10, hold_s: DAY }];
+        assert_canonical_round_trip(&c);
+    }
+
+    #[test]
+    fn canonical_json_round_trip_survives_the_wire() {
+        // the fleet sends the canonical form through the JSON parser
+        let c = CampaignConfig::default();
+        let wire = c.canonical_json().to_string_compact();
+        let parsed = crate::util::json::parse(&wire).unwrap();
+        let back = CampaignConfig::from_canonical_json(&parsed).unwrap();
+        assert_eq!(back.canonical_json().to_string_compact(), wire);
+    }
+
+    #[test]
+    fn from_canonical_json_is_strict() {
+        let good = CampaignConfig::default().canonical_json();
+
+        // wrong version
+        let mut wrong_v = good.clone();
+        wrong_v.set("v", Json::from(1u64));
+        assert!(CampaignConfig::from_canonical_json(&wrong_v).is_err());
+
+        // missing field
+        let mut missing = good.clone();
+        if let Json::Obj(m) = &mut missing {
+            m.remove("keepalive_s");
+        }
+        assert!(CampaignConfig::from_canonical_json(&missing).is_err());
+
+        // mistyped field
+        let mut mistyped = good.clone();
+        mistyped.set("budget_usd", Json::from("58000"));
+        assert!(CampaignConfig::from_canonical_json(&mistyped).is_err());
+
+        // malformed enum encodings
+        for (key, bad) in [
+            ("nat_override", Json::from("nope")),
+            ("checkpoint", Json::from(3u64)),
+            ("policy", Json::from("fixed")),
+        ] {
+            let mut doc = good.clone();
+            doc.set(key, bad);
+            assert!(
+                CampaignConfig::from_canonical_json(&doc).is_err(),
+                "malformed '{key}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_knobs_from_toml() {
+        let doc = toml::parse(
+            "[fleet]\nlease_ttl_s = 60\nheartbeat_every_s = 15\n\
+             spot_check_rate = 0.5",
+        )
+        .unwrap();
+        let mut f = FleetConfig::default();
+        f.apply_toml(&doc).unwrap();
+        assert_eq!(f.lease_ttl_s, 60);
+        assert_eq!(f.heartbeat_every_s, 15);
+        assert_eq!(f.spot_check_rate, 0.5);
+
+        // a doc without a [fleet] table changes nothing
+        let doc = toml::parse("seed = 7").unwrap();
+        let mut f = FleetConfig::default();
+        f.apply_toml(&doc).unwrap();
+        assert_eq!(f, FleetConfig::default());
+    }
+
+    #[test]
+    fn mistyped_fleet_knobs_rejected_not_silently_ignored() {
+        for src in [
+            "[fleet]\nlease_ttl_s = \"30\"",
+            "[fleet]\nlease_ttl_s = 0",
+            "[fleet]\nlease_ttl_s = 1.5",
+            "[fleet]\nheartbeat_every_s = 0",
+            "[fleet]\nheartbeat_every_s = true",
+            "[fleet]\nspot_check_rate = \"0.1\"",
+            "[fleet]\nspot_check_rate = -0.5",
+            "[fleet]\nspot_check_rate = 1.5",
+            // a heartbeat slower than the TTL would expire every lease
+            "[fleet]\nlease_ttl_s = 10\nheartbeat_every_s = 10",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut f = FleetConfig::default();
+            assert!(
+                f.apply_toml(&doc).is_err(),
+                "'{src}' must be rejected, not dropped"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_knobs_never_touch_the_campaign_cache_key() {
+        let doc = toml::parse(
+            "[fleet]\nlease_ttl_s = 5\nheartbeat_every_s = 1",
         )
         .unwrap();
         let mut c = CampaignConfig::default();

@@ -4,9 +4,11 @@
 //!   campaign    run the two-week campaign (configurable)
 //!   sweep       run a scenario matrix in parallel (what-if analysis)
 //!   serve       HTTP scenario-sweep service with a persistent two-tier
-//!               result store and async jobs (POST /sweep [?mode=async],
-//!               GET /matrix, /jobs, /jobs/<id>, /results/<key>,
-//!               /metrics, /healthz)
+//!               result store, async jobs and a fleet coordinator
+//!               (POST /sweep [?mode=async], GET /matrix, /jobs,
+//!               /jobs/<id>, /results/<key>, /metrics, /healthz,
+//!               POST /fleet/{register,lease,heartbeat,complete})
+//!   worker      pull-based fleet worker for a `serve` coordinator
 //!   reproduce   regenerate the paper's figures/tables into a results dir
 //!   validate    end-to-end smoke test of the AOT photon artifacts
 //!   parity      dump per-DOM hits/summary for Python-oracle comparison
@@ -42,6 +44,7 @@ fn main() -> ExitCode {
         "campaign" => cmd_campaign(rest),
         "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "reproduce" => cmd_reproduce(rest),
         "validate" => cmd_validate(rest),
         "parity" => cmd_parity(rest),
@@ -71,7 +74,9 @@ fn print_usage() {
          \x20 sweep       run a scenario matrix in parallel (what-if \
          analysis)\n\
          \x20 serve       HTTP sweep service with a persistent result \
-         store and async jobs\n\
+         store, async jobs and a fleet coordinator\n\
+         \x20 worker      pull-based fleet worker (--coordinator \
+         host:port)\n\
          \x20 reproduce   regenerate paper figures/tables (--all, --fig1, \
          --fig2, --headline, --nat, --ramp)\n\
          \x20 validate    end-to-end smoke test of the photon artifacts\n\
@@ -322,12 +327,23 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     )
     .opt(
         "config",
-        "base campaign TOML, optionally with a [server] table",
+        "base campaign TOML, optionally with [server] and [fleet] tables",
         None,
     )
     .opt(
         "days",
         "base campaign duration in days (default 4, like `sweep`)",
+        None,
+    )
+    .opt("lease-ttl-s", "fleet lease TTL in seconds", None)
+    .opt(
+        "heartbeat-every-s",
+        "fleet worker heartbeat cadence in seconds",
+        None,
+    )
+    .opt(
+        "spot-check-rate",
+        "fraction of fleet completions re-replayed locally [0,1]",
         None,
     )
     .opt("log", "log level: debug|info|warn|error", Some("info"));
@@ -342,8 +358,10 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let (mut base, doc) = sweep_base_config(&args)?;
     apply_days_override(&args, &mut base);
     let mut srv = icecloud::config::ServerConfig::default();
+    let mut fleet = icecloud::config::FleetConfig::default();
     if let Some(doc) = &doc {
         srv.apply_toml(doc)?;
+        fleet.apply_toml(doc)?;
     }
     if let Some(v) = args.require_u64("queue-max")? {
         if v == 0 {
@@ -370,6 +388,33 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         Some(dir) => Some(PathBuf::from(dir)),
         None => srv.store_dir.clone().map(PathBuf::from),
     };
+    if let Some(v) = args.require_u64("lease-ttl-s")? {
+        if v == 0 {
+            return Err("--lease-ttl-s must be >= 1".into());
+        }
+        fleet.lease_ttl_s = v;
+    }
+    if let Some(v) = args.require_u64("heartbeat-every-s")? {
+        if v == 0 {
+            return Err("--heartbeat-every-s must be >= 1".into());
+        }
+        fleet.heartbeat_every_s = v;
+    }
+    if let Some(v) = args.require_f64("spot-check-rate")? {
+        if !(0.0..=1.0).contains(&v) {
+            return Err(format!(
+                "--spot-check-rate must be in [0, 1] (got {v})"
+            ));
+        }
+        fleet.spot_check_rate = v;
+    }
+    if fleet.heartbeat_every_s >= fleet.lease_ttl_s {
+        return Err(format!(
+            "heartbeat cadence ({} s) must be shorter than the lease \
+             TTL ({} s) or every lease expires between beats",
+            fleet.heartbeat_every_s, fleet.lease_ttl_s
+        ));
+    }
 
     let cfg = icecloud::server::ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
@@ -386,6 +431,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         queue_max: srv.queue_max as usize,
         job_runners: srv.job_runners as usize,
         store_dir: store_dir.clone(),
+        fleet: icecloud::server::FleetOptions {
+            lease_ttl: std::time::Duration::from_secs(fleet.lease_ttl_s),
+            heartbeat_every: std::time::Duration::from_secs(
+                fleet.heartbeat_every_s,
+            ),
+            spot_check_rate: fleet.spot_check_rate,
+        },
         base,
     };
     let http_threads = cfg.http_threads;
@@ -395,7 +447,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         "icecloud serve: listening on {} ({} http threads, {} replay \
          workers, {} job runners, store: {})\n  endpoints: GET /healthz \
          /matrix /metrics /jobs /jobs/<id> /results/<key>; POST /sweep \
-         [?mode=async]",
+         [?mode=async]; POST /fleet/{{register,lease,heartbeat,complete}}",
         server.local_addr()?,
         http_threads,
         replay_threads,
@@ -406,6 +458,75 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         },
     );
     server.run()
+}
+
+fn cmd_worker(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "worker",
+        "pull-based fleet worker: lease scenario units from an `icecloud \
+         serve` coordinator, replay them locally, stream rows back",
+    )
+    .opt("coordinator", "coordinator address (host:port); required", None)
+    .opt("id", "worker id (default: worker-<pid>)", None)
+    .opt("slots", "advertised concurrency", Some("1"))
+    .opt("poll-ms", "idle poll interval in milliseconds", Some("500"))
+    .opt(
+        "fail-after-leases",
+        "fault injection: vanish mid-lease after N grants (tests)",
+        None,
+    )
+    .opt("log", "log level: debug|info|warn|error", Some("info"));
+    let args = cmd.parse(rest)?;
+    if let Some(level) = logger::level_from_str(args.get_or("log", "info")) {
+        logger::set_level(level);
+    }
+    let Some(raw) = args.get("coordinator") else {
+        return Err("--coordinator <host:port> is required".into());
+    };
+    let coordinator = raw
+        .strip_prefix("http://")
+        .unwrap_or(raw)
+        .trim_end_matches('/')
+        .to_string();
+    if coordinator.is_empty() {
+        return Err("--coordinator must name a host:port".into());
+    }
+    let worker_id = match args.get("id") {
+        Some("") => return Err("--id must not be empty".into()),
+        Some(id) => id.to_string(),
+        None => format!("worker-{}", std::process::id()),
+    };
+    let slots = args.require_u64("slots")?.unwrap_or(1);
+    if slots == 0 {
+        return Err("--slots must be >= 1".into());
+    }
+    let slots = u32::try_from(slots)
+        .map_err(|_| format!("--slots {slots} is out of range"))?;
+    let poll_ms = args.require_u64("poll-ms")?.unwrap_or(500);
+    if poll_ms == 0 {
+        return Err("--poll-ms must be >= 1".into());
+    }
+    let opts = icecloud::server::WorkerOptions {
+        coordinator,
+        worker_id,
+        slots,
+        poll: std::time::Duration::from_millis(poll_ms),
+        fail_after_leases: args.require_u64("fail-after-leases")?,
+    };
+    println!(
+        "icecloud worker '{}' -> {} ({} slot{})",
+        opts.worker_id,
+        opts.coordinator,
+        opts.slots,
+        if opts.slots == 1 { "" } else { "s" },
+    );
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let report = icecloud::server::fleet::run_worker(&opts, &stop)?;
+    println!(
+        "worker '{}' done: {} lease(s), {} completed",
+        opts.worker_id, report.leases, report.completed
+    );
+    Ok(())
 }
 
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {

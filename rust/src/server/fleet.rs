@@ -1,0 +1,977 @@
+//! Distributed worker fleet: lease/heartbeat work distribution.
+//!
+//! The paper's production story is a pool stitched together from
+//! preemptible cloud instances behind OSG/HTCondor: workers join a
+//! central pool, pull work, and vanish without notice when the spot
+//! market reclaims them.  This module reproduces that shape for the
+//! sweep service.  `icecloud serve` becomes a coordinator that leases
+//! scenario units to pull-based `icecloud worker` processes over the
+//! in-tree HTTP stack:
+//!
+//! ```text
+//!   worker                         coordinator
+//!     | POST /fleet/register         |  upsert worker (id, slots)
+//!     | POST /fleet/lease            |  pending unit -> lease(deadline)
+//!     | POST /fleet/heartbeat        |  deadline = now + lease_ttl
+//!     | POST /fleet/complete         |  sha256 check -> spot check
+//!     |                              |    -> deliver into SweepFlight
+//! ```
+//!
+//! A lease whose deadline passes without a heartbeat is *expired*: the
+//! unit goes back on the pending queue exactly like a preempted job in
+//! the checkpoint lifecycle, and the next worker to ask gets it.  The
+//! same determinism that makes the result cache content-addressable
+//! makes fleet validation a hash compare: any worker replaying a unit
+//! produces byte-identical wire bytes, so the coordinator can (a)
+//! verify the declared sha256 against its own re-rendering of the row
+//! and (b) for a sampled fraction of units, recompute the unit locally
+//! and require the bytes to match before admitting the result.
+//! Admitted rows flow into the SAME `ResultCache::get_or_compute`
+//! single-flight path as locally-computed sweeps, so fleet-computed
+//! and locally-computed responses are indistinguishable.
+//!
+//! Conservation invariant (pinned by `tests/prop_fleet.rs`): at every
+//! step `granted == completed + expired + rejected + outstanding`, no
+//! live unit is ever granted to two workers, and no unit is ever lost
+//! — every unit is pending, leased, or delivered into its flight.
+
+use super::http::client_request;
+use super::jobs::ReplayPool;
+use crate::config::CampaignConfig;
+use crate::coordinator::ScenarioConfig;
+use crate::sweep::runner;
+use crate::util::json::{self, Json};
+use crate::util::sha256;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Poison-tolerant lock: a panicking holder (a worker thread that died
+/// mid-update) must not cascade into every other thread that touches
+/// the table.  The data is counters and queues — the worst a panicked
+/// writer leaves behind is a stale `last_seen`, which the expiry sweep
+/// repairs.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Coordinator-side fleet knobs (strict `[fleet]` TOML via
+/// `config::FleetConfig`, flags via `icecloud serve`).
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// How long a lease lives without a heartbeat before the unit is
+    /// requeued.
+    pub lease_ttl: Duration,
+    /// Heartbeat cadence advertised to workers at registration.
+    pub heartbeat_every: Duration,
+    /// Fraction of units the coordinator recomputes locally and
+    /// byte-compares before admitting the worker's result (0 = trust,
+    /// 1 = verify everything).
+    pub spot_check_rate: f64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            lease_ttl: Duration::from_secs(30),
+            heartbeat_every: Duration::from_secs(10),
+            spot_check_rate: 0.1,
+        }
+    }
+}
+
+/// Point-in-time fleet accounting, sampled for `/metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FleetStats {
+    pub workers_registered: usize,
+    pub workers_alive: usize,
+    pub units_pending: usize,
+    pub leases_granted: u64,
+    pub leases_completed: u64,
+    pub leases_expired: u64,
+    pub leases_rejected: u64,
+    pub leases_outstanding: usize,
+    pub spot_checks_pass: u64,
+    pub spot_checks_fail: u64,
+}
+
+/// One scenario's worth of work: the *applied* config (base + scenario
+/// overrides already resolved), so a worker needs no scenario-merge
+/// logic — it replays exactly the config the coordinator would have.
+#[derive(Clone)]
+struct Unit {
+    unit_id: u64,
+    name: String,
+    cfg: Arc<CampaignConfig>,
+    flight: Arc<SweepFlight>,
+    slot: usize,
+}
+
+struct Lease {
+    unit: Unit,
+    worker_id: String,
+    deadline: Instant,
+    spot_check: bool,
+}
+
+/// What `POST /fleet/lease` hands to a worker.
+pub struct LeaseGrant {
+    pub lease_id: u64,
+    pub unit_id: u64,
+    pub name: String,
+    pub config: Arc<CampaignConfig>,
+}
+
+/// Outcome of `POST /fleet/complete`.
+#[derive(Debug, PartialEq)]
+pub enum CompleteOutcome {
+    /// Row admitted and delivered into its sweep.
+    Accepted,
+    /// No such live lease (expired, already completed, or never
+    /// granted) — the lease table is untouched.
+    Unknown,
+    /// Row failed validation (bad sha, wrong scenario, spot-check
+    /// divergence); the lease is revoked and the unit requeued.
+    Rejected(String),
+}
+
+struct WorkerInfo {
+    #[allow(dead_code)]
+    slots: u32,
+    last_seen: Instant,
+}
+
+struct FleetInner {
+    workers: HashMap<String, WorkerInfo>,
+    pending: VecDeque<Unit>,
+    leases: HashMap<u64, Lease>,
+    next_unit_id: u64,
+    next_lease_id: u64,
+    granted: u64,
+    completed: u64,
+    expired: u64,
+    rejected: u64,
+    spot_pass: u64,
+    spot_fail: u64,
+}
+
+/// One in-flight sweep: a slot per scenario, filled as workers (or the
+/// local fallback) deliver rows.  Slot order is scenario order, so the
+/// assembled row vector is position-identical to `pool.run_matrix`.
+pub struct SweepFlight {
+    inner: Mutex<FlightInner>,
+    done: Condvar,
+}
+
+struct FlightInner {
+    slots: Vec<Option<runner::ScenarioSummary>>,
+    remaining: usize,
+}
+
+impl SweepFlight {
+    fn new(n: usize) -> Arc<SweepFlight> {
+        Arc::new(SweepFlight {
+            inner: Mutex::new(FlightInner {
+                slots: vec![None; n],
+                remaining: n,
+            }),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Fill a slot; returns false if it was already filled (a late
+    /// duplicate from a worker that raced lease expiry — dropped).
+    fn deliver(&self, slot: usize, row: runner::ScenarioSummary) -> bool {
+        let mut g = lock(&self.inner);
+        if g.slots[slot].is_some() {
+            return false;
+        }
+        g.slots[slot] = Some(row);
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            self.done.notify_all();
+        }
+        true
+    }
+
+    fn rows_if_done(&self) -> Option<Vec<runner::ScenarioSummary>> {
+        let g = lock(&self.inner);
+        if g.remaining != 0 {
+            return None;
+        }
+        Some(g.slots.iter().map(|s| s.clone().expect("slot filled")).collect())
+    }
+
+    /// Slots already delivered (for invariant checks in tests).
+    pub fn filled_slots(&self) -> Vec<usize> {
+        let g = lock(&self.inner);
+        g.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect()
+    }
+
+    fn wait_some(&self, timeout: Duration) {
+        let g = lock(&self.inner);
+        if g.remaining == 0 {
+            return;
+        }
+        let _ = self
+            .done
+            .wait_timeout(g, timeout)
+            .unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// The coordinator's lease table.
+pub struct FleetTable {
+    opts: FleetOptions,
+    inner: Mutex<FleetInner>,
+}
+
+impl FleetTable {
+    pub fn new(opts: FleetOptions) -> FleetTable {
+        FleetTable {
+            opts,
+            inner: Mutex::new(FleetInner {
+                workers: HashMap::new(),
+                pending: VecDeque::new(),
+                leases: HashMap::new(),
+                next_unit_id: 0,
+                next_lease_id: 0,
+                granted: 0,
+                completed: 0,
+                expired: 0,
+                rejected: 0,
+                spot_pass: 0,
+                spot_fail: 0,
+            }),
+        }
+    }
+
+    pub fn options(&self) -> &FleetOptions {
+        &self.opts
+    }
+
+    /// Upsert a worker.  Re-registering (a restarted worker keeping
+    /// its id) just refreshes liveness.
+    pub fn register(&self, worker_id: &str, slots: u32) {
+        let mut g = lock(&self.inner);
+        g.workers.insert(
+            worker_id.to_string(),
+            WorkerInfo { slots, last_seen: Instant::now() },
+        );
+    }
+
+    /// Workers seen within one lease TTL — the signal `run_matrix`
+    /// uses to decide fleet vs local execution.
+    pub fn alive_workers(&self) -> usize {
+        let g = lock(&self.inner);
+        let now = Instant::now();
+        g.workers
+            .values()
+            .filter(|w| now.duration_since(w.last_seen) <= self.opts.lease_ttl)
+            .count()
+    }
+
+    /// Grant the oldest pending unit to `worker_id`.  `Ok(None)` means
+    /// no work right now; `Err` means the worker never registered.
+    pub fn lease(&self, worker_id: &str) -> Result<Option<LeaseGrant>, String> {
+        let mut g = lock(&self.inner);
+        let now = Instant::now();
+        match g.workers.get_mut(worker_id) {
+            Some(w) => w.last_seen = now,
+            None => return Err(format!("unknown worker '{worker_id}'")),
+        }
+        let Some(unit) = g.pending.pop_front() else {
+            return Ok(None);
+        };
+        let lease_id = g.next_lease_id;
+        g.next_lease_id += 1;
+        g.granted += 1;
+        let grant = LeaseGrant {
+            lease_id,
+            unit_id: unit.unit_id,
+            name: unit.name.clone(),
+            config: Arc::clone(&unit.cfg),
+        };
+        let spot_check = spot_check_sampled(unit.unit_id, self.opts.spot_check_rate);
+        g.leases.insert(
+            lease_id,
+            Lease {
+                unit,
+                worker_id: worker_id.to_string(),
+                deadline: now + self.opts.lease_ttl,
+                spot_check,
+            },
+        );
+        Ok(Some(grant))
+    }
+
+    /// Extend a live lease.  `None` (unknown lease id) leaves the
+    /// table untouched — the caller maps it to 404.
+    pub fn heartbeat(&self, lease_id: u64) -> Option<Duration> {
+        let mut g = lock(&self.inner);
+        let now = Instant::now();
+        let ttl = self.opts.lease_ttl;
+        let worker_id = {
+            let lease = g.leases.get_mut(&lease_id)?;
+            lease.deadline = now + ttl;
+            lease.worker_id.clone()
+        };
+        if let Some(w) = g.workers.get_mut(&worker_id) {
+            w.last_seen = now;
+        }
+        Some(ttl)
+    }
+
+    /// Validate and admit a completed unit.
+    ///
+    /// Validation layers, cheapest first:
+    /// 1. the row must decode (`summary_from_wire`);
+    /// 2. the declared sha256 must match the coordinator's own
+    ///    re-rendering of the decoded row (transport integrity);
+    /// 3. the row's scenario name must match the leased unit;
+    /// 4. for sampled units, a local replay of the same config must
+    ///    produce byte-identical wire bytes (worker integrity).
+    ///
+    /// Any failure revokes the lease and requeues the unit; an unknown
+    /// lease id (expired while the worker computed) drops the result —
+    /// the requeued unit is someone else's job now.
+    pub fn complete(
+        &self,
+        lease_id: u64,
+        declared_sha: &str,
+        row_wire: &Json,
+    ) -> CompleteOutcome {
+        let row = match runner::summary_from_wire(row_wire) {
+            Ok(row) => row,
+            Err(e) => return self.reject(lease_id, format!("undecodable row: {e}")),
+        };
+        let canonical = runner::summary_to_wire(&row).to_string_compact();
+        let actual_sha = sha256::hex_digest(canonical.as_bytes());
+        if actual_sha != declared_sha.to_ascii_lowercase() {
+            return self.reject(
+                lease_id,
+                format!("sha256 mismatch: declared {declared_sha}, body is {actual_sha}"),
+            );
+        }
+
+        // Read the lease without removing it: the (possibly slow) spot
+        // check must not hold the table lock, and a lease that expires
+        // during the check must win — its unit already belongs to the
+        // requeue.
+        let (name, cfg, spot_check) = {
+            let g = lock(&self.inner);
+            match g.leases.get(&lease_id) {
+                None => return CompleteOutcome::Unknown,
+                Some(l) => (
+                    l.unit.name.clone(),
+                    Arc::clone(&l.unit.cfg),
+                    l.spot_check,
+                ),
+            }
+        };
+        if row.name != name {
+            return self.reject(
+                lease_id,
+                format!("row is for scenario '{}', lease is for '{}'", row.name, name),
+            );
+        }
+        if spot_check {
+            let local = catch_unwind(AssertUnwindSafe(|| runner::run_unit(&name, &cfg)));
+            let verdict = match local {
+                Ok(local_row) => {
+                    runner::summary_to_wire(&local_row).to_string_compact() == canonical
+                }
+                Err(_) => false,
+            };
+            let mut g = lock(&self.inner);
+            if verdict {
+                g.spot_pass += 1;
+            } else {
+                g.spot_fail += 1;
+                drop(g);
+                return self.reject(
+                    lease_id,
+                    format!("spot check diverged for scenario '{name}'"),
+                );
+            }
+        }
+
+        let unit = {
+            let mut g = lock(&self.inner);
+            let Some(lease) = g.leases.remove(&lease_id) else {
+                // expired while we validated; the requeued unit wins
+                return CompleteOutcome::Unknown;
+            };
+            g.completed += 1;
+            let now = Instant::now();
+            if let Some(w) = g.workers.get_mut(&lease.worker_id) {
+                w.last_seen = now;
+            }
+            lease.unit
+        };
+        unit.flight.deliver(unit.slot, row);
+        CompleteOutcome::Accepted
+    }
+
+    fn reject(&self, lease_id: u64, msg: String) -> CompleteOutcome {
+        let mut g = lock(&self.inner);
+        match g.leases.remove(&lease_id) {
+            Some(lease) => {
+                g.rejected += 1;
+                g.pending.push_back(lease.unit);
+                CompleteOutcome::Rejected(msg)
+            }
+            None => CompleteOutcome::Unknown,
+        }
+    }
+
+    /// Expire every lease whose deadline has passed; their units go
+    /// back on the pending queue.  Returns how many expired.
+    pub fn expire_stale(&self) -> usize {
+        let now = Instant::now();
+        let mut g = lock(&self.inner);
+        let stale: Vec<u64> = g
+            .leases
+            .iter()
+            .filter(|(_, l)| l.deadline <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &stale {
+            if let Some(lease) = g.leases.remove(id) {
+                g.expired += 1;
+                g.pending.push_back(lease.unit);
+            }
+        }
+        stale.len()
+    }
+
+    /// Force-expire one lease regardless of wall clock — the property
+    /// test drives expiry deterministically through this.
+    pub fn expire_lease(&self, lease_id: u64) -> bool {
+        let mut g = lock(&self.inner);
+        match g.leases.remove(&lease_id) {
+            Some(lease) => {
+                g.expired += 1;
+                g.pending.push_back(lease.unit);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> FleetStats {
+        let g = lock(&self.inner);
+        let now = Instant::now();
+        FleetStats {
+            workers_registered: g.workers.len(),
+            workers_alive: g
+                .workers
+                .values()
+                .filter(|w| now.duration_since(w.last_seen) <= self.opts.lease_ttl)
+                .count(),
+            units_pending: g.pending.len(),
+            leases_granted: g.granted,
+            leases_completed: g.completed,
+            leases_expired: g.expired,
+            leases_rejected: g.rejected,
+            leases_outstanding: g.leases.len(),
+            spot_checks_pass: g.spot_pass,
+            spot_checks_fail: g.spot_fail,
+        }
+    }
+
+    /// Unit ids currently waiting for a worker (tests).
+    pub fn pending_unit_ids(&self) -> Vec<u64> {
+        lock(&self.inner).pending.iter().map(|u| u.unit_id).collect()
+    }
+
+    /// Unit ids currently under a live lease (tests).
+    pub fn leased_unit_ids(&self) -> Vec<u64> {
+        lock(&self.inner).leases.values().map(|l| l.unit.unit_id).collect()
+    }
+
+    /// Queue one unit per scenario (config already applied) and return
+    /// the flight that collects their rows.
+    pub fn begin_sweep(
+        &self,
+        base: &CampaignConfig,
+        scenarios: &[ScenarioConfig],
+    ) -> Arc<SweepFlight> {
+        let flight = SweepFlight::new(scenarios.len());
+        let mut g = lock(&self.inner);
+        for (slot, s) in scenarios.iter().enumerate() {
+            let unit_id = g.next_unit_id;
+            g.next_unit_id += 1;
+            g.pending.push_back(Unit {
+                unit_id,
+                name: s.name.clone(),
+                cfg: Arc::new(s.apply(base)),
+                flight: Arc::clone(&flight),
+                slot,
+            });
+        }
+        flight
+    }
+
+    fn take_pending(&self) -> Option<Unit> {
+        lock(&self.inner).pending.pop_front()
+    }
+
+    /// Run a sweep through the fleet when workers are alive, through
+    /// the local replay pool when none are.
+    ///
+    /// The fleet path queues one unit per scenario and blocks until
+    /// every slot is delivered, expiring stale leases as it waits.  If
+    /// the whole fleet dies mid-sweep, the caller's thread drains the
+    /// pending queue inline — slower than the pool (sequential), but
+    /// the sweep always terminates with the same bytes.
+    pub fn run_matrix(
+        &self,
+        pool: &ReplayPool,
+        base: &CampaignConfig,
+        scenarios: &[ScenarioConfig],
+    ) -> Result<Vec<runner::ScenarioSummary>, String> {
+        if scenarios.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.alive_workers() == 0 {
+            return pool.run_matrix(base, scenarios);
+        }
+        let flight = self.begin_sweep(base, scenarios);
+        loop {
+            if let Some(rows) = flight.rows_if_done() {
+                return Ok(rows);
+            }
+            self.expire_stale();
+            if self.alive_workers() == 0 {
+                while let Some(unit) = self.take_pending() {
+                    let row = catch_unwind(AssertUnwindSafe(|| {
+                        runner::run_unit(&unit.name, &unit.cfg)
+                    }))
+                    .map_err(|_| {
+                        format!("scenario '{}' panicked during replay", unit.name)
+                    })?;
+                    unit.flight.deliver(unit.slot, row);
+                }
+            }
+            flight.wait_some(Duration::from_millis(25));
+        }
+    }
+}
+
+/// Deterministic per-unit sampling: hash the unit id so the decision
+/// survives requeues (an expired-and-regranted unit keeps its fate)
+/// and needs no RNG state on the serve path.
+fn spot_check_sampled(unit_id: u64, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    if rate >= 1.0 {
+        return true;
+    }
+    let h = sha256::hex_digest(format!("spot-check:{unit_id}").as_bytes());
+    let v = u64::from_str_radix(&h[..8], 16).expect("hex digest") as f64;
+    v / (u32::MAX as f64 + 1.0) < rate
+}
+
+// ---------------------------------------------------------------------------
+// Worker client
+// ---------------------------------------------------------------------------
+
+/// `icecloud worker` knobs (also driven directly by the e2e tests).
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Coordinator address, `host:port`.
+    pub coordinator: String,
+    pub worker_id: String,
+    /// Advertised concurrency (informational for now — the client
+    /// computes one unit at a time).
+    pub slots: u32,
+    /// Idle poll interval when the coordinator has no work.
+    pub poll: Duration,
+    /// Fault injection: after this many lease grants, vanish mid-lease
+    /// without heartbeating or completing — exactly how a preempted
+    /// spot instance dies.
+    pub fail_after_leases: Option<u64>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerReport {
+    pub leases: u64,
+    pub completed: u64,
+}
+
+/// How many consecutive transport failures the worker tolerates before
+/// concluding the coordinator is gone.
+const MAX_TRANSPORT_FAILURES: u32 = 20;
+
+/// Pull-based worker loop: register, then lease/compute/heartbeat/
+/// complete until `stop` is set.  Runs the replay on a helper thread so
+/// the heartbeat cadence is independent of scenario runtime.
+pub fn run_worker(opts: &WorkerOptions, stop: &AtomicBool) -> Result<WorkerReport, String> {
+    let mut body = Json::obj();
+    body.set("worker_id", Json::from(opts.worker_id.as_str()));
+    body.set("slots", Json::from(u64::from(opts.slots)));
+    let resp = post_json(&opts.coordinator, "/fleet/register", &body)?;
+    if resp.0 != 200 {
+        return Err(format!("register failed: {} {}", resp.0, resp.1));
+    }
+    let doc = json::parse(resp.1.trim()).map_err(|e| format!("register response: {e}"))?;
+    let heartbeat_every = Duration::from_millis(
+        doc.get("heartbeat_every_ms")
+            .and_then(Json::as_u64)
+            .ok_or("register response missing heartbeat_every_ms")?,
+    );
+
+    let mut report = WorkerReport::default();
+    let mut failures = 0u32;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(report);
+        }
+        let mut ask = Json::obj();
+        ask.set("worker_id", Json::from(opts.worker_id.as_str()));
+        let (status, body) = match post_json(&opts.coordinator, "/fleet/lease", &ask) {
+            Ok(r) => {
+                failures = 0;
+                r
+            }
+            Err(e) => {
+                failures += 1;
+                if failures >= MAX_TRANSPORT_FAILURES {
+                    return Err(format!("coordinator unreachable: {e}"));
+                }
+                std::thread::sleep(opts.poll);
+                continue;
+            }
+        };
+        if status != 200 {
+            return Err(format!("lease request refused: {status} {body}"));
+        }
+        let doc = json::parse(body.trim()).map_err(|e| format!("lease response: {e}"))?;
+        if doc.get("idle").is_some() {
+            std::thread::sleep(opts.poll);
+            continue;
+        }
+        report.leases += 1;
+        if opts.fail_after_leases.is_some_and(|n| report.leases >= n) {
+            // vanish mid-lease: no heartbeat, no complete, no goodbye
+            return Ok(report);
+        }
+        let lease_id = doc
+            .get("lease_id")
+            .and_then(Json::as_u64)
+            .ok_or("lease response missing lease_id")?;
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("lease response missing name")?
+            .to_string();
+        let cfg = CampaignConfig::from_canonical_json(
+            doc.get("config").ok_or("lease response missing config")?,
+        )?;
+
+        let (tx, rx) = mpsc::channel();
+        let compute_name = name.clone();
+        let handle = std::thread::spawn(move || {
+            let row = catch_unwind(AssertUnwindSafe(|| {
+                runner::run_unit(&compute_name, &cfg)
+            }));
+            let _ = tx.send(row.ok());
+        });
+        let mut abandoned = false;
+        let row = loop {
+            match rx.recv_timeout(heartbeat_every) {
+                Ok(row) => break row,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break None,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let mut hb = Json::obj();
+                    hb.set("lease_id", Json::from(lease_id));
+                    match post_json(&opts.coordinator, "/fleet/heartbeat", &hb) {
+                        Ok((200, _)) => {}
+                        // lease expired under us, or the coordinator is
+                        // unreachable: abandon this unit
+                        _ => {
+                            abandoned = true;
+                            break None;
+                        }
+                    }
+                }
+            }
+        };
+        let _ = handle.join();
+        let Some(row) = row else {
+            if !abandoned {
+                // the replay itself panicked; let the lease expire so
+                // the coordinator requeues the unit elsewhere
+                std::thread::sleep(opts.poll);
+            }
+            continue;
+        };
+
+        let wire = runner::summary_to_wire(&row);
+        let bytes = wire.to_string_compact();
+        let mut done = Json::obj();
+        done.set("lease_id", Json::from(lease_id));
+        done.set("sha256", Json::from(sha256::hex_digest(bytes.as_bytes())));
+        done.set("row", wire);
+        match post_json(&opts.coordinator, "/fleet/complete", &done) {
+            Ok((200, _)) => report.completed += 1,
+            // 404: lease expired while we computed; 400: rejected.
+            // Either way the coordinator owns the requeue — move on.
+            Ok(_) => {}
+            Err(e) => {
+                failures += 1;
+                if failures >= MAX_TRANSPORT_FAILURES {
+                    return Err(format!("coordinator unreachable: {e}"));
+                }
+            }
+        }
+    }
+}
+
+fn post_json(addr: &str, path: &str, body: &Json) -> Result<(u16, String), String> {
+    let resp = client_request(
+        addr,
+        "POST",
+        path,
+        Some("application/json"),
+        body.to_string_compact().as_bytes(),
+    )?;
+    Ok((resp.status, resp.body_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudbank::BudgetSnapshot;
+    use crate::config::RampStep;
+    use crate::sim::{DAY, HOUR};
+    use crate::sweep::ScenarioSummary;
+
+    fn tiny_base() -> CampaignConfig {
+        let mut c = CampaignConfig::default();
+        c.duration_s = 2 * HOUR;
+        c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+        c.outage = None;
+        c.onprem.slots = 8;
+        c.generator.min_backlog = 30;
+        c
+    }
+
+    fn opts(ttl_ms: u64, rate: f64) -> FleetOptions {
+        FleetOptions {
+            lease_ttl: Duration::from_millis(ttl_ms),
+            heartbeat_every: Duration::from_millis(ttl_ms / 3 + 1),
+            spot_check_rate: rate,
+        }
+    }
+
+    fn fake_row(name: &str) -> ScenarioSummary {
+        ScenarioSummary {
+            name: name.to_string(),
+            seed: 7,
+            duration_days: 0.25,
+            snapshot: BudgetSnapshot {
+                at: 900,
+                budget_usd: 58_000.0,
+                spent_usd: 12.5,
+                aws_usd: 4.0,
+                gcp_usd: 4.0,
+                azure_usd: 4.5,
+            },
+            gpu_days: 1.5,
+            eflop_hours: 0.002,
+            cost_per_eflop_hour: 6_250.0,
+            peak_gpus: 10.0,
+            mean_gpus: 8.0,
+            completed: 120,
+            interrupted: 3,
+            goodput_fraction: 0.97,
+            nat_drops: 0,
+            preemptions: 2,
+            resumes: 2,
+            goodput_hours: 36.0,
+            wasted_hours: 1.0,
+            expansion_factor: 1.1,
+            alerts: 1,
+        }
+    }
+
+    fn wire_and_sha(row: &ScenarioSummary) -> (Json, String) {
+        let wire = runner::summary_to_wire(row);
+        let sha = sha256::hex_digest(wire.to_string_compact().as_bytes());
+        (wire, sha)
+    }
+
+    fn scens(names: &[&str]) -> Vec<ScenarioConfig> {
+        names.iter().map(|n| ScenarioConfig::named(n)).collect()
+    }
+
+    #[test]
+    fn lease_lifecycle_conserves_units() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        fleet.register("w1", 1);
+        let _flight = fleet.begin_sweep(&tiny_base(), &scens(&["a", "b", "c"]));
+        assert_eq!(fleet.pending_unit_ids(), vec![0, 1, 2]);
+
+        let g0 = fleet.lease("w1").unwrap().unwrap();
+        let g1 = fleet.lease("w1").unwrap().unwrap();
+        let g2 = fleet.lease("w1").unwrap().unwrap();
+        let mut granted_units = vec![g0.unit_id, g1.unit_id, g2.unit_id];
+        granted_units.sort_unstable();
+        assert_eq!(granted_units, vec![0, 1, 2], "each unit granted once");
+        assert!(fleet.lease("w1").unwrap().is_none(), "queue is drained");
+
+        // complete one, expire one, leave one outstanding
+        let row = fake_row(&g0.name);
+        let (wire, sha) = wire_and_sha(&row);
+        assert_eq!(fleet.complete(g0.lease_id, &sha, &wire), CompleteOutcome::Accepted);
+        assert!(fleet.expire_lease(g1.lease_id));
+
+        let s = fleet.stats();
+        assert_eq!(s.leases_granted, 3);
+        assert_eq!(s.leases_completed, 1);
+        assert_eq!(s.leases_expired, 1);
+        assert_eq!(s.leases_outstanding, 1);
+        assert_eq!(
+            s.leases_granted,
+            s.leases_completed + s.leases_expired + s.leases_rejected
+                + s.leases_outstanding as u64
+        );
+        assert_eq!(fleet.pending_unit_ids(), vec![g1.unit_id], "expired unit requeued");
+        assert_eq!(fleet.leased_unit_ids(), vec![g2.unit_id]);
+    }
+
+    #[test]
+    fn unknown_worker_cannot_lease() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        let _flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+        assert!(fleet.lease("ghost").is_err());
+        assert_eq!(fleet.stats().leases_granted, 0);
+        assert_eq!(fleet.pending_unit_ids(), vec![0], "unit untouched");
+    }
+
+    #[test]
+    fn heartbeat_extends_and_unknown_heartbeat_is_a_noop() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        fleet.register("w1", 1);
+        let _flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+        let g = fleet.lease("w1").unwrap().unwrap();
+        assert_eq!(fleet.heartbeat(g.lease_id), Some(Duration::from_millis(60_000)));
+        let before = fleet.stats();
+        assert_eq!(fleet.heartbeat(9_999), None);
+        assert_eq!(fleet.stats(), before, "unknown heartbeat changes nothing");
+    }
+
+    #[test]
+    fn wrong_sha_rejects_and_requeues() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        fleet.register("w1", 1);
+        let flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+        let g = fleet.lease("w1").unwrap().unwrap();
+        let (wire, _) = wire_and_sha(&fake_row(&g.name));
+        let out = fleet.complete(g.lease_id, "deadbeef", &wire);
+        assert!(matches!(out, CompleteOutcome::Rejected(_)), "{out:?}");
+        assert_eq!(fleet.stats().leases_rejected, 1);
+        assert_eq!(fleet.pending_unit_ids(), vec![g.unit_id], "unit requeued");
+        assert!(flight.filled_slots().is_empty(), "nothing delivered");
+    }
+
+    #[test]
+    fn wrong_scenario_name_rejects() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        fleet.register("w1", 1);
+        let _flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+        let g = fleet.lease("w1").unwrap().unwrap();
+        let (wire, sha) = wire_and_sha(&fake_row("not-a"));
+        let out = fleet.complete(g.lease_id, &sha, &wire);
+        assert!(matches!(out, CompleteOutcome::Rejected(_)), "{out:?}");
+        assert_eq!(fleet.pending_unit_ids(), vec![g.unit_id]);
+    }
+
+    #[test]
+    fn complete_after_expiry_is_unknown_and_drops_the_row() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        fleet.register("w1", 1);
+        let flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+        let g = fleet.lease("w1").unwrap().unwrap();
+        assert!(fleet.expire_lease(g.lease_id));
+        let (wire, sha) = wire_and_sha(&fake_row(&g.name));
+        assert_eq!(fleet.complete(g.lease_id, &sha, &wire), CompleteOutcome::Unknown);
+        assert_eq!(fleet.stats().leases_completed, 0);
+        assert!(flight.filled_slots().is_empty());
+        assert_eq!(fleet.pending_unit_ids(), vec![g.unit_id], "requeue wins");
+    }
+
+    #[test]
+    fn spot_check_rejects_fabricated_rows_and_admits_honest_ones() {
+        let fleet = FleetTable::new(opts(60_000, 1.0));
+        fleet.register("w1", 1);
+        let flight = fleet.begin_sweep(&tiny_base(), &scens(&["a"]));
+
+        // a well-formed but fabricated row sails through the sha check
+        // and dies on the local replay comparison
+        let g = fleet.lease("w1").unwrap().unwrap();
+        let (wire, sha) = wire_and_sha(&fake_row(&g.name));
+        let out = fleet.complete(g.lease_id, &sha, &wire);
+        assert!(matches!(out, CompleteOutcome::Rejected(_)), "{out:?}");
+        assert_eq!(fleet.stats().spot_checks_fail, 1);
+
+        // the honest bytes are admitted
+        let g = fleet.lease("w1").unwrap().unwrap();
+        let honest = runner::run_unit(&g.name, &g.config);
+        let (wire, sha) = wire_and_sha(&honest);
+        assert_eq!(fleet.complete(g.lease_id, &sha, &wire), CompleteOutcome::Accepted);
+        let s = fleet.stats();
+        assert_eq!(s.spot_checks_pass, 1);
+        assert_eq!(flight.filled_slots(), vec![0]);
+    }
+
+    #[test]
+    fn run_matrix_without_workers_uses_the_pool() {
+        let fleet = FleetTable::new(opts(60_000, 0.0));
+        let pool = ReplayPool::new(2);
+        let base = tiny_base();
+        let scenarios = scens(&["a", "b"]);
+        let via_fleet = fleet.run_matrix(&pool, &base, &scenarios).unwrap();
+        let via_pool = pool.run_matrix(&base, &scenarios).unwrap();
+        assert_eq!(via_fleet, via_pool);
+        assert_eq!(fleet.stats().leases_granted, 0, "no fleet involvement");
+    }
+
+    #[test]
+    fn run_matrix_drains_locally_when_the_whole_fleet_dies() {
+        // a worker registers and then never leases: once it goes stale
+        // (short TTL), the sweep must finish on the caller's thread
+        let fleet = FleetTable::new(opts(50, 0.0));
+        fleet.register("doomed", 1);
+        let pool = ReplayPool::new(2);
+        let base = tiny_base();
+        let scenarios = scens(&["a", "b"]);
+        let rows = fleet.run_matrix(&pool, &base, &scenarios).unwrap();
+        let reference = pool.run_matrix(&base, &scenarios).unwrap();
+        assert_eq!(rows, reference, "local drain is byte-identical");
+    }
+
+    #[test]
+    fn spot_check_sampling_is_deterministic_and_respects_bounds() {
+        assert!(!spot_check_sampled(42, 0.0));
+        assert!(spot_check_sampled(42, 1.0));
+        for id in 0..64 {
+            assert_eq!(
+                spot_check_sampled(id, 0.3),
+                spot_check_sampled(id, 0.3),
+                "sampling must be stable across requeues"
+            );
+        }
+        let hits = (0..1000).filter(|&id| spot_check_sampled(id, 0.3)).count();
+        assert!((200..=400).contains(&hits), "rate 0.3 sampled {hits}/1000");
+    }
+}

@@ -22,6 +22,7 @@
 //! async submissions collapse to one job for free.
 
 use super::cache::{render_sweep_body, Outcome, ResultCache};
+use super::fleet::FleetTable;
 use super::metrics::Metrics;
 use crate::config::CampaignConfig;
 use crate::coordinator::ScenarioConfig;
@@ -30,11 +31,23 @@ use crate::util::json::Json;
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Poison-tolerant lock.  A job or runner that panicked mid-update
+/// poisons the mutex; every subsequent `lock().unwrap()` would then
+/// cascade the panic through unrelated threads and silently kill the
+/// async queue.  All the states guarded here (job records, the work
+/// queue, result slots, the countdown latch) stay structurally valid
+/// across a panic — the panicking path at worst leaves one job stuck
+/// in `Running`, which is exactly what the `Failed` bookkeeping in
+/// `runner_loop` repairs — so clearing the poison flag is safe.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Fixed-size worker pool; dropped pools drain their queue and join.
 pub struct ReplayPool {
@@ -55,11 +68,14 @@ impl ReplayPool {
             let rx = Arc::clone(&rx);
             let depth = Arc::clone(&depth);
             workers.push(std::thread::spawn(move || loop {
-                let job = match rx.lock().unwrap().recv() {
+                let job = match lock(&rx).recv() {
                     Ok(job) => job,
                     Err(_) => break, // pool dropped, queue drained
                 };
-                job();
+                // a raw job that panics must not take the worker thread
+                // with it (a 1-thread pool would deadlock every later
+                // run_matrix) nor leak the depth gauge
+                let _ = catch_unwind(AssertUnwindSafe(job));
                 depth.fetch_sub(1, Ordering::Relaxed);
             }));
         }
@@ -122,9 +138,9 @@ impl ReplayPool {
                     runner::run_scenario(&base, &scenario)
                 }))
                 .ok();
-                *slots[i].lock().unwrap() = row;
+                *lock(&slots[i]) = row;
                 let (count, cv) = &*latch;
-                let mut remaining = count.lock().unwrap();
+                let mut remaining = lock(count);
                 *remaining -= 1;
                 if *remaining == 0 {
                     cv.notify_all();
@@ -133,15 +149,16 @@ impl ReplayPool {
         }
 
         let (count, cv) = &*latch;
-        let mut remaining = count.lock().unwrap();
+        let mut remaining = lock(count);
         while *remaining > 0 {
-            remaining = cv.wait(remaining).unwrap();
+            remaining =
+                cv.wait(remaining).unwrap_or_else(|e| e.into_inner());
         }
         drop(remaining);
 
         let mut rows = Vec::with_capacity(n);
         for (i, slot) in slots.iter().enumerate() {
-            match slot.lock().unwrap().take() {
+            match lock(slot).take() {
                 Some(row) => rows.push(row),
                 None => {
                     return Err(format!(
@@ -294,11 +311,15 @@ pub struct JobTable {
 
 impl JobTable {
     /// Spawn `runners` job-runner threads over the shared cache/pool.
+    /// Jobs drain through the fleet when remote workers are registered
+    /// and fall back to the local pool when none are (`fleet.run_matrix`
+    /// makes that call per sweep).
     pub fn start(
         queue_max: usize,
         runners: usize,
         cache: Arc<ResultCache>,
         pool: Arc<ReplayPool>,
+        fleet: Arc<FleetTable>,
         metrics: Arc<Metrics>,
     ) -> JobTable {
         let shared = Arc::new(Shared {
@@ -315,9 +336,10 @@ impl JobTable {
             let shared = Arc::clone(&shared);
             let cache = Arc::clone(&cache);
             let pool = Arc::clone(&pool);
+            let fleet = Arc::clone(&fleet);
             let metrics = Arc::clone(&metrics);
             handles.push(std::thread::spawn(move || {
-                runner_loop(&shared, &cache, &pool, &metrics)
+                runner_loop(&shared, &cache, &pool, &fleet, &metrics)
             }));
         }
         JobTable {
@@ -339,7 +361,7 @@ impl JobTable {
     pub fn submit(&self, spec: JobSpec) -> Admission {
         let id = spec.key.clone();
         {
-            let st = self.shared.state.lock().unwrap();
+            let st = lock(&self.shared.state);
             if in_flight(&st, &id) {
                 return Admission::Duplicate { id };
             }
@@ -356,7 +378,7 @@ impl JobTable {
             Some(_) => true,
             None => false,
         };
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         if in_flight(&st, &id) {
             // lost a race with an identical submission
             return Admission::Duplicate { id };
@@ -430,14 +452,14 @@ impl JobTable {
 
     /// Snapshot one job.
     pub fn view(&self, id: &str) -> Option<JobView> {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         let rec = st.jobs.get(id)?;
         Some(view_of(&st, id, rec))
     }
 
     /// Snapshot every tracked job in submission order.
     pub fn list(&self) -> Vec<JobView> {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         st.order
             .iter()
             .filter_map(|id| st.jobs.get(id).map(|r| view_of(&st, id, r)))
@@ -446,7 +468,7 @@ impl JobTable {
 
     /// `(queued, running)` gauge pair for `/metrics`.
     pub fn counts(&self) -> (usize, usize) {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         let running = st
             .jobs
             .values()
@@ -461,7 +483,7 @@ impl Drop for JobTable {
         {
             // set the flag under the state lock so a runner between its
             // stop-check and its wait cannot miss the wakeup
-            let _st = self.shared.state.lock().unwrap();
+            let _st = lock(&self.shared.state);
             self.shared.stop.store(true, Ordering::SeqCst);
             self.shared.work.notify_all();
         }
@@ -537,57 +559,90 @@ fn runner_loop(
     shared: &Shared,
     cache: &ResultCache,
     pool: &ReplayPool,
+    fleet: &FleetTable,
     metrics: &Metrics,
 ) {
     loop {
         let (id, spec) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock(&shared.state);
             loop {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
                 }
                 if let Some(id) = st.pending.pop_front() {
-                    let rec = st
-                        .jobs
-                        .get_mut(&id)
-                        .expect("queued job has a record");
+                    // a record missing its entry or spec means a
+                    // previous runner panicked between popping and
+                    // taking; skip the orphan instead of cascading
+                    let Some(rec) = st.jobs.get_mut(&id) else {
+                        continue;
+                    };
+                    let Some(spec) = rec.spec.take() else {
+                        // never leave a spec-less record Queued — it
+                        // could not run and would dedup submissions
+                        // into a job that never finishes
+                        rec.phase = Phase::Failed;
+                        rec.finished = Some(Instant::now());
+                        rec.error =
+                            Some("queued job lost its spec".to_string());
+                        continue;
+                    };
                     rec.phase = Phase::Running;
                     rec.started = Some(Instant::now());
-                    let spec =
-                        rec.spec.take().expect("queued job has a spec");
                     break (id, spec);
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared
+                    .work
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
             }
         };
 
         // the exact machinery the sync path uses: shared single-flight
-        // cache over the shared replay pool, so async results are
-        // byte-identical to sync ones by construction
+        // cache over the shared fleet/pool dispatch, so async results
+        // are byte-identical to sync ones by construction.  A panic
+        // anywhere in the compute path must not kill this runner
+        // thread — the job is marked failed and the queue keeps
+        // draining.
         let replays = spec.scenarios.len();
-        let (result, outcome) = cache.get_or_compute(&spec.key, || {
-            let rows = pool.run_matrix(&spec.resolved, &spec.scenarios)?;
-            metrics.on_sweep_computed(
-                replays,
-                rows.iter().map(|r| r.goodput_hours).sum(),
-                rows.iter().map(|r| r.wasted_hours).sum(),
-            );
-            Ok(render_sweep_body(&spec.key, &rows))
-        });
-        match (&result, outcome) {
-            (_, Outcome::Miss) => {
-                metrics.on_lookup_outcome(Outcome::Miss, cache.has_disk())
+        let computed = catch_unwind(AssertUnwindSafe(|| {
+            let (result, outcome) =
+                cache.get_or_compute(&spec.key, || {
+                    let rows = fleet.run_matrix(
+                        pool,
+                        &spec.resolved,
+                        &spec.scenarios,
+                    )?;
+                    metrics.on_sweep_computed(
+                        replays,
+                        rows.iter().map(|r| r.goodput_hours).sum(),
+                        rows.iter().map(|r| r.wasted_hours).sum(),
+                    );
+                    Ok(render_sweep_body(&spec.key, &rows))
+                });
+            match (&result, outcome) {
+                (_, Outcome::Miss) => metrics
+                    .on_lookup_outcome(Outcome::Miss, cache.has_disk()),
+                (Ok(_), o) => {
+                    metrics.on_lookup_outcome(o, cache.has_disk())
+                }
+                (Err(_), _) => {} // a waiter surfacing the owner's error
             }
-            (Ok(_), o) => metrics.on_lookup_outcome(o, cache.has_disk()),
-            (Err(_), _) => {} // a waiter surfacing the owner's error
-        }
+            result
+        }));
+        let result = match computed {
+            Ok(result) => result.map(|_| ()),
+            Err(_) => Err("job runner panicked".to_string()),
+        };
 
-        let mut st = shared.state.lock().unwrap();
-        let rec =
-            st.jobs.get_mut(&id).expect("running job has a record");
+        let mut st = lock(&shared.state);
+        let Some(rec) = st.jobs.get_mut(&id) else {
+            // gc'd mid-run (cannot happen while Running today, but a
+            // missing record must not bring the runner down)
+            continue;
+        };
         rec.finished = Some(Instant::now());
         match result {
-            Ok(_) => {
+            Ok(()) => {
                 rec.phase = Phase::Done;
                 metrics.on_job_finished(true);
             }
@@ -713,12 +768,18 @@ mod tests {
 
     // ---- JobTable ------------------------------------------------------
 
+    fn idle_fleet() -> Arc<FleetTable> {
+        use super::super::fleet::FleetOptions;
+        Arc::new(FleetTable::new(FleetOptions::default()))
+    }
+
     fn table(queue_max: usize, runners: usize) -> JobTable {
         JobTable::start(
             queue_max,
             runners,
             Arc::new(ResultCache::new(1 << 20)),
             Arc::new(ReplayPool::new(1)),
+            idle_fleet(),
             Arc::new(Metrics::new()),
         )
     }
@@ -789,6 +850,7 @@ mod tests {
             1,
             Arc::new(ResultCache::new(1 << 20)),
             Arc::new(ReplayPool::new(1)),
+            idle_fleet(),
             Arc::new(Metrics::new()),
         );
         // first job goes to the runner; make it slow enough to hold the
@@ -823,6 +885,7 @@ mod tests {
             1,
             Arc::clone(&cache),
             Arc::new(ReplayPool::new(1)),
+            idle_fleet(),
             Arc::new(Metrics::new()),
         );
         match t.submit(s) {
@@ -871,6 +934,7 @@ mod tests {
             1,
             Arc::clone(&cache),
             Arc::new(ReplayPool::new(1)),
+            idle_fleet(),
             Arc::new(Metrics::new()),
         );
         let s = spec("evict", 1);
@@ -974,5 +1038,52 @@ mod tests {
         let j = v.to_json();
         assert_eq!(j.get("queue_position").unwrap().as_u64(), Some(2));
         assert!(j.get("result").is_none());
+    }
+
+    // ---- panic/poison regressions --------------------------------------
+
+    #[test]
+    fn uncaught_panicking_job_does_not_kill_the_pool_worker() {
+        // unlike panicking_job_reports_error_and_pool_survives, this
+        // job does NOT catch its own panic: the unwind reaches the
+        // worker loop.  Before the worker-side catch_unwind, the sole
+        // worker thread died here, the depth gauge leaked, and every
+        // later run_matrix on the pool hung forever.
+        let pool = ReplayPool::new(1);
+        pool.execute(|| panic!("uncaught boom"));
+        let rows = pool
+            .run_matrix(&tiny_base(), &[ScenarioConfig::named("after")])
+            .unwrap();
+        assert_eq!(rows.len(), 1, "worker survived the unwind");
+        for _ in 0..1000 {
+            if pool.queue_depth() == 0 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("queue depth leaked after a panicking job");
+    }
+
+    #[test]
+    fn poisoned_jobs_mutex_still_drains_the_queue() {
+        // a thread panicking while holding the job-table mutex poisons
+        // it; every lock().unwrap() after that cascaded the panic
+        // through submit/view/runner threads and silently killed the
+        // async queue.  The poison-tolerant lock() keeps it draining.
+        let t = table(8, 1);
+        let shared = Arc::clone(&t.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.state.lock().unwrap();
+            panic!("poison the jobs mutex");
+        })
+        .join();
+        assert!(t.shared.state.is_poisoned(), "mutex must be poisoned");
+        let id = match t.submit(spec("poisoned", 3)) {
+            Admission::Accepted { id } => id,
+            other => panic!("expected Accepted, got {other:?}"),
+        };
+        let v = wait_done(&t, &id);
+        assert_eq!(v.status, "done", "queue drains past the poison");
+        assert_eq!(t.counts(), (0, 0));
     }
 }

@@ -8,6 +8,7 @@
 //! consume it, without this crate growing a client-library dependency.
 
 use super::cache::Outcome;
+use super::fleet::FleetStats;
 use crate::util::stats;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -49,6 +50,8 @@ pub struct Gauges {
     pub store_bytes: u64,
     pub jobs_queued: usize,
     pub jobs_running: usize,
+    /// Worker-fleet accounting, sampled from the lease table.
+    pub fleet: FleetStats,
 }
 
 /// One server's counter set.  All methods take `&self`; the struct is
@@ -105,7 +108,10 @@ impl Metrics {
 
     pub fn on_response(&self, status: u16, latency_s: f64) {
         self.count_response_class(status);
-        self.latency.lock().unwrap().push(latency_s);
+        self.latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(latency_s);
     }
 
     /// A request rejected before routing (malformed bytes, oversized
@@ -316,7 +322,57 @@ impl Metrics {
             g.store_entries.to_string(),
         );
         line("icecloud_result_store_bytes", g.store_bytes.to_string());
-        let samples = self.latency.lock().unwrap().buf.clone();
+        line(
+            "icecloud_fleet_workers_registered",
+            g.fleet.workers_registered.to_string(),
+        );
+        line(
+            "icecloud_fleet_workers_alive",
+            g.fleet.workers_alive.to_string(),
+        );
+        line(
+            "icecloud_fleet_units_pending",
+            g.fleet.units_pending.to_string(),
+        );
+        line(
+            "icecloud_fleet_leases_granted_total",
+            g.fleet.leases_granted.to_string(),
+        );
+        line(
+            "icecloud_fleet_leases_completed_total",
+            g.fleet.leases_completed.to_string(),
+        );
+        line(
+            "icecloud_fleet_leases_expired_total",
+            g.fleet.leases_expired.to_string(),
+        );
+        line(
+            "icecloud_fleet_leases_rejected_total",
+            g.fleet.leases_rejected.to_string(),
+        );
+        // every expiry or rejection requeues its unit
+        line(
+            "icecloud_fleet_leases_requeued_total",
+            (g.fleet.leases_expired + g.fleet.leases_rejected).to_string(),
+        );
+        line(
+            "icecloud_fleet_leases_outstanding",
+            g.fleet.leases_outstanding.to_string(),
+        );
+        line(
+            "icecloud_fleet_spot_checks_total{verdict=\"pass\"}",
+            g.fleet.spot_checks_pass.to_string(),
+        );
+        line(
+            "icecloud_fleet_spot_checks_total{verdict=\"fail\"}",
+            g.fleet.spot_checks_fail.to_string(),
+        );
+        let samples = self
+            .latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .buf
+            .clone();
         let ps = stats::percentiles(&samples, &[0.5, 0.9, 0.99]);
         for (q, p) in [("0.5", ps[0]), ("0.9", ps[1]), ("0.99", ps[2])] {
             let v = if p.is_nan() {
@@ -354,6 +410,18 @@ mod tests {
             store_bytes: 2048,
             jobs_queued: 4,
             jobs_running: 1,
+            fleet: FleetStats {
+                workers_registered: 3,
+                workers_alive: 2,
+                units_pending: 5,
+                leases_granted: 9,
+                leases_completed: 6,
+                leases_expired: 1,
+                leases_rejected: 1,
+                leases_outstanding: 1,
+                spot_checks_pass: 4,
+                spot_checks_fail: 1,
+            },
         }
     }
 
@@ -416,6 +484,21 @@ mod tests {
         assert!(text.contains("icecloud_jobs_running 1"), "{text}");
         assert!(text.contains("icecloud_replay_queue_depth 2"), "{text}");
         assert!(text.contains("icecloud_result_cache_bytes 512"), "{text}");
+        assert!(text.contains("icecloud_fleet_workers_registered 3"), "{text}");
+        assert!(text.contains("icecloud_fleet_workers_alive 2"), "{text}");
+        assert!(text.contains("icecloud_fleet_units_pending 5"), "{text}");
+        assert!(text.contains("icecloud_fleet_leases_granted_total 9"), "{text}");
+        assert!(text.contains("icecloud_fleet_leases_expired_total 1"), "{text}");
+        assert!(text.contains("icecloud_fleet_leases_requeued_total 2"), "{text}");
+        assert!(text.contains("icecloud_fleet_leases_outstanding 1"), "{text}");
+        assert!(
+            text.contains("icecloud_fleet_spot_checks_total{verdict=\"pass\"} 4"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_fleet_spot_checks_total{verdict=\"fail\"} 1"),
+            "{text}"
+        );
         assert!(
             text.contains("icecloud_result_store_entries 3"),
             "{text}"

@@ -30,6 +30,7 @@
 //! ```
 
 pub mod cache;
+pub mod fleet;
 pub mod http;
 pub mod jobs;
 pub mod metrics;
@@ -37,6 +38,7 @@ pub mod router;
 pub mod store;
 
 pub use cache::ResultCache;
+pub use fleet::{FleetOptions, FleetTable, WorkerOptions, WorkerReport};
 pub use jobs::{JobTable, ReplayPool};
 pub use metrics::Metrics;
 pub use router::AppState;
@@ -75,6 +77,8 @@ pub struct ServeConfig {
     /// Persistent result-store root; `None` = memory-only (results do
     /// not survive restarts).
     pub store_dir: Option<PathBuf>,
+    /// Lease/heartbeat knobs for the remote worker fleet.
+    pub fleet: FleetOptions,
     /// Base campaign every request's scenario spec resolves against.
     pub base: CampaignConfig,
 }
@@ -91,6 +95,7 @@ impl Default for ServeConfig {
             queue_max: 32,
             job_runners: 2,
             store_dir: None,
+            fleet: FleetOptions::default(),
             base: CampaignConfig::default(),
         }
     }
@@ -114,18 +119,21 @@ impl Server {
         let cache =
             Arc::new(ResultCache::with_disk(cfg.cache_bytes, disk));
         let pool = Arc::new(ReplayPool::new(cfg.replay_threads));
+        let fleet = Arc::new(FleetTable::new(cfg.fleet));
         let metrics = Arc::new(Metrics::new());
         let jobs = JobTable::start(
             cfg.queue_max,
             cfg.job_runners,
             Arc::clone(&cache),
             Arc::clone(&pool),
+            Arc::clone(&fleet),
             Arc::clone(&metrics),
         );
         let state = Arc::new(AppState {
             base: cfg.base,
             cache,
             pool,
+            fleet,
             metrics,
             jobs,
         });
@@ -168,11 +176,24 @@ impl Server {
             let rx = Arc::clone(&rx);
             let state = Arc::clone(&self.state);
             handlers.push(std::thread::spawn(move || loop {
-                let stream = match rx.lock().unwrap().recv() {
+                // tolerate a poisoned handoff mutex: a handler that
+                // panicked mid-recv must not wedge the whole accept
+                // pipeline behind a poison error
+                let stream = match rx
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .recv()
+                {
                     Ok(s) => s,
                     Err(_) => break, // accept loop gone; drain and exit
                 };
-                handle_connection(&state, stream);
+                // one pathological request must not cost a handler
+                // thread for the rest of the process lifetime
+                let _ = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        handle_connection(&state, stream)
+                    }),
+                );
             }));
         }
 

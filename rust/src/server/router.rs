@@ -10,6 +10,10 @@
 //! | `GET /jobs/<id>`          | one job: state, queue position, timings       |
 //! | `GET /results/<key>`      | re-fetch a cached sweep response by key       |
 //! | `GET /metrics`            | counters + latency percentiles (text)         |
+//! | `POST /fleet/register`    | announce a worker (id, slots)                 |
+//! | `POST /fleet/lease`       | pull one scenario unit under a lease          |
+//! | `POST /fleet/heartbeat`   | extend a lease's deadline                     |
+//! | `POST /fleet/complete`    | stream a finished unit's row back             |
 //!
 //! `POST /sweep` is where the subsystem earns its keep: resolve the
 //! spec against the server's base campaign, derive the content address
@@ -21,6 +25,7 @@
 //! a full queue sheds with `429 + Retry-After` (DESIGN.md §14).
 
 use super::cache::{render_sweep_body, sweep_key, Outcome};
+use super::fleet::CompleteOutcome;
 use super::http::{Request, Response};
 use super::jobs::{Admission, JobSpec};
 use super::metrics::Gauges;
@@ -42,6 +47,7 @@ pub struct AppState {
     pub base: CampaignConfig,
     pub cache: std::sync::Arc<super::cache::ResultCache>,
     pub pool: std::sync::Arc<super::jobs::ReplayPool>,
+    pub fleet: std::sync::Arc<super::fleet::FleetTable>,
     pub metrics: std::sync::Arc<super::metrics::Metrics>,
     pub jobs: super::jobs::JobTable,
 }
@@ -68,6 +74,33 @@ pub fn route(state: &AppState, req: &Request) -> Response {
         ("GET", path) if path.starts_with("/results/") => {
             results(state, &path["/results/".len()..])
         }
+        (
+            "POST",
+            p @ ("/fleet/register" | "/fleet/lease"
+            | "/fleet/heartbeat" | "/fleet/complete"),
+        ) => {
+            // the fleet protocol carries everything in JSON bodies; a
+            // query string here is a caller bug, not a no-op
+            if query.is_some() {
+                Response::error(
+                    400,
+                    "fleet endpoints take no query parameters",
+                )
+            } else {
+                match p {
+                    "/fleet/register" => fleet_register(state, req),
+                    "/fleet/lease" => fleet_lease(state, req),
+                    "/fleet/heartbeat" => fleet_heartbeat(state, req),
+                    _ => fleet_complete(state, req),
+                }
+            }
+        }
+        (
+            _,
+            "/fleet/register" | "/fleet/lease" | "/fleet/heartbeat"
+            | "/fleet/complete",
+        ) => Response::error(405, "method not allowed")
+            .with_header("Allow", "POST"),
         // known paths, wrong method
         (_, "/healthz" | "/matrix" | "/metrics" | "/jobs") => {
             Response::error(405, "method not allowed")
@@ -113,6 +146,7 @@ fn metrics(state: &AppState) -> Response {
             store_bytes,
             jobs_queued,
             jobs_running,
+            fleet: state.fleet.stats(),
         }),
     )
 }
@@ -155,6 +189,168 @@ fn job_detail(state: &AppState, id: &str) -> Response {
             Response::json(200, body)
         }
         None => Response::error(404, "no such job"),
+    }
+}
+
+// ---- the fleet protocol --------------------------------------------------
+
+/// Parse a fleet-endpoint body: a non-empty JSON object or a 400.
+fn parse_fleet_body(req: &Request) -> Result<Json, String> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not valid UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body; send a JSON object".to_string());
+    }
+    let doc = json::parse(text).map_err(|e| e.to_string())?;
+    if doc.as_obj().is_none() {
+        return Err("body must be a JSON object".to_string());
+    }
+    Ok(doc)
+}
+
+fn fleet_json(status: u16, o: Json) -> Response {
+    let mut body = o.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    Response::json(status, body)
+}
+
+fn fleet_register(state: &AppState, req: &Request) -> Response {
+    let doc = match parse_fleet_body(req) {
+        Ok(doc) => doc,
+        Err(e) => return Response::error(400, &e),
+    };
+    let Some(worker_id) = doc.get("worker_id").and_then(Json::as_str)
+    else {
+        return Response::error(
+            400,
+            "register body needs a worker_id string",
+        );
+    };
+    if worker_id.is_empty() {
+        return Response::error(400, "worker_id must not be empty");
+    }
+    let Some(slots) = doc.get("slots").and_then(Json::as_u64) else {
+        return Response::error(400, "register body needs a slots count");
+    };
+    let Ok(slots) = u32::try_from(slots) else {
+        return Response::error(400, "slots out of range");
+    };
+    if slots == 0 {
+        return Response::error(400, "slots must be at least 1");
+    }
+    state.fleet.register(worker_id, slots);
+    let opts = state.fleet.options();
+    let mut o = Json::obj();
+    o.set("worker_id", Json::from(worker_id));
+    o.set(
+        "lease_ttl_ms",
+        Json::from(opts.lease_ttl.as_millis() as u64),
+    );
+    o.set(
+        "heartbeat_every_ms",
+        Json::from(opts.heartbeat_every.as_millis() as u64),
+    );
+    o.set("spot_check_rate", Json::from(opts.spot_check_rate));
+    fleet_json(200, o)
+}
+
+fn fleet_lease(state: &AppState, req: &Request) -> Response {
+    let doc = match parse_fleet_body(req) {
+        Ok(doc) => doc,
+        Err(e) => return Response::error(400, &e),
+    };
+    let Some(worker_id) = doc.get("worker_id").and_then(Json::as_str)
+    else {
+        return Response::error(
+            400,
+            "lease body needs a worker_id string",
+        );
+    };
+    let opts = state.fleet.options();
+    match state.fleet.lease(worker_id) {
+        // unknown worker: register first (404 so a misconfigured
+        // client fails loudly instead of spinning on idle polls)
+        Err(e) => Response::error(404, &e),
+        Ok(None) => {
+            let mut o = Json::obj();
+            o.set("idle", Json::from(true));
+            o.set(
+                "poll_after_ms",
+                Json::from(opts.heartbeat_every.as_millis() as u64),
+            );
+            fleet_json(200, o)
+        }
+        Ok(Some(grant)) => {
+            let mut o = Json::obj();
+            o.set("lease_id", Json::from(grant.lease_id));
+            o.set("unit_id", Json::from(grant.unit_id));
+            o.set("name", Json::from(grant.name.as_str()));
+            o.set("config", grant.config.canonical_json());
+            o.set(
+                "lease_ttl_ms",
+                Json::from(opts.lease_ttl.as_millis() as u64),
+            );
+            o.set(
+                "heartbeat_every_ms",
+                Json::from(opts.heartbeat_every.as_millis() as u64),
+            );
+            fleet_json(200, o)
+        }
+    }
+}
+
+fn fleet_heartbeat(state: &AppState, req: &Request) -> Response {
+    let doc = match parse_fleet_body(req) {
+        Ok(doc) => doc,
+        Err(e) => return Response::error(400, &e),
+    };
+    let Some(lease_id) = doc.get("lease_id").and_then(Json::as_u64)
+    else {
+        return Response::error(400, "heartbeat body needs a lease_id");
+    };
+    match state.fleet.heartbeat(lease_id) {
+        None => Response::error(
+            404,
+            "no such lease (expired, completed, or never granted)",
+        ),
+        Some(ttl) => {
+            let mut o = Json::obj();
+            o.set("lease_id", Json::from(lease_id));
+            o.set("lease_ttl_ms", Json::from(ttl.as_millis() as u64));
+            fleet_json(200, o)
+        }
+    }
+}
+
+fn fleet_complete(state: &AppState, req: &Request) -> Response {
+    let doc = match parse_fleet_body(req) {
+        Ok(doc) => doc,
+        Err(e) => return Response::error(400, &e),
+    };
+    let Some(lease_id) = doc.get("lease_id").and_then(Json::as_u64)
+    else {
+        return Response::error(400, "complete body needs a lease_id");
+    };
+    let Some(sha) = doc.get("sha256").and_then(Json::as_str) else {
+        return Response::error(
+            400,
+            "complete body needs the row's sha256",
+        );
+    };
+    let Some(row) = doc.get("row") else {
+        return Response::error(400, "complete body needs the row");
+    };
+    match state.fleet.complete(lease_id, sha, row) {
+        CompleteOutcome::Accepted => {
+            let mut o = Json::obj();
+            o.set("accepted", Json::from(true));
+            fleet_json(200, o)
+        }
+        CompleteOutcome::Unknown => Response::error(
+            404,
+            "no such lease (expired, completed, or never granted)",
+        ),
+        CompleteOutcome::Rejected(e) => Response::error(400, &e),
     }
 }
 
@@ -288,7 +484,11 @@ fn sweep_sync(
 ) -> Response {
     let replays = scenarios.len();
     let (result, outcome) = state.cache.get_or_compute(&key, || {
-        let rows = state.pool.run_matrix(&resolved, &scenarios)?;
+        // fleet-aware dispatch: remote workers drain the matrix when
+        // any are registered, the local pool otherwise — either way
+        // the rows land in the same cache under the same key
+        let rows =
+            state.fleet.run_matrix(&state.pool, &resolved, &scenarios)?;
         // count only completed computations, after the replay succeeds
         state.metrics.on_sweep_computed(
             replays,
@@ -373,6 +573,7 @@ fn sweep_async(
 #[cfg(test)]
 mod tests {
     use super::super::cache::ResultCache;
+    use super::super::fleet::{FleetOptions, FleetTable};
     use super::super::jobs::{JobTable, ReplayPool};
     use super::super::metrics::Metrics;
     use super::*;
@@ -393,15 +594,17 @@ mod tests {
     fn tiny_state() -> AppState {
         let cache = Arc::new(ResultCache::new(1 << 20));
         let pool = Arc::new(ReplayPool::new(2));
+        let fleet = Arc::new(FleetTable::new(FleetOptions::default()));
         let metrics = Arc::new(Metrics::new());
         let jobs = JobTable::start(
             4,
             1,
             Arc::clone(&cache),
             Arc::clone(&pool),
+            Arc::clone(&fleet),
             Arc::clone(&metrics),
         );
-        AppState { base: tiny_base(), cache, pool, metrics, jobs }
+        AppState { base: tiny_base(), cache, pool, fleet, metrics, jobs }
     }
 
     fn get(path: &str) -> Request {
@@ -701,6 +904,155 @@ mod tests {
             text.contains("icecloud_result_store_entries 0"),
             "{text}"
         );
+    }
+
+    #[test]
+    fn fleet_routes_enforce_method_query_and_body_contracts() {
+        let state = tiny_state();
+        // wrong method: 405 with the Allow header
+        for path in [
+            "/fleet/register",
+            "/fleet/lease",
+            "/fleet/heartbeat",
+            "/fleet/complete",
+        ] {
+            let resp = route(&state, &get(path));
+            assert_eq!(resp.status, 405, "GET {path}");
+            assert_eq!(resp.header_value("Allow"), Some("POST"));
+        }
+        // query parameters are a hard error, not a silent no-op
+        let resp = route(
+            &state,
+            &post(
+                "/fleet/lease?fast=1",
+                "application/json",
+                r#"{"worker_id":"w1"}"#,
+            ),
+        );
+        assert_eq!(resp.status, 400);
+        // malformed bodies
+        for body in [
+            "",
+            "[1, 2]",
+            "{\"worker_id\": \"w1\"}",            // missing slots
+            "{\"worker_id\": \"w1\", \"slots\": 0}", // zero slots
+            "{\"worker_id\": \"\", \"slots\": 1}", // empty id
+            "{\"slots\": 1}",                      // missing id
+        ] {
+            let resp = route(
+                &state,
+                &post("/fleet/register", "application/json", body),
+            );
+            assert_eq!(resp.status, 400, "register body {body:?}");
+        }
+        assert_eq!(state.fleet.stats().workers_registered, 0);
+    }
+
+    #[test]
+    fn fleet_lease_lifecycle_over_http() {
+        let state = tiny_state();
+        // an unregistered worker cannot lease
+        let resp = route(
+            &state,
+            &post(
+                "/fleet/lease",
+                "application/json",
+                r#"{"worker_id":"ghost"}"#,
+            ),
+        );
+        assert_eq!(resp.status, 404);
+
+        let resp = route(
+            &state,
+            &post(
+                "/fleet/register",
+                "application/json",
+                r#"{"worker_id":"w1","slots":2}"#,
+            ),
+        );
+        assert_eq!(resp.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&resp.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert!(
+            doc.get("heartbeat_every_ms").unwrap().as_u64().unwrap()
+                >= 1
+        );
+
+        // nothing queued yet: idle poll
+        let lease_body = r#"{"worker_id":"w1"}"#;
+        let resp = route(
+            &state,
+            &post("/fleet/lease", "application/json", lease_body),
+        );
+        assert_eq!(resp.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&resp.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert!(doc.get("idle").is_some(), "no pending units yet");
+
+        // queue one unit; the next lease grants it
+        let _flight = state
+            .fleet
+            .begin_sweep(&state.base, &[ScenarioConfig::named("u")]);
+        let resp = route(
+            &state,
+            &post("/fleet/lease", "application/json", lease_body),
+        );
+        assert_eq!(resp.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&resp.body).unwrap().trim(),
+        )
+        .unwrap();
+        let lease_id =
+            doc.get("lease_id").unwrap().as_u64().unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("u"));
+        assert!(
+            doc.get("config").unwrap().as_obj().is_some(),
+            "grant carries the canonical config"
+        );
+
+        // heartbeat extends it; an unknown lease 404s, table untouched
+        let hb = format!("{{\"lease_id\": {lease_id}}}");
+        let resp = route(
+            &state,
+            &post("/fleet/heartbeat", "application/json", &hb),
+        );
+        assert_eq!(resp.status, 200);
+        let resp = route(
+            &state,
+            &post(
+                "/fleet/heartbeat",
+                "application/json",
+                r#"{"lease_id": 999}"#,
+            ),
+        );
+        assert_eq!(resp.status, 404);
+        assert_eq!(state.fleet.stats().leases_outstanding, 1);
+
+        // a corrupt completion rejects with 400 and requeues the unit
+        let done = format!(
+            "{{\"lease_id\": {lease_id}, \"sha256\": \"{}\", \"row\": {{}}}}",
+            "0".repeat(64)
+        );
+        let resp = route(
+            &state,
+            &post("/fleet/complete", "application/json", &done),
+        );
+        assert_eq!(resp.status, 400);
+        let stats = state.fleet.stats();
+        assert_eq!(stats.leases_rejected, 1);
+        assert_eq!(stats.units_pending, 1, "rejected unit requeued");
+        assert_eq!(stats.leases_outstanding, 0);
+
+        // completing a lease that no longer exists is a 404
+        let resp = route(
+            &state,
+            &post("/fleet/complete", "application/json", &done),
+        );
+        assert_eq!(resp.status, 404);
     }
 
     impl Response {

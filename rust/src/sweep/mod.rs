@@ -25,5 +25,6 @@ pub mod runner;
 
 pub use matrix::{builtin_matrix, parse_spec, parse_spec_json};
 pub use runner::{
-    engine_thread_budget, run_matrix, run_scenario, summarize, ScenarioSummary,
+    engine_thread_budget, run_matrix, run_scenario, run_unit,
+    summary_from_wire, summary_to_wire, summarize, ScenarioSummary,
 };

@@ -12,6 +12,7 @@ use crate::cloudbank::BudgetSnapshot;
 use crate::config::CampaignConfig;
 use crate::coordinator::{Campaign, CampaignResult, ScenarioConfig};
 use crate::osg::UsageAccounting;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -108,17 +109,150 @@ pub fn summarize(
     }
 }
 
+/// Replay one *already-applied* config to its summary row.  This is
+/// the fleet's unit of work: a coordinator leases `(name, cfg)` pairs
+/// and a worker needs no scenario-merge logic — just this function.
+pub fn run_unit(name: &str, cfg: &CampaignConfig) -> ScenarioSummary {
+    let result = Campaign::new(cfg.clone()).run();
+    summarize(name, cfg, &result)
+}
+
 /// Replay one scenario against `base` to its summary row.  This is the
 /// single underlying unit of work shared by every driver: the one-shot
-/// CLI sweep below, and the persistent replay pool behind
-/// `icecloud serve` (`crate::server::jobs`).
+/// CLI sweep below, the persistent replay pool behind `icecloud serve`
+/// (`crate::server::jobs`), and — via [`run_unit`] on the applied
+/// config — the distributed fleet (`crate::server::fleet`).
 pub fn run_scenario(
     base: &CampaignConfig,
     scenario: &ScenarioConfig,
 ) -> ScenarioSummary {
     let cfg = scenario.apply(base);
-    let result = Campaign::new(cfg.clone()).run();
-    summarize(&scenario.name, &cfg, &result)
+    run_unit(&scenario.name, &cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec for fleet result transport
+// ---------------------------------------------------------------------------
+//
+// The fleet's correctness story is "any worker produces byte-identical
+// results", so the row encoding must be *lossless*: `Json::Num` is an
+// f64 whose writer emits NaN as `null` and whose parser would round
+// large u64s — both would break the hash compare.  Every f64 (and the
+// u64 seed, which may exceed 2^53) therefore travels as its exact
+// 64-bit pattern in 16 lowercase hex chars; small counters stay plain
+// numbers.  `summary_from_wire(summary_to_wire(row)) == row` holds for
+// every row, including NaN fields like `cost_per_eflop_hour`.
+
+fn bits_to_json(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn u64_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn bits_from_json(j: &Json, what: &str) -> Result<f64, String> {
+    u64_from_json(j, what).map(f64::from_bits)
+}
+
+fn u64_from_json(j: &Json, what: &str) -> Result<u64, String> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| format!("{what} must be a 16-hex-char string"))?;
+    if s.len() != 16 {
+        return Err(format!("{what} must be a 16-hex-char string"));
+    }
+    u64::from_str_radix(s, 16)
+        .map_err(|_| format!("{what} must be a 16-hex-char string"))
+}
+
+fn wire_field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("wire row missing '{key}'"))
+}
+
+fn wire_u64(j: &Json, key: &str) -> Result<u64, String> {
+    wire_field(j, key)?
+        .as_u64()
+        .ok_or_else(|| format!("wire row '{key}' must be a non-negative integer"))
+}
+
+/// Encode a summary row for fleet transport (lossless, deterministic).
+pub fn summary_to_wire(row: &ScenarioSummary) -> Json {
+    let mut snap = Json::obj();
+    snap.set("at", Json::from(row.snapshot.at));
+    snap.set("budget_usd", bits_to_json(row.snapshot.budget_usd));
+    snap.set("spent_usd", bits_to_json(row.snapshot.spent_usd));
+    snap.set("aws_usd", bits_to_json(row.snapshot.aws_usd));
+    snap.set("gcp_usd", bits_to_json(row.snapshot.gcp_usd));
+    snap.set("azure_usd", bits_to_json(row.snapshot.azure_usd));
+
+    let mut o = Json::obj();
+    o.set("name", Json::from(row.name.as_str()));
+    o.set("seed", u64_to_json(row.seed));
+    o.set("duration_days", bits_to_json(row.duration_days));
+    o.set("snapshot", snap);
+    o.set("gpu_days", bits_to_json(row.gpu_days));
+    o.set("eflop_hours", bits_to_json(row.eflop_hours));
+    o.set("cost_per_eflop_hour", bits_to_json(row.cost_per_eflop_hour));
+    o.set("peak_gpus", bits_to_json(row.peak_gpus));
+    o.set("mean_gpus", bits_to_json(row.mean_gpus));
+    o.set("completed", Json::from(row.completed));
+    o.set("interrupted", Json::from(row.interrupted));
+    o.set("goodput_fraction", bits_to_json(row.goodput_fraction));
+    o.set("nat_drops", Json::from(row.nat_drops));
+    o.set("preemptions", Json::from(row.preemptions));
+    o.set("resumes", Json::from(row.resumes));
+    o.set("goodput_hours", bits_to_json(row.goodput_hours));
+    o.set("wasted_hours", bits_to_json(row.wasted_hours));
+    o.set("expansion_factor", bits_to_json(row.expansion_factor));
+    o.set("alerts", Json::from(row.alerts));
+    o
+}
+
+/// Decode a fleet wire row.  Strict: every field required, every hex
+/// pattern exact — a malformed row must be rejected, never guessed at.
+pub fn summary_from_wire(j: &Json) -> Result<ScenarioSummary, String> {
+    let snap = wire_field(j, "snapshot")?;
+    Ok(ScenarioSummary {
+        name: wire_field(j, "name")?
+            .as_str()
+            .ok_or("wire row 'name' must be a string")?
+            .to_string(),
+        seed: u64_from_json(wire_field(j, "seed")?, "seed")?,
+        duration_days: bits_from_json(wire_field(j, "duration_days")?, "duration_days")?,
+        snapshot: BudgetSnapshot {
+            at: wire_u64(snap, "at")?,
+            budget_usd: bits_from_json(wire_field(snap, "budget_usd")?, "budget_usd")?,
+            spent_usd: bits_from_json(wire_field(snap, "spent_usd")?, "spent_usd")?,
+            aws_usd: bits_from_json(wire_field(snap, "aws_usd")?, "aws_usd")?,
+            gcp_usd: bits_from_json(wire_field(snap, "gcp_usd")?, "gcp_usd")?,
+            azure_usd: bits_from_json(wire_field(snap, "azure_usd")?, "azure_usd")?,
+        },
+        gpu_days: bits_from_json(wire_field(j, "gpu_days")?, "gpu_days")?,
+        eflop_hours: bits_from_json(wire_field(j, "eflop_hours")?, "eflop_hours")?,
+        cost_per_eflop_hour: bits_from_json(
+            wire_field(j, "cost_per_eflop_hour")?,
+            "cost_per_eflop_hour",
+        )?,
+        peak_gpus: bits_from_json(wire_field(j, "peak_gpus")?, "peak_gpus")?,
+        mean_gpus: bits_from_json(wire_field(j, "mean_gpus")?, "mean_gpus")?,
+        completed: wire_u64(j, "completed")?,
+        interrupted: wire_u64(j, "interrupted")?,
+        goodput_fraction: bits_from_json(
+            wire_field(j, "goodput_fraction")?,
+            "goodput_fraction",
+        )?,
+        nat_drops: wire_u64(j, "nat_drops")?,
+        preemptions: wire_u64(j, "preemptions")?,
+        resumes: wire_u64(j, "resumes")?,
+        goodput_hours: bits_from_json(wire_field(j, "goodput_hours")?, "goodput_hours")?,
+        wasted_hours: bits_from_json(wire_field(j, "wasted_hours")?, "wasted_hours")?,
+        expansion_factor: bits_from_json(
+            wire_field(j, "expansion_factor")?,
+            "expansion_factor",
+        )?,
+        alerts: wire_u64(j, "alerts")? as usize,
+    })
 }
 
 /// Engine threads each of `workers` concurrent replays may use without
@@ -259,6 +393,84 @@ mod tests {
             run_matrix(&loud, &scenarios, 2),
             run_matrix(&quiet, &scenarios, 2)
         );
+    }
+
+    #[test]
+    fn run_unit_matches_run_scenario() {
+        let base = small_base();
+        let mut s = ScenarioConfig::named("unit");
+        s.budget_usd = Some(25.0);
+        let via_scenario = run_scenario(&base, &s);
+        let via_unit = run_unit("unit", &s.apply(&base));
+        assert_eq!(via_scenario, via_unit);
+    }
+
+    #[test]
+    fn wire_codec_round_trips_a_real_row() {
+        let base = small_base();
+        let row = run_scenario(&base, &ScenarioConfig::named("wire"));
+        let wire = summary_to_wire(&row);
+        // the wire bytes survive a JSON parse/re-render cycle exactly
+        let parsed =
+            crate::util::json::parse(&wire.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.to_string_compact(),
+            wire.to_string_compact(),
+            "wire encoding must be parse-stable"
+        );
+        let back = summary_from_wire(&parsed).unwrap();
+        assert_eq!(back, row);
+    }
+
+    #[test]
+    fn wire_codec_preserves_nan_and_extreme_values() {
+        let base = small_base();
+        let mut row = run_scenario(&base, &ScenarioConfig::named("nan"));
+        row.cost_per_eflop_hour = f64::NAN;
+        row.expansion_factor = f64::INFINITY;
+        row.goodput_fraction = -0.0;
+        row.seed = u64::MAX; // > 2^53: would be mangled by a plain Num
+        let wire = summary_to_wire(&row);
+        let parsed =
+            crate::util::json::parse(&wire.to_string_compact()).unwrap();
+        let back = summary_from_wire(&parsed).unwrap();
+        assert!(back.cost_per_eflop_hour.is_nan());
+        assert_eq!(
+            back.cost_per_eflop_hour.to_bits(),
+            row.cost_per_eflop_hour.to_bits()
+        );
+        assert_eq!(back.expansion_factor, f64::INFINITY);
+        assert_eq!(back.goodput_fraction.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back.seed, u64::MAX);
+    }
+
+    #[test]
+    fn wire_codec_rejects_malformed_rows() {
+        let base = small_base();
+        let row = run_scenario(&base, &ScenarioConfig::named("strict"));
+        let good = summary_to_wire(&row);
+
+        // missing field
+        let mut missing = good.clone();
+        if let crate::util::json::Json::Obj(m) = &mut missing {
+            m.remove("gpu_days");
+        }
+        assert!(summary_from_wire(&missing).is_err());
+
+        // truncated hex pattern
+        let mut short = good.clone();
+        short.set("gpu_days", crate::util::json::Json::from("abc"));
+        assert!(summary_from_wire(&short).is_err());
+
+        // non-hex pattern of the right length
+        let mut junk = good.clone();
+        junk.set("seed", crate::util::json::Json::from("zzzzzzzzzzzzzzzz"));
+        assert!(summary_from_wire(&junk).is_err());
+
+        // counter with a fraction
+        let mut frac = good;
+        frac.set("completed", crate::util::json::Json::from(1.5));
+        assert!(summary_from_wire(&frac).is_err());
     }
 
     #[test]

@@ -54,6 +54,16 @@ impl Args {
         }
     }
 
+    /// Strict float option; same contract as [`require_u64`](Args::require_u64).
+    pub fn require_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<f64>().map(Some).map_err(|_| {
+                format!("--{name} must be a number (got '{raw}')")
+            }),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -186,6 +196,16 @@ mod tests {
         let a = cmd().parse(&argv(&["--seed", "3oo"])).unwrap();
         let err = a.require_u64("seed").unwrap_err();
         assert!(err.contains("--seed") && err.contains("3oo"), "{err}");
+    }
+
+    #[test]
+    fn require_f64_is_strict() {
+        let a = cmd().parse(&argv(&["--seed", "0.25"])).unwrap();
+        assert_eq!(a.require_f64("seed").unwrap(), Some(0.25));
+        assert_eq!(a.require_f64("out").unwrap(), None);
+        let a = cmd().parse(&argv(&["--seed", "fast"])).unwrap();
+        let err = a.require_f64("seed").unwrap_err();
+        assert!(err.contains("--seed") && err.contains("fast"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Fleet end-to-end: a coordinator and real worker threads speaking the
+//! lease/heartbeat protocol over real HTTP connections.
+//!
+//! The headline property is the paper's reproducibility claim carried
+//! into distributed execution: a sweep drained by remote workers — even
+//! under worker churn (a worker dying mid-lease, exactly how a
+//! preempted spot instance goes) — returns the *byte-identical* body a
+//! single-process sweep of the same spec produces.  The coordinator
+//! earns that by validating every returned row (sha256 of its own
+//! re-rendering, plus sampled local re-replays) before admitting it
+//! through the same content-addressed cache path local results use.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{
+    FleetOptions, ServeConfig, Server, ServerHandle, WorkerOptions,
+    WorkerReport,
+};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Three scenarios: enough for one to be orphaned mid-lease while the
+/// others drain, small enough to replay in test time.
+const SPEC: &str =
+    "[scenario.a]\n\n[scenario.b]\nseed = 9\n\n[scenario.c]\nbudget_usd = 40.0\n";
+const SPEC_PAIR: &str = "[scenario.a]\n\n[scenario.b]\nseed = 4\n";
+const SPEC_ONE: &str = "[scenario.solo]\nseed = 11\n";
+
+fn tiny_base() -> CampaignConfig {
+    let mut base = CampaignConfig::default();
+    base.duration_s = 2 * HOUR;
+    base.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    base.outage = None;
+    base.onprem.slots = 8;
+    base.generator.min_backlog = 30;
+    base
+}
+
+fn start_server(fleet: FleetOptions) -> (ServerHandle, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        fleet,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    (server.spawn().unwrap(), addr)
+}
+
+/// Sub-second lease timing so churn recovery happens in test time.
+fn fast_fleet(spot_check_rate: f64) -> FleetOptions {
+    FleetOptions {
+        lease_ttl: Duration::from_millis(2_000),
+        heartbeat_every: Duration::from_millis(250),
+        spot_check_rate,
+    }
+}
+
+fn spawn_worker(
+    addr: &str,
+    id: &str,
+    fail_after_leases: Option<u64>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<Result<WorkerReport, String>> {
+    let opts = WorkerOptions {
+        coordinator: addr.to_string(),
+        worker_id: id.to_string(),
+        slots: 1,
+        poll: Duration::from_millis(25),
+        fail_after_leases,
+    };
+    std::thread::spawn(move || {
+        icecloud::server::fleet::run_worker(&opts, &stop)
+    })
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..2_000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// One-process reference bytes for a spec: a fleet-less server computes
+/// the sweep on its local replay pool.
+fn local_baseline(spec: &str) -> Vec<u8> {
+    let (handle, addr) = start_server(FleetOptions::default());
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    handle.shutdown();
+    resp.body
+}
+
+/// The flagship fault-injection scenario: three workers, one killed
+/// mid-lease (stops heartbeating, drops its connection, never
+/// completes).  The sweep must still finish, the orphaned unit must be
+/// requeued onto a survivor, and the final body must be byte-identical
+/// to a single-process sweep of the same spec.
+#[test]
+fn fleet_sweep_is_byte_identical_under_worker_churn() {
+    let want = local_baseline(SPEC);
+
+    let (handle, addr) = start_server(fast_fleet(0.0));
+    let stop = Arc::new(AtomicBool::new(false));
+    // the doomed worker vanishes right after its first lease grant —
+    // no heartbeat, no completion, no goodbye
+    let doomed = spawn_worker(&addr, "doomed", Some(1), Arc::clone(&stop));
+    wait_until("the doomed worker to register", || {
+        handle.state().fleet.stats().workers_registered >= 1
+    });
+
+    // the sweep blocks its connection until every row is home
+    let sweep_addr = addr.clone();
+    let sweep = std::thread::spawn(move || {
+        client_request(
+            &sweep_addr,
+            "POST",
+            "/sweep",
+            Some("application/toml"),
+            SPEC.as_bytes(),
+        )
+        .unwrap()
+    });
+    wait_until("the doomed worker to take a lease", || {
+        handle.state().fleet.stats().leases_granted >= 1
+    });
+    let report = doomed.join().unwrap().unwrap();
+    assert!(report.leases >= 1);
+    assert_eq!(report.completed, 0, "the doomed worker completes nothing");
+
+    // two healthy workers drain the rest, including the orphaned unit
+    // once its lease expires
+    let w1 = spawn_worker(&addr, "w1", None, Arc::clone(&stop));
+    let w2 = spawn_worker(&addr, "w2", None, Arc::clone(&stop));
+
+    let got = sweep.join().unwrap();
+    assert_eq!(got.status, 200, "{}", got.body_str());
+    assert_eq!(
+        got.body, want,
+        "fleet-computed sweep must be byte-identical to the local one"
+    );
+
+    let stats = handle.state().fleet.stats();
+    assert!(
+        stats.leases_expired >= 1,
+        "the orphaned lease must expire and requeue: {stats:?}"
+    );
+    assert!(
+        stats.leases_completed >= 1,
+        "survivors must complete units: {stats:?}"
+    );
+    assert_eq!(stats.units_pending, 0, "{stats:?}");
+    assert_eq!(stats.leases_outstanding, 0, "{stats:?}");
+
+    // the churn is visible on /metrics
+    let m = client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    assert_eq!(m.status, 200);
+    let text = m.body_str();
+    let expired: u64 = text
+        .lines()
+        .find(|l| l.starts_with("icecloud_fleet_leases_expired_total "))
+        .and_then(|l| l.rsplit(' ').next())
+        .expect("expired counter exposed")
+        .parse()
+        .expect("expired counter is a number");
+    assert!(expired >= 1, "{text}");
+
+    stop.store(true, Ordering::Relaxed);
+    w1.join().unwrap().unwrap();
+    w2.join().unwrap().unwrap();
+    handle.shutdown();
+}
+
+/// With `spot_check_rate = 1.0` every fleet completion is re-replayed
+/// locally before admission; honest workers pass every check and the
+/// body still matches the single-process baseline.
+#[test]
+fn spot_checks_admit_honest_workers() {
+    let want = local_baseline(SPEC_PAIR);
+
+    let (handle, addr) = start_server(FleetOptions {
+        lease_ttl: Duration::from_secs(10),
+        heartbeat_every: Duration::from_millis(250),
+        spot_check_rate: 1.0,
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let w = spawn_worker(&addr, "honest", None, Arc::clone(&stop));
+    wait_until("the worker to register", || {
+        handle.state().fleet.stats().workers_registered >= 1
+    });
+
+    let got = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        SPEC_PAIR.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(got.status, 200, "{}", got.body_str());
+    assert_eq!(got.body, want);
+
+    let stats = handle.state().fleet.stats();
+    assert!(stats.spot_checks_pass >= 1, "{stats:?}");
+    assert_eq!(stats.spot_checks_fail, 0, "{stats:?}");
+    assert_eq!(stats.leases_rejected, 0, "{stats:?}");
+
+    stop.store(true, Ordering::Relaxed);
+    w.join().unwrap().unwrap();
+    handle.shutdown();
+}
+
+/// A byzantine "worker" speaking raw HTTP returns a corrupt completion:
+/// the coordinator rejects it with 400, requeues the unit, and an
+/// honest worker finishes the sweep with the correct bytes.
+#[test]
+fn corrupted_completion_is_rejected_and_the_unit_recovers() {
+    let want = local_baseline(SPEC_ONE);
+
+    let (handle, addr) = start_server(FleetOptions {
+        lease_ttl: Duration::from_secs(10),
+        heartbeat_every: Duration::from_secs(2),
+        spot_check_rate: 0.0,
+    });
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/fleet/register",
+        Some("application/json"),
+        br#"{"worker_id": "evil", "slots": 1}"#,
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+
+    let sweep_addr = addr.clone();
+    let sweep = std::thread::spawn(move || {
+        client_request(
+            &sweep_addr,
+            "POST",
+            "/sweep",
+            Some("application/toml"),
+            SPEC_ONE.as_bytes(),
+        )
+        .unwrap()
+    });
+
+    // poll for the grant by hand
+    let mut lease_id = None;
+    for _ in 0..2_000 {
+        let resp = client_request(
+            &addr,
+            "POST",
+            "/fleet/lease",
+            Some("application/json"),
+            br#"{"worker_id": "evil"}"#,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let doc = json::parse(resp.body_str().trim()).unwrap();
+        if let Some(id) = doc.get("lease_id").and_then(json::Json::as_u64) {
+            assert_eq!(doc.get("name").unwrap().as_str(), Some("solo"));
+            lease_id = Some(id);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let lease_id = lease_id.expect("evil worker got a lease");
+
+    // a row that does not decode, under a sha that matches nothing
+    let corrupt = format!(
+        "{{\"lease_id\": {lease_id}, \"sha256\": \"{}\", \"row\": {{}}}}",
+        "0".repeat(64)
+    );
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/fleet/complete",
+        Some("application/json"),
+        corrupt.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    let stats = handle.state().fleet.stats();
+    assert!(stats.leases_rejected >= 1, "{stats:?}");
+    assert_eq!(stats.leases_completed, 0, "{stats:?}");
+
+    // an honest worker picks up the requeued unit
+    let stop = Arc::new(AtomicBool::new(false));
+    let w = spawn_worker(&addr, "honest", None, Arc::clone(&stop));
+    let got = sweep.join().unwrap();
+    assert_eq!(got.status, 200, "{}", got.body_str());
+    assert_eq!(
+        got.body, want,
+        "corruption must never reach the result cache"
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    w.join().unwrap().unwrap();
+    handle.shutdown();
+}
+
+/// Adversarial routing, over real connections: unknown query params,
+/// wrong methods, oversized bodies and unknown lease ids all bounce
+/// with the right status — and none of them perturb the fleet table.
+#[test]
+fn fleet_routes_are_strict_over_http() {
+    let (handle, addr) = start_server(FleetOptions::default());
+    let before = handle.state().fleet.stats();
+
+    // unknown query parameter: 400, not a silent no-op
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/fleet/lease?priority=high",
+        Some("application/json"),
+        br#"{"worker_id": "w"}"#,
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+
+    // wrong method: 405 + Allow
+    let resp =
+        client_request(&addr, "GET", "/fleet/heartbeat", None, b"").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("POST"));
+
+    // oversized body: 413 straight from the HTTP layer
+    let huge = vec![b'a'; 2 * 1024 * 1024];
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/fleet/complete",
+        Some("application/json"),
+        &huge,
+    )
+    .unwrap();
+    assert_eq!(resp.status, 413);
+
+    // heartbeat for a lease that never existed: 404, table untouched
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/fleet/heartbeat",
+        Some("application/json"),
+        br#"{"lease_id": 7}"#,
+    )
+    .unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body_str());
+
+    assert_eq!(
+        handle.state().fleet.stats(),
+        before,
+        "adversarial requests must not perturb the fleet table"
+    );
+    handle.shutdown();
+}

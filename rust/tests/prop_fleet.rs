@@ -1,0 +1,298 @@
+//! Property tests for the fleet lease table (`server::fleet`).
+//!
+//! Random register/lease/heartbeat/expire/complete sequences, with two
+//! invariants checked after *every* operation:
+//!
+//!   1. No unit is ever granted to two live workers at once, and no
+//!      unit is ever lost: at any instant the pending queue, the live
+//!      leases, and the delivered result slots partition the sweep's
+//!      unit set exactly.
+//!   2. Lease conservation: `granted == completed + expired + rejected
+//!      + outstanding` — the accounting identity `/metrics` exposes,
+//!      so operators can audit fleet health from counters alone.
+//!
+//! A second property drives any prefix of churn to completion: after an
+//! arbitrary op sequence, an honest drain loop always finishes the
+//! sweep with every slot filled.
+
+use icecloud::cloudbank::BudgetSnapshot;
+use icecloud::config::CampaignConfig;
+use icecloud::coordinator::ScenarioConfig;
+use icecloud::server::fleet::{CompleteOutcome, FleetOptions, FleetTable};
+use icecloud::server::fleet::SweepFlight;
+use icecloud::sweep::{summary_to_wire, ScenarioSummary};
+use icecloud::util::proptest::{ensure, forall, shrink_vec, PropResult};
+use icecloud::util::sha256;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How many scenario units each generated sweep carries.
+const UNITS: usize = 5;
+/// The worker pool the ops draw from.
+const WORKERS: [&str; 3] = ["w0", "w1", "w2"];
+
+/// One protocol operation.  Index arguments are taken modulo the live
+/// set at execution time, so every generated sequence is executable.
+#[derive(Clone, Debug)]
+enum Op {
+    /// Register (or re-register) worker `i % 3`.
+    Register(u8),
+    /// Worker `i % 3` asks for a lease (may be unknown → refused).
+    Lease(u8),
+    /// Heartbeat live lease `k`; with none live, heartbeat a bogus id.
+    Heartbeat(u8),
+    /// Force-expire live lease `k` (the missed-heartbeat path).
+    Expire(u8),
+    /// Honestly complete live lease `k`.
+    Complete(u8),
+}
+
+fn gen_ops(r: &mut icecloud::util::rng::Rng) -> Vec<Op> {
+    let len = r.below(40) as usize;
+    (0..len)
+        .map(|_| {
+            let arg = r.below(6) as u8;
+            match r.below(5) {
+                0 => Op::Register(arg),
+                1 => Op::Lease(arg),
+                2 => Op::Heartbeat(arg),
+                3 => Op::Expire(arg),
+                _ => Op::Complete(arg),
+            }
+        })
+        .collect()
+}
+
+/// A wall-clock-proof table: the TTL is so long that only explicit
+/// `Expire` ops ever expire a lease, making the model deterministic.
+fn table() -> FleetTable {
+    FleetTable::new(FleetOptions {
+        lease_ttl: Duration::from_secs(3_600),
+        heartbeat_every: Duration::from_secs(1_200),
+        spot_check_rate: 0.0,
+    })
+}
+
+/// A syntactically valid summary row for `name`; completions built
+/// from it pass the coordinator's sha + decode + name validation.
+fn fake_row(name: &str) -> ScenarioSummary {
+    ScenarioSummary {
+        name: name.to_string(),
+        seed: 7,
+        duration_days: 0.25,
+        snapshot: BudgetSnapshot {
+            at: 900,
+            budget_usd: 58_000.0,
+            spent_usd: 12.5,
+            aws_usd: 4.0,
+            gcp_usd: 4.0,
+            azure_usd: 4.5,
+        },
+        gpu_days: 1.5,
+        eflop_hours: 0.002,
+        cost_per_eflop_hour: 6_250.0,
+        peak_gpus: 10.0,
+        mean_gpus: 8.0,
+        completed: 120,
+        interrupted: 3,
+        goodput_fraction: 0.97,
+        nat_drops: 0,
+        preemptions: 2,
+        resumes: 2,
+        goodput_hours: 36.0,
+        wasted_hours: 1.0,
+        expansion_factor: 1.1,
+        alerts: 1,
+    }
+}
+
+fn honest_complete(fleet: &FleetTable, lease_id: u64, name: &str) -> CompleteOutcome {
+    let wire = summary_to_wire(&fake_row(name));
+    let sha = sha256::hex_digest(wire.to_string_compact().as_bytes());
+    fleet.complete(lease_id, &sha, &wire)
+}
+
+/// The two invariants, checked against the table's own introspection.
+/// `live` is the model's view of outstanding (lease_id, unit name).
+fn check_invariants(
+    fleet: &FleetTable,
+    flight: &SweepFlight,
+    live: &[(u64, String)],
+) -> PropResult {
+    let s = fleet.stats();
+    ensure(
+        s.leases_granted
+            == s.leases_completed
+                + s.leases_expired
+                + s.leases_rejected
+                + s.leases_outstanding as u64,
+        format!("lease conservation violated: {s:?}"),
+    )?;
+    ensure(
+        s.leases_rejected == 0,
+        format!("honest completions must never be rejected: {s:?}"),
+    )?;
+    ensure(
+        s.leases_outstanding == live.len(),
+        format!("outstanding {} != model {}", s.leases_outstanding, live.len()),
+    )?;
+
+    let leased = fleet.leased_unit_ids();
+    let mut deduped = leased.clone();
+    deduped.sort_unstable();
+    deduped.dedup();
+    ensure(
+        deduped.len() == leased.len(),
+        format!("unit granted to two live workers at once: {leased:?}"),
+    )?;
+
+    // pending ∪ leased ∪ delivered must partition the unit set exactly
+    // (the first sweep on a fresh table numbers its units 0..UNITS, and
+    // result slot i belongs to unit i)
+    let pending = fleet.pending_unit_ids();
+    let filled = flight.filled_slots();
+    let mut all: Vec<u64> = pending
+        .iter()
+        .copied()
+        .chain(leased.iter().copied())
+        .chain(filled.iter().map(|&slot| slot as u64))
+        .collect();
+    all.sort_unstable();
+    let expect: Vec<u64> = (0..UNITS as u64).collect();
+    ensure(
+        all == expect,
+        format!(
+            "units lost or duplicated: pending={pending:?} leased={leased:?} \
+             delivered={filled:?}"
+        ),
+    )
+}
+
+/// Run one op sequence against a fresh table, checking invariants
+/// after every step.  Returns the table, flight, and live-lease model
+/// so callers can keep going (e.g. drain to completion).
+fn run_ops(
+    ops: &[Op],
+) -> Result<(FleetTable, Arc<SweepFlight>, Vec<(u64, String)>), String> {
+    let fleet = table();
+    let base = CampaignConfig::default();
+    let scenarios: Vec<ScenarioConfig> = (0..UNITS)
+        .map(|i| ScenarioConfig::named(&format!("u{i}")))
+        .collect();
+    let flight = fleet.begin_sweep(&base, &scenarios);
+    let mut live: Vec<(u64, String)> = Vec::new();
+
+    for op in ops {
+        match op {
+            Op::Register(w) => {
+                fleet.register(WORKERS[*w as usize % WORKERS.len()], 1);
+            }
+            Op::Lease(w) => {
+                let wid = WORKERS[*w as usize % WORKERS.len()];
+                match fleet.lease(wid) {
+                    // unknown workers are refused, registered ones may
+                    // idle if nothing is pending — both are fine
+                    Err(_) | Ok(None) => {}
+                    Ok(Some(grant)) => {
+                        live.push((grant.lease_id, grant.name.clone()));
+                    }
+                }
+            }
+            Op::Heartbeat(k) => {
+                if live.is_empty() {
+                    ensure(
+                        fleet.heartbeat(u64::MAX).is_none(),
+                        "bogus lease id must not heartbeat",
+                    )?;
+                } else {
+                    let id = live[*k as usize % live.len()].0;
+                    ensure(
+                        fleet.heartbeat(id).is_some(),
+                        format!("live lease {id} must accept a heartbeat"),
+                    )?;
+                }
+            }
+            Op::Expire(k) => {
+                if !live.is_empty() {
+                    let (id, _) = live.remove(*k as usize % live.len());
+                    ensure(
+                        fleet.expire_lease(id),
+                        format!("live lease {id} must be expirable"),
+                    )?;
+                }
+            }
+            Op::Complete(k) => {
+                if !live.is_empty() {
+                    let (id, name) = live.remove(*k as usize % live.len());
+                    let out = honest_complete(&fleet, id, &name);
+                    ensure(
+                        out == CompleteOutcome::Accepted,
+                        format!("honest completion of {id} got {out:?}"),
+                    )?;
+                }
+            }
+        }
+        check_invariants(&fleet, &flight, &live)?;
+    }
+    Ok((fleet, flight, live))
+}
+
+#[test]
+fn random_op_sequences_never_lose_or_double_grant_units() {
+    forall(
+        "fleet op-sequence invariants",
+        0xF1EE7,
+        150,
+        gen_ops,
+        shrink_vec,
+        |ops| run_ops(ops).map(|_| ()),
+    );
+}
+
+/// After any churn prefix, an honest worker can always drain the sweep:
+/// expire whatever is still outstanding, then lease/complete until every
+/// result slot is filled.  Bounded iterations — a unit leaked by the
+/// table would fail the final check rather than hang the test.
+#[test]
+fn any_churn_prefix_still_drains_to_completion() {
+    forall(
+        "fleet drains after churn",
+        0xD12A1,
+        80,
+        gen_ops,
+        shrink_vec,
+        |ops| {
+            let (fleet, flight, live) = run_ops(ops)?;
+            for (id, _) in &live {
+                ensure(fleet.expire_lease(*id), "outstanding lease expirable")?;
+            }
+            fleet.register("drainer", 1);
+            for _ in 0..(2 * UNITS) {
+                match fleet.lease("drainer")? {
+                    None => break,
+                    Some(grant) => {
+                        let out = honest_complete(
+                            &fleet,
+                            grant.lease_id,
+                            &grant.name,
+                        );
+                        ensure(
+                            out == CompleteOutcome::Accepted,
+                            format!("drain completion got {out:?}"),
+                        )?;
+                    }
+                }
+            }
+            let filled = flight.filled_slots();
+            ensure(
+                filled.len() == UNITS,
+                format!("sweep did not drain: delivered slots {filled:?}"),
+            )?;
+            let s = fleet.stats();
+            ensure(
+                s.leases_outstanding == 0 && s.units_pending == 0,
+                format!("drained table not quiescent: {s:?}"),
+            )
+        },
+    );
+}

@@ -43,6 +43,7 @@ fn default_server() -> (ServerHandle, String) {
         job_runners: 2,
         store_dir: None,
         base: tiny_base(),
+        ..ServeConfig::default()
     })
 }
 
@@ -221,6 +222,7 @@ fn flooded_queue_sheds_with_429_and_healthz_stays_up() {
         job_runners: 1,
         store_dir: None,
         base: tiny_base(),
+        ..ServeConfig::default()
     });
 
     // wedge the single runner on a genuinely slow replay (days of sim

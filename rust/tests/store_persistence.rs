@@ -48,6 +48,7 @@ fn start_server(store_dir: &std::path::Path) -> (ServerHandle, String) {
         job_runners: 1,
         store_dir: Some(store_dir.to_path_buf()),
         base: tiny_base(),
+        ..ServeConfig::default()
     })
     .expect("bind ephemeral port");
     let handle = server.spawn().expect("spawn server");
