@@ -15,15 +15,22 @@
 //! "fleet-2w" re-runs the cold-replay shape with two in-process fleet
 //! workers leasing the units over HTTP, so the line prices the whole
 //! lease/heartbeat/complete round trip against local dispatch.
+//! "events-stream-{0,4}sub" publishes onto the live event bus with no
+//! subscribers and with four attached SSE streams, pricing the bus's
+//! publishers-never-block contract.
 //!
-//! Regenerate the committed baseline (BENCH_pr6.json) with:
+//! Regenerate the committed baseline (BENCH_pr7.json) with:
 //!   tools/bench_baseline.sh
 
 use icecloud::config::{CampaignConfig, RampStep};
 use icecloud::server::http::client_request;
-use icecloud::server::{FleetOptions, ServeConfig, Server, WorkerOptions};
+use icecloud::server::{
+    EventKind, FleetOptions, ServeConfig, Server, WorkerOptions,
+};
 use icecloud::sim::{DAY, HOUR};
 use icecloud::util::bench::Bench;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -36,6 +43,27 @@ fn tiny_base() -> CampaignConfig {
     c.onprem.slots = 8;
     c.generator.min_backlog = 30;
     c
+}
+
+/// A background SSE reader that drains `/events` until the server
+/// closes the stream (on shutdown).
+fn spawn_sse_reader(addr: &str) -> std::thread::JoinHandle<()> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&addr).expect("connect sse");
+        s.write_all(
+            format!("GET /events HTTP/1.1\r\nHost: {addr}\r\n\r\n")
+                .as_bytes(),
+        )
+        .expect("send sse request");
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    })
 }
 
 fn post_sweep(addr: &str, path: &str, spec: &str) -> u16 {
@@ -69,6 +97,9 @@ fn main() {
         job_runners: 2,
         store_dir: Some(store_root.clone()),
         fleet: FleetOptions::default(),
+        events_ring: 1024,
+        sample_every_s: 5,
+        jobs_keep: 1024,
         base: tiny_base(),
     })
     .expect("bind");
@@ -142,6 +173,28 @@ fn main() {
         let _ = w.join().expect("worker thread");
     }
 
+    // the bus contract priced: a publish with nobody watching is a
+    // counter bump and a ring append...
+    b.run_throughput("serve/events-stream-0sub", 1.0, "events", || {
+        handle
+            .state()
+            .events
+            .publish(EventKind::JobDone { id: "bench".to_string() })
+    });
+
+    // ...and four live SSE streams must not make it meaningfully worse
+    let readers: Vec<_> =
+        (0..4).map(|_| spawn_sse_reader(&addr)).collect();
+    while handle.state().events.subscriber_count() < 4 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    b.run_throughput("serve/events-stream-4sub", 1.0, "events", || {
+        handle
+            .state()
+            .events
+            .publish(EventKind::JobDone { id: "bench".to_string() })
+    });
+
     let results = b.results();
     let cold = results[0].throughput().unwrap_or(f64::NAN);
     let cached = results[1].throughput().unwrap_or(f64::NAN);
@@ -155,5 +208,8 @@ fn main() {
 
     b.finish();
     handle.shutdown();
+    for r in readers {
+        let _ = r.join();
+    }
     let _ = std::fs::remove_dir_all(&store_root);
 }

@@ -889,6 +889,10 @@ pub struct ServerConfig {
     /// default: results must survive a restart unless the operator
     /// explicitly opts out (`store_dir = ""`).
     pub store_dir: Option<String>,
+    /// How many finished async-job records the job table retains before
+    /// the oldest age out (their cached *results* stay; only the
+    /// `/jobs/<id>` status record is forgotten).
+    pub jobs_keep: u32,
 }
 
 impl Default for ServerConfig {
@@ -898,6 +902,7 @@ impl Default for ServerConfig {
             job_runners: 2,
             cache_mb: 64,
             store_dir: Some("icecloud-store".to_string()),
+            jobs_keep: 1024,
         }
     }
 }
@@ -937,6 +942,14 @@ impl ServerConfig {
             } else {
                 Some(dir.to_string())
             };
+        }
+        if let Some(v) = want_u64(doc, &["server", "jobs_keep"])? {
+            if v == 0 {
+                return Err("'server.jobs_keep' must be >= 1".into());
+            }
+            self.jobs_keep = u32::try_from(v).map_err(|_| {
+                format!("'server.jobs_keep' {v} is out of range")
+            })?;
         }
         Ok(())
     }
@@ -1000,6 +1013,49 @@ impl FleetConfig {
                  heartbeats",
                 self.heartbeat_every_s, self.lease_ttl_s
             ));
+        }
+        Ok(())
+    }
+}
+
+/// Operations-plane knobs (`/events`, `/timeseries`, `/dash`), read
+/// from an `[ops]` table with the same strict-value contract as
+/// [`ServerConfig`].  Like every serving knob these shape *observation*
+/// only — ring capacity changes which events a slow subscriber misses,
+/// never what a replay computes — so they must never reach
+/// `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpsConfig {
+    /// Event-bus ring capacity: how many recent events a late or
+    /// resuming subscriber can still replay before hitting a gap.
+    pub events_ring: u32,
+    /// Wall-clock seconds between ops-monitor samples of the serving
+    /// gauges (queue depths, outstanding leases, goodput hours).
+    pub sample_every_s: u64,
+}
+
+impl Default for OpsConfig {
+    fn default() -> Self {
+        OpsConfig { events_ring: 1024, sample_every_s: 5 }
+    }
+}
+
+impl OpsConfig {
+    /// Apply an `[ops]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["ops", "events_ring"])? {
+            if v == 0 {
+                return Err("'ops.events_ring' must be >= 1".into());
+            }
+            self.events_ring = u32::try_from(v).map_err(|_| {
+                format!("'ops.events_ring' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["ops", "sample_every_s"])? {
+            if v == 0 {
+                return Err("'ops.sample_every_s' must be >= 1".into());
+            }
+            self.sample_every_s = v;
         }
         Ok(())
     }
@@ -1425,7 +1481,7 @@ azure = 0.6
     fn server_knobs_from_toml() {
         let doc = toml::parse(
             "[server]\nqueue_max = 8\njob_runners = 3\ncache_mb = 16\n\
-             store_dir = \"/var/lib/icecloud\"",
+             store_dir = \"/var/lib/icecloud\"\njobs_keep = 16",
         )
         .unwrap();
         let mut s = ServerConfig::default();
@@ -1434,6 +1490,7 @@ azure = 0.6
         assert_eq!(s.job_runners, 3);
         assert_eq!(s.cache_mb, 16);
         assert_eq!(s.store_dir.as_deref(), Some("/var/lib/icecloud"));
+        assert_eq!(s.jobs_keep, 16);
 
         // the empty string is the explicit memory-only spelling
         let doc = toml::parse("[server]\nstore_dir = \"\"").unwrap();
@@ -1450,6 +1507,7 @@ azure = 0.6
         assert!(s.job_runners >= 1);
         assert!(s.cache_mb >= 1);
         assert_eq!(s.store_dir.as_deref(), Some("icecloud-store"));
+        assert_eq!(s.jobs_keep, 1024);
         // a doc without a [server] table changes nothing
         let doc = toml::parse("seed = 7").unwrap();
         let mut t = ServerConfig::default();
@@ -1468,6 +1526,9 @@ azure = 0.6
             "[server]\ncache_mb = 0",
             "[server]\ncache_mb = \"64\"",
             "[server]\nstore_dir = 7",
+            "[server]\njobs_keep = 0",
+            "[server]\njobs_keep = \"1024\"",
+            "[server]\njobs_keep = 4294967296",
         ] {
             let doc = toml::parse(src).unwrap();
             let mut s = ServerConfig::default();
@@ -1624,6 +1685,70 @@ azure = 0.6
                 "'{src}' must be rejected, not dropped"
             );
         }
+    }
+
+    #[test]
+    fn ops_knobs_from_toml() {
+        let doc = toml::parse(
+            "[ops]\nevents_ring = 64\nsample_every_s = 2",
+        )
+        .unwrap();
+        let mut o = OpsConfig::default();
+        o.apply_toml(&doc).unwrap();
+        assert_eq!(o.events_ring, 64);
+        assert_eq!(o.sample_every_s, 2);
+
+        // a doc without an [ops] table changes nothing
+        let doc = toml::parse("seed = 7").unwrap();
+        let mut o = OpsConfig::default();
+        o.apply_toml(&doc).unwrap();
+        assert_eq!(o, OpsConfig::default());
+    }
+
+    #[test]
+    fn ops_defaults_are_sane() {
+        let o = OpsConfig::default();
+        assert!(o.events_ring >= 1);
+        assert!(o.sample_every_s >= 1);
+    }
+
+    #[test]
+    fn mistyped_ops_knobs_rejected_not_silently_ignored() {
+        for src in [
+            "[ops]\nevents_ring = 0",
+            "[ops]\nevents_ring = \"1024\"",
+            "[ops]\nevents_ring = 1.5",
+            "[ops]\nevents_ring = 4294967296",
+            "[ops]\nsample_every_s = 0",
+            "[ops]\nsample_every_s = true",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut o = OpsConfig::default();
+            assert!(
+                o.apply_toml(&doc).is_err(),
+                "'{src}' must be rejected, not dropped"
+            );
+        }
+    }
+
+    #[test]
+    fn ops_knobs_never_touch_the_campaign_cache_key() {
+        // the [ops] table rides in the same TOML file as the campaign;
+        // applying it to CampaignConfig must be a no-op for the
+        // canonical serialization (observation knobs cannot split the
+        // result cache)
+        let doc = toml::parse(
+            "[ops]\nevents_ring = 2\nsample_every_s = 1",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(
+            c.canonical_json().to_string_compact(),
+            CampaignConfig::default()
+                .canonical_json()
+                .to_string_compact()
+        );
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub fn extract(result: &CampaignResult) -> Fig1 {
 
 impl Fig1 {
     pub fn checks(&self) -> Fig1Checks {
-        let peak = self.total.max();
+        let peak = self.total.max().unwrap_or(0.0);
         let (collapse_min, resume_level) = match self.outage_window {
             Some((start, end)) => {
                 let collapse = self

@@ -326,8 +326,24 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         None,
     )
     .opt(
+        "jobs-keep",
+        "finished async-job records kept for GET /jobs",
+        None,
+    )
+    .opt(
+        "events-ring",
+        "live event-bus ring capacity (GET /events)",
+        None,
+    )
+    .opt(
+        "sample-every-s",
+        "ops sampler cadence in seconds (GET /timeseries, /dash)",
+        None,
+    )
+    .opt(
         "config",
-        "base campaign TOML, optionally with [server] and [fleet] tables",
+        "base campaign TOML, optionally with [server], [fleet] and \
+         [ops] tables",
         None,
     )
     .opt(
@@ -359,9 +375,11 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     apply_days_override(&args, &mut base);
     let mut srv = icecloud::config::ServerConfig::default();
     let mut fleet = icecloud::config::FleetConfig::default();
+    let mut ops = icecloud::config::OpsConfig::default();
     if let Some(doc) = &doc {
         srv.apply_toml(doc)?;
         fleet.apply_toml(doc)?;
+        ops.apply_toml(doc)?;
     }
     if let Some(v) = args.require_u64("queue-max")? {
         if v == 0 {
@@ -382,6 +400,26 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             return Err("--cache-mb must be >= 1".into());
         }
         srv.cache_mb = v;
+    }
+    if let Some(v) = args.require_u64("jobs-keep")? {
+        if v == 0 {
+            return Err("--jobs-keep must be >= 1".into());
+        }
+        srv.jobs_keep = u32::try_from(v)
+            .map_err(|_| format!("--jobs-keep {v} is out of range"))?;
+    }
+    if let Some(v) = args.require_u64("events-ring")? {
+        if v == 0 {
+            return Err("--events-ring must be >= 1".into());
+        }
+        ops.events_ring = u32::try_from(v)
+            .map_err(|_| format!("--events-ring {v} is out of range"))?;
+    }
+    if let Some(v) = args.require_u64("sample-every-s")? {
+        if v == 0 {
+            return Err("--sample-every-s must be >= 1".into());
+        }
+        ops.sample_every_s = v;
     }
     let store_dir = match args.get("store-dir") {
         Some("") => None,
@@ -438,6 +476,9 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             ),
             spot_check_rate: fleet.spot_check_rate,
         },
+        events_ring: ops.events_ring as usize,
+        sample_every_s: ops.sample_every_s,
+        jobs_keep: srv.jobs_keep as usize,
         base,
     };
     let http_threads = cfg.http_threads;
@@ -446,7 +487,8 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     println!(
         "icecloud serve: listening on {} ({} http threads, {} replay \
          workers, {} job runners, store: {})\n  endpoints: GET /healthz \
-         /matrix /metrics /jobs /jobs/<id> /results/<key>; POST /sweep \
+         /matrix /metrics /jobs /jobs/<id> /results/<key> /events \
+         /timeseries[/<name>] /dash /dash.json; POST /sweep \
          [?mode=async]; POST /fleet/{{register,lease,heartbeat,complete}}",
         server.local_addr()?,
         http_threads,

@@ -21,7 +21,7 @@ pub fn line_chart(
         if s.is_empty() {
             continue;
         }
-        y_max = y_max.max(s.max());
+        y_max = y_max.max(s.max().unwrap_or(f64::NEG_INFINITY));
         t_min = t_min.min(s.points[0].0);
         t_max = t_max.max(s.points[s.len() - 1].0);
     }

@@ -30,18 +30,36 @@ impl TimeSeries {
         self.points.last().map(|(_, v)| *v)
     }
 
-    pub fn max(&self) -> f64 {
-        self.points.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max)
+    /// Largest sample, `None` when the series is empty (an empty fold
+    /// would otherwise surface −inf, which `/timeseries` must never
+    /// serialize).
+    pub fn max(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
     }
 
-    pub fn min(&self) -> f64 {
-        self.points.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min)
+    /// Smallest sample; `None` when the series is empty.
+    pub fn min(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
     }
 
-    /// Time-weighted mean over the sampled span.
-    pub fn mean(&self) -> f64 {
-        if self.points.len() < 2 {
-            return self.points.first().map(|(_, v)| *v).unwrap_or(f64::NAN);
+    /// Time-weighted mean over the sampled span; `None` when the series
+    /// is empty.  A single sample (or a zero-width span of repeated
+    /// timestamps) has no area to weight, so the plain average of the
+    /// values stands in — never NaN.
+    pub fn mean(&self) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let span = (self.points.last().unwrap().0 - self.points[0].0) as f64;
+        if self.points.len() < 2 || span == 0.0 {
+            let sum: f64 = self.points.iter().map(|(_, v)| *v).sum();
+            return Some(sum / self.points.len() as f64);
         }
         let mut area = 0.0;
         for w in self.points.windows(2) {
@@ -49,29 +67,35 @@ impl TimeSeries {
             let (t1, _) = w[1];
             area += v0 * (t1 - t0) as f64;
         }
-        let span = (self.points.last().unwrap().0 - self.points[0].0) as f64;
-        if span == 0.0 {
-            f64::NAN
-        } else {
-            area / span
-        }
+        Some(area / span)
     }
 
     /// Collapse the series into one summary row (scenario-sweep tables).
+    /// An empty series collapses to all-zero stats with `samples == 0`
+    /// as the discriminator — finite everywhere, so a summary always
+    /// survives JSON serialization.
     pub fn summary(&self) -> SeriesSummary {
         SeriesSummary {
-            min: self.min(),
-            max: self.max(),
-            mean: self.mean(),
-            last: self.last().unwrap_or(f64::NAN),
+            min: self.min().unwrap_or(0.0),
+            max: self.max().unwrap_or(0.0),
+            mean: self.mean().unwrap_or(0.0),
+            last: self.last().unwrap_or(0.0),
             samples: self.len(),
         }
     }
 
     /// Downsample to at most `n` points (stride sampling, keeps ends).
+    /// `n == 0` yields nothing, `n == 1` keeps the latest point; asking
+    /// for fewer points than exist must never return *more*.
     pub fn downsample(&self, n: usize) -> Vec<(SimTime, f64)> {
-        if self.points.len() <= n || n < 2 {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.points.len() <= n {
             return self.points.clone();
+        }
+        if n == 1 {
+            return vec![*self.points.last().unwrap()];
         }
         let stride = (self.points.len() - 1) as f64 / (n - 1) as f64;
         (0..n)
@@ -167,10 +191,10 @@ mod tests {
         s.push(200, 0.0);
         assert_eq!(s.len(), 3);
         assert_eq!(s.last(), Some(0.0));
-        assert_eq!(s.max(), 20.0);
-        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), Some(20.0));
+        assert_eq!(s.min(), Some(0.0));
         // time-weighted mean: (10*100 + 20*100) / 200 = 15
-        assert!((s.mean() - 15.0).abs() < 1e-12);
+        assert!((s.mean().unwrap() - 15.0).abs() < 1e-12);
     }
 
     #[test]
@@ -192,7 +216,51 @@ mod tests {
         let s = TimeSeries::default();
         let sum = s.summary();
         assert_eq!(sum.samples, 0);
-        assert!(sum.last.is_nan());
+        // all-zero, never NaN/−inf: the summary must survive JSON
+        assert_eq!(sum.last, 0.0);
+        assert_eq!(sum.min, 0.0);
+        assert_eq!(sum.max, 0.0);
+        assert_eq!(sum.mean, 0.0);
+    }
+
+    #[test]
+    fn empty_series_stats_are_none_not_nan() {
+        let s = TimeSeries::default();
+        assert_eq!(s.max(), None);
+        assert_eq!(s.min(), None);
+        assert_eq!(s.mean(), None);
+        assert_eq!(s.last(), None);
+        assert!(s.downsample(10).is_empty());
+    }
+
+    #[test]
+    fn single_point_mean_is_the_value() {
+        let mut s = TimeSeries::default();
+        s.push(42, 7.5);
+        assert_eq!(s.mean(), Some(7.5));
+        assert_eq!(s.min(), Some(7.5));
+        assert_eq!(s.max(), Some(7.5));
+    }
+
+    #[test]
+    fn zero_span_mean_is_plain_average() {
+        // repeated timestamps: no area to weight, but still a number
+        let mut s = TimeSeries::default();
+        s.push(10, 2.0);
+        s.push(10, 4.0);
+        assert_eq!(s.mean(), Some(3.0));
+    }
+
+    #[test]
+    fn downsample_degenerate_budgets() {
+        let mut s = TimeSeries::default();
+        for i in 0..100u64 {
+            s.push(i, i as f64);
+        }
+        // n=0 returns nothing (the old code returned all 100 points)
+        assert!(s.downsample(0).is_empty());
+        // n=1 keeps the latest point, not the whole series
+        assert_eq!(s.downsample(1), vec![(99, 99.0)]);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! The disk probe happens on the owner's side of the flight, so a
 //! thundering herd does at most one disk read per key.
 
+use super::events::{EventBus, EventKind};
 use super::store::DiskStore;
 use crate::util::logger::{self, Level};
 use crate::util::sha256;
@@ -98,6 +99,10 @@ pub struct ResultCache {
     store: Mutex<Store>,
     disk: Option<DiskStore>,
     flights: Mutex<HashMap<String, Arc<Flight>>>,
+    /// Ops bus for `cache.hit` events; `None` outside a server (CLI
+    /// sweeps, unit tests) — hits then go unannounced, nothing else
+    /// changes.
+    events: Option<Arc<EventBus>>,
 }
 
 impl ResultCache {
@@ -117,6 +122,22 @@ impl ResultCache {
             }),
             disk,
             flights: Mutex::new(HashMap::new()),
+            events: None,
+        }
+    }
+
+    /// Attach the ops bus (called once by `Server::bind` before the
+    /// cache is shared).
+    pub fn set_events(&mut self, events: Arc<EventBus>) {
+        self.events = Some(events);
+    }
+
+    fn publish_hit(&self, key: &str, tier: &'static str) {
+        if let Some(bus) = &self.events {
+            bus.publish(EventKind::CacheHit {
+                key: key.to_string(),
+                tier,
+            });
         }
     }
 
@@ -135,6 +156,7 @@ impl ResultCache {
     /// memory LRU so subsequent fetches are pure memory.
     pub fn lookup(&self, key: &str) -> Option<(Body, Outcome)> {
         if let Some(body) = self.store.lock().unwrap().get(key) {
+            self.publish_hit(key, "memory");
             return Some((body, Outcome::Hit));
         }
         let body: Body = Arc::new(self.disk.as_ref()?.get(key)?);
@@ -142,6 +164,7 @@ impl ResultCache {
             .lock()
             .unwrap()
             .insert(key.to_string(), Arc::clone(&body));
+        self.publish_hit(key, "disk");
         Some((body, Outcome::DiskHit))
     }
 
@@ -183,6 +206,7 @@ impl ResultCache {
             // first, so "no cache entry and no flight" implies we must
             // become the owner
             if let Some(body) = self.store.lock().unwrap().get(key) {
+                self.publish_hit(key, "memory");
                 return (Ok(body), Outcome::Hit);
             }
             match flights.get(key).cloned() {
@@ -210,7 +234,10 @@ impl ResultCache {
         // owner path: disk probe, then compute, all outside every lock
         let (result, outcome) =
             match self.disk.as_ref().and_then(|d| d.get(key)) {
-                Some(body) => (Ok(Arc::new(body)), Outcome::DiskHit),
+                Some(body) => {
+                    self.publish_hit(key, "disk");
+                    (Ok(Arc::new(body)), Outcome::DiskHit)
+                }
                 None => {
                     let result = compute().map(Arc::new);
                     if let Ok(body) = &result {
@@ -478,6 +505,43 @@ mod tests {
         assert_eq!(r.unwrap().as_slice(), b"served");
         assert_eq!(cache.get("not-a-key").unwrap().as_slice(), b"served");
         assert_eq!(cache.disk_stats(), (0, 0));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn hits_publish_tier_events_when_a_bus_is_attached() {
+        use super::super::events::{Delivery, EventBus};
+        let root = scratch();
+        let disk = DiskStore::open(&root).unwrap();
+        let mut cache = ResultCache::with_disk(10, Some(disk));
+        let bus = Arc::new(EventBus::new(64));
+        cache.set_events(Arc::clone(&bus));
+        let (ka, kb) = (key(5), key(6));
+        // two computes: misses publish nothing
+        cache.get_or_compute(&ka, || Ok(vec![1u8; 8])).0.unwrap();
+        cache.get_or_compute(&kb, || Ok(vec![2u8; 8])).0.unwrap();
+        assert_eq!(bus.published_total(), 0, "misses are not hits");
+        // `ka` was evicted from memory: first lookup is a disk hit,
+        // the promoted second one a memory hit
+        let mut sub = bus.subscribe(None);
+        cache.lookup(&ka).unwrap();
+        cache.lookup(&ka).unwrap();
+        let tiers: Vec<String> =
+            match sub.next(std::time::Duration::from_secs(1)) {
+                Delivery::Batch { events, .. } => events
+                    .iter()
+                    .map(|e| {
+                        e.kind
+                            .data()
+                            .get("tier")
+                            .and_then(|t| t.as_str())
+                            .unwrap()
+                            .to_string()
+                    })
+                    .collect(),
+                other => panic!("{other:?}"),
+            };
+        assert_eq!(tiers, vec!["disk", "memory"]);
         let _ = std::fs::remove_dir_all(&root);
     }
 

@@ -1,0 +1,578 @@
+//! The live-operations event bus: typed transitions from the job
+//! table, fleet lease table and result store, fanned out to `/events`
+//! SSE subscribers (DESIGN.md §17).
+//!
+//! The paper's operational story was *watched*, not polled — the team
+//! steered the 2-week run off live dashboards.  This bus is the push
+//! half of that plane, with three invariants the rest of the server
+//! relies on:
+//!
+//! 1. **Publishers never block.**  `publish` takes one mutex, appends
+//!    to a bounded ring, and returns; no subscriber — slow, stalled or
+//!    absent — can wedge a job runner or a fleet completion.  With zero
+//!    subscribers a publish is just a counter bump and a ring append.
+//! 2. **Memory is bounded.**  The ring holds at most `capacity` events
+//!    (`[ops] events_ring`); older events fall off the front.
+//! 3. **A slow reader loses *its own* backlog, explicitly.**  Each
+//!    subscriber keeps a private cursor.  When the cursor falls behind
+//!    the ring, the next delivery reports how many events that reader
+//!    missed (rendered as an SSE `gap` event) and resumes from the
+//!    oldest retained event.  Other subscribers are unaffected.
+//!
+//! Sequence numbers are monotonic from 1 and double as SSE `id:`
+//! values, so `Last-Event-ID` resume is exact whenever the requested
+//! range is still in the ring and an honest `gap` when it is not.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Default ring capacity (`[ops] events_ring`).
+pub const DEFAULT_EVENTS_RING: usize = 1024;
+
+/// Poison-tolerant lock: a panicking publisher must not take the bus
+/// (and with it every subscriber stream) down with it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A typed transition published into the bus.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Async job admitted to the queue.
+    JobQueued { id: String, scenarios: usize },
+    /// Job picked up by a runner.
+    JobRunning { id: String },
+    /// Job finished; its result is fetchable.
+    JobDone { id: String },
+    /// Job failed; the error is what `GET /jobs/<id>` reports.
+    JobFailed { id: String, error: String },
+    /// Fleet lease granted to a worker.
+    LeaseGranted { lease_id: u64, unit_id: u64, scenario: String, worker: String },
+    /// Worker delivered a valid row; the lease retired.
+    LeaseCompleted { lease_id: u64, scenario: String },
+    /// Completion failed validation; unit requeued.
+    LeaseRejected { lease_id: u64, reason: String },
+    /// Lease deadline passed; unit requeued.
+    LeaseExpired { lease_id: u64 },
+    /// Result served from a cache tier ("memory" or "disk").
+    CacheHit { key: String, tier: &'static str },
+    /// Store entry failed verification and was quarantined.
+    StoreQuarantine { name: String, reason: String },
+}
+
+impl EventKind {
+    /// The SSE `event:` field.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::JobQueued { .. } => "job.queued",
+            EventKind::JobRunning { .. } => "job.running",
+            EventKind::JobDone { .. } => "job.done",
+            EventKind::JobFailed { .. } => "job.failed",
+            EventKind::LeaseGranted { .. } => "lease.granted",
+            EventKind::LeaseCompleted { .. } => "lease.completed",
+            EventKind::LeaseRejected { .. } => "lease.rejected",
+            EventKind::LeaseExpired { .. } => "lease.expired",
+            EventKind::CacheHit { .. } => "cache.hit",
+            EventKind::StoreQuarantine { .. } => "store.quarantine",
+        }
+    }
+
+    /// The SSE `data:` payload (always a compact single-line object).
+    pub fn data(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            EventKind::JobQueued { id, scenarios } => {
+                o.set("id", Json::from(id.as_str()));
+                o.set("scenarios", Json::from(*scenarios));
+            }
+            EventKind::JobRunning { id }
+            | EventKind::JobDone { id } => {
+                o.set("id", Json::from(id.as_str()));
+            }
+            EventKind::JobFailed { id, error } => {
+                o.set("id", Json::from(id.as_str()));
+                o.set("error", Json::from(error.as_str()));
+            }
+            EventKind::LeaseGranted { lease_id, unit_id, scenario, worker } => {
+                o.set("lease_id", Json::from(*lease_id));
+                o.set("unit_id", Json::from(*unit_id));
+                o.set("scenario", Json::from(scenario.as_str()));
+                o.set("worker", Json::from(worker.as_str()));
+            }
+            EventKind::LeaseCompleted { lease_id, scenario } => {
+                o.set("lease_id", Json::from(*lease_id));
+                o.set("scenario", Json::from(scenario.as_str()));
+            }
+            EventKind::LeaseRejected { lease_id, reason } => {
+                o.set("lease_id", Json::from(*lease_id));
+                o.set("reason", Json::from(reason.as_str()));
+            }
+            EventKind::LeaseExpired { lease_id } => {
+                o.set("lease_id", Json::from(*lease_id));
+            }
+            EventKind::CacheHit { key, tier } => {
+                o.set("key", Json::from(key.as_str()));
+                o.set("tier", Json::from(*tier));
+            }
+            EventKind::StoreQuarantine { name, reason } => {
+                o.set("name", Json::from(name.as_str()));
+                o.set("reason", Json::from(reason.as_str()));
+            }
+        }
+        o
+    }
+}
+
+/// One published event: a sequence number plus its typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Render as one SSE frame (`id` / `event` / `data` + blank line).
+    pub fn sse_frame(&self) -> String {
+        format!(
+            "id: {}\nevent: {}\ndata: {}\n\n",
+            self.seq,
+            self.kind.name(),
+            self.kind.data().to_string_compact()
+        )
+    }
+}
+
+/// Render the synthetic per-subscriber `gap` frame.  Its `id` is the
+/// sequence number *before* the oldest event the subscriber will see
+/// next, so a client that reconnects with the gap's id as
+/// `Last-Event-ID` resumes exactly where the stream left off.
+pub fn gap_frame(resume: u64, dropped: u64) -> String {
+    let mut d = Json::obj();
+    d.set("dropped", Json::from(dropped));
+    format!(
+        "id: {}\nevent: gap\ndata: {}\n\n",
+        resume.saturating_sub(1),
+        d.to_string_compact()
+    )
+}
+
+struct BusInner {
+    ring: VecDeque<Arc<Event>>,
+    /// Sequence number the *next* publish will take (first is 1).
+    next_seq: u64,
+    closed: bool,
+}
+
+/// The bounded broadcast bus.  See the module docs for the invariants.
+pub struct EventBus {
+    inner: Mutex<BusInner>,
+    wake: Condvar,
+    capacity: usize,
+    published: AtomicU64,
+    dropped: AtomicU64,
+    subscribers: AtomicU64,
+}
+
+impl EventBus {
+    pub fn new(capacity: usize) -> EventBus {
+        EventBus {
+            inner: Mutex::new(BusInner {
+                ring: VecDeque::new(),
+                next_seq: 1,
+                closed: false,
+            }),
+            wake: Condvar::new(),
+            capacity: capacity.max(1),
+            published: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            subscribers: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish one event; returns its sequence number.  Never blocks on
+    /// subscribers: one short critical section, then a wakeup.
+    pub fn publish(&self, kind: EventKind) -> u64 {
+        let seq;
+        {
+            let mut g = lock(&self.inner);
+            seq = g.next_seq;
+            g.next_seq += 1;
+            g.ring.push_back(Arc::new(Event { seq, kind }));
+            while g.ring.len() > self.capacity {
+                g.ring.pop_front();
+            }
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+        self.wake.notify_all();
+        seq
+    }
+
+    /// Open a cursor.  `resume = Some(id)` continues after `id`
+    /// (`Last-Event-ID` semantics); `None` subscribes from *now* —
+    /// history already in the ring is not replayed.  An id from the
+    /// future is clamped to the live edge.
+    pub fn subscribe(&self, resume: Option<u64>) -> Subscription<'_> {
+        self.subscribers.fetch_add(1, Ordering::Relaxed);
+        let next_seq = lock(&self.inner).next_seq;
+        let cursor = match resume {
+            Some(id) => id.saturating_add(1).min(next_seq),
+            None => next_seq,
+        };
+        Subscription { bus: self, cursor }
+    }
+
+    /// Wake every waiting subscriber for shutdown; subsequent waits
+    /// return [`Delivery::Closed`] once drained.
+    pub fn close(&self) {
+        lock(&self.inner).closed = true;
+        self.wake.notify_all();
+    }
+
+    /// Total events ever published (`icecloud_events_published_total`).
+    pub fn published_total(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Total events subscribers missed to ring wrap
+    /// (`icecloud_events_dropped_total`), summed across subscribers.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Currently open subscriptions (`icecloud_events_subscribers`).
+    pub fn subscriber_count(&self) -> u64 {
+        self.subscribers.load(Ordering::Relaxed)
+    }
+
+    /// Ring capacity (diagnostics / tests).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// What one wait on a subscription yielded.
+#[derive(Debug)]
+pub enum Delivery {
+    /// New events (possibly preceded by a gap: `dropped` events fell
+    /// off the ring before this reader caught up; `resume` is the
+    /// sequence the batch resumes from, for rendering the gap frame).
+    Batch { dropped: u64, resume: u64, events: Vec<Arc<Event>> },
+    /// Nothing within the timeout (render a heartbeat comment).
+    Idle,
+    /// The bus shut down and the cursor is fully drained.
+    Closed,
+}
+
+/// A per-subscriber cursor into the bus.  Dropping it releases the
+/// subscriber gauge.
+pub struct Subscription<'a> {
+    bus: &'a EventBus,
+    cursor: u64,
+}
+
+impl Subscription<'_> {
+    /// Block until events arrive, the timeout lapses, or the bus
+    /// closes.  Detects this reader's gap (cursor behind the ring) and
+    /// charges it to the shared dropped counter.
+    pub fn next(&mut self, timeout: Duration) -> Delivery {
+        let deadline = Instant::now() + timeout;
+        let mut g = lock(&self.bus.inner);
+        loop {
+            if self.cursor < g.next_seq {
+                let oldest =
+                    g.ring.front().map(|e| e.seq).unwrap_or(g.next_seq);
+                let dropped = oldest.saturating_sub(self.cursor);
+                if dropped > 0 {
+                    self.bus.dropped.fetch_add(dropped, Ordering::Relaxed);
+                    self.cursor = oldest;
+                }
+                let events: Vec<_> = g
+                    .ring
+                    .iter()
+                    .filter(|e| e.seq >= self.cursor)
+                    .cloned()
+                    .collect();
+                let resume = self.cursor;
+                self.cursor = g.next_seq;
+                return Delivery::Batch { dropped, resume, events };
+            }
+            if g.closed {
+                return Delivery::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Delivery::Idle;
+            }
+            g = self
+                .bus
+                .wake
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
+        }
+    }
+}
+
+impl Drop for Subscription<'_> {
+    fn drop(&mut self) {
+        self.bus.subscribers.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job_done(n: u64) -> EventKind {
+        EventKind::JobDone { id: format!("job-{n}") }
+    }
+
+    fn batch(d: Delivery) -> (u64, u64, Vec<Arc<Event>>) {
+        match d {
+            Delivery::Batch { dropped, resume, events } => {
+                (dropped, resume, events)
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sequences_are_monotonic_from_one() {
+        let bus = EventBus::new(8);
+        assert_eq!(bus.publish(job_done(0)), 1);
+        assert_eq!(bus.publish(job_done(1)), 2);
+        assert_eq!(bus.publish(job_done(2)), 3);
+        assert_eq!(bus.published_total(), 3);
+    }
+
+    #[test]
+    fn zero_subscriber_publish_is_a_counter_bump() {
+        let bus = EventBus::new(4);
+        for i in 0..100 {
+            bus.publish(job_done(i));
+        }
+        assert_eq!(bus.published_total(), 100);
+        // nobody was reading, so nobody *dropped* anything
+        assert_eq!(bus.dropped_total(), 0);
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn live_subscriber_sees_every_event_in_order_once() {
+        let bus = EventBus::new(64);
+        let mut sub = bus.subscribe(None);
+        for i in 0..10 {
+            bus.publish(job_done(i));
+        }
+        let (dropped, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 0);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (1..=10).collect::<Vec<u64>>());
+        // drained: the next wait is Idle, not a replay
+        assert!(matches!(
+            sub.next(Duration::from_millis(10)),
+            Delivery::Idle
+        ));
+    }
+
+    #[test]
+    fn subscribe_is_future_only() {
+        let bus = EventBus::new(64);
+        bus.publish(job_done(0));
+        bus.publish(job_done(1));
+        let mut sub = bus.subscribe(None);
+        bus.publish(job_done(2));
+        let (_, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].seq, 3);
+    }
+
+    #[test]
+    fn resume_replays_only_missed_events() {
+        let bus = EventBus::new(64);
+        for i in 0..5 {
+            bus.publish(job_done(i));
+        }
+        let mut sub = bus.subscribe(Some(2)); // saw 1 and 2 already
+        let (dropped, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 0);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn slow_reader_gets_an_explicit_gap_and_the_tail() {
+        let bus = EventBus::new(4);
+        let mut sub = bus.subscribe(None);
+        for i in 0..10 {
+            bus.publish(job_done(i));
+        }
+        // ring holds 7..=10; 1..=6 fell off before this reader woke
+        let (dropped, resume, events) =
+            batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 6);
+        assert_eq!(resume, 7);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![7, 8, 9, 10]);
+        assert_eq!(bus.dropped_total(), 6);
+    }
+
+    #[test]
+    fn gap_is_per_subscriber_not_global() {
+        let bus = EventBus::new(4);
+        let mut slow = bus.subscribe(None);
+        for i in 0..10 {
+            bus.publish(job_done(i));
+        }
+        // a reader that joins *now* starts at the live edge: no gap
+        let mut fresh = bus.subscribe(None);
+        bus.publish(job_done(10));
+        let (dropped, _, events) =
+            batch(fresh.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 1);
+        // the slow reader pays its own gap
+        let (dropped, _, _) = batch(slow.next(Duration::from_secs(1)));
+        assert!(dropped > 0);
+    }
+
+    #[test]
+    fn resume_past_the_ring_counts_everything_missed() {
+        let bus = EventBus::new(2);
+        for i in 0..10 {
+            bus.publish(job_done(i));
+        }
+        // client claims it saw event 1; 2..=8 are gone, 9..=10 remain
+        let mut sub = bus.subscribe(Some(1));
+        let (dropped, resume, events) =
+            batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 7);
+        assert_eq!(resume, 9);
+        assert_eq!(events.len(), 2);
+    }
+
+    #[test]
+    fn future_resume_id_clamps_to_live_edge() {
+        let bus = EventBus::new(8);
+        bus.publish(job_done(0));
+        let mut sub = bus.subscribe(Some(u64::MAX));
+        bus.publish(job_done(1));
+        let (dropped, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].seq, 2);
+    }
+
+    #[test]
+    fn idle_times_out_and_close_wakes() {
+        let bus = Arc::new(EventBus::new(8));
+        let mut sub = bus.subscribe(None);
+        assert!(matches!(
+            sub.next(Duration::from_millis(20)),
+            Delivery::Idle
+        ));
+        let closer = Arc::clone(&bus);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            closer.close();
+        });
+        // a long wait returns promptly once the bus closes
+        assert!(matches!(
+            sub.next(Duration::from_secs(30)),
+            Delivery::Closed
+        ));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn close_delivers_pending_events_before_closed() {
+        let bus = EventBus::new(8);
+        let mut sub = bus.subscribe(None);
+        bus.publish(job_done(0));
+        bus.close();
+        let (_, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            sub.next(Duration::from_millis(10)),
+            Delivery::Closed
+        ));
+    }
+
+    #[test]
+    fn subscriber_gauge_tracks_lifetimes() {
+        let bus = EventBus::new(8);
+        assert_eq!(bus.subscriber_count(), 0);
+        {
+            let _a = bus.subscribe(None);
+            let _b = bus.subscribe(None);
+            assert_eq!(bus.subscriber_count(), 2);
+        }
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn publisher_never_blocks_on_a_stalled_subscriber() {
+        // a subscriber that never calls next() must not slow the
+        // publish path: 10k publishes into a 16-slot ring finish fast
+        let bus = EventBus::new(16);
+        let _stalled = bus.subscribe(None);
+        let t0 = Instant::now();
+        for i in 0..10_000 {
+            bus.publish(job_done(i));
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "publish stalled behind a dead subscriber"
+        );
+        assert_eq!(bus.published_total(), 10_000);
+    }
+
+    #[test]
+    fn sse_frame_shape() {
+        let e = Event {
+            seq: 7,
+            kind: EventKind::CacheHit { key: "abc".into(), tier: "disk" },
+        };
+        let f = e.sse_frame();
+        assert!(f.starts_with("id: 7\nevent: cache.hit\ndata: {"), "{f}");
+        assert!(f.ends_with("\n\n"), "{f}");
+        assert!(f.contains("\"tier\":\"disk\""), "{f}");
+        // data stays on one line (SSE frames are newline-delimited)
+        assert_eq!(f.trim_end().lines().count(), 3, "{f}");
+    }
+
+    #[test]
+    fn gap_frame_resumes_cleanly() {
+        let f = gap_frame(7, 6);
+        // reconnecting with the gap's id (6) resumes at event 7
+        assert!(f.starts_with("id: 6\nevent: gap\n"), "{f}");
+        assert!(f.contains("{\"dropped\":6}"), "{f}");
+    }
+
+    #[test]
+    fn concurrent_publishers_never_duplicate_or_skip_seqs() {
+        let bus = Arc::new(EventBus::new(4096));
+        let mut sub = bus.subscribe(None);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let bus = Arc::clone(&bus);
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        bus.publish(job_done(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let (dropped, _, events) = batch(sub.next(Duration::from_secs(1)));
+        assert_eq!(dropped, 0);
+        let mut seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (1..=1000).collect::<Vec<u64>>());
+    }
+}

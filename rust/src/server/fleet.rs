@@ -35,6 +35,7 @@
 //! live unit is ever granted to two workers, and no unit is ever lost
 //! — every unit is pending, leased, or delivered into its flight.
 
+use super::events::{EventBus, EventKind, DEFAULT_EVENTS_RING};
 use super::http::client_request;
 use super::jobs::ReplayPool;
 use crate::config::CampaignConfig;
@@ -229,13 +230,29 @@ impl SweepFlight {
 /// The coordinator's lease table.
 pub struct FleetTable {
     opts: FleetOptions,
+    events: Arc<EventBus>,
     inner: Mutex<FleetInner>,
 }
 
 impl FleetTable {
+    /// A table on its own private bus (tests, workers' local tables);
+    /// nothing subscribes, so publishes are counter bumps.
     pub fn new(opts: FleetOptions) -> FleetTable {
+        Self::with_events(
+            opts,
+            Arc::new(EventBus::new(DEFAULT_EVENTS_RING)),
+        )
+    }
+
+    /// The serving constructor: lease transitions are published to the
+    /// shared ops bus.
+    pub fn with_events(
+        opts: FleetOptions,
+        events: Arc<EventBus>,
+    ) -> FleetTable {
         FleetTable {
             opts,
+            events,
             inner: Mutex::new(FleetInner {
                 workers: HashMap::new(),
                 pending: VecDeque::new(),
@@ -308,6 +325,13 @@ impl FleetTable {
                 spot_check,
             },
         );
+        drop(g);
+        self.events.publish(EventKind::LeaseGranted {
+            lease_id,
+            unit_id: grant.unit_id,
+            scenario: grant.name.clone(),
+            worker: worker_id.to_string(),
+        });
         Ok(Some(grant))
     }
 
@@ -415,6 +439,10 @@ impl FleetTable {
             }
             lease.unit
         };
+        self.events.publish(EventKind::LeaseCompleted {
+            lease_id,
+            scenario: name,
+        });
         unit.flight.deliver(unit.slot, row);
         CompleteOutcome::Accepted
     }
@@ -425,6 +453,11 @@ impl FleetTable {
             Some(lease) => {
                 g.rejected += 1;
                 g.pending.push_back(lease.unit);
+                drop(g);
+                self.events.publish(EventKind::LeaseRejected {
+                    lease_id,
+                    reason: msg.clone(),
+                });
                 CompleteOutcome::Rejected(msg)
             }
             None => CompleteOutcome::Unknown,
@@ -448,6 +481,11 @@ impl FleetTable {
                 g.pending.push_back(lease.unit);
             }
         }
+        drop(g);
+        for id in &stale {
+            self.events
+                .publish(EventKind::LeaseExpired { lease_id: *id });
+        }
         stale.len()
     }
 
@@ -459,6 +497,9 @@ impl FleetTable {
             Some(lease) => {
                 g.expired += 1;
                 g.pending.push_back(lease.unit);
+                drop(g);
+                self.events
+                    .publish(EventKind::LeaseExpired { lease_id });
                 true
             }
             None => false,

@@ -264,6 +264,16 @@ impl Response {
         }
     }
 
+    /// An SVG body (`GET /dash`).
+    pub fn svg(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "image/svg+xml",
+            body: std::sync::Arc::new(body.into_bytes()),
+            extra_headers: Vec::new(),
+        }
+    }
+
     /// A `{"error": ...}` JSON body.
     pub fn error(status: u16, message: &str) -> Response {
         use crate::util::json::Json;

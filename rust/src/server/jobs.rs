@@ -22,6 +22,7 @@
 //! async submissions collapse to one job for free.
 
 use super::cache::{render_sweep_body, Outcome, ResultCache};
+use super::events::{EventBus, EventKind};
 use super::fleet::FleetTable;
 use super::metrics::Metrics;
 use crate::config::CampaignConfig;
@@ -183,8 +184,9 @@ impl Drop for ReplayPool {
 
 // ---- the async job table -------------------------------------------------
 
-/// Finished jobs kept for `GET /jobs` before the oldest are forgotten.
-const MAX_TRACKED_JOBS: usize = 1024;
+/// Finished jobs kept for `GET /jobs` before the oldest are forgotten
+/// (`[server] jobs_keep` overrides per server).
+pub const DEFAULT_JOBS_KEEP: usize = 1024;
 
 /// Everything a queued job needs to run later.
 pub struct JobSpec {
@@ -305,7 +307,9 @@ pub struct JobTable {
     shared: Arc<Shared>,
     cache: Arc<ResultCache>,
     metrics: Arc<Metrics>,
+    events: Arc<EventBus>,
     queue_max: usize,
+    jobs_keep: usize,
     runners: Vec<JoinHandle<()>>,
 }
 
@@ -313,7 +317,9 @@ impl JobTable {
     /// Spawn `runners` job-runner threads over the shared cache/pool.
     /// Jobs drain through the fleet when remote workers are registered
     /// and fall back to the local pool when none are (`fleet.run_matrix`
-    /// makes that call per sweep).
+    /// makes that call per sweep).  Every lifecycle transition is
+    /// published to `events`; `jobs_keep` bounds how many finished
+    /// records `GET /jobs` retains.
     pub fn start(
         queue_max: usize,
         runners: usize,
@@ -321,6 +327,8 @@ impl JobTable {
         pool: Arc<ReplayPool>,
         fleet: Arc<FleetTable>,
         metrics: Arc<Metrics>,
+        events: Arc<EventBus>,
+        jobs_keep: usize,
     ) -> JobTable {
         let shared = Arc::new(Shared {
             state: Mutex::new(JobsInner {
@@ -338,15 +346,18 @@ impl JobTable {
             let pool = Arc::clone(&pool);
             let fleet = Arc::clone(&fleet);
             let metrics = Arc::clone(&metrics);
+            let events = Arc::clone(&events);
             handles.push(std::thread::spawn(move || {
-                runner_loop(&shared, &cache, &pool, &fleet, &metrics)
+                runner_loop(&shared, &cache, &pool, &fleet, &metrics, &events)
             }));
         }
         JobTable {
             shared,
             cache,
             metrics,
+            events,
             queue_max: queue_max.max(1),
+            jobs_keep: jobs_keep.max(1),
             runners: handles,
         }
     }
@@ -398,8 +409,15 @@ impl JobTable {
                     rec.submitted = now;
                     rec.started = Some(now);
                     rec.finished = Some(now);
+                    let scenarios = rec.scenarios;
                     self.metrics.on_job_submitted();
                     self.metrics.on_job_finished(true);
+                    self.events.publish(EventKind::JobQueued {
+                        id: id.clone(),
+                        scenarios,
+                    });
+                    self.events
+                        .publish(EventKind::JobDone { id: id.clone() });
                     return Admission::Accepted { id };
                 }
                 None => {
@@ -416,9 +434,15 @@ impl JobTable {
                         },
                     );
                     st.order.push_back(id.clone());
-                    gc(&mut st);
+                    gc(&mut st, self.jobs_keep);
                     self.metrics.on_job_submitted();
                     self.metrics.on_job_finished(true);
+                    self.events.publish(EventKind::JobQueued {
+                        id: id.clone(),
+                        scenarios: spec.scenarios.len(),
+                    });
+                    self.events
+                        .publish(EventKind::JobDone { id: id.clone() });
                     return Admission::Accepted { id };
                 }
             }
@@ -431,9 +455,10 @@ impl JobTable {
                 retry_after_s: retry_after(st.pending.len()),
             };
         }
+        let scenarios = spec.scenarios.len();
         let record = JobRecord {
             phase: Phase::Queued,
-            scenarios: spec.scenarios.len(),
+            scenarios,
             submitted: now,
             started: None,
             finished: None,
@@ -444,8 +469,12 @@ impl JobTable {
             st.order.push_back(id.clone());
         }
         st.pending.push_back(id.clone());
-        gc(&mut st);
+        gc(&mut st, self.jobs_keep);
         self.metrics.on_job_submitted();
+        // published before the jobs lock is released, so the matching
+        // job.running can never be sequenced ahead of this job.queued
+        self.events
+            .publish(EventKind::JobQueued { id: id.clone(), scenarios });
         self.shared.work.notify_one();
         Admission::Accepted { id }
     }
@@ -531,17 +560,18 @@ fn view_of(st: &JobsInner, id: &str, rec: &JobRecord) -> JobView {
     }
 }
 
-/// Forget the oldest *finished* jobs once the table outgrows its cap.
-/// Unfinished jobs are skipped, not a stopping point — a long-running
-/// job at the front must not let finished records behind it pile up
-/// unboundedly.  Queued and running jobs are never dropped (the queue
-/// bound and the runner count cap them independently), so the table
-/// stays within `MAX_TRACKED_JOBS` plus that small in-flight margin.
-fn gc(st: &mut JobsInner) {
-    if st.order.len() <= MAX_TRACKED_JOBS {
+/// Forget the oldest *finished* jobs once the table outgrows `keep`
+/// (`[server] jobs_keep`).  Unfinished jobs are skipped, not a
+/// stopping point — a long-running job at the front must not let
+/// finished records behind it pile up unboundedly.  Queued and running
+/// jobs are never dropped (the queue bound and the runner count cap
+/// them independently), so the table stays within `keep` plus that
+/// small in-flight margin.
+fn gc(st: &mut JobsInner, keep: usize) {
+    if st.order.len() <= keep {
         return;
     }
-    let mut excess = st.order.len() - MAX_TRACKED_JOBS;
+    let mut excess = st.order.len() - keep;
     let mut kept = VecDeque::with_capacity(st.order.len());
     while let Some(id) = st.order.pop_front() {
         let finished = !in_flight(st, &id);
@@ -561,6 +591,7 @@ fn runner_loop(
     pool: &ReplayPool,
     fleet: &FleetTable,
     metrics: &Metrics,
+    events: &EventBus,
 ) {
     loop {
         let (id, spec) = {
@@ -584,10 +615,17 @@ fn runner_loop(
                         rec.finished = Some(Instant::now());
                         rec.error =
                             Some("queued job lost its spec".to_string());
+                        events.publish(EventKind::JobFailed {
+                            id: id.clone(),
+                            error: "queued job lost its spec".to_string(),
+                        });
                         continue;
                     };
                     rec.phase = Phase::Running;
                     rec.started = Some(Instant::now());
+                    events.publish(EventKind::JobRunning {
+                        id: id.clone(),
+                    });
                     break (id, spec);
                 }
                 st = shared
@@ -645,11 +683,16 @@ fn runner_loop(
             Ok(()) => {
                 rec.phase = Phase::Done;
                 metrics.on_job_finished(true);
+                events.publish(EventKind::JobDone { id: id.clone() });
             }
             Err(e) => {
                 rec.phase = Phase::Failed;
-                rec.error = Some(e);
+                rec.error = Some(e.clone());
                 metrics.on_job_finished(false);
+                events.publish(EventKind::JobFailed {
+                    id: id.clone(),
+                    error: e,
+                });
             }
         }
     }
@@ -657,9 +700,11 @@ fn runner_loop(
 
 #[cfg(test)]
 mod tests {
+    use super::super::events::{Delivery, DEFAULT_EVENTS_RING};
     use super::*;
     use crate::config::RampStep;
     use crate::sim::{DAY, HOUR};
+    use std::time::Duration;
 
     fn tiny_base() -> CampaignConfig {
         let mut c = CampaignConfig::default();
@@ -774,6 +819,18 @@ mod tests {
     }
 
     fn table(queue_max: usize, runners: usize) -> JobTable {
+        table_on_bus(
+            queue_max,
+            runners,
+            Arc::new(EventBus::new(DEFAULT_EVENTS_RING)),
+        )
+    }
+
+    fn table_on_bus(
+        queue_max: usize,
+        runners: usize,
+        events: Arc<EventBus>,
+    ) -> JobTable {
         JobTable::start(
             queue_max,
             runners,
@@ -781,6 +838,8 @@ mod tests {
             Arc::new(ReplayPool::new(1)),
             idle_fleet(),
             Arc::new(Metrics::new()),
+            events,
+            DEFAULT_JOBS_KEEP,
         )
     }
 
@@ -852,6 +911,8 @@ mod tests {
             Arc::new(ReplayPool::new(1)),
             idle_fleet(),
             Arc::new(Metrics::new()),
+            Arc::new(EventBus::new(DEFAULT_EVENTS_RING)),
+            DEFAULT_JOBS_KEEP,
         );
         // first job goes to the runner; make it slow enough to hold the
         // runner by using a real (if tiny) replay, then fill the queue
@@ -887,6 +948,8 @@ mod tests {
             Arc::new(ReplayPool::new(1)),
             idle_fleet(),
             Arc::new(Metrics::new()),
+            Arc::new(EventBus::new(DEFAULT_EVENTS_RING)),
+            DEFAULT_JOBS_KEEP,
         );
         match t.submit(s) {
             Admission::Accepted { id } => {
@@ -936,6 +999,8 @@ mod tests {
             Arc::new(ReplayPool::new(1)),
             idle_fleet(),
             Arc::new(Metrics::new()),
+            Arc::new(EventBus::new(DEFAULT_EVENTS_RING)),
+            DEFAULT_JOBS_KEEP,
         );
         let s = spec("evict", 1);
         let key = s.key.clone();
@@ -985,15 +1050,15 @@ mod tests {
         st.jobs.insert("running".into(), mk(Phase::Running));
         st.order.push_back("running".into());
         // ...followed by more finished records than the cap allows
-        for i in 0..(MAX_TRACKED_JOBS + 10) {
+        for i in 0..(DEFAULT_JOBS_KEEP + 10) {
             let id = format!("done-{i}");
             st.jobs.insert(id.clone(), mk(Phase::Done));
             st.order.push_back(id);
         }
-        gc(&mut st);
+        gc(&mut st, DEFAULT_JOBS_KEEP);
         assert_eq!(
             st.order.len(),
-            MAX_TRACKED_JOBS,
+            DEFAULT_JOBS_KEEP,
             "gc must reclaim past an unfinished front entry"
         );
         assert!(
@@ -1003,7 +1068,72 @@ mod tests {
         assert!(!st.jobs.contains_key("done-0"), "oldest finished go");
         assert!(st
             .jobs
-            .contains_key(&format!("done-{}", MAX_TRACKED_JOBS + 9)));
+            .contains_key(&format!("done-{}", DEFAULT_JOBS_KEEP + 9)));
+    }
+
+    #[test]
+    fn gc_honors_a_small_jobs_keep() {
+        let mut st = JobsInner {
+            jobs: HashMap::new(),
+            pending: VecDeque::new(),
+            order: VecDeque::new(),
+        };
+        let now = Instant::now();
+        for i in 0..10 {
+            let id = format!("done-{i}");
+            st.jobs.insert(
+                id.clone(),
+                JobRecord {
+                    phase: Phase::Done,
+                    scenarios: 1,
+                    submitted: now,
+                    started: None,
+                    finished: None,
+                    error: None,
+                    spec: None,
+                },
+            );
+            st.order.push_back(id);
+        }
+        gc(&mut st, 2);
+        assert_eq!(st.order.len(), 2);
+        assert!(!st.jobs.contains_key("done-0"));
+        assert!(st.jobs.contains_key("done-8"));
+        assert!(st.jobs.contains_key("done-9"));
+    }
+
+    #[test]
+    fn lifecycle_publishes_typed_events_in_order() {
+        let bus = Arc::new(EventBus::new(64));
+        let mut sub = bus.subscribe(None);
+        let t = table_on_bus(8, 1, Arc::clone(&bus));
+        let id = match t.submit(spec("evented", 4)) {
+            Admission::Accepted { id } => id,
+            other => panic!("{other:?}"),
+        };
+        wait_done(&t, &id);
+        let mut names = Vec::new();
+        while names.len() < 3 {
+            match sub.next(Duration::from_secs(5)) {
+                Delivery::Batch { events, dropped, .. } => {
+                    assert_eq!(dropped, 0, "64-slot ring cannot wrap");
+                    names.extend(
+                        events.iter().map(|e| e.kind.name().to_string()),
+                    );
+                }
+                other => panic!("missing events: {names:?} ({other:?})"),
+            }
+        }
+        assert_eq!(
+            names,
+            vec!["job.queued", "job.running", "job.done"],
+            "exact lifecycle, in sequence order, exactly once"
+        );
+        // nothing further arrives for a finished job
+        assert!(matches!(
+            sub.next(Duration::from_millis(50)),
+            Delivery::Idle
+        ));
     }
 
     #[test]

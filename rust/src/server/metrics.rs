@@ -52,6 +52,12 @@ pub struct Gauges {
     pub jobs_running: usize,
     /// Worker-fleet accounting, sampled from the lease table.
     pub fleet: FleetStats,
+    /// Event-bus accounting, sampled from `server::events::EventBus`
+    /// (the bus owns its own atomics; scrapes read them like any other
+    /// component gauge).
+    pub events_published: u64,
+    pub events_dropped: u64,
+    pub events_subscribers: u64,
 }
 
 /// One server's counter set.  All methods take `&self`; the struct is
@@ -226,6 +232,19 @@ impl Metrics {
         self.jobs_submitted.load(Ordering::Relaxed)
     }
 
+    /// Accumulated replay goodput in hours (the ops monitor samples
+    /// this into the `goodput.hours` time series).
+    pub fn goodput_hours(&self) -> f64 {
+        self.replay_goodput_millihours.load(Ordering::Relaxed) as f64
+            / 1000.0
+    }
+
+    /// Accumulated replay badput in hours.
+    pub fn wasted_hours(&self) -> f64 {
+        self.replay_wasted_millihours.load(Ordering::Relaxed) as f64
+            / 1000.0
+    }
+
     /// Render the text exposition over the sampled gauges.
     pub fn render(&self, g: &Gauges) -> String {
         let mut out = String::with_capacity(1536);
@@ -367,6 +386,18 @@ impl Metrics {
             "icecloud_fleet_spot_checks_total{verdict=\"fail\"}",
             g.fleet.spot_checks_fail.to_string(),
         );
+        line(
+            "icecloud_events_published_total",
+            g.events_published.to_string(),
+        );
+        line(
+            "icecloud_events_dropped_total",
+            g.events_dropped.to_string(),
+        );
+        line(
+            "icecloud_events_subscribers",
+            g.events_subscribers.to_string(),
+        );
         let samples = self
             .latency
             .lock()
@@ -422,6 +453,9 @@ mod tests {
                 spot_checks_pass: 4,
                 spot_checks_fail: 1,
             },
+            events_published: 12,
+            events_dropped: 3,
+            events_subscribers: 2,
         }
     }
 
@@ -507,6 +541,26 @@ mod tests {
             text.contains("icecloud_result_store_bytes 2048"),
             "{text}"
         );
+        assert!(
+            text.contains("icecloud_events_published_total 12"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_events_dropped_total 3"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_events_subscribers 2"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn goodput_accessors_mirror_the_exposition() {
+        let m = Metrics::new();
+        m.on_sweep_computed(2, 3.5, 0.25);
+        assert!((m.goodput_hours() - 3.5).abs() < 1e-9);
+        assert!((m.wasted_hours() - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! with a shared replay worker pool and async job table (`jobs`), a
 //! two-tier content-addressed result cache — in-memory LRU with
 //! single-flight deduplication (`cache`) over a persistent disk store
-//! (`store`) — request routing (`router`) and a `/metrics` exposition
-//! (`metrics`).
+//! (`store`) — request routing (`router`), a `/metrics` exposition
+//! (`metrics`), and a live operations plane: a bounded broadcast bus
+//! of typed transitions (`events`) streamed over `GET /events` SSE,
+//! plus a wall-clock monitoring database (`ops`) behind `/timeseries`
+//! and the `/dash` burn-down board.
 //!
 //! Determinism is the scaling story: identical scenario → byte-
 //! identical summary, so the cache turns heavy identical-request
@@ -30,23 +33,28 @@
 //! ```
 
 pub mod cache;
+pub mod events;
 pub mod fleet;
 pub mod http;
 pub mod jobs;
 pub mod metrics;
+pub mod ops;
 pub mod router;
 pub mod store;
 
 pub use cache::ResultCache;
+pub use events::{Event, EventBus, EventKind};
 pub use fleet::{FleetOptions, FleetTable, WorkerOptions, WorkerReport};
 pub use jobs::{JobTable, ReplayPool};
 pub use metrics::Metrics;
+pub use ops::OpsMonitor;
 pub use router::AppState;
 pub use store::DiskStore;
 
 use crate::config::CampaignConfig;
+use events::Delivery;
 use http::{read_request, write_response, ReadError, Response};
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -58,6 +66,13 @@ const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Bounded accept→handler handoff: connections beyond this queue up in
 /// the kernel backlog instead of unbounded process memory.
 const ACCEPT_QUEUE: usize = 64;
+/// How often an idle SSE stream emits a comment, so clients and proxies
+/// can tell a quiet bus from a dead connection.
+const SSE_HEARTBEAT: Duration = Duration::from_secs(2);
+/// Longest one stalled subscriber socket may pin a handler thread; a
+/// write that cannot finish within this abandons the stream (the client
+/// reconnects with `Last-Event-ID` and gets an honest gap).
+const SSE_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Server configuration.
 pub struct ServeConfig {
@@ -79,6 +94,12 @@ pub struct ServeConfig {
     pub store_dir: Option<PathBuf>,
     /// Lease/heartbeat knobs for the remote worker fleet.
     pub fleet: FleetOptions,
+    /// Event-bus ring capacity (`[ops] events_ring`).
+    pub events_ring: usize,
+    /// Ops sampler cadence in seconds (`[ops] sample_every_s`).
+    pub sample_every_s: u64,
+    /// Finished job records `GET /jobs` retains (`[server] jobs_keep`).
+    pub jobs_keep: usize,
     /// Base campaign every request's scenario spec resolves against.
     pub base: CampaignConfig,
 }
@@ -96,6 +117,9 @@ impl Default for ServeConfig {
             job_runners: 2,
             store_dir: None,
             fleet: FleetOptions::default(),
+            events_ring: events::DEFAULT_EVENTS_RING,
+            sample_every_s: ops::DEFAULT_SAMPLE_EVERY_S,
+            jobs_keep: jobs::DEFAULT_JOBS_KEEP,
             base: CampaignConfig::default(),
         }
     }
@@ -105,6 +129,7 @@ impl Default for ServeConfig {
 pub struct Server {
     listener: TcpListener,
     http_threads: usize,
+    sample_every_s: u64,
     state: Arc<AppState>,
 }
 
@@ -112,14 +137,24 @@ impl Server {
     pub fn bind(cfg: ServeConfig) -> Result<Server, String> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        // one bus, attached to every producer before anything is shared
+        let events = Arc::new(EventBus::new(cfg.events_ring));
         let disk = match &cfg.store_dir {
-            Some(dir) => Some(DiskStore::open(dir)?),
+            Some(dir) => {
+                let mut d = DiskStore::open(dir)?;
+                d.set_events(Arc::clone(&events));
+                Some(d)
+            }
             None => None,
         };
-        let cache =
-            Arc::new(ResultCache::with_disk(cfg.cache_bytes, disk));
+        let mut cache = ResultCache::with_disk(cfg.cache_bytes, disk);
+        cache.set_events(Arc::clone(&events));
+        let cache = Arc::new(cache);
         let pool = Arc::new(ReplayPool::new(cfg.replay_threads));
-        let fleet = Arc::new(FleetTable::new(cfg.fleet));
+        let fleet = Arc::new(FleetTable::with_events(
+            cfg.fleet,
+            Arc::clone(&events),
+        ));
         let metrics = Arc::new(Metrics::new());
         let jobs = JobTable::start(
             cfg.queue_max,
@@ -128,6 +163,8 @@ impl Server {
             Arc::clone(&pool),
             Arc::clone(&fleet),
             Arc::clone(&metrics),
+            Arc::clone(&events),
+            cfg.jobs_keep,
         );
         let state = Arc::new(AppState {
             base: cfg.base,
@@ -136,10 +173,13 @@ impl Server {
             fleet,
             metrics,
             jobs,
+            events,
+            ops: Arc::new(OpsMonitor::new()),
         });
         Ok(Server {
             listener,
             http_threads: cfg.http_threads.max(1),
+            sample_every_s: cfg.sample_every_s.max(1),
             state,
         })
     }
@@ -169,6 +209,33 @@ impl Server {
     }
 
     fn serve_until(self, stop: &AtomicBool) -> Result<(), String> {
+        // ops sampler: one thread feeding the /timeseries and /dash
+        // burn-down series.  It has its own stop flag so it can be
+        // joined here regardless of how the caller's flag is shared.
+        let sampler_stop = Arc::new(AtomicBool::new(false));
+        let sampler = {
+            let state = Arc::clone(&self.state);
+            let stop = Arc::clone(&sampler_stop);
+            let every = Duration::from_secs(self.sample_every_s);
+            std::thread::spawn(move || {
+                sample_ops(&state);
+                while !stop.load(Ordering::SeqCst) {
+                    // sleep in short slices so shutdown never waits out
+                    // a full sampling period
+                    let mut slept = Duration::ZERO;
+                    while slept < every && !stop.load(Ordering::SeqCst) {
+                        let slice = Duration::from_millis(50);
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    sample_ops(&state);
+                }
+            })
+        };
+
         let (tx, rx) = mpsc::sync_channel::<TcpStream>(ACCEPT_QUEUE);
         let rx = Arc::new(Mutex::new(rx));
         let mut handlers = Vec::with_capacity(self.http_threads);
@@ -213,11 +280,33 @@ impl Server {
             }
         }
         drop(tx);
+        // in-flight SSE streams are parked in Subscription::next; close
+        // the bus so they observe Closed instead of waiting out a
+        // heartbeat each
+        self.state.events.close();
         for h in handlers {
             let _ = h.join();
         }
+        sampler_stop.store(true, Ordering::SeqCst);
+        let _ = sampler.join();
         Ok(())
     }
+}
+
+/// One sampler tick: the wall-clock burn-down series (DESIGN.md §17).
+fn sample_ops(state: &AppState) {
+    let (jobs_queued, jobs_running) = state.jobs.counts();
+    let fleet = state.fleet.stats();
+    state.ops.record_all(&[
+        ("jobs.queued", jobs_queued as f64),
+        ("jobs.running", jobs_running as f64),
+        ("replay.queue_depth", state.pool.queue_depth() as f64),
+        ("fleet.leases_outstanding", fleet.leases_outstanding as f64),
+        ("fleet.units_pending", fleet.units_pending as f64),
+        ("goodput.hours", state.metrics.goodput_hours()),
+        ("wasted.hours", state.metrics.wasted_hours()),
+        ("events.published", state.events.published_total() as f64),
+    ]);
 }
 
 /// Handle to a background server (tests and the load generator).
@@ -243,6 +332,8 @@ impl ServerHandle {
     /// (`JobTable::drop`), so a shut-down server leaves no threads.
     pub fn shutdown(self) {
         self.stop.store(true, Ordering::SeqCst);
+        // wake parked SSE streams now rather than at handler join
+        self.state.events.close();
         // unblock the accept loop with one last connection
         let _ = TcpStream::connect(self.addr);
         let _ = self.accept_thread.join();
@@ -279,7 +370,18 @@ fn handle_connection(state: &AppState, stream: TcpStream) {
         let keep_alive = req.keep_alive();
         let t0 = Instant::now();
         state.metrics.on_request();
-        let resp = router::route(state, &req);
+        let resp = match router::dispatch(state, &req) {
+            router::Routed::Response(resp) => resp,
+            router::Routed::Events { resume } => {
+                // the stream owns the connection from here; count the
+                // hand-off as the response
+                state
+                    .metrics
+                    .on_response(200, t0.elapsed().as_secs_f64());
+                serve_sse(state, &mut write_half, resume);
+                return;
+            }
+        };
         state
             .metrics
             .on_response(resp.status, t0.elapsed().as_secs_f64());
@@ -287,6 +389,46 @@ fn handle_connection(state: &AppState, stream: TcpStream) {
             return;
         }
         if !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Stream the event bus over one connection until the client hangs up,
+/// a write stalls past [`SSE_WRITE_TIMEOUT`], or the bus closes.  The
+/// head is written by hand: SSE bodies are unbounded, so the
+/// `Content-Length` framing in `write_response` cannot apply.
+fn serve_sse(
+    state: &AppState,
+    stream: &mut TcpStream,
+    resume: Option<u64>,
+) {
+    let _ = stream.set_write_timeout(Some(SSE_WRITE_TIMEOUT));
+    let head = "HTTP/1.1 200 OK\r\n\
+                Content-Type: text/event-stream\r\n\
+                Cache-Control: no-cache\r\n\
+                Connection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    let mut sub = state.events.subscribe(resume);
+    loop {
+        let mut out = String::new();
+        match sub.next(SSE_HEARTBEAT) {
+            Delivery::Batch { dropped, resume, events: batch } => {
+                if dropped > 0 {
+                    out.push_str(&events::gap_frame(resume, dropped));
+                }
+                for ev in &batch {
+                    out.push_str(&ev.sse_frame());
+                }
+            }
+            Delivery::Idle => out.push_str(": heartbeat\n\n"),
+            Delivery::Closed => return,
+        }
+        if stream.write_all(out.as_bytes()).is_err()
+            || stream.flush().is_err()
+        {
             return;
         }
     }

@@ -1,0 +1,390 @@
+//! Wall-clock operations history: the `/timeseries` and `/dash` data
+//! plane (DESIGN.md §17).
+//!
+//! The campaign simulator already has a monitoring database
+//! (`monitoring::timeseries::Monitor`) keyed by *sim* time; this module
+//! reuses it for the *server's own* life, keyed by seconds since
+//! startup.  A sampler thread (see `server::mod`) records queue depth,
+//! running jobs, fleet lease counts and the goodput/wasted-hour
+//! counters every `[ops] sample_every_s`; the router renders the
+//! result three ways:
+//!
+//! * `GET /timeseries` — an index of every series with summary stats;
+//! * `GET /timeseries/<name>` — one series, downsampled to a bounded
+//!   point budget (`TimeSeries::downsample`);
+//! * `GET /dash` (+ `/dash.json`) — a server-rendered SVG burn-down
+//!   board, one panel per series, in the spirit of the paper's fig. 3
+//!   completed-units-over-time views.
+//!
+//! Everything here is read-side only: sampling takes one mutex briefly
+//! and the renderers copy what they need out, so a slow dashboard
+//! scrape never holds up the sampler or any request handler.
+
+use crate::monitoring::timeseries::Monitor;
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Default sampling cadence in seconds (`[ops] sample_every_s`).
+pub const DEFAULT_SAMPLE_EVERY_S: u64 = 5;
+
+/// Point budget for `/timeseries/<name>` and the dash polylines: keeps
+/// a day of 5-second samples (17k points) to a bounded payload.
+const MAX_POINTS: usize = 512;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The server's own monitoring database, keyed by uptime seconds.
+pub struct OpsMonitor {
+    start: Instant,
+    inner: Mutex<Monitor>,
+}
+
+impl OpsMonitor {
+    pub fn new() -> OpsMonitor {
+        OpsMonitor { start: Instant::now(), inner: Mutex::new(Monitor::new()) }
+    }
+
+    /// Seconds since the server started (the series time axis).
+    pub fn uptime_s(&self) -> u64 {
+        self.start.elapsed().as_secs()
+    }
+
+    /// Record one sample at the current uptime.
+    pub fn record(&self, name: &str, value: f64) {
+        let t = self.uptime_s();
+        lock(&self.inner).sample(name, t, value);
+    }
+
+    /// Record several samples on one shared tick (one lock, aligned
+    /// timestamps — what the sampler thread uses).
+    pub fn record_all(&self, samples: &[(&str, f64)]) {
+        let t = self.uptime_s();
+        let mut g = lock(&self.inner);
+        for (name, value) in samples {
+            g.sample(name, t, *value);
+        }
+    }
+
+    /// `GET /timeseries`: every series with its summary stats.
+    pub fn index_json(&self) -> Json {
+        let g = lock(&self.inner);
+        let mut series = Vec::new();
+        for name in g.names() {
+            let s = g.get(name).expect("listed series exists");
+            let sum = s.summary();
+            let mut o = Json::obj();
+            o.set("name", Json::from(name));
+            o.set("samples", Json::from(sum.samples));
+            o.set("min", Json::from(sum.min));
+            o.set("max", Json::from(sum.max));
+            o.set("mean", Json::from(sum.mean));
+            o.set("last", Json::from(sum.last));
+            series.push(o);
+        }
+        let mut out = Json::obj();
+        out.set("uptime_s", Json::from(self.uptime_s()));
+        out.set("count", Json::from(series.len()));
+        out.set("series", Json::Arr(series));
+        out
+    }
+
+    /// `GET /timeseries/<name>`: one series, downsampled.  `None` when
+    /// the series does not exist (the router's 404).
+    pub fn series_json(&self, name: &str) -> Option<Json> {
+        let g = lock(&self.inner);
+        let s = g.get(name)?;
+        let points = s.downsample(MAX_POINTS);
+        let mut o = Json::obj();
+        o.set("name", Json::from(name));
+        o.set("samples", Json::from(s.len()));
+        o.set("returned", Json::from(points.len()));
+        o.set(
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|(t, v)| {
+                        Json::Arr(vec![Json::from(*t), Json::from(*v)])
+                    })
+                    .collect(),
+            ),
+        );
+        Some(o)
+    }
+
+    /// Copy out every series' downsampled points (dash rendering).
+    fn snapshot(&self, budget: usize) -> Vec<(String, Vec<(SimTime, f64)>)> {
+        let g = lock(&self.inner);
+        let mut out = Vec::new();
+        for name in g.names() {
+            let s = g.get(name).expect("listed series exists");
+            out.push((name.to_string(), s.downsample(budget)));
+        }
+        out
+    }
+
+    /// `GET /dash.json`: the machine-readable twin of the SVG board.
+    pub fn dash_json(&self) -> Json {
+        let mut series = Vec::new();
+        for (name, points) in self.snapshot(DASH_POINTS) {
+            let last = points.last().map(|(_, v)| *v).unwrap_or(0.0);
+            let mut o = Json::obj();
+            o.set("name", Json::from(name));
+            o.set("last", Json::from(last));
+            o.set(
+                "points",
+                Json::Arr(
+                    points
+                        .iter()
+                        .map(|(t, v)| {
+                            Json::Arr(vec![Json::from(*t), Json::from(*v)])
+                        })
+                        .collect(),
+                ),
+            );
+            series.push(o);
+        }
+        let mut out = Json::obj();
+        out.set("uptime_s", Json::from(self.uptime_s()));
+        out.set("series", Json::Arr(series));
+        out
+    }
+
+    /// `GET /dash`: the SVG burn-down board.
+    pub fn dash_svg(&self) -> String {
+        render_svg(self.uptime_s(), &self.snapshot(DASH_POINTS))
+    }
+}
+
+impl Default for OpsMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Polyline point budget per dash panel.
+const DASH_POINTS: usize = 128;
+
+/// Panel geometry: two columns of fixed-size panels.
+const PANEL_W: u64 = 380;
+const PANEL_H: u64 = 120;
+const PANEL_PAD: u64 = 10;
+const HEADER_H: u64 = 40;
+const COLS: u64 = 2;
+
+/// Render the board: one bordered panel per series, each polyline
+/// scaled to its own [min, max] so every shape is readable regardless
+/// of units (GPU counts vs accumulated hours).
+fn render_svg(uptime_s: u64, series: &[(String, Vec<(SimTime, f64)>)]) -> String {
+    let rows = (series.len() as u64).div_ceil(COLS).max(1);
+    let width = COLS * (PANEL_W + PANEL_PAD) + PANEL_PAD;
+    let height = HEADER_H + rows * (PANEL_H + PANEL_PAD) + PANEL_PAD;
+    let mut out = String::with_capacity(4096);
+    out.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{width}\" \
+         height=\"{height}\" viewBox=\"0 0 {width} {height}\" \
+         font-family=\"monospace\" font-size=\"12\">\n"
+    ));
+    out.push_str(&format!(
+        "<rect width=\"{width}\" height=\"{height}\" fill=\"#0d1117\"/>\n\
+         <text x=\"{PANEL_PAD}\" y=\"24\" fill=\"#e6edf3\" \
+         font-size=\"15\">icecloud ops — uptime {uptime_s} s</text>\n"
+    ));
+    if series.is_empty() {
+        out.push_str(&format!(
+            "<text x=\"{PANEL_PAD}\" y=\"{}\" fill=\"#8b949e\">\
+             (no samples yet)</text>\n",
+            HEADER_H + 20
+        ));
+    }
+    for (i, (name, points)) in series.iter().enumerate() {
+        let col = i as u64 % COLS;
+        let row = i as u64 / COLS;
+        let x0 = PANEL_PAD + col * (PANEL_W + PANEL_PAD);
+        let y0 = HEADER_H + row * (PANEL_H + PANEL_PAD);
+        out.push_str(&render_panel(name, points, x0, y0));
+    }
+    out.push_str("</svg>\n");
+    out
+}
+
+fn render_panel(
+    name: &str,
+    points: &[(SimTime, f64)],
+    x0: u64,
+    y0: u64,
+) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!(
+        "<rect x=\"{x0}\" y=\"{y0}\" width=\"{PANEL_W}\" \
+         height=\"{PANEL_H}\" fill=\"#161b22\" stroke=\"#30363d\"/>\n"
+    ));
+    let last = points.last().map(|(_, v)| *v).unwrap_or(0.0);
+    out.push_str(&format!(
+        "<text x=\"{}\" y=\"{}\" fill=\"#e6edf3\">{name} = {last}</text>\n",
+        x0 + 8,
+        y0 + 16,
+    ));
+    if points.len() < 2 {
+        return out;
+    }
+    let (t_min, t_max) = (points[0].0, points[points.len() - 1].0);
+    let mut v_min = f64::INFINITY;
+    let mut v_max = f64::NEG_INFINITY;
+    for (_, v) in points {
+        v_min = v_min.min(*v);
+        v_max = v_max.max(*v);
+    }
+    // plot area inside the panel, below the title
+    let (px, py) = (x0 as f64 + 8.0, y0 as f64 + 26.0);
+    let (pw, ph) = (PANEL_W as f64 - 16.0, PANEL_H as f64 - 36.0);
+    let t_span = (t_max - t_min).max(1) as f64;
+    let v_span = v_max - v_min;
+    let mut poly = String::new();
+    for (t, v) in points {
+        let x = px + (t - t_min) as f64 / t_span * pw;
+        // a flat series draws mid-panel instead of dividing by zero
+        let frac =
+            if v_span > 0.0 { (v - v_min) / v_span } else { 0.5 };
+        let y = py + (1.0 - frac) * ph;
+        poly.push_str(&format!("{x:.1},{y:.1} "));
+    }
+    out.push_str(&format!(
+        "<polyline points=\"{}\" fill=\"none\" stroke=\"#58a6ff\" \
+         stroke-width=\"1.5\"/>\n",
+        poly.trim_end()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn index_lists_series_with_finite_summaries() {
+        let m = OpsMonitor::new();
+        m.record("jobs.queued", 3.0);
+        m.record("jobs.queued", 5.0);
+        m.record("jobs.running", 1.0);
+        let idx = m.index_json();
+        assert_eq!(idx.get("count").unwrap().as_u64(), Some(2));
+        let text = idx.to_string_compact();
+        // NaN/−inf would serialize as null / fail strict reparse
+        assert!(json::parse(&text).is_ok(), "{text}");
+        assert!(!text.contains("null"), "{text}");
+        let series = idx.get("series").unwrap().as_arr().unwrap();
+        let queued = series
+            .iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some("jobs.queued"))
+            .unwrap();
+        assert_eq!(queued.get("samples").unwrap().as_u64(), Some(2));
+        assert_eq!(queued.get("max").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn record_all_shares_one_timestamp() {
+        let m = OpsMonitor::new();
+        m.record_all(&[("a", 1.0), ("b", 2.0)]);
+        let a = m.series_json("a").unwrap();
+        let b = m.series_json("b").unwrap();
+        let ta = a.get("points").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap()[0]
+            .as_u64();
+        let tb = b.get("points").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap()[0]
+            .as_u64();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn series_json_downsamples_to_the_budget() {
+        let m = OpsMonitor::new();
+        {
+            // drive the inner monitor directly so 2000 points don't
+            // need 2000 wall seconds
+            let mut g = m.inner.lock().unwrap();
+            for t in 0..2000u64 {
+                g.sample("busy", t, t as f64);
+            }
+        }
+        let s = m.series_json("busy").unwrap();
+        assert_eq!(s.get("samples").unwrap().as_u64(), Some(2000));
+        let returned = s.get("returned").unwrap().as_u64().unwrap();
+        assert!(returned <= MAX_POINTS as u64, "{returned}");
+        let pts = s.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len() as u64, returned);
+        // ends survive downsampling
+        assert_eq!(pts[0].as_arr().unwrap()[0].as_u64(), Some(0));
+        assert_eq!(
+            pts[pts.len() - 1].as_arr().unwrap()[0].as_u64(),
+            Some(1999)
+        );
+    }
+
+    #[test]
+    fn unknown_series_is_none() {
+        assert!(OpsMonitor::new().series_json("nope").is_none());
+    }
+
+    #[test]
+    fn empty_dash_renders_placeholder() {
+        let svg = OpsMonitor::new().dash_svg();
+        assert!(svg.starts_with("<svg "), "{svg}");
+        assert!(svg.contains("(no samples yet)"), "{svg}");
+        assert!(svg.ends_with("</svg>\n"), "{svg}");
+    }
+
+    #[test]
+    fn dash_svg_draws_a_polyline_per_series() {
+        let m = OpsMonitor::new();
+        {
+            let mut g = m.inner.lock().unwrap();
+            for t in 0..50u64 {
+                g.sample("jobs.done", t, t as f64);
+                g.sample("jobs.queued", t, (50 - t) as f64);
+            }
+        }
+        let svg = m.dash_svg();
+        assert_eq!(svg.matches("<polyline").count(), 2, "{svg}");
+        assert!(svg.contains("jobs.done"), "{svg}");
+        assert!(svg.contains("jobs.queued"), "{svg}");
+    }
+
+    #[test]
+    fn flat_series_still_renders() {
+        let m = OpsMonitor::new();
+        {
+            let mut g = m.inner.lock().unwrap();
+            for t in 0..10u64 {
+                g.sample("steady", t, 4.0);
+            }
+        }
+        let svg = m.dash_svg();
+        assert_eq!(svg.matches("<polyline").count(), 1, "{svg}");
+        assert!(!svg.contains("NaN"), "{svg}");
+        assert!(!svg.contains("inf"), "{svg}");
+    }
+
+    #[test]
+    fn dash_json_matches_the_board() {
+        let m = OpsMonitor::new();
+        m.record("goodput.hours", 1.5);
+        let d = m.dash_json();
+        let series = d.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 1);
+        assert_eq!(
+            series[0].get("name").unwrap().as_str(),
+            Some("goodput.hours")
+        );
+        assert_eq!(series[0].get("last").unwrap().as_f64(), Some(1.5));
+        assert!(json::parse(&d.to_string_compact()).is_ok());
+    }
+}

@@ -14,6 +14,10 @@
 //! | `POST /fleet/lease`       | pull one scenario unit under a lease          |
 //! | `POST /fleet/heartbeat`   | extend a lease's deadline                     |
 //! | `POST /fleet/complete`    | stream a finished unit's row back             |
+//! | `GET /events`             | live SSE stream of typed ops events           |
+//! | `GET /timeseries`         | index of the server's wall-clock series       |
+//! | `GET /timeseries/<name>`  | one series, downsampled                       |
+//! | `GET /dash`               | the SVG burn-down board (`/dash.json` twin)   |
 //!
 //! `POST /sweep` is where the subsystem earns its keep: resolve the
 //! spec against the server's base campaign, derive the content address
@@ -29,6 +33,7 @@ use super::fleet::CompleteOutcome;
 use super::http::{Request, Response};
 use super::jobs::{Admission, JobSpec};
 use super::metrics::Gauges;
+use super::ops::OpsMonitor;
 use crate::config::CampaignConfig;
 use crate::coordinator::ScenarioConfig;
 use crate::sweep;
@@ -50,16 +55,85 @@ pub struct AppState {
     pub fleet: std::sync::Arc<super::fleet::FleetTable>,
     pub metrics: std::sync::Arc<super::metrics::Metrics>,
     pub jobs: super::jobs::JobTable,
+    pub events: std::sync::Arc<super::events::EventBus>,
+    pub ops: std::sync::Arc<OpsMonitor>,
 }
 
-/// Dispatch one parsed request to its handler.  The query string is
-/// split off before matching, so `/healthz?x=1` still routes; only
-/// `POST /sweep` interprets it.
-pub fn route(state: &AppState, req: &Request) -> Response {
+/// Where one request goes: almost everything is an ordinary
+/// `Content-Length`-framed [`Response`], but `GET /events` hands the
+/// connection over to the SSE writer in `server::mod`, which owns the
+/// socket from then on.
+pub enum Routed {
+    Response(Response),
+    /// Stream events over SSE; `resume` carries the parsed
+    /// `Last-Event-ID`, so a reconnecting client replays only what it
+    /// missed.
+    Events { resume: Option<u64> },
+}
+
+/// Route one request, separating the SSE hand-off from plain
+/// responses.  The query string is split off before matching, so
+/// `/healthz?x=1` still routes; only `POST /sweep` interprets it.
+pub fn dispatch(state: &AppState, req: &Request) -> Routed {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, Some(q)),
         None => (req.path.as_str(), None),
     };
+    if path == "/events" {
+        return events_route(req, query);
+    }
+    Routed::Response(route_plain(state, req, path, query))
+}
+
+/// [`dispatch`] flattened for callers that cannot stream (unit tests):
+/// the SSE case becomes an empty `text/event-stream` response.
+pub fn route(state: &AppState, req: &Request) -> Response {
+    match dispatch(state, req) {
+        Routed::Response(resp) => resp,
+        Routed::Events { .. } => Response {
+            status: 200,
+            content_type: "text/event-stream",
+            body: std::sync::Arc::new(Vec::new()),
+            extra_headers: Vec::new(),
+        },
+    }
+}
+
+/// `GET /events`: validate strictly *before* the connection commits to
+/// streaming — after the SSE head is written there is no way to signal
+/// an error in-band.
+fn events_route(req: &Request, query: Option<&str>) -> Routed {
+    if req.method != "GET" {
+        return Routed::Response(
+            Response::error(405, "method not allowed")
+                .with_header("Allow", "GET"),
+        );
+    }
+    if query.is_some() {
+        return Routed::Response(Response::error(
+            400,
+            "/events takes no query parameters; \
+             resume with the Last-Event-ID header",
+        ));
+    }
+    match req.header("last-event-id") {
+        None => Routed::Events { resume: None },
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(seq) => Routed::Events { resume: Some(seq) },
+            Err(_) => Routed::Response(Response::error(
+                400,
+                "Last-Event-ID must be a decimal event sequence number",
+            )),
+        },
+    }
+}
+
+fn route_plain(
+    state: &AppState,
+    req: &Request,
+    path: &str,
+    query: Option<&str>,
+) -> Response {
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             Response::json(200, b"{\"status\":\"ok\"}\n".to_vec())
@@ -73,6 +147,32 @@ pub fn route(state: &AppState, req: &Request) -> Response {
         }
         ("GET", path) if path.starts_with("/results/") => {
             results(state, &path["/results/".len()..])
+        }
+        // the ops read plane is strict the same way the fleet protocol
+        // is: a query string is a caller bug, not a silent no-op
+        ("GET", p @ ("/timeseries" | "/dash" | "/dash.json")) => {
+            if query.is_some() {
+                Response::error(
+                    400,
+                    "ops endpoints take no query parameters",
+                )
+            } else {
+                match p {
+                    "/timeseries" => timeseries_index(state),
+                    "/dash" => Response::svg(200, state.ops.dash_svg()),
+                    _ => json_doc(200, state.ops.dash_json()),
+                }
+            }
+        }
+        ("GET", path) if path.starts_with("/timeseries/") => {
+            if query.is_some() {
+                Response::error(
+                    400,
+                    "ops endpoints take no query parameters",
+                )
+            } else {
+                timeseries_series(state, &path["/timeseries/".len()..])
+            }
         }
         (
             "POST",
@@ -102,15 +202,18 @@ pub fn route(state: &AppState, req: &Request) -> Response {
         ) => Response::error(405, "method not allowed")
             .with_header("Allow", "POST"),
         // known paths, wrong method
-        (_, "/healthz" | "/matrix" | "/metrics" | "/jobs") => {
-            Response::error(405, "method not allowed")
-                .with_header("Allow", "GET")
-        }
+        (
+            _,
+            "/healthz" | "/matrix" | "/metrics" | "/jobs"
+            | "/timeseries" | "/dash" | "/dash.json",
+        ) => Response::error(405, "method not allowed")
+            .with_header("Allow", "GET"),
         (_, "/sweep") => Response::error(405, "method not allowed")
             .with_header("Allow", "POST"),
         (_, path)
             if path.starts_with("/results/")
-                || path.starts_with("/jobs/") =>
+                || path.starts_with("/jobs/")
+                || path.starts_with("/timeseries/") =>
         {
             Response::error(405, "method not allowed")
                 .with_header("Allow", "GET")
@@ -147,8 +250,29 @@ fn metrics(state: &AppState) -> Response {
             jobs_queued,
             jobs_running,
             fleet: state.fleet.stats(),
+            events_published: state.events.published_total(),
+            events_dropped: state.events.dropped_total(),
+            events_subscribers: state.events.subscriber_count(),
         }),
     )
+}
+
+/// Pretty-print a JSON document as a 200/404/... response body.
+fn json_doc(status: u16, doc: Json) -> Response {
+    let mut body = doc.to_string_pretty().into_bytes();
+    body.push(b'\n');
+    Response::json(status, body)
+}
+
+fn timeseries_index(state: &AppState) -> Response {
+    json_doc(200, state.ops.index_json())
+}
+
+fn timeseries_series(state: &AppState, name: &str) -> Response {
+    match state.ops.series_json(name) {
+        Some(doc) => json_doc(200, doc),
+        None => Response::error(404, "no such series"),
+    }
 }
 
 /// Counter contract: `icecloud_sweep_cache_{hits,misses}_total` count
@@ -573,8 +697,9 @@ fn sweep_async(
 #[cfg(test)]
 mod tests {
     use super::super::cache::ResultCache;
+    use super::super::events::{EventBus, EventKind, DEFAULT_EVENTS_RING};
     use super::super::fleet::{FleetOptions, FleetTable};
-    use super::super::jobs::{JobTable, ReplayPool};
+    use super::super::jobs::{JobTable, ReplayPool, DEFAULT_JOBS_KEEP};
     use super::super::metrics::Metrics;
     use super::*;
     use crate::config::RampStep;
@@ -592,9 +717,15 @@ mod tests {
     }
 
     fn tiny_state() -> AppState {
-        let cache = Arc::new(ResultCache::new(1 << 20));
+        let events = Arc::new(EventBus::new(DEFAULT_EVENTS_RING));
+        let mut cache = ResultCache::new(1 << 20);
+        cache.set_events(Arc::clone(&events));
+        let cache = Arc::new(cache);
         let pool = Arc::new(ReplayPool::new(2));
-        let fleet = Arc::new(FleetTable::new(FleetOptions::default()));
+        let fleet = Arc::new(FleetTable::with_events(
+            FleetOptions::default(),
+            Arc::clone(&events),
+        ));
         let metrics = Arc::new(Metrics::new());
         let jobs = JobTable::start(
             4,
@@ -603,8 +734,19 @@ mod tests {
             Arc::clone(&pool),
             Arc::clone(&fleet),
             Arc::clone(&metrics),
+            Arc::clone(&events),
+            DEFAULT_JOBS_KEEP,
         );
-        AppState { base: tiny_base(), cache, pool, fleet, metrics, jobs }
+        AppState {
+            base: tiny_base(),
+            cache,
+            pool,
+            fleet,
+            metrics,
+            jobs,
+            events,
+            ops: Arc::new(OpsMonitor::new()),
+        }
     }
 
     fn get(path: &str) -> Request {
@@ -1053,6 +1195,122 @@ mod tests {
             &post("/fleet/complete", "application/json", &done),
         );
         assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn ops_routes_enforce_method_and_query_contracts() {
+        let state = tiny_state();
+        // wrong method: 405 with the Allow header, SSE included
+        for path in [
+            "/events",
+            "/timeseries",
+            "/timeseries/jobs.queued",
+            "/dash",
+            "/dash.json",
+        ] {
+            let r = Request { method: "DELETE".into(), ..get(path) };
+            let resp = route(&state, &r);
+            assert_eq!(resp.status, 405, "DELETE {path}");
+            assert_eq!(resp.header_value("Allow"), Some("GET"));
+        }
+        // query parameters are a hard error, not a silent no-op
+        for path in [
+            "/events?from=3",
+            "/timeseries?limit=9",
+            "/timeseries/jobs.queued?points=5",
+            "/dash?theme=light",
+            "/dash.json?pretty=1",
+        ] {
+            assert_eq!(route(&state, &get(path)).status, 400, "{path}");
+        }
+        // a malformed Last-Event-ID is a 400 before the stream starts,
+        // not a silently-fresh stream
+        let mut r = get("/events");
+        r.headers.push(("Last-Event-ID".into(), "abc".into()));
+        assert_eq!(route(&state, &r).status, 400);
+        // unknown series 404s
+        assert_eq!(route(&state, &get("/timeseries/nope")).status, 404);
+    }
+
+    #[test]
+    fn events_dispatch_separates_streams_from_responses() {
+        let state = tiny_state();
+        match dispatch(&state, &get("/events")) {
+            Routed::Events { resume: None } => {}
+            _ => panic!("expected a fresh event stream"),
+        }
+        let mut r = get("/events");
+        r.headers.push(("Last-Event-ID".into(), "17".into()));
+        match dispatch(&state, &r) {
+            Routed::Events { resume: Some(17) } => {}
+            _ => panic!("expected a resumed event stream"),
+        }
+        // the flattened route() twin is an empty event-stream response
+        let resp = route(&state, &get("/events"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/event-stream");
+    }
+
+    #[test]
+    fn timeseries_and_dash_render_the_ops_monitor() {
+        let state = tiny_state();
+        state.ops.record("jobs.queued", 2.0);
+        let idx = route(&state, &get("/timeseries"));
+        assert_eq!(idx.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&idx.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("count").unwrap().as_u64(), Some(1));
+
+        let one = route(&state, &get("/timeseries/jobs.queued"));
+        assert_eq!(one.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&one.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("samples").unwrap().as_u64(), Some(1));
+
+        let svg = route(&state, &get("/dash"));
+        assert_eq!(svg.status, 200);
+        assert_eq!(svg.content_type, "image/svg+xml");
+        assert!(
+            std::str::from_utf8(&svg.body).unwrap().starts_with("<svg ")
+        );
+
+        let twin = route(&state, &get("/dash.json"));
+        assert_eq!(twin.status, 200);
+        let doc = json::parse(
+            std::str::from_utf8(&twin.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("series").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn metrics_expose_event_bus_counters() {
+        let state = tiny_state();
+        state
+            .events
+            .publish(EventKind::JobDone { id: "j1".into() });
+        let resp = route(&state, &get("/metrics"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body.to_vec()).unwrap();
+        assert!(
+            text.contains("icecloud_events_published_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_events_dropped_total 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("icecloud_events_subscribers 0"),
+            "{text}"
+        );
     }
 
     impl Response {

@@ -32,13 +32,14 @@
 //! resort when the move itself fails, so a bad entry can never be
 //! served), and a corrupt entry can never panic the server.
 
+use super::events::{EventBus, EventKind};
 use crate::util::sha256;
 use std::collections::HashMap;
 use std::fs::{self, File};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Entry header magic; bump on any layout change.
 const MAGIC: &str = "icecloud-store/1";
@@ -50,6 +51,8 @@ pub struct DiskStore {
     /// key -> body length, rebuilt by scanning on open.
     index: Mutex<HashMap<String, u64>>,
     tmp_seq: AtomicU64,
+    /// Ops bus for `store.quarantine` events; `None` outside a server.
+    events: Option<Arc<EventBus>>,
 }
 
 /// A key is the lowercase-hex SHA-256 the cache derives from the
@@ -139,6 +142,7 @@ impl DiskStore {
             quarantine_dir,
             index: Mutex::new(HashMap::new()),
             tmp_seq: AtomicU64::new(0),
+            events: None,
         };
         let listing = fs::read_dir(&store.entries_dir)
             .map_err(|e| format!("scan {}: {e}", store.entries_dir.display()))?;
@@ -154,7 +158,11 @@ impl DiskStore {
             let name = match path.file_name().and_then(|n| n.to_str()) {
                 Some(n) => n.to_string(),
                 None => {
-                    store.quarantine_path(&path, "non-unicode");
+                    store.quarantine_path(
+                        &path,
+                        "non-unicode",
+                        "non-unicode filename",
+                    );
                     continue;
                 }
             };
@@ -165,7 +173,11 @@ impl DiskStore {
                 continue;
             }
             if !valid_key(&name) {
-                store.quarantine_path(&path, &name);
+                store.quarantine_path(
+                    &path,
+                    &name,
+                    "foreign file (not a store key)",
+                );
                 continue;
             }
             match read_verified(&path, &name) {
@@ -176,15 +188,21 @@ impl DiskStore {
                         .unwrap()
                         .insert(name, body.len() as u64);
                 }
-                Err(_) => store.quarantine_path(&path, &name),
+                Err(e) => store.quarantine_path(&path, &name, &e),
             }
         }
         Ok(store)
     }
 
+    /// Attach the ops bus (called once by `Server::bind` before the
+    /// store moves into the cache).
+    pub fn set_events(&mut self, events: Arc<EventBus>) {
+        self.events = Some(events);
+    }
+
     /// Move a failed entry aside for post-mortem.  Repeat failures of
     /// one key get unique suffixes so earlier evidence is preserved.
-    fn quarantine_path(&self, path: &Path, name: &str) {
+    fn quarantine_path(&self, path: &Path, name: &str, reason: &str) {
         let base = if name.is_empty() { "unnamed" } else { name };
         let mut dest = self.quarantine_dir.join(base);
         let mut n = 1u32;
@@ -196,6 +214,12 @@ impl DiskStore {
             // cross-device or permission trouble: last resort is to
             // remove the file so it can never be served
             let _ = fs::remove_file(path);
+        }
+        if let Some(bus) = &self.events {
+            bus.publish(EventKind::StoreQuarantine {
+                name: base.to_string(),
+                reason: reason.to_string(),
+            });
         }
     }
 
@@ -226,9 +250,9 @@ impl DiskStore {
         let path = self.entries_dir.join(key);
         match read_verified(&path, key) {
             Ok(body) => Some(body),
-            Err(_) => {
+            Err(e) => {
                 self.index.lock().unwrap().remove(key);
-                self.quarantine_path(&path, key);
+                self.quarantine_path(&path, key, &e);
                 None
             }
         }
@@ -408,6 +432,24 @@ mod tests {
         assert!(!debris.exists(), "crash debris must be deleted");
         assert_eq!(store.stats(), (1, 4));
         assert_eq!(store.quarantined(), 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn quarantine_publishes_an_event_when_a_bus_is_attached() {
+        use super::super::events::EventBus;
+        let root = scratch();
+        let mut store = DiskStore::open(&root).unwrap();
+        let bus = Arc::new(EventBus::new(16));
+        store.set_events(Arc::clone(&bus));
+        store.put(&key(10), b"pristine").unwrap();
+        let path = root.join("entries").join(key(10));
+        let mut raw = fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xff;
+        fs::write(&path, &raw).unwrap();
+        assert!(store.get(&key(10)).is_none());
+        assert_eq!(bus.published_total(), 1, "rot must announce itself");
         let _ = fs::remove_dir_all(&root);
     }
 

@@ -182,8 +182,8 @@ fn tick_cadence_change_preserves_shape() {
     coarse.control_period_s = 15 * MINUTE;
     let a = Campaign::new(fine).run();
     let b = Campaign::new(coarse).run();
-    let ga = a.monitor.get("gpus.total").unwrap().mean();
-    let gb = b.monitor.get("gpus.total").unwrap().mean();
+    let ga = a.monitor.get("gpus.total").unwrap().mean().unwrap();
+    let gb = b.monitor.get("gpus.total").unwrap().mean().unwrap();
     assert!((ga - gb).abs() / ga < 0.15, "fine={ga} coarse={gb}");
 }
 

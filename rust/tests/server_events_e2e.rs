@@ -1,0 +1,418 @@
+//! End-to-end tests for the live operations event stream (`GET
+//! /events`) over real sockets.
+//!
+//! Each test binds its own server on an ephemeral port and speaks raw
+//! SSE to it: a hand-rolled client reads `id:`/`event:`/`data:` frames
+//! off the wire exactly as `curl -N` would.  Pinned here are the bus
+//! contract's observable halves: a live subscriber sees every job
+//! transition in order exactly once; a reconnect with `Last-Event-ID`
+//! replays only what was missed; and a deliberately slow subscriber
+//! receives an explicit `gap` event while the sweep data plane keeps
+//! producing bytes identical to a subscriber-less server.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{EventKind, ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A campaign small enough that a replay takes milliseconds.
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn start_server(cfg: ServeConfig) -> (ServerHandle, String) {
+    let server = Server::bind(cfg).expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn default_server() -> (ServerHandle, String) {
+    start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 2,
+        store_dir: None,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    })
+}
+
+fn parse_body(body: &[u8]) -> Json {
+    json::parse(std::str::from_utf8(body).expect("utf-8 body").trim())
+        .expect("json body")
+}
+
+/// Block until the server's bus shows exactly `n` open subscriptions —
+/// the only way to know an SSE connection's handler has subscribed.
+fn wait_subscribers(handle: &ServerHandle, n: u64) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while handle.state().events.subscriber_count() != n {
+        assert!(
+            Instant::now() < deadline,
+            "never reached {n} subscribers"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// One SSE frame as read off the wire.
+#[derive(Debug, Clone)]
+struct Frame {
+    id: Option<u64>,
+    event: Option<String>,
+    data: Option<String>,
+    /// `true` for comment-only frames (heartbeats).
+    comment: bool,
+}
+
+/// A hand-rolled SSE client over one raw TCP connection.
+struct SseStream {
+    reader: BufReader<TcpStream>,
+}
+
+impl SseStream {
+    /// Connect, send the GET and consume the response head; panics
+    /// unless the server commits to `text/event-stream`.
+    fn connect(addr: &str, last_event_id: Option<u64>) -> SseStream {
+        let stream = TcpStream::connect(addr).expect("connect sse");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut stream = stream;
+        let mut head =
+            format!("GET /events HTTP/1.1\r\nHost: {addr}\r\n");
+        if let Some(id) = last_event_id {
+            head.push_str(&format!("Last-Event-ID: {id}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes()).expect("send sse request");
+        let mut reader = BufReader::new(stream);
+        let mut status = String::new();
+        reader.read_line(&mut status).expect("read status line");
+        assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+        let mut saw_event_stream = false;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read head");
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if line.to_ascii_lowercase().starts_with("content-type:") {
+                assert!(line.contains("text/event-stream"), "{line}");
+                saw_event_stream = true;
+            }
+        }
+        assert!(saw_event_stream, "head must advertise the stream");
+        SseStream { reader }
+    }
+
+    /// Read one frame (a heartbeat comment counts as a frame).
+    fn next_frame(&mut self) -> Frame {
+        let mut frame = Frame {
+            id: None,
+            event: None,
+            data: None,
+            comment: false,
+        };
+        let mut saw_any = false;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).expect("sse read");
+            assert!(n > 0, "stream closed mid-frame");
+            let line = line.trim_end_matches('\n');
+            if line.is_empty() {
+                if saw_any {
+                    return frame;
+                }
+                continue;
+            }
+            saw_any = true;
+            if let Some(rest) = line.strip_prefix("id: ") {
+                frame.id = Some(rest.parse().expect("numeric id"));
+            } else if let Some(rest) = line.strip_prefix("event: ") {
+                frame.event = Some(rest.to_string());
+            } else if let Some(rest) = line.strip_prefix("data: ") {
+                frame.data = Some(rest.to_string());
+            } else if line.starts_with(':') {
+                frame.comment = true;
+            } else {
+                panic!("unexpected SSE line: {line:?}");
+            }
+        }
+    }
+
+    /// Read frames until `n` real (non-heartbeat) events arrive.
+    fn next_events(&mut self, n: usize) -> Vec<Frame> {
+        let mut out = Vec::new();
+        while out.len() < n {
+            let f = self.next_frame();
+            if !f.comment {
+                out.push(f);
+            }
+        }
+        out
+    }
+}
+
+/// A live subscriber sees the async job lifecycle as an exact ordered
+/// sequence — queued, running, done — each exactly once, with strictly
+/// increasing sequence numbers, and heartbeats once the bus goes quiet.
+#[test]
+fn live_stream_reports_job_lifecycle_in_order_exactly_once() {
+    let (handle, addr) = default_server();
+    let mut sse = SseStream::connect(&addr, None);
+    wait_subscribers(&handle, 1);
+
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep?mode=async",
+        Some("application/toml"),
+        b"[scenario.a]\nseed = 5\n",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 202, "{}", resp.body_str());
+    let id = parse_body(&resp.body)
+        .get("job_id")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let events = sse.next_events(3);
+    let names: Vec<&str> =
+        events.iter().map(|f| f.event.as_deref().unwrap()).collect();
+    assert_eq!(names, ["job.queued", "job.running", "job.done"]);
+    let seqs: Vec<u64> = events.iter().map(|f| f.id.unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    for f in &events {
+        let data = json::parse(f.data.as_deref().unwrap()).unwrap();
+        assert_eq!(
+            data.get("id").unwrap().as_str(),
+            Some(id.as_str()),
+            "every transition names the job"
+        );
+    }
+    assert_eq!(
+        events[0]
+            .data
+            .as_deref()
+            .map(|d| json::parse(d).unwrap())
+            .unwrap()
+            .get("scenarios")
+            .unwrap()
+            .as_u64(),
+        Some(1)
+    );
+
+    // the bus is quiet now: the next frame is a heartbeat comment, not
+    // a replayed or duplicated transition
+    let beat = sse.next_frame();
+    assert!(beat.comment, "expected a heartbeat, got {beat:?}");
+
+    drop(sse);
+    handle.shutdown();
+}
+
+/// Kill a subscriber, let events flow past it, reconnect with the last
+/// seen id as `Last-Event-ID`: the stream resumes with exactly the
+/// missed events and no gap (the ring still holds them).
+#[test]
+fn last_event_id_resume_replays_only_the_missed_events() {
+    let (handle, addr) = default_server();
+
+    let mut sse = SseStream::connect(&addr, None);
+    wait_subscribers(&handle, 1);
+    let first = client_request(
+        &addr,
+        "POST",
+        "/sweep?mode=async",
+        Some("application/toml"),
+        b"[scenario.one]\nseed = 1\n",
+    )
+    .unwrap();
+    assert_eq!(first.status, 202);
+    let seen = sse.next_events(3);
+    let last_seen = seen.last().unwrap().id.unwrap();
+    drop(sse); // hang up mid-stream
+
+    // a second job's transitions flow with no subscriber attached
+    let second = client_request(
+        &addr,
+        "POST",
+        "/sweep?mode=async",
+        Some("application/toml"),
+        b"[scenario.two]\nseed = 2\n",
+    )
+    .unwrap();
+    assert_eq!(second.status, 202);
+    let id2 = parse_body(&second.body)
+        .get("job_id")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    // poll until done so all three transitions are in the ring
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let poll = client_request(
+            &addr,
+            "GET",
+            &format!("/jobs/{id2}"),
+            None,
+            b"",
+        )
+        .unwrap();
+        let status = parse_body(&poll.body)
+            .get("status")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_ne!(status, "failed");
+        if status == "done" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job 2 never finished");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // reconnect where we left off: exactly the missed three, no gap
+    let mut resumed = SseStream::connect(&addr, Some(last_seen));
+    let replay = resumed.next_events(3);
+    let names: Vec<&str> =
+        replay.iter().map(|f| f.event.as_deref().unwrap()).collect();
+    assert_eq!(names, ["job.queued", "job.running", "job.done"]);
+    assert_eq!(replay[0].id.unwrap(), last_seen + 1, "no hole, no gap");
+    for f in &replay {
+        assert_ne!(f.event.as_deref(), Some("gap"));
+        let data = json::parse(f.data.as_deref().unwrap()).unwrap();
+        assert_eq!(data.get("id").unwrap().as_str(), Some(id2.as_str()));
+    }
+    assert_eq!(handle.state().events.dropped_total(), 0);
+
+    drop(resumed);
+    handle.shutdown();
+}
+
+/// The slow-reader contract, end to end: a subscriber that stops
+/// reading while a burst far larger than the ring flows past it gets
+/// an explicit `gap` event on catch-up — and the sweep data plane,
+/// running on the same server throughout, still produces bytes
+/// identical to a server with no subscribers at all.
+#[test]
+fn slow_subscriber_gets_a_gap_while_sweep_bytes_stay_identical() {
+    let spec = b"[scenario.base]\nseed = 42\n";
+
+    // subscriber-less baseline bytes from a fresh server
+    let (baseline_handle, baseline_addr) = default_server();
+    let baseline = client_request(
+        &baseline_addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(baseline.status, 200);
+    baseline_handle.shutdown();
+
+    // tiny ring so a burst is guaranteed to lap a stalled reader
+    let (handle, addr) = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 2,
+        store_dir: None,
+        events_ring: 64,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    });
+    let mut sse = SseStream::connect(&addr, None);
+    wait_subscribers(&handle, 1);
+
+    // with the subscriber attached but about to stall, the sweep path
+    // still matches the subscriber-less baseline byte for byte
+    let with_sub = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(with_sub.status, 200);
+    assert_eq!(
+        with_sub.body, baseline.body,
+        "subscribers must not perturb sweep results"
+    );
+
+    // the client now stops reading; flood the bus with far more events
+    // than socket buffers and a 64-slot ring can hold between them
+    let bus = &handle.state().events;
+    for i in 0..200_000u64 {
+        bus.publish(EventKind::JobDone { id: format!("synthetic-{i}") });
+    }
+
+    // resume reading: somewhere after the buffered backlog the handler
+    // catches up, notices this reader's cursor fell off the ring, and
+    // emits the explicit gap frame
+    let mut gap = None;
+    let mut idle_streak = 0u32;
+    for _ in 0..400_000 {
+        let f = sse.next_frame();
+        if f.event.as_deref() == Some("gap") {
+            gap = Some(f);
+            break;
+        }
+        // consecutive heartbeats mean the backlog fully drained: the
+        // stream went idle without ever admitting to the lost events
+        idle_streak = if f.comment { idle_streak + 1 } else { 0 };
+        assert!(idle_streak < 5, "stream drained without a gap event");
+    }
+    let gap = gap.expect("a lapped subscriber must see a gap event");
+    let dropped = json::parse(gap.data.as_deref().unwrap())
+        .unwrap()
+        .get("dropped")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(dropped >= 1, "gap reports how many events were lost");
+    assert!(handle.state().events.dropped_total() >= dropped);
+    // the frame after the gap is the oldest retained event: contiguous
+    // with the gap's own id, so Last-Event-ID resume stays exact
+    let next = sse.next_events(1).remove(0);
+    assert_eq!(next.id.unwrap(), gap.id.unwrap() + 1);
+
+    // and the data plane never noticed: identical bytes, served again
+    let after = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(after.status, 200);
+    assert_eq!(after.body, baseline.body);
+
+    drop(sse);
+    handle.shutdown();
+}

@@ -1,0 +1,305 @@
+//! End-to-end tests for the ops read plane — `/timeseries`, `/dash`,
+//! `/dash.json`, the `/events` routing contract — and the
+//! `[server] jobs_keep` age-out bound, all over real sockets.
+//!
+//! The routing table mirrors the fleet-protocol strictness tests: a
+//! query string on an ops endpoint is a 400, a wrong method is a 405
+//! with `Allow`, an unknown series is a 404, and an oversized body is
+//! a 413 — a caller bug is never a silent no-op.  The age-out
+//! regression pins the two halves of the `jobs_keep` contract: an
+//! aged-out job id stops answering on `/jobs/<id>` while its result
+//! keeps serving from the cache under `/results/<key>`.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::{client_request, MAX_BODY_BYTES};
+use icecloud::server::{ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::util::json::{self, Json};
+use std::time::{Duration, Instant};
+
+/// A campaign small enough that a replay takes milliseconds.
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = 2 * HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+fn start_server(cfg: ServeConfig) -> (ServerHandle, String) {
+    let server = Server::bind(cfg).expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn default_server() -> (ServerHandle, String) {
+    start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 8,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 2,
+        store_dir: None,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    })
+}
+
+fn parse_body(body: &[u8]) -> Json {
+    json::parse(std::str::from_utf8(body).expect("utf-8 body").trim())
+        .expect("json body")
+}
+
+/// Poll `/jobs/<id>` until `done` (panics on `failed` or timeout).
+fn wait_done(addr: &str, id: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let resp =
+            client_request(addr, "GET", &format!("/jobs/{id}"), None, b"")
+                .expect("poll");
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+        let status = parse_body(&resp.body)
+            .get("status")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        match status.as_str() {
+            "done" => return,
+            "failed" => panic!("job {id} failed"),
+            _ => {
+                assert!(Instant::now() < deadline, "job {id} timed out");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// The strict-routing table for the ops plane, over the wire.
+#[test]
+fn ops_endpoints_enforce_method_query_and_size_contracts() {
+    let (handle, addr) = default_server();
+
+    // wrong method: 405 with the Allow header
+    for (method, path) in [
+        ("POST", "/events"),
+        ("DELETE", "/events"),
+        ("POST", "/timeseries"),
+        ("DELETE", "/timeseries/jobs.queued"),
+        ("POST", "/dash"),
+        ("PUT", "/dash.json"),
+    ] {
+        let resp = client_request(&addr, method, path, None, b"").unwrap();
+        assert_eq!(resp.status, 405, "{method} {path}");
+        assert_eq!(resp.header("allow"), Some("GET"), "{method} {path}");
+    }
+
+    // query strings are a hard error, not a silent no-op
+    for path in [
+        "/events?from=3",
+        "/timeseries?limit=2",
+        "/timeseries/jobs.queued?points=5",
+        "/dash?theme=light",
+        "/dash.json?pretty=1",
+    ] {
+        let resp = client_request(&addr, "GET", path, None, b"").unwrap();
+        assert_eq!(resp.status, 400, "GET {path}");
+    }
+
+    // unknown series: 404
+    let resp = client_request(&addr, "GET", "/timeseries/nope", None, b"")
+        .unwrap();
+    assert_eq!(resp.status, 404);
+
+    // an oversized body is refused with 413 before routing even runs
+    let big = vec![b'x'; MAX_BODY_BYTES + 1];
+    let resp = client_request(&addr, "GET", "/dash", None, &big).unwrap();
+    assert_eq!(resp.status, 413);
+
+    handle.shutdown();
+}
+
+/// The sampler feeds `/timeseries` and `/dash` from server startup:
+/// the index lists the burn-down series, a single series returns its
+/// points, the board renders SVG and its JSON twin agrees.
+#[test]
+fn timeseries_and_dash_serve_the_sampled_burn_down() {
+    let (handle, addr) = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 4,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 1,
+        store_dir: None,
+        sample_every_s: 1,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    });
+
+    // the sampler records once at startup, so the index is never empty
+    // for long; poll briefly to absorb thread-start jitter
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let doc = loop {
+        let resp =
+            client_request(&addr, "GET", "/timeseries", None, b"").unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_body(&resp.body);
+        if doc.get("count").unwrap().as_u64().unwrap() > 0 {
+            break doc;
+        }
+        assert!(Instant::now() < deadline, "sampler never ticked");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let series = doc.get("series").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = series
+        .iter()
+        .map(|s| s.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for expected in [
+        "jobs.queued",
+        "jobs.running",
+        "goodput.hours",
+        "wasted.hours",
+        "events.published",
+    ] {
+        assert!(names.contains(&expected), "{names:?} missing {expected}");
+    }
+
+    let one = client_request(
+        &addr,
+        "GET",
+        "/timeseries/jobs.queued",
+        None,
+        b"",
+    )
+    .unwrap();
+    assert_eq!(one.status, 200);
+    let doc = parse_body(&one.body);
+    assert!(doc.get("samples").unwrap().as_u64().unwrap() >= 1);
+    assert!(
+        !doc.get("points").unwrap().as_arr().unwrap().is_empty(),
+        "a sampled series returns points"
+    );
+
+    let svg = client_request(&addr, "GET", "/dash", None, b"").unwrap();
+    assert_eq!(svg.status, 200);
+    assert_eq!(svg.header("content-type"), Some("image/svg+xml"));
+    let body = svg.body_str();
+    assert!(body.starts_with("<svg "), "{body}");
+    assert!(body.contains("jobs.queued"), "{body}");
+
+    let twin =
+        client_request(&addr, "GET", "/dash.json", None, b"").unwrap();
+    assert_eq!(twin.status, 200);
+    let doc = parse_body(&twin.body);
+    assert!(
+        !doc.get("series").unwrap().as_arr().unwrap().is_empty(),
+        "the JSON twin carries the same series"
+    );
+
+    // the bus gauges are on /metrics whether or not anyone subscribes
+    let metrics =
+        client_request(&addr, "GET", "/metrics", None, b"").unwrap();
+    let text = metrics.body_str();
+    assert!(text.contains("icecloud_events_published_total"), "{text}");
+    assert!(text.contains("icecloud_events_dropped_total 0"), "{text}");
+    assert!(text.contains("icecloud_events_subscribers 0"), "{text}");
+
+    handle.shutdown();
+}
+
+/// The `jobs_keep` age-out contract: finish more jobs than the bound
+/// keeps, and the oldest ids 404 on `/jobs/<id>` while their results
+/// still serve from the cache under `/results/<key>`.
+#[test]
+fn aged_out_jobs_404_while_their_results_still_serve() {
+    let (handle, addr) = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 4,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        queue_max: 16,
+        job_runners: 1,
+        store_dir: None,
+        jobs_keep: 2,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    });
+
+    let mut ids = Vec::new();
+    for seed in 0..4u32 {
+        let spec = format!("[scenario.age]\nseed = {seed}\n");
+        let resp = client_request(
+            &addr,
+            "POST",
+            "/sweep?mode=async",
+            Some("application/toml"),
+            spec.as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 202, "{}", resp.body_str());
+        let id = parse_body(&resp.body)
+            .get("job_id")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        wait_done(&addr, &id);
+        ids.push(id);
+    }
+
+    // the two oldest records aged out of the job table...
+    for old in &ids[..2] {
+        let resp = client_request(
+            &addr,
+            "GET",
+            &format!("/jobs/{old}"),
+            None,
+            b"",
+        )
+        .unwrap();
+        assert_eq!(resp.status, 404, "job {old} should have aged out");
+    }
+    // ...the two newest are still tracked...
+    for kept in &ids[2..] {
+        let resp = client_request(
+            &addr,
+            "GET",
+            &format!("/jobs/{kept}"),
+            None,
+            b"",
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "job {kept} should survive");
+    }
+    let listing = client_request(&addr, "GET", "/jobs", None, b"").unwrap();
+    assert_eq!(
+        parse_body(&listing.body).get("count").unwrap().as_u64(),
+        Some(2),
+        "the listing holds exactly jobs_keep finished records"
+    );
+
+    // ...and every result, aged out or not, still serves by key
+    for id in &ids {
+        let resp = client_request(
+            &addr,
+            "GET",
+            &format!("/results/{id}"),
+            None,
+            b"",
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "result {id} must outlive the job");
+        assert_eq!(
+            parse_body(&resp.body).get("key").unwrap().as_str(),
+            Some(id.as_str())
+        );
+    }
+
+    handle.shutdown();
+}

@@ -57,6 +57,11 @@ RUST_BENCHES = [
     ("serve/sweep-cached", "requests"),
     ("serve/disk-hit", "requests"),
     ("serve/async-submit", "requests"),
+    # PR 6: cold sweeps dispatched over the lease/heartbeat protocol
+    ("serve/fleet-2w", "requests"),
+    # PR 7: event-bus publish rate with zero / four live SSE streams
+    ("serve/events-stream-0sub", "events"),
+    ("serve/events-stream-4sub", "events"),
 ]
 
 
@@ -160,7 +165,10 @@ def main():
                 "are recorded schema with null metrics until a "
                 "Rust-equipped machine runs tools/bench_baseline.sh (CI's "
                 "bench-baseline job measures + gates them on every push "
-                "via tools/bench_compare.sh). Do not compare mirror/* "
+                "via tools/bench_compare.sh). "
+                "serve/events-stream-{0,4}sub are new in PR 7: live "
+                "event-bus publish throughput with no subscribers and "
+                "with four attached SSE streams. Do not compare mirror/* "
                 "against Rust-native lines.",
         "regenerate": "tools/bench_baseline.sh (Rust) or "
                       "tools/bench_mirror.py (mirror)",
