@@ -3,13 +3,15 @@
 //! Per-bunch latency and photon throughput for each compiled variant —
 //! the real-compute cost the campaign's sampling pays, and the L1 number
 //! recorded in EXPERIMENTS.md §Perf.  `photon/<variant>-bunch` runs the
-//! batched engine single-threaded (the campaign's default); the `-mt`
-//! twins run it with all cores (`ExecPlan::auto`) — results are
-//! bit-identical either way, only wall time moves.  Skipped (with a
-//! notice) when artifacts have not been built; the artifact-free
+//! batched engine single-threaded with the default lane sweep (the
+//! campaign's default); `photon/<variant>-bunch-scalar-sweep` pins the
+//! same plan to `SimdMode::Off` so the lane-sweep win is visible per
+//! variant; the `-mt` twins run all cores (`ExecPlan::auto`) — results
+//! are bit-identical across all of them, only wall time moves.  Skipped
+//! (with a notice) when artifacts have not been built; the artifact-free
 //! scalar-vs-batched comparison lives in `benches/sweep.rs`.
 
-use icecloud::runtime::{build_inputs, ExecPlan, PhotonEngine};
+use icecloud::runtime::{build_inputs, ExecPlan, PhotonEngine, SimdMode};
 use icecloud::util::bench::Bench;
 use std::path::PathBuf;
 
@@ -36,6 +38,22 @@ fn main() {
             || {
                 seed = seed.wrapping_add(1);
                 exe.run_seeded(seed).unwrap().detected()
+            },
+        );
+        let mut seed = 0u32;
+        b.run_throughput(
+            &format!("photon/{variant}-bunch-scalar-sweep"),
+            photons,
+            "photons",
+            || {
+                seed = seed.wrapping_add(1);
+                let inputs = build_inputs(&exe.meta, seed, true);
+                exe.run_with_plan(
+                    &inputs,
+                    ExecPlan { simd: SimdMode::Off, ..ExecPlan::default() },
+                )
+                .unwrap()
+                .detected()
             },
         );
         let mut seed = 0u32;

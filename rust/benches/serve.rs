@@ -19,7 +19,7 @@
 //! subscribers and with four attached SSE streams, pricing the bus's
 //! publishers-never-block contract.
 //!
-//! Regenerate the committed baseline (BENCH_pr7.json) with:
+//! Regenerate the committed baseline (BENCH_pr8.json) with:
 //!   tools/bench_baseline.sh
 
 use icecloud::config::{CampaignConfig, RampStep};
@@ -150,6 +150,7 @@ fn main() {
                 slots: 1,
                 poll: Duration::from_millis(5),
                 fail_after_leases: None,
+                engine_simd: icecloud::runtime::SimdMode::default(),
             };
             let stop = Arc::clone(&stop);
             std::thread::spawn(move || {

@@ -9,14 +9,19 @@
 //! * **engine scaling** — photons/sec of the scalar reference walk vs
 //!   the batched SoA engine at 1/2/4 threads, on the artifact "default"
 //!   shape (4096 photons x 64 steps x 60 DOMs), synthetic metadata so
-//!   no artifact build is required.  The standing claim: batched ≥ 2x
-//!   scalar on the CI runner (`ICECLOUD_MIN_SPEEDUP` in bench_compare).
+//!   no artifact build is required.  `engine/batched-*` pins the sweep
+//!   to `SimdMode::Off` (the PR 3 baseline) and `engine/simd-*` runs the
+//!   lane sweep, so the two implementations stay separately gated.  The
+//!   standing claims: batched ≥ 2x scalar (`ICECLOUD_MIN_SPEEDUP`) and
+//!   simd ≥ batched (`ICECLOUD_MIN_SIMD_SPEEDUP`) in bench_compare.
 //!
 //! Scalar and batched closures rebuild inputs per iteration with the
 //! same wrapping seed sequence, so the comparison stays apples-to-apples.
 
 use icecloud::config::{CampaignConfig, RampStep};
-use icecloud::runtime::{build_inputs, ExecPlan, PhotonExecutable, VariantMeta};
+use icecloud::runtime::{
+    build_inputs, ExecPlan, PhotonExecutable, SimdMode, VariantMeta,
+};
 use icecloud::sim::{DAY, HOUR};
 use icecloud::sweep;
 use icecloud::util::bench::Bench;
@@ -64,20 +69,27 @@ fn main() {
         exe.run_scalar(&inputs).unwrap().detected()
     });
 
-    for threads in [1usize, 2, 4] {
-        let mut seed = 0u32;
-        b.run_throughput(
-            &format!("engine/batched-{threads}t"),
-            photons,
-            "photons",
-            || {
-                seed = seed.wrapping_add(1);
-                let inputs = build_inputs(&exe.meta, seed, true);
-                exe.run_with_plan(&inputs, ExecPlan { threads, bunch: 4096 })
+    for (label, simd) in
+        [("batched", SimdMode::Off), ("simd", SimdMode::Lanes)]
+    {
+        for threads in [1usize, 2, 4] {
+            let mut seed = 0u32;
+            b.run_throughput(
+                &format!("engine/{label}-{threads}t"),
+                photons,
+                "photons",
+                || {
+                    seed = seed.wrapping_add(1);
+                    let inputs = build_inputs(&exe.meta, seed, true);
+                    exe.run_with_plan(
+                        &inputs,
+                        ExecPlan { threads, bunch: 4096, simd },
+                    )
                     .unwrap()
                     .detected()
-            },
-        );
+                },
+            );
+        }
     }
 
     b.finish();

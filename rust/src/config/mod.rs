@@ -1,6 +1,7 @@
 //! Campaign configuration: defaults that encode the paper's exercise,
 //! overridable from a TOML file and CLI flags.
 
+use crate::runtime::SimdMode;
 use crate::sim::{SimTime, DAY, HOUR, MINUTE};
 use crate::util::json::{require_bool, require_f64, require_u64, Json};
 use crate::util::toml;
@@ -195,17 +196,20 @@ pub struct RealComputeConfig {
 }
 
 /// Photon-engine execution knobs (the batched SoA engine, DESIGN.md
-/// §13).  These trade wall time only: the batched engine is
-/// bit-identical across thread counts and bunch sizes, which is why the
-/// knobs are deliberately *excluded* from [`CampaignConfig::canonical_json`]
-/// — two requests that differ only here replay the same campaign and
-/// must share a cache entry.
+/// §13/§18).  These trade wall time only: the batched engine is
+/// bit-identical across thread counts, bunch sizes and sweep
+/// implementations, which is why the knobs are deliberately *excluded*
+/// from [`CampaignConfig::canonical_json`] — two requests that differ
+/// only here replay the same campaign and must share a cache entry.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineConfig {
     /// Worker threads per bunch execution (0 = all available cores).
     pub threads: u32,
     /// Photons per SoA sub-bunch (locality knob; 0 = engine default).
     pub bunch: u32,
+    /// Segment-sweep implementation (`[engine] simd = "off"|"lanes"`;
+    /// default lanes — the parity suite pinned it bit-identical).
+    pub simd: SimdMode,
 }
 
 impl EngineConfig {
@@ -231,6 +235,7 @@ impl EngineConfig {
         crate::runtime::ExecPlan {
             threads: self.threads as usize,
             bunch: self.bunch as usize,
+            simd: self.simd,
         }
     }
 }
@@ -388,6 +393,19 @@ fn want_bool(doc: &Json, path: &[&str]) -> Result<Option<bool>, String> {
         .transpose()
 }
 
+fn want_str<'a>(
+    doc: &'a Json,
+    path: &[&str],
+) -> Result<Option<&'a str>, String> {
+    doc.get_path(path)
+        .map(|v| {
+            v.as_str().ok_or_else(|| {
+                format!("'{}' must be a string", path.join("."))
+            })
+        })
+        .transpose()
+}
+
 impl CampaignConfig {
     /// Apply overrides from a parsed TOML document.  Strict on values:
     /// a present-but-mistyped key is an error, never a silent no-op
@@ -415,6 +433,13 @@ impl CampaignConfig {
             }
             self.engine.bunch = u32::try_from(v)
                 .map_err(|_| format!("'engine.bunch' {v} is out of range"))?;
+        }
+        if let Some(v) = want_str(doc, &["engine", "simd"])? {
+            self.engine.simd = SimdMode::parse(v).ok_or_else(|| {
+                format!(
+                    "'engine.simd' must be \"off\" or \"lanes\", got {v:?}"
+                )
+            })?;
         }
         let ck_disabled =
             want_bool(doc, &["checkpoint", "disabled"])? == Some(true);
@@ -1267,14 +1292,26 @@ azure = 0.6
 
     #[test]
     fn engine_knobs_from_toml() {
-        let doc = toml::parse("[engine]\nthreads = 4\nbunch = 1024").unwrap();
+        let doc = toml::parse(
+            "[engine]\nthreads = 4\nbunch = 1024\nsimd = \"off\"",
+        )
+        .unwrap();
         let mut c = CampaignConfig::default();
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.engine.threads, 4);
         assert_eq!(c.engine.bunch, 1024);
+        assert_eq!(c.engine.simd, SimdMode::Off);
         assert_eq!(c.engine.resolved_threads(), 4);
         assert_eq!(c.engine.plan().threads, 4);
         assert_eq!(c.engine.plan().bunch, 1024);
+        assert_eq!(c.engine.plan().simd, SimdMode::Off);
+
+        // the default is the lane sweep; "lanes" spells it explicitly
+        let doc = toml::parse("[engine]\nsimd = \"lanes\"").unwrap();
+        let mut c = CampaignConfig::default();
+        c.engine.simd = SimdMode::Off;
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.engine.simd, SimdMode::Lanes);
 
         // mistyped, degenerate, or u32-truncating values are rejected,
         // not dropped (4294967296 = 2^32 would truncate to 0)
@@ -1283,6 +1320,8 @@ azure = 0.6
             "[engine]\nbunch = 0",
             "[engine]\nbunch = 4294967296",
             "[engine]\nthreads = 4294967296",
+            "[engine]\nsimd = \"avx\"",
+            "[engine]\nsimd = 4",
         ] {
             let doc = toml::parse(src).unwrap();
             let mut c = CampaignConfig::default();
@@ -1299,10 +1338,10 @@ azure = 0.6
 
     #[test]
     fn engine_clamp_respects_budget() {
-        let mut e = EngineConfig { threads: 16, bunch: 0 };
+        let mut e = EngineConfig { threads: 16, ..EngineConfig::default() };
         e.clamp_threads(4);
         assert_eq!(e.threads, 4);
-        let mut e = EngineConfig { threads: 2, bunch: 0 };
+        let mut e = EngineConfig { threads: 2, ..EngineConfig::default() };
         e.clamp_threads(4);
         assert_eq!(e.threads, 2);
         // auto resolves to a concrete count within budget
@@ -1310,7 +1349,7 @@ azure = 0.6
         e.clamp_threads(1);
         assert_eq!(e.threads, 1);
         // a zero budget still leaves one engine thread
-        let mut e = EngineConfig { threads: 8, bunch: 0 };
+        let mut e = EngineConfig { threads: 8, ..EngineConfig::default() };
         e.clamp_threads(0);
         assert_eq!(e.threads, 1);
     }
@@ -1323,6 +1362,7 @@ azure = 0.6
         let mut c = CampaignConfig::default();
         c.engine.threads = 7;
         c.engine.bunch = 128;
+        c.engine.simd = SimdMode::Off;
         assert_eq!(base, c.canonical_json().to_string_compact());
     }
 

@@ -18,7 +18,8 @@ use icecloud::config::CampaignConfig;
 use icecloud::coordinator::Campaign;
 use icecloud::experiments;
 use icecloud::runtime::{
-    build_inputs, ExecPlan, PhotonEngine, PhotonExecutable, VariantMeta,
+    build_inputs, ExecPlan, PhotonEngine, PhotonExecutable, SimdMode,
+    VariantMeta,
 };
 use icecloud::util::cli::Command;
 use icecloud::util::json::Json;
@@ -98,6 +99,11 @@ fn campaign_command() -> Command {
             "photon-engine threads per bunch (0 = all cores)",
             None,
         )
+        .opt(
+            "engine-simd",
+            "photon-engine segment sweep: lanes|off (default lanes)",
+            None,
+        )
         .opt("out", "write monitoring CSV + summary into this directory", None)
         .opt("log", "log level: debug|info|warn|error", Some("info"))
         .flag("real-compute", "sample real PJRT photon executions")
@@ -122,6 +128,7 @@ fn load_config(args: &icecloud::util::cli::Args) -> Result<CampaignConfig, Strin
         cfg.engine.threads = u32::try_from(t)
             .map_err(|_| format!("--engine-threads {t} is out of range"))?;
     }
+    apply_engine_simd(args, &mut cfg)?;
     if args.flag("no-outage") {
         cfg.outage = None;
     }
@@ -237,6 +244,22 @@ fn apply_days_override(
     }
 }
 
+/// `--engine-simd lanes|off`: strongest override of the segment-sweep
+/// knob (over `[engine] simd` from the config file).  Wall-time only —
+/// both values replay bit-identically — so, like `engine.threads`, it
+/// never enters the campaign cache key.
+fn apply_engine_simd(
+    args: &icecloud::util::cli::Args,
+    base: &mut CampaignConfig,
+) -> Result<(), String> {
+    if let Some(v) = args.get("engine-simd") {
+        base.engine.simd = SimdMode::parse(v).ok_or_else(|| {
+            format!("--engine-simd must be \"lanes\" or \"off\", got {v:?}")
+        })?;
+    }
+    Ok(())
+}
+
 fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     let cmd = Command::new("sweep", "run a scenario matrix in parallel")
         .opt(
@@ -253,6 +276,11 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
             None,
         )
         .opt("threads", "worker threads (default: available parallelism)", None)
+        .opt(
+            "engine-simd",
+            "photon-engine segment sweep: lanes|off (default lanes)",
+            None,
+        )
         .opt("out", "write sweep.csv / sweep.txt / rollup.txt here", None)
         .opt("log", "log level: debug|info|warn|error", Some("error"));
     let args = cmd.parse(rest)?;
@@ -268,6 +296,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         None => icecloud::sweep::builtin_matrix(),
     };
     apply_days_override(&args, &mut base);
+    apply_engine_simd(&args, &mut base)?;
     let threads = args
         .get_u64("threads")
         .map(|t| t as usize)
@@ -351,6 +380,11 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         "base campaign duration in days (default 4, like `sweep`)",
         None,
     )
+    .opt(
+        "engine-simd",
+        "photon-engine segment sweep: lanes|off (default lanes)",
+        None,
+    )
     .opt("lease-ttl-s", "fleet lease TTL in seconds", None)
     .opt(
         "heartbeat-every-s",
@@ -373,6 +407,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     // resolve weakest to strongest: defaults < [server] table < flags
     let (mut base, doc) = sweep_base_config(&args)?;
     apply_days_override(&args, &mut base);
+    apply_engine_simd(&args, &mut base)?;
     let mut srv = icecloud::config::ServerConfig::default();
     let mut fleet = icecloud::config::FleetConfig::default();
     let mut ops = icecloud::config::OpsConfig::default();
@@ -489,7 +524,8 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
          workers, {} job runners, store: {})\n  endpoints: GET /healthz \
          /matrix /metrics /jobs /jobs/<id> /results/<key> /events \
          /timeseries[/<name>] /dash /dash.json; POST /sweep \
-         [?mode=async]; POST /fleet/{{register,lease,heartbeat,complete}}",
+         [?mode=async]; POST /fleet/{{register,lease,heartbeat,complete}} \
+         — all also mounted under /v1/ (DESIGN.md §19)",
         server.local_addr()?,
         http_threads,
         replay_threads,
@@ -515,6 +551,11 @@ fn cmd_worker(rest: &[String]) -> Result<(), String> {
     .opt(
         "fail-after-leases",
         "fault injection: vanish mid-lease after N grants (tests)",
+        None,
+    )
+    .opt(
+        "engine-simd",
+        "photon-engine segment sweep: lanes|off (default lanes)",
         None,
     )
     .opt("log", "log level: debug|info|warn|error", Some("info"));
@@ -548,12 +589,19 @@ fn cmd_worker(rest: &[String]) -> Result<(), String> {
     if poll_ms == 0 {
         return Err("--poll-ms must be >= 1".into());
     }
+    let engine_simd = match args.get("engine-simd") {
+        Some(v) => SimdMode::parse(v).ok_or_else(|| {
+            format!("--engine-simd must be \"lanes\" or \"off\", got {v:?}")
+        })?,
+        None => SimdMode::default(),
+    };
     let opts = icecloud::server::WorkerOptions {
         coordinator,
         worker_id,
         slots,
         poll: std::time::Duration::from_millis(poll_ms),
         fail_after_leases: args.require_u64("fail-after-leases")?,
+        engine_simd,
     };
     println!(
         "icecloud worker '{}' -> {} ({} slot{})",
@@ -708,7 +756,11 @@ fn cmd_parity(rest: &[String]) -> Result<(), String> {
     )
     .opt("variant", "built-in shape: small|default|large", Some("small"))
     .opt("seed", "bunch seed", Some("7"))
-    .opt("mode", "scalar|batched", Some("batched"))
+    .opt(
+        "mode",
+        "scalar|batched (lane sweep off)|simd (lane sweep on)",
+        Some("batched"),
+    )
     .opt("threads", "batched engine threads (0 = all cores)", Some("1"))
     .opt("bunch", "photons per SoA sub-bunch (0 = default)", Some("0"));
     let args = cmd.parse(rest)?;
@@ -718,16 +770,25 @@ fn cmd_parity(rest: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     let inputs = build_inputs(&exe.meta, seed, true);
     let mode = args.get_or("mode", "batched").to_string();
+    let simd = match mode.as_str() {
+        "batched" => SimdMode::Off,
+        _ => SimdMode::Lanes,
+    };
     let r = match mode.as_str() {
         "scalar" => exe.run_scalar(&inputs),
-        "batched" => {
+        "batched" | "simd" => {
             let plan = ExecPlan {
                 threads: args.require_u64("threads")?.unwrap_or(1) as usize,
                 bunch: args.require_u64("bunch")?.unwrap_or(0) as usize,
+                simd,
             };
             exe.run_with_plan(&inputs, plan)
         }
-        other => return Err(format!("unknown mode '{other}' (scalar|batched)")),
+        other => {
+            return Err(format!(
+                "unknown mode '{other}' (scalar|batched|simd)"
+            ))
+        }
     }
     .map_err(|e| e.to_string())?;
     let mut o = Json::obj();

@@ -7,8 +7,10 @@
 //!
 //! * **SoA state** — live photons are parallel `Vec`s (position,
 //!   direction, time, path, pid), so the hot segment–DOM sweep runs
-//!   DOM-outer/photon-inner over contiguous f32 arrays the compiler can
-//!   auto-vectorize;
+//!   DOM-outer/photon-inner over contiguous f32 arrays; by default the
+//!   sweep goes through the explicit [`super::simd`] lane helpers
+//!   ([`SimdMode::Lanes`], DESIGN.md §18) with a scalar-helper tail,
+//!   and [`SimdMode::Off`] keeps the PR 3 scalar-helper loop;
 //! * **compaction** — terminated photons are squeezed out after every
 //!   step (order-preserving), so late steps only pay for the survivors;
 //! * **chunked threads** — photon ids are split into contiguous ranges,
@@ -31,6 +33,7 @@ use super::engine::{
     reduce_outcomes, segment_test, BunchResult, PhotonOutcome, Walk, NO_DOM,
     ST_ABSORBED, ST_ALIVE, ST_DETECTED,
 };
+use super::simd::{self, SimdMode, LANES};
 use super::EngineError;
 
 /// Photons per SoA bunch when unspecified: ~60 B of state per photon,
@@ -47,28 +50,37 @@ pub fn available_threads() -> usize {
 }
 
 /// Execution plan for the batched engine: how a bunch is cut into SoA
-/// sub-bunches and spread over threads.  Plans trade wall time only —
-/// results are bit-identical for every plan.
+/// sub-bunches, spread over threads, and which pass-B sweep runs.
+/// Plans trade wall time only — results are bit-identical for every
+/// plan, including both [`SimdMode`]s.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecPlan {
     /// Worker threads (0 = all available cores).
     pub threads: usize,
     /// Photons per SoA sub-bunch (0 = [`DEFAULT_BUNCH`]).
     pub bunch: usize,
+    /// Segment-sweep implementation (default: the lane fast path).
+    pub simd: SimdMode,
 }
 
 impl Default for ExecPlan {
-    /// Single-threaded, default bunch width: the drop-in replacement for
-    /// the scalar engine (no surprise parallelism for library callers).
+    /// Single-threaded, default bunch width, lane sweep: the drop-in
+    /// replacement for the scalar engine (no surprise parallelism for
+    /// library callers; the lane path is bit-identical, see
+    /// [`SimdMode`]).
     fn default() -> Self {
-        ExecPlan { threads: 1, bunch: DEFAULT_BUNCH }
+        ExecPlan {
+            threads: 1,
+            bunch: DEFAULT_BUNCH,
+            simd: SimdMode::default(),
+        }
     }
 }
 
 impl ExecPlan {
-    /// All available cores, default bunch width.
+    /// All available cores, default bunch width and sweep.
     pub fn auto() -> Self {
-        ExecPlan { threads: 0, bunch: DEFAULT_BUNCH }
+        ExecPlan { threads: 0, ..ExecPlan::default() }
     }
 
     /// Concrete `(threads, bunch)` for a bunch of `num_photons`.
@@ -97,7 +109,7 @@ pub(crate) fn run_batched(
     let mut outcomes = vec![PhotonOutcome::default(); n];
 
     if threads <= 1 {
-        walk_range(&walk, 0, &mut outcomes, bunch);
+        walk_range(&walk, 0, &mut outcomes, bunch, plan.simd);
     } else {
         // contiguous pid ranges, the first `rem` one photon larger
         let base = n / threads;
@@ -111,7 +123,9 @@ pub(crate) fn run_batched(
                 let (head, tail) = std::mem::take(&mut rest).split_at_mut(size);
                 rest = tail;
                 let first = pid0;
-                scope.spawn(move || walk_range(walk, first, head, bunch));
+                scope.spawn(move || {
+                    walk_range(walk, first, head, bunch, plan.simd)
+                });
                 pid0 += size as u32;
             }
         });
@@ -125,12 +139,23 @@ pub(crate) fn run_batched(
 }
 
 /// Walk photons `[first_pid, first_pid + out.len())` in SoA sub-bunches.
-fn walk_range(walk: &Walk, first_pid: u32, out: &mut [PhotonOutcome], bunch: usize) {
+fn walk_range(
+    walk: &Walk,
+    first_pid: u32,
+    out: &mut [PhotonOutcome],
+    bunch: usize,
+    simd: SimdMode,
+) {
     let bunch = bunch.max(1);
     let mut start = 0usize;
     while start < out.len() {
         let m = bunch.min(out.len() - start);
-        walk_bunch(walk, first_pid + start as u32, &mut out[start..start + m]);
+        walk_bunch(
+            walk,
+            first_pid + start as u32,
+            &mut out[start..start + m],
+            simd,
+        );
         start += m;
     }
 }
@@ -186,8 +211,72 @@ impl BunchState {
     }
 }
 
+/// Pass B of one step: the segment–DOM sweep, DOM-outer so the inner
+/// loop runs over contiguous photon arrays; ascending DOM order +
+/// strict `<` keeps the scalar walk's tie-breaking (lowest DOM index).
+///
+/// [`SimdMode::Lanes`] sweeps `LANES` photons per iteration through
+/// the explicit-width helpers in [`super::simd`], with photons past
+/// the last full lane group falling back to the shared scalar helper;
+/// both forms evaluate the identical per-photon op sequence, so the
+/// choice is invisible in the results (DESIGN.md §18).
+#[allow(clippy::too_many_arguments)]
+fn sweep_doms(
+    walk: &Walk,
+    s: &BunchState,
+    d: &[f32],
+    best_t: &mut [f32],
+    best_dom: &mut [u32],
+    n_active: usize,
+    r2: f32,
+    simd: SimdMode,
+) {
+    best_t[..n_active].fill(f32::INFINITY);
+    best_dom[..n_active].fill(NO_DOM);
+    // photons covered by full lane groups; 0 under SimdMode::Off
+    let full = match simd {
+        SimdMode::Off => 0,
+        SimdMode::Lanes => n_active - n_active % LANES,
+    };
+    for di in 0..walk.num_doms() {
+        let dom = walk.dom(di);
+        let mut i = 0;
+        while i < full {
+            let (ta, dist2) = simd::segment_test_lanes(
+                dom,
+                &s.px[i..],
+                &s.py[i..],
+                &s.pz[i..],
+                &s.dx[i..],
+                &s.dy[i..],
+                &s.dz[i..],
+                &d[i..],
+            );
+            for l in 0..LANES {
+                if dist2[l] <= r2 && ta[l] < best_t[i + l] {
+                    best_t[i + l] = ta[l];
+                    best_dom[i + l] = di as u32;
+                }
+            }
+            i += LANES;
+        }
+        for i in full..n_active {
+            let (ta, dist2) = segment_test(
+                dom,
+                [s.px[i], s.py[i], s.pz[i]],
+                [s.dx[i], s.dy[i], s.dz[i]],
+                d[i],
+            );
+            if dist2 <= r2 && ta < best_t[i] {
+                best_t[i] = ta;
+                best_dom[i] = di as u32;
+            }
+        }
+    }
+}
+
 /// Walk one SoA bunch of `out.len()` photons starting at `pid0`.
-fn walk_bunch(walk: &Walk, pid0: u32, out: &mut [PhotonOutcome]) {
+fn walk_bunch(walk: &Walk, pid0: u32, out: &mut [PhotonOutcome], simd: SimdMode) {
     let m = out.len();
     let mut s = BunchState::init(walk, pid0, m);
     // per-step scratch, indexed like the live arrays
@@ -211,28 +300,8 @@ fn walk_bunch(walk: &Walk, pid0: u32, out: &mut [PhotonOutcome]) {
             d[i] = walk.step_length(l, s.pid[i], k);
         }
 
-        // pass B: segment–DOM sweep, DOM-outer so the inner loop runs
-        // over contiguous photon arrays; ascending DOM order + strict
-        // `<` keeps the scalar walk's tie-breaking
-        for i in 0..n_active {
-            best_t[i] = f32::INFINITY;
-            best_dom[i] = NO_DOM;
-        }
-        for di in 0..walk.num_doms() {
-            let dom = walk.dom(di);
-            for i in 0..n_active {
-                let (ta, dist2) = segment_test(
-                    dom,
-                    [s.px[i], s.py[i], s.pz[i]],
-                    [s.dx[i], s.dy[i], s.dz[i]],
-                    d[i],
-                );
-                if dist2 <= r2 && ta < best_t[i] {
-                    best_t[i] = ta;
-                    best_dom[i] = di as u32;
-                }
-            }
-        }
+        // pass B: segment–DOM sweep (lane fast path or scalar helper)
+        sweep_doms(walk, &s, &d, &mut best_t, &mut best_dom, n_active, r2, simd);
 
         // pass C: detect / move / absorb / scatter
         for i in 0..n_active {

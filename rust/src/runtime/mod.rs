@@ -12,10 +12,12 @@
 pub mod artifact;
 pub mod batch;
 pub mod engine;
+pub mod simd;
 
 pub use artifact::{build_inputs, ArtifactMeta, PhotonInputs, VariantMeta};
 pub use batch::{available_threads, ExecPlan};
 pub use engine::{BunchResult, PhotonEngine, PhotonExecutable};
+pub use simd::SimdMode;
 
 /// Error raised by the photon runtime (metadata, shapes, execution).
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,247 @@
+//! Portable fixed-width f32 lanes for the batched segment sweep.
+//!
+//! The pass-B hot loop of [`super::batch`] evaluates
+//! `engine::segment_test` for every (DOM, photon) pair — ~10 f32 ops
+//! per pair, no transcendentals, no RNG.  The scalar-helper form leaves
+//! vectorization to the compiler's judgement on a loop whose body ends
+//! in a data-dependent branch; this module restructures the same math
+//! into explicit [`LANES`]-wide operations over `[f32; LANES]` arrays —
+//! fixed trip counts, no branches, no external crates — that the
+//! autovectorizer lowers to packed instructions on any target
+//! (DESIGN.md §18).
+//!
+//! **Bit-exactness.**  Every lane holds a *distinct photon*, and the
+//! sweep has no horizontal reductions: each lane's `(t_along, dist2)`
+//! is produced by exactly the scalar op sequence of
+//! [`segment_test`](super::engine::segment_test) — same subtractions,
+//! same left-associated dot products, same `clamp` — just evaluated
+//! LANES photons at a time.  IEEE-754 ops are deterministic per lane,
+//! so the lane path is bit-identical to the scalar helper for every
+//! input, which is why [`SimdMode::Lanes`] ships as the default and
+//! why `SimdMode` stays out of the campaign cache key (the pin lives
+//! in `config::tests::engine_knobs_never_split_the_cache_key`, the
+//! parity suite in `rust/tests/engine_parity.rs`).
+
+/// Photons processed per lane-sweep iteration.  Eight f32 lanes span a
+/// 256-bit vector register (AVX2, SVE-256) and fold to two 128-bit ops
+/// on NEON/SSE targets; tails shorter than this fall back to the
+/// scalar helper.
+pub const LANES: usize = 8;
+
+/// Which pass-B segment-sweep implementation the batched engine runs.
+///
+/// Both modes produce bit-identical results (see the module docs);
+/// the knob trades wall time only, exactly like `ExecPlan::threads`,
+/// and is therefore deliberately excluded from
+/// `CampaignConfig::canonical_json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Scalar-helper sweep (the PR 3 baseline; autovectorization is
+    /// left to the compiler).
+    Off,
+    /// Explicit-width lane sweep with a scalar tail (default: the
+    /// parity suite proved it bit-identical to `run_scalar`).
+    #[default]
+    Lanes,
+}
+
+impl SimdMode {
+    /// Strict parse of the `[engine] simd` / `--engine-simd` knob.
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "off" => Some(SimdMode::Off),
+            "lanes" => Some(SimdMode::Lanes),
+            _ => None,
+        }
+    }
+
+    /// The TOML/CLI spelling (`parse` round-trips it).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::Lanes => "lanes",
+        }
+    }
+}
+
+/// One vector of photon state: a fixed-width array the loop vectorizer
+/// lowers to packed registers.
+type V = [f32; LANES];
+
+/// Broadcast one scalar across all lanes.
+#[inline]
+fn splat(x: f32) -> V {
+    [x; LANES]
+}
+
+/// Load LANES contiguous values (caller guarantees `src.len() >= LANES`).
+#[inline]
+fn load(src: &[f32]) -> V {
+    let mut v = [0.0f32; LANES];
+    v.copy_from_slice(&src[..LANES]);
+    v
+}
+
+#[inline]
+fn sub(a: V, b: V) -> V {
+    let mut o = [0.0f32; LANES];
+    for l in 0..LANES {
+        o[l] = a[l] - b[l];
+    }
+    o
+}
+
+#[inline]
+fn mul(a: V, b: V) -> V {
+    let mut o = [0.0f32; LANES];
+    for l in 0..LANES {
+        o[l] = a[l] * b[l];
+    }
+    o
+}
+
+#[inline]
+fn add(a: V, b: V) -> V {
+    let mut o = [0.0f32; LANES];
+    for l in 0..LANES {
+        o[l] = a[l] + b[l];
+    }
+    o
+}
+
+/// Elementwise `f32::clamp` — the same op the scalar helper applies,
+/// so NaN/zero edge semantics cannot diverge between paths.
+#[inline]
+fn clamp(a: V, lo: V, hi: V) -> V {
+    let mut o = [0.0f32; LANES];
+    for l in 0..LANES {
+        o[l] = a[l].clamp(lo[l], hi[l]);
+    }
+    o
+}
+
+/// Left-associated 3-component dot product, matching the scalar
+/// helper's `a0*b0 + a1*b1 + a2*b2` evaluation order exactly (no FMA
+/// contraction: separate mul and add ops, like the scalar expression).
+#[inline]
+fn dot3(ax: V, ay: V, az: V, bx: V, by: V, bz: V) -> V {
+    add(add(mul(ax, bx), mul(ay, by)), mul(az, bz))
+}
+
+/// Segment–sphere closest-approach test for one DOM against LANES
+/// photons: `(t_along, dist2)` per lane, `t_along` clamped to each
+/// photon's step `[0, d]`.  The lane transcription of
+/// [`segment_test`](super::engine::segment_test): identical op
+/// sequence per lane, so identical bits per photon.
+#[inline]
+pub(crate) fn segment_test_lanes(
+    dom: [f32; 3],
+    px: &[f32],
+    py: &[f32],
+    pz: &[f32],
+    dx: &[f32],
+    dy: &[f32],
+    dz: &[f32],
+    d: &[f32],
+) -> (V, V) {
+    let (px, py, pz) = (load(px), load(py), load(pz));
+    let (dx, dy, dz) = (load(dx), load(dy), load(dz));
+    let relx = sub(splat(dom[0]), px);
+    let rely = sub(splat(dom[1]), py);
+    let relz = sub(splat(dom[2]), pz);
+    let ta = clamp(
+        dot3(relx, rely, relz, dx, dy, dz),
+        splat(0.0),
+        load(d),
+    );
+    let ex = sub(relx, mul(ta, dx));
+    let ey = sub(rely, mul(ta, dy));
+    let ez = sub(relz, mul(ta, dz));
+    (ta, dot3(ex, ey, ez, ex, ey, ez))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::segment_test;
+    use super::*;
+
+    /// Deterministic pseudo-photon state without pulling in the engine
+    /// RNG: enough spread to exercise both clamp ends and hits/misses.
+    fn state(n: usize, salt: f32) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i as f32 * 37.1 + salt).sin() * 53.7) % 29.0)
+            .collect()
+    }
+
+    #[test]
+    fn lane_sweep_is_bitwise_the_scalar_helper() {
+        let n = LANES * 3;
+        let (px, py, pz) = (state(n, 0.1), state(n, 1.2), state(n, 2.3));
+        let (dx, dy, dz) = (state(n, 3.4), state(n, 4.5), state(n, 5.6));
+        let d: Vec<f32> = state(n, 6.7).iter().map(|v| v.abs()).collect();
+        for dom in [[0.0f32, 0.0, -17.0], [5.0, -3.0, 40.0], [1e-3, 0.0, 0.0]] {
+            let mut i = 0;
+            while i + LANES <= n {
+                let (ta, dist2) = segment_test_lanes(
+                    dom,
+                    &px[i..],
+                    &py[i..],
+                    &pz[i..],
+                    &dx[i..],
+                    &dy[i..],
+                    &dz[i..],
+                    &d[i..],
+                );
+                for l in 0..LANES {
+                    let (st, sd2) = segment_test(
+                        dom,
+                        [px[i + l], py[i + l], pz[i + l]],
+                        [dx[i + l], dy[i + l], dz[i + l]],
+                        d[i + l],
+                    );
+                    assert_eq!(ta[l].to_bits(), st.to_bits(), "ta lane {l}");
+                    assert_eq!(
+                        dist2[l].to_bits(),
+                        sd2.to_bits(),
+                        "dist2 lane {l}"
+                    );
+                }
+                i += LANES;
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_pins_t_along_into_the_step() {
+        // a DOM far ahead along +x: ta must clamp to d exactly
+        let px = vec![0.0f32; LANES];
+        let zeros = vec![0.0f32; LANES];
+        let mut dx = vec![0.0f32; LANES];
+        dx[0] = 1.0;
+        let d = vec![2.5f32; LANES];
+        let (ta, _) = segment_test_lanes(
+            [100.0, 0.0, 0.0],
+            &px,
+            &zeros,
+            &zeros,
+            &dx,
+            &zeros,
+            &zeros,
+            &d,
+        );
+        assert_eq!(ta[0], 2.5, "forward DOM clamps to the step end");
+        assert_eq!(ta[1], 0.0, "zero direction clamps to the step start");
+    }
+
+    #[test]
+    fn simd_mode_parse_round_trips() {
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("lanes"), Some(SimdMode::Lanes));
+        assert_eq!(SimdMode::parse("auto"), None);
+        assert_eq!(SimdMode::parse("LANES"), None, "knob is case-sensitive");
+        for m in [SimdMode::Off, SimdMode::Lanes] {
+            assert_eq!(SimdMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(SimdMode::default(), SimdMode::Lanes);
+    }
+}

@@ -640,6 +640,10 @@ pub struct WorkerOptions {
     /// without heartbeating or completing — exactly how a preempted
     /// spot instance dies.
     pub fail_after_leases: Option<u64>,
+    /// Local segment-sweep implementation for leased replays.  The
+    /// canonical config on the wire deliberately omits engine knobs
+    /// (they cannot change results), so each worker picks its own.
+    pub engine_simd: crate::runtime::SimdMode,
 }
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -714,9 +718,10 @@ pub fn run_worker(opts: &WorkerOptions, stop: &AtomicBool) -> Result<WorkerRepor
             .and_then(Json::as_str)
             .ok_or("lease response missing name")?
             .to_string();
-        let cfg = CampaignConfig::from_canonical_json(
+        let mut cfg = CampaignConfig::from_canonical_json(
             doc.get("config").ok_or("lease response missing config")?,
         )?;
+        cfg.engine.simd = opts.engine_simd;
 
         let (tx, rx) = mpsc::channel();
         let compute_name = name.clone();

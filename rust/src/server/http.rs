@@ -274,21 +274,58 @@ impl Response {
         }
     }
 
-    /// A `{"error": ...}` JSON body.
-    pub fn error(status: u16, message: &str) -> Response {
-        use crate::util::json::Json;
-        let mut o = Json::obj();
-        o.set("error", Json::from(message));
-        let mut body = o.to_string_compact().into_bytes();
-        body.push(b'\n');
-        Response::json(status, body)
-    }
-
     pub fn with_header(mut self, name: &str, value: &str) -> Response {
         self.extra_headers
             .push((name.to_string(), value.to_string()));
         self
     }
+}
+
+/// The machine-readable error code for each status this service emits —
+/// the stable half of the canonical error body (`detail` is prose and
+/// may change wording; `error` is contract).
+pub fn error_code(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        413 => "payload_too_large",
+        429 => "too_many_requests",
+        500 => "internal",
+        _ => "error",
+    }
+}
+
+/// The one canonical error body of the whole API surface (DESIGN.md
+/// §19): `{"error": <code>, "detail": <message>}`.  Every error site in
+/// `server/*` funnels through here (or [`error_response_after`]), so no
+/// handler can invent an ad-hoc shape.
+pub fn error_response(status: u16, detail: &str) -> Response {
+    error_body(status, detail, None)
+}
+
+/// [`error_response`] plus a `retry_after` field in the body and the
+/// matching `Retry-After` header (429 admission-control responses).
+pub fn error_response_after(
+    status: u16,
+    detail: &str,
+    retry_after_s: u64,
+) -> Response {
+    error_body(status, detail, Some(retry_after_s))
+        .with_header("Retry-After", &retry_after_s.to_string())
+}
+
+fn error_body(status: u16, detail: &str, retry_after_s: Option<u64>) -> Response {
+    use crate::util::json::Json;
+    let mut o = Json::obj();
+    o.set("error", Json::from(error_code(status)));
+    o.set("detail", Json::from(detail));
+    if let Some(s) = retry_after_s {
+        o.set("retry_after", Json::from(s));
+    }
+    let mut body = o.to_string_compact().into_bytes();
+    body.push(b'\n');
+    Response::json(status, body)
 }
 
 pub fn status_reason(status: u16) -> &'static str {
@@ -591,13 +628,48 @@ mod tests {
     }
 
     #[test]
-    fn error_response_is_json() {
-        let r = Response::error(400, "bad spec");
+    fn error_response_is_canonical_json() {
+        let r = error_response(400, "bad spec");
         assert_eq!(r.status, 400);
         let v = crate::util::json::parse(
             std::str::from_utf8(&r.body).unwrap().trim(),
         )
         .unwrap();
-        assert_eq!(v.get("error").unwrap().as_str(), Some("bad spec"));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("bad_request"));
+        assert_eq!(v.get("detail").unwrap().as_str(), Some("bad spec"));
+        assert!(v.get("retry_after").is_none(), "only 429s carry it");
+    }
+
+    #[test]
+    fn retry_after_appears_in_body_and_header() {
+        let r = error_response_after(429, "queue full", 3);
+        assert_eq!(r.status, 429);
+        assert!(r
+            .extra_headers
+            .iter()
+            .any(|(k, v)| k == "Retry-After" && v == "3"));
+        let v = crate::util::json::parse(
+            std::str::from_utf8(&r.body).unwrap().trim(),
+        )
+        .unwrap();
+        assert_eq!(
+            v.get("error").unwrap().as_str(),
+            Some("too_many_requests")
+        );
+        assert_eq!(v.get("retry_after").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn every_emitted_status_has_a_stable_code() {
+        for (status, code) in [
+            (400, "bad_request"),
+            (404, "not_found"),
+            (405, "method_not_allowed"),
+            (413, "payload_too_large"),
+            (429, "too_many_requests"),
+            (500, "internal"),
+        ] {
+            assert_eq!(error_code(status), code);
+        }
     }
 }

@@ -53,7 +53,7 @@ pub use store::DiskStore;
 
 use crate::config::CampaignConfig;
 use events::Delivery;
-use http::{read_request, write_response, ReadError, Response};
+use http::{error_response, read_request, write_response, ReadError};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -354,14 +354,16 @@ fn handle_connection(state: &AppState, stream: TcpStream) {
             Ok(None) | Err(ReadError::Closed) => return,
             Err(ReadError::TooLarge) => {
                 state.metrics.on_request();
-                let resp = Response::error(413, "request too large");
+                let resp = error_response(413, "request too large")
+                    .with_header("X-Api-Version", "1");
                 state.metrics.on_early_reject(resp.status);
                 let _ = write_response(&mut write_half, &resp, false);
                 return;
             }
             Err(ReadError::Malformed(msg)) => {
                 state.metrics.on_request();
-                let resp = Response::error(400, &msg);
+                let resp = error_response(400, &msg)
+                    .with_header("X-Api-Version", "1");
                 state.metrics.on_early_reject(resp.status);
                 let _ = write_response(&mut write_half, &resp, false);
                 return;
@@ -407,6 +409,7 @@ fn serve_sse(
     let head = "HTTP/1.1 200 OK\r\n\
                 Content-Type: text/event-stream\r\n\
                 Cache-Control: no-cache\r\n\
+                X-Api-Version: 1\r\n\
                 Connection: close\r\n\r\n";
     if stream.write_all(head.as_bytes()).is_err() {
         return;

@@ -19,6 +19,13 @@
 //! | `GET /timeseries/<name>`  | one series, downsampled                       |
 //! | `GET /dash`               | the SVG burn-down board (`/dash.json` twin)   |
 //!
+//! Every route above is also mounted under `/v1/...` (the documented
+//! spelling); the unprefixed paths are permanent aliases.  All
+//! responses carry `X-Api-Version: 1`, and every error body is the one
+//! canonical shape `{"error": <code>, "detail": <msg>}` (plus
+//! `retry_after` on 429s) from `http::error_response` — the full
+//! normative route table lives in DESIGN.md §19.
+//!
 //! `POST /sweep` is where the subsystem earns its keep: resolve the
 //! spec against the server's base campaign, derive the content address
 //! (`cache::sweep_key`), and either serve bytes straight from a cache
@@ -30,7 +37,9 @@
 
 use super::cache::{render_sweep_body, sweep_key, Outcome};
 use super::fleet::CompleteOutcome;
-use super::http::{Request, Response};
+use super::http::{
+    error_response, error_response_after, Request, Response,
+};
 use super::jobs::{Admission, JobSpec};
 use super::metrics::Gauges;
 use super::ops::OpsMonitor;
@@ -74,15 +83,37 @@ pub enum Routed {
 /// Route one request, separating the SSE hand-off from plain
 /// responses.  The query string is split off before matching, so
 /// `/healthz?x=1` still routes; only `POST /sweep` interprets it.
+///
+/// The whole surface is mounted twice: versioned under `/v1/...` (the
+/// documented spelling, DESIGN.md §19) and at the legacy unprefixed
+/// paths, which stay as aliases of the same handlers.  Every response
+/// carries `X-Api-Version: 1` either way, so clients can discover the
+/// contract from any reply.
 pub fn dispatch(state: &AppState, req: &Request) -> Routed {
     let (path, query) = match req.path.split_once('?') {
         Some((p, q)) => (p, Some(q)),
         None => (req.path.as_str(), None),
     };
+    // `/v1/healthz` → `/healthz`; bare `/v1` and non-boundary matches
+    // like `/v1events` are *not* the versioned surface and fall through
+    // to the 404 arm
+    let path = match path.strip_prefix("/v1") {
+        Some(rest) if rest.starts_with('/') => rest,
+        _ => path,
+    };
     if path == "/events" {
-        return events_route(req, query);
+        return match events_route(req, query) {
+            Routed::Response(r) => {
+                Routed::Response(r.with_header("X-Api-Version", "1"))
+            }
+            // the SSE writer stamps the header on its hand-written head
+            stream => stream,
+        };
     }
-    Routed::Response(route_plain(state, req, path, query))
+    Routed::Response(
+        route_plain(state, req, path, query)
+            .with_header("X-Api-Version", "1"),
+    )
 }
 
 /// [`dispatch`] flattened for callers that cannot stream (unit tests):
@@ -95,7 +126,8 @@ pub fn route(state: &AppState, req: &Request) -> Response {
             content_type: "text/event-stream",
             body: std::sync::Arc::new(Vec::new()),
             extra_headers: Vec::new(),
-        },
+        }
+        .with_header("X-Api-Version", "1"),
     }
 }
 
@@ -105,12 +137,12 @@ pub fn route(state: &AppState, req: &Request) -> Response {
 fn events_route(req: &Request, query: Option<&str>) -> Routed {
     if req.method != "GET" {
         return Routed::Response(
-            Response::error(405, "method not allowed")
+            error_response(405, "method not allowed")
                 .with_header("Allow", "GET"),
         );
     }
     if query.is_some() {
-        return Routed::Response(Response::error(
+        return Routed::Response(error_response(
             400,
             "/events takes no query parameters; \
              resume with the Last-Event-ID header",
@@ -120,7 +152,7 @@ fn events_route(req: &Request, query: Option<&str>) -> Routed {
         None => Routed::Events { resume: None },
         Some(v) => match v.trim().parse::<u64>() {
             Ok(seq) => Routed::Events { resume: Some(seq) },
-            Err(_) => Routed::Response(Response::error(
+            Err(_) => Routed::Response(error_response(
                 400,
                 "Last-Event-ID must be a decimal event sequence number",
             )),
@@ -152,7 +184,7 @@ fn route_plain(
         // is: a query string is a caller bug, not a silent no-op
         ("GET", p @ ("/timeseries" | "/dash" | "/dash.json")) => {
             if query.is_some() {
-                Response::error(
+                error_response(
                     400,
                     "ops endpoints take no query parameters",
                 )
@@ -166,7 +198,7 @@ fn route_plain(
         }
         ("GET", path) if path.starts_with("/timeseries/") => {
             if query.is_some() {
-                Response::error(
+                error_response(
                     400,
                     "ops endpoints take no query parameters",
                 )
@@ -182,7 +214,7 @@ fn route_plain(
             // the fleet protocol carries everything in JSON bodies; a
             // query string here is a caller bug, not a no-op
             if query.is_some() {
-                Response::error(
+                error_response(
                     400,
                     "fleet endpoints take no query parameters",
                 )
@@ -199,26 +231,26 @@ fn route_plain(
             _,
             "/fleet/register" | "/fleet/lease" | "/fleet/heartbeat"
             | "/fleet/complete",
-        ) => Response::error(405, "method not allowed")
+        ) => error_response(405, "method not allowed")
             .with_header("Allow", "POST"),
         // known paths, wrong method
         (
             _,
             "/healthz" | "/matrix" | "/metrics" | "/jobs"
             | "/timeseries" | "/dash" | "/dash.json",
-        ) => Response::error(405, "method not allowed")
+        ) => error_response(405, "method not allowed")
             .with_header("Allow", "GET"),
-        (_, "/sweep") => Response::error(405, "method not allowed")
+        (_, "/sweep") => error_response(405, "method not allowed")
             .with_header("Allow", "POST"),
         (_, path)
             if path.starts_with("/results/")
                 || path.starts_with("/jobs/")
                 || path.starts_with("/timeseries/") =>
         {
-            Response::error(405, "method not allowed")
+            error_response(405, "method not allowed")
                 .with_header("Allow", "GET")
         }
-        _ => Response::error(404, "no such route"),
+        _ => error_response(404, "no such route"),
     }
 }
 
@@ -271,7 +303,7 @@ fn timeseries_index(state: &AppState) -> Response {
 fn timeseries_series(state: &AppState, name: &str) -> Response {
     match state.ops.series_json(name) {
         Some(doc) => json_doc(200, doc),
-        None => Response::error(404, "no such series"),
+        None => error_response(404, "no such series"),
     }
 }
 
@@ -288,7 +320,7 @@ fn results(state: &AppState, key: &str) -> Response {
         }
         Some((body, _)) => Response::json_shared(200, body)
             .with_header("X-Cache", "hit"),
-        None => Response::error(404, "no cached result under this key"),
+        None => error_response(404, "no cached result under this key"),
     }
 }
 
@@ -312,7 +344,7 @@ fn job_detail(state: &AppState, id: &str) -> Response {
             body.push(b'\n');
             Response::json(200, body)
         }
-        None => Response::error(404, "no such job"),
+        None => error_response(404, "no such job"),
     }
 }
 
@@ -341,26 +373,26 @@ fn fleet_json(status: u16, o: Json) -> Response {
 fn fleet_register(state: &AppState, req: &Request) -> Response {
     let doc = match parse_fleet_body(req) {
         Ok(doc) => doc,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     let Some(worker_id) = doc.get("worker_id").and_then(Json::as_str)
     else {
-        return Response::error(
+        return error_response(
             400,
             "register body needs a worker_id string",
         );
     };
     if worker_id.is_empty() {
-        return Response::error(400, "worker_id must not be empty");
+        return error_response(400, "worker_id must not be empty");
     }
     let Some(slots) = doc.get("slots").and_then(Json::as_u64) else {
-        return Response::error(400, "register body needs a slots count");
+        return error_response(400, "register body needs a slots count");
     };
     let Ok(slots) = u32::try_from(slots) else {
-        return Response::error(400, "slots out of range");
+        return error_response(400, "slots out of range");
     };
     if slots == 0 {
-        return Response::error(400, "slots must be at least 1");
+        return error_response(400, "slots must be at least 1");
     }
     state.fleet.register(worker_id, slots);
     let opts = state.fleet.options();
@@ -381,11 +413,11 @@ fn fleet_register(state: &AppState, req: &Request) -> Response {
 fn fleet_lease(state: &AppState, req: &Request) -> Response {
     let doc = match parse_fleet_body(req) {
         Ok(doc) => doc,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     let Some(worker_id) = doc.get("worker_id").and_then(Json::as_str)
     else {
-        return Response::error(
+        return error_response(
             400,
             "lease body needs a worker_id string",
         );
@@ -394,7 +426,7 @@ fn fleet_lease(state: &AppState, req: &Request) -> Response {
     match state.fleet.lease(worker_id) {
         // unknown worker: register first (404 so a misconfigured
         // client fails loudly instead of spinning on idle polls)
-        Err(e) => Response::error(404, &e),
+        Err(e) => error_response(404, &e),
         Ok(None) => {
             let mut o = Json::obj();
             o.set("idle", Json::from(true));
@@ -426,14 +458,14 @@ fn fleet_lease(state: &AppState, req: &Request) -> Response {
 fn fleet_heartbeat(state: &AppState, req: &Request) -> Response {
     let doc = match parse_fleet_body(req) {
         Ok(doc) => doc,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     let Some(lease_id) = doc.get("lease_id").and_then(Json::as_u64)
     else {
-        return Response::error(400, "heartbeat body needs a lease_id");
+        return error_response(400, "heartbeat body needs a lease_id");
     };
     match state.fleet.heartbeat(lease_id) {
-        None => Response::error(
+        None => error_response(
             404,
             "no such lease (expired, completed, or never granted)",
         ),
@@ -449,20 +481,20 @@ fn fleet_heartbeat(state: &AppState, req: &Request) -> Response {
 fn fleet_complete(state: &AppState, req: &Request) -> Response {
     let doc = match parse_fleet_body(req) {
         Ok(doc) => doc,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     let Some(lease_id) = doc.get("lease_id").and_then(Json::as_u64)
     else {
-        return Response::error(400, "complete body needs a lease_id");
+        return error_response(400, "complete body needs a lease_id");
     };
     let Some(sha) = doc.get("sha256").and_then(Json::as_str) else {
-        return Response::error(
+        return error_response(
             400,
             "complete body needs the row's sha256",
         );
     };
     let Some(row) = doc.get("row") else {
-        return Response::error(400, "complete body needs the row");
+        return error_response(400, "complete body needs the row");
     };
     match state.fleet.complete(lease_id, sha, row) {
         CompleteOutcome::Accepted => {
@@ -470,11 +502,11 @@ fn fleet_complete(state: &AppState, req: &Request) -> Response {
             o.set("accepted", Json::from(true));
             fleet_json(200, o)
         }
-        CompleteOutcome::Unknown => Response::error(
+        CompleteOutcome::Unknown => error_response(
             404,
             "no such lease (expired, completed, or never granted)",
         ),
-        CompleteOutcome::Rejected(e) => Response::error(400, &e),
+        CompleteOutcome::Rejected(e) => error_response(400, &e),
     }
 }
 
@@ -583,14 +615,14 @@ fn sweep_post(
 ) -> Response {
     let mode = match parse_sweep_query(query) {
         Ok(mode) => mode,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     let (resolved, scenarios) = match parse_sweep_body(&state.base, req) {
         Ok(parsed) => parsed,
-        Err(e) => return Response::error(400, &e),
+        Err(e) => return error_response(400, &e),
     };
     if let Err(e) = validate_limits(&resolved, &scenarios) {
-        return Response::error(400, &e);
+        return error_response(400, &e);
     }
 
     let key = sweep_key(&resolved, &scenarios);
@@ -654,9 +686,9 @@ fn sweep_sync(
                 Outcome::Miss,
                 state.cache.has_disk(),
             );
-            Response::error(500, &e)
+            error_response(500, &e)
         }
-        (Err(e), _) => Response::error(500, &e),
+        (Err(e), _) => error_response(500, &e),
     }
 }
 
@@ -687,10 +719,11 @@ fn sweep_async(
             Response::json(202, body)
                 .with_header("Location", &format!("/jobs/{id}"))
         }
-        Admission::Shed { retry_after_s } => {
-            Response::error(429, "job queue is full; retry later")
-                .with_header("Retry-After", &retry_after_s.to_string())
-        }
+        Admission::Shed { retry_after_s } => error_response_after(
+            429,
+            "job queue is full; retry later",
+            retry_after_s,
+        ),
     }
 }
 
@@ -1230,6 +1263,95 @@ mod tests {
         assert_eq!(route(&state, &r).status, 400);
         // unknown series 404s
         assert_eq!(route(&state, &get("/timeseries/nope")).status, 404);
+    }
+
+    #[test]
+    fn v1_prefix_aliases_the_whole_surface() {
+        let state = tiny_state();
+        assert_eq!(route(&state, &get("/v1/healthz")).status, 200);
+        assert_eq!(route(&state, &get("/v1/matrix")).status, 200);
+        assert_eq!(route(&state, &get("/v1/jobs")).status, 200);
+        assert_eq!(route(&state, &get("/v1/timeseries")).status, 200);
+
+        // same spec, either mount, same content address and bytes
+        let spec = "[scenario.a]\nseed = 4\n";
+        let versioned =
+            route(&state, &post("/v1/sweep", "application/toml", spec));
+        assert_eq!(versioned.status, 200);
+        let legacy =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(versioned.body, legacy.body);
+        assert_eq!(versioned.header_value("X-Cache"), Some("miss"));
+        assert_eq!(legacy.header_value("X-Cache"), Some("hit"));
+
+        // only a real path boundary counts as the versioned mount
+        assert_eq!(route(&state, &get("/v1")).status, 404);
+        assert_eq!(route(&state, &get("/v1healthz")).status, 404);
+        assert_eq!(route(&state, &get("/v1/nope")).status, 404);
+
+        // the SSE hand-off works from the versioned mount too
+        match dispatch(&state, &get("/v1/events")) {
+            Routed::Events { resume: None } => {}
+            _ => panic!("expected an event stream via /v1/events"),
+        }
+    }
+
+    #[test]
+    fn every_response_carries_the_api_version_header() {
+        let state = tiny_state();
+        for req in [
+            get("/healthz"),
+            get("/v1/healthz"),
+            get("/nope"),
+            get("/sweep"), // 405
+            post("/sweep", "application/toml", "not toml = ="),
+        ] {
+            let resp = route(&state, &req);
+            assert_eq!(
+                resp.header_value("X-Api-Version"),
+                Some("1"),
+                "{} {}",
+                req.method,
+                req.path
+            );
+        }
+    }
+
+    #[test]
+    fn error_bodies_are_the_canonical_shape() {
+        let state = tiny_state();
+        for (req, status, code) in [
+            (get("/nope"), 404, "not_found"),
+            (get("/sweep"), 405, "method_not_allowed"),
+            (
+                post("/sweep", "application/toml", "not toml = ="),
+                400,
+                "bad_request",
+            ),
+            (get("/results/deadbeef"), 404, "not_found"),
+            (get("/timeseries/nope"), 404, "not_found"),
+        ] {
+            let resp = route(&state, &req);
+            assert_eq!(resp.status, status, "{}", req.path);
+            let doc = json::parse(
+                std::str::from_utf8(&resp.body).unwrap().trim(),
+            )
+            .unwrap();
+            assert_eq!(
+                doc.get("error").unwrap().as_str(),
+                Some(code),
+                "{}",
+                req.path
+            );
+            assert!(
+                doc.get("detail")
+                    .unwrap()
+                    .as_str()
+                    .is_some_and(|d| !d.is_empty()),
+                "{} needs a human-readable detail",
+                req.path
+            );
+        }
     }
 
     #[test]

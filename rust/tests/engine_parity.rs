@@ -1,14 +1,21 @@
 //! Bit-exactness of the batched SoA photon engine against the scalar
-//! reference walk, across seeds, shapes, bunch sizes and thread counts.
+//! reference walk, across seeds, shapes, bunch sizes, thread counts and
+//! segment-sweep implementations (scalar helper vs the explicit-width
+//! lane sweep of `runtime/simd.rs`).
 //!
-//! This is the determinism contract of DESIGN.md §13: a photon's walk
-//! is a pure function of `(inputs, pid)` (stateless counter RNG, shared
-//! per-step helpers), and the summary is a pid-ordered fold of the
-//! per-photon outcomes — so *any* execution plan must reproduce the
-//! scalar oracle to the bit.  `tools/parity_check.py` extends the same
-//! chain one language further, to `python/compile/kernels/ref.py`.
+//! This is the determinism contract of DESIGN.md §13/§18: a photon's
+//! walk is a pure function of `(inputs, pid)` (stateless counter RNG,
+//! shared per-step helpers), and the summary is a pid-ordered fold of
+//! the per-photon outcomes — so *any* execution plan must reproduce the
+//! scalar oracle to the bit.  The `SimdMode::Lanes` leg of these
+//! properties is the evidence behind shipping the lane sweep default-on
+//! (the "bit-identical, not tolerance-checked" decision recorded in
+//! DESIGN.md §18).  `tools/parity_check.py` extends the same chain one
+//! language further, to `python/compile/kernels/ref.py`.
 
-use icecloud::runtime::{build_inputs, ExecPlan, PhotonExecutable, VariantMeta};
+use icecloud::runtime::{
+    build_inputs, ExecPlan, PhotonExecutable, SimdMode, VariantMeta,
+};
 use icecloud::util::proptest::{ensure, forall, no_shrink};
 
 fn meta(photons: u64, doms: u64, steps: u64) -> VariantMeta {
@@ -24,8 +31,9 @@ fn meta(photons: u64, doms: u64, steps: u64) -> VariantMeta {
     }
 }
 
-/// The plans every property is checked under: degenerate bunches,
-/// bunches that straddle chunk boundaries, more threads than photons.
+/// The (threads, bunch) plans every property is checked under:
+/// degenerate bunches, bunches that straddle chunk boundaries, more
+/// threads than photons.  Each is run under both sweep modes.
 const PLANS: [(usize, usize); 7] = [
     (1, 0),
     (1, 1),
@@ -35,6 +43,9 @@ const PLANS: [(usize, usize); 7] = [
     (8, 5),
     (0, 0), // auto threads, default bunch
 ];
+
+/// Both pass-B sweep implementations; every plan axis crosses this one.
+const SWEEPS: [SimdMode; 2] = [SimdMode::Off, SimdMode::Lanes];
 
 #[test]
 fn batched_is_bit_identical_to_scalar_across_shapes() {
@@ -57,26 +68,53 @@ fn batched_is_bit_identical_to_scalar_across_shapes() {
             let inputs = build_inputs(&exe.meta, seed as u32, true);
             let scalar = exe.run_scalar(&inputs).expect("scalar reference runs");
             for (threads, bunch) in PLANS {
-                let plan = ExecPlan { threads, bunch };
-                let batched = exe
-                    .run_with_plan(&inputs, plan)
-                    .expect("batched engine runs");
-                ensure(
-                    batched.hits == scalar.hits,
-                    format!("hits diverge under {plan:?} (seed {seed})"),
-                )?;
-                ensure(
-                    batched.summary == scalar.summary,
-                    format!(
-                        "summary diverges under {plan:?} (seed {seed}): \
-                         {:?} != {:?}",
-                        batched.summary, scalar.summary
-                    ),
-                )?;
+                for simd in SWEEPS {
+                    let plan = ExecPlan { threads, bunch, simd };
+                    let batched = exe
+                        .run_with_plan(&inputs, plan)
+                        .expect("batched engine runs");
+                    ensure(
+                        batched.hits == scalar.hits,
+                        format!("hits diverge under {plan:?} (seed {seed})"),
+                    )?;
+                    ensure(
+                        batched.summary == scalar.summary,
+                        format!(
+                            "summary diverges under {plan:?} (seed {seed}): \
+                             {:?} != {:?}",
+                            batched.summary, scalar.summary
+                        ),
+                    )?;
+                }
             }
             Ok(())
         },
     );
+}
+
+#[test]
+fn lane_sweep_matches_scalar_at_every_tail_width() {
+    // bunch sizes straddling the LANES=8 boundary: full vectors only,
+    // pure tails, and every mixed split; each must be bit-identical
+    let exe = PhotonExecutable::from_meta(meta(211, 9, 21)).unwrap();
+    for seed in [0u32, 7, 1234] {
+        let inputs = build_inputs(&exe.meta, seed, true);
+        let scalar = exe.run_scalar(&inputs).unwrap();
+        for bunch in [1usize, 3, 5, 7, 8, 9, 37, 64] {
+            for threads in [1usize, 3] {
+                let plan = ExecPlan { threads, bunch, simd: SimdMode::Lanes };
+                let lanes = exe.run_with_plan(&inputs, plan).unwrap();
+                assert_eq!(
+                    lanes.hits, scalar.hits,
+                    "hits, seed={seed} bunch={bunch} threads={threads}"
+                );
+                assert_eq!(
+                    lanes.summary, scalar.summary,
+                    "summary, seed={seed} bunch={bunch} threads={threads}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
@@ -87,18 +125,26 @@ fn thread_count_is_unobservable() {
     for seed in [0u32, 7, 20210921] {
         let inputs = build_inputs(&exe.meta, seed, true);
         let one = exe
-            .run_with_plan(&inputs, ExecPlan { threads: 1, bunch: 4096 })
+            .run_with_plan(
+                &inputs,
+                ExecPlan { threads: 1, bunch: 4096, ..ExecPlan::default() },
+            )
             .unwrap();
         for threads in [2usize, 3, 8] {
             for bunch in [100usize, 4096] {
-                let many = exe
-                    .run_with_plan(&inputs, ExecPlan { threads, bunch })
-                    .unwrap();
-                assert_eq!(one.hits, many.hits, "threads={threads} bunch={bunch}");
-                assert_eq!(
-                    one.summary, many.summary,
-                    "threads={threads} bunch={bunch}"
-                );
+                for simd in SWEEPS {
+                    let many = exe
+                        .run_with_plan(&inputs, ExecPlan { threads, bunch, simd })
+                        .unwrap();
+                    assert_eq!(
+                        one.hits, many.hits,
+                        "threads={threads} bunch={bunch} simd={simd:?}"
+                    );
+                    assert_eq!(
+                        one.summary, many.summary,
+                        "threads={threads} bunch={bunch} simd={simd:?}"
+                    );
+                }
             }
         }
     }
@@ -109,12 +155,14 @@ fn batched_conserves_photons_under_every_plan() {
     let exe = PhotonExecutable::from_meta(meta(777, 12, 33)).unwrap();
     let inputs = build_inputs(&exe.meta, 99, true);
     for (threads, bunch) in PLANS {
-        let r = exe
-            .run_with_plan(&inputs, ExecPlan { threads, bunch })
-            .unwrap();
-        let total = r.summary[0] + r.summary[1] + r.summary[2];
-        assert_eq!(total as u64, exe.meta.num_photons);
-        assert_eq!(r.total_hits(), r.detected());
+        for simd in SWEEPS {
+            let r = exe
+                .run_with_plan(&inputs, ExecPlan { threads, bunch, simd })
+                .unwrap();
+            let total = r.summary[0] + r.summary[1] + r.summary[2];
+            assert_eq!(total as u64, exe.meta.num_photons);
+            assert_eq!(r.total_hits(), r.detected());
+        }
     }
 }
 
@@ -123,6 +171,7 @@ fn default_plan_is_single_threaded_batched() {
     let exe = PhotonExecutable::from_meta(meta(64, 4, 8)).unwrap();
     assert_eq!(exe.plan(), ExecPlan::default());
     assert_eq!(ExecPlan::default().threads, 1);
+    assert_eq!(ExecPlan::default().simd, SimdMode::Lanes);
     let inputs = build_inputs(&exe.meta, 5, true);
     assert_eq!(
         exe.run(&inputs).unwrap().summary,
@@ -134,11 +183,14 @@ fn default_plan_is_single_threaded_batched() {
 fn with_plan_changes_wall_clock_only() {
     let exe = PhotonExecutable::from_meta(meta(2048, 30, 48))
         .unwrap()
-        .with_plan(ExecPlan { threads: 4, bunch: 100 });
-    assert_eq!(exe.plan(), ExecPlan { threads: 4, bunch: 100 });
+        .with_plan(ExecPlan { threads: 4, bunch: 100, simd: SimdMode::Lanes });
+    assert_eq!(
+        exe.plan(),
+        ExecPlan { threads: 4, bunch: 100, simd: SimdMode::Lanes }
+    );
     let a = exe.run_seeded(3).unwrap();
     let b = exe
-        .with_plan(ExecPlan { threads: 1, bunch: 0 })
+        .with_plan(ExecPlan { threads: 1, bunch: 0, simd: SimdMode::Off })
         .run_seeded(3)
         .unwrap();
     assert_eq!(a.hits, b.hits);
@@ -147,12 +199,15 @@ fn with_plan_changes_wall_clock_only() {
 
 #[test]
 fn single_photon_bunch_works_under_threads() {
-    // thread chunking must clamp to the photon count
+    // thread chunking must clamp to the photon count; a single photon
+    // is also the smallest possible lane tail
     let exe = PhotonExecutable::from_meta(meta(1, 3, 5)).unwrap();
     let inputs = build_inputs(&exe.meta, 1, true);
     let scalar = exe.run_scalar(&inputs).unwrap();
-    let batched = exe
-        .run_with_plan(&inputs, ExecPlan { threads: 32, bunch: 4096 })
-        .unwrap();
-    assert_eq!(scalar.summary, batched.summary);
+    for simd in SWEEPS {
+        let batched = exe
+            .run_with_plan(&inputs, ExecPlan { threads: 32, bunch: 4096, simd })
+            .unwrap();
+        assert_eq!(scalar.summary, batched.summary, "simd={simd:?}");
+    }
 }

@@ -76,6 +76,7 @@ fn spawn_worker(
         slots: 1,
         poll: Duration::from_millis(25),
         fail_after_leases,
+        engine_simd: icecloud::runtime::SimdMode::default(),
     };
     std::thread::spawn(move || {
         icecloud::server::fleet::run_worker(&opts, &stop)

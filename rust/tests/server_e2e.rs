@@ -72,6 +72,39 @@ fn routing_basics() {
 }
 
 #[test]
+fn versioned_surface_over_the_wire() {
+    let (handle, addr) = start_server();
+
+    // /v1 aliases resolve to the same handlers
+    let resp =
+        client_request(&addr, "GET", "/v1/healthz", None, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.body_str().contains("\"status\":\"ok\""));
+    assert_eq!(resp.header("x-api-version"), Some("1"));
+
+    // the version header rides every response, errors included
+    let resp = client_request(&addr, "GET", "/healthz", None, b"").unwrap();
+    assert_eq!(resp.header("x-api-version"), Some("1"));
+    let resp = client_request(&addr, "GET", "/nope", None, b"").unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(resp.header("x-api-version"), Some("1"));
+
+    // bare /v1 and non-boundary lookalikes are not the mount
+    let resp = client_request(&addr, "GET", "/v1", None, b"").unwrap();
+    assert_eq!(resp.status, 404);
+    let resp =
+        client_request(&addr, "GET", "/v1healthz", None, b"").unwrap();
+    assert_eq!(resp.status, 404);
+
+    // canonical error shape over the wire
+    let doc = json::parse(resp.body_str().trim()).unwrap();
+    assert_eq!(doc.get("error").unwrap().as_str(), Some("not_found"));
+    assert!(doc.get("detail").unwrap().as_str().is_some());
+
+    handle.shutdown();
+}
+
+#[test]
 fn sweep_toml_then_results_key_roundtrip() {
     let (handle, addr) = start_server();
     let spec = b"[scenario.a]\n\n[scenario.b]\nbudget_usd = 20.0\n";
@@ -179,7 +212,18 @@ fn malformed_bodies_rejected() {
         )
         .unwrap();
         assert_eq!(resp.status, 400, "body {body:?} must be rejected");
-        assert!(resp.body_str().contains("error"), "{}", resp.body_str());
+        let doc = json::parse(resp.body_str().trim()).unwrap();
+        assert_eq!(
+            doc.get("error").and_then(|e| e.as_str()),
+            Some("bad_request"),
+            "{}",
+            resp.body_str()
+        );
+        assert!(
+            doc.get("detail").and_then(|d| d.as_str()).is_some(),
+            "{}",
+            resp.body_str()
+        );
     }
     // zero sweeps actually ran
     let metrics =

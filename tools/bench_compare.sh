@@ -15,11 +15,19 @@
 #   * the fresh run's batched photon engine is not at least
 #     ICECLOUD_MIN_SPEEDUP (default 2.0) times the scalar walk —
 #     the machine-independent claim of DESIGN.md §13, checked on
-#     whatever runner executed the fresh benches.
-#
-# Baseline lines with null metrics (committed from a machine that could
-# not measure, see BENCH_pr2.json) are recorded schema, not a gate; they
-# are skipped with a notice.
+#     whatever runner executed the fresh benches;
+#   * the fresh run's lane-sweep engine (engine/simd-1t) is not at
+#     least ICECLOUD_MIN_SIMD_SPEEDUP (default 1.0) times the
+#     loop-sweep engine (engine/batched-1t) — the SIMD fast path must
+#     never be a slowdown (DESIGN.md §18);
+#   * a *Rust-native* baseline line has null metrics.  Null lines used
+#     to be skipped as "recorded schema"; that silently turned the
+#     whole Rust gate off whenever the committed trajectory came from
+#     a machine without a toolchain.  CI now seeds such a baseline
+#     with fresh measurements first (see .github/workflows/ci.yml);
+#     running against an unseeded null baseline is an error, not a
+#     skip.  mirror/* lines keep the old skip-with-notice behaviour —
+#     they come from a different harness and are never cross-compared.
 set -eu
 
 if [ $# -ne 2 ]; then
@@ -28,13 +36,15 @@ if [ $# -ne 2 ]; then
 fi
 
 python3 - "$1" "$2" "${ICECLOUD_BENCH_TOL:-0.25}" \
-    "${ICECLOUD_MIN_SPEEDUP:-2.0}" <<'PYEOF'
+    "${ICECLOUD_MIN_SPEEDUP:-2.0}" \
+    "${ICECLOUD_MIN_SIMD_SPEEDUP:-1.0}" <<'PYEOF'
 import json
 import sys
 
-committed_path, fresh_path, tol_s, min_speedup_s = sys.argv[1:5]
+committed_path, fresh_path, tol_s, min_speedup_s, min_simd_s = sys.argv[1:6]
 tol = float(tol_s)
 min_speedup = float(min_speedup_s)
+min_simd_speedup = float(min_simd_s)
 
 # benches gated on latency (mean_s) as well as throughput
 LATENCY_GATED = {"serve/sweep-cold-replay"}
@@ -61,7 +71,15 @@ failures, skipped = [], 0
 
 for name, b in sorted(base.items()):
     if b.get("mean_s") is None:
-        skipped += 1
+        if name.startswith("mirror/"):
+            skipped += 1
+            continue
+        failures.append(
+            f"{name}: baseline metrics are null — the committed "
+            f"trajectory was never measured on a Rust-equipped machine. "
+            f"Seed it first (run tools/bench_baseline.sh and merge, as "
+            f"CI's bench-baseline job does) instead of gating against "
+            f"nothing.")
         continue
     f = fresh.get(name)
     if f is None:
@@ -105,6 +123,24 @@ else:
     if ratio < min_speedup:
         failures.append(
             f"batched engine speedup {ratio:.2f}x < required {min_speedup}x")
+
+# SIMD-sweep gate: the default-on lane path must not be a slowdown
+simd = fresh.get("engine/simd-1t", {}).get("throughput")
+loop = fresh.get("engine/batched-1t", {}).get("throughput")
+if simd is None or loop is None:
+    failures.append("fresh run is missing engine/simd-1t or "
+                    "engine/batched-1t (cargo bench --bench sweep emits "
+                    "both sweep variants)")
+else:
+    ratio = simd / loop
+    verdict = "ok" if ratio >= min_simd_speedup else "FAIL"
+    print(f"[bench-compare] simd sweep: engine/simd-1t {simd:.3g} vs "
+          f"engine/batched-1t {loop:.3g} -> {ratio:.2f}x "
+          f"(need >= {min_simd_speedup}x) {verdict}")
+    if ratio < min_simd_speedup:
+        failures.append(
+            f"simd sweep speedup {ratio:.2f}x < required "
+            f"{min_simd_speedup}x (set ICECLOUD_MIN_SIMD_SPEEDUP to tune)")
 
 print(f"[bench-compare] {len(base)} baseline entries, {skipped} unmeasured "
       f"(skipped), {len(failures)} failure(s)")

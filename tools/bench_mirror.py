@@ -46,12 +46,20 @@ RUST_BENCHES = [
     ("engine/batched-1t", "photons"),
     ("engine/batched-2t", "photons"),
     ("engine/batched-4t", "photons"),
+    # PR 8: the lane-based SIMD sweep (SimdMode::Lanes, the default)
+    ("engine/simd-1t", "photons"),
+    ("engine/simd-2t", "photons"),
+    ("engine/simd-4t", "photons"),
     ("photon/small-bunch", "photons"),
     ("photon/small-bunch-mt", "photons"),
     ("photon/default-bunch", "photons"),
     ("photon/default-bunch-mt", "photons"),
     ("photon/large-bunch", "photons"),
     ("photon/large-bunch-mt", "photons"),
+    # PR 8: same bunch walk with the lane sweep forced off
+    ("photon/small-bunch-scalar-sweep", "photons"),
+    ("photon/default-bunch-scalar-sweep", "photons"),
+    ("photon/large-bunch-scalar-sweep", "photons"),
     ("photon/compile-small", None),
     ("serve/sweep-cold-replay", "requests"),
     ("serve/sweep-cached", "requests"),
@@ -119,20 +127,38 @@ def measure(variant, scalar_runs, batched_runs, threads):
     print(f"[bench-mirror]   batched-1t: "
           f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
 
-    def parallel_run():
+    def parallel_run(sweep):
         out = em.empty_outcomes(n)
         with ThreadPoolExecutor(max_workers=threads) as ex:
             futs = [ex.submit(em.walk_chunk, src, med, dom, par, steps,
-                              start, size, 4096, out)
+                              start, size, 4096, out, sweep)
                     for start, size in em.chunk_ranges(n, threads)]
             for f in futs:
                 f.result()
 
     lines.append(bench_line(
         f"mirror/{variant}-batched-{threads}t",
-        time_runs(parallel_run, batched_runs),
+        time_runs(lambda: parallel_run("loop"), batched_runs),
         work=n, unit="photons"))
     print(f"[bench-mirror]   batched-{threads}t: "
+          f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
+
+    # PR 8: the blocked sweep, mirror of the Rust lane path (default-on)
+    lines.append(bench_line(
+        f"mirror/{variant}-simd-1t",
+        time_runs(lambda: em.batched_outcomes(src, med, dom, par, n, steps,
+                                              threads=1, bunch=4096,
+                                              sweep="blocked"),
+                  batched_runs),
+        work=n, unit="photons"))
+    print(f"[bench-mirror]   simd-1t: "
+          f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
+
+    lines.append(bench_line(
+        f"mirror/{variant}-simd-{threads}t",
+        time_runs(lambda: parallel_run("blocked"), batched_runs),
+        work=n, unit="photons"))
+    print(f"[bench-mirror]   simd-{threads}t: "
           f"{n / lines[-1]['mean_s']:.0f} photons/s", file=sys.stderr)
     return lines
 
@@ -166,10 +192,12 @@ def main():
                 "Rust-equipped machine runs tools/bench_baseline.sh (CI's "
                 "bench-baseline job measures + gates them on every push "
                 "via tools/bench_compare.sh). "
-                "serve/events-stream-{0,4}sub are new in PR 7: live "
-                "event-bus publish throughput with no subscribers and "
-                "with four attached SSE streams. Do not compare mirror/* "
-                "against Rust-native lines.",
+                "mirror/*-simd-* lines are new in PR 8: the blocked "
+                "pass-B sweep, the numpy transpose of the Rust lane "
+                "sweep (rust/src/runtime/simd.rs), bit-identical to the "
+                "per-DOM loop and gated against it via "
+                "ICECLOUD_MIN_SIMD_SPEEDUP in tools/bench_compare.sh. "
+                "Do not compare mirror/* against Rust-native lines.",
         "regenerate": "tools/bench_baseline.sh (Rust) or "
                       "tools/bench_mirror.py (mirror)",
         "benches": ["sweep", "photon_engine", "serve"],
@@ -192,6 +220,11 @@ def main():
     ratio = best["throughput"] / scalar["throughput"]
     print(f"[bench-mirror] wrote {args.out}; batched/scalar speedup "
           f"{ratio:.1f}x ({best['bench']})", file=sys.stderr)
+    simd1 = next(l for l in lines if l["bench"].endswith("-simd-1t"))
+    batched1 = next(l for l in lines if l["bench"].endswith("-batched-1t"))
+    simd_ratio = simd1["throughput"] / batched1["throughput"]
+    print(f"[bench-mirror] simd/batched (1t) speedup {simd_ratio:.2f}x",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

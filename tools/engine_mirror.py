@@ -260,9 +260,77 @@ def _rotate_dir_vec(dx, dy, dz, cos_t, phi):
     return nx / norm, ny / norm, nz / norm
 
 
-def _walk_bunch(source, media, doms, params, num_steps, pid0, m, out):
+# DOM rows per block of the "simd" sweep (mirror of the Rust lane sweep
+# in rust/src/runtime/simd.rs, transposed: Rust blocks photons into
+# LANES-wide vectors, the numpy mirror blocks DOMs into 2-D broadcasts —
+# both evaluate the identical per-(dom, photon) f32 op sequence, so both
+# are bit-identical to the per-DOM loop).
+DOM_BLOCK = 32
+
+
+def _sweep_doms_loop(doms, px, py, pz, dx, dy, dz_, d, r2):
+    """Pass B, per-DOM loop (mirror of batch.rs SimdMode::Off)."""
+    n = px.shape[0]
+    best_t = np.full(n, np.inf, dtype=np.float32)
+    best_dom = np.full(n, -1, dtype=np.int64)
+    for di in range(doms.shape[0]):
+        relx = doms[di, 0] - px
+        rely = doms[di, 1] - py
+        relz = doms[di, 2] - pz
+        ta = relx * dx + rely * dy + relz * dz_
+        ta = np.minimum(np.maximum(ta, F(0.0)), d)
+        ex = relx - ta * dx
+        ey = rely - ta * dy
+        ez = relz - ta * dz_
+        dist2 = ex * ex + ey * ey + ez * ez
+        better = (dist2 <= r2) & (ta < best_t)
+        best_t = np.where(better, ta, best_t)
+        best_dom = np.where(better, di, best_dom)
+    return best_t, best_dom
+
+
+def _sweep_doms_blocked(doms, px, py, pz, dx, dy, dz_, d, r2):
+    """Pass B, blocked 2-D sweep (mirror of batch.rs SimdMode::Lanes).
+
+    Each block broadcasts DOM_BLOCK doms against every photon at once;
+    the per-(dom, photon) arithmetic is elementwise-identical to the
+    loop form.  Tie-breaking is preserved exactly: ``argmin`` returns
+    the *first* (lowest) dom index of the block minimum, and blocks
+    merge in ascending order under strict ``<`` — together that is the
+    sequential sweep's "earliest hit wins, ties to the lowest DOM
+    index" rule, bit for bit.
+    """
+    n = px.shape[0]
+    best_t = np.full(n, np.inf, dtype=np.float32)
+    best_dom = np.full(n, -1, dtype=np.int64)
+    cols = np.arange(n)
+    inf = np.float32(np.inf)
+    for d0 in range(0, doms.shape[0], DOM_BLOCK):
+        blk = doms[d0:d0 + DOM_BLOCK]
+        relx = blk[:, 0:1] - px[None, :]
+        rely = blk[:, 1:2] - py[None, :]
+        relz = blk[:, 2:3] - pz[None, :]
+        ta = relx * dx[None, :] + rely * dy[None, :] + relz * dz_[None, :]
+        ta = np.minimum(np.maximum(ta, F(0.0)), d[None, :])
+        ex = relx - ta * dx[None, :]
+        ey = rely - ta * dy[None, :]
+        ez = relz - ta * dz_[None, :]
+        dist2 = ex * ex + ey * ey + ez * ez
+        masked = np.where(dist2 <= r2, ta, inf)
+        arg = masked.argmin(axis=0)
+        blockmin = masked[arg, cols]
+        better = blockmin < best_t
+        best_t = np.where(better, blockmin, best_t)
+        best_dom = np.where(better, d0 + arg, best_dom)
+    return best_t, best_dom
+
+
+SWEEPS = {"loop": _sweep_doms_loop, "blocked": _sweep_doms_blocked}
+
+
+def _walk_bunch(source, media, doms, params, num_steps, pid0, m, out,
+                sweep="loop"):
     """Walk photons [pid0, pid0+m) in one SoA bunch; fill `out` arrays."""
-    num_doms = doms.shape[0]
     num_layers = media.shape[0]
     seed = int(source[7])
     r2 = params[0] * params[0]
@@ -292,21 +360,8 @@ def _walk_bunch(source, media, doms, params, num_steps, pid0, m, out):
         u_len = uniform_vec(seed, pid, k, STREAM_LEN)
         d = -lam_s * np.log(np.maximum(u_len, eps))
 
-        best_t = np.full(n, np.inf, dtype=np.float32)
-        best_dom = np.full(n, -1, dtype=np.int64)
-        for di in range(num_doms):
-            relx = doms[di, 0] - px
-            rely = doms[di, 1] - py
-            relz = doms[di, 2] - pz
-            ta = relx * dx + rely * dy + relz * dz_
-            ta = np.minimum(np.maximum(ta, F(0.0)), d)
-            ex = relx - ta * dx
-            ey = rely - ta * dy
-            ez = relz - ta * dz_
-            dist2 = ex * ex + ey * ey + ez * ez
-            better = (dist2 <= r2) & (ta < best_t)
-            best_t = np.where(better, ta, best_t)
-            best_dom = np.where(better, di, best_dom)
+        best_t, best_dom = SWEEPS[sweep](doms, px, py, pz, dx, dy, dz_,
+                                         d, r2)
 
         detected = best_dom >= 0
         slots = (pid - np.uint32(pid0)).astype(np.int64)
@@ -383,7 +438,7 @@ def chunk_ranges(num_photons, threads):
 
 
 def walk_chunk(source, media, doms, params, num_steps, start, size, bunch,
-               out):
+               out, sweep="loop"):
     """Walk photons [start, start+size) in SoA sub-bunches into `out`
     (disjoint slices per chunk, so chunks may run concurrently)."""
     bunch = max(1, bunch)
@@ -391,22 +446,25 @@ def walk_chunk(source, media, doms, params, num_steps, start, size, bunch,
     while pid < start + size:
         m = min(bunch, start + size - pid)
         sub = {key: arr[pid:pid + m] for key, arr in out.items()}
-        _walk_bunch(source, media, doms, params, num_steps, pid, m, sub)
+        _walk_bunch(source, media, doms, params, num_steps, pid, m, sub,
+                    sweep=sweep)
         pid += m
 
 
 def batched_outcomes(source, media, doms, params, num_photons, num_steps,
-                     threads=1, bunch=4096):
+                     threads=1, bunch=4096, sweep="loop"):
     """Per-photon outcomes from the batched SoA walk.
 
     `threads` here only selects the chunk split (the mirror runs the
     chunks sequentially); photon independence is what makes the Rust
-    engine's parallel execution bit-identical to this.
+    engine's parallel execution bit-identical to this.  `sweep` picks
+    the pass-B kernel: "loop" (per-DOM, SimdMode::Off) or "blocked"
+    (2-D broadcast, SimdMode::Lanes) — bit-identical by construction.
     """
     out = empty_outcomes(num_photons)
     for start, size in chunk_ranges(num_photons, threads):
         walk_chunk(source, media, doms, params, num_steps, start, size,
-                   bunch, out)
+                   bunch, out, sweep=sweep)
     return out
 
 
@@ -434,14 +492,20 @@ def reduce_outcomes(out, num_doms):
 
 
 def run(variant, seed, mode="batched", threads=1, bunch=4096, dusty=True):
-    """hits/summary for a named variant (the parity_check entry point)."""
+    """hits/summary for a named variant (the parity_check entry point).
+
+    Modes mirror `icecloud parity --mode`: "scalar" (per-photon walk),
+    "batched" (SoA walk, per-DOM sweep = SimdMode::Off) and "simd"
+    (SoA walk, blocked sweep = SimdMode::Lanes).
+    """
     v = VARIANTS[variant]
     source, media, doms, params = build_inputs(variant, seed, dusty)
     if mode == "scalar":
         out = scalar_outcomes(source, media, doms, params,
                               v["num_photons"], v["num_steps"])
     else:
+        sweep = "blocked" if mode == "simd" else "loop"
         out = batched_outcomes(source, media, doms, params,
                                v["num_photons"], v["num_steps"],
-                               threads=threads, bunch=bunch)
+                               threads=threads, bunch=bunch, sweep=sweep)
     return reduce_outcomes(out, v["num_doms"])

@@ -17,6 +17,11 @@ Modes:
                  also the right tool for bisecting a CI failure to
                  "physics/RNG" vs "Rust-specific")
 
+Modes "scalar", "batched" (SoA walk, lane sweep off) and "simd" (SoA
+walk, lane sweep on) are all held to the same bit-mirror contract —
+the SIMD path ships default-on *because* this suite pins it to the
+scalar hit counts exactly.
+
 Checks per (variant, seed, mode):
   * per-DOM hits: exactly equal
   * detected/absorbed/alive/alive-step counts: exactly equal
@@ -127,7 +132,11 @@ def main():
                     help="path to the icecloud binary (--impl bin)")
     ap.add_argument("--variants", default="small,default")
     ap.add_argument("--seeds", default="0,1,7")
-    ap.add_argument("--modes", default="scalar,batched")
+    ap.add_argument("--modes", default="scalar,batched,simd",
+                    help="engine modes to check (passed straight to "
+                         "`icecloud parity --mode` under --impl bin): "
+                         "scalar, batched (lane sweep off), simd "
+                         "(lane sweep on)")
     ap.add_argument("--threads", type=int, default=2,
                     help="engine threads for batched mode")
     ap.add_argument("--bunch", type=int, default=1000,
