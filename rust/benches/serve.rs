@@ -17,9 +17,11 @@
 //! lease/heartbeat/complete round trip against local dispatch.
 //! "events-stream-{0,4}sub" publishes onto the live event bus with no
 //! subscribers and with four attached SSE streams, pricing the bus's
-//! publishers-never-block contract.
+//! publishers-never-block contract.  "grid-submit" posts a 64-cell
+//! `[grid]` spec whose replay is already cached, pricing the cartesian
+//! expansion + key derivation on the request path.
 //!
-//! Regenerate the committed baseline (BENCH_pr8.json) with:
+//! Regenerate the committed baseline (BENCH_pr9.json) with:
 //!   tools/bench_baseline.sh
 
 use icecloud::config::{CampaignConfig, RampStep};
@@ -137,6 +139,18 @@ fn main() {
     // submit measures parse + key + dedup + 202, no background replay
     b.run_throughput("serve/async-submit", 1.0, "requests", || {
         post_sweep(&addr, "/sweep?mode=async", hot_spec)
+    });
+
+    // a 64-cell grid spec, replay already cached: each request pays
+    // TOML parse + cartesian expansion + 64-row key derivation + the
+    // memory-tier hit, i.e. the grid machinery itself under load
+    let grid_spec = "[grid]\n\
+                     seed = [1, 2, 3, 4]\n\
+                     keepalive_s = [60, 120, 240, 300]\n\
+                     preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n";
+    post_sweep(&addr, "/sweep", grid_spec); // warm (64 replays)
+    b.run_throughput("serve/grid-submit", 1.0, "requests", || {
+        post_sweep(&addr, "/sweep", grid_spec)
     });
 
     // cold replays again, but dispatched to two fleet workers over the

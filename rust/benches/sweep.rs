@@ -51,6 +51,17 @@ fn main() {
         );
     }
 
+    // grid expansion alone (PR 9): parse + cartesian product + per-cell
+    // validation of the 3-axis {4,4,4} acceptance grid, no replays
+    let grid_spec = "[grid]\n\
+                     preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n\
+                     budget_usd = [14500.0, 29000.0, 58000.0, 116000.0]\n\
+                     keepalive_s = [60, 120, 240, 300]\n";
+    let mut grid_base = small_base();
+    b.run_throughput("sweep/grid-expand-64", 64.0, "scenarios", || {
+        sweep::parse_spec(grid_spec, &mut grid_base).unwrap().len()
+    });
+
     // the artifact "default" shape, as synthetic metadata
     let exe = PhotonExecutable::from_meta(VariantMeta::synthetic(
         "bench-default",

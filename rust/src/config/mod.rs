@@ -406,6 +406,39 @@ fn want_str<'a>(
         .transpose()
 }
 
+/// Convert a spec-file duration expressed in `unit_s`-second units
+/// (days, hours) to whole sim-seconds.  `f64 as u64` saturates NaN and
+/// negatives to 0 and +inf to `u64::MAX`, so `duration_days = -1.0`
+/// would replay a zero-length campaign under a citable name; reject
+/// everything the cast would corrupt instead.  Shared by
+/// [`CampaignConfig::apply_toml`], the scenario-spec parser
+/// (`sweep::matrix`) and the `--days` CLI override.
+pub fn spec_seconds(
+    v: f64,
+    unit_s: u64,
+    ctx: &str,
+) -> Result<u64, String> {
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!(
+            "{ctx} must be a finite non-negative number (got {v})"
+        ));
+    }
+    let s = v * unit_s as f64;
+    if s >= u64::MAX as f64 {
+        return Err(format!("{ctx} ({v}) is out of range"));
+    }
+    Ok(s as u64)
+}
+
+/// Range-check a spec-file integer destined for a `u32` field (ramp
+/// targets, on-prem slots).  `u64 as u32` truncates modulo 2^32, so
+/// `ramp_targets = [4294967297]` would silently "ramp" to 1 GPU.
+pub fn spec_u32(v: u64, ctx: &str) -> Result<u32, String> {
+    u32::try_from(v).map_err(|_| {
+        format!("{ctx} ({v}) is out of range (max {})", u32::MAX)
+    })
+}
+
 impl CampaignConfig {
     /// Apply overrides from a parsed TOML document.  Strict on values:
     /// a present-but-mistyped key is an error, never a silent no-op
@@ -415,7 +448,7 @@ impl CampaignConfig {
             self.seed = v;
         }
         if let Some(v) = want_f64(doc, &["duration_days"])? {
-            self.duration_s = (v * DAY as f64) as SimTime;
+            self.duration_s = spec_seconds(v, DAY, "'duration_days'")?;
         }
         if let Some(v) = want_u64(doc, &["keepalive_s"])? {
             self.keepalive_s = v;
@@ -492,7 +525,7 @@ impl CampaignConfig {
             self.alert_thresholds = alerts;
         }
         if let Some(v) = want_u64(doc, &["onprem", "slots"])? {
-            self.onprem.slots = v as u32;
+            self.onprem.slots = spec_u32(v, "'onprem.slots'")?;
         }
         if let Some(arr) = doc.get_path(&["ramp", "targets"]) {
             let arr = arr.as_arr().ok_or_else(|| {
@@ -533,9 +566,15 @@ impl CampaignConfig {
                     )
                 })?;
                 ramp.push(RampStep {
-                    target: target as u32,
-                    hold_s: (holds.get(i).copied().unwrap_or(2.0)
-                        * DAY as f64) as SimTime,
+                    target: spec_u32(
+                        target,
+                        &format!("'ramp.targets[{i}]'"),
+                    )?,
+                    hold_s: spec_seconds(
+                        holds.get(i).copied().unwrap_or(2.0),
+                        DAY,
+                        &format!("'ramp.hold_days[{i}]'"),
+                    )?,
                 });
             }
             if ramp.is_empty() {
@@ -543,13 +582,29 @@ impl CampaignConfig {
             }
             self.ramp = ramp;
         }
-        if let Some(at) = want_f64(doc, &["outage", "at_days"])? {
-            let dur = want_f64(doc, &["outage", "duration_hours"])?
-                .unwrap_or(2.0);
-            self.outage = Some(OutageSpec {
-                at_s: (at * DAY as f64) as SimTime,
-                duration_s: (dur * HOUR as f64) as SimTime,
-            });
+        match (
+            want_f64(doc, &["outage", "at_days"])?,
+            want_f64(doc, &["outage", "duration_hours"])?,
+        ) {
+            (Some(at), dur) => {
+                self.outage = Some(OutageSpec {
+                    at_s: spec_seconds(at, DAY, "'outage.at_days'")?,
+                    duration_s: spec_seconds(
+                        dur.unwrap_or(2.0),
+                        HOUR,
+                        "'outage.duration_hours'",
+                    )?,
+                });
+            }
+            // a dangling duration would otherwise be validated and then
+            // silently dropped — same contract as
+            // checkpoint.resume_overhead_s without every_s
+            (None, Some(_)) => {
+                return Err("'outage.duration_hours' needs \
+                            'outage.at_days'"
+                    .into())
+            }
+            (None, None) => {}
         }
         if want_bool(doc, &["outage", "disabled"])? == Some(true) {
             self.outage = None;
@@ -1288,6 +1343,51 @@ azure = 0.6
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.ramp[0].hold_s, DAY);
         assert_eq!(c.ramp[1].hold_s, 2 * DAY);
+    }
+
+    #[test]
+    fn corrupting_casts_rejected_not_saturated() {
+        // `f64 as u64` saturates negatives/NaN to 0 and +inf to
+        // u64::MAX; `u64 as u32` truncates modulo 2^32.  Every one of
+        // these used to parse Ok with a silently corrupted value.
+        for src in [
+            "duration_days = -1.0",
+            "[outage]\nat_days = -3.0",
+            "[outage]\nat_days = 1.0\nduration_hours = -2.0",
+            "[outage]\nduration_hours = 2.0",
+            "[ramp]\ntargets = [100]\nhold_days = [-1.0]",
+            "[ramp]\ntargets = [4294967297]",
+            "[onprem]\nslots = 4294967297",
+        ] {
+            let doc = toml::parse(src).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "'{src}' must error");
+        }
+        // non-finite values have no TOML/JSON spelling, but the Json
+        // tree can carry them (and the cast saturates them too)
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut doc = Json::obj();
+            doc.set("duration_days", Json::from(v));
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "{v} must error");
+        }
+    }
+
+    #[test]
+    fn spec_helpers_guard_ranges() {
+        assert_eq!(spec_seconds(2.0, DAY, "x").unwrap(), 2 * DAY);
+        assert_eq!(spec_seconds(0.5, DAY, "x").unwrap(), DAY / 2);
+        assert_eq!(spec_seconds(0.0, HOUR, "x").unwrap(), 0);
+        assert!(spec_seconds(-0.5, DAY, "x").is_err());
+        assert!(spec_seconds(f64::NAN, DAY, "x").is_err());
+        assert!(spec_seconds(f64::INFINITY, HOUR, "x").is_err());
+        // a duration that overflows u64 seconds is out of range, not
+        // saturated
+        assert!(spec_seconds(3.0e18, DAY, "x").is_err());
+        assert_eq!(spec_u32(10, "x").unwrap(), 10);
+        assert_eq!(spec_u32(u32::MAX as u64, "x").unwrap(), u32::MAX);
+        let err = spec_u32(u32::MAX as u64 + 2, "x").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     #[test]

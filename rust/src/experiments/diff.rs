@@ -1,0 +1,427 @@
+//! EXP-DIFF — sweep-vs-sweep comparison: per-column deltas.
+//!
+//! Takes two sweep result documents — `sweep.json` files written by the
+//! sweep harness, or `/results/<key>` response bodies from `icecloud
+//! serve` (the `{"key": ..., "rows": [...]}` shape) — joins their rows
+//! by scenario name, and renders per-column absolute and relative
+//! deltas.  The point is citability: "checkpointing cut wasted hours
+//! 40% across the grid" should be one `icecloud diff` away from the two
+//! sweeps that back it.
+//!
+//! Join semantics: rows match on exact scenario name; matched rows are
+//! reported in the A-side's order; names present on only one side are
+//! listed separately (`only_a` / `only_b`), never silently dropped.
+//! Within a matched row the column set is the union of both sides — a
+//! column missing on one side reads as NaN, which renders as an empty
+//! CSV cell / JSON `null` rather than a fake zero.  Deltas are
+//! `b - a` absolute and `100 * (b - a) / |a|` percent (NaN when the A
+//! side is zero or either side is missing).
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One joined scenario: column name → (A value, B value).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub name: String,
+    pub cells: BTreeMap<String, (f64, f64)>,
+}
+
+/// The full join of two sweep result sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepDiff {
+    /// Scenarios present on both sides, in the A-side's row order.
+    pub rows: Vec<DiffRow>,
+    /// Scenario names only the A side has, in A order.
+    pub only_a: Vec<String>,
+    /// Scenario names only the B side has, in B order.
+    pub only_b: Vec<String>,
+}
+
+/// A parsed result set: rows in document order.
+pub type Rows = Vec<(String, BTreeMap<String, f64>)>;
+
+/// Parse a sweep result document.  Accepts either a bare JSON array of
+/// row objects (`sweep.json`) or an object with a `rows` array (the
+/// server's `/results/<key>` body).  Every row needs a string `name`;
+/// every other field must be a number or `null` (the JSON writer emits
+/// NaN as `null`).  Duplicate names are an error — the join would be
+/// ambiguous.
+pub fn parse_rows(text: &str) -> Result<Rows, String> {
+    let doc = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+    let arr = match &doc {
+        Json::Arr(items) => items.as_slice(),
+        Json::Obj(_) => doc
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or("document has no 'rows' array")?,
+        _ => return Err("document is not a sweep result".into()),
+    };
+    let mut out: Rows = Vec::with_capacity(arr.len());
+    let mut seen = BTreeSet::new();
+    for (i, row) in arr.iter().enumerate() {
+        let obj = row
+            .as_obj()
+            .ok_or_else(|| format!("row {i} is not an object"))?;
+        let name = obj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("row {i} has no string 'name'"))?
+            .to_string();
+        if !seen.insert(name.clone()) {
+            return Err(format!("duplicate scenario name '{name}'"));
+        }
+        let mut cols = BTreeMap::new();
+        for (key, v) in obj {
+            if key == "name" {
+                continue;
+            }
+            let v = match v {
+                Json::Num(n) => *n,
+                Json::Null => f64::NAN,
+                _ => {
+                    return Err(format!(
+                        "row '{name}' column '{key}' is not numeric"
+                    ))
+                }
+            };
+            cols.insert(key.clone(), v);
+        }
+        out.push((name, cols));
+    }
+    Ok(out)
+}
+
+/// Join two parsed result sets by scenario name.
+pub fn diff(a: &Rows, b: &Rows) -> SweepDiff {
+    let b_by_name: BTreeMap<&str, &BTreeMap<String, f64>> =
+        b.iter().map(|(n, c)| (n.as_str(), c)).collect();
+    let a_names: BTreeSet<&str> =
+        a.iter().map(|(n, _)| n.as_str()).collect();
+    let mut rows = Vec::new();
+    let mut only_a = Vec::new();
+    for (name, ac) in a {
+        let Some(bc) = b_by_name.get(name.as_str()) else {
+            only_a.push(name.clone());
+            continue;
+        };
+        let mut cells = BTreeMap::new();
+        for col in ac.keys().chain(bc.keys()) {
+            if cells.contains_key(col) {
+                continue;
+            }
+            let av = ac.get(col).copied().unwrap_or(f64::NAN);
+            let bv = bc.get(col).copied().unwrap_or(f64::NAN);
+            cells.insert(col.clone(), (av, bv));
+        }
+        rows.push(DiffRow { name: name.clone(), cells });
+    }
+    let only_b = b
+        .iter()
+        .filter(|(n, _)| !a_names.contains(n.as_str()))
+        .map(|(n, _)| n.clone())
+        .collect();
+    SweepDiff { rows, only_a, only_b }
+}
+
+fn delta(a: f64, b: f64) -> f64 {
+    b - a
+}
+
+fn delta_pct(a: f64, b: f64) -> f64 {
+    if a == 0.0 {
+        f64::NAN
+    } else {
+        100.0 * (b - a) / a.abs()
+    }
+}
+
+/// Did this cell actually change?  Two NaNs (both sides missing or
+/// undefined) count as unchanged.
+fn changed(a: f64, b: f64) -> bool {
+    !(a == b || (a.is_nan() && b.is_nan()))
+}
+
+/// Number formatting shared with every other emitter: the JSON writer's
+/// (`29000` not `29000.0`, NaN as `null` in JSON / empty in CSV).
+fn fmt_num(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        Json::from(v).to_string_compact()
+    }
+}
+
+/// Human-readable diff: one block per joined scenario listing only the
+/// columns that changed, then the one-sided scenario lists.
+pub fn render(d: &SweepDiff) -> String {
+    let mut out = String::new();
+    out.push_str("DIFF — sweep A vs sweep B (delta = B - A)\n");
+    let mut changed_rows = 0usize;
+    for row in &d.rows {
+        let hot: Vec<(&String, &(f64, f64))> = row
+            .cells
+            .iter()
+            .filter(|(_, (a, b))| changed(*a, *b))
+            .collect();
+        if hot.is_empty() {
+            continue;
+        }
+        changed_rows += 1;
+        out.push_str(&format!("\n{}\n", row.name));
+        let col_w = hot
+            .iter()
+            .map(|(c, _)| c.len())
+            .max()
+            .unwrap_or(0)
+            .max(6);
+        for (col, (a, b)) in hot {
+            let pct = delta_pct(*a, *b);
+            let pct = if pct.is_nan() {
+                String::new()
+            } else {
+                format!(" ({pct:+.1}%)")
+            };
+            out.push_str(&format!(
+                "  {:<col_w$}  {} -> {}  delta {}{}\n",
+                col,
+                fmt_num(*a),
+                fmt_num(*b),
+                fmt_num(delta(*a, *b)),
+                pct,
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\n{} scenarios joined, {} changed, {} only in A, {} only in B\n",
+        d.rows.len(),
+        changed_rows,
+        d.only_a.len(),
+        d.only_b.len()
+    ));
+    for n in &d.only_a {
+        out.push_str(&format!("  only in A: {n}\n"));
+    }
+    for n in &d.only_b {
+        out.push_str(&format!("  only in B: {n}\n"));
+    }
+    out
+}
+
+/// Long-format CSV: one line per (scenario, column) pair, *all*
+/// columns (changed or not), NaN cells empty.
+pub fn to_csv(d: &SweepDiff) -> String {
+    let mut out = String::from("scenario,column,a,b,delta,delta_pct\n");
+    let cell = |v: f64| {
+        if v.is_nan() {
+            String::new()
+        } else {
+            Json::from(v).to_string_compact()
+        }
+    };
+    for row in &d.rows {
+        for (col, (a, b)) in &row.cells {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                super::csv_field(&row.name),
+                super::csv_field(col),
+                cell(*a),
+                cell(*b),
+                cell(delta(*a, *b)),
+                cell(delta_pct(*a, *b)),
+            ));
+        }
+    }
+    out
+}
+
+/// Machine-readable diff.  NaN serializes as `null` (the JSON writer's
+/// contract), so missing-on-one-side cells are explicit.
+pub fn to_json(d: &SweepDiff) -> Json {
+    let mut o = Json::obj();
+    o.set("joined", Json::from(d.rows.len()));
+    o.set(
+        "only_a",
+        Json::Arr(d.only_a.iter().map(|n| Json::from(n.as_str())).collect()),
+    );
+    o.set(
+        "only_b",
+        Json::Arr(d.only_b.iter().map(|n| Json::from(n.as_str())).collect()),
+    );
+    let rows = d
+        .rows
+        .iter()
+        .map(|row| {
+            let mut r = Json::obj();
+            r.set("name", Json::from(row.name.as_str()));
+            let mut cols = Json::obj();
+            for (col, (a, b)) in &row.cells {
+                let mut c = Json::obj();
+                c.set("a", Json::from(*a));
+                c.set("b", Json::from(*b));
+                c.set("delta", Json::from(delta(*a, *b)));
+                c.set("delta_pct", Json::from(delta_pct(*a, *b)));
+                cols.set(col, c);
+            }
+            r.set("columns", cols);
+            r
+        })
+        .collect();
+    o.set("rows", Json::Arr(rows));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_json(rows: &[(&str, &[(&str, f64)])]) -> String {
+        let arr: Vec<Json> = rows
+            .iter()
+            .map(|(name, cols)| {
+                let mut o = Json::obj();
+                o.set("name", Json::from(*name));
+                for (k, v) in *cols {
+                    o.set(k, Json::from(*v));
+                }
+                o
+            })
+            .collect();
+        Json::Arr(arr).to_string_compact()
+    }
+
+    #[test]
+    fn parses_array_and_results_body_shapes() {
+        let arr = rows_json(&[("a", &[("cost_usd", 10.0)])]);
+        let from_arr = parse_rows(&arr).unwrap();
+        assert_eq!(from_arr.len(), 1);
+        assert_eq!(from_arr[0].1["cost_usd"], 10.0);
+        let body = format!("{{\"key\": \"abc\", \"rows\": {arr}}}");
+        assert_eq!(parse_rows(&body).unwrap(), from_arr);
+        // null (the writer's NaN) is a missing value, not an error
+        let with_null = r#"[{"name": "a", "cost_per_eflop_hour": null}]"#;
+        let r = parse_rows(with_null).unwrap();
+        assert!(r[0].1["cost_per_eflop_hour"].is_nan());
+    }
+
+    #[test]
+    fn malformed_documents_rejected() {
+        for bad in [
+            "42",
+            "[42]",
+            r#"[{"cost_usd": 1}]"#,
+            r#"[{"name": "a"}, {"name": "a"}]"#,
+            r#"[{"name": "a", "cost_usd": "ten"}]"#,
+            r#"{"key": "abc"}"#,
+            "not json",
+        ] {
+            assert!(parse_rows(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn join_reports_deltas_and_one_sided_rows() {
+        let a = parse_rows(&rows_json(&[
+            ("base", &[("cost_usd", 100.0), ("gpu_days", 8.0)]),
+            ("gone", &[("cost_usd", 1.0)]),
+        ]))
+        .unwrap();
+        let b = parse_rows(&rows_json(&[
+            ("base", &[("cost_usd", 150.0), ("gpu_days", 8.0)]),
+            ("new", &[("cost_usd", 2.0)]),
+        ]))
+        .unwrap();
+        let d = diff(&a, &b);
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.only_a, vec!["gone".to_string()]);
+        assert_eq!(d.only_b, vec!["new".to_string()]);
+        assert_eq!(d.rows[0].cells["cost_usd"], (100.0, 150.0));
+        assert_eq!(delta(100.0, 150.0), 50.0);
+        assert_eq!(delta_pct(100.0, 150.0), 50.0);
+        // unchanged cells join but don't count as changed
+        assert!(!changed(8.0, 8.0));
+        assert!(changed(8.0, 9.0));
+        assert!(!changed(f64::NAN, f64::NAN));
+        assert!(changed(8.0, f64::NAN));
+    }
+
+    #[test]
+    fn golden_render_csv_json() {
+        let a = parse_rows(&rows_json(&[(
+            "base",
+            &[("cost_usd", 100.0), ("gpu_days", 8.0)],
+        )]))
+        .unwrap();
+        let b = parse_rows(&rows_json(&[(
+            "base",
+            &[("cost_usd", 150.0), ("gpu_days", 8.0)],
+        )]))
+        .unwrap();
+        let d = diff(&a, &b);
+
+        let txt = render(&d);
+        assert!(txt.contains("base"), "{txt}");
+        assert!(
+            txt.contains("cost_usd  100 -> 150  delta 50 (+50.0%)"),
+            "{txt}"
+        );
+        // unchanged column is not listed in the table
+        assert!(!txt.contains("gpu_days"), "{txt}");
+        assert!(txt.contains("1 scenarios joined, 1 changed"), "{txt}");
+
+        let csv = to_csv(&d);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "scenario,column,a,b,delta,delta_pct");
+        // CSV carries every column, changed or not, in sorted order
+        assert_eq!(lines[1], "base,cost_usd,100,150,50,50");
+        assert_eq!(lines[2], "base,gpu_days,8,8,0,0");
+        assert_eq!(lines.len(), 3);
+
+        let j = to_json(&d);
+        assert_eq!(j.get("joined").unwrap().as_u64(), Some(1));
+        let cell = j
+            .get_path(&["rows"])
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+            .get_path(&["columns", "cost_usd"])
+            .unwrap();
+        assert_eq!(cell.get("a").unwrap().as_f64(), Some(100.0));
+        assert_eq!(cell.get("delta").unwrap().as_f64(), Some(50.0));
+        assert_eq!(cell.get("delta_pct").unwrap().as_f64(), Some(50.0));
+        // deterministic output
+        assert_eq!(
+            to_json(&d).to_string_compact(),
+            j.to_string_compact()
+        );
+    }
+
+    #[test]
+    fn zero_baseline_and_missing_columns_render_safely() {
+        let a = parse_rows(&rows_json(&[(
+            "s",
+            &[("nat_drops", 0.0)],
+        )]))
+        .unwrap();
+        let b = parse_rows(&rows_json(&[(
+            "s",
+            &[("nat_drops", 5.0), ("extra", 1.0)],
+        )]))
+        .unwrap();
+        let d = diff(&a, &b);
+        // a == 0: percent is undefined, not infinite
+        assert!(delta_pct(0.0, 5.0).is_nan());
+        let csv = to_csv(&d);
+        // NaN cells are empty, never "NaN"
+        assert!(csv.contains("s,nat_drops,0,5,5,\n"), "{csv}");
+        assert!(csv.contains("s,extra,,1,,\n"), "{csv}");
+        // JSON: missing-side cells are null
+        let j = to_json(&d).to_string_compact();
+        assert!(j.contains("\"a\":null"), "{j}");
+        // hostile scenario names stay one CSV field
+        let a = parse_rows(&rows_json(&[("a,b", &[("x", 1.0)])])).unwrap();
+        let b2 = parse_rows(&rows_json(&[("a,b", &[("x", 2.0)])])).unwrap();
+        let csv = to_csv(&diff(&a, &b2));
+        assert!(csv.contains("\"a,b\",x,1,2,1,100\n"), "{csv}");
+    }
+}

@@ -8,11 +8,13 @@
 //! | NAT      | §IV keepalive incident      | `nat`       |
 //! | RAMP     | §IV validation/preemption   | `ramp`      |
 //! | SWEEP    | what-if scenario matrix     | `sweep`     |
+//! | DIFF     | sweep-vs-sweep deltas       | `diff`      |
 //!
 //! Each harness runs the campaign (or a reduced scenario), renders the
 //! same rows/series the paper reports, and writes CSV/JSON/text into a
 //! results directory.  EXPERIMENTS.md records paper-vs-measured.
 
+pub mod diff;
 pub mod fig1;
 pub mod fig2;
 pub mod headline;
@@ -22,6 +24,20 @@ pub mod sweep;
 
 use std::fs;
 use std::path::{Path, PathBuf};
+
+/// RFC-4180-quote one CSV field: fields containing a comma, a double
+/// quote, or a line break are wrapped in quotes with embedded quotes
+/// doubled; everything else passes through unchanged.  Scenario names
+/// are attacker-ish input here — quoted TOML keys (`[scenario."a,b"]`)
+/// and grid-synthesized names are legal and must not shift columns.
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+    {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
 
 /// Create (if needed) and return the directory for one experiment.
 pub fn exp_dir(out_root: &Path, exp: &str) -> std::io::Result<PathBuf> {
@@ -41,6 +57,16 @@ pub fn write_output(dir: &Path, name: &str, content: &str) -> std::io::Result<()
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn csv_field_quotes_only_when_needed() {
+        assert_eq!(csv_field("baseline"), "baseline");
+        assert_eq!(csv_field("a=1/b=2"), "a=1/b=2");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("two\nlines"), "\"two\nlines\"");
+        assert_eq!(csv_field("a,b\"c"), "\"a,b\"\"c\"");
+    }
 
     #[test]
     fn exp_dir_creates_nested() {

@@ -12,19 +12,24 @@ use crate::sweep::ScenarioSummary;
 use crate::util::json::Json;
 use std::path::Path;
 
-/// Render the comparative table (one row per scenario).
+/// Render the comparative table (one row per scenario).  The name
+/// column stretches to the longest scenario name (grid-synthesized
+/// names easily exceed the hand-written ones), floor 18 so small
+/// matrices keep their historical layout.
 pub fn render(rows: &[ScenarioSummary]) -> String {
+    let name_w =
+        rows.iter().map(|r| r.name.len()).max().unwrap_or(0).max(18);
     let mut out = String::new();
     out.push_str("SWEEP — scenario matrix: cost vs delivered compute\n");
     out.push_str(&format!(
-        "{:<18} {:>9} {:>5} {:>9} {:>9} {:>8} {:>9} {:>6} {:>7} {:>7} {:>6} {:>8} {:>6} {:>7} {:>8}\n",
+        "{:<name_w$} {:>9} {:>5} {:>9} {:>9} {:>8} {:>9} {:>6} {:>7} {:>7} {:>6} {:>8} {:>6} {:>7} {:>8}\n",
         "scenario", "seed", "days", "cost $", "GPU-days", "EFLOPh",
         "$/EFLOPh", "peak", "done", "intr", "drops", "preempt", "good%",
         "resume", "waste h"
     ));
     for r in rows {
         out.push_str(&format!(
-            "{:<18} {:>9} {:>5.1} {:>9.0} {:>9.1} {:>8.4} {:>9.0} {:>6.0} {:>7} {:>7} {:>6} {:>8} {:>5.1}% {:>7} {:>8.1}\n",
+            "{:<name_w$} {:>9} {:>5.1} {:>9.0} {:>9.1} {:>8.4} {:>9.0} {:>6.0} {:>7} {:>7} {:>6} {:>8} {:>5.1}% {:>7} {:>8.1}\n",
             r.name,
             r.seed,
             r.duration_days,
@@ -61,7 +66,7 @@ pub fn to_csv(rows: &[ScenarioSummary]) -> String {
     for r in rows {
         out.push_str(&format!(
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
-            r.name,
+            super::csv_field(&r.name),
             r.seed,
             r.duration_days,
             r.snapshot.budget_usd,
@@ -203,6 +208,44 @@ mod tests {
         for line in csv.lines() {
             assert_eq!(line.split(',').count(), 23, "bad row: {line}");
         }
+    }
+
+    #[test]
+    fn csv_quotes_hostile_names() {
+        // a quoted TOML key ([scenario."a,b"]) or grid name must not
+        // shift every downstream column
+        let rows = vec![row("a,b\"c", 1.0), row("plain", 2.0)];
+        let csv = to_csv(&rows);
+        let hostile = csv.lines().nth(1).unwrap();
+        assert!(hostile.starts_with("\"a,b\"\"c\","), "row: {hostile}");
+        // the quoted field counts as one column: strip it, then the
+        // remaining 22 numeric fields split cleanly on commas
+        let rest = hostile.strip_prefix("\"a,b\"\"c\",").unwrap();
+        assert_eq!(rest.split(',').count(), 22);
+        let plain = csv.lines().nth(2).unwrap();
+        assert_eq!(plain.split(',').count(), 23);
+    }
+
+    #[test]
+    fn render_widens_name_column_to_longest_name() {
+        let long = "budget_usd=14500/keepalive_s=60/preempt_multiplier=1";
+        let rows = vec![row("baseline", 1.0), row(long, 2.0)];
+        let txt = render(&rows);
+        let header = txt.lines().nth(1).unwrap();
+        let short_row = txt.lines().nth(2).unwrap();
+        let long_row = txt.lines().nth(3).unwrap();
+        // the name column is as wide as the longest name, so the next
+        // column starts at the same offset on every line
+        assert_eq!(&header[..8], "scenario");
+        assert!(header[8..long.len()].trim().is_empty());
+        assert_eq!(&short_row[..8], "baseline");
+        assert!(short_row[8..long.len()].trim().is_empty());
+        assert_eq!(&long_row[..long.len()], long);
+        // small matrices keep the historical 18-char floor
+        let small = render(&vec![row("baseline", 1.0)]);
+        let line = small.lines().nth(2).unwrap();
+        assert_eq!(&line[..8], "baseline");
+        assert!(line[8..18].trim().is_empty());
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   campaign    run the two-week campaign (configurable)
-//!   sweep       run a scenario matrix in parallel (what-if analysis)
+//!   sweep       run a scenario matrix in parallel (what-if analysis);
+//!               --grid expands a [grid] cartesian-product spec
+//!   diff        join two sweep result files by scenario name and
+//!               render per-column deltas (table/CSV/JSON)
 //!   serve       HTTP scenario-sweep service with a persistent two-tier
 //!               result store, async jobs and a fleet coordinator
 //!               (POST /sweep [?mode=async], GET /matrix, /jobs,
@@ -14,7 +17,7 @@
 //!   parity      dump per-DOM hits/summary for Python-oracle comparison
 //!   info        print artifact + configuration summary
 
-use icecloud::config::CampaignConfig;
+use icecloud::config::{spec_seconds, CampaignConfig};
 use icecloud::coordinator::Campaign;
 use icecloud::experiments;
 use icecloud::runtime::{
@@ -44,6 +47,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "campaign" => cmd_campaign(rest),
         "sweep" => cmd_sweep(rest),
+        "diff" => cmd_diff(rest),
         "serve" => cmd_serve(rest),
         "worker" => cmd_worker(rest),
         "reproduce" => cmd_reproduce(rest),
@@ -73,7 +77,9 @@ fn print_usage() {
          commands:\n\
          \x20 campaign    run the two-week multi-cloud campaign\n\
          \x20 sweep       run a scenario matrix in parallel (what-if \
-         analysis)\n\
+         analysis; --grid for cartesian-product specs)\n\
+         \x20 diff        per-column deltas between two sweep result \
+         files (sweep.json or /results/<key> bodies)\n\
          \x20 serve       HTTP sweep service with a persistent result \
          store, async jobs and a fleet coordinator\n\
          \x20 worker      pull-based fleet worker (--coordinator \
@@ -119,7 +125,7 @@ fn load_config(args: &icecloud::util::cli::Args) -> Result<CampaignConfig, Strin
         cfg.seed = seed;
     }
     if let Some(days) = args.get_f64("days") {
-        cfg.duration_s = (days * 86_400.0) as u64;
+        cfg.duration_s = spec_seconds(days, 86_400, "--days")?;
     }
     if let Some(k) = args.get_u64("keepalive") {
         cfg.keepalive_s = k;
@@ -238,10 +244,11 @@ fn sweep_base_config(
 fn apply_days_override(
     args: &icecloud::util::cli::Args,
     base: &mut CampaignConfig,
-) {
+) -> Result<(), String> {
     if let Some(days) = args.get_f64("days") {
-        base.duration_s = (days * 86_400.0) as u64;
+        base.duration_s = spec_seconds(days, 86_400, "--days")?;
     }
+    Ok(())
 }
 
 /// `--engine-simd lanes|off`: strongest override of the segment-sweep
@@ -264,8 +271,14 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     let cmd = Command::new("sweep", "run a scenario matrix in parallel")
         .opt(
             "matrix",
-            "TOML matrix spec ([scenario.<name>] tables; default: the \
-             built-in 10-scenario matrix)",
+            "TOML matrix spec ([scenario.<name>] tables and/or [grid]; \
+             default: the built-in 10-scenario matrix)",
+            None,
+        )
+        .opt(
+            "grid",
+            "TOML grid spec (requires a [grid] section of per-axis value \
+             lists; expands to the cartesian product)",
             None,
         )
         .opt("config", "base campaign TOML (defaults to the paper setup)", None)
@@ -291,11 +304,35 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     // precedence (weakest to strongest):
     // 4-day default < --config file < matrix [base] < explicit --days
     let (mut base, _doc) = sweep_base_config(&args)?;
-    let scenarios = match args.get("matrix") {
-        Some(path) => icecloud::sweep::matrix::from_toml_file(path, &mut base)?,
-        None => icecloud::sweep::builtin_matrix(),
+    let scenarios = match (args.get("matrix"), args.get("grid")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "--matrix and --grid are exclusive; a --matrix spec may \
+                 itself carry a [grid] section"
+                    .into(),
+            )
+        }
+        (Some(path), None) => {
+            icecloud::sweep::matrix::from_toml_file(path, &mut base)?
+        }
+        (None, Some(path)) => {
+            // same file format and parse path as --matrix, but the
+            // caller is asserting a cartesian product: a spec without
+            // [grid] is a mistake, not a 1-scenario sweep
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read {path}: {e}"))?;
+            let doc = icecloud::util::toml::parse(&text)
+                .map_err(|e| e.to_string())?;
+            if doc.get("grid").is_none() {
+                return Err(format!(
+                    "--grid spec {path} has no [grid] section"
+                ));
+            }
+            icecloud::sweep::parse_spec_json(&doc, &mut base)?
+        }
+        (None, None) => icecloud::sweep::builtin_matrix(),
     };
-    apply_days_override(&args, &mut base);
+    apply_days_override(&args, &mut base)?;
     apply_engine_simd(&args, &mut base)?;
     let threads = args
         .get_u64("threads")
@@ -324,6 +361,56 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     if let Some(out) = args.get("out") {
         icecloud::experiments::sweep::write(&rows, Path::new(out))
             .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_diff(rest: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "diff",
+        "join two sweep result files by scenario name and render \
+         per-column deltas (delta = B - A)",
+    )
+    .opt("format", "table|csv|json", Some("table"))
+    .opt("out", "write the rendering here instead of stdout", None);
+    let args = cmd.parse(rest)?;
+    let [a_path, b_path] = args.positional() else {
+        return Err(
+            "usage: icecloud diff <a.json> <b.json> [--format \
+             table|csv|json] [--out <file>]  (inputs: sweep.json files \
+             or saved /results/<key> bodies)"
+                .into(),
+        );
+    };
+    let read = |path: &str| -> Result<experiments::diff::Rows, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        experiments::diff::parse_rows(&text)
+            .map_err(|e| format!("{path}: {e}"))
+    };
+    let a = read(a_path)?;
+    let b = read(b_path)?;
+    let d = experiments::diff::diff(&a, &b);
+    let rendered = match args.get_or("format", "table") {
+        "table" => experiments::diff::render(&d),
+        "csv" => experiments::diff::to_csv(&d),
+        "json" => {
+            let mut s = experiments::diff::to_json(&d).to_string_pretty();
+            s.push('\n');
+            s
+        }
+        other => {
+            return Err(format!(
+                "--format must be table|csv|json, got {other:?}"
+            ))
+        }
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &rendered).map_err(|e| e.to_string())?;
+            println!("wrote {path}");
+        }
+        None => print!("{rendered}"),
     }
     Ok(())
 }
@@ -406,7 +493,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     // their own [base] tables per request on top); serving knobs
     // resolve weakest to strongest: defaults < [server] table < flags
     let (mut base, doc) = sweep_base_config(&args)?;
-    apply_days_override(&args, &mut base);
+    apply_days_override(&args, &mut base)?;
     apply_engine_simd(&args, &mut base)?;
     let mut srv = icecloud::config::ServerConfig::default();
     let mut fleet = icecloud::config::FleetConfig::default();

@@ -48,7 +48,11 @@ use crate::coordinator::ScenarioConfig;
 use crate::sweep;
 use crate::util::json::{self, Json};
 
-/// Most scenarios one request may ask for.
+/// Most scenarios one request may ask for.  `[grid]` sections expand
+/// *before* this check (in `sweep::parse_spec_json`), so a grid counts
+/// by its cartesian product, not by its axis count; grids also carry
+/// their own pre-materialization cap (`sweep::grid`), so an absurd
+/// product is refused in the parser before any scenario is built.
 pub const MAX_SCENARIOS_PER_REQUEST: usize = 64;
 /// Longest replay one request may ask for (sim-seconds).
 pub const MAX_DURATION_S: u64 = 60 * 86_400;
@@ -1056,6 +1060,56 @@ mod tests {
                 "[scenario.big]\nramp_targets = [2000000]\n",
             ),
         );
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn grid_specs_accepted_and_capped_over_http() {
+        let state = tiny_state();
+        // a [grid] body flows through the same parse path as explicit
+        // [scenario.<name>] tables — no special routing
+        let spec = "[grid]\nseed = [1, 2]\n\
+                    keepalive_s = [60, 120, 240, 300]\n";
+        let resp =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(
+            resp.status,
+            200,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let doc = json::parse(
+            std::str::from_utf8(&resp.body).unwrap().trim(),
+        )
+        .unwrap();
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(
+            rows[0].get("name").unwrap().as_str(),
+            Some("keepalive_s=60/seed=1")
+        );
+        // same spec again: byte-identical body (content-addressed)
+        let again =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(again.body, resp.body);
+
+        // a grid expanding past the per-request scenario limit is a
+        // 400, not a replay storm: 5 x 4 x 4 = 80 > 64
+        let big = "[grid]\nseed = [1, 2, 3, 4, 5]\n\
+                   keepalive_s = [60, 120, 240, 300]\n\
+                   preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n";
+        let resp =
+            route(&state, &post("/sweep", "application/toml", big));
+        assert_eq!(resp.status, 400);
+        // and one past the grid's own expansion cap dies in the parser
+        let mut huge = String::from("[grid]\n");
+        for key in ["seed", "keepalive_s", "checkpoint_every_s"] {
+            let vals: Vec<String> =
+                (1..=17).map(|i| i.to_string()).collect();
+            huge.push_str(&format!("{key} = [{}]\n", vals.join(", ")));
+        }
+        let resp =
+            route(&state, &post("/sweep", "application/toml", &huge));
         assert_eq!(resp.status, 400);
     }
 

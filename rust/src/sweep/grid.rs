@@ -1,0 +1,303 @@
+//! Cartesian-product grid expansion: the `[grid]` spec section.
+//!
+//! A `[grid]` table declares per-axis value lists over the same
+//! whitelisted scenario keys that `[scenario.<name>]` tables accept
+//! (`super::matrix::SCENARIO_KEYS`):
+//!
+//! ```toml
+//! [grid]
+//! preempt_multiplier = [1.0, 2.0, 4.0, 10.0]
+//! budget_usd = [14500.0, 29000.0, 58000.0, 116000.0]
+//! keepalive_s = [60, 120, 240, 300]
+//! ```
+//!
+//! expands to the 64-cell cartesian product.  Every cell gets a
+//! deterministic synthesized name, `axis=value/axis=value/...`, with
+//! axes in sorted (BTreeMap) order and the *last* sorted axis varying
+//! fastest — so a grid spec always produces the same scenario list in
+//! the same order, which keeps the content-addressed result cache keys
+//! stable across runs and thread counts.
+//!
+//! Name uniqueness falls out of construction: duplicate values within
+//! an axis are rejected, so no two cells can render the same name.
+//! Axis values must be scalars (the TOML subset has no nested arrays),
+//! which rules out `ramp_targets`/`ramp_hold_days` as axes — those stay
+//! in `[base]` or explicit `[scenario.<name>]` tables.
+//!
+//! Expansion is capped (default [`DEFAULT_MAX_SCENARIOS`], overridable
+//! per-spec via `[grid] max_scenarios`) and the cap is checked from the
+//! axis lengths *before* any scenario is materialized, so an oversized
+//! grid costs O(axes) to reject — important because grid specs arrive
+//! over `POST /sweep` from untrusted clients.
+
+use crate::coordinator::ScenarioConfig;
+use crate::util::json::{require_u64, Json};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Default ceiling on how many scenarios one `[grid]` may expand to.
+/// High enough for a serious parameter study (a 16×16×16 cube), low
+/// enough that a typo'd axis can't wedge a server with millions of
+/// replays.  Raise per-spec with `[grid] max_scenarios`.
+pub const DEFAULT_MAX_SCENARIOS: u64 = 4096;
+
+/// Expand a `[grid]` table to its cartesian product of scenarios.
+///
+/// Each cell is fed through `super::matrix::scenario_from_json`, so
+/// grid values get exactly the same strict validation (type checks,
+/// range checks, conflicting-key checks) as hand-written scenarios.
+pub fn expand(grid: &Json) -> Result<Vec<ScenarioConfig>, String> {
+    let table = grid.as_obj().ok_or("[grid] is not a table")?;
+    let mut cap = DEFAULT_MAX_SCENARIOS;
+    // BTreeMap iteration order = sorted axis names: the name synthesis
+    // and product order below inherit determinism from this
+    let mut axes: Vec<(&str, &[Json])> = Vec::new();
+    for (key, val) in table {
+        if key == "max_scenarios" {
+            cap = require_u64(val, "[grid] max_scenarios")?;
+            if cap == 0 {
+                return Err(
+                    "[grid] max_scenarios must be positive".into()
+                );
+            }
+            continue;
+        }
+        if key == "ramp_targets" || key == "ramp_hold_days" {
+            return Err(format!(
+                "[grid] cannot sweep '{key}': array-valued axes are \
+                 not supported; set it in [base] or an explicit \
+                 [scenario.<name>] table"
+            ));
+        }
+        if !super::matrix::SCENARIO_KEYS.contains(&key.as_str()) {
+            return Err(format!("[grid] has unknown axis '{key}'"));
+        }
+        let values = val.as_arr().ok_or_else(|| {
+            format!("[grid] axis '{key}' must be an array of values")
+        })?;
+        if values.is_empty() {
+            return Err(format!("[grid] axis '{key}' has no values"));
+        }
+        let mut seen = BTreeSet::new();
+        for v in values {
+            if !matches!(v, Json::Str(_) | Json::Num(_) | Json::Bool(_))
+            {
+                return Err(format!(
+                    "[grid] axis '{key}' values must be scalars"
+                ));
+            }
+            // duplicate values would synthesize duplicate names (and
+            // replay identical cells); rejecting them here is what
+            // makes cell names unique by construction
+            if !seen.insert(value_label(v)) {
+                return Err(format!(
+                    "[grid] axis '{key}' repeats value {}",
+                    value_label(v)
+                ));
+            }
+        }
+        axes.push((key.as_str(), values));
+    }
+    if axes.is_empty() {
+        return Err("[grid] declares no axes".into());
+    }
+    let cells = axes
+        .iter()
+        .fold(1u128, |n, (_, vs)| n.saturating_mul(vs.len() as u128));
+    if cells > cap as u128 {
+        return Err(format!(
+            "[grid] expands to {cells} scenarios, over the cap of \
+             {cap}; raise [grid] max_scenarios if that is intended"
+        ));
+    }
+
+    // odometer over the sorted axes; the last axis varies fastest
+    let mut idx = vec![0usize; axes.len()];
+    let mut out = Vec::with_capacity(cells as usize);
+    loop {
+        let mut body = BTreeMap::new();
+        let mut name = String::new();
+        for (ai, (key, values)) in axes.iter().enumerate() {
+            let v = &values[idx[ai]];
+            if ai > 0 {
+                name.push('/');
+            }
+            name.push_str(key);
+            name.push('=');
+            name.push_str(&value_label(v));
+            body.insert((*key).to_string(), v.clone());
+        }
+        out.push(super::matrix::scenario_from_json(
+            &name,
+            &Json::Obj(body),
+        )?);
+        let mut ai = axes.len();
+        loop {
+            if ai == 0 {
+                return Ok(out);
+            }
+            ai -= 1;
+            idx[ai] += 1;
+            if idx[ai] < axes[ai].1.len() {
+                break;
+            }
+            idx[ai] = 0;
+        }
+    }
+}
+
+/// Render one axis value for a synthesized scenario name.  Numbers go
+/// through the JSON writer (`29000.0` → `29000`, `1.5` → `1.5`), so the
+/// label is deterministic and round-trips with the emitted result rows.
+fn value_label(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    fn grid_of(spec: &str) -> Json {
+        let doc = toml::parse(spec).unwrap();
+        doc.get("grid").cloned().unwrap()
+    }
+
+    #[test]
+    fn product_counts_and_names_are_deterministic() {
+        let g = grid_of(
+            "[grid]\n\
+             preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n\
+             budget_usd = [14500.0, 29000.0, 58000.0, 116000.0]\n\
+             keepalive_s = [60, 120, 240, 300]\n",
+        );
+        let a = expand(&g).unwrap();
+        assert_eq!(a.len(), 64);
+        let mut names: Vec<&str> =
+            a.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 64, "names must be unique");
+        // byte-identical re-expansion
+        let b = expand(&g).unwrap();
+        assert_eq!(a, b);
+        // sorted-axis name order, last axis (preempt_multiplier)
+        // fastest
+        assert_eq!(
+            a[0].name,
+            "budget_usd=14500/keepalive_s=60/preempt_multiplier=1"
+        );
+        assert_eq!(
+            a[1].name,
+            "budget_usd=14500/keepalive_s=60/preempt_multiplier=2"
+        );
+        assert_eq!(
+            a[4].name,
+            "budget_usd=14500/keepalive_s=120/preempt_multiplier=1"
+        );
+        assert_eq!(
+            a[63].name,
+            "budget_usd=116000/keepalive_s=300/preempt_multiplier=10"
+        );
+        // values really flow into the configs
+        assert_eq!(a[0].budget_usd, Some(14500.0));
+        assert_eq!(a[0].keepalive_s, Some(60));
+        assert_eq!(a[0].preempt_multiplier, Some(1.0));
+        assert_eq!(a[63].preempt_multiplier, Some(10.0));
+    }
+
+    #[test]
+    fn string_bool_and_fractional_labels() {
+        let g = grid_of(
+            "[grid]\n\
+             policy = [\"paper\", \"adaptive\"]\n\
+             outage_disabled = [true]\n\
+             preempt_multiplier = [1.5]\n",
+        );
+        let s = expand(&g).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(
+            s[0].name,
+            "outage_disabled=true/policy=paper/preempt_multiplier=1.5"
+        );
+        assert_eq!(
+            s[1].name,
+            "outage_disabled=true/policy=adaptive/\
+             preempt_multiplier=1.5"
+        );
+        assert_eq!(s[0].outage, Some(None));
+    }
+
+    #[test]
+    fn default_cap_rejects_oversized_grids() {
+        // 17 x 17 x 17 = 4913 > 4096, rejected before materializing
+        let mut spec = String::from("[grid]\n");
+        for key in ["seed", "keepalive_s", "checkpoint_every_s"] {
+            let vals: Vec<String> =
+                (1..=17).map(|i| i.to_string()).collect();
+            spec.push_str(&format!(
+                "{key} = [{}]\n",
+                vals.join(", ")
+            ));
+        }
+        let err = expand(&grid_of(&spec)).unwrap_err();
+        assert!(err.contains("4913"), "err={err}");
+        assert!(err.contains("4096"), "err={err}");
+    }
+
+    #[test]
+    fn explicit_cap_overrides_default() {
+        let base = "[grid]\nmax_scenarios = 8\n";
+        let over = format!(
+            "{base}seed = [1, 2, 3]\nkeepalive_s = [60, 120, 240]\n"
+        );
+        let err = expand(&grid_of(&over)).unwrap_err();
+        assert!(err.contains("cap of 8"), "err={err}");
+        let under = format!(
+            "{base}seed = [1, 2]\nkeepalive_s = [60, 120, 240, 300]\n"
+        );
+        assert_eq!(expand(&grid_of(&under)).unwrap().len(), 8);
+        assert!(expand(&grid_of("[grid]\nmax_scenarios = 0\nseed = [1]"))
+            .is_err());
+    }
+
+    #[test]
+    fn malformed_grids_rejected() {
+        for spec in [
+            // unknown axis
+            "[grid]\nbudgett_usd = [1.0]\n",
+            // array-valued axes unsupported
+            "[grid]\nramp_targets = [100]\n",
+            "[grid]\nramp_hold_days = [1.0]\n",
+            // non-array axis value
+            "[grid]\nseed = 7\n",
+            // empty axis
+            "[grid]\nseed = []\n",
+            // duplicate values in one axis
+            "[grid]\nseed = [1, 1]\n",
+            // no axes at all
+            "[grid]\nmax_scenarios = 16\n",
+            "[grid]\n",
+            // invalid value flows through the shared strict parser
+            "[grid]\nduration_days = [-1.0]\n",
+            "[grid]\nonprem_slots = [4294967297]\n",
+            "[grid]\npolicy = [\"bogus\"]\n",
+        ] {
+            assert!(
+                expand(&grid_of(spec)).is_err(),
+                "grid {spec:?} must be rejected"
+            );
+        }
+        assert!(expand(&Json::from("nope")).is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_across_types_rejected() {
+        // 60 and 60.0 render to the same label and would collide
+        let g = grid_of("[grid]\nkeepalive_s = [60, 60.0]\n");
+        let err = expand(&g).unwrap_err();
+        assert!(err.contains("repeats"), "err={err}");
+    }
+}

@@ -32,10 +32,16 @@
 //! `checkpoint_resume_overhead_s`) or `checkpoint_disabled`.
 //! Scenarios from a spec run in name order (the parse is a sorted map),
 //! so a matrix file always produces the same row order.
+//!
+//! A spec may also (or instead) carry a `[grid]` table declaring
+//! per-axis value lists over the same keys; it expands to the cartesian
+//! product with synthesized names before any explicit scenarios (see
+//! `super::grid`).
 
 use crate::config::{
-    CampaignConfig, CheckpointPolicy, NatOverride, OutageSpec, PolicyMode,
-    ProviderWeights, RampStep, DEFAULT_RESUME_OVERHEAD_S,
+    spec_seconds, spec_u32, CampaignConfig, CheckpointPolicy, NatOverride,
+    OutageSpec, PolicyMode, ProviderWeights, RampStep,
+    DEFAULT_RESUME_OVERHEAD_S,
 };
 use crate::coordinator::ScenarioConfig;
 use crate::sim::{DAY, HOUR};
@@ -140,7 +146,9 @@ fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
 /// Keys a `[scenario.<name>]` table may carry.  Anything else is a
 /// typo, and a typo'd override would otherwise run as a silent copy of
 /// the baseline — fatal for a tool whose rows are meant to be citable.
-const SCENARIO_KEYS: [&str; 17] = [
+/// `[grid]` axes (`super::grid`) draw from the same whitelist, so the
+/// two spec shapes cannot drift apart.
+pub(crate) const SCENARIO_KEYS: [&str; 17] = [
     "seed",
     "duration_days",
     "budget_usd",
@@ -197,7 +205,10 @@ fn scenario_bool(
         .transpose()
 }
 
-fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String> {
+pub(crate) fn scenario_from_json(
+    name: &str,
+    body: &Json,
+) -> Result<ScenarioConfig, String> {
     let table = body
         .as_obj()
         .ok_or_else(|| format!("[scenario.{name}] is not a table"))?;
@@ -211,7 +222,11 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
     let mut s = ScenarioConfig::named(name);
     s.seed = scenario_u64(name, body, "seed")?;
     if let Some(v) = scenario_f64(name, body, "duration_days")? {
-        s.duration_s = Some((v * DAY as f64) as u64);
+        s.duration_s = Some(spec_seconds(
+            v,
+            DAY,
+            &format!("[scenario.{name}] duration_days"),
+        )?);
     }
     s.budget_usd = scenario_f64(name, body, "budget_usd")?;
     s.preempt_multiplier =
@@ -236,13 +251,34 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
     if scenario_bool(name, body, "outage_disabled")? == Some(true) {
         s.outage = Some(None);
     }
-    if let Some(at) = scenario_f64(name, body, "outage_at_days")? {
-        let dur = scenario_f64(name, body, "outage_duration_hours")?
-            .unwrap_or(2.0);
-        s.outage = Some(Some(OutageSpec {
-            at_s: (at * DAY as f64) as u64,
-            duration_s: (dur * HOUR as f64) as u64,
-        }));
+    match (
+        scenario_f64(name, body, "outage_at_days")?,
+        scenario_f64(name, body, "outage_duration_hours")?,
+    ) {
+        (Some(at), dur) => {
+            s.outage = Some(Some(OutageSpec {
+                at_s: spec_seconds(
+                    at,
+                    DAY,
+                    &format!("[scenario.{name}] outage_at_days"),
+                )?,
+                duration_s: spec_seconds(
+                    dur.unwrap_or(2.0),
+                    HOUR,
+                    &format!("[scenario.{name}] outage_duration_hours"),
+                )?,
+            }));
+        }
+        // a dangling duration would be validated and then silently
+        // dropped — same contract as checkpoint_resume_overhead_s
+        // without checkpoint_every_s
+        (None, Some(_)) => {
+            return Err(format!(
+                "[scenario.{name}] outage_duration_hours needs \
+                 outage_at_days"
+            ))
+        }
+        (None, None) => {}
     }
     if let Some(targets) = body.get("ramp_targets") {
         let arr = targets.as_arr().ok_or_else(|| {
@@ -288,9 +324,15 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
                 )
             })?;
             ramp.push(RampStep {
-                target: target as u32,
-                hold_s: (holds.get(i).copied().unwrap_or(2.0)
-                    * DAY as f64) as u64,
+                target: spec_u32(
+                    target,
+                    &format!("[scenario.{name}] ramp_targets[{i}]"),
+                )?,
+                hold_s: spec_seconds(
+                    holds.get(i).copied().unwrap_or(2.0),
+                    DAY,
+                    &format!("[scenario.{name}] ramp_hold_days[{i}]"),
+                )?,
             });
         }
         if ramp.is_empty() {
@@ -301,7 +343,10 @@ fn scenario_from_json(name: &str, body: &Json) -> Result<ScenarioConfig, String>
         s.ramp = Some(ramp);
     }
     if let Some(v) = scenario_u64(name, body, "onprem_slots")? {
-        s.onprem_slots = Some(v as u32);
+        s.onprem_slots = Some(spec_u32(
+            v,
+            &format!("[scenario.{name}] onprem_slots"),
+        )?);
     }
     if let Some(v) = body.get("policy") {
         let v = v.as_str().ok_or_else(|| {
@@ -334,9 +379,16 @@ pub fn parse_spec(
 }
 
 /// Parse an already-decoded spec document (the TOML and JSON wire
-/// formats share one tree shape: an optional `base` table plus a
-/// `scenario` table of named override sets).  `icecloud serve` feeds
-/// JSON request bodies straight through this path.
+/// formats share one tree shape: an optional `base` table, an optional
+/// `grid` table of axis value lists, and an optional `scenario` table
+/// of named override sets — at least one of the latter two).
+/// `icecloud serve` feeds JSON request bodies straight through this
+/// path, so grid specs work over `POST /sweep` with no router changes.
+///
+/// Row order: grid-expanded scenarios first (cartesian product order,
+/// see `super::grid`), then explicit `[scenario.<name>]` tables in name
+/// order.  The order is part of the content-addressed cache key, so it
+/// must stay deterministic.
 pub fn parse_spec_json(
     doc: &Json,
     base: &mut CampaignConfig,
@@ -344,16 +396,37 @@ pub fn parse_spec_json(
     if let Some(b) = doc.get("base") {
         base.apply_toml(b)?;
     }
-    let tables = doc
-        .get("scenario")
-        .and_then(Json::as_obj)
-        .ok_or("matrix spec has no [scenario.<name>] tables")?;
-    if tables.is_empty() {
-        return Err("matrix spec defines zero scenarios".into());
-    }
-    let mut out = Vec::new();
-    for (name, body) in tables {
-        out.push(scenario_from_json(name, body)?);
+    let mut out = match doc.get("grid") {
+        Some(g) => super::grid::expand(g)?,
+        None => Vec::new(),
+    };
+    match doc.get("scenario") {
+        None => {
+            if out.is_empty() {
+                return Err("matrix spec has no [scenario.<name>] \
+                            tables or [grid] section"
+                    .into());
+            }
+        }
+        Some(t) => {
+            let tables = t
+                .as_obj()
+                .ok_or("matrix spec's 'scenario' is not a table")?;
+            if tables.is_empty() && out.is_empty() {
+                return Err("matrix spec defines zero scenarios".into());
+            }
+            let synthesized: std::collections::BTreeSet<&str> =
+                out.iter().map(|s| s.name.as_str()).collect();
+            for (name, body) in tables {
+                if synthesized.contains(name.as_str()) {
+                    return Err(format!(
+                        "[scenario.{name}] collides with a \
+                         grid-synthesized scenario name"
+                    ));
+                }
+                out.push(scenario_from_json(name, body)?);
+            }
+        }
     }
     Ok(out)
 }
@@ -515,6 +588,56 @@ seed = 77
         let ramp = s.ramp.as_ref().unwrap();
         assert_eq!(ramp[0].hold_s, DAY);
         assert_eq!(ramp[1].hold_s, 2 * DAY);
+    }
+
+    #[test]
+    fn corrupting_casts_rejected_not_saturated() {
+        let mut base = CampaignConfig::default();
+        // each of these used to pass `f64 as u64` / `u64 as u32` and
+        // silently run a corrupted campaign under a citable name:
+        // negative durations saturated to 0, oversized integers
+        // truncated modulo 2^32
+        for spec in [
+            "[scenario.a]\nduration_days = -1.0",
+            "[scenario.a]\noutage_at_days = -3.0",
+            "[scenario.a]\noutage_at_days = 1.0\n\
+             outage_duration_hours = -2.0",
+            "[scenario.a]\nramp_targets = [100]\n\
+             ramp_hold_days = [-1.0]",
+            "[scenario.a]\nramp_targets = [4294967297]",
+            "[scenario.a]\nonprem_slots = 4294967297",
+            // out-of-range positive: 3e18 days of seconds > u64::MAX
+            "[scenario.a]\nduration_days = 3.0e18",
+        ] {
+            assert!(
+                parse_spec(spec, &mut base).is_err(),
+                "spec {spec:?} must be rejected"
+            );
+        }
+        // non-finite values can't be written in TOML; go through JSON
+        for (key, v) in [
+            ("duration_days", f64::NAN),
+            ("duration_days", f64::INFINITY),
+            ("outage_at_days", f64::NEG_INFINITY),
+        ] {
+            let mut body = std::collections::BTreeMap::new();
+            body.insert(key.to_string(), Json::Num(v));
+            let err = scenario_from_json("a", &Json::Obj(body))
+                .unwrap_err();
+            assert!(err.contains(key), "err={err}");
+        }
+    }
+
+    #[test]
+    fn dangling_outage_duration_rejected() {
+        let mut base = CampaignConfig::default();
+        // a lone duration used to validate and then silently vanish
+        let err = parse_spec(
+            "[scenario.a]\noutage_duration_hours = 2.0",
+            &mut base,
+        )
+        .unwrap_err();
+        assert!(err.contains("outage_at_days"), "err={err}");
     }
 
     #[test]

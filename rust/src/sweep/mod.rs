@@ -20,6 +20,12 @@
 //!
 //! [`ScenarioConfig`]: crate::coordinator::ScenarioConfig
 
+//! Scenarios come from three spec shapes sharing one parse path
+//! ([`parse_spec_json`]): the built-in matrix, explicit
+//! `[scenario.<name>]` tables, and `[grid]` cartesian products
+//! ([`grid`]).
+
+pub mod grid;
 pub mod matrix;
 pub mod runner;
 

@@ -7,6 +7,9 @@
 //! scenario result vector.  Summaries land at their scenario's index, so
 //! the output order (and content) is independent of thread count and
 //! scheduling — the property `rust/tests/sweep_determinism.rs` pins.
+//! The runner is agnostic to where the scenario list came from:
+//! hand-written `[scenario.<name>]` tables and `[grid]` cartesian
+//! products (`super::grid`) arrive as the same `Vec<ScenarioConfig>`.
 
 use crate::cloudbank::BudgetSnapshot;
 use crate::config::CampaignConfig;

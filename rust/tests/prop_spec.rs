@@ -1,0 +1,505 @@
+//! Property-style spec fuzzing: randomly assembled scenario tables
+//! either parse to *exactly* the config the spec asked for, or error —
+//! never an `Ok` whose applied config silently differs from the spec.
+//!
+//! This is the contract the PR-9 cast fixes restored: before them,
+//! `duration_days = -1.0` saturated to a zero-length campaign and
+//! `ramp_targets = [4294967297]` truncated to a 1-GPU ramp, both under
+//! citable scenario names.  The generator mixes absent / valid /
+//! invalid values per key (mistyped types, out-of-range magnitudes,
+//! non-finite floats, conflicting key pairs, typo'd key names) and the
+//! property cross-checks every accepted parse against an independently
+//! built expected `ScenarioConfig`.
+
+use icecloud::config::{
+    CampaignConfig, CheckpointPolicy, NatOverride, OutageSpec,
+    PolicyMode, ProviderWeights, RampStep, DEFAULT_RESUME_OVERHEAD_S,
+};
+use icecloud::coordinator::ScenarioConfig;
+use icecloud::sweep::parse_spec_json;
+use icecloud::util::json::Json;
+use icecloud::util::proptest::{ensure, forall, no_shrink};
+use icecloud::util::rng::Rng;
+use std::collections::BTreeMap;
+
+const DAY: f64 = 86_400.0;
+const HOUR: f64 = 3_600.0;
+
+#[derive(Debug, Clone)]
+struct Case {
+    body: BTreeMap<String, Json>,
+    /// At least one slot drew an invalid value: the parse MUST error.
+    invalid: bool,
+    /// What a fully valid draw must parse to, field for field.
+    expect: ScenarioConfig,
+}
+
+fn bad_u64(r: &mut Rng) -> Json {
+    match r.below(4) {
+        0 => Json::from("42"),
+        1 => Json::Num(-3.0),
+        2 => Json::Num(2.5),
+        _ => Json::Bool(true),
+    }
+}
+
+/// Invalid where a finite non-negative number is required.
+fn bad_duration(r: &mut Rng) -> Json {
+    match r.below(5) {
+        0 => Json::from("1.0"),
+        1 => Json::Num(-1.0),
+        2 => Json::Num(f64::NAN),
+        3 => Json::Num(f64::INFINITY),
+        _ => Json::Num(3.0e18), // finite, but seconds overflow u64
+    }
+}
+
+fn policy_expected(name: &str) -> PolicyMode {
+    match name {
+        "paper" => PolicyMode::Fixed(ProviderWeights {
+            aws: 0.15,
+            gcp: 0.15,
+            azure: 0.70,
+        }),
+        "uniform" => PolicyMode::Fixed(ProviderWeights {
+            aws: 1.0 / 3.0,
+            gcp: 1.0 / 3.0,
+            azure: 1.0 / 3.0,
+        }),
+        "adaptive" => PolicyMode::Adaptive,
+        "risk-aware" => PolicyMode::RiskAware,
+        _ => unreachable!(),
+    }
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let mut body = BTreeMap::new();
+    let mut expect = ScenarioConfig::named("a");
+    let mut invalid = false;
+
+    // seed: u64
+    match r.below(4) {
+        0 => {}
+        3 => {
+            body.insert("seed".into(), bad_u64(r));
+            invalid = true;
+        }
+        _ => {
+            let v = r.below(1_000_000);
+            body.insert("seed".into(), Json::from(v));
+            expect.seed = Some(v);
+        }
+    }
+
+    // duration_days: finite non-negative f64
+    match r.below(4) {
+        0 => {}
+        3 => {
+            body.insert("duration_days".into(), bad_duration(r));
+            invalid = true;
+        }
+        _ => {
+            let v = (r.below(40) + 1) as f64 * 0.25;
+            body.insert("duration_days".into(), Json::from(v));
+            expect.duration_s = Some((v * DAY) as u64);
+        }
+    }
+
+    // budget_usd / preempt_multiplier: plain numbers, only the type is
+    // checked (no range semantics)
+    match r.below(4) {
+        0 => {}
+        3 => {
+            body.insert("budget_usd".into(), Json::from("29000"));
+            invalid = true;
+        }
+        _ => {
+            let v = r.below(100_000) as f64;
+            body.insert("budget_usd".into(), Json::from(v));
+            expect.budget_usd = Some(v);
+        }
+    }
+    match r.below(4) {
+        0 => {}
+        3 => {
+            body.insert("preempt_multiplier".into(), Json::Bool(true));
+            invalid = true;
+        }
+        _ => {
+            let v = (r.below(100) + 1) as f64 / 10.0;
+            body.insert("preempt_multiplier".into(), Json::from(v));
+            expect.preempt_multiplier = Some(v);
+        }
+    }
+
+    // keepalive_s: u64
+    match r.below(4) {
+        0 => {}
+        3 => {
+            body.insert("keepalive_s".into(), bad_u64(r));
+            invalid = true;
+        }
+        _ => {
+            let v = r.below(10_000);
+            body.insert("keepalive_s".into(), Json::from(v));
+            expect.keepalive_s = Some(v);
+        }
+    }
+
+    // NAT: disabled XOR idle timeout; both at once is a conflict
+    match r.below(6) {
+        0 | 1 => {}
+        2 => {
+            body.insert("nat_disabled".into(), Json::Bool(true));
+            expect.nat_override = Some(NatOverride::Disabled);
+        }
+        3 => {
+            // present-but-false is a valid no-op
+            body.insert("nat_disabled".into(), Json::Bool(false));
+        }
+        4 => {
+            let v = r.below(1_000) + 1;
+            body.insert("nat_idle_timeout_s".into(), Json::from(v));
+            expect.nat_override = Some(NatOverride::IdleTimeout(v));
+        }
+        _ => {
+            invalid = true;
+            if r.chance(0.5) {
+                body.insert("nat_disabled".into(), Json::Bool(true));
+                body.insert("nat_idle_timeout_s".into(), Json::from(60u64));
+            } else {
+                body.insert("nat_disabled".into(), Json::from("true"));
+            }
+        }
+    }
+
+    // outage: disabled | rescheduled (at + optional duration) | broken
+    match r.below(6) {
+        0 | 1 => {}
+        2 => {
+            body.insert("outage_disabled".into(), Json::Bool(true));
+            expect.outage = Some(None);
+        }
+        3 | 4 => {
+            let at = (r.below(20) + 1) as f64 * 0.5;
+            body.insert("outage_at_days".into(), Json::from(at));
+            let dur = if r.chance(0.5) {
+                let d = (r.below(12) + 1) as f64 * 0.5;
+                body.insert(
+                    "outage_duration_hours".into(),
+                    Json::from(d),
+                );
+                d
+            } else {
+                2.0
+            };
+            expect.outage = Some(Some(OutageSpec {
+                at_s: (at * DAY) as u64,
+                duration_s: (dur * HOUR) as u64,
+            }));
+        }
+        _ => {
+            invalid = true;
+            match r.below(4) {
+                0 => {
+                    body.insert(
+                        "outage_at_days".into(),
+                        bad_duration(r),
+                    );
+                }
+                1 => {
+                    body.insert("outage_at_days".into(), Json::from(1.0));
+                    body.insert(
+                        "outage_duration_hours".into(),
+                        Json::Num(-2.0),
+                    );
+                }
+                2 => {
+                    // dangling duration: would silently vanish pre-fix
+                    body.insert(
+                        "outage_duration_hours".into(),
+                        Json::from(2.0),
+                    );
+                }
+                _ => {
+                    body.insert(
+                        "outage_disabled".into(),
+                        Json::from("true"),
+                    );
+                }
+            }
+        }
+    }
+
+    // ramp: targets (u32 range) + optional holds (<= targets, finite
+    // non-negative days)
+    match r.below(6) {
+        0 | 1 | 2 => {}
+        3 | 4 => {
+            let n = (r.below(3) + 1) as usize;
+            let targets: Vec<u64> =
+                (0..n).map(|_| r.below(100_000) + 1).collect();
+            body.insert(
+                "ramp_targets".into(),
+                Json::Arr(targets.iter().map(|&t| Json::from(t)).collect()),
+            );
+            let holds: Vec<f64> = if r.chance(0.5) {
+                let k = (r.below(n as u64 + 1)) as usize;
+                (0..k).map(|_| (r.below(16) + 1) as f64 * 0.25).collect()
+            } else {
+                Vec::new()
+            };
+            if !holds.is_empty() {
+                body.insert(
+                    "ramp_hold_days".into(),
+                    Json::Arr(
+                        holds.iter().map(|&h| Json::from(h)).collect(),
+                    ),
+                );
+            }
+            expect.ramp = Some(
+                targets
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| RampStep {
+                        target: t as u32,
+                        hold_s: (holds.get(i).copied().unwrap_or(2.0)
+                            * DAY) as u64,
+                    })
+                    .collect(),
+            );
+        }
+        _ => {
+            invalid = true;
+            match r.below(5) {
+                0 => {
+                    body.insert("ramp_targets".into(), Json::Arr(vec![]));
+                }
+                1 => {
+                    // u32 overflow: pre-fix this ramped to 1 GPU
+                    body.insert(
+                        "ramp_targets".into(),
+                        Json::Arr(vec![Json::Num(4_294_967_297.0)]),
+                    );
+                }
+                2 => {
+                    body.insert(
+                        "ramp_targets".into(),
+                        Json::Arr(vec![Json::Num(100.5)]),
+                    );
+                }
+                3 => {
+                    body.insert(
+                        "ramp_targets".into(),
+                        Json::Arr(vec![Json::from(100u64)]),
+                    );
+                    body.insert(
+                        "ramp_hold_days".into(),
+                        Json::Arr(vec![Json::Num(-1.0)]),
+                    );
+                }
+                _ => {
+                    body.insert(
+                        "ramp_targets".into(),
+                        Json::Arr(vec![Json::from(100u64)]),
+                    );
+                    body.insert(
+                        "ramp_hold_days".into(),
+                        Json::Arr(vec![
+                            Json::from(1.0),
+                            Json::from(2.0),
+                        ]),
+                    );
+                }
+            }
+        }
+    }
+
+    // onprem_slots: u32 range
+    match r.below(4) {
+        0 | 1 => {}
+        2 => {
+            let v = r.below(100_000);
+            body.insert("onprem_slots".into(), Json::from(v));
+            expect.onprem_slots = Some(v as u32);
+        }
+        _ => {
+            invalid = true;
+            if r.chance(0.5) {
+                // pre-fix: truncated modulo 2^32 to one slot
+                body.insert(
+                    "onprem_slots".into(),
+                    Json::Num(4_294_967_297.0),
+                );
+            } else {
+                body.insert("onprem_slots".into(), bad_u64(r));
+            }
+        }
+    }
+
+    // policy: a known name
+    match r.below(4) {
+        0 | 1 => {}
+        2 => {
+            let names = ["paper", "uniform", "adaptive", "risk-aware"];
+            let name = names[r.below(4) as usize];
+            body.insert("policy".into(), Json::from(name));
+            expect.policy = Some(policy_expected(name));
+        }
+        _ => {
+            invalid = true;
+            if r.chance(0.5) {
+                body.insert("policy".into(), Json::from("bogus"));
+            } else {
+                body.insert("policy".into(), Json::from(7u64));
+            }
+        }
+    }
+
+    // checkpoint: disabled XOR interval (+ optional overhead)
+    match r.below(6) {
+        0 | 1 => {}
+        2 => {
+            body.insert("checkpoint_disabled".into(), Json::Bool(true));
+            expect.checkpoint = Some(CheckpointPolicy::None);
+        }
+        3 | 4 => {
+            let every = r.below(7_200) + 1;
+            body.insert("checkpoint_every_s".into(), Json::from(every));
+            let overhead = if r.chance(0.5) {
+                let o = r.below(600);
+                body.insert(
+                    "checkpoint_resume_overhead_s".into(),
+                    Json::from(o),
+                );
+                o
+            } else {
+                DEFAULT_RESUME_OVERHEAD_S
+            };
+            expect.checkpoint = Some(CheckpointPolicy::Interval {
+                every_s: every,
+                resume_overhead_s: overhead,
+            });
+        }
+        _ => {
+            invalid = true;
+            match r.below(4) {
+                0 => {
+                    body.insert(
+                        "checkpoint_every_s".into(),
+                        Json::from(0u64),
+                    );
+                }
+                1 => {
+                    body.insert(
+                        "checkpoint_resume_overhead_s".into(),
+                        Json::from(30u64),
+                    );
+                }
+                2 => {
+                    body.insert(
+                        "checkpoint_disabled".into(),
+                        Json::Bool(true),
+                    );
+                    body.insert(
+                        "checkpoint_every_s".into(),
+                        Json::from(900u64),
+                    );
+                }
+                _ => {
+                    body.insert(
+                        "checkpoint_disabled".into(),
+                        Json::Num(1.0),
+                    );
+                }
+            }
+        }
+    }
+
+    // sometimes a typo'd key rides along: must always reject
+    if r.chance(0.1) {
+        body.insert("budgett_usd".into(), Json::from(1.0));
+        invalid = true;
+    }
+
+    Case { body, invalid, expect }
+}
+
+#[test]
+fn random_specs_parse_exactly_or_error() {
+    forall(
+        "spec-parses-exactly-or-errors",
+        0xC0FFEE,
+        400,
+        gen_case,
+        no_shrink,
+        |case| {
+            let mut scenario = Json::obj();
+            scenario.set("a", Json::Obj(case.body.clone()));
+            let mut doc = Json::obj();
+            doc.set("scenario", scenario);
+            let mut base = CampaignConfig::default();
+            match parse_spec_json(&doc, &mut base) {
+                Err(e) => ensure(
+                    case.invalid,
+                    format!("valid spec rejected: {e}"),
+                ),
+                Ok(got) => {
+                    ensure(
+                        !case.invalid,
+                        format!(
+                            "invalid spec accepted as {:?}",
+                            got.first()
+                        ),
+                    )?;
+                    ensure(
+                        got.len() == 1 && got[0] == case.expect,
+                        format!(
+                            "accepted config differs from spec:\n  \
+                             got:  {:?}\n  want: {:?}",
+                            got.first(),
+                            case.expect
+                        ),
+                    )
+                }
+            }
+        },
+    );
+}
+
+/// Direct (non-random) regressions for the three PR-9 cast bugs, kept
+/// alongside the fuzz so a failure names the exact bug.
+#[test]
+fn cast_corruption_regressions() {
+    let parse_one = |key: &str, v: Json| {
+        let mut body = Json::obj();
+        body.set(key, v);
+        let mut scenario = Json::obj();
+        scenario.set("a", body);
+        let mut doc = Json::obj();
+        doc.set("scenario", scenario);
+        parse_spec_json(&doc, &mut CampaignConfig::default())
+    };
+    // bug 1: negative / non-finite durations saturated to 0
+    assert!(parse_one("duration_days", Json::Num(-1.0)).is_err());
+    assert!(parse_one("duration_days", Json::Num(f64::NAN)).is_err());
+    assert!(parse_one("outage_at_days", Json::Num(-3.0)).is_err());
+    // bug 2: u32 truncation modulo 2^32
+    assert!(parse_one(
+        "ramp_targets",
+        Json::Arr(vec![Json::Num(4_294_967_297.0)])
+    )
+    .is_err());
+    assert!(
+        parse_one("onprem_slots", Json::Num(4_294_967_297.0)).is_err()
+    );
+    // the boundary values stay legal
+    let ok = parse_one("onprem_slots", Json::Num(u32::MAX as f64))
+        .unwrap();
+    assert_eq!(ok[0].onprem_slots, Some(u32::MAX));
+    assert_eq!(
+        parse_one("duration_days", Json::Num(0.0)).unwrap()[0]
+            .duration_s,
+        Some(0)
+    );
+}

@@ -1,0 +1,134 @@
+//! `icecloud diff` acceptance: two sweep result files (as written by
+//! the sweep harness, or as served from `/results/<key>`) join by
+//! scenario name and render per-column deltas — plus the RFC-4180
+//! round trip for hostile scenario names that motivated the CSV
+//! quoting fix.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::experiments::{diff, sweep as sweep_exp};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::sweep::{parse_spec, run_matrix};
+
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+/// Run a 2-scenario sweep and return its `sweep.json` bytes, exactly as
+/// `icecloud sweep --out` writes them.
+fn sweep_json(budget: f64) -> String {
+    let spec = format!(
+        "[scenario.baseline]\n\n[scenario.tuned]\nbudget_usd = {budget}\n"
+    );
+    let mut base = tiny_base();
+    let scenarios = parse_spec(&spec, &mut base).unwrap();
+    let rows = run_matrix(&base, &scenarios, 2);
+    sweep_exp::to_json(&rows).to_string_pretty()
+}
+
+#[test]
+fn diff_of_two_sweep_files_renders_per_column_deltas() {
+    let a = sweep_json(200.0);
+    let b = sweep_json(400.0);
+
+    let ra = diff::parse_rows(&a).unwrap();
+    let rb = diff::parse_rows(&b).unwrap();
+    assert_eq!(ra.len(), 2);
+    let d = diff::diff(&ra, &rb);
+    assert_eq!(d.rows.len(), 2);
+    assert!(d.only_a.is_empty() && d.only_b.is_empty());
+
+    // 'baseline' is untouched by the budget change; 'tuned' differs in
+    // budget_usd by exactly the spec delta
+    let tuned = d.rows.iter().find(|r| r.name == "tuned").unwrap();
+    assert_eq!(tuned.cells["budget_usd"], (200.0, 400.0));
+    let baseline = d.rows.iter().find(|r| r.name == "baseline").unwrap();
+    for (col, (av, bv)) in &baseline.cells {
+        assert!(
+            av == bv || (av.is_nan() && bv.is_nan()),
+            "baseline column {col} changed: {av} vs {bv}"
+        );
+    }
+
+    // the three renderings all carry the delta
+    let txt = diff::render(&d);
+    assert!(txt.contains("tuned"), "{txt}");
+    assert!(txt.contains("budget_usd"), "{txt}");
+    assert!(txt.contains("200 -> 400"), "{txt}");
+    let csv = diff::to_csv(&d);
+    assert!(csv.lines().any(|l| l.starts_with("tuned,budget_usd,200,400,200,100")), "{csv}");
+    let j = diff::to_json(&d);
+    assert_eq!(j.get("joined").unwrap().as_u64(), Some(2));
+
+    // a diff against itself is all-quiet
+    let same = diff::diff(&ra, &ra);
+    let txt = diff::render(&same);
+    assert!(txt.contains("2 scenarios joined, 0 changed"), "{txt}");
+}
+
+#[test]
+fn results_body_shape_diffs_like_sweep_json() {
+    // the server's /results/<key> body wraps the same rows in
+    // {"key": ..., "rows": [...]} — both shapes must parse
+    let a = sweep_json(200.0);
+    let wrapped = format!("{{\"key\": \"deadbeef\", \"rows\": {a}}}");
+    assert_eq!(
+        diff::parse_rows(&a).unwrap(),
+        diff::parse_rows(&wrapped).unwrap()
+    );
+}
+
+/// Minimal RFC-4180 line splitter for the round-trip check: honours
+/// quoted fields and doubled quotes.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut chars = line.chars().peekable();
+    let mut quoted = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if field.is_empty() && !quoted => quoted = true,
+            '"' if quoted => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    quoted = false;
+                }
+            }
+            ',' if !quoted => {
+                out.push(std::mem::take(&mut field));
+            }
+            c => field.push(c),
+        }
+    }
+    out.push(field);
+    out
+}
+
+#[test]
+fn hostile_scenario_names_round_trip_through_csv() {
+    // a quoted TOML key makes names with commas legal; before the
+    // quoting fix this row shifted every downstream column (names with
+    // embedded quotes are covered by the csv_field unit tests)
+    let spec = "[scenario.\"a,b\"]\nseed = 9\n\n[scenario.plain]\n";
+    let mut base = tiny_base();
+    let scenarios = parse_spec(spec, &mut base).unwrap();
+    assert_eq!(scenarios[0].name, "a,b");
+    let rows = run_matrix(&base, &scenarios, 1);
+    let csv = sweep_exp::to_csv(&rows);
+    let header = split_csv_line(csv.lines().next().unwrap());
+    assert_eq!(header.len(), 23);
+    for line in csv.lines().skip(1) {
+        let fields = split_csv_line(line);
+        assert_eq!(fields.len(), 23, "shifted row: {line}");
+    }
+    let hostile = split_csv_line(csv.lines().nth(1).unwrap());
+    assert_eq!(hostile[0], "a,b", "name must round-trip exactly");
+    assert_eq!(hostile[1], "9");
+}

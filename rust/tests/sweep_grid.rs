@@ -1,0 +1,199 @@
+//! Grid-expansion acceptance: a 3-axis {4,4,4} `[grid]` spec expands to
+//! exactly 64 uniquely-named scenarios, byte-identical across parses,
+//! runs and thread counts, and is accepted over `POST /sweep` exactly
+//! like an explicit `[scenario.<name>]` matrix — same parse path, same
+//! content-addressed cache keys.
+
+use icecloud::config::{CampaignConfig, RampStep};
+use icecloud::server::http::client_request;
+use icecloud::server::{ServeConfig, Server, ServerHandle};
+use icecloud::sim::{DAY, HOUR};
+use icecloud::sweep::{parse_spec, run_matrix};
+use icecloud::util::json;
+
+/// A campaign small enough that a replay takes milliseconds.
+fn tiny_base() -> CampaignConfig {
+    let mut c = CampaignConfig::default();
+    c.duration_s = HOUR;
+    c.ramp = vec![RampStep { target: 10, hold_s: 60 * DAY }];
+    c.outage = None;
+    c.onprem.slots = 8;
+    c.generator.min_backlog = 30;
+    c
+}
+
+/// The acceptance grid: 3 axes x {4,4,4} values = 64 scenarios.
+const GRID_SPEC: &str = "\
+[grid]
+preempt_multiplier = [1.0, 2.0, 4.0, 10.0]
+budget_usd = [14500.0, 29000.0, 58000.0, 116000.0]
+keepalive_s = [60, 120, 240, 300]
+";
+
+#[test]
+fn grid_4x4x4_expands_to_64_unique_scenarios() {
+    let mut base = tiny_base();
+    let scenarios = parse_spec(GRID_SPEC, &mut base).unwrap();
+    assert_eq!(scenarios.len(), 64);
+    let mut names: Vec<&str> =
+        scenarios.iter().map(|s| s.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), 64, "synthesized names must be unique");
+    // deterministic: a second parse yields the identical list
+    let again = parse_spec(GRID_SPEC, &mut tiny_base()).unwrap();
+    assert_eq!(scenarios, again);
+    // sorted-axis names, last sorted axis varying fastest
+    assert_eq!(
+        scenarios[0].name,
+        "budget_usd=14500/keepalive_s=60/preempt_multiplier=1"
+    );
+    assert_eq!(
+        scenarios[63].name,
+        "budget_usd=116000/keepalive_s=300/preempt_multiplier=10"
+    );
+    // and the axis values really land in the configs
+    assert_eq!(scenarios[0].budget_usd, Some(14500.0));
+    assert_eq!(scenarios[0].keepalive_s, Some(60));
+    assert_eq!(scenarios[63].preempt_multiplier, Some(10.0));
+}
+
+#[test]
+fn grid_sweep_rows_are_byte_identical_across_thread_counts() {
+    let mut base = tiny_base();
+    let scenarios = parse_spec(GRID_SPEC, &mut base).unwrap();
+    let one = run_matrix(&base, &scenarios, 1);
+    let three = run_matrix(&base, &scenarios, 3);
+    assert_eq!(
+        icecloud::experiments::sweep::to_json(&one).to_string_compact(),
+        icecloud::experiments::sweep::to_json(&three).to_string_compact(),
+        "row bytes must not depend on worker-thread count"
+    );
+}
+
+#[test]
+fn grid_composes_with_base_and_explicit_scenarios() {
+    // [base] applies to the shared campaign exactly as for explicit
+    // matrices, and [grid] cells coexist with [scenario.<name>] tables
+    // (grid product first, explicit names after)
+    let spec = "\
+[base]
+duration_days = 0.25
+
+[grid]
+keepalive_s = [60, 120]
+
+[scenario.extra]
+budget_usd = 1000.0
+";
+    let mut base = tiny_base();
+    let scenarios = parse_spec(spec, &mut base).unwrap();
+    assert_eq!(base.duration_s, 6 * HOUR);
+    let names: Vec<&str> =
+        scenarios.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["keepalive_s=60", "keepalive_s=120", "extra"]
+    );
+    assert_eq!(scenarios[2].budget_usd, Some(1000.0));
+
+    // an explicit scenario colliding with a synthesized name is an
+    // error, not a silent shadow (quoted TOML keys make this legal to
+    // write)
+    let collision = "\
+[grid]
+keepalive_s = [60, 120]
+
+[scenario.\"keepalive_s=60\"]
+budget_usd = 1000.0
+";
+    let err = parse_spec(collision, &mut tiny_base()).unwrap_err();
+    assert!(err.contains("collides"), "err={err}");
+
+    // a spec with neither [grid] nor [scenario.*] is rejected
+    let err =
+        parse_spec("[base]\nduration_days = 1.0", &mut tiny_base())
+            .unwrap_err();
+    assert!(err.contains("[grid]"), "err={err}");
+}
+
+#[test]
+fn grid_spec_loads_from_file_like_the_cli() {
+    // the same loader `icecloud sweep --matrix/--grid` uses
+    let path = std::env::temp_dir()
+        .join(format!("icecloud-grid-spec-{}.toml", std::process::id()));
+    std::fs::write(&path, GRID_SPEC).unwrap();
+    let mut base = tiny_base();
+    let scenarios = icecloud::sweep::matrix::from_toml_file(
+        path.to_str().unwrap(),
+        &mut base,
+    )
+    .unwrap();
+    assert_eq!(scenarios.len(), 64);
+    let _ = std::fs::remove_file(&path);
+}
+
+fn start_server() -> (ServerHandle, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 4,
+        replay_threads: 2,
+        cache_bytes: 1 << 20,
+        base: tiny_base(),
+        ..ServeConfig::default()
+    })
+    .expect("bind ephemeral port");
+    let handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+#[test]
+fn post_sweep_accepts_the_64_cell_grid() {
+    let (handle, addr) = start_server();
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        GRID_SPEC.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let doc = json::parse(resp.body_str().trim()).unwrap();
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 64);
+    assert_eq!(
+        rows[0].get("name").unwrap().as_str(),
+        Some("budget_usd=14500/keepalive_s=60/preempt_multiplier=1")
+    );
+
+    // the replay is content-addressed: the same grid body again is a
+    // byte-identical response
+    let again = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        GRID_SPEC.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(again.status, 200);
+    assert_eq!(again.body, resp.body);
+
+    // a grid past the per-request limit (5 x 4 x 4 = 80 > 64): refused
+    let over = "[grid]\nseed = [1, 2, 3, 4, 5]\n\
+                keepalive_s = [60, 120, 240, 300]\n\
+                preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n";
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        over.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+
+    handle.shutdown();
+}

@@ -42,6 +42,8 @@ RUST_BENCHES = [
     ("sweep/14-scenarios-2-threads", "replays"),
     ("sweep/14-scenarios-4-threads", "replays"),
     ("sweep/14-scenarios-8-threads", "replays"),
+    # PR 9: [grid] cartesian expansion of the 3-axis {4,4,4} spec
+    ("sweep/grid-expand-64", "scenarios"),
     ("engine/scalar", "photons"),
     ("engine/batched-1t", "photons"),
     ("engine/batched-2t", "photons"),
@@ -65,6 +67,9 @@ RUST_BENCHES = [
     ("serve/sweep-cached", "requests"),
     ("serve/disk-hit", "requests"),
     ("serve/async-submit", "requests"),
+    # PR 9: cached 64-cell [grid] POST — expansion + keying on the
+    # request path
+    ("serve/grid-submit", "requests"),
     # PR 6: cold sweeps dispatched over the lease/heartbeat protocol
     ("serve/fleet-2w", "requests"),
     # PR 7: event-bus publish rate with zero / four live SSE streams
