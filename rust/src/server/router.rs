@@ -49,10 +49,13 @@ use crate::sweep;
 use crate::util::json::{self, Json};
 
 /// Most scenarios one request may ask for.  `[grid]` sections expand
-/// *before* this check (in `sweep::parse_spec_json`), so a grid counts
-/// by its cartesian product, not by its axis count; grids also carry
-/// their own pre-materialization cap (`sweep::grid`), so an absurd
-/// product is refused in the parser before any scenario is built.
+/// *before* this check (in `sweep::parse_spec_json_with_limit`), so a
+/// grid counts by its cartesian product, not by its axis count.  This
+/// limit is server-enforced: `parse_sweep_body` threads it into grid
+/// expansion, where it bounds the O(axes) axis-length product before
+/// any scenario is materialized and — unlike the spec-overridable
+/// `[grid] max_scenarios` knob — cannot be raised by the request body
+/// (`sweep::grid` additionally hard-caps `max_scenarios` itself).
 pub const MAX_SCENARIOS_PER_REQUEST: usize = 64;
 /// Longest replay one request may ask for (sim-seconds).
 pub const MAX_DURATION_S: u64 = 60 * 86_400;
@@ -565,11 +568,15 @@ fn parse_sweep_body(
         || (!content_type.contains("toml")
             && text.trim_start().starts_with('{'));
     let mut resolved = base.clone();
+    // the per-request limit rides into [grid] expansion so a hostile
+    // product is refused from the axis lengths alone — never
+    // materialized first and counted by validate_limits after
+    let limit = Some(MAX_SCENARIOS_PER_REQUEST);
     let scenarios = if looks_json {
         let doc = json::parse(text).map_err(|e| e.to_string())?;
-        sweep::parse_spec_json(&doc, &mut resolved)?
+        sweep::parse_spec_json_with_limit(&doc, &mut resolved, limit)?
     } else {
-        sweep::matrix::parse_spec(text, &mut resolved)?
+        sweep::matrix::parse_spec_with_limit(text, &mut resolved, limit)?
     };
     Ok((resolved, scenarios))
 }
@@ -1111,6 +1118,44 @@ mod tests {
         let resp =
             route(&state, &post("/sweep", "application/toml", &huge));
         assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn client_supplied_grid_cap_cannot_lift_request_limits() {
+        let state = tiny_state();
+        // a small body declaring an astronomical product: the spec's
+        // own max_scenarios knob must not be able to buy expansion (or
+        // allocation) past the server's per-request limit — refused
+        // from the axis lengths alone
+        for cap in ["18446744073709551615", "1048576"] {
+            let mut evil =
+                format!("[grid]\nmax_scenarios = {cap}\n");
+            for key in
+                ["seed", "keepalive_s", "checkpoint_every_s", "budget_usd"]
+            {
+                let vals: Vec<String> =
+                    (1..=1000).map(|i| i.to_string()).collect();
+                evil.push_str(&format!(
+                    "{key} = [{}]\n",
+                    vals.join(", ")
+                ));
+            }
+            let resp = route(
+                &state,
+                &post("/sweep", "application/toml", &evil),
+            );
+            assert_eq!(resp.status, 400, "cap={cap}");
+        }
+        // even a modest 128-cell grid under the spec's default cap is
+        // pre-refused against the request limit of 64
+        let spec = "[grid]\nseed = [1, 2, 3, 4, 5, 6, 7, 8]\n\
+                    keepalive_s = [60, 120, 240, 300]\n\
+                    preempt_multiplier = [1.0, 2.0, 4.0, 10.0]\n";
+        let resp =
+            route(&state, &post("/sweep", "application/toml", spec));
+        assert_eq!(resp.status, 400);
+        let body = String::from_utf8_lossy(&resp.body);
+        assert!(body.contains("limit of 64"), "{body}");
     }
 
     #[test]

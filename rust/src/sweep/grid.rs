@@ -24,11 +24,19 @@
 //! which rules out `ramp_targets`/`ramp_hold_days` as axes — those stay
 //! in `[base]` or explicit `[scenario.<name>]` tables.
 //!
-//! Expansion is capped (default [`DEFAULT_MAX_SCENARIOS`], overridable
-//! per-spec via `[grid] max_scenarios`) and the cap is checked from the
-//! axis lengths *before* any scenario is materialized, so an oversized
-//! grid costs O(axes) to reject — important because grid specs arrive
-//! over `POST /sweep` from untrusted clients.
+//! Expansion is capped and the cap is checked from the axis lengths
+//! *before* any scenario is materialized, so an oversized grid costs
+//! O(axes) to reject — important because grid specs arrive over
+//! `POST /sweep` from untrusted clients.  Three limits stack:
+//!
+//! * `[grid] max_scenarios` (default [`DEFAULT_MAX_SCENARIOS`]) — the
+//!   spec's own knob, raisable for big local studies;
+//! * [`HARD_MAX_SCENARIOS`] — a compile-time ceiling the spec cannot
+//!   override, so `max_scenarios` in a hostile document can never buy
+//!   an allocation large enough to abort the process;
+//! * the caller's `scenario_limit` — the server threads its per-request
+//!   scenario budget in here, so an untrusted grid is refused from the
+//!   axis-length product alone, never expanded first and counted later.
 
 use crate::coordinator::ScenarioConfig;
 use crate::util::json::{require_u64, Json};
@@ -37,15 +45,32 @@ use std::collections::{BTreeMap, BTreeSet};
 /// Default ceiling on how many scenarios one `[grid]` may expand to.
 /// High enough for a serious parameter study (a 16×16×16 cube), low
 /// enough that a typo'd axis can't wedge a server with millions of
-/// replays.  Raise per-spec with `[grid] max_scenarios`.
+/// replays.  Raise per-spec with `[grid] max_scenarios`, up to
+/// [`HARD_MAX_SCENARIOS`].
 pub const DEFAULT_MAX_SCENARIOS: u64 = 4096;
+
+/// Absolute ceiling on `[grid] max_scenarios` itself.  The spec's knob
+/// is client-supplied on the server path, so it cannot be the only
+/// bound: without this, `max_scenarios = u64::MAX` plus a few long axes
+/// would pass the product check and reach the output allocation with a
+/// multi-TB request, and allocation failure aborts the process.  2^20
+/// cells is far beyond any sweep the replay pool could service anyway.
+pub const HARD_MAX_SCENARIOS: u64 = 1 << 20;
 
 /// Expand a `[grid]` table to its cartesian product of scenarios.
 ///
 /// Each cell is fed through `super::matrix::scenario_from_json`, so
 /// grid values get exactly the same strict validation (type checks,
 /// range checks, conflicting-key checks) as hand-written scenarios.
-pub fn expand(grid: &Json) -> Result<Vec<ScenarioConfig>, String> {
+///
+/// `scenario_limit` is the caller's own scenario budget (the server
+/// passes its per-request limit; the CLI passes `None`).  It bounds the
+/// axis-length product *before* materialization alongside the spec's
+/// cap, and — unlike `[grid] max_scenarios` — the spec cannot raise it.
+pub fn expand(
+    grid: &Json,
+    scenario_limit: Option<usize>,
+) -> Result<Vec<ScenarioConfig>, String> {
     let table = grid.as_obj().ok_or("[grid] is not a table")?;
     let mut cap = DEFAULT_MAX_SCENARIOS;
     // BTreeMap iteration order = sorted axis names: the name synthesis
@@ -58,6 +83,12 @@ pub fn expand(grid: &Json) -> Result<Vec<ScenarioConfig>, String> {
                 return Err(
                     "[grid] max_scenarios must be positive".into()
                 );
+            }
+            if cap > HARD_MAX_SCENARIOS {
+                return Err(format!(
+                    "[grid] max_scenarios = {cap} exceeds the hard \
+                     ceiling of {HARD_MAX_SCENARIOS}"
+                ));
             }
             continue;
         }
@@ -103,6 +134,17 @@ pub fn expand(grid: &Json) -> Result<Vec<ScenarioConfig>, String> {
     let cells = axes
         .iter()
         .fold(1u128, |n, (_, vs)| n.saturating_mul(vs.len() as u128));
+    // the caller's budget binds regardless of what the (possibly
+    // hostile) spec set max_scenarios to; both are checked against the
+    // O(axes) product, before any cell exists
+    if let Some(limit) = scenario_limit {
+        if cells > limit as u128 {
+            return Err(format!(
+                "[grid] expands to {cells} scenarios, over this \
+                 request's limit of {limit}"
+            ));
+        }
+    }
     if cells > cap as u128 {
         return Err(format!(
             "[grid] expands to {cells} scenarios, over the cap of \
@@ -173,7 +215,7 @@ mod tests {
              budget_usd = [14500.0, 29000.0, 58000.0, 116000.0]\n\
              keepalive_s = [60, 120, 240, 300]\n",
         );
-        let a = expand(&g).unwrap();
+        let a = expand(&g, None).unwrap();
         assert_eq!(a.len(), 64);
         let mut names: Vec<&str> =
             a.iter().map(|s| s.name.as_str()).collect();
@@ -181,7 +223,7 @@ mod tests {
         names.dedup();
         assert_eq!(names.len(), 64, "names must be unique");
         // byte-identical re-expansion
-        let b = expand(&g).unwrap();
+        let b = expand(&g, None).unwrap();
         assert_eq!(a, b);
         // sorted-axis name order, last axis (preempt_multiplier)
         // fastest
@@ -216,7 +258,7 @@ mod tests {
              outage_disabled = [true]\n\
              preempt_multiplier = [1.5]\n",
         );
-        let s = expand(&g).unwrap();
+        let s = expand(&g, None).unwrap();
         assert_eq!(s.len(), 2);
         assert_eq!(
             s[0].name,
@@ -242,7 +284,7 @@ mod tests {
                 vals.join(", ")
             ));
         }
-        let err = expand(&grid_of(&spec)).unwrap_err();
+        let err = expand(&grid_of(&spec), None).unwrap_err();
         assert!(err.contains("4913"), "err={err}");
         assert!(err.contains("4096"), "err={err}");
     }
@@ -253,14 +295,54 @@ mod tests {
         let over = format!(
             "{base}seed = [1, 2, 3]\nkeepalive_s = [60, 120, 240]\n"
         );
-        let err = expand(&grid_of(&over)).unwrap_err();
+        let err = expand(&grid_of(&over), None).unwrap_err();
         assert!(err.contains("cap of 8"), "err={err}");
         let under = format!(
             "{base}seed = [1, 2]\nkeepalive_s = [60, 120, 240, 300]\n"
         );
-        assert_eq!(expand(&grid_of(&under)).unwrap().len(), 8);
-        assert!(expand(&grid_of("[grid]\nmax_scenarios = 0\nseed = [1]"))
-            .is_err());
+        assert_eq!(expand(&grid_of(&under), None).unwrap().len(), 8);
+        assert!(expand(
+            &grid_of("[grid]\nmax_scenarios = 0\nseed = [1]"),
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn caller_limit_binds_before_materialization() {
+        // 2 x 4 = 8 cells: fine standalone, over a caller limit of 4
+        let g = grid_of(
+            "[grid]\nseed = [1, 2]\n\
+             keepalive_s = [60, 120, 240, 300]\n",
+        );
+        assert_eq!(expand(&g, None).unwrap().len(), 8);
+        assert_eq!(expand(&g, Some(8)).unwrap().len(), 8);
+        let err = expand(&g, Some(4)).unwrap_err();
+        assert!(err.contains("limit of 4"), "err={err}");
+
+        // raising the spec's own cap does NOT lift the caller's limit
+        let g = grid_of(
+            "[grid]\nmax_scenarios = 1000000\nseed = [1, 2]\n\
+             keepalive_s = [60, 120, 240, 300]\n",
+        );
+        let err = expand(&g, Some(4)).unwrap_err();
+        assert!(err.contains("limit of 4"), "err={err}");
+    }
+
+    #[test]
+    fn max_scenarios_cannot_exceed_hard_ceiling() {
+        for cap in ["1048577", "18446744073709551615"] {
+            let g = grid_of(&format!(
+                "[grid]\nmax_scenarios = {cap}\nseed = [1]\n"
+            ));
+            let err = expand(&g, None).unwrap_err();
+            assert!(err.contains("hard ceiling"), "err={err}");
+        }
+        // exactly at the ceiling is allowed
+        let g = grid_of(&format!(
+            "[grid]\nmax_scenarios = {HARD_MAX_SCENARIOS}\nseed = [1]\n"
+        ));
+        assert_eq!(expand(&g, None).unwrap().len(), 1);
     }
 
     #[test]
@@ -286,18 +368,18 @@ mod tests {
             "[grid]\npolicy = [\"bogus\"]\n",
         ] {
             assert!(
-                expand(&grid_of(spec)).is_err(),
+                expand(&grid_of(spec), None).is_err(),
                 "grid {spec:?} must be rejected"
             );
         }
-        assert!(expand(&Json::from("nope")).is_err());
+        assert!(expand(&Json::from("nope"), None).is_err());
     }
 
     #[test]
     fn duplicate_labels_across_types_rejected() {
         // 60 and 60.0 render to the same label and would collide
         let g = grid_of("[grid]\nkeepalive_s = [60, 60.0]\n");
-        let err = expand(&g).unwrap_err();
+        let err = expand(&g, None).unwrap_err();
         assert!(err.contains("repeats"), "err={err}");
     }
 }

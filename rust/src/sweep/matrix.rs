@@ -374,8 +374,18 @@ pub fn parse_spec(
     text: &str,
     base: &mut CampaignConfig,
 ) -> Result<Vec<ScenarioConfig>, String> {
+    parse_spec_with_limit(text, base, None)
+}
+
+/// [`parse_spec`] with a caller-side scenario budget threaded into
+/// `[grid]` expansion (see [`parse_spec_json_with_limit`]).
+pub fn parse_spec_with_limit(
+    text: &str,
+    base: &mut CampaignConfig,
+    scenario_limit: Option<usize>,
+) -> Result<Vec<ScenarioConfig>, String> {
     let doc = toml::parse(text).map_err(|e| e.to_string())?;
-    parse_spec_json(&doc, base)
+    parse_spec_json_with_limit(&doc, base, scenario_limit)
 }
 
 /// Parse an already-decoded spec document (the TOML and JSON wire
@@ -393,11 +403,25 @@ pub fn parse_spec_json(
     doc: &Json,
     base: &mut CampaignConfig,
 ) -> Result<Vec<ScenarioConfig>, String> {
+    parse_spec_json_with_limit(doc, base, None)
+}
+
+/// [`parse_spec_json`] with a caller-side scenario budget.  The server
+/// passes its per-request scenario limit here so a `[grid]` in an
+/// untrusted body is refused from the O(axes) product check — before
+/// any cell is materialized — rather than expanded in full and only
+/// then counted against the limit.  `None` (the CLI paths) leaves the
+/// grid's own cap as the sole pre-materialization bound.
+pub fn parse_spec_json_with_limit(
+    doc: &Json,
+    base: &mut CampaignConfig,
+    scenario_limit: Option<usize>,
+) -> Result<Vec<ScenarioConfig>, String> {
     if let Some(b) = doc.get("base") {
         base.apply_toml(b)?;
     }
     let mut out = match doc.get("grid") {
-        Some(g) => super::grid::expand(g)?,
+        Some(g) => super::grid::expand(g, scenario_limit)?,
         None => Vec::new(),
     };
     match doc.get("scenario") {

@@ -29,7 +29,10 @@ pub mod grid;
 pub mod matrix;
 pub mod runner;
 
-pub use matrix::{builtin_matrix, parse_spec, parse_spec_json};
+pub use matrix::{
+    builtin_matrix, parse_spec, parse_spec_json,
+    parse_spec_json_with_limit, parse_spec_with_limit,
+};
 pub use runner::{
     engine_thread_budget, run_matrix, run_scenario, run_unit,
     summary_from_wire, summary_to_wire, summarize, ScenarioSummary,
