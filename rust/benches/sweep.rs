@@ -62,6 +62,39 @@ fn main() {
         sweep::parse_spec(grid_spec, &mut grid_base).unwrap().len()
     });
 
+    // the PR 10 registry axes, same expansion machinery: a 64-slot
+    // carve-up sweep and an 8x8 checkpoint-transfer plane — these pin
+    // the cost of registry-table dispatch + validation per cell
+    let slots_spec = format!(
+        "[grid]\ngpu_slots_per_instance = [{}]\n",
+        (1..=64)
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let mut slots_base = small_base();
+    b.run_throughput(
+        "sweep/grid-expand-gpu-slots-64",
+        64.0,
+        "scenarios",
+        || sweep::parse_spec(&slots_spec, &mut slots_base).unwrap().len(),
+    );
+    let transfer_spec = "[grid]\n\
+         checkpoint_every_s = [900]\n\
+         checkpoint_size_gb = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0]\n\
+         checkpoint_transfer_mbps = [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0, 3200.0, 6400.0]\n";
+    let mut transfer_base = small_base();
+    b.run_throughput(
+        "sweep/grid-expand-checkpoint-transfer-64",
+        64.0,
+        "scenarios",
+        || {
+            sweep::parse_spec(transfer_spec, &mut transfer_base)
+                .unwrap()
+                .len()
+        },
+    );
+
     // the artifact "default" shape, as synthetic metadata
     let exe = PhotonExecutable::from_meta(VariantMeta::synthetic(
         "bench-default",

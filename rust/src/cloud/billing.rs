@@ -36,6 +36,12 @@ pub struct BillingMeter {
     /// Non-instance costs (egress, disks, the CE VM, ...) as a fraction
     /// of instance spend; the paper's $58k is "all included".
     overhead_fraction: f64,
+    /// GPU slots carved from each instance (fractional-GPU accounting,
+    /// arXiv:2205.09232).  Busy-hours are booked per *slot*: N busy
+    /// slots on shared instances accrue N/slots instance-equivalent
+    /// busy hours.  0 (the `Default`) behaves like 1 — whole-GPU
+    /// accounting.
+    gpu_slots: u32,
 }
 
 impl BillingMeter {
@@ -46,6 +52,16 @@ impl BillingMeter {
     /// Meter with a non-instance overhead fraction applied to spend.
     pub fn with_overhead(overhead_fraction: f64) -> Self {
         BillingMeter { overhead_fraction, ..Self::default() }
+    }
+
+    /// Meter booking busy-hours per GPU *slot* instead of per whole
+    /// instance: with `n` slots carved from each instance, one busy
+    /// slot-hour is `1/n` instance-hours of useful occupancy.  Spend
+    /// and instance-hours are unchanged — the instance is billed
+    /// whole no matter how it is carved.
+    pub fn with_gpu_slots(mut self, n: u32) -> Self {
+        self.gpu_slots = n;
+        self
     }
 
     /// Accrue `dt_s` seconds of the fleet's current billable population.
@@ -69,9 +85,10 @@ impl BillingMeter {
     /// workload-management plane, not the fleet.
     pub fn accrue_busy(&mut self, busy: [usize; 3], dt_s: u64) {
         let dt_h = dt_s as f64 / 3600.0;
+        let slots = self.gpu_slots.max(1) as f64;
         for (p, n) in Provider::ALL.into_iter().zip(busy) {
             if n > 0 {
-                self.meter_mut(p).busy_hours += n as f64 * dt_h;
+                self.meter_mut(p).busy_hours += n as f64 * dt_h / slots;
             }
         }
     }
@@ -159,6 +176,22 @@ mod tests {
         assert!((az.instance_hours - 10.0).abs() < 1e-9);
         assert!((az.busy_hours - 6.0).abs() < 1e-9);
         assert!((az.idle_hours() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_slot_carveup_divides_busy_hours() {
+        // 4 slots per instance: 8 busy slot-hours = 2 instance-hours
+        // of useful occupancy
+        let mut m = BillingMeter::new().with_gpu_slots(4);
+        m.accrue_busy([8, 0, 0], HOUR);
+        assert!((m.provider(Provider::Aws).busy_hours - 2.0).abs() < 1e-9);
+        // 0 (unset) behaves like whole-GPU accounting
+        let mut whole = BillingMeter::new();
+        whole.accrue_busy([8, 0, 0], HOUR);
+        let mut one = BillingMeter::new().with_gpu_slots(1);
+        one.accrue_busy([8, 0, 0], HOUR);
+        assert_eq!(whole.total_busy_hours(), one.total_busy_hours());
+        assert!((whole.total_busy_hours() - 8.0).abs() < 1e-9);
     }
 
     #[test]

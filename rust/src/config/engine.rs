@@ -1,0 +1,59 @@
+//! Batched photon-engine execution knobs (`[engine]` table) and the
+//! real-compute sampling config.  Wall-time only: these knobs never
+//! reach `canonical_json` or the result-cache key, because the batched
+//! engine is bit-identical across them.
+
+use crate::runtime::SimdMode;
+
+/// Real-compute sampling: execute the AOT photon artifact for every Nth
+/// completed job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealComputeConfig {
+    pub variant: String,
+    pub every_n_completions: u64,
+}
+
+/// Photon-engine execution knobs (the batched SoA engine, DESIGN.md
+/// §13/§18).  These trade wall time only: the batched engine is
+/// bit-identical across thread counts, bunch sizes and sweep
+/// implementations, which is why the knobs are deliberately *excluded*
+/// from [`CampaignConfig::canonical_json`] — two requests that differ
+/// only here replay the same campaign and must share a cache entry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker threads per bunch execution (0 = all available cores).
+    pub threads: u32,
+    /// Photons per SoA sub-bunch (locality knob; 0 = engine default).
+    pub bunch: u32,
+    /// Segment-sweep implementation (`[engine] simd = "off"|"lanes"`;
+    /// default lanes — the parity suite pinned it bit-identical).
+    pub simd: SimdMode,
+}
+
+impl EngineConfig {
+    /// The concrete thread count this config asks for (auto resolved).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::runtime::available_threads()
+        } else {
+            self.threads as usize
+        }
+    }
+
+    /// Cap the engine at `budget` threads, so nested parallelism
+    /// (replay workers × engine threads) stays within the machine —
+    /// the sweep runner and server replay pool call this with
+    /// `cores / workers` (see `sweep::runner::engine_thread_budget`).
+    pub fn clamp_threads(&mut self, budget: usize) {
+        self.threads = self.resolved_threads().min(budget.max(1)) as u32;
+    }
+
+    /// The execution plan this config resolves to.
+    pub fn plan(&self) -> crate::runtime::ExecPlan {
+        crate::runtime::ExecPlan {
+            threads: self.threads as usize,
+            bunch: self.bunch as usize,
+            simd: self.simd,
+        }
+    }
+}

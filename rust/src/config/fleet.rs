@@ -1,0 +1,67 @@
+//! Worker-fleet coordinator knobs (`[fleet]` table).
+
+use super::registry::{want_f64, want_u64};
+use crate::util::json::Json;
+
+/// Worker-fleet coordinator knobs, read from a `[fleet]` table with the
+/// same strict-value contract as [`ServerConfig`].  Like the `[server]`
+/// table, these can never affect replay results — a lease TTL changes
+/// *when* a unit is requeued, never *what* its replay produces — so
+/// they must never reach `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Seconds a lease survives without a heartbeat before its unit is
+    /// requeued.
+    pub lease_ttl_s: u64,
+    /// Heartbeat cadence advertised to workers at registration.
+    pub heartbeat_every_s: u64,
+    /// Fraction of fleet-computed units the coordinator recomputes
+    /// locally and byte-compares before admitting (0 = trust, 1 =
+    /// verify everything).
+    pub spot_check_rate: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            lease_ttl_s: 30,
+            heartbeat_every_s: 10,
+            spot_check_rate: 0.1,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Apply a `[fleet]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["fleet", "lease_ttl_s"])? {
+            if v == 0 {
+                return Err("'fleet.lease_ttl_s' must be >= 1".into());
+            }
+            self.lease_ttl_s = v;
+        }
+        if let Some(v) = want_u64(doc, &["fleet", "heartbeat_every_s"])? {
+            if v == 0 {
+                return Err("'fleet.heartbeat_every_s' must be >= 1".into());
+            }
+            self.heartbeat_every_s = v;
+        }
+        if let Some(v) = want_f64(doc, &["fleet", "spot_check_rate"])? {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(
+                    "'fleet.spot_check_rate' must be within [0, 1]".into()
+                );
+            }
+            self.spot_check_rate = v;
+        }
+        if self.heartbeat_every_s >= self.lease_ttl_s {
+            return Err(format!(
+                "'fleet.heartbeat_every_s' ({}) must be shorter than \
+                 'fleet.lease_ttl_s' ({}) or every lease expires between \
+                 heartbeats",
+                self.heartbeat_every_s, self.lease_ttl_s
+            ));
+        }
+        Ok(())
+    }
+}

@@ -1,1149 +1,40 @@
 //! Campaign configuration: defaults that encode the paper's exercise,
 //! overridable from a TOML file and CLI flags.
+//!
+//! Layout:
+//! - [`registry`] — the typed knob registry: one declarative table
+//!   driving scenario parsing, campaign TOML parsing, grid-axis
+//!   whitelisting, `icecloud knobs` and the pinned doc tables.
+//! - [`scenario`] — the campaign/scenario types ([`CampaignConfig`],
+//!   ramp/outage/checkpoint/NAT specs), the shared value validators
+//!   and the canonical (cache-key) serialization.
+//! - [`engine`] / [`server`] / [`fleet`] / [`ops`] — wall-time and
+//!   serving knobs that deliberately never reach the cache key.
 
-use crate::runtime::SimdMode;
-use crate::sim::{SimTime, DAY, HOUR, MINUTE};
-use crate::util::json::{require_bool, require_f64, require_u64, Json};
-use crate::util::toml;
-use crate::workload::{GeneratorConfig, OnPremConfig};
+pub mod engine;
+pub mod fleet;
+pub mod ops;
+pub mod registry;
+pub mod scenario;
+pub mod server;
 
-/// One step of the operators' ramp plan.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct RampStep {
-    /// Desired total cloud GPUs during this step.
-    pub target: u32,
-    /// How long to hold before advancing.
-    pub hold_s: SimTime,
-}
-
-impl RampStep {
-    /// Stable serialization for cache keying (see
-    /// [`CampaignConfig::canonical_json`]).
-    pub fn canonical_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("target", Json::from(self.target as u64));
-        o.set("hold_s", Json::from(self.hold_s));
-        o
-    }
-}
-
-/// A scheduled network outage of the provider hosting the CE.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct OutageSpec {
-    pub at_s: SimTime,
-    pub duration_s: SimTime,
-}
-
-impl OutageSpec {
-    /// Stable serialization for cache keying.
-    pub fn canonical_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("at_s", Json::from(self.at_s));
-        o.set("duration_s", Json::from(self.duration_s));
-        o
-    }
-}
-
-/// Provider preference weights (aws, gcp, azure order).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ProviderWeights {
-    pub aws: f64,
-    pub gcp: f64,
-    pub azure: f64,
-}
-
-/// Target distribution policy.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum PolicyMode {
-    /// Fixed provider weights (the paper's Azure-favoring choice).
-    Fixed(ProviderWeights),
-    /// Adapt weights to observed price and preemption rates.
-    Adaptive,
-    /// Region-level risk pricing: each region's share of the ramp
-    /// target is proportional to its market depth discounted by price
-    /// and its *observed* reclaim+churn rate.  The paper's
-    /// Azure-favoring becomes an emergent outcome instead of a
-    /// hardcoded weight vector — see `coordinator::policy`.
-    RiskAware,
-}
-
-impl PolicyMode {
-    /// Stable serialization for cache keying.
-    pub fn canonical_json(&self) -> Json {
-        match self {
-            PolicyMode::Adaptive => Json::from("adaptive"),
-            PolicyMode::RiskAware => Json::from("risk-aware"),
-            PolicyMode::Fixed(w) => {
-                let mut f = Json::obj();
-                f.set("aws", Json::from(w.aws));
-                f.set("gcp", Json::from(w.gcp));
-                f.set("azure", Json::from(w.azure));
-                let mut o = Json::obj();
-                o.set("fixed", f);
-                o
-            }
-        }
-    }
-}
-
-/// Default checkpoint-restore cost: re-staging input state and
-/// re-priming the GPU before fresh bunches propagate.
-pub const DEFAULT_RESUME_OVERHEAD_S: u64 = 120;
-
-/// Checkpoint/restart policy for IceCube jobs (DESIGN.md §15).
-///
-/// The paper's jobs restarted from scratch on every interruption —
-/// every preempted wall-hour was wasted.  `Interval` models periodic
-/// checkpoints at photon-bunch granularity: a preempted or
-/// outage-killed job requeues at its last checkpoint and pays
-/// `resume_overhead_s` before fresh work proceeds.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum CheckpointPolicy {
-    /// Paper baseline: interrupted jobs restart from zero.
-    #[default]
-    None,
-    /// Checkpoint every `every_s` seconds of job progress.
-    Interval {
-        every_s: u64,
-        /// Wall seconds a resumed attempt spends restoring state
-        /// before fresh work proceeds (always badput).
-        resume_overhead_s: u64,
-    },
-}
-
-impl CheckpointPolicy {
-    /// Stable serialization for cache keying.
-    pub fn canonical_json(&self) -> Json {
-        match self {
-            CheckpointPolicy::None => Json::from("none"),
-            CheckpointPolicy::Interval { every_s, resume_overhead_s } => {
-                let mut i = Json::obj();
-                i.set("every_s", Json::from(*every_s));
-                i.set(
-                    "resume_overhead_s",
-                    Json::from(*resume_overhead_s),
-                );
-                let mut o = Json::obj();
-                o.set("interval", i);
-                o
-            }
-        }
-    }
-
-    /// Shared validation of the three checkpoint knobs as they appear
-    /// in campaign TOML (`[checkpoint]`) and sweep-matrix scenario
-    /// tables — one decision table, two parsers.  `Ok(None)` means no
-    /// knob was present (leave the current policy alone); `ctx`
-    /// prefixes error messages.
-    pub fn from_knobs(
-        disabled: bool,
-        every_s: Option<u64>,
-        resume_overhead_s: Option<u64>,
-        ctx: &str,
-    ) -> Result<Option<CheckpointPolicy>, String> {
-        match (disabled, every_s, resume_overhead_s) {
-            (true, None, None) => Ok(Some(CheckpointPolicy::None)),
-            (true, _, _) => Err(format!(
-                "{ctx} sets the disabled knob next to interval knobs; \
-                 pick one"
-            )),
-            (false, Some(0), _) => Err(format!(
-                "{ctx} checkpoint interval must be >= 1 second"
-            )),
-            (false, Some(every_s), overhead) => {
-                Ok(Some(CheckpointPolicy::Interval {
-                    every_s,
-                    resume_overhead_s: overhead
-                        .unwrap_or(DEFAULT_RESUME_OVERHEAD_S),
-                }))
-            }
-            (false, None, Some(_)) => Err(format!(
-                "{ctx} resume overhead needs a checkpoint interval"
-            )),
-            (false, None, None) => Ok(None),
-        }
-    }
-
-    /// Restore cost charged at the start of a resumed attempt.
-    pub fn resume_overhead_s(&self) -> u64 {
-        match self {
-            CheckpointPolicy::None => 0,
-            CheckpointPolicy::Interval { resume_overhead_s, .. } => {
-                *resume_overhead_s
-            }
-        }
-    }
-
-    /// Largest checkpointed progress not exceeding `progress_s`.
-    pub fn salvageable(&self, progress_s: u64) -> u64 {
-        match self {
-            CheckpointPolicy::None => 0,
-            CheckpointPolicy::Interval { every_s, .. } => {
-                crate::workload::icecube::salvageable_progress(
-                    progress_s, *every_s,
-                )
-            }
-        }
-    }
-}
-
-/// Real-compute sampling: execute the AOT photon artifact for every Nth
-/// completed job.
-#[derive(Debug, Clone, PartialEq)]
-pub struct RealComputeConfig {
-    pub variant: String,
-    pub every_n_completions: u64,
-}
-
-/// Photon-engine execution knobs (the batched SoA engine, DESIGN.md
-/// §13/§18).  These trade wall time only: the batched engine is
-/// bit-identical across thread counts, bunch sizes and sweep
-/// implementations, which is why the knobs are deliberately *excluded*
-/// from [`CampaignConfig::canonical_json`] — two requests that differ
-/// only here replay the same campaign and must share a cache entry.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct EngineConfig {
-    /// Worker threads per bunch execution (0 = all available cores).
-    pub threads: u32,
-    /// Photons per SoA sub-bunch (locality knob; 0 = engine default).
-    pub bunch: u32,
-    /// Segment-sweep implementation (`[engine] simd = "off"|"lanes"`;
-    /// default lanes — the parity suite pinned it bit-identical).
-    pub simd: SimdMode,
-}
-
-impl EngineConfig {
-    /// The concrete thread count this config asks for (auto resolved).
-    pub fn resolved_threads(&self) -> usize {
-        if self.threads == 0 {
-            crate::runtime::available_threads()
-        } else {
-            self.threads as usize
-        }
-    }
-
-    /// Cap the engine at `budget` threads, so nested parallelism
-    /// (replay workers × engine threads) stays within the machine —
-    /// the sweep runner and server replay pool call this with
-    /// `cores / workers` (see `sweep::runner::engine_thread_budget`).
-    pub fn clamp_threads(&mut self, budget: usize) {
-        self.threads = self.resolved_threads().min(budget.max(1)) as u32;
-    }
-
-    /// The execution plan this config resolves to.
-    pub fn plan(&self) -> crate::runtime::ExecPlan {
-        crate::runtime::ExecPlan {
-            threads: self.threads as usize,
-            bunch: self.bunch as usize,
-            simd: self.simd,
-        }
-    }
-}
-
-/// NAT behaviour override applied to every cloud region (scenario knob).
-///
-/// The paper's §IV incident hinges on Azure's default 4-minute NAT idle
-/// timeout; sweeps use this to ask "what if the infrastructure had been
-/// different" instead of only "what if our keepalive had been different".
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum NatOverride {
-    /// Keep each provider's own NAT profile (Azure: 240 s idle timeout).
-    #[default]
-    ProviderDefault,
-    /// Force an idle timeout of this many seconds on every region.
-    IdleTimeout(u64),
-    /// No NAT idle expiry anywhere (the fixed-infrastructure ablation).
-    Disabled,
-}
-
-impl NatOverride {
-    /// Stable serialization for cache keying.
-    pub fn canonical_json(&self) -> Json {
-        match self {
-            NatOverride::ProviderDefault => Json::from("provider-default"),
-            NatOverride::Disabled => Json::from("disabled"),
-            NatOverride::IdleTimeout(t) => {
-                let mut o = Json::obj();
-                o.set("idle_timeout_s", Json::from(*t));
-                o
-            }
-        }
-    }
-}
-
-/// Everything the campaign runner needs.
-#[derive(Debug, Clone)]
-pub struct CampaignConfig {
-    pub seed: u64,
-    pub duration_s: SimTime,
-    pub tick_s: u64,
-    pub sample_every_s: u64,
-    /// Group/ledger/target reconciliation period.
-    pub control_period_s: u64,
-    pub negotiation_period_s: u64,
-
-    pub budget_usd: f64,
-    pub alert_thresholds: Vec<f64>,
-    /// Non-instance costs (egress, disks, the CE VM) as a fraction of
-    /// instance spend — the gap between GPU-hours x price and the paper's
-    /// "all included" $58k.
-    pub overhead_fraction: f64,
-    /// Stop provisioning when remaining budget falls below this fraction.
-    pub budget_reserve_fraction: f64,
-    /// Resume after an outage at `post_outage_target` if the remaining
-    /// budget fraction is at or below this (the paper's 1k-GPU decision).
-    pub low_budget_resume_fraction: f64,
-    pub post_outage_target: u32,
-
-    /// Cloud worker keepalive (60 s = the post-incident tuned value;
-    /// set 300 to re-live §IV).
-    pub keepalive_s: u64,
-    /// Multiplier on every region's baseline churn-preemption hazard
-    /// (1.0 = the calibrated defaults; scenario sweeps raise it to model
-    /// busier spot markets).
-    pub preempt_multiplier: f64,
-    /// NAT behaviour override applied to every region.
-    pub nat_override: NatOverride,
-    /// Job checkpoint/restart policy (None = the paper's
-    /// restart-from-scratch baseline).
-    pub checkpoint: CheckpointPolicy,
-
-    pub ramp: Vec<RampStep>,
-    pub outage: Option<OutageSpec>,
-    pub policy: PolicyMode,
-
-    pub onprem: OnPremConfig,
-    pub generator: GeneratorConfig,
-    /// fp32 FLOPs per photon bunch (overridden from artifact metadata
-    /// when real compute is enabled).
-    pub flops_per_bunch: f64,
-    pub real_compute: Option<RealComputeConfig>,
-    /// Batched photon-engine execution knobs (wall time only; never
-    /// part of the cache key).
-    pub engine: EngineConfig,
-}
-
-impl Default for CampaignConfig {
-    /// The paper's two-week exercise.
-    fn default() -> Self {
-        CampaignConfig {
-            seed: 20210921,
-            duration_s: 14 * DAY,
-            tick_s: MINUTE,
-            sample_every_s: 10 * MINUTE,
-            control_period_s: 5 * MINUTE,
-            negotiation_period_s: 5 * MINUTE,
-            budget_usd: 58_000.0,
-            alert_thresholds: vec![0.75, 0.5, 0.25, 0.1],
-            overhead_fraction: 0.18,
-            budget_reserve_fraction: 0.02,
-            low_budget_resume_fraction: 0.25,
-            post_outage_target: 1000,
-            keepalive_s: 60,
-            preempt_multiplier: 1.0,
-            nat_override: NatOverride::ProviderDefault,
-            checkpoint: CheckpointPolicy::None,
-            ramp: vec![
-                // initial validation with a small fleet, then the paper's
-                // 400 / 900 / 1.2k / 1.6k / 2k staircase
-                RampStep { target: 50, hold_s: DAY },
-                RampStep { target: 400, hold_s: 2 * DAY },
-                RampStep { target: 900, hold_s: 2 * DAY },
-                RampStep { target: 1200, hold_s: 2 * DAY },
-                RampStep { target: 1600, hold_s: 2 * DAY },
-                RampStep { target: 2000, hold_s: 30 * DAY }, // until outage
-            ],
-            outage: Some(OutageSpec {
-                at_s: 11 * DAY + 6 * HOUR,
-                duration_s: 2 * HOUR,
-            }),
-            policy: PolicyMode::Fixed(ProviderWeights {
-                aws: 0.15,
-                gcp: 0.15,
-                azure: 0.70,
-            }),
-            onprem: OnPremConfig::default(),
-            generator: GeneratorConfig::default(),
-            flops_per_bunch: 1.2e10,
-            real_compute: None,
-            engine: EngineConfig::default(),
-        }
-    }
-}
-
-/// Fetch `path` as a u64 or error; absent keys are `Ok(None)`.  Built
-/// on `util::json::require_*` so the strict-value contract (mistyped
-/// values error, never silently no-op) has one implementation shared
-/// with the scenario-spec parser.
-fn want_u64(doc: &Json, path: &[&str]) -> Result<Option<u64>, String> {
-    doc.get_path(path)
-        .map(|v| require_u64(v, &format!("'{}'", path.join("."))))
-        .transpose()
-}
-
-fn want_f64(doc: &Json, path: &[&str]) -> Result<Option<f64>, String> {
-    doc.get_path(path)
-        .map(|v| require_f64(v, &format!("'{}'", path.join("."))))
-        .transpose()
-}
-
-fn want_bool(doc: &Json, path: &[&str]) -> Result<Option<bool>, String> {
-    doc.get_path(path)
-        .map(|v| require_bool(v, &format!("'{}'", path.join("."))))
-        .transpose()
-}
-
-fn want_str<'a>(
-    doc: &'a Json,
-    path: &[&str],
-) -> Result<Option<&'a str>, String> {
-    doc.get_path(path)
-        .map(|v| {
-            v.as_str().ok_or_else(|| {
-                format!("'{}' must be a string", path.join("."))
-            })
-        })
-        .transpose()
-}
-
-/// Convert a spec-file duration expressed in `unit_s`-second units
-/// (days, hours) to whole sim-seconds.  `f64 as u64` saturates NaN and
-/// negatives to 0 and +inf to `u64::MAX`, so `duration_days = -1.0`
-/// would replay a zero-length campaign under a citable name; reject
-/// everything the cast would corrupt instead.  Shared by
-/// [`CampaignConfig::apply_toml`], the scenario-spec parser
-/// (`sweep::matrix`) and the `--days` CLI override.
-pub fn spec_seconds(
-    v: f64,
-    unit_s: u64,
-    ctx: &str,
-) -> Result<u64, String> {
-    if !v.is_finite() || v < 0.0 {
-        return Err(format!(
-            "{ctx} must be a finite non-negative number (got {v})"
-        ));
-    }
-    let s = v * unit_s as f64;
-    if s >= u64::MAX as f64 {
-        return Err(format!("{ctx} ({v}) is out of range"));
-    }
-    Ok(s as u64)
-}
-
-/// Range-check a spec-file integer destined for a `u32` field (ramp
-/// targets, on-prem slots).  `u64 as u32` truncates modulo 2^32, so
-/// `ramp_targets = [4294967297]` would silently "ramp" to 1 GPU.
-pub fn spec_u32(v: u64, ctx: &str) -> Result<u32, String> {
-    u32::try_from(v).map_err(|_| {
-        format!("{ctx} ({v}) is out of range (max {})", u32::MAX)
-    })
-}
-
-impl CampaignConfig {
-    /// Apply overrides from a parsed TOML document.  Strict on values:
-    /// a present-but-mistyped key is an error, never a silent no-op
-    /// (the server feeds untrusted `[base]` tables through here).
-    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
-        if let Some(v) = want_u64(doc, &["seed"])? {
-            self.seed = v;
-        }
-        if let Some(v) = want_f64(doc, &["duration_days"])? {
-            self.duration_s = spec_seconds(v, DAY, "'duration_days'")?;
-        }
-        if let Some(v) = want_u64(doc, &["keepalive_s"])? {
-            self.keepalive_s = v;
-        }
-        if let Some(v) = want_f64(doc, &["preempt_multiplier"])? {
-            self.preempt_multiplier = v;
-        }
-        if let Some(v) = want_u64(doc, &["engine", "threads"])? {
-            self.engine.threads = u32::try_from(v)
-                .map_err(|_| format!("'engine.threads' {v} is out of range"))?;
-        }
-        if let Some(v) = want_u64(doc, &["engine", "bunch"])? {
-            if v == 0 {
-                return Err("'engine.bunch' must be >= 1".into());
-            }
-            self.engine.bunch = u32::try_from(v)
-                .map_err(|_| format!("'engine.bunch' {v} is out of range"))?;
-        }
-        if let Some(v) = want_str(doc, &["engine", "simd"])? {
-            self.engine.simd = SimdMode::parse(v).ok_or_else(|| {
-                format!(
-                    "'engine.simd' must be \"off\" or \"lanes\", got {v:?}"
-                )
-            })?;
-        }
-        let ck_disabled =
-            want_bool(doc, &["checkpoint", "disabled"])? == Some(true);
-        let ck_every = want_u64(doc, &["checkpoint", "every_s"])?;
-        let ck_overhead =
-            want_u64(doc, &["checkpoint", "resume_overhead_s"])?;
-        if let Some(policy) = CheckpointPolicy::from_knobs(
-            ck_disabled,
-            ck_every,
-            ck_overhead,
-            "[checkpoint]",
-        )? {
-            self.checkpoint = policy;
-        }
-        let nat_disabled =
-            want_bool(doc, &["nat", "disabled"])? == Some(true);
-        let nat_timeout = want_u64(doc, &["nat", "idle_timeout_s"])?;
-        match (nat_disabled, nat_timeout) {
-            (true, Some(_)) => {
-                return Err("[nat] sets both disabled = true and \
-                            idle_timeout_s; pick one"
-                    .into())
-            }
-            (true, None) => self.nat_override = NatOverride::Disabled,
-            (false, Some(t)) => {
-                self.nat_override = NatOverride::IdleTimeout(t)
-            }
-            (false, None) => {}
-        }
-        if let Some(v) = want_f64(doc, &["budget", "total_usd"])? {
-            self.budget_usd = v;
-        }
-        if let Some(v) = want_f64(doc, &["budget", "overhead_fraction"])? {
-            self.overhead_fraction = v;
-        }
-        if let Some(arr) =
-            doc.get_path(&["budget", "alerts"]).map(|v| {
-                v.as_arr().ok_or_else(|| {
-                    "'budget.alerts' must be an array".to_string()
-                })
-            })
-        {
-            let arr = arr?;
-            let mut alerts = Vec::with_capacity(arr.len());
-            for (i, v) in arr.iter().enumerate() {
-                alerts.push(v.as_f64().ok_or_else(|| {
-                    format!("'budget.alerts[{i}]' must be a number")
-                })?);
-            }
-            self.alert_thresholds = alerts;
-        }
-        if let Some(v) = want_u64(doc, &["onprem", "slots"])? {
-            self.onprem.slots = spec_u32(v, "'onprem.slots'")?;
-        }
-        if let Some(arr) = doc.get_path(&["ramp", "targets"]) {
-            let arr = arr.as_arr().ok_or_else(|| {
-                "'ramp.targets' must be an array".to_string()
-            })?;
-            let holds = match doc.get_path(&["ramp", "hold_days"]) {
-                None => Vec::new(),
-                Some(h) => {
-                    let h = h.as_arr().ok_or_else(|| {
-                        "'ramp.hold_days' must be an array".to_string()
-                    })?;
-                    let mut out = Vec::with_capacity(h.len());
-                    for (i, v) in h.iter().enumerate() {
-                        out.push(v.as_f64().ok_or_else(|| {
-                            format!(
-                                "'ramp.hold_days[{i}]' must be a number"
-                            )
-                        })?);
-                    }
-                    out
-                }
-            };
-            if holds.len() > arr.len() {
-                return Err(format!(
-                    "'ramp.hold_days' has {} entries for {} targets",
-                    holds.len(),
-                    arr.len()
-                ));
-            }
-            // strict: a dropped entry would shift the target/hold
-            // pairing (or leave an empty ramp) without any diagnostic
-            let mut ramp = Vec::with_capacity(arr.len());
-            for (i, v) in arr.iter().enumerate() {
-                let target = v.as_u64().ok_or_else(|| {
-                    format!(
-                        "'ramp.targets[{i}]' must be a non-negative \
-                         integer"
-                    )
-                })?;
-                ramp.push(RampStep {
-                    target: spec_u32(
-                        target,
-                        &format!("'ramp.targets[{i}]'"),
-                    )?,
-                    hold_s: spec_seconds(
-                        holds.get(i).copied().unwrap_or(2.0),
-                        DAY,
-                        &format!("'ramp.hold_days[{i}]'"),
-                    )?,
-                });
-            }
-            if ramp.is_empty() {
-                return Err("'ramp.targets' must not be empty".into());
-            }
-            self.ramp = ramp;
-        }
-        match (
-            want_f64(doc, &["outage", "at_days"])?,
-            want_f64(doc, &["outage", "duration_hours"])?,
-        ) {
-            (Some(at), dur) => {
-                self.outage = Some(OutageSpec {
-                    at_s: spec_seconds(at, DAY, "'outage.at_days'")?,
-                    duration_s: spec_seconds(
-                        dur.unwrap_or(2.0),
-                        HOUR,
-                        "'outage.duration_hours'",
-                    )?,
-                });
-            }
-            // a dangling duration would otherwise be validated and then
-            // silently dropped — same contract as
-            // checkpoint.resume_overhead_s without every_s
-            (None, Some(_)) => {
-                return Err("'outage.duration_hours' needs \
-                            'outage.at_days'"
-                    .into())
-            }
-            (None, None) => {}
-        }
-        if want_bool(doc, &["outage", "disabled"])? == Some(true) {
-            self.outage = None;
-        }
-        let weights = match (
-            want_f64(doc, &["policy", "aws"])?,
-            want_f64(doc, &["policy", "gcp"])?,
-            want_f64(doc, &["policy", "azure"])?,
-        ) {
-            (Some(aws), Some(gcp), Some(azure)) => {
-                Some(ProviderWeights { aws, gcp, azure })
-            }
-            (None, None, None) => None,
-            _ => {
-                return Err("[policy] weights need all three of \
-                            aws/gcp/azure"
-                    .into())
-            }
-        };
-        if let Some(mode) = doc.get_path(&["policy", "mode"]) {
-            let mode = mode.as_str().ok_or_else(|| {
-                "'policy.mode' must be a string".to_string()
-            })?;
-            self.policy = match mode {
-                "adaptive" | "risk-aware" if weights.is_some() => {
-                    return Err(format!(
-                        "policy.mode = \"{mode}\" conflicts with fixed \
-                         aws/gcp/azure weights"
-                    ))
-                }
-                "adaptive" => PolicyMode::Adaptive,
-                "risk-aware" => PolicyMode::RiskAware,
-                // mode = "fixed" must actually pin a fixed policy: take
-                // this doc's weights, or keep already-fixed weights —
-                // but never let it silently leave a non-fixed policy in
-                // place
-                "fixed" => match (weights, self.policy) {
-                    (Some(w), _) => PolicyMode::Fixed(w),
-                    (None, fixed @ PolicyMode::Fixed(_)) => fixed,
-                    (None, _) => {
-                        return Err("policy.mode = \"fixed\" needs \
-                                    aws/gcp/azure weights (current \
-                                    policy is not fixed)"
-                            .into())
-                    }
-                },
-                other => return Err(format!("unknown policy mode '{other}'")),
-            };
-        } else if let Some(w) = weights {
-            self.policy = PolicyMode::Fixed(w);
-        }
-        Ok(())
-    }
-
-    /// Canonical serialization: every semantically-relevant field, in a
-    /// deterministic key order (`Json::Obj` is a `BTreeMap`), with
-    /// deterministic number formatting (`util::json::write_num`).  Two
-    /// configs produce the same string iff they replay the same
-    /// campaign, which is what makes the server's content-addressed
-    /// result cache sound — see `crate::server::cache`.
-    ///
-    /// Adding a field to `CampaignConfig` that affects the replay MUST
-    /// be mirrored here; the version tag lets the cache key change
-    /// shape without aliasing old keys.  [`EngineConfig`] is the one
-    /// deliberate omission: the batched engine is bit-identical across
-    /// its knobs, so they must NOT split the cache.
-    pub fn canonical_json(&self) -> Json {
-        let mut o = Json::obj();
-        // v2: adds the `checkpoint` policy (PR 5); the bump keeps every
-        // pre-checkpoint cache key from aliasing a v2 key
-        o.set("v", Json::from(2u64));
-        o.set("seed", Json::from(self.seed));
-        o.set("duration_s", Json::from(self.duration_s));
-        o.set("tick_s", Json::from(self.tick_s));
-        o.set("sample_every_s", Json::from(self.sample_every_s));
-        o.set("control_period_s", Json::from(self.control_period_s));
-        o.set(
-            "negotiation_period_s",
-            Json::from(self.negotiation_period_s),
-        );
-        o.set("budget_usd", Json::from(self.budget_usd));
-        o.set(
-            "alert_thresholds",
-            Json::Arr(
-                self.alert_thresholds
-                    .iter()
-                    .map(|&t| Json::from(t))
-                    .collect(),
-            ),
-        );
-        o.set("overhead_fraction", Json::from(self.overhead_fraction));
-        o.set(
-            "budget_reserve_fraction",
-            Json::from(self.budget_reserve_fraction),
-        );
-        o.set(
-            "low_budget_resume_fraction",
-            Json::from(self.low_budget_resume_fraction),
-        );
-        o.set(
-            "post_outage_target",
-            Json::from(self.post_outage_target as u64),
-        );
-        o.set("keepalive_s", Json::from(self.keepalive_s));
-        o.set(
-            "preempt_multiplier",
-            Json::from(self.preempt_multiplier),
-        );
-        o.set("nat_override", self.nat_override.canonical_json());
-        o.set("checkpoint", self.checkpoint.canonical_json());
-        o.set(
-            "ramp",
-            Json::Arr(self.ramp.iter().map(RampStep::canonical_json).collect()),
-        );
-        o.set(
-            "outage",
-            match &self.outage {
-                None => Json::Null,
-                Some(spec) => spec.canonical_json(),
-            },
-        );
-        o.set("policy", self.policy.canonical_json());
-        let mut onprem = Json::obj();
-        onprem.set("slots", Json::from(self.onprem.slots as u64));
-        onprem.set("keepalive_s", Json::from(self.onprem.keepalive_s));
-        onprem.set("availability", Json::from(self.onprem.availability));
-        o.set("onprem", onprem);
-        let mut generator = Json::obj();
-        generator.set(
-            "backlog_factor",
-            Json::from(self.generator.backlog_factor),
-        );
-        generator.set(
-            "min_backlog",
-            Json::from(self.generator.min_backlog as u64),
-        );
-        generator.set(
-            "request_memory_mb",
-            Json::from(self.generator.request_memory_mb),
-        );
-        let mut runtimes = Json::obj();
-        runtimes.set("median_s", Json::from(self.generator.runtimes.median_s));
-        runtimes.set("sigma", Json::from(self.generator.runtimes.sigma));
-        runtimes.set("min_s", Json::from(self.generator.runtimes.min_s));
-        runtimes.set("max_s", Json::from(self.generator.runtimes.max_s));
-        generator.set("runtimes", runtimes);
-        o.set("generator", generator);
-        o.set("flops_per_bunch", Json::from(self.flops_per_bunch));
-        o.set(
-            "real_compute",
-            match &self.real_compute {
-                None => Json::Null,
-                Some(rc) => {
-                    let mut r = Json::obj();
-                    r.set("variant", Json::from(rc.variant.as_str()));
-                    r.set(
-                        "every_n_completions",
-                        Json::from(rc.every_n_completions),
-                    );
-                    r
-                }
-            },
-        );
-        o
-    }
-
-    /// Inverse of [`canonical_json`](Self::canonical_json):
-    /// reconstruct a replaying config from its canonical form.  This
-    /// is how fleet workers receive their unit of work — the
-    /// coordinator sends the *applied* config's canonical JSON in a
-    /// lease grant, and because the canonical form covers every
-    /// replay-relevant field, the worker's replay is byte-identical to
-    /// the coordinator's.  Strict: a missing or mistyped field is an
-    /// error, never a silent default — a worker replaying a different
-    /// campaign than leased would fail every sha compare.
-    ///
-    /// [`EngineConfig`] is deliberately absent from the canonical form
-    /// (results are engine-thread-invariant), so the worker keeps its
-    /// own engine defaults and clamps its own thread budget.
-    pub fn from_canonical_json(doc: &Json) -> Result<Self, String> {
-        fn canon<'a>(doc: &'a Json, key: &str) -> Result<&'a Json, String> {
-            doc.get(key)
-                .ok_or_else(|| format!("canonical config missing '{key}'"))
-        }
-        fn canon_u64(doc: &Json, key: &str) -> Result<u64, String> {
-            require_u64(canon(doc, key)?, &format!("canonical '{key}'"))
-        }
-        fn canon_f64(doc: &Json, key: &str) -> Result<f64, String> {
-            require_f64(canon(doc, key)?, &format!("canonical '{key}'"))
-        }
-        fn canon_u32(doc: &Json, key: &str) -> Result<u32, String> {
-            let v = canon_u64(doc, key)?;
-            u32::try_from(v)
-                .map_err(|_| format!("canonical '{key}' {v} is out of range"))
-        }
-        fn canon_i64(doc: &Json, key: &str) -> Result<i64, String> {
-            let v = canon_f64(doc, key)?;
-            if v.fract() != 0.0 || !(-9e15..=9e15).contains(&v) {
-                return Err(format!("canonical '{key}' must be an integer"));
-            }
-            Ok(v as i64)
-        }
-
-        let v = canon_u64(doc, "v")?;
-        if v != 2 {
-            return Err(format!("unsupported canonical config version {v}"));
-        }
-        let mut c = CampaignConfig::default();
-        c.seed = canon_u64(doc, "seed")?;
-        c.duration_s = canon_u64(doc, "duration_s")?;
-        c.tick_s = canon_u64(doc, "tick_s")?;
-        c.sample_every_s = canon_u64(doc, "sample_every_s")?;
-        c.control_period_s = canon_u64(doc, "control_period_s")?;
-        c.negotiation_period_s = canon_u64(doc, "negotiation_period_s")?;
-        c.budget_usd = canon_f64(doc, "budget_usd")?;
-        let alerts = canon(doc, "alert_thresholds")?
-            .as_arr()
-            .ok_or("canonical 'alert_thresholds' must be an array")?;
-        c.alert_thresholds = alerts
-            .iter()
-            .map(|a| {
-                a.as_f64().ok_or_else(|| {
-                    "canonical 'alert_thresholds' entries must be numbers"
-                        .to_string()
-                })
-            })
-            .collect::<Result<_, _>>()?;
-        c.overhead_fraction = canon_f64(doc, "overhead_fraction")?;
-        c.budget_reserve_fraction = canon_f64(doc, "budget_reserve_fraction")?;
-        c.low_budget_resume_fraction =
-            canon_f64(doc, "low_budget_resume_fraction")?;
-        c.post_outage_target = canon_u32(doc, "post_outage_target")?;
-        c.keepalive_s = canon_u64(doc, "keepalive_s")?;
-        c.preempt_multiplier = canon_f64(doc, "preempt_multiplier")?;
-        c.nat_override = match canon(doc, "nat_override")? {
-            Json::Str(s) if s == "provider-default" => {
-                NatOverride::ProviderDefault
-            }
-            Json::Str(s) if s == "disabled" => NatOverride::Disabled,
-            v @ Json::Obj(_) => {
-                NatOverride::IdleTimeout(canon_u64(v, "idle_timeout_s")?)
-            }
-            _ => return Err("canonical 'nat_override' is malformed".into()),
-        };
-        c.checkpoint = match canon(doc, "checkpoint")? {
-            Json::Str(s) if s == "none" => CheckpointPolicy::None,
-            v @ Json::Obj(_) => {
-                let i = v
-                    .get("interval")
-                    .ok_or("canonical 'checkpoint' is malformed")?;
-                CheckpointPolicy::Interval {
-                    every_s: canon_u64(i, "every_s")?,
-                    resume_overhead_s: canon_u64(i, "resume_overhead_s")?,
-                }
-            }
-            _ => return Err("canonical 'checkpoint' is malformed".into()),
-        };
-        let ramp = canon(doc, "ramp")?
-            .as_arr()
-            .ok_or("canonical 'ramp' must be an array")?;
-        c.ramp = ramp
-            .iter()
-            .map(|step| {
-                Ok(RampStep {
-                    target: canon_u32(step, "target")?,
-                    hold_s: canon_u64(step, "hold_s")?,
-                })
-            })
-            .collect::<Result<_, String>>()?;
-        c.outage = match canon(doc, "outage")? {
-            Json::Null => None,
-            v => Some(OutageSpec {
-                at_s: canon_u64(v, "at_s")?,
-                duration_s: canon_u64(v, "duration_s")?,
-            }),
-        };
-        c.policy = match canon(doc, "policy")? {
-            Json::Str(s) if s == "adaptive" => PolicyMode::Adaptive,
-            Json::Str(s) if s == "risk-aware" => PolicyMode::RiskAware,
-            v @ Json::Obj(_) => {
-                let f =
-                    v.get("fixed").ok_or("canonical 'policy' is malformed")?;
-                PolicyMode::Fixed(ProviderWeights {
-                    aws: canon_f64(f, "aws")?,
-                    gcp: canon_f64(f, "gcp")?,
-                    azure: canon_f64(f, "azure")?,
-                })
-            }
-            _ => return Err("canonical 'policy' is malformed".into()),
-        };
-        let onprem = canon(doc, "onprem")?;
-        c.onprem.slots = canon_u32(onprem, "slots")?;
-        c.onprem.keepalive_s = canon_u64(onprem, "keepalive_s")?;
-        c.onprem.availability = canon_f64(onprem, "availability")?;
-        let generator = canon(doc, "generator")?;
-        c.generator.backlog_factor = canon_f64(generator, "backlog_factor")?;
-        c.generator.min_backlog = canon_u64(generator, "min_backlog")? as usize;
-        c.generator.request_memory_mb =
-            canon_i64(generator, "request_memory_mb")?;
-        let runtimes = canon(generator, "runtimes")?;
-        c.generator.runtimes.median_s = canon_f64(runtimes, "median_s")?;
-        c.generator.runtimes.sigma = canon_f64(runtimes, "sigma")?;
-        c.generator.runtimes.min_s = canon_u64(runtimes, "min_s")?;
-        c.generator.runtimes.max_s = canon_u64(runtimes, "max_s")?;
-        c.flops_per_bunch = canon_f64(doc, "flops_per_bunch")?;
-        c.real_compute = match canon(doc, "real_compute")? {
-            Json::Null => None,
-            v => Some(RealComputeConfig {
-                variant: v
-                    .get("variant")
-                    .and_then(Json::as_str)
-                    .ok_or("canonical 'real_compute.variant' must be a string")?
-                    .to_string(),
-                every_n_completions: canon_u64(v, "every_n_completions")?,
-            }),
-        };
-        Ok(c)
-    }
-
-    /// Build from an already-parsed TOML document over the defaults.
-    pub fn from_toml_doc(doc: &Json) -> Result<Self, String> {
-        let mut cfg = CampaignConfig::default();
-        cfg.apply_toml(doc)?;
-        Ok(cfg)
-    }
-
-    /// Load from a TOML file over the defaults.
-    pub fn from_toml_file(path: &str) -> Result<Self, String> {
-        Self::from_toml_doc(&load_toml_doc(path)?)
-    }
-
-    /// Total ticks in the campaign.
-    pub fn num_ticks(&self) -> u64 {
-        self.duration_s / self.tick_s
-    }
-}
-
-/// Read and parse one TOML config file — the single loading path for
-/// every `--config` consumer (campaign, sweep, serve).
-pub fn load_toml_doc(path: &str) -> Result<Json, String> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| format!("cannot read {path}: {e}"))?;
-    toml::parse(&text).map_err(|e| e.to_string())
-}
-
-/// `icecloud serve` knobs, read from the same TOML file as the base
-/// campaign (a `[server]` table) with the same strict-value contract:
-/// a present-but-mistyped or out-of-range key is an error, never a
-/// silent no-op.  Deliberately a separate struct from
-/// [`CampaignConfig`]: serving knobs can never affect replay results,
-/// so they must never reach `canonical_json` and the result-cache key.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ServerConfig {
-    /// Bounded async-job admission queue (jobs waiting to run); async
-    /// submissions beyond it are shed with `429 + Retry-After`.
-    pub queue_max: u32,
-    /// Async job-runner threads draining the admission queue.
-    pub job_runners: u32,
-    /// Result-cache (memory tier) budget in MiB.
-    pub cache_mb: u64,
-    /// Persistent result-store root; `None` = memory-only.  Durable by
-    /// default: results must survive a restart unless the operator
-    /// explicitly opts out (`store_dir = ""`).
-    pub store_dir: Option<String>,
-    /// How many finished async-job records the job table retains before
-    /// the oldest age out (their cached *results* stay; only the
-    /// `/jobs/<id>` status record is forgotten).
-    pub jobs_keep: u32,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            queue_max: 32,
-            job_runners: 2,
-            cache_mb: 64,
-            store_dir: Some("icecloud-store".to_string()),
-            jobs_keep: 1024,
-        }
-    }
-}
-
-impl ServerConfig {
-    /// Apply a `[server]` table from a parsed TOML document.
-    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
-        if let Some(v) = want_u64(doc, &["server", "queue_max"])? {
-            if v == 0 {
-                return Err("'server.queue_max' must be >= 1".into());
-            }
-            self.queue_max = u32::try_from(v).map_err(|_| {
-                format!("'server.queue_max' {v} is out of range")
-            })?;
-        }
-        if let Some(v) = want_u64(doc, &["server", "job_runners"])? {
-            if v == 0 {
-                return Err("'server.job_runners' must be >= 1".into());
-            }
-            self.job_runners = u32::try_from(v).map_err(|_| {
-                format!("'server.job_runners' {v} is out of range")
-            })?;
-        }
-        if let Some(v) = want_u64(doc, &["server", "cache_mb"])? {
-            if v == 0 {
-                return Err("'server.cache_mb' must be >= 1".into());
-            }
-            self.cache_mb = v;
-        }
-        if let Some(v) = doc.get_path(&["server", "store_dir"]) {
-            let dir = v.as_str().ok_or_else(|| {
-                "'server.store_dir' must be a string".to_string()
-            })?;
-            // the empty string is the explicit "no persistence" spelling
-            self.store_dir = if dir.is_empty() {
-                None
-            } else {
-                Some(dir.to_string())
-            };
-        }
-        if let Some(v) = want_u64(doc, &["server", "jobs_keep"])? {
-            if v == 0 {
-                return Err("'server.jobs_keep' must be >= 1".into());
-            }
-            self.jobs_keep = u32::try_from(v).map_err(|_| {
-                format!("'server.jobs_keep' {v} is out of range")
-            })?;
-        }
-        Ok(())
-    }
-}
-
-/// Worker-fleet coordinator knobs, read from a `[fleet]` table with the
-/// same strict-value contract as [`ServerConfig`].  Like the `[server]`
-/// table, these can never affect replay results — a lease TTL changes
-/// *when* a unit is requeued, never *what* its replay produces — so
-/// they must never reach `canonical_json` and the result-cache key.
-#[derive(Debug, Clone, PartialEq)]
-pub struct FleetConfig {
-    /// Seconds a lease survives without a heartbeat before its unit is
-    /// requeued.
-    pub lease_ttl_s: u64,
-    /// Heartbeat cadence advertised to workers at registration.
-    pub heartbeat_every_s: u64,
-    /// Fraction of fleet-computed units the coordinator recomputes
-    /// locally and byte-compares before admitting (0 = trust, 1 =
-    /// verify everything).
-    pub spot_check_rate: f64,
-}
-
-impl Default for FleetConfig {
-    fn default() -> Self {
-        FleetConfig {
-            lease_ttl_s: 30,
-            heartbeat_every_s: 10,
-            spot_check_rate: 0.1,
-        }
-    }
-}
-
-impl FleetConfig {
-    /// Apply a `[fleet]` table from a parsed TOML document.
-    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
-        if let Some(v) = want_u64(doc, &["fleet", "lease_ttl_s"])? {
-            if v == 0 {
-                return Err("'fleet.lease_ttl_s' must be >= 1".into());
-            }
-            self.lease_ttl_s = v;
-        }
-        if let Some(v) = want_u64(doc, &["fleet", "heartbeat_every_s"])? {
-            if v == 0 {
-                return Err("'fleet.heartbeat_every_s' must be >= 1".into());
-            }
-            self.heartbeat_every_s = v;
-        }
-        if let Some(v) = want_f64(doc, &["fleet", "spot_check_rate"])? {
-            if !(0.0..=1.0).contains(&v) {
-                return Err(
-                    "'fleet.spot_check_rate' must be within [0, 1]".into()
-                );
-            }
-            self.spot_check_rate = v;
-        }
-        if self.heartbeat_every_s >= self.lease_ttl_s {
-            return Err(format!(
-                "'fleet.heartbeat_every_s' ({}) must be shorter than \
-                 'fleet.lease_ttl_s' ({}) or every lease expires between \
-                 heartbeats",
-                self.heartbeat_every_s, self.lease_ttl_s
-            ));
-        }
-        Ok(())
-    }
-}
-
-/// Operations-plane knobs (`/events`, `/timeseries`, `/dash`), read
-/// from an `[ops]` table with the same strict-value contract as
-/// [`ServerConfig`].  Like every serving knob these shape *observation*
-/// only — ring capacity changes which events a slow subscriber misses,
-/// never what a replay computes — so they must never reach
-/// `canonical_json` and the result-cache key.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct OpsConfig {
-    /// Event-bus ring capacity: how many recent events a late or
-    /// resuming subscriber can still replay before hitting a gap.
-    pub events_ring: u32,
-    /// Wall-clock seconds between ops-monitor samples of the serving
-    /// gauges (queue depths, outstanding leases, goodput hours).
-    pub sample_every_s: u64,
-}
-
-impl Default for OpsConfig {
-    fn default() -> Self {
-        OpsConfig { events_ring: 1024, sample_every_s: 5 }
-    }
-}
-
-impl OpsConfig {
-    /// Apply an `[ops]` table from a parsed TOML document.
-    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
-        if let Some(v) = want_u64(doc, &["ops", "events_ring"])? {
-            if v == 0 {
-                return Err("'ops.events_ring' must be >= 1".into());
-            }
-            self.events_ring = u32::try_from(v).map_err(|_| {
-                format!("'ops.events_ring' {v} is out of range")
-            })?;
-        }
-        if let Some(v) = want_u64(doc, &["ops", "sample_every_s"])? {
-            if v == 0 {
-                return Err("'ops.sample_every_s' must be >= 1".into());
-            }
-            self.sample_every_s = v;
-        }
-        Ok(())
-    }
-}
+pub use engine::{EngineConfig, RealComputeConfig};
+pub use fleet::FleetConfig;
+pub use ops::OpsConfig;
+pub use scenario::{
+    load_toml_doc, spec_seconds, spec_u32, CampaignConfig, CheckpointPolicy,
+    NatOverride, OutageSpec, PolicyMode, ProviderWeights, RampStep,
+    DEFAULT_RESUME_OVERHEAD_S,
+};
+pub use server::ServerConfig;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::SimdMode;
+    use crate::sim::{DAY, HOUR};
+    use crate::util::json::Json;
+    use crate::util::toml;
 
     #[test]
     fn defaults_encode_the_paper() {
@@ -1905,5 +796,105 @@ azure = 0.6
                 .canonical_json()
                 .to_string_compact()
         );
+    }
+
+    #[test]
+    fn new_knobs_apply_from_campaign_toml() {
+        let doc = toml::parse(
+            "gpu_slots_per_instance = 4\n\n\
+             [checkpoint]\nevery_s = 900\nsize_gb = 8.0\n\
+             transfer_mbps = 50.0",
+        )
+        .unwrap();
+        let mut c = CampaignConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.gpu_slots_per_instance, 4);
+        assert_eq!(c.checkpoint_size_gb, 8.0);
+        assert_eq!(c.checkpoint_transfer_mbps, 50.0);
+        // 8 GB at 50 Mbps = 8 * 8000 / 50 = 1280 s on the wire
+        assert_eq!(c.checkpoint_transfer_s(), 1280);
+        match c.effective_checkpoint() {
+            CheckpointPolicy::Interval {
+                every_s,
+                resume_overhead_s,
+            } => {
+                assert_eq!(every_s, 900);
+                assert_eq!(
+                    resume_overhead_s,
+                    DEFAULT_RESUME_OVERHEAD_S + 1280
+                );
+            }
+            other => panic!("expected interval policy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_transfer_needs_a_checkpoint_policy() {
+        // transfer cost only materializes when checkpointing is on:
+        // with the restart-from-scratch baseline there is no restore
+        // to pay for
+        let mut c = CampaignConfig::default();
+        c.checkpoint_size_gb = 8.0;
+        c.checkpoint_transfer_mbps = 50.0;
+        assert_eq!(c.effective_checkpoint(), CheckpointPolicy::None);
+        // and a zero-size image is free to move
+        let mut c = CampaignConfig::default();
+        c.checkpoint = CheckpointPolicy::Interval {
+            every_s: 900,
+            resume_overhead_s: 30,
+        };
+        assert_eq!(
+            c.effective_checkpoint(),
+            CheckpointPolicy::Interval {
+                every_s: 900,
+                resume_overhead_s: 30
+            }
+        );
+    }
+
+    #[test]
+    fn new_knob_values_are_validated() {
+        for bad in [
+            "gpu_slots_per_instance = 0",
+            "[checkpoint]\nsize_gb = -1.0",
+            "[checkpoint]\ntransfer_mbps = 0.0",
+            "[checkpoint]\ntransfer_mbps = -2.0",
+        ] {
+            let doc = toml::parse(bad).unwrap();
+            let mut c = CampaignConfig::default();
+            assert!(c.apply_toml(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn new_knobs_at_default_are_omitted_from_canonical_json() {
+        // registering a knob must never invalidate pre-existing cache
+        // keys: at their defaults the PR 10 knobs are absent from the
+        // canonical form entirely
+        let base =
+            CampaignConfig::default().canonical_json().to_string_compact();
+        for key in [
+            "gpu_slots_per_instance",
+            "checkpoint_size_gb",
+            "checkpoint_transfer_mbps",
+        ] {
+            assert!(
+                !base.contains(key),
+                "default canonical form must omit {key}: {base}"
+            );
+        }
+        // off-default values split the key and round-trip
+        let mut c = CampaignConfig::default();
+        c.gpu_slots_per_instance = 4;
+        c.checkpoint_size_gb = 2.5;
+        c.checkpoint_transfer_mbps = 500.0;
+        let canon = c.canonical_json();
+        let s = canon.to_string_compact();
+        assert_ne!(base, s);
+        let back = CampaignConfig::from_canonical_json(&canon).unwrap();
+        assert_eq!(back.gpu_slots_per_instance, 4);
+        assert_eq!(back.checkpoint_size_gb, 2.5);
+        assert_eq!(back.checkpoint_transfer_mbps, 500.0);
+        assert_eq!(s, back.canonical_json().to_string_compact());
     }
 }

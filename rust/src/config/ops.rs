@@ -1,0 +1,47 @@
+//! Operations-plane knobs (`[ops]` table).
+
+use super::registry::want_u64;
+use crate::util::json::Json;
+
+/// Operations-plane knobs (`/events`, `/timeseries`, `/dash`), read
+/// from an `[ops]` table with the same strict-value contract as
+/// [`ServerConfig`].  Like every serving knob these shape *observation*
+/// only — ring capacity changes which events a slow subscriber misses,
+/// never what a replay computes — so they must never reach
+/// `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpsConfig {
+    /// Event-bus ring capacity: how many recent events a late or
+    /// resuming subscriber can still replay before hitting a gap.
+    pub events_ring: u32,
+    /// Wall-clock seconds between ops-monitor samples of the serving
+    /// gauges (queue depths, outstanding leases, goodput hours).
+    pub sample_every_s: u64,
+}
+
+impl Default for OpsConfig {
+    fn default() -> Self {
+        OpsConfig { events_ring: 1024, sample_every_s: 5 }
+    }
+}
+
+impl OpsConfig {
+    /// Apply an `[ops]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["ops", "events_ring"])? {
+            if v == 0 {
+                return Err("'ops.events_ring' must be >= 1".into());
+            }
+            self.events_ring = u32::try_from(v).map_err(|_| {
+                format!("'ops.events_ring' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["ops", "sample_every_s"])? {
+            if v == 0 {
+                return Err("'ops.sample_every_s' must be >= 1".into());
+            }
+            self.sample_every_s = v;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,1341 @@
+//! The typed knob registry: one declarative table for the whole
+//! scenario surface.
+//!
+//! Every sweepable campaign knob is one [`Knob`] entry here, stating
+//! its scenario-spec name, its campaign-TOML path, its value kind
+//! (validated through the shared `util::json::require_*` +
+//! [`spec_seconds`]/[`spec_u32`] helpers), how it applies into a
+//! [`ScenarioConfig`] and a [`CampaignConfig`], and whether it is
+//! `[grid]`-axis eligible.  The scenario parser
+//! ([`parse_scenario`]), the campaign TOML parser
+//! ([`apply_campaign_toml`]), the grid axis whitelist
+//! (`sweep::grid`), the `icecloud knobs` CLI and the doc tables are
+//! all derived from this one table, so a new axis is a single entry
+//! plus its simulator hook — never a six-site cross-layer diff.
+//!
+//! **Byte stability.**  The registry changes how knob parsing is
+//! *organized*, not what it produces: `CampaignConfig::canonical_json`
+//! bytes (and therefore the server's content-addressed cache keys) are
+//! pinned unchanged by `tests/golden_canonical.rs`.  Knobs whose
+//! default matches the pre-registry behaviour are omitted from the
+//! canonical form when still at that default (see
+//! `CampaignConfig::canonical_json`), so registering a knob never
+//! invalidates existing cache keys.
+//!
+//! **Error contexts.**  [`Scope`] is the one formatter for every
+//! parse-error context: `[scenario.<name>] 'key'` on the scenario
+//! path, `'toml.path'` on the campaign path, `[table]` /
+//! `[scenario.<name>]` for table-level conflicts.  The shape is pinned
+//! by tests below — the historical drift between `[scenario.<name>]
+//! key` and `'key'` spellings cannot come back.
+
+use super::{
+    spec_seconds, spec_u32, CampaignConfig, CheckpointPolicy, NatOverride,
+    OutageSpec, PolicyMode, ProviderWeights, RampStep,
+};
+use crate::coordinator::ScenarioConfig;
+use crate::runtime::SimdMode;
+use crate::sim::{DAY, HOUR};
+use crate::util::json::{require_bool, require_f64, require_u64, Json};
+
+/// Value kind of a registered knob; drives fetching + validation and
+/// the type column of `icecloud knobs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    U64,
+    /// u64 in the spec, range-checked into a `u32` field ([`spec_u32`]).
+    U32,
+    F64,
+    Bool,
+    Str,
+    /// f64 count of days, converted to sim-seconds ([`spec_seconds`]).
+    Days,
+    /// f64 count of hours, converted to sim-seconds ([`spec_seconds`]).
+    Hours,
+    /// Array of u32 (ramp targets); group-parsed, never a grid axis.
+    U32Array,
+    /// Array of f64 (ramp holds); group-parsed, never a grid axis.
+    F64Array,
+}
+
+impl KnobKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            KnobKind::U64 => "u64",
+            KnobKind::U32 => "u32",
+            KnobKind::F64 => "f64",
+            KnobKind::Bool => "bool",
+            KnobKind::Str => "string",
+            KnobKind::Days => "days (f64)",
+            KnobKind::Hours => "hours (f64)",
+            KnobKind::U32Array => "u32 array",
+            KnobKind::F64Array => "f64 array",
+        }
+    }
+}
+
+/// A fetched, type-checked knob value (scalar kinds only; the array
+/// kinds are resolved by their group parser).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KnobValue {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl KnobValue {
+    fn u64(&self) -> u64 {
+        match self {
+            KnobValue::U64(v) => *v,
+            _ => unreachable!("kind/value mismatch"),
+        }
+    }
+
+    fn f64(&self) -> f64 {
+        match self {
+            KnobValue::F64(v) => *v,
+            _ => unreachable!("kind/value mismatch"),
+        }
+    }
+}
+
+type ScenarioSetter =
+    fn(&mut ScenarioConfig, &KnobValue, &str) -> Result<(), String>;
+type CampaignSetter =
+    fn(&mut CampaignConfig, &KnobValue, &str) -> Result<(), String>;
+
+/// How a knob applies.  Scalars carry a setter per target; grouped
+/// knobs (NAT pair, outage trio, ramp pair, checkpoint trio, policy)
+/// are resolved together by their group parser because their meaning
+/// is relational (conflicts, pairings, defaults).
+enum Apply {
+    Scalar { scenario: ScenarioSetter, campaign: CampaignSetter },
+    Group(Group),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Group {
+    Nat,
+    Outage,
+    Ramp,
+    Policy,
+    Checkpoint,
+}
+
+/// One registered scenario knob.
+pub struct Knob {
+    /// Flat scenario-spec key (`[scenario.<name>]` tables, `[grid]`
+    /// axes, the JSON wire format).
+    pub name: &'static str,
+    /// Nested campaign-TOML path the same knob takes in a `--config`
+    /// file or a `[base]` table.
+    pub toml_path: &'static [&'static str],
+    pub kind: KnobKind,
+    /// Whether a `[grid]` section may sweep this knob.  Array-valued
+    /// knobs are excluded: the TOML subset has no nested arrays.
+    pub grid_axis: bool,
+    /// Human-readable default for the `icecloud knobs` table.
+    pub default_label: &'static str,
+    /// One-line description for the `icecloud knobs` table.
+    pub doc: &'static str,
+    /// A valid TOML literal for this knob, used by the round-trip
+    /// property suite (`tests/prop_registry.rs`) to drive every knob
+    /// through both parse paths.
+    pub sample: &'static str,
+    apply: Apply,
+}
+
+macro_rules! scalar {
+    ($s:ident, $c:ident) => {
+        Apply::Scalar { scenario: $s, campaign: $c }
+    };
+}
+
+/// The registry.  Order is the scalar-application order and the row
+/// order of every rendering; grouped knobs keep their relational
+/// parse order inside their group resolvers.
+pub static KNOBS: [Knob; 20] = [
+    Knob {
+        name: "seed",
+        toml_path: &["seed"],
+        kind: KnobKind::U64,
+        grid_axis: true,
+        default_label: "20210921",
+        doc: "PRNG root seed; every replay stream derives from it",
+        sample: "7",
+        apply: scalar!(set_seed_s, set_seed_c),
+    },
+    Knob {
+        name: "duration_days",
+        toml_path: &["duration_days"],
+        kind: KnobKind::Days,
+        grid_axis: true,
+        default_label: "14",
+        doc: "campaign length in days (fractional allowed)",
+        sample: "2.5",
+        apply: scalar!(set_duration_s, set_duration_c),
+    },
+    Knob {
+        name: "budget_usd",
+        toml_path: &["budget", "total_usd"],
+        kind: KnobKind::F64,
+        grid_axis: true,
+        default_label: "58000",
+        doc: "total CloudBank budget in USD",
+        sample: "29000.0",
+        apply: scalar!(set_budget_s, set_budget_c),
+    },
+    Knob {
+        name: "preempt_multiplier",
+        toml_path: &["preempt_multiplier"],
+        kind: KnobKind::F64,
+        grid_axis: true,
+        default_label: "1",
+        doc: "spot-reclaim rate multiplier on every provider",
+        sample: "4.0",
+        apply: scalar!(set_preempt_s, set_preempt_c),
+    },
+    Knob {
+        name: "keepalive_s",
+        toml_path: &["keepalive_s"],
+        kind: KnobKind::U64,
+        grid_axis: true,
+        default_label: "60",
+        doc: "worker keepalive period in seconds (NAT survival)",
+        sample: "300",
+        apply: scalar!(set_keepalive_s, set_keepalive_c),
+    },
+    Knob {
+        name: "nat_disabled",
+        toml_path: &["nat", "disabled"],
+        kind: KnobKind::Bool,
+        grid_axis: true,
+        default_label: "false",
+        doc: "disable NAT idle timeouts everywhere (infrastructure fix)",
+        sample: "true",
+        apply: Apply::Group(Group::Nat),
+    },
+    Knob {
+        name: "nat_idle_timeout_s",
+        toml_path: &["nat", "idle_timeout_s"],
+        kind: KnobKind::U64,
+        grid_axis: true,
+        default_label: "provider default",
+        doc: "force one NAT idle timeout (seconds) on every cloud region",
+        sample: "120",
+        apply: Apply::Group(Group::Nat),
+    },
+    Knob {
+        name: "outage_disabled",
+        toml_path: &["outage", "disabled"],
+        kind: KnobKind::Bool,
+        grid_axis: true,
+        default_label: "false",
+        doc: "remove the day-11 compute-element outage",
+        sample: "true",
+        apply: Apply::Group(Group::Outage),
+    },
+    Knob {
+        name: "outage_at_days",
+        toml_path: &["outage", "at_days"],
+        kind: KnobKind::Days,
+        grid_axis: true,
+        default_label: "11.25",
+        doc: "outage start, days from campaign start",
+        sample: "1.5",
+        apply: Apply::Group(Group::Outage),
+    },
+    Knob {
+        name: "outage_duration_hours",
+        toml_path: &["outage", "duration_hours"],
+        kind: KnobKind::Hours,
+        grid_axis: true,
+        default_label: "2",
+        doc: "outage length in hours (needs outage_at_days)",
+        sample: "6.0",
+        apply: Apply::Group(Group::Outage),
+    },
+    Knob {
+        name: "ramp_targets",
+        toml_path: &["ramp", "targets"],
+        kind: KnobKind::U32Array,
+        grid_axis: false,
+        default_label: "paper staircase",
+        doc: "cloud GPU ramp plateau targets (array; not a grid axis)",
+        sample: "[100, 200]",
+        apply: Apply::Group(Group::Ramp),
+    },
+    Knob {
+        name: "ramp_hold_days",
+        toml_path: &["ramp", "hold_days"],
+        kind: KnobKind::F64Array,
+        grid_axis: false,
+        default_label: "2 per step",
+        doc: "days to hold each ramp plateau (pairs with ramp_targets)",
+        sample: "[1.0, 0.5]",
+        apply: Apply::Group(Group::Ramp),
+    },
+    Knob {
+        name: "onprem_slots",
+        toml_path: &["onprem", "slots"],
+        kind: KnobKind::U32,
+        grid_axis: true,
+        default_label: "1150",
+        doc: "on-prem GPU slots federated under the cloud fleet",
+        sample: "10",
+        apply: scalar!(set_onprem_s, set_onprem_c),
+    },
+    Knob {
+        name: "policy",
+        toml_path: &["policy", "mode"],
+        kind: KnobKind::Str,
+        grid_axis: true,
+        default_label: "paper (70/15/15)",
+        doc: "provider split: paper|azure-favored|uniform|adaptive|risk-aware",
+        sample: "\"risk-aware\"",
+        apply: Apply::Group(Group::Policy),
+    },
+    Knob {
+        name: "checkpoint_every_s",
+        toml_path: &["checkpoint", "every_s"],
+        kind: KnobKind::U64,
+        grid_axis: true,
+        default_label: "off",
+        doc: "checkpoint interval in seconds (unset = restart from scratch)",
+        sample: "900",
+        apply: Apply::Group(Group::Checkpoint),
+    },
+    Knob {
+        name: "checkpoint_resume_overhead_s",
+        toml_path: &["checkpoint", "resume_overhead_s"],
+        kind: KnobKind::U64,
+        grid_axis: true,
+        default_label: "120",
+        doc: "seconds to restore state on resume (needs checkpoint_every_s)",
+        sample: "30",
+        apply: Apply::Group(Group::Checkpoint),
+    },
+    Knob {
+        name: "checkpoint_disabled",
+        toml_path: &["checkpoint", "disabled"],
+        kind: KnobKind::Bool,
+        grid_axis: true,
+        default_label: "false",
+        doc: "force the no-checkpoint paper baseline",
+        sample: "true",
+        apply: Apply::Group(Group::Checkpoint),
+    },
+    Knob {
+        name: "gpu_slots_per_instance",
+        toml_path: &["gpu_slots_per_instance"],
+        kind: KnobKind::U32,
+        grid_axis: true,
+        default_label: "1",
+        doc: "GPU slots carved from each instance (fractional-GPU accounting)",
+        sample: "4",
+        apply: scalar!(set_gpu_slots_s, set_gpu_slots_c),
+    },
+    Knob {
+        name: "checkpoint_size_gb",
+        toml_path: &["checkpoint", "size_gb"],
+        kind: KnobKind::F64,
+        grid_axis: true,
+        default_label: "0",
+        doc: "checkpoint image size in GB; adds restore transfer time",
+        sample: "2.5",
+        apply: scalar!(set_ckpt_size_s, set_ckpt_size_c),
+    },
+    Knob {
+        name: "checkpoint_transfer_mbps",
+        toml_path: &["checkpoint", "transfer_mbps"],
+        kind: KnobKind::F64,
+        grid_axis: true,
+        default_label: "1000",
+        doc: "network bandwidth for checkpoint restores, megabit/s",
+        sample: "500.0",
+        apply: scalar!(set_ckpt_mbps_s, set_ckpt_mbps_c),
+    },
+];
+
+/// Find a knob by scenario-spec name.
+pub fn lookup(name: &str) -> Option<&'static Knob> {
+    KNOBS.iter().find(|k| k.name == name)
+}
+
+fn knob(name: &str) -> &'static Knob {
+    lookup(name).expect("registered knob")
+}
+
+// ---------------------------------------------------------------------
+// scalar setters
+// ---------------------------------------------------------------------
+
+fn set_seed_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    s.seed = Some(v.u64());
+    Ok(())
+}
+
+fn set_seed_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    c.seed = v.u64();
+    Ok(())
+}
+
+fn set_duration_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    s.duration_s = Some(spec_seconds(v.f64(), DAY, ctx)?);
+    Ok(())
+}
+
+fn set_duration_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    c.duration_s = spec_seconds(v.f64(), DAY, ctx)?;
+    Ok(())
+}
+
+fn set_budget_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    s.budget_usd = Some(v.f64());
+    Ok(())
+}
+
+fn set_budget_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    c.budget_usd = v.f64();
+    Ok(())
+}
+
+fn set_preempt_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    s.preempt_multiplier = Some(v.f64());
+    Ok(())
+}
+
+fn set_preempt_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    c.preempt_multiplier = v.f64();
+    Ok(())
+}
+
+fn set_keepalive_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    s.keepalive_s = Some(v.u64());
+    Ok(())
+}
+
+fn set_keepalive_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    _ctx: &str,
+) -> Result<(), String> {
+    c.keepalive_s = v.u64();
+    Ok(())
+}
+
+fn set_onprem_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    s.onprem_slots = Some(spec_u32(v.u64(), ctx)?);
+    Ok(())
+}
+
+fn set_onprem_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    c.onprem.slots = spec_u32(v.u64(), ctx)?;
+    Ok(())
+}
+
+/// `gpu_slots_per_instance = 0` would divide busy-hours by zero-ish
+/// magic; a carve-up always has at least one slot.
+fn check_gpu_slots(v: u64, ctx: &str) -> Result<u32, String> {
+    if v == 0 {
+        return Err(format!("{ctx} must be >= 1"));
+    }
+    spec_u32(v, ctx)
+}
+
+fn set_gpu_slots_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    s.gpu_slots_per_instance = Some(check_gpu_slots(v.u64(), ctx)?);
+    Ok(())
+}
+
+fn set_gpu_slots_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    c.gpu_slots_per_instance = check_gpu_slots(v.u64(), ctx)?;
+    Ok(())
+}
+
+fn check_ckpt_size(v: f64, ctx: &str) -> Result<f64, String> {
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!(
+            "{ctx} must be a finite non-negative number (got {v})"
+        ));
+    }
+    Ok(v)
+}
+
+fn set_ckpt_size_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    s.checkpoint_size_gb = Some(check_ckpt_size(v.f64(), ctx)?);
+    Ok(())
+}
+
+fn set_ckpt_size_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    c.checkpoint_size_gb = check_ckpt_size(v.f64(), ctx)?;
+    Ok(())
+}
+
+fn check_ckpt_mbps(v: f64, ctx: &str) -> Result<f64, String> {
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!(
+            "{ctx} must be a finite positive number (got {v})"
+        ));
+    }
+    Ok(v)
+}
+
+fn set_ckpt_mbps_s(
+    s: &mut ScenarioConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    s.checkpoint_transfer_mbps = Some(check_ckpt_mbps(v.f64(), ctx)?);
+    Ok(())
+}
+
+fn set_ckpt_mbps_c(
+    c: &mut CampaignConfig,
+    v: &KnobValue,
+    ctx: &str,
+) -> Result<(), String> {
+    c.checkpoint_transfer_mbps = check_ckpt_mbps(v.f64(), ctx)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// the shared error-context formatter
+// ---------------------------------------------------------------------
+
+/// Which spelling of the knob surface is being parsed; the single
+/// source of every parse-error context string.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Scope<'a> {
+    /// A `[scenario.<name>]` table (flat keys).
+    Scenario(&'a str),
+    /// A campaign TOML document (nested paths).
+    Campaign,
+}
+
+impl Scope<'_> {
+    fn get<'j>(&self, doc: &'j Json, k: &Knob) -> Option<&'j Json> {
+        match self {
+            Scope::Scenario(_) => doc.get(k.name),
+            Scope::Campaign => doc.get_path(k.toml_path),
+        }
+    }
+
+    /// Context for one key: `[scenario.<name>] 'key'` / `'toml.path'`.
+    pub(crate) fn key_ctx(&self, k: &Knob) -> String {
+        match self {
+            Scope::Scenario(name) => {
+                format!("[scenario.{name}] '{}'", k.name)
+            }
+            Scope::Campaign => format!("'{}'", k.toml_path.join(".")),
+        }
+    }
+
+    /// Context for one array element of a key.
+    fn key_ctx_idx(&self, k: &Knob, i: usize) -> String {
+        match self {
+            Scope::Scenario(name) => {
+                format!("[scenario.{name}] '{}[{i}]'", k.name)
+            }
+            Scope::Campaign => {
+                format!("'{}[{i}]'", k.toml_path.join("."))
+            }
+        }
+    }
+
+    /// A key mentioned inside another key's message (no table prefix).
+    fn key_name(&self, k: &Knob) -> String {
+        match self {
+            Scope::Scenario(_) => format!("'{}'", k.name),
+            Scope::Campaign => format!("'{}'", k.toml_path.join(".")),
+        }
+    }
+
+    /// Context for a table-level (multi-key) conflict.
+    fn table_ctx(&self, table: &str) -> String {
+        match self {
+            Scope::Scenario(name) => format!("[scenario.{name}]"),
+            Scope::Campaign => format!("[{table}]"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed fetching
+// ---------------------------------------------------------------------
+
+/// Fetch + type-check one scalar knob value.  Present-but-mistyped is
+/// an error, never a silent no-op — the strict-value contract both
+/// parse paths share.
+fn fetch(kind: KnobKind, v: &Json, ctx: &str) -> Result<KnobValue, String> {
+    match kind {
+        KnobKind::U64 | KnobKind::U32 => {
+            Ok(KnobValue::U64(require_u64(v, ctx)?))
+        }
+        KnobKind::F64 | KnobKind::Days | KnobKind::Hours => {
+            Ok(KnobValue::F64(require_f64(v, ctx)?))
+        }
+        KnobKind::Bool => Ok(KnobValue::Bool(require_bool(v, ctx)?)),
+        KnobKind::Str => Ok(KnobValue::Str(
+            v.as_str()
+                .ok_or_else(|| format!("{ctx} must be a string"))?
+                .to_string(),
+        )),
+        KnobKind::U32Array | KnobKind::F64Array => {
+            Err(format!("{ctx} is array-valued; group-parsed"))
+        }
+    }
+}
+
+fn get_u64(
+    doc: &Json,
+    scope: &Scope,
+    name: &str,
+) -> Result<Option<u64>, String> {
+    let k = knob(name);
+    scope
+        .get(doc, k)
+        .map(|v| require_u64(v, &scope.key_ctx(k)))
+        .transpose()
+}
+
+fn get_f64(
+    doc: &Json,
+    scope: &Scope,
+    name: &str,
+) -> Result<Option<f64>, String> {
+    let k = knob(name);
+    scope
+        .get(doc, k)
+        .map(|v| require_f64(v, &scope.key_ctx(k)))
+        .transpose()
+}
+
+fn get_bool(
+    doc: &Json,
+    scope: &Scope,
+    name: &str,
+) -> Result<Option<bool>, String> {
+    let k = knob(name);
+    scope
+        .get(doc, k)
+        .map(|v| require_bool(v, &scope.key_ctx(k)))
+        .transpose()
+}
+
+// ---------------------------------------------------------------------
+// group resolvers (shared by both parse paths)
+// ---------------------------------------------------------------------
+
+/// NAT pair: `disabled` xor `idle_timeout_s`.
+fn resolve_nat(
+    doc: &Json,
+    scope: &Scope,
+) -> Result<Option<NatOverride>, String> {
+    let disabled = get_bool(doc, scope, "nat_disabled")? == Some(true);
+    let timeout = get_u64(doc, scope, "nat_idle_timeout_s")?;
+    match (disabled, timeout) {
+        (true, Some(_)) => Err(format!(
+            "{} sets both {} and {}; pick one",
+            scope.table_ctx("nat"),
+            scope.key_name(knob("nat_disabled")),
+            scope.key_name(knob("nat_idle_timeout_s")),
+        )),
+        (true, None) => Ok(Some(NatOverride::Disabled)),
+        (false, Some(t)) => Ok(Some(NatOverride::IdleTimeout(t))),
+        (false, None) => Ok(None),
+    }
+}
+
+/// Outage trio: returns `(disabled, rescheduled_spec)`.  Precedence is
+/// the *caller's* concern — the scenario path applies `disabled` first
+/// so an explicit reschedule overrides it, while the campaign path
+/// applies the reschedule first so `disabled` wins (both orders are
+/// load-bearing, pre-registry behaviour).
+fn resolve_outage(
+    doc: &Json,
+    scope: &Scope,
+) -> Result<(bool, Option<OutageSpec>), String> {
+    let disabled = get_bool(doc, scope, "outage_disabled")? == Some(true);
+    let at = get_f64(doc, scope, "outage_at_days")?;
+    let dur = get_f64(doc, scope, "outage_duration_hours")?;
+    let spec = match (at, dur) {
+        (Some(at), dur) => Some(OutageSpec {
+            at_s: spec_seconds(
+                at,
+                DAY,
+                &scope.key_ctx(knob("outage_at_days")),
+            )?,
+            duration_s: spec_seconds(
+                dur.unwrap_or(2.0),
+                HOUR,
+                &scope.key_ctx(knob("outage_duration_hours")),
+            )?,
+        }),
+        // a dangling duration would be validated and then silently
+        // dropped — same contract as checkpoint_resume_overhead_s
+        // without checkpoint_every_s
+        (None, Some(_)) => {
+            return Err(format!(
+                "{} needs {}",
+                scope.key_ctx(knob("outage_duration_hours")),
+                scope.key_name(knob("outage_at_days")),
+            ))
+        }
+        (None, None) => None,
+    };
+    Ok((disabled, spec))
+}
+
+/// Ramp pair: `targets` (required when present) + optional `hold_days`
+/// with a 2-day tail default.  A lone `hold_days` without `targets` is
+/// ignored on both paths (pre-registry behaviour).
+fn resolve_ramp(
+    doc: &Json,
+    scope: &Scope,
+) -> Result<Option<Vec<RampStep>>, String> {
+    let tk = knob("ramp_targets");
+    let hk = knob("ramp_hold_days");
+    let Some(targets) = scope.get(doc, tk) else {
+        return Ok(None);
+    };
+    let arr = targets.as_arr().ok_or_else(|| {
+        format!("{} must be an array", scope.key_ctx(tk))
+    })?;
+    let holds = match scope.get(doc, hk) {
+        None => Vec::new(),
+        Some(h) => {
+            let h = h.as_arr().ok_or_else(|| {
+                format!("{} must be an array", scope.key_ctx(hk))
+            })?;
+            let mut out = Vec::with_capacity(h.len());
+            for (i, v) in h.iter().enumerate() {
+                out.push(v.as_f64().ok_or_else(|| {
+                    format!(
+                        "{} must be a number",
+                        scope.key_ctx_idx(hk, i)
+                    )
+                })?);
+            }
+            out
+        }
+    };
+    if holds.len() > arr.len() {
+        return Err(format!(
+            "{} has {} entries for {} targets",
+            scope.key_ctx(hk),
+            holds.len(),
+            arr.len()
+        ));
+    }
+    // strict: a dropped entry would shift the target/hold pairing (or
+    // leave an empty ramp) without any diagnostic
+    let mut ramp = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let target = v.as_u64().ok_or_else(|| {
+            format!(
+                "{} must be a non-negative integer",
+                scope.key_ctx_idx(tk, i)
+            )
+        })?;
+        ramp.push(RampStep {
+            target: spec_u32(target, &scope.key_ctx_idx(tk, i))?,
+            hold_s: spec_seconds(
+                holds.get(i).copied().unwrap_or(2.0),
+                DAY,
+                &scope.key_ctx_idx(hk, i),
+            )?,
+        });
+    }
+    if ramp.is_empty() {
+        return Err(format!("{} must not be empty", scope.key_ctx(tk)));
+    }
+    Ok(Some(ramp))
+}
+
+/// Checkpoint trio, shared decision table
+/// ([`CheckpointPolicy::from_knobs`]).
+fn resolve_checkpoint(
+    doc: &Json,
+    scope: &Scope,
+) -> Result<Option<CheckpointPolicy>, String> {
+    let disabled = get_bool(doc, scope, "checkpoint_disabled")? == Some(true);
+    let every = get_u64(doc, scope, "checkpoint_every_s")?;
+    let overhead = get_u64(doc, scope, "checkpoint_resume_overhead_s")?;
+    CheckpointPolicy::from_knobs(
+        disabled,
+        every,
+        overhead,
+        &scope.table_ctx("checkpoint"),
+    )
+}
+
+/// Resolve a scenario `policy` name.  The campaign `[policy]` table
+/// speaks a different dialect (mode + explicit weights) and keeps its
+/// bespoke parser in [`apply_campaign_toml`].
+fn resolve_policy_name(
+    doc: &Json,
+    scope: &Scope,
+) -> Result<Option<PolicyMode>, String> {
+    let k = knob("policy");
+    match scope.get(doc, k) {
+        None => Ok(None),
+        Some(v) => {
+            let name = v.as_str().ok_or_else(|| {
+                format!("{} must be a string", scope.key_ctx(k))
+            })?;
+            policy_from_str(name).map(Some)
+        }
+    }
+}
+
+/// Named provider-split policies for scenario specs.
+pub fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
+    match s {
+        "paper" | "azure-favored" => Ok(PolicyMode::Fixed(ProviderWeights {
+            aws: 0.15,
+            gcp: 0.15,
+            azure: 0.70,
+        })),
+        "uniform" => Ok(PolicyMode::Fixed(ProviderWeights {
+            aws: 1.0 / 3.0,
+            gcp: 1.0 / 3.0,
+            azure: 1.0 / 3.0,
+        })),
+        "adaptive" => Ok(PolicyMode::Adaptive),
+        "risk-aware" => Ok(PolicyMode::RiskAware),
+        other => Err(format!("unknown policy '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// the two parse paths
+// ---------------------------------------------------------------------
+
+/// Parse one `[scenario.<name>]` table (or JSON object) into a
+/// [`ScenarioConfig`].  The key whitelist, every scalar parse and
+/// every group resolution derive from [`KNOBS`]; anything not
+/// registered is a typo, and a typo'd override would otherwise run as
+/// a silent copy of the baseline — fatal for a tool whose rows are
+/// meant to be citable.
+pub fn parse_scenario(
+    name: &str,
+    body: &Json,
+) -> Result<ScenarioConfig, String> {
+    let table = body
+        .as_obj()
+        .ok_or_else(|| format!("[scenario.{name}] is not a table"))?;
+    for key in table.keys() {
+        if lookup(key).is_none() {
+            return Err(format!(
+                "[scenario.{name}] has unknown key '{key}'"
+            ));
+        }
+    }
+    let scope = Scope::Scenario(name);
+    let mut s = ScenarioConfig::named(name);
+    for k in &KNOBS {
+        if let Apply::Scalar { scenario: set, .. } = &k.apply {
+            if let Some(v) = scope.get(body, k) {
+                let ctx = scope.key_ctx(k);
+                let val = fetch(k.kind, v, &ctx)?;
+                set(&mut s, &val, &ctx)?;
+            }
+        }
+    }
+    if let Some(nat) = resolve_nat(body, &scope)? {
+        s.nat_override = Some(nat);
+    }
+    // scenario precedence: disabled first, an explicit reschedule wins
+    let (outage_off, outage_spec) = resolve_outage(body, &scope)?;
+    if outage_off {
+        s.outage = Some(None);
+    }
+    if let Some(spec) = outage_spec {
+        s.outage = Some(Some(spec));
+    }
+    if let Some(ramp) = resolve_ramp(body, &scope)? {
+        s.ramp = Some(ramp);
+    }
+    if let Some(policy) = resolve_policy_name(body, &scope)? {
+        s.policy = Some(policy);
+    }
+    s.checkpoint = resolve_checkpoint(body, &scope)?;
+    Ok(s)
+}
+
+/// Apply a campaign TOML document onto a [`CampaignConfig`]: registry
+/// scalars + group resolvers for the registered knobs, then the
+/// campaign-only tables (`[engine]`, budget shaping, the `[policy]`
+/// mode/weights dialect).  Strict on values: a present-but-mistyped
+/// key is an error, never a silent no-op (the server feeds untrusted
+/// `[base]` tables through here).
+pub(crate) fn apply_campaign_toml(
+    c: &mut CampaignConfig,
+    doc: &Json,
+) -> Result<(), String> {
+    let scope = Scope::Campaign;
+    for k in &KNOBS {
+        if let Apply::Scalar { campaign: set, .. } = &k.apply {
+            if let Some(v) = scope.get(doc, k) {
+                let ctx = scope.key_ctx(k);
+                let val = fetch(k.kind, v, &ctx)?;
+                set(c, &val, &ctx)?;
+            }
+        }
+    }
+    // [engine]: campaign-only wall-time knobs, deliberately outside
+    // the registry (they never split the cache key and are not part
+    // of the scenario surface)
+    if let Some(v) = want_u64(doc, &["engine", "threads"])? {
+        c.engine.threads = u32::try_from(v)
+            .map_err(|_| format!("'engine.threads' {v} is out of range"))?;
+    }
+    if let Some(v) = want_u64(doc, &["engine", "bunch"])? {
+        if v == 0 {
+            return Err("'engine.bunch' must be >= 1".into());
+        }
+        c.engine.bunch = u32::try_from(v)
+            .map_err(|_| format!("'engine.bunch' {v} is out of range"))?;
+    }
+    if let Some(v) = want_str(doc, &["engine", "simd"])? {
+        c.engine.simd = SimdMode::parse(v).ok_or_else(|| {
+            format!("'engine.simd' must be \"off\" or \"lanes\", got {v:?}")
+        })?;
+    }
+    if let Some(policy) = resolve_checkpoint(doc, &scope)? {
+        c.checkpoint = policy;
+    }
+    if let Some(nat) = resolve_nat(doc, &scope)? {
+        c.nat_override = nat;
+    }
+    // campaign-only budget shaping
+    if let Some(v) = want_f64(doc, &["budget", "overhead_fraction"])? {
+        c.overhead_fraction = v;
+    }
+    if let Some(arr) = doc.get_path(&["budget", "alerts"]).map(|v| {
+        v.as_arr()
+            .ok_or_else(|| "'budget.alerts' must be an array".to_string())
+    }) {
+        let arr = arr?;
+        let mut alerts = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            alerts.push(v.as_f64().ok_or_else(|| {
+                format!("'budget.alerts[{i}]' must be a number")
+            })?);
+        }
+        c.alert_thresholds = alerts;
+    }
+    if let Some(ramp) = resolve_ramp(doc, &scope)? {
+        c.ramp = ramp;
+    }
+    // campaign precedence: a reschedule applies first, disabled wins
+    let (outage_off, outage_spec) = resolve_outage(doc, &scope)?;
+    if let Some(spec) = outage_spec {
+        c.outage = Some(spec);
+    }
+    if outage_off {
+        c.outage = None;
+    }
+    // [policy]: the campaign dialect (mode + explicit aws/gcp/azure
+    // weights) — relational enough to stay bespoke
+    let weights = match (
+        want_f64(doc, &["policy", "aws"])?,
+        want_f64(doc, &["policy", "gcp"])?,
+        want_f64(doc, &["policy", "azure"])?,
+    ) {
+        (Some(aws), Some(gcp), Some(azure)) => {
+            Some(ProviderWeights { aws, gcp, azure })
+        }
+        (None, None, None) => None,
+        _ => {
+            return Err("[policy] weights need all three of \
+                        aws/gcp/azure"
+                .into())
+        }
+    };
+    if let Some(mode) = doc.get_path(&["policy", "mode"]) {
+        let mode = mode
+            .as_str()
+            .ok_or_else(|| "'policy.mode' must be a string".to_string())?;
+        c.policy = match mode {
+            "adaptive" | "risk-aware" if weights.is_some() => {
+                return Err(format!(
+                    "policy.mode = \"{mode}\" conflicts with fixed \
+                     aws/gcp/azure weights"
+                ))
+            }
+            "adaptive" => PolicyMode::Adaptive,
+            "risk-aware" => PolicyMode::RiskAware,
+            // mode = "fixed" must actually pin a fixed policy: take
+            // this doc's weights, or keep already-fixed weights — but
+            // never let it silently leave a non-fixed policy in place
+            "fixed" => match (weights, c.policy) {
+                (Some(w), _) => PolicyMode::Fixed(w),
+                (None, fixed @ PolicyMode::Fixed(_)) => fixed,
+                (None, _) => {
+                    return Err("policy.mode = \"fixed\" needs \
+                                aws/gcp/azure weights (current \
+                                policy is not fixed)"
+                        .into())
+                }
+            },
+            other => return Err(format!("unknown policy mode '{other}'")),
+        };
+    } else if let Some(w) = weights {
+        c.policy = PolicyMode::Fixed(w);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// strict nested-path fetch helpers (campaign TOML + [server]/[fleet]/
+// [ops] tables)
+// ---------------------------------------------------------------------
+
+/// Fetch `path` as a u64 or error; absent keys are `Ok(None)`.  Built
+/// on `util::json::require_*` so the strict-value contract (mistyped
+/// values error, never silently no-op) has one implementation shared
+/// with the scenario-spec parser.
+pub(crate) fn want_u64(
+    doc: &Json,
+    path: &[&str],
+) -> Result<Option<u64>, String> {
+    doc.get_path(path)
+        .map(|v| require_u64(v, &format!("'{}'", path.join("."))))
+        .transpose()
+}
+
+pub(crate) fn want_f64(
+    doc: &Json,
+    path: &[&str],
+) -> Result<Option<f64>, String> {
+    doc.get_path(path)
+        .map(|v| require_f64(v, &format!("'{}'", path.join("."))))
+        .transpose()
+}
+
+pub(crate) fn want_str<'a>(
+    doc: &'a Json,
+    path: &[&str],
+) -> Result<Option<&'a str>, String> {
+    doc.get_path(path)
+        .map(|v| {
+            v.as_str().ok_or_else(|| {
+                format!("'{}' must be a string", path.join("."))
+            })
+        })
+        .transpose()
+}
+
+// ---------------------------------------------------------------------
+// renderings (the `icecloud knobs` subcommand and the pinned docs)
+// ---------------------------------------------------------------------
+
+/// Plain-text table for `icecloud knobs`.
+pub fn render_table() -> String {
+    let name_w = KNOBS.iter().map(|k| k.name.len()).max().unwrap_or(4);
+    let path_w = KNOBS
+        .iter()
+        .map(|k| k.toml_path.join(".").len())
+        .max()
+        .unwrap_or(4);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<name_w$}  {:<path_w$}  {:<12} {:<6} {:<17} description\n",
+        "knob", "campaign TOML", "type", "grid", "default"
+    ));
+    for k in &KNOBS {
+        out.push_str(&format!(
+            "{:<name_w$}  {:<path_w$}  {:<12} {:<6} {:<17} {}\n",
+            k.name,
+            k.toml_path.join("."),
+            k.kind.label(),
+            if k.grid_axis { "yes" } else { "no" },
+            k.default_label,
+            k.doc,
+        ));
+    }
+    out
+}
+
+/// Markdown table for `icecloud knobs --format markdown`; the README
+/// knob table is pinned byte-for-byte against this rendering.
+pub fn render_markdown() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| knob | campaign TOML | type | default | grid axis | description |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|\n");
+    for k in &KNOBS {
+        out.push_str(&format!(
+            "| `{}` | `{}` | {} | {} | {} | {} |\n",
+            k.name,
+            k.toml_path.join("."),
+            k.kind.label(),
+            k.default_label,
+            if k.grid_axis { "yes" } else { "no" },
+            k.doc,
+        ));
+    }
+    out
+}
+
+/// JSON rendering for `icecloud knobs --format json`.
+pub fn render_json() -> Json {
+    let rows = KNOBS
+        .iter()
+        .map(|k| {
+            let mut o = Json::obj();
+            o.set("name", Json::from(k.name));
+            o.set("toml_path", Json::from(k.toml_path.join(".").as_str()));
+            o.set("type", Json::from(k.kind.label()));
+            o.set("grid_axis", Json::Bool(k.grid_axis));
+            o.set("default", Json::from(k.default_label));
+            o.set("doc", Json::from(k.doc));
+            o.set("sample", Json::from(k.sample));
+            o
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    #[test]
+    fn registry_names_and_paths_are_unique() {
+        let mut names: Vec<&str> = KNOBS.iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), KNOBS.len(), "duplicate knob name");
+        let mut paths: Vec<String> =
+            KNOBS.iter().map(|k| k.toml_path.join(".")).collect();
+        paths.sort_unstable();
+        paths.dedup();
+        assert_eq!(paths.len(), KNOBS.len(), "duplicate TOML path");
+    }
+
+    #[test]
+    fn only_array_knobs_are_grid_ineligible() {
+        for k in &KNOBS {
+            let is_array = matches!(
+                k.kind,
+                KnobKind::U32Array | KnobKind::F64Array
+            );
+            assert_eq!(
+                k.grid_axis, !is_array,
+                "knob '{}' grid eligibility must follow its kind",
+                k.name
+            );
+        }
+    }
+
+    #[test]
+    fn error_context_shape_is_pinned() {
+        let b = lookup("budget_usd").unwrap();
+        assert_eq!(
+            Scope::Scenario("x").key_ctx(b),
+            "[scenario.x] 'budget_usd'"
+        );
+        assert_eq!(Scope::Campaign.key_ctx(b), "'budget.total_usd'");
+        let h = lookup("ramp_hold_days").unwrap();
+        assert_eq!(
+            Scope::Scenario("x").key_ctx_idx(h, 1),
+            "[scenario.x] 'ramp_hold_days[1]'"
+        );
+        assert_eq!(Scope::Campaign.key_ctx_idx(h, 1), "'ramp.hold_days[1]'");
+        assert_eq!(
+            Scope::Scenario("x").table_ctx("checkpoint"),
+            "[scenario.x]"
+        );
+        assert_eq!(Scope::Campaign.table_ctx("checkpoint"), "[checkpoint]");
+    }
+
+    #[test]
+    fn both_parse_paths_emit_the_shared_context_shape() {
+        // scenario spelling
+        let doc = toml::parse("budget_usd = \"x\"").unwrap();
+        let err = parse_scenario("a", &doc).unwrap_err();
+        assert_eq!(err, "[scenario.a] 'budget_usd' must be a number");
+        // campaign spelling, same knob, same formatter
+        let doc = toml::parse("[budget]\ntotal_usd = \"x\"").unwrap();
+        let mut c = CampaignConfig::default();
+        let err = apply_campaign_toml(&mut c, &doc).unwrap_err();
+        assert_eq!(err, "'budget.total_usd' must be a number");
+    }
+
+    #[test]
+    fn policy_names_resolve() {
+        assert_eq!(policy_from_str("adaptive").unwrap(), PolicyMode::Adaptive);
+        assert_eq!(
+            policy_from_str("risk-aware").unwrap(),
+            PolicyMode::RiskAware
+        );
+        match policy_from_str("uniform").unwrap() {
+            PolicyMode::Fixed(w) => assert!((w.aws - w.azure).abs() < 1e-12),
+            _ => panic!(),
+        }
+        match policy_from_str("paper").unwrap() {
+            PolicyMode::Fixed(w) => assert!(w.azure > w.aws),
+            _ => panic!(),
+        }
+        assert!(policy_from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn new_axis_values_validate_in_both_scopes() {
+        // gpu_slots_per_instance = 0 is a meaningless carve-up
+        let doc = toml::parse("gpu_slots_per_instance = 0").unwrap();
+        assert!(parse_scenario("a", &doc).is_err());
+        let mut c = CampaignConfig::default();
+        assert!(apply_campaign_toml(&mut c, &doc).is_err());
+        // negative checkpoint size, non-positive bandwidth
+        for bad in [
+            "checkpoint_size_gb = -1.0",
+            "checkpoint_transfer_mbps = 0.0",
+            "checkpoint_transfer_mbps = -5.0",
+        ] {
+            let doc = toml::parse(bad).unwrap();
+            assert!(parse_scenario("a", &doc).is_err(), "{bad}");
+        }
+        let mut c = CampaignConfig::default();
+        let doc =
+            toml::parse("[checkpoint]\nsize_gb = -1.0\nevery_s = 900")
+                .unwrap();
+        assert!(apply_campaign_toml(&mut c, &doc).is_err());
+        // valid values land in both targets
+        let doc = toml::parse(
+            "gpu_slots_per_instance = 4\n\
+             checkpoint_size_gb = 2.5\n\
+             checkpoint_transfer_mbps = 500.0",
+        )
+        .unwrap();
+        let s = parse_scenario("a", &doc).unwrap();
+        assert_eq!(s.gpu_slots_per_instance, Some(4));
+        assert_eq!(s.checkpoint_size_gb, Some(2.5));
+        assert_eq!(s.checkpoint_transfer_mbps, Some(500.0));
+        let mut c = CampaignConfig::default();
+        let doc = toml::parse(
+            "gpu_slots_per_instance = 4\n\n\
+             [checkpoint]\nevery_s = 900\nsize_gb = 2.5\n\
+             transfer_mbps = 500.0",
+        )
+        .unwrap();
+        apply_campaign_toml(&mut c, &doc).unwrap();
+        assert_eq!(c.gpu_slots_per_instance, 4);
+        assert_eq!(c.checkpoint_size_gb, 2.5);
+        assert_eq!(c.checkpoint_transfer_mbps, 500.0);
+    }
+
+    #[test]
+    fn renderings_cover_every_knob() {
+        let table = render_table();
+        let md = render_markdown();
+        let json = render_json().to_string_compact();
+        for k in &KNOBS {
+            assert!(table.contains(k.name), "table missing {}", k.name);
+            assert!(
+                md.contains(&format!("`{}`", k.name)),
+                "markdown missing {}",
+                k.name
+            );
+            assert!(
+                json.contains(&format!("\"{}\"", k.name)),
+                "json missing {}",
+                k.name
+            );
+        }
+    }
+
+    #[test]
+    fn readme_knob_table_matches_the_registry() {
+        let readme = include_str!("../../../README.md");
+        assert!(
+            readme.contains(&render_markdown()),
+            "README knob table drifted from the registry; paste the \
+             output of `icecloud knobs --format markdown` back in"
+        );
+    }
+
+    #[test]
+    fn matrix_module_doc_names_every_knob() {
+        let src = include_str!("../sweep/matrix.rs");
+        let doc: String = src
+            .lines()
+            .take_while(|l| l.starts_with("//!"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        for k in &KNOBS {
+            assert!(
+                doc.contains(&format!("`{}`", k.name)),
+                "sweep/matrix.rs module doc is missing `{}`; keep its \
+                 key list in sync with `icecloud knobs`",
+                k.name
+            );
+        }
+    }
+}

@@ -1,0 +1,751 @@
+//! The scenario/campaign configuration surface: every knob a spec
+//! file, a `[scenario.<name>]` table or a `[grid]` axis can touch,
+//! plus its canonical (cache-key) serialization.
+//!
+//! Parsing is registry-driven: the per-knob table lives in
+//! [`super::registry`], and [`CampaignConfig::apply_toml`] delegates
+//! to it.  This module owns the *types* (RampStep, OutageSpec,
+//! CheckpointPolicy, NatOverride, CampaignConfig), the shared value
+//! validators ([`spec_seconds`], [`spec_u32`]) and the canonical JSON
+//! round-trip whose bytes are pinned by `tests/golden_canonical.rs`.
+
+use super::engine::{EngineConfig, RealComputeConfig};
+use crate::sim::{SimTime, DAY, HOUR, MINUTE};
+use crate::util::json::{require_f64, require_u64, Json};
+use crate::util::toml;
+use crate::workload::{GeneratorConfig, OnPremConfig};
+/// One step of the operators' ramp plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampStep {
+    /// Desired total cloud GPUs during this step.
+    pub target: u32,
+    /// How long to hold before advancing.
+    pub hold_s: SimTime,
+}
+
+impl RampStep {
+    /// Stable serialization for cache keying (see
+    /// [`CampaignConfig::canonical_json`]).
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("target", Json::from(self.target as u64));
+        o.set("hold_s", Json::from(self.hold_s));
+        o
+    }
+}
+
+/// A scheduled network outage of the provider hosting the CE.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutageSpec {
+    pub at_s: SimTime,
+    pub duration_s: SimTime,
+}
+
+impl OutageSpec {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("at_s", Json::from(self.at_s));
+        o.set("duration_s", Json::from(self.duration_s));
+        o
+    }
+}
+
+/// Provider preference weights (aws, gcp, azure order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProviderWeights {
+    pub aws: f64,
+    pub gcp: f64,
+    pub azure: f64,
+}
+
+/// Target distribution policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyMode {
+    /// Fixed provider weights (the paper's Azure-favoring choice).
+    Fixed(ProviderWeights),
+    /// Adapt weights to observed price and preemption rates.
+    Adaptive,
+    /// Region-level risk pricing: each region's share of the ramp
+    /// target is proportional to its market depth discounted by price
+    /// and its *observed* reclaim+churn rate.  The paper's
+    /// Azure-favoring becomes an emergent outcome instead of a
+    /// hardcoded weight vector — see `coordinator::policy`.
+    RiskAware,
+}
+
+impl PolicyMode {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            PolicyMode::Adaptive => Json::from("adaptive"),
+            PolicyMode::RiskAware => Json::from("risk-aware"),
+            PolicyMode::Fixed(w) => {
+                let mut f = Json::obj();
+                f.set("aws", Json::from(w.aws));
+                f.set("gcp", Json::from(w.gcp));
+                f.set("azure", Json::from(w.azure));
+                let mut o = Json::obj();
+                o.set("fixed", f);
+                o
+            }
+        }
+    }
+}
+
+/// Default checkpoint-restore cost: re-staging input state and
+/// re-priming the GPU before fresh bunches propagate.
+pub const DEFAULT_RESUME_OVERHEAD_S: u64 = 120;
+
+/// Checkpoint/restart policy for IceCube jobs (DESIGN.md §15).
+///
+/// The paper's jobs restarted from scratch on every interruption —
+/// every preempted wall-hour was wasted.  `Interval` models periodic
+/// checkpoints at photon-bunch granularity: a preempted or
+/// outage-killed job requeues at its last checkpoint and pays
+/// `resume_overhead_s` before fresh work proceeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointPolicy {
+    /// Paper baseline: interrupted jobs restart from zero.
+    #[default]
+    None,
+    /// Checkpoint every `every_s` seconds of job progress.
+    Interval {
+        every_s: u64,
+        /// Wall seconds a resumed attempt spends restoring state
+        /// before fresh work proceeds (always badput).
+        resume_overhead_s: u64,
+    },
+}
+
+impl CheckpointPolicy {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            CheckpointPolicy::None => Json::from("none"),
+            CheckpointPolicy::Interval { every_s, resume_overhead_s } => {
+                let mut i = Json::obj();
+                i.set("every_s", Json::from(*every_s));
+                i.set(
+                    "resume_overhead_s",
+                    Json::from(*resume_overhead_s),
+                );
+                let mut o = Json::obj();
+                o.set("interval", i);
+                o
+            }
+        }
+    }
+
+    /// Shared validation of the three checkpoint knobs as they appear
+    /// in campaign TOML (`[checkpoint]`) and sweep-matrix scenario
+    /// tables — one decision table, two parsers.  `Ok(None)` means no
+    /// knob was present (leave the current policy alone); `ctx`
+    /// prefixes error messages.
+    pub fn from_knobs(
+        disabled: bool,
+        every_s: Option<u64>,
+        resume_overhead_s: Option<u64>,
+        ctx: &str,
+    ) -> Result<Option<CheckpointPolicy>, String> {
+        match (disabled, every_s, resume_overhead_s) {
+            (true, None, None) => Ok(Some(CheckpointPolicy::None)),
+            (true, _, _) => Err(format!(
+                "{ctx} sets the disabled knob next to interval knobs; \
+                 pick one"
+            )),
+            (false, Some(0), _) => Err(format!(
+                "{ctx} checkpoint interval must be >= 1 second"
+            )),
+            (false, Some(every_s), overhead) => {
+                Ok(Some(CheckpointPolicy::Interval {
+                    every_s,
+                    resume_overhead_s: overhead
+                        .unwrap_or(DEFAULT_RESUME_OVERHEAD_S),
+                }))
+            }
+            (false, None, Some(_)) => Err(format!(
+                "{ctx} resume overhead needs a checkpoint interval"
+            )),
+            (false, None, None) => Ok(None),
+        }
+    }
+
+    /// Restore cost charged at the start of a resumed attempt.
+    pub fn resume_overhead_s(&self) -> u64 {
+        match self {
+            CheckpointPolicy::None => 0,
+            CheckpointPolicy::Interval { resume_overhead_s, .. } => {
+                *resume_overhead_s
+            }
+        }
+    }
+
+    /// Largest checkpointed progress not exceeding `progress_s`.
+    pub fn salvageable(&self, progress_s: u64) -> u64 {
+        match self {
+            CheckpointPolicy::None => 0,
+            CheckpointPolicy::Interval { every_s, .. } => {
+                crate::workload::icecube::salvageable_progress(
+                    progress_s, *every_s,
+                )
+            }
+        }
+    }
+}
+
+/// NAT behaviour override applied to every cloud region (scenario knob).
+///
+/// The paper's §IV incident hinges on Azure's default 4-minute NAT idle
+/// timeout; sweeps use this to ask "what if the infrastructure had been
+/// different" instead of only "what if our keepalive had been different".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NatOverride {
+    /// Keep each provider's own NAT profile (Azure: 240 s idle timeout).
+    #[default]
+    ProviderDefault,
+    /// Force an idle timeout of this many seconds on every region.
+    IdleTimeout(u64),
+    /// No NAT idle expiry anywhere (the fixed-infrastructure ablation).
+    Disabled,
+}
+
+impl NatOverride {
+    /// Stable serialization for cache keying.
+    pub fn canonical_json(&self) -> Json {
+        match self {
+            NatOverride::ProviderDefault => Json::from("provider-default"),
+            NatOverride::Disabled => Json::from("disabled"),
+            NatOverride::IdleTimeout(t) => {
+                let mut o = Json::obj();
+                o.set("idle_timeout_s", Json::from(*t));
+                o
+            }
+        }
+    }
+}
+
+/// Everything the campaign runner needs.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub seed: u64,
+    pub duration_s: SimTime,
+    pub tick_s: u64,
+    pub sample_every_s: u64,
+    /// Group/ledger/target reconciliation period.
+    pub control_period_s: u64,
+    pub negotiation_period_s: u64,
+
+    pub budget_usd: f64,
+    pub alert_thresholds: Vec<f64>,
+    /// Non-instance costs (egress, disks, the CE VM) as a fraction of
+    /// instance spend — the gap between GPU-hours x price and the paper's
+    /// "all included" $58k.
+    pub overhead_fraction: f64,
+    /// Stop provisioning when remaining budget falls below this fraction.
+    pub budget_reserve_fraction: f64,
+    /// Resume after an outage at `post_outage_target` if the remaining
+    /// budget fraction is at or below this (the paper's 1k-GPU decision).
+    pub low_budget_resume_fraction: f64,
+    pub post_outage_target: u32,
+
+    /// Cloud worker keepalive (60 s = the post-incident tuned value;
+    /// set 300 to re-live §IV).
+    pub keepalive_s: u64,
+    /// Multiplier on every region's baseline churn-preemption hazard
+    /// (1.0 = the calibrated defaults; scenario sweeps raise it to model
+    /// busier spot markets).
+    pub preempt_multiplier: f64,
+    /// NAT behaviour override applied to every region.
+    pub nat_override: NatOverride,
+    /// Job checkpoint/restart policy (None = the paper's
+    /// restart-from-scratch baseline).
+    pub checkpoint: CheckpointPolicy,
+    /// GPU slots carved from each cloud instance (arXiv:2205.09232's
+    /// fractional-GPU accounting): busy-hours are booked per *slot*,
+    /// so N slots sharing one instance each accrue 1/N of its hours.
+    /// 1 = the paper's whole-GPU baseline.
+    pub gpu_slots_per_instance: u32,
+    /// Checkpoint image size in GB; restores pay a network transfer on
+    /// top of `resume_overhead_s` (see
+    /// [`Self::checkpoint_transfer_s`]).  0 = transfer-free restores.
+    pub checkpoint_size_gb: f64,
+    /// Bandwidth available for checkpoint restores, megabit/s.
+    pub checkpoint_transfer_mbps: f64,
+
+    pub ramp: Vec<RampStep>,
+    pub outage: Option<OutageSpec>,
+    pub policy: PolicyMode,
+
+    pub onprem: OnPremConfig,
+    pub generator: GeneratorConfig,
+    /// fp32 FLOPs per photon bunch (overridden from artifact metadata
+    /// when real compute is enabled).
+    pub flops_per_bunch: f64,
+    pub real_compute: Option<RealComputeConfig>,
+    /// Batched photon-engine execution knobs (wall time only; never
+    /// part of the cache key).
+    pub engine: EngineConfig,
+}
+
+impl Default for CampaignConfig {
+    /// The paper's two-week exercise.
+    fn default() -> Self {
+        CampaignConfig {
+            seed: 20210921,
+            duration_s: 14 * DAY,
+            tick_s: MINUTE,
+            sample_every_s: 10 * MINUTE,
+            control_period_s: 5 * MINUTE,
+            negotiation_period_s: 5 * MINUTE,
+            budget_usd: 58_000.0,
+            alert_thresholds: vec![0.75, 0.5, 0.25, 0.1],
+            overhead_fraction: 0.18,
+            budget_reserve_fraction: 0.02,
+            low_budget_resume_fraction: 0.25,
+            post_outage_target: 1000,
+            keepalive_s: 60,
+            preempt_multiplier: 1.0,
+            nat_override: NatOverride::ProviderDefault,
+            checkpoint: CheckpointPolicy::None,
+            gpu_slots_per_instance: 1,
+            checkpoint_size_gb: 0.0,
+            checkpoint_transfer_mbps: 1000.0,
+            ramp: vec![
+                // initial validation with a small fleet, then the paper's
+                // 400 / 900 / 1.2k / 1.6k / 2k staircase
+                RampStep { target: 50, hold_s: DAY },
+                RampStep { target: 400, hold_s: 2 * DAY },
+                RampStep { target: 900, hold_s: 2 * DAY },
+                RampStep { target: 1200, hold_s: 2 * DAY },
+                RampStep { target: 1600, hold_s: 2 * DAY },
+                RampStep { target: 2000, hold_s: 30 * DAY }, // until outage
+            ],
+            outage: Some(OutageSpec {
+                at_s: 11 * DAY + 6 * HOUR,
+                duration_s: 2 * HOUR,
+            }),
+            policy: PolicyMode::Fixed(ProviderWeights {
+                aws: 0.15,
+                gcp: 0.15,
+                azure: 0.70,
+            }),
+            onprem: OnPremConfig::default(),
+            generator: GeneratorConfig::default(),
+            flops_per_bunch: 1.2e10,
+            real_compute: None,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// Convert a spec-file duration expressed in `unit_s`-second units
+/// (days, hours) to whole sim-seconds.  `f64 as u64` saturates NaN and
+/// negatives to 0 and +inf to `u64::MAX`, so `duration_days = -1.0`
+/// would replay a zero-length campaign under a citable name; reject
+/// everything the cast would corrupt instead.  Shared by
+/// [`CampaignConfig::apply_toml`], the scenario-spec parser
+/// (`sweep::matrix`) and the `--days` CLI override.
+pub fn spec_seconds(
+    v: f64,
+    unit_s: u64,
+    ctx: &str,
+) -> Result<u64, String> {
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!(
+            "{ctx} must be a finite non-negative number (got {v})"
+        ));
+    }
+    let s = v * unit_s as f64;
+    if s >= u64::MAX as f64 {
+        return Err(format!("{ctx} ({v}) is out of range"));
+    }
+    Ok(s as u64)
+}
+
+/// Range-check a spec-file integer destined for a `u32` field (ramp
+/// targets, on-prem slots).  `u64 as u32` truncates modulo 2^32, so
+/// `ramp_targets = [4294967297]` would silently "ramp" to 1 GPU.
+pub fn spec_u32(v: u64, ctx: &str) -> Result<u32, String> {
+    u32::try_from(v).map_err(|_| {
+        format!("{ctx} ({v}) is out of range (max {})", u32::MAX)
+    })
+}
+
+impl CampaignConfig {
+    /// Apply a parsed TOML document on top of this config.  The knob
+    /// table, the typed fetch/validation and the group resolvers all
+    /// live in [`super::registry`]; see [`super::registry::KNOBS`].
+    /// Strict on values: a present-but-mistyped key is an error, never
+    /// a silent no-op (the server feeds untrusted `[base]` tables
+    /// through here).
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        super::registry::apply_campaign_toml(self, doc)
+    }
+
+    /// Seconds to pull a checkpoint image back over the network on
+    /// resume: `size_gb` gigabytes at `transfer_mbps` megabit/s
+    /// (PNRP 2023 / arXiv:2308.07999 model — restore cost scales with
+    /// image size, not with lost compute).  0 when the image is free
+    /// to move (size 0) or the bandwidth model is degenerate.
+    pub fn checkpoint_transfer_s(&self) -> u64 {
+        let s = self.checkpoint_size_gb * 8000.0
+            / self.checkpoint_transfer_mbps;
+        if !s.is_finite() || s <= 0.0 {
+            return 0;
+        }
+        s.ceil() as u64
+    }
+
+    /// The checkpoint policy the simulator should actually run:
+    /// [`Self::checkpoint`] with the network transfer time folded into
+    /// the per-resume overhead.  This is the single hook through which
+    /// `checkpoint_size_gb`/`checkpoint_transfer_mbps` reach the
+    /// goodput ledger — `condor::schedd` charges `resume_overhead_s`
+    /// into wasted hours on every resumed attempt.
+    pub fn effective_checkpoint(&self) -> CheckpointPolicy {
+        let transfer_s = self.checkpoint_transfer_s();
+        match self.checkpoint {
+            CheckpointPolicy::Interval {
+                every_s,
+                resume_overhead_s,
+            } if transfer_s > 0 => CheckpointPolicy::Interval {
+                every_s,
+                resume_overhead_s: resume_overhead_s
+                    .saturating_add(transfer_s),
+            },
+            other => other,
+        }
+    }
+
+    /// Canonical serialization: every semantically-relevant field, in a
+    /// deterministic key order (`Json::Obj` is a `BTreeMap`), with
+    /// deterministic number formatting (`util::json::write_num`).  Two
+    /// configs produce the same string iff they replay the same
+    /// campaign, which is what makes the server's content-addressed
+    /// result cache sound — see `crate::server::cache`.
+    ///
+    /// Adding a field to `CampaignConfig` that affects the replay MUST
+    /// be mirrored here; the version tag lets the cache key change
+    /// shape without aliasing old keys.  [`EngineConfig`] is the one
+    /// deliberate omission: the batched engine is bit-identical across
+    /// its knobs, so they must NOT split the cache.
+    pub fn canonical_json(&self) -> Json {
+        let mut o = Json::obj();
+        // v2: adds the `checkpoint` policy (PR 5); the bump keeps every
+        // pre-checkpoint cache key from aliasing a v2 key
+        o.set("v", Json::from(2u64));
+        o.set("seed", Json::from(self.seed));
+        o.set("duration_s", Json::from(self.duration_s));
+        o.set("tick_s", Json::from(self.tick_s));
+        o.set("sample_every_s", Json::from(self.sample_every_s));
+        o.set("control_period_s", Json::from(self.control_period_s));
+        o.set(
+            "negotiation_period_s",
+            Json::from(self.negotiation_period_s),
+        );
+        o.set("budget_usd", Json::from(self.budget_usd));
+        o.set(
+            "alert_thresholds",
+            Json::Arr(
+                self.alert_thresholds
+                    .iter()
+                    .map(|&t| Json::from(t))
+                    .collect(),
+            ),
+        );
+        o.set("overhead_fraction", Json::from(self.overhead_fraction));
+        o.set(
+            "budget_reserve_fraction",
+            Json::from(self.budget_reserve_fraction),
+        );
+        o.set(
+            "low_budget_resume_fraction",
+            Json::from(self.low_budget_resume_fraction),
+        );
+        o.set(
+            "post_outage_target",
+            Json::from(self.post_outage_target as u64),
+        );
+        o.set("keepalive_s", Json::from(self.keepalive_s));
+        o.set(
+            "preempt_multiplier",
+            Json::from(self.preempt_multiplier),
+        );
+        o.set("nat_override", self.nat_override.canonical_json());
+        o.set("checkpoint", self.checkpoint.canonical_json());
+        // PR 10 knobs: emitted only when off their defaults, so every
+        // pre-existing config keeps its exact pre-PR-10 bytes (and
+        // cache key) — registering a knob must never invalidate the
+        // result cache.  `from_canonical_json` mirrors this with a
+        // documented absent-means-default exception to its strictness.
+        if self.gpu_slots_per_instance != 1 {
+            o.set(
+                "gpu_slots_per_instance",
+                Json::from(self.gpu_slots_per_instance as u64),
+            );
+        }
+        if self.checkpoint_size_gb != 0.0 {
+            o.set(
+                "checkpoint_size_gb",
+                Json::from(self.checkpoint_size_gb),
+            );
+        }
+        if self.checkpoint_transfer_mbps != 1000.0 {
+            o.set(
+                "checkpoint_transfer_mbps",
+                Json::from(self.checkpoint_transfer_mbps),
+            );
+        }
+        o.set(
+            "ramp",
+            Json::Arr(self.ramp.iter().map(RampStep::canonical_json).collect()),
+        );
+        o.set(
+            "outage",
+            match &self.outage {
+                None => Json::Null,
+                Some(spec) => spec.canonical_json(),
+            },
+        );
+        o.set("policy", self.policy.canonical_json());
+        let mut onprem = Json::obj();
+        onprem.set("slots", Json::from(self.onprem.slots as u64));
+        onprem.set("keepalive_s", Json::from(self.onprem.keepalive_s));
+        onprem.set("availability", Json::from(self.onprem.availability));
+        o.set("onprem", onprem);
+        let mut generator = Json::obj();
+        generator.set(
+            "backlog_factor",
+            Json::from(self.generator.backlog_factor),
+        );
+        generator.set(
+            "min_backlog",
+            Json::from(self.generator.min_backlog as u64),
+        );
+        generator.set(
+            "request_memory_mb",
+            Json::from(self.generator.request_memory_mb),
+        );
+        let mut runtimes = Json::obj();
+        runtimes.set("median_s", Json::from(self.generator.runtimes.median_s));
+        runtimes.set("sigma", Json::from(self.generator.runtimes.sigma));
+        runtimes.set("min_s", Json::from(self.generator.runtimes.min_s));
+        runtimes.set("max_s", Json::from(self.generator.runtimes.max_s));
+        generator.set("runtimes", runtimes);
+        o.set("generator", generator);
+        o.set("flops_per_bunch", Json::from(self.flops_per_bunch));
+        o.set(
+            "real_compute",
+            match &self.real_compute {
+                None => Json::Null,
+                Some(rc) => {
+                    let mut r = Json::obj();
+                    r.set("variant", Json::from(rc.variant.as_str()));
+                    r.set(
+                        "every_n_completions",
+                        Json::from(rc.every_n_completions),
+                    );
+                    r
+                }
+            },
+        );
+        o
+    }
+
+    /// Inverse of [`canonical_json`](Self::canonical_json):
+    /// reconstruct a replaying config from its canonical form.  This
+    /// is how fleet workers receive their unit of work — the
+    /// coordinator sends the *applied* config's canonical JSON in a
+    /// lease grant, and because the canonical form covers every
+    /// replay-relevant field, the worker's replay is byte-identical to
+    /// the coordinator's.  Strict: a missing or mistyped field is an
+    /// error, never a silent default — a worker replaying a different
+    /// campaign than leased would fail every sha compare.
+    ///
+    /// [`EngineConfig`] is deliberately absent from the canonical form
+    /// (results are engine-thread-invariant), so the worker keeps its
+    /// own engine defaults and clamps its own thread budget.
+    pub fn from_canonical_json(doc: &Json) -> Result<Self, String> {
+        fn canon<'a>(doc: &'a Json, key: &str) -> Result<&'a Json, String> {
+            doc.get(key)
+                .ok_or_else(|| format!("canonical config missing '{key}'"))
+        }
+        fn canon_u64(doc: &Json, key: &str) -> Result<u64, String> {
+            require_u64(canon(doc, key)?, &format!("canonical '{key}'"))
+        }
+        fn canon_f64(doc: &Json, key: &str) -> Result<f64, String> {
+            require_f64(canon(doc, key)?, &format!("canonical '{key}'"))
+        }
+        fn canon_u32(doc: &Json, key: &str) -> Result<u32, String> {
+            let v = canon_u64(doc, key)?;
+            u32::try_from(v)
+                .map_err(|_| format!("canonical '{key}' {v} is out of range"))
+        }
+        fn canon_i64(doc: &Json, key: &str) -> Result<i64, String> {
+            let v = canon_f64(doc, key)?;
+            if v.fract() != 0.0 || !(-9e15..=9e15).contains(&v) {
+                return Err(format!("canonical '{key}' must be an integer"));
+            }
+            Ok(v as i64)
+        }
+
+        let v = canon_u64(doc, "v")?;
+        if v != 2 {
+            return Err(format!("unsupported canonical config version {v}"));
+        }
+        let mut c = CampaignConfig::default();
+        c.seed = canon_u64(doc, "seed")?;
+        c.duration_s = canon_u64(doc, "duration_s")?;
+        c.tick_s = canon_u64(doc, "tick_s")?;
+        c.sample_every_s = canon_u64(doc, "sample_every_s")?;
+        c.control_period_s = canon_u64(doc, "control_period_s")?;
+        c.negotiation_period_s = canon_u64(doc, "negotiation_period_s")?;
+        c.budget_usd = canon_f64(doc, "budget_usd")?;
+        let alerts = canon(doc, "alert_thresholds")?
+            .as_arr()
+            .ok_or("canonical 'alert_thresholds' must be an array")?;
+        c.alert_thresholds = alerts
+            .iter()
+            .map(|a| {
+                a.as_f64().ok_or_else(|| {
+                    "canonical 'alert_thresholds' entries must be numbers"
+                        .to_string()
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        c.overhead_fraction = canon_f64(doc, "overhead_fraction")?;
+        c.budget_reserve_fraction = canon_f64(doc, "budget_reserve_fraction")?;
+        c.low_budget_resume_fraction =
+            canon_f64(doc, "low_budget_resume_fraction")?;
+        c.post_outage_target = canon_u32(doc, "post_outage_target")?;
+        c.keepalive_s = canon_u64(doc, "keepalive_s")?;
+        c.preempt_multiplier = canon_f64(doc, "preempt_multiplier")?;
+        c.nat_override = match canon(doc, "nat_override")? {
+            Json::Str(s) if s == "provider-default" => {
+                NatOverride::ProviderDefault
+            }
+            Json::Str(s) if s == "disabled" => NatOverride::Disabled,
+            v @ Json::Obj(_) => {
+                NatOverride::IdleTimeout(canon_u64(v, "idle_timeout_s")?)
+            }
+            _ => return Err("canonical 'nat_override' is malformed".into()),
+        };
+        c.checkpoint = match canon(doc, "checkpoint")? {
+            Json::Str(s) if s == "none" => CheckpointPolicy::None,
+            v @ Json::Obj(_) => {
+                let i = v
+                    .get("interval")
+                    .ok_or("canonical 'checkpoint' is malformed")?;
+                CheckpointPolicy::Interval {
+                    every_s: canon_u64(i, "every_s")?,
+                    resume_overhead_s: canon_u64(i, "resume_overhead_s")?,
+                }
+            }
+            _ => return Err("canonical 'checkpoint' is malformed".into()),
+        };
+        // default-omitted knobs (see canonical_json): absence means
+        // the default — the one documented exception to the
+        // missing-field-is-an-error rule.  Presence still parses
+        // strictly.
+        if let Some(v) = doc.get("gpu_slots_per_instance") {
+            let v = require_u64(v, "canonical 'gpu_slots_per_instance'")?;
+            c.gpu_slots_per_instance = u32::try_from(v).map_err(|_| {
+                format!("canonical 'gpu_slots_per_instance' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = doc.get("checkpoint_size_gb") {
+            c.checkpoint_size_gb =
+                require_f64(v, "canonical 'checkpoint_size_gb'")?;
+        }
+        if let Some(v) = doc.get("checkpoint_transfer_mbps") {
+            c.checkpoint_transfer_mbps =
+                require_f64(v, "canonical 'checkpoint_transfer_mbps'")?;
+        }
+        let ramp = canon(doc, "ramp")?
+            .as_arr()
+            .ok_or("canonical 'ramp' must be an array")?;
+        c.ramp = ramp
+            .iter()
+            .map(|step| {
+                Ok(RampStep {
+                    target: canon_u32(step, "target")?,
+                    hold_s: canon_u64(step, "hold_s")?,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        c.outage = match canon(doc, "outage")? {
+            Json::Null => None,
+            v => Some(OutageSpec {
+                at_s: canon_u64(v, "at_s")?,
+                duration_s: canon_u64(v, "duration_s")?,
+            }),
+        };
+        c.policy = match canon(doc, "policy")? {
+            Json::Str(s) if s == "adaptive" => PolicyMode::Adaptive,
+            Json::Str(s) if s == "risk-aware" => PolicyMode::RiskAware,
+            v @ Json::Obj(_) => {
+                let f =
+                    v.get("fixed").ok_or("canonical 'policy' is malformed")?;
+                PolicyMode::Fixed(ProviderWeights {
+                    aws: canon_f64(f, "aws")?,
+                    gcp: canon_f64(f, "gcp")?,
+                    azure: canon_f64(f, "azure")?,
+                })
+            }
+            _ => return Err("canonical 'policy' is malformed".into()),
+        };
+        let onprem = canon(doc, "onprem")?;
+        c.onprem.slots = canon_u32(onprem, "slots")?;
+        c.onprem.keepalive_s = canon_u64(onprem, "keepalive_s")?;
+        c.onprem.availability = canon_f64(onprem, "availability")?;
+        let generator = canon(doc, "generator")?;
+        c.generator.backlog_factor = canon_f64(generator, "backlog_factor")?;
+        c.generator.min_backlog = canon_u64(generator, "min_backlog")? as usize;
+        c.generator.request_memory_mb =
+            canon_i64(generator, "request_memory_mb")?;
+        let runtimes = canon(generator, "runtimes")?;
+        c.generator.runtimes.median_s = canon_f64(runtimes, "median_s")?;
+        c.generator.runtimes.sigma = canon_f64(runtimes, "sigma")?;
+        c.generator.runtimes.min_s = canon_u64(runtimes, "min_s")?;
+        c.generator.runtimes.max_s = canon_u64(runtimes, "max_s")?;
+        c.flops_per_bunch = canon_f64(doc, "flops_per_bunch")?;
+        c.real_compute = match canon(doc, "real_compute")? {
+            Json::Null => None,
+            v => Some(RealComputeConfig {
+                variant: v
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .ok_or("canonical 'real_compute.variant' must be a string")?
+                    .to_string(),
+                every_n_completions: canon_u64(v, "every_n_completions")?,
+            }),
+        };
+        Ok(c)
+    }
+
+    /// Build from an already-parsed TOML document over the defaults.
+    pub fn from_toml_doc(doc: &Json) -> Result<Self, String> {
+        let mut cfg = CampaignConfig::default();
+        cfg.apply_toml(doc)?;
+        Ok(cfg)
+    }
+
+    /// Load from a TOML file over the defaults.
+    pub fn from_toml_file(path: &str) -> Result<Self, String> {
+        Self::from_toml_doc(&load_toml_doc(path)?)
+    }
+
+    /// Total ticks in the campaign.
+    pub fn num_ticks(&self) -> u64 {
+        self.duration_s / self.tick_s
+    }
+}
+
+/// Read and parse one TOML config file — the single loading path for
+/// every `--config` consumer (campaign, sweep, serve).
+pub fn load_toml_doc(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    toml::parse(&text).map_err(|e| e.to_string())
+}

@@ -1,0 +1,89 @@
+//! `icecloud serve` knobs (`[server]` table).
+
+use super::registry::want_u64;
+use crate::util::json::Json;
+
+/// `icecloud serve` knobs, read from the same TOML file as the base
+/// campaign (a `[server]` table) with the same strict-value contract:
+/// a present-but-mistyped or out-of-range key is an error, never a
+/// silent no-op.  Deliberately a separate struct from
+/// [`CampaignConfig`]: serving knobs can never affect replay results,
+/// so they must never reach `canonical_json` and the result-cache key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Bounded async-job admission queue (jobs waiting to run); async
+    /// submissions beyond it are shed with `429 + Retry-After`.
+    pub queue_max: u32,
+    /// Async job-runner threads draining the admission queue.
+    pub job_runners: u32,
+    /// Result-cache (memory tier) budget in MiB.
+    pub cache_mb: u64,
+    /// Persistent result-store root; `None` = memory-only.  Durable by
+    /// default: results must survive a restart unless the operator
+    /// explicitly opts out (`store_dir = ""`).
+    pub store_dir: Option<String>,
+    /// How many finished async-job records the job table retains before
+    /// the oldest age out (their cached *results* stay; only the
+    /// `/jobs/<id>` status record is forgotten).
+    pub jobs_keep: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_max: 32,
+            job_runners: 2,
+            cache_mb: 64,
+            store_dir: Some("icecloud-store".to_string()),
+            jobs_keep: 1024,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Apply a `[server]` table from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &Json) -> Result<(), String> {
+        if let Some(v) = want_u64(doc, &["server", "queue_max"])? {
+            if v == 0 {
+                return Err("'server.queue_max' must be >= 1".into());
+            }
+            self.queue_max = u32::try_from(v).map_err(|_| {
+                format!("'server.queue_max' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["server", "job_runners"])? {
+            if v == 0 {
+                return Err("'server.job_runners' must be >= 1".into());
+            }
+            self.job_runners = u32::try_from(v).map_err(|_| {
+                format!("'server.job_runners' {v} is out of range")
+            })?;
+        }
+        if let Some(v) = want_u64(doc, &["server", "cache_mb"])? {
+            if v == 0 {
+                return Err("'server.cache_mb' must be >= 1".into());
+            }
+            self.cache_mb = v;
+        }
+        if let Some(v) = doc.get_path(&["server", "store_dir"]) {
+            let dir = v.as_str().ok_or_else(|| {
+                "'server.store_dir' must be a string".to_string()
+            })?;
+            // the empty string is the explicit "no persistence" spelling
+            self.store_dir = if dir.is_empty() {
+                None
+            } else {
+                Some(dir.to_string())
+            };
+        }
+        if let Some(v) = want_u64(doc, &["server", "jobs_keep"])? {
+            if v == 0 {
+                return Err("'server.jobs_keep' must be >= 1".into());
+            }
+            self.jobs_keep = u32::try_from(v).map_err(|_| {
+                format!("'server.jobs_keep' {v} is out of range")
+            })?;
+        }
+        Ok(())
+    }
+}

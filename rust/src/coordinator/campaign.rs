@@ -51,8 +51,10 @@ impl RealComputeStats {
 
 /// Per-provider settled/unsettled work at campaign end (wall seconds
 /// on cloud slots).  The conservation identity the accounting keeps:
-/// `goodput + badput + inflight == busy_hours × 3600` for every
-/// provider (pinned in `rust/tests/integration_campaign.rs`).
+/// `goodput + badput + inflight == busy_hours × gpu_slots_per_instance
+/// × 3600` for every provider (pinned in
+/// `rust/tests/integration_campaign.rs`; with the default whole-GPU
+/// accounting the slots factor is 1).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ProviderWork {
     pub goodput_s: u64,
@@ -144,9 +146,12 @@ impl Campaign {
             }
         }
         let fleet = CloudSim::new(specs, root.derive("fleet"));
+        // effective_checkpoint folds the checkpoint-image transfer
+        // time (checkpoint_size_gb / checkpoint_transfer_mbps) into
+        // the per-resume overhead the schedd charges as wasted hours
         let mut pool = CondorPool::new()
             .with_negotiation_period(config.negotiation_period_s)
-            .with_checkpoint(config.checkpoint);
+            .with_checkpoint(config.effective_checkpoint());
         let mut onprem_rng = root.derive("onprem");
         let onprem_slots =
             register_onprem(&mut pool, &config.onprem, &mut onprem_rng, 0);
@@ -165,7 +170,8 @@ impl Campaign {
             config.budget_usd,
             &config.alert_thresholds,
         );
-        let meter = BillingMeter::with_overhead(config.overhead_fraction);
+        let meter = BillingMeter::with_overhead(config.overhead_fraction)
+            .with_gpu_slots(config.gpu_slots_per_instance);
 
         let flops_per_bunch = real_exe
             .as_ref()

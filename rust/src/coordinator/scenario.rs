@@ -36,6 +36,14 @@ pub struct ScenarioConfig {
     /// Job checkpoint/restart policy (`CheckpointPolicy::None` forces
     /// the paper's restart-from-scratch baseline over the base's).
     pub checkpoint: Option<CheckpointPolicy>,
+    /// GPU slots carved from each cloud instance (fractional-GPU
+    /// busy-hours accounting, arXiv:2205.09232).
+    pub gpu_slots_per_instance: Option<u32>,
+    /// Checkpoint image size in GB (restore transfer cost,
+    /// arXiv:2308.07999).
+    pub checkpoint_size_gb: Option<f64>,
+    /// Bandwidth for checkpoint restores, megabit/s.
+    pub checkpoint_transfer_mbps: Option<f64>,
 }
 
 impl ScenarioConfig {
@@ -79,6 +87,15 @@ impl ScenarioConfig {
         }
         if let Some(v) = self.checkpoint {
             c.checkpoint = v;
+        }
+        if let Some(v) = self.gpu_slots_per_instance {
+            c.gpu_slots_per_instance = v;
+        }
+        if let Some(v) = self.checkpoint_size_gb {
+            c.checkpoint_size_gb = v;
+        }
+        if let Some(v) = self.checkpoint_transfer_mbps {
+            c.checkpoint_transfer_mbps = v;
         }
         c
     }
@@ -134,6 +151,15 @@ impl ScenarioConfig {
         }
         if let Some(v) = &self.checkpoint {
             o.set("checkpoint", v.canonical_json());
+        }
+        if let Some(v) = self.gpu_slots_per_instance {
+            o.set("gpu_slots_per_instance", Json::from(v as u64));
+        }
+        if let Some(v) = self.checkpoint_size_gb {
+            o.set("checkpoint_size_gb", Json::from(v));
+        }
+        if let Some(v) = self.checkpoint_transfer_mbps {
+            o.set("checkpoint_transfer_mbps", Json::from(v));
         }
         o
     }
@@ -270,6 +296,34 @@ mod tests {
         assert_ne!(on_doc, off_doc);
         assert!(on_doc.contains("\"checkpoint\""), "{on_doc}");
         assert!(on_doc.contains("\"every_s\":1800"), "{on_doc}");
+    }
+
+    #[test]
+    fn new_knob_overrides_apply_and_split_cache_keys() {
+        let base = CampaignConfig::default();
+        let mut s = ScenarioConfig::named("carved");
+        s.gpu_slots_per_instance = Some(4);
+        s.checkpoint_size_gb = Some(2.5);
+        s.checkpoint_transfer_mbps = Some(500.0);
+        let c = s.apply(&base);
+        assert_eq!(c.gpu_slots_per_instance, 4);
+        assert_eq!(c.checkpoint_size_gb, 2.5);
+        assert_eq!(c.checkpoint_transfer_mbps, 500.0);
+        // unset inherits the base defaults
+        let inherit = ScenarioConfig::named("carved").apply(&base);
+        assert_eq!(inherit.gpu_slots_per_instance, 1);
+        assert_eq!(inherit.checkpoint_size_gb, 0.0);
+        // the overrides appear in (and split) the canonical document
+        let doc = s.canonical_json().to_string_compact();
+        assert!(doc.contains("\"gpu_slots_per_instance\":4"), "{doc}");
+        assert!(doc.contains("\"checkpoint_size_gb\":2.5"), "{doc}");
+        assert!(doc.contains("\"checkpoint_transfer_mbps\":500"), "{doc}");
+        assert_ne!(
+            doc,
+            ScenarioConfig::named("carved")
+                .canonical_json()
+                .to_string_compact()
+        );
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! GPU-days/EFLOP-hours, $/EFLOP-hour, stability (preemptions, NAT
 //! drops, goodput) and budget state — plus the CloudBank per-scenario
 //! roll-up and a CSV for external plotting.
+//!
+//! Columns here are *outputs* (metrics of a finished replay); the
+//! sweepable *input* surface — every knob a spec may set — is the
+//! typed registry in `crate::config::registry` (`icecloud knobs`),
+//! so a knob added there flows into these rows with no changes here.
 
 use crate::cloudbank::report;
 use crate::sweep::ScenarioSummary;

@@ -16,6 +16,7 @@
 //!   validate    end-to-end smoke test of the AOT photon artifacts
 //!   parity      dump per-DOM hits/summary for Python-oracle comparison
 //!   info        print artifact + configuration summary
+//!   knobs       print the scenario knob registry (table/json/markdown)
 
 use icecloud::config::{spec_seconds, CampaignConfig};
 use icecloud::coordinator::Campaign;
@@ -54,6 +55,7 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(rest),
         "parity" => cmd_parity(rest),
         "info" => cmd_info(rest),
+        "knobs" => cmd_knobs(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -90,6 +92,8 @@ fn print_usage() {
          \x20 parity      per-DOM hits/summary JSON for oracle comparison \
          (tools/parity_check.py)\n\
          \x20 info        artifact and configuration summary\n\
+         \x20 knobs       scenario knob registry (--format \
+         table|json|markdown)\n\
          \x20 help        this message\n"
     );
 }
@@ -918,5 +922,27 @@ fn cmd_info(_rest: &[String]) -> Result<(), String> {
         cfg.ramp.iter().map(|s| s.target).collect::<Vec<_>>(),
         cfg.outage.map(|o| o.at_s as f64 / 86_400.0)
     );
+    Ok(())
+}
+
+fn cmd_knobs(rest: &[String]) -> Result<(), String> {
+    use icecloud::config::registry;
+    let cmd = Command::new(
+        "knobs",
+        "print the scenario knob registry (the whole sweepable surface)",
+    )
+    .opt("format", "output format: table|json|markdown", Some("table"));
+    let args = cmd.parse(rest)?;
+    match args.get_or("format", "table") {
+        "table" => print!("{}", registry::render_table()),
+        "markdown" => print!("{}", registry::render_markdown()),
+        "json" => println!("{}", registry::render_json().to_string_compact()),
+        other => {
+            return Err(format!(
+                "unknown --format '{other}' (expected table, json or \
+                 markdown)"
+            ))
+        }
+    }
     Ok(())
 }

@@ -553,6 +553,12 @@ fn parse_sweep_query(query: Option<&str>) -> Result<SweepMode, String> {
 /// Parse the request body into `(resolved base, scenarios)`.  JSON and
 /// TOML share the spec shape; the decode path is chosen by
 /// `Content-Type`, falling back to sniffing the first byte.
+///
+/// Knob validation (and therefore every 400 an invalid knob produces)
+/// is owned by the typed registry — `crate::config::registry` via
+/// `sweep::parse_spec_json_with_limit` — with one shared
+/// error-context format; a knob registered there is sweepable over
+/// `POST /sweep` with no changes in this router.
 fn parse_sweep_body(
     base: &CampaignConfig,
     req: &Request,

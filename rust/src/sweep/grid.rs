@@ -2,7 +2,7 @@
 //!
 //! A `[grid]` table declares per-axis value lists over the same
 //! whitelisted scenario keys that `[scenario.<name>]` tables accept
-//! (`super::matrix::SCENARIO_KEYS`):
+//! (the grid-eligible entries of `crate::config::registry::KNOBS`):
 //!
 //! ```toml
 //! [grid]
@@ -21,8 +21,9 @@
 //! Name uniqueness falls out of construction: duplicate values within
 //! an axis are rejected, so no two cells can render the same name.
 //! Axis values must be scalars (the TOML subset has no nested arrays),
-//! which rules out `ramp_targets`/`ramp_hold_days` as axes — those stay
-//! in `[base]` or explicit `[scenario.<name>]` tables.
+//! which rules out the array-valued registry entries
+//! (`ramp_targets`/`ramp_hold_days`, `grid_axis: false`) as axes —
+//! those stay in `[base]` or explicit `[scenario.<name>]` tables.
 //!
 //! Expansion is capped and the cap is checked from the axis lengths
 //! *before* any scenario is materialized, so an oversized grid costs
@@ -59,8 +60,8 @@ pub const HARD_MAX_SCENARIOS: u64 = 1 << 20;
 
 /// Expand a `[grid]` table to its cartesian product of scenarios.
 ///
-/// Each cell is fed through `super::matrix::scenario_from_json`, so
-/// grid values get exactly the same strict validation (type checks,
+/// Each cell is fed through `crate::config::registry::parse_scenario`,
+/// so grid values get exactly the same strict validation (type checks,
 /// range checks, conflicting-key checks) as hand-written scenarios.
 ///
 /// `scenario_limit` is the caller's own scenario budget (the server
@@ -92,15 +93,18 @@ pub fn expand(
             }
             continue;
         }
-        if key == "ramp_targets" || key == "ramp_hold_days" {
-            return Err(format!(
-                "[grid] cannot sweep '{key}': array-valued axes are \
-                 not supported; set it in [base] or an explicit \
-                 [scenario.<name>] table"
-            ));
-        }
-        if !super::matrix::SCENARIO_KEYS.contains(&key.as_str()) {
-            return Err(format!("[grid] has unknown axis '{key}'"));
+        match crate::config::registry::lookup(key) {
+            Some(k) if !k.grid_axis => {
+                return Err(format!(
+                    "[grid] cannot sweep '{key}': array-valued axes \
+                     are not supported; set it in [base] or an \
+                     explicit [scenario.<name>] table"
+                ));
+            }
+            Some(_) => {}
+            None => {
+                return Err(format!("[grid] has unknown axis '{key}'"));
+            }
         }
         let values = val.as_arr().ok_or_else(|| {
             format!("[grid] axis '{key}' must be an array of values")
@@ -168,7 +172,7 @@ pub fn expand(
             name.push_str(&value_label(v));
             body.insert((*key).to_string(), v.clone());
         }
-        out.push(super::matrix::scenario_from_json(
+        out.push(crate::config::registry::parse_scenario(
             &name,
             &Json::Obj(body),
         )?);
@@ -381,5 +385,41 @@ mod tests {
         let g = grid_of("[grid]\nkeepalive_s = [60, 60.0]\n");
         let err = expand(&g, None).unwrap_err();
         assert!(err.contains("repeats"), "err={err}");
+    }
+
+    #[test]
+    fn new_registry_axes_expand_like_any_other() {
+        // gpu_slots_per_instance and the checkpoint-transfer pair are
+        // single registry entries; the grid expander needed no changes
+        // to sweep them
+        let g = grid_of(
+            "[grid]\ngpu_slots_per_instance = [1, 2, 4]\n\
+             checkpoint_size_gb = [0.5, 2.0]\n",
+        );
+        let cells = expand(&g, None).unwrap();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(
+            cells[0].name,
+            "checkpoint_size_gb=0.5/gpu_slots_per_instance=1"
+        );
+        assert_eq!(cells[0].checkpoint_size_gb, Some(0.5));
+        assert_eq!(cells[0].gpu_slots_per_instance, Some(1));
+        // sorted axes, last varies fastest; 2.0 renders "2" (the
+        // shared write_num formatting)
+        assert_eq!(
+            cells[5].name,
+            "checkpoint_size_gb=2/gpu_slots_per_instance=4"
+        );
+        assert_eq!(cells[5].gpu_slots_per_instance, Some(4));
+        let g = grid_of(
+            "[grid]\ncheckpoint_transfer_mbps = [100.0, 1000.0]\n",
+        );
+        let cells = expand(&g, None).unwrap();
+        assert_eq!(cells[0].checkpoint_transfer_mbps, Some(100.0));
+        // cell values still pass the registry validators
+        let g = grid_of("[grid]\ngpu_slots_per_instance = [0]\n");
+        assert!(expand(&g, None).is_err());
+        let g = grid_of("[grid]\ncheckpoint_transfer_mbps = [-1.0]\n");
+        assert!(expand(&g, None).is_err());
     }
 }

@@ -29,9 +29,14 @@
 //! `outage_duration_hours`, `ramp_targets` + `ramp_hold_days`,
 //! `onprem_slots`, `policy` (`"paper"` | `"uniform"` | `"adaptive"` |
 //! `"risk-aware"`), `checkpoint_every_s` (+ optional
-//! `checkpoint_resume_overhead_s`) or `checkpoint_disabled`.
-//! Scenarios from a spec run in name order (the parse is a sorted map),
-//! so a matrix file always produces the same row order.
+//! `checkpoint_resume_overhead_s`) or `checkpoint_disabled`,
+//! `gpu_slots_per_instance`, `checkpoint_size_gb`,
+//! `checkpoint_transfer_mbps`.  This list is derived from — and
+//! pinned by a test against — the typed knob registry
+//! (`crate::config::registry`), which owns the whitelist, the typed
+//! parsing and the validation; run `icecloud knobs` for the live
+//! table.  Scenarios from a spec run in name order (the parse is a
+//! sorted map), so a matrix file always produces the same row order.
 //!
 //! A spec may also (or instead) carry a `[grid]` table declaring
 //! per-axis value lists over the same keys; it expands to the cartesian
@@ -39,13 +44,12 @@
 //! `super::grid`).
 
 use crate::config::{
-    spec_seconds, spec_u32, CampaignConfig, CheckpointPolicy, NatOverride,
-    OutageSpec, PolicyMode, ProviderWeights, RampStep,
+    CampaignConfig, CheckpointPolicy, NatOverride, PolicyMode, RampStep,
     DEFAULT_RESUME_OVERHEAD_S,
 };
 use crate::coordinator::ScenarioConfig;
-use crate::sim::{DAY, HOUR};
-use crate::util::json::{require_bool, require_f64, require_u64, Json};
+use crate::sim::DAY;
+use crate::util::json::Json;
 use crate::util::toml;
 
 /// The default what-if matrix: ten scenarios spanning the axes the paper
@@ -123,249 +127,6 @@ pub fn builtin_matrix() -> Vec<ScenarioConfig> {
     out.push(s);
 
     out
-}
-
-fn policy_from_str(s: &str) -> Result<PolicyMode, String> {
-    match s {
-        "paper" | "azure-favored" => Ok(PolicyMode::Fixed(ProviderWeights {
-            aws: 0.15,
-            gcp: 0.15,
-            azure: 0.70,
-        })),
-        "uniform" => Ok(PolicyMode::Fixed(ProviderWeights {
-            aws: 1.0 / 3.0,
-            gcp: 1.0 / 3.0,
-            azure: 1.0 / 3.0,
-        })),
-        "adaptive" => Ok(PolicyMode::Adaptive),
-        "risk-aware" => Ok(PolicyMode::RiskAware),
-        other => Err(format!("unknown policy '{other}'")),
-    }
-}
-
-/// Keys a `[scenario.<name>]` table may carry.  Anything else is a
-/// typo, and a typo'd override would otherwise run as a silent copy of
-/// the baseline — fatal for a tool whose rows are meant to be citable.
-/// `[grid]` axes (`super::grid`) draw from the same whitelist, so the
-/// two spec shapes cannot drift apart.
-pub(crate) const SCENARIO_KEYS: [&str; 17] = [
-    "seed",
-    "duration_days",
-    "budget_usd",
-    "preempt_multiplier",
-    "keepalive_s",
-    "nat_disabled",
-    "nat_idle_timeout_s",
-    "outage_disabled",
-    "outage_at_days",
-    "outage_duration_hours",
-    "ramp_targets",
-    "ramp_hold_days",
-    "onprem_slots",
-    "policy",
-    "checkpoint_every_s",
-    "checkpoint_resume_overhead_s",
-    "checkpoint_disabled",
-];
-
-/// Fetch a scenario key with a required type; present-but-mistyped
-/// values are errors, never silent no-ops (shared contract with
-/// `CampaignConfig::apply_toml` via `util::json::require_*`).  The
-/// key-name check above catches misspelled *keys*; without this, a
-/// mistyped *value* (`budget_usd = "29000"`) would replay as an exact
-/// copy of the baseline while carrying its override name — fatal for a
-/// tool whose rows are meant to be citable.
-fn scenario_u64(
-    scenario: &str,
-    body: &Json,
-    key: &str,
-) -> Result<Option<u64>, String> {
-    body.get(key)
-        .map(|v| require_u64(v, &format!("[scenario.{scenario}] {key}")))
-        .transpose()
-}
-
-fn scenario_f64(
-    scenario: &str,
-    body: &Json,
-    key: &str,
-) -> Result<Option<f64>, String> {
-    body.get(key)
-        .map(|v| require_f64(v, &format!("[scenario.{scenario}] {key}")))
-        .transpose()
-}
-
-fn scenario_bool(
-    scenario: &str,
-    body: &Json,
-    key: &str,
-) -> Result<Option<bool>, String> {
-    body.get(key)
-        .map(|v| require_bool(v, &format!("[scenario.{scenario}] {key}")))
-        .transpose()
-}
-
-pub(crate) fn scenario_from_json(
-    name: &str,
-    body: &Json,
-) -> Result<ScenarioConfig, String> {
-    let table = body
-        .as_obj()
-        .ok_or_else(|| format!("[scenario.{name}] is not a table"))?;
-    for key in table.keys() {
-        if !SCENARIO_KEYS.contains(&key.as_str()) {
-            return Err(format!(
-                "[scenario.{name}] has unknown key '{key}'"
-            ));
-        }
-    }
-    let mut s = ScenarioConfig::named(name);
-    s.seed = scenario_u64(name, body, "seed")?;
-    if let Some(v) = scenario_f64(name, body, "duration_days")? {
-        s.duration_s = Some(spec_seconds(
-            v,
-            DAY,
-            &format!("[scenario.{name}] duration_days"),
-        )?);
-    }
-    s.budget_usd = scenario_f64(name, body, "budget_usd")?;
-    s.preempt_multiplier =
-        scenario_f64(name, body, "preempt_multiplier")?;
-    s.keepalive_s = scenario_u64(name, body, "keepalive_s")?;
-    let nat_disabled =
-        scenario_bool(name, body, "nat_disabled")? == Some(true);
-    let nat_timeout = scenario_u64(name, body, "nat_idle_timeout_s")?;
-    match (nat_disabled, nat_timeout) {
-        (true, Some(_)) => {
-            return Err(format!(
-                "[scenario.{name}] sets both nat_disabled and \
-                 nat_idle_timeout_s; pick one"
-            ))
-        }
-        (true, None) => s.nat_override = Some(NatOverride::Disabled),
-        (false, Some(t)) => {
-            s.nat_override = Some(NatOverride::IdleTimeout(t))
-        }
-        (false, None) => {}
-    }
-    if scenario_bool(name, body, "outage_disabled")? == Some(true) {
-        s.outage = Some(None);
-    }
-    match (
-        scenario_f64(name, body, "outage_at_days")?,
-        scenario_f64(name, body, "outage_duration_hours")?,
-    ) {
-        (Some(at), dur) => {
-            s.outage = Some(Some(OutageSpec {
-                at_s: spec_seconds(
-                    at,
-                    DAY,
-                    &format!("[scenario.{name}] outage_at_days"),
-                )?,
-                duration_s: spec_seconds(
-                    dur.unwrap_or(2.0),
-                    HOUR,
-                    &format!("[scenario.{name}] outage_duration_hours"),
-                )?,
-            }));
-        }
-        // a dangling duration would be validated and then silently
-        // dropped — same contract as checkpoint_resume_overhead_s
-        // without checkpoint_every_s
-        (None, Some(_)) => {
-            return Err(format!(
-                "[scenario.{name}] outage_duration_hours needs \
-                 outage_at_days"
-            ))
-        }
-        (None, None) => {}
-    }
-    if let Some(targets) = body.get("ramp_targets") {
-        let arr = targets.as_arr().ok_or_else(|| {
-            format!("[scenario.{name}] ramp_targets must be an array")
-        })?;
-        let holds = match body.get("ramp_hold_days") {
-            None => Vec::new(),
-            Some(h) => {
-                let h = h.as_arr().ok_or_else(|| {
-                    format!(
-                        "[scenario.{name}] ramp_hold_days must be an \
-                         array"
-                    )
-                })?;
-                let mut out = Vec::with_capacity(h.len());
-                for (i, v) in h.iter().enumerate() {
-                    out.push(v.as_f64().ok_or_else(|| {
-                        format!(
-                            "[scenario.{name}] ramp_hold_days[{i}] \
-                             must be a number"
-                        )
-                    })?);
-                }
-                out
-            }
-        };
-        if holds.len() > arr.len() {
-            return Err(format!(
-                "[scenario.{name}] ramp_hold_days has {} entries for \
-                 {} targets",
-                holds.len(),
-                arr.len()
-            ));
-        }
-        // strict: a dropped entry would shift the target/hold pairing
-        // (or leave an empty ramp) without any diagnostic
-        let mut ramp = Vec::with_capacity(arr.len());
-        for (i, v) in arr.iter().enumerate() {
-            let target = v.as_u64().ok_or_else(|| {
-                format!(
-                    "[scenario.{name}] ramp_targets[{i}] must be a \
-                     non-negative integer"
-                )
-            })?;
-            ramp.push(RampStep {
-                target: spec_u32(
-                    target,
-                    &format!("[scenario.{name}] ramp_targets[{i}]"),
-                )?,
-                hold_s: spec_seconds(
-                    holds.get(i).copied().unwrap_or(2.0),
-                    DAY,
-                    &format!("[scenario.{name}] ramp_hold_days[{i}]"),
-                )?,
-            });
-        }
-        if ramp.is_empty() {
-            return Err(format!(
-                "[scenario.{name}] ramp_targets must not be empty"
-            ));
-        }
-        s.ramp = Some(ramp);
-    }
-    if let Some(v) = scenario_u64(name, body, "onprem_slots")? {
-        s.onprem_slots = Some(spec_u32(
-            v,
-            &format!("[scenario.{name}] onprem_slots"),
-        )?);
-    }
-    if let Some(v) = body.get("policy") {
-        let v = v.as_str().ok_or_else(|| {
-            format!("[scenario.{name}] policy must be a string")
-        })?;
-        s.policy = Some(policy_from_str(v)?);
-    }
-    let ck_disabled =
-        scenario_bool(name, body, "checkpoint_disabled")? == Some(true);
-    let ck_every = scenario_u64(name, body, "checkpoint_every_s")?;
-    let ck_overhead =
-        scenario_u64(name, body, "checkpoint_resume_overhead_s")?;
-    s.checkpoint = CheckpointPolicy::from_knobs(
-        ck_disabled,
-        ck_every,
-        ck_overhead,
-        &format!("[scenario.{name}]"),
-    )?;
-    Ok(s)
 }
 
 /// Parse a matrix spec: applies the optional `[base]` table to `base`
@@ -448,7 +209,9 @@ pub fn parse_spec_json_with_limit(
                          grid-synthesized scenario name"
                     ));
                 }
-                out.push(scenario_from_json(name, body)?);
+                out.push(crate::config::registry::parse_scenario(
+                    name, body,
+                )?);
             }
         }
     }
@@ -468,6 +231,8 @@ pub fn from_toml_file(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::OutageSpec;
+    use crate::sim::HOUR;
 
     #[test]
     fn builtin_matrix_is_big_enough_and_unique() {
@@ -646,8 +411,9 @@ seed = 77
         ] {
             let mut body = std::collections::BTreeMap::new();
             body.insert(key.to_string(), Json::Num(v));
-            let err = scenario_from_json("a", &Json::Obj(body))
-                .unwrap_err();
+            let err =
+                crate::config::registry::parse_scenario("a", &Json::Obj(body))
+                    .unwrap_err();
             assert!(err.contains(key), "err={err}");
         }
     }
@@ -780,20 +546,32 @@ checkpoint_disabled = true
     }
 
     #[test]
-    fn policy_names_resolve() {
-        assert_eq!(policy_from_str("adaptive").unwrap(), PolicyMode::Adaptive);
-        assert_eq!(
-            policy_from_str("risk-aware").unwrap(),
-            PolicyMode::RiskAware
-        );
-        match policy_from_str("uniform").unwrap() {
-            PolicyMode::Fixed(w) => assert!((w.aws - w.azure).abs() < 1e-12),
-            _ => panic!(),
+    fn spec_parses_registry_new_axes() {
+        // the PR 10 registry-entry axes flow through the same spec
+        // surface as every older knob — no matrix-side plumbing
+        let mut base = CampaignConfig::default();
+        let spec = r#"
+[scenario.carved]
+gpu_slots_per_instance = 4
+checkpoint_every_s = 900
+checkpoint_size_gb = 2.5
+checkpoint_transfer_mbps = 500.0
+"#;
+        let s = &parse_spec(spec, &mut base).unwrap()[0];
+        assert_eq!(s.gpu_slots_per_instance, Some(4));
+        assert_eq!(s.checkpoint_size_gb, Some(2.5));
+        assert_eq!(s.checkpoint_transfer_mbps, Some(500.0));
+        // and their validation rejects the corrupting spellings
+        for bad in [
+            "[scenario.a]\ngpu_slots_per_instance = 0",
+            "[scenario.a]\ngpu_slots_per_instance = 4294967297",
+            "[scenario.a]\ncheckpoint_size_gb = -1.0",
+            "[scenario.a]\ncheckpoint_transfer_mbps = 0.0",
+        ] {
+            assert!(
+                parse_spec(bad, &mut base).is_err(),
+                "'{bad}' must be rejected"
+            );
         }
-        match policy_from_str("paper").unwrap() {
-            PolicyMode::Fixed(w) => assert!(w.azure > w.aws),
-            _ => panic!(),
-        }
-        assert!(policy_from_str("bogus").is_err());
     }
 }

@@ -1,0 +1,163 @@
+//! Golden byte-stability proof for the canonical serialization layer.
+//!
+//! The server's content-addressed result cache (DESIGN.md §13) and the
+//! fleet lease protocol both assume `canonical_json` bytes are stable
+//! across releases: a byte change silently orphans every cached result
+//! and splits coordinator/worker replays.  This test pins the exact
+//! compact canonical bytes of pinned configs — and the sweep cache key
+//! derived from them — against a fixture generated *independently* by
+//! `tools/golden_canonical_gen.py` (a Python mirror of the serializer,
+//! so a bug cannot hide on both sides of the comparison).
+//!
+//! If this test fails you changed the canonical form.  That is only
+//! ever correct as a deliberate, versioned act:
+//!   1. bump the `v` tag in `CampaignConfig::canonical_json`,
+//!   2. regenerate: `python3 tools/golden_canonical_gen.py`,
+//!   3. say so in the PR description.
+//! Never hand-edit `tests/golden/canonical_v2.json` to make CI green.
+
+use icecloud::config::CampaignConfig;
+use icecloud::server::cache::sweep_key;
+use icecloud::sweep::parse_spec;
+use icecloud::util::json;
+
+const FIXTURE: &str = include_str!("golden/canonical_v2.json");
+
+/// The full scenario-override surface, as pinned in the fixture's
+/// `scenario_full` (kept in sync with `scenario_full()` in the
+/// generator script).
+const FULL_SPEC: &str = r#"
+[scenario.bare]
+
+[scenario.full]
+seed = 7
+duration_days = 2.5
+budget_usd = 29000.0
+preempt_multiplier = 4.0
+keepalive_s = 300
+nat_idle_timeout_s = 120
+outage_at_days = 1.5
+outage_duration_hours = 6.0
+ramp_targets = [100, 200]
+ramp_hold_days = [1.0, 0.5]
+onprem_slots = 10
+policy = "risk-aware"
+checkpoint_every_s = 900
+checkpoint_resume_overhead_s = 30
+gpu_slots_per_instance = 4
+checkpoint_size_gb = 2.5
+checkpoint_transfer_mbps = 500.0
+"#;
+
+fn fixture(key: &str) -> String {
+    let doc = json::parse(FIXTURE).expect("fixture is valid JSON");
+    doc.get(key)
+        .and_then(|v| v.as_str())
+        .unwrap_or_else(|| panic!("fixture missing key '{key}'"))
+        .to_string()
+}
+
+fn assert_golden(what: &str, actual: &str, expected: &str) {
+    assert_eq!(
+        actual, expected,
+        "\ncanonical bytes changed for {what}.\n\
+         This invalidates every cached sweep result and splits \
+         coordinator/worker replays.\n\
+         If intentional: bump the canonical `v` tag in \
+         CampaignConfig::canonical_json, regenerate the fixture with \
+         `python3 tools/golden_canonical_gen.py`, and call the bump \
+         out in the PR.\n  actual:   {actual}\n  expected: {expected}"
+    );
+}
+
+#[test]
+fn default_campaign_bytes_are_pinned() {
+    let actual =
+        CampaignConfig::default().canonical_json().to_string_compact();
+    assert_golden(
+        "CampaignConfig::default()",
+        &actual,
+        &fixture("campaign_default"),
+    );
+}
+
+#[test]
+fn default_campaign_omits_the_pr10_knobs() {
+    // Registering a knob must never move pre-existing cache keys: the
+    // three PR-10 knobs serialize only when off their defaults.
+    let bytes =
+        CampaignConfig::default().canonical_json().to_string_compact();
+    for key in [
+        "gpu_slots_per_instance",
+        "checkpoint_size_gb",
+        "checkpoint_transfer_mbps",
+    ] {
+        assert!(
+            !bytes.contains(key),
+            "default canonical form must omit '{key}': {bytes}"
+        );
+    }
+}
+
+#[test]
+fn off_default_new_knobs_bytes_are_pinned() {
+    let mut c = CampaignConfig::default();
+    c.gpu_slots_per_instance = 4;
+    c.checkpoint_size_gb = 2.5;
+    c.checkpoint_transfer_mbps = 500.0;
+    let actual = c.canonical_json().to_string_compact();
+    assert_golden(
+        "CampaignConfig with PR-10 knobs off-default",
+        &actual,
+        &fixture("campaign_new_knobs"),
+    );
+}
+
+#[test]
+fn scenario_bytes_are_pinned_through_the_spec_parser() {
+    let mut base = CampaignConfig::default();
+    let scenarios =
+        parse_spec(FULL_SPEC, &mut base).expect("golden spec parses");
+    assert_eq!(scenarios.len(), 2, "bare + full, name-sorted");
+    assert_golden(
+        "ScenarioConfig 'bare' (no overrides)",
+        &scenarios[0].canonical_json().to_string_compact(),
+        &fixture("scenario_bare"),
+    );
+    assert_golden(
+        "ScenarioConfig 'full' (every override set)",
+        &scenarios[1].canonical_json().to_string_compact(),
+        &fixture("scenario_full"),
+    );
+}
+
+#[test]
+fn sweep_cache_key_is_pinned() {
+    let mut base = CampaignConfig::default();
+    let scenarios = parse_spec("[scenario.bare]\n", &mut base)
+        .expect("bare spec parses");
+    let actual = sweep_key(&base, &scenarios);
+    assert_golden(
+        "sweep_key(default base, [bare])",
+        &actual,
+        &fixture("sweep_key_default_bare"),
+    );
+}
+
+#[test]
+fn canonical_round_trips_from_golden_bytes() {
+    // from_canonical_json over the pinned bytes reproduces the pinned
+    // bytes — including the absent-means-default exception for the
+    // three omitted PR-10 knobs.
+    for key in ["campaign_default", "campaign_new_knobs"] {
+        let bytes = fixture(key);
+        let doc = json::parse(&bytes).expect("golden bytes parse");
+        let c = CampaignConfig::from_canonical_json(&doc)
+            .unwrap_or_else(|e| panic!("{key} round-trip: {e}"));
+        assert_eq!(
+            c.canonical_json().to_string_compact(),
+            bytes,
+            "{key} must survive canonical -> config -> canonical"
+        );
+    }
+}

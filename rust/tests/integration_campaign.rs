@@ -319,6 +319,119 @@ fn risk_aware_policy_runs_and_favors_cheap_stable_providers() {
     assert!(result.schedd_stats.completed > 0);
 }
 
+/// PR 10 axis 1 (fractional-GPU accounting, arXiv:2205.09232): slot
+/// carve-up is a pure accounting lens.  The same campaign replayed
+/// with `gpu_slots_per_instance = 4` bills identical spend and
+/// instance-hours, books exactly 1/4 the busy instance-hours, and the
+/// DESIGN.md §15 conservation identity holds per provider with the
+/// slot factor in place.
+#[test]
+fn gpu_slot_carveup_divides_busy_hours_end_to_end() {
+    let mut whole_cfg = base_config();
+    whole_cfg.duration_s = DAY;
+    whole_cfg.outage = None;
+    let mut carved_cfg = whole_cfg.clone();
+    carved_cfg.gpu_slots_per_instance = 4;
+
+    let whole = Campaign::new(whole_cfg).run();
+    let carved = Campaign::new(carved_cfg).run();
+
+    // billing is unchanged: the instance is billed whole however it
+    // is carved
+    assert!(
+        (whole.meter.total_spend() - carved.meter.total_spend()).abs()
+            < 1e-9,
+        "spend must not depend on slot carve-up"
+    );
+    assert!(
+        (whole.meter.total_instance_hours()
+            - carved.meter.total_instance_hours())
+        .abs()
+            < 1e-9,
+        "instance-hours must not depend on slot carve-up"
+    );
+    // busy occupancy is booked per slot: 4 slots -> 1/4 the
+    // instance-equivalent busy hours, same replay
+    assert!(whole.meter.total_busy_hours() > 0.0);
+    assert!(
+        (whole.meter.total_busy_hours()
+            - 4.0 * carved.meter.total_busy_hours())
+        .abs()
+            < 1e-6,
+        "whole={} carved={}",
+        whole.meter.total_busy_hours(),
+        carved.meter.total_busy_hours()
+    );
+    // conservation with the slot factor: goodput + badput + inflight
+    // == busy_hours x slots x 3600, per provider
+    for (i, p) in Provider::ALL.into_iter().enumerate() {
+        let w = carved.provider_work[i];
+        let busy_s = carved.meter.provider(p).busy_hours * 4.0 * 3600.0;
+        let split = (w.goodput_s + w.badput_s + w.inflight_s) as f64;
+        assert!(
+            (busy_s - split).abs() < 1.0,
+            "{p:?}: busy x slots {busy_s} != split {split}"
+        );
+    }
+}
+
+/// PR 10 axis 2 (checkpoint transfer cost, arXiv:2308.07999): a
+/// checkpoint image that must cross the network before a resume adds
+/// `ceil(size_gb x 8000 / mbps)` seconds to every resume's overhead —
+/// 8 GB over 50 Mbit/s is 1280 s on top of the 120 s restore, and that
+/// cost must show up as strictly more wasted hours and strictly less
+/// goodput under churn.
+#[test]
+fn checkpoint_transfer_cost_shows_up_as_wasted_hours() {
+    let mut base = base_config();
+    base.duration_s = DAY;
+    base.outage = Some(OutageSpec { at_s: 12 * HOUR, duration_s: HOUR });
+    base.preempt_multiplier = 4.0;
+    base.checkpoint = CheckpointPolicy::Interval {
+        every_s: 1800,
+        resume_overhead_s: 120,
+    };
+
+    let free = ScenarioConfig::named("transfer-free");
+    let mut costly = ScenarioConfig::named("transfer-costly");
+    costly.checkpoint_size_gb = Some(8.0);
+    costly.checkpoint_transfer_mbps = Some(50.0);
+
+    // the override reaches the effective policy through the single
+    // registry-backed hook
+    let applied = costly.apply(&base);
+    assert_eq!(applied.checkpoint_transfer_s(), 1280);
+    assert_eq!(
+        applied.effective_checkpoint(),
+        CheckpointPolicy::Interval {
+            every_s: 1800,
+            resume_overhead_s: 120 + 1280,
+        }
+    );
+
+    let rows =
+        icecloud::sweep::run_matrix(&base, &[free, costly], 2);
+    let by_name = |n: &str| {
+        rows.iter().find(|r| r.name == n).expect("scenario row present")
+    };
+    let free = by_name("transfer-free");
+    let costly = by_name("transfer-costly");
+    assert!(free.resumes > 0, "churn must force resumes");
+    assert!(costly.resumes > 0, "churn must force resumes");
+    assert!(
+        costly.wasted_hours > free.wasted_hours,
+        "transfer cost must waste hours: costly={:.2} free={:.2}",
+        costly.wasted_hours,
+        free.wasted_hours
+    );
+    assert!(
+        costly.goodput_hours < free.goodput_hours,
+        "transfer cost must eat goodput: costly={:.2} free={:.2}",
+        costly.goodput_hours,
+        free.goodput_hours
+    );
+}
+
 #[test]
 fn badput_stays_bounded_with_tuned_keepalive() {
     let mut c = base_config();

@@ -1,0 +1,150 @@
+//! Registry-driven round-trip property: every knob in
+//! `config::registry::KNOBS` — current and future — is driven through
+//! BOTH parse paths using its own registry-declared `sample` literal,
+//! and the results must agree byte-for-byte:
+//!
+//!   scenario spec  --parse_spec-->  ScenarioConfig --apply--+
+//!                                                           +--> same
+//!   campaign TOML  --apply_toml------------------------------+    bytes
+//!
+//! then canonical_json -> from_canonical_json -> canonical_json must
+//! reproduce the exact bytes (the fleet lease round-trip).
+//!
+//! Because the test iterates `KNOBS` itself, registering a new knob
+//! automatically enrolls it here — there is no way to add a sweepable
+//! knob that skips the round-trip proof.
+
+use icecloud::config::registry::{Knob, KNOBS};
+use icecloud::config::CampaignConfig;
+use icecloud::sweep::parse_spec;
+use icecloud::util::toml;
+
+/// Knobs that only validate in the presence of a partner knob, with
+/// the partner's (scenario key, sample) pair.
+fn companions(k: &Knob) -> &'static [(&'static str, &'static str)] {
+    match k.name {
+        "outage_duration_hours" => &[("outage_at_days", "1.5")],
+        "ramp_hold_days" => &[("ramp_targets", "[100, 200]")],
+        "checkpoint_resume_overhead_s" => {
+            &[("checkpoint_every_s", "900")]
+        }
+        _ => &[],
+    }
+}
+
+/// All (knob, sample) pairs a single-knob case needs.
+fn case_knobs(k: &Knob) -> Vec<(&'static Knob, &'static str)> {
+    let mut v = vec![(k, k.sample)];
+    for (name, sample) in companions(k) {
+        let c = icecloud::config::registry::lookup(name)
+            .unwrap_or_else(|| panic!("companion '{name}' registered"));
+        v.push((c, *sample));
+    }
+    v
+}
+
+/// Render the case as a `[scenario.x]` sweep-spec table.
+fn scenario_spec(knobs: &[(&'static Knob, &'static str)]) -> String {
+    let mut s = String::from("[scenario.x]\n");
+    for (k, sample) in knobs {
+        s.push_str(&format!("{} = {}\n", k.name, sample));
+    }
+    s
+}
+
+/// Render the same case as nested campaign TOML via each knob's
+/// registry-declared `toml_path` (top-level keys first, then one
+/// `[table]` section per path head — the TOML subset has no dotted
+/// keys).
+fn campaign_toml(knobs: &[(&'static Knob, &'static str)]) -> String {
+    let mut top = String::new();
+    let mut tables: Vec<(&str, String)> = Vec::new();
+    for (k, sample) in knobs {
+        match k.toml_path {
+            [key] => top.push_str(&format!("{key} = {sample}\n")),
+            [table, key] => {
+                let line = format!("{key} = {sample}\n");
+                match tables.iter_mut().find(|(t, _)| t == table) {
+                    Some((_, body)) => body.push_str(&line),
+                    None => tables.push((table, line)),
+                }
+            }
+            other => panic!("unexpected toml_path depth: {other:?}"),
+        }
+    }
+    let mut s = top;
+    for (table, body) in tables {
+        s.push_str(&format!("[{table}]\n{body}"));
+    }
+    s
+}
+
+#[test]
+fn every_knob_round_trips_through_both_parse_paths() {
+    for k in KNOBS.iter() {
+        let knobs = case_knobs(k);
+
+        // Path 1: scenario spec -> ScenarioConfig -> apply to base.
+        let spec = scenario_spec(&knobs);
+        let mut base = CampaignConfig::default();
+        let scenarios = parse_spec(&spec, &mut base)
+            .unwrap_or_else(|e| panic!("knob '{}': spec {spec:?} must parse: {e}", k.name));
+        assert_eq!(scenarios.len(), 1);
+        let via_scenario = scenarios[0].apply(&base);
+
+        // Path 2: the same values as nested campaign TOML.
+        let toml_text = campaign_toml(&knobs);
+        let doc = toml::parse(&toml_text).unwrap_or_else(|e| {
+            panic!("knob '{}': TOML {toml_text:?} must parse: {e:?}", k.name)
+        });
+        let mut via_campaign = CampaignConfig::default();
+        via_campaign.apply_toml(&doc).unwrap_or_else(|e| {
+            panic!("knob '{}': apply_toml must accept {toml_text:?}: {e}", k.name)
+        });
+
+        let a = via_scenario.canonical_json().to_string_compact();
+        let b = via_campaign.canonical_json().to_string_compact();
+        assert_eq!(
+            a, b,
+            "knob '{}': scenario-spec and campaign-TOML paths \
+             disagree\n  spec: {spec:?}\n  toml: {toml_text:?}",
+            k.name
+        );
+
+        // Lease round-trip: canonical -> config -> canonical, exact.
+        let parsed = icecloud::util::json::parse(&a).expect("canonical parses");
+        let back = CampaignConfig::from_canonical_json(&parsed)
+            .unwrap_or_else(|e| {
+                panic!("knob '{}': from_canonical_json: {e}", k.name)
+            });
+        assert_eq!(
+            back.canonical_json().to_string_compact(),
+            a,
+            "knob '{}': canonical form must round-trip byte-exactly",
+            k.name
+        );
+    }
+}
+
+#[test]
+fn every_sample_is_a_valid_grid_cell_where_eligible() {
+    // A grid axis sweeps single values of the same TOML literal the
+    // sample declares, so every grid-eligible sample must expand.
+    for k in KNOBS.iter().filter(|k| k.grid_axis) {
+        let mut spec = String::from("[grid]\n");
+        spec.push_str(&format!("{} = [{}]\n", k.name, k.sample));
+        for (name, sample) in companions(k) {
+            spec.push_str(&format!("{name} = [{sample}]\n"));
+        }
+        let mut base = CampaignConfig::default();
+        let cells = parse_spec(&spec, &mut base).unwrap_or_else(|e| {
+            panic!("knob '{}': grid {spec:?} must expand: {e}", k.name)
+        });
+        assert_eq!(
+            cells.len(),
+            1,
+            "knob '{}': one value per axis -> one cell",
+            k.name
+        );
+    }
+}

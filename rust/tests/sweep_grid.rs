@@ -133,6 +133,50 @@ fn grid_spec_loads_from_file_like_the_cli() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// The PR-10 axes: 1 x 2 x 2 x 3 = 12 scenarios over the two new
+/// knob families (fractional-GPU slot carve-up and checkpoint
+/// transfer cost), registered as ordinary registry entries.
+const NEW_AXES_GRID: &str = "\
+[grid]
+checkpoint_every_s = [900]
+checkpoint_size_gb = [0.5, 2.0]
+checkpoint_transfer_mbps = [100.0, 1000.0]
+gpu_slots_per_instance = [1, 2, 4]
+";
+
+#[test]
+fn new_registry_axes_sweep_from_the_cli_grid_path() {
+    // same loader `icecloud sweep --grid` uses
+    let mut base = tiny_base();
+    let scenarios = parse_spec(NEW_AXES_GRID, &mut base).unwrap();
+    assert_eq!(scenarios.len(), 12);
+    // sorted-axis names, last sorted axis varying fastest; `2.0`
+    // labels as `2` (the JSON number writer collapses integral floats)
+    assert_eq!(
+        scenarios[0].name,
+        "checkpoint_every_s=900/checkpoint_size_gb=0.5/\
+         checkpoint_transfer_mbps=100/gpu_slots_per_instance=1"
+    );
+    assert_eq!(
+        scenarios[11].name,
+        "checkpoint_every_s=900/checkpoint_size_gb=2/\
+         checkpoint_transfer_mbps=1000/gpu_slots_per_instance=4"
+    );
+    // the axis values really land in the scenario overrides
+    assert_eq!(scenarios[0].checkpoint_size_gb, Some(0.5));
+    assert_eq!(scenarios[0].checkpoint_transfer_mbps, Some(100.0));
+    assert_eq!(scenarios[0].gpu_slots_per_instance, Some(1));
+    assert_eq!(scenarios[11].gpu_slots_per_instance, Some(4));
+    // and the cells replay: 12 rows, deterministic across threads
+    let one = run_matrix(&base, &scenarios, 1);
+    assert_eq!(one.len(), 12);
+    let two = run_matrix(&base, &scenarios, 2);
+    assert_eq!(
+        icecloud::experiments::sweep::to_json(&one).to_string_compact(),
+        icecloud::experiments::sweep::to_json(&two).to_string_compact(),
+    );
+}
+
 fn start_server() -> (ServerHandle, String) {
     let server = Server::bind(ServeConfig {
         addr: "127.0.0.1:0".to_string(),
@@ -194,6 +238,65 @@ fn post_sweep_accepts_the_64_cell_grid() {
     )
     .unwrap();
     assert_eq!(resp.status, 400, "{}", resp.body_str());
+
+    handle.shutdown();
+}
+
+#[test]
+fn post_sweep_accepts_the_new_registry_axes() {
+    // acceptance: both PR-10 knob families sweep over a real socket
+    // with no router or matrix changes — registering the knobs was
+    // enough to make them part of the wire surface
+    let (handle, addr) = start_server();
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        NEW_AXES_GRID.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let doc = json::parse(resp.body_str().trim()).unwrap();
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 12);
+    assert_eq!(
+        rows[0].get("name").unwrap().as_str(),
+        Some(
+            "checkpoint_every_s=900/checkpoint_size_gb=0.5/\
+             checkpoint_transfer_mbps=100/gpu_slots_per_instance=1"
+        )
+    );
+
+    // content-addressed like every other sweep: same body, same bytes
+    let again = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        NEW_AXES_GRID.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(again.status, 200);
+    assert_eq!(again.body, resp.body);
+
+    // invalid values for the new axes are 4xx'd by the shared
+    // registry validators, not silently accepted
+    let bad = "[grid]\ngpu_slots_per_instance = [0]\n";
+    let resp = client_request(
+        &addr,
+        "POST",
+        "/sweep",
+        Some("application/toml"),
+        bad.as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    assert!(
+        resp.body_str().contains("gpu_slots_per_instance"),
+        "{}",
+        resp.body_str()
+    );
 
     handle.shutdown();
 }

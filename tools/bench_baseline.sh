@@ -10,12 +10,12 @@
 #   ICECLOUD_BENCH_FAST=1 tools/bench_baseline.sh   # quick smoke pass
 #
 # Gate a fresh file against the committed trajectory with
-#   tools/bench_compare.sh BENCH_pr9.json fresh.json
+#   tools/bench_compare.sh BENCH_pr10.json fresh.json
 # or eyeball across PRs with e.g.:
 #   jq -s 'map(select(.bench)) | .[] | {bench, mean_s, throughput}' BENCH_pr*.json
 set -eu
 
-out="${1:-BENCH_pr9.json}"
+out="${1:-BENCH_pr10.json}"
 host="$(uname -sm 2>/dev/null || echo unknown)"
 date="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
 rustc_v="$(rustc --version 2>/dev/null || echo unknown)"

@@ -44,6 +44,10 @@ RUST_BENCHES = [
     ("sweep/14-scenarios-8-threads", "replays"),
     # PR 9: [grid] cartesian expansion of the 3-axis {4,4,4} spec
     ("sweep/grid-expand-64", "scenarios"),
+    # PR 10: the registry-backed axes — a 64-value slot carve-up sweep
+    # and the 1x8x8 checkpoint-transfer plane (rust/benches/sweep.rs)
+    ("sweep/grid-expand-gpu-slots-64", "scenarios"),
+    ("sweep/grid-expand-checkpoint-transfer-64", "scenarios"),
     ("engine/scalar", "photons"),
     ("engine/batched-1t", "photons"),
     ("engine/batched-2t", "photons"),

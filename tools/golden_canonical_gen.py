@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Independent generator for the canonical-serialization golden fixture.
+
+Rebuilds the byte-exact canonical compact JSON the Rust side must emit
+for a handful of pinned configs — WITHOUT going through the Rust code —
+and writes `rust/tests/golden/canonical_v2.json`.  The golden test
+(`rust/tests/golden_canonical.rs`) compares `CampaignConfig`/
+`ScenarioConfig::canonical_json().to_string_compact()` and the sweep
+cache key against this fixture, so a byte change in the canonical form
+fails CI unless the canonical version tag is bumped and this fixture is
+regenerated on purpose.
+
+The serializer here mirrors `rust/src/util/json.rs` exactly:
+  * object keys sorted (BTreeMap iteration order),
+  * compact output (no whitespace),
+  * `write_num`: integral finite floats with |v| < 9e15 print as i64
+    ("58000", not "58000.0"); other finite floats print via Rust's
+    shortest-round-trip `{}` formatting, which agrees with Python repr
+    for every value used below.
+"""
+
+import hashlib
+import json
+import os
+
+OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "rust",
+    "tests",
+    "golden",
+    "canonical_v2.json",
+)
+
+DAY = 86_400
+HOUR = 3_600
+MINUTE = 60
+
+
+def fmt_num(v):
+    """Mirror util::json::write_num."""
+    f = float(v)
+    if f != f or f in (float("inf"), float("-inf")):
+        return "null"
+    if f == int(f) and abs(f) < 9e15:
+        return str(int(f))
+    r = repr(f)
+    assert float(r) == f, r
+    return r
+
+
+def compact(j):
+    """Mirror Json::to_string_compact (sorted keys, no spaces)."""
+    if j is None:
+        return "null"
+    if j is True:
+        return "true"
+    if j is False:
+        return "false"
+    if isinstance(j, str):
+        assert all(c not in j for c in '"\\\n\r\t'), j
+        return '"' + j + '"'
+    if isinstance(j, (int, float)):
+        return fmt_num(j)
+    if isinstance(j, list):
+        return "[" + ",".join(compact(x) for x in j) + "]"
+    if isinstance(j, dict):
+        return (
+            "{"
+            + ",".join(
+                '"' + k + '":' + compact(j[k]) for k in sorted(j)
+            )
+            + "}"
+        )
+    raise TypeError(type(j))
+
+
+def ramp_step(target, hold_s):
+    return {"target": target, "hold_s": hold_s}
+
+
+def campaign_default():
+    """CampaignConfig::default().canonical_json() (config/scenario.rs)."""
+    return {
+        "v": 2,
+        "seed": 20210921,
+        "duration_s": 14 * DAY,
+        "tick_s": MINUTE,
+        "sample_every_s": 10 * MINUTE,
+        "control_period_s": 5 * MINUTE,
+        "negotiation_period_s": 5 * MINUTE,
+        "budget_usd": 58_000.0,
+        "alert_thresholds": [0.75, 0.5, 0.25, 0.1],
+        "overhead_fraction": 0.18,
+        "budget_reserve_fraction": 0.02,
+        "low_budget_resume_fraction": 0.25,
+        "post_outage_target": 1000,
+        "keepalive_s": 60,
+        "preempt_multiplier": 1.0,
+        "nat_override": "provider-default",
+        "checkpoint": "none",
+        # gpu_slots_per_instance / checkpoint_size_gb /
+        # checkpoint_transfer_mbps are at their defaults and therefore
+        # OMITTED — that omission is itself part of the golden contract
+        # (pre-PR-10 cache keys must not move).
+        "ramp": [
+            ramp_step(50, DAY),
+            ramp_step(400, 2 * DAY),
+            ramp_step(900, 2 * DAY),
+            ramp_step(1200, 2 * DAY),
+            ramp_step(1600, 2 * DAY),
+            ramp_step(2000, 30 * DAY),
+        ],
+        "outage": {"at_s": 11 * DAY + 6 * HOUR, "duration_s": 2 * HOUR},
+        "policy": {"fixed": {"aws": 0.15, "gcp": 0.15, "azure": 0.7}},
+        "onprem": {
+            "slots": 1150,
+            "keepalive_s": 300,
+            "availability": 0.97,
+        },
+        "generator": {
+            "backlog_factor": 1.5,
+            "min_backlog": 500,
+            "request_memory_mb": 8192,
+            "runtimes": {
+                "median_s": 3600.0,
+                "sigma": 0.45,
+                "min_s": 600,
+                "max_s": 4 * 3600,
+            },
+        },
+        "flops_per_bunch": 1.2e10,
+        "real_compute": None,
+    }
+
+
+def campaign_new_knobs():
+    """Default campaign with the three PR-10 knobs off their defaults."""
+    c = campaign_default()
+    c["gpu_slots_per_instance"] = 4
+    c["checkpoint_size_gb"] = 2.5
+    c["checkpoint_transfer_mbps"] = 500.0
+    return c
+
+
+def scenario_bare():
+    """`[scenario.bare]` with no overrides: name only."""
+    return {"name": "bare"}
+
+
+def scenario_full():
+    """Every scenario override set (the spec in golden_canonical.rs)."""
+    return {
+        "name": "full",
+        "seed": 7,
+        "duration_s": int(2.5 * DAY),
+        "budget_usd": 29_000.0,
+        "preempt_multiplier": 4.0,
+        "keepalive_s": 300,
+        "nat_override": {"idle_timeout_s": 120},
+        "outage": {"at_s": int(1.5 * DAY), "duration_s": 6 * HOUR},
+        "ramp": [ramp_step(100, DAY), ramp_step(200, int(0.5 * DAY))],
+        "onprem_slots": 10,
+        "policy": "risk-aware",
+        "checkpoint": {
+            "interval": {"every_s": 900, "resume_overhead_s": 30}
+        },
+        "gpu_slots_per_instance": 4,
+        "checkpoint_size_gb": 2.5,
+        "checkpoint_transfer_mbps": 500.0,
+    }
+
+
+def main():
+    base = compact(campaign_default())
+    bare = compact(scenario_bare())
+    key_doc = '{"base":' + base + ',"scenarios":[' + bare + "]}"
+    fixture = {
+        "canonical_version": 2,
+        "campaign_default": base,
+        "campaign_new_knobs": compact(campaign_new_knobs()),
+        "scenario_bare": bare,
+        "scenario_full": compact(scenario_full()),
+        "sweep_key_default_bare": hashlib.sha256(
+            key_doc.encode()
+        ).hexdigest(),
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(fixture, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("wrote", OUT)
+    for k, v in sorted(fixture.items()):
+        print(f"  {k}: {str(v)[:80]}{'...' if len(str(v)) > 80 else ''}")
+
+
+if __name__ == "__main__":
+    main()
